@@ -1,0 +1,7 @@
+//! E8 — §5.2 ablation: synchronous (paper default) vs asynchronous queue.
+
+fn main() -> anyhow::Result<()> {
+    println!("{}", fecaffe::bench_tables::ablation_async()?);
+    println!("{}", fecaffe::bench_tables::ablation_partition()?);
+    Ok(())
+}

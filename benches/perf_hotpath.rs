@@ -1,0 +1,101 @@
+//! Perf bench — the L3 hot path (DESIGN.md §7 targets):
+//!   * kernel-launch overhead on the simulator (bookkeeping only),
+//!   * native gemm throughput (CPU fallback engine),
+//!   * PJRT dispatch overhead per artifact launch (marshal + execute),
+//!   * end-to-end LeNet train-iteration rate.
+//! Results feed EXPERIMENTS.md §Perf.
+
+use fecaffe::device::cpu::CpuDevice;
+use fecaffe::device::fpga::FpgaSimDevice;
+use fecaffe::device::{Device, Kernel, KernelCall};
+use fecaffe::net::Net;
+use fecaffe::proto::Phase;
+use fecaffe::runtime::PjrtBackend;
+use fecaffe::solver::Solver;
+use fecaffe::util::stats::bench;
+use fecaffe::zoo;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Simulator launch bookkeeping (timing-only: pure L3 cost).
+    {
+        let mut dev = FpgaSimDevice::new();
+        dev.timing_only = true;
+        let x = dev.alloc(1024)?;
+        let y = dev.alloc(1024)?;
+        let call = KernelCall::new(Kernel::ReluF { n: 1024, slope: 0.0 }, &[x], &[y]);
+        let s = bench("sim launch bookkeeping", 1000, 20_000, || {
+            dev.launch(&call).unwrap();
+        });
+        println!("{}", s.line());
+    }
+
+    // 2. Native gemm throughput (googlenet inception 3x3 shape).
+    {
+        let mut dev = CpuDevice::new();
+        let (m, k, n) = (128usize, 1152, 784);
+        let a = dev.alloc(m * k)?;
+        let b = dev.alloc(k * n)?;
+        let c = dev.alloc(m * n)?;
+        // Random data: zero buffers would trip the gemm zero-skip fast
+        // path and overstate throughput.
+        let mut rng = fecaffe::util::prng::Pcg32::new(1);
+        let mut va = vec![0f32; m * k];
+        let mut vb = vec![0f32; k * n];
+        rng.fill_uniform(&mut va, -1.0, 1.0);
+        rng.fill_uniform(&mut vb, -1.0, 1.0);
+        dev.write(a, &va);
+        dev.write(b, &vb);
+        let call = KernelCall::new(
+            Kernel::GemmNN { m, n, k, alpha: 1.0, beta: 0.0 },
+            &[a, b],
+            &[c],
+        );
+        let s = bench("native gemm 128x1152x784", 2, 20, || {
+            dev.launch(&call).unwrap();
+        });
+        let gflops = 2.0 * (m * n * k) as f64 / s.median_ns;
+        println!("{}   ({gflops:.2} GFLOP/s)", s.line());
+    }
+
+    // 3. PJRT dispatch for the same gemm (if artifacts exist).
+    if let Some(backend) = PjrtBackend::auto() {
+        let mut dev = FpgaSimDevice::new().with_backend(Box::new(backend));
+        let (m, k, n) = (128usize, 1152, 784);
+        let a = dev.alloc(m * k)?;
+        let b = dev.alloc(k * n)?;
+        let c = dev.alloc(m * n)?;
+        let mut rng = fecaffe::util::prng::Pcg32::new(1);
+        let mut va = vec![0f32; m * k];
+        let mut vb = vec![0f32; k * n];
+        rng.fill_uniform(&mut va, -1.0, 1.0);
+        rng.fill_uniform(&mut vb, -1.0, 1.0);
+        dev.write(a, &va);
+        dev.write(b, &vb);
+        let call = KernelCall::new(
+            Kernel::GemmNN { m, n, k, alpha: 1.0, beta: 0.0 },
+            &[a, b],
+            &[c],
+        );
+        let s = bench("pjrt gemm 128x1152x784", 2, 20, || {
+            dev.launch(&call).unwrap();
+        });
+        let gflops = 2.0 * (m * n * k) as f64 / s.median_ns;
+        println!("{}   ({gflops:.2} GFLOP/s incl. marshal)", s.line());
+    } else {
+        println!("pjrt gemm: skipped (no artifacts; run `make artifacts`)");
+    }
+
+    // 4. End-to-end LeNet train iteration (numerics on, batch 16).
+    {
+        let mut dev = FpgaSimDevice::new();
+        let param = zoo::by_name("lenet", 16)?;
+        let net = Net::from_param(&param, Phase::Train, &mut dev)?;
+        let mut solver = Solver::new(zoo::default_solver("lenet")?, net, &mut dev)?;
+        solver.step(&mut dev)?; // warm
+        let s = bench("lenet train iter (native, bs16)", 1, 10, || {
+            solver.step(&mut dev).unwrap();
+        });
+        println!("{}", s.line());
+    }
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! E1 — regenerate paper Table 1: per-layer forward/backward times for
+//! AlexNet, VGG-16, SqueezeNet v1.0 and GoogLeNet v1 at batch 1 on the
+//! simulated Stratix 10 board. `cargo bench --bench table1`.
+
+fn main() -> anyhow::Result<()> {
+    println!("{}", fecaffe::bench_tables::table1()?);
+    println!("Paper reference totals (Table 1, ms):");
+    println!("  AlexNet      fwd  93.2   bwd 177.5   F->B  270.8");
+    println!("  VGG_16       fwd 1270.4  bwd 2684.9  F->B 3955.4");
+    println!("  SqueezeNet   fwd 199.5   bwd 263.0   F->B  462.6");
+    println!("  GoogLeNet    fwd 341.3   bwd 516.5   F->B  857.8");
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! E2 — regenerate paper Table 2: kernel instance counts, total times and
+//! DDR/PCIe efficiencies for one GoogLeNet F→B at batch 1.
+
+fn main() -> anyhow::Result<()> {
+    let (text, stats) = fecaffe::bench_tables::table2()?;
+    println!("{text}");
+    use fecaffe::device::KClass;
+    println!("Paper reference (Table 2): 960 total instances incl. 186 Gemm,");
+    println!("98 Im2col, 19 Col2im, 61 ReLU_F, 72 Concat, 41 Split, 3 Read_Buffer.");
+    let total: u64 = stats.values().map(|v| v.0).sum();
+    println!("\nOurs: {total} instances; Gemm {}, Im2col {}, ReLU_F {}, Split {}",
+        stats.get(&KClass::Gemm).map(|v| v.0).unwrap_or(0),
+        stats.get(&KClass::Im2col).map(|v| v.0).unwrap_or(0),
+        stats.get(&KClass::ReluF).map(|v| v.0).unwrap_or(0),
+        stats.get(&KClass::Split).map(|v| v.0).unwrap_or(0));
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! E3 — regenerate paper Table 3: FPGA resource utilization (analytic
+//! model; see device/fpga/resources.rs for the derivations).
+
+fn main() {
+    println!("{}", fecaffe::bench_tables::table3());
+    println!("Paper reference (Table 3): Gemm 107K/2338/1037, Gemv 49K/756/130,");
+    println!("Total 616K (66%) ALMs, 5419 (47%) M20K, 1796 (31%) DSPs @ 252-253 MHz.");
+}

@@ -1,0 +1,222 @@
+//! E4 — regenerate paper Table 4: the comparison with F-CNN and FPDeep.
+//!
+//! * feature matrix (framework, solvers, expansibility — static),
+//! * LeNet L1–L6 forward/backward at batch 384 vs the F-CNN model, with
+//!   the headline average-execution-time improvement factors,
+//! * ImageNet epoch-time projections (AlexNet bs32 SGD, SqueezeNet bs16
+//!   SGD, GoogLeNet bs16 Adam) from one simulated solver iteration,
+//! * the VGG-16 training out-of-memory reproduction (2 GB board DDR).
+
+use fecaffe::baseline::fcnn;
+use fecaffe::baseline::fpdeep::FpdeepCluster;
+use fecaffe::bench_tables::timing_device;
+use fecaffe::data::imagenet::IMAGENET_TRAIN_IMAGES;
+use fecaffe::device::Device;
+use fecaffe::net::Net;
+use fecaffe::proto::Phase;
+use fecaffe::solver::Solver;
+use fecaffe::util::table::{ms, ratio, Table};
+use fecaffe::zoo;
+
+/// LeNet per-paper-row times on the simulated board at batch `b`.
+fn fecaffe_lenet_rows(batch: usize) -> anyhow::Result<Vec<(String, f64, f64)>> {
+    let mut dev = timing_device();
+    let rows = fecaffe::bench_tables::grouped_layer_times("lenet", batch, &mut dev)?;
+    // Map zoo layer groups to the paper's L1..L6 labels.
+    let label = |g: &str| match g {
+        "conv1" => Some("L1 (Conv)"),
+        "pool1" => Some("L2 (Pool)"),
+        "conv2" => Some("L3 (Conv)"),
+        "pool2" => Some("L4 (Pool)"),
+        "ip1" | "relu1" => Some("L5 (FC)"),
+        "ip2" => Some("L6 (FC)"),
+        _ => None,
+    };
+    let mut out: Vec<(String, f64, f64)> = Vec::new();
+    for (g, f, b) in rows {
+        if let Some(l) = label(&g) {
+            if let Some(last) = out.last_mut() {
+                if last.0 == l {
+                    last.1 += f;
+                    last.2 += b;
+                    continue;
+                }
+            }
+            out.push((l.to_string(), f, b));
+        }
+    }
+    Ok(out)
+}
+
+fn epoch_hours(name: &str, batch: usize) -> anyhow::Result<f64> {
+    let mut dev = timing_device();
+    let param = zoo::by_name(name, batch)?;
+    let net = Net::from_param(&param, Phase::Train, &mut dev)?;
+    let sp = zoo::default_solver(name)?;
+    let mut solver = Solver::new(sp, net, &mut dev)?;
+    solver.step(&mut dev)?; // warm allocations
+    dev.reset_timing();
+    solver.step(&mut dev)?;
+    dev.synchronize();
+    let per_iter_s = dev.sim_clock_ns().unwrap() as f64 / 1e9;
+    let iters = (IMAGENET_TRAIN_IMAGES as f64 / batch as f64).ceil();
+    Ok(per_iter_s * iters / 3600.0)
+}
+
+fn main() -> anyhow::Result<()> {
+    // --- feature matrix (paper Table 4, top half) ---
+    let mut feat = Table::new(
+        "Table 4 — feature comparison",
+        &["", "Our Work (FeCaffe repro)", "FCNN [8]", "FPDeep [9]"],
+    );
+    feat.row_strs(&["Framework", "Caffe (workalike)", "Customized", "Customized"]);
+    feat.row_strs(&[
+        "Develop Tool",
+        "JAX/Pallas AOT + PJRT (OpenCL-AOC analogue)",
+        "MaxCompiler",
+        "RTL Generator",
+    ]);
+    feat.row_strs(&[
+        "CNN Feature",
+        "Training and Inference",
+        "Training and Inference",
+        "Training and Inference",
+    ]);
+    feat.row_strs(&[
+        "Networks",
+        "AlexNet, VGG, SqueezeNet, GoogLeNet, LeNet (+same-primitive nets)",
+        "LeNet",
+        "AlexNet, VGG-16/19",
+    ]);
+    feat.row_strs(&[
+        "Solvers",
+        "SGD, Nesterov, AdaGrad, RMSProp, AdaDelta, Adam",
+        "SGD only",
+        "SGD only",
+    ]);
+    feat.row_strs(&[
+        "Hyperparameters",
+        "base_lr, lr_policy, gamma, momentum, weight_decay, ... (same as GPU/CPU)",
+        "Unknown",
+        "Unknown",
+    ]);
+    feat.row_strs(&["Data Type", "FP32", "FP32", "Fixed-16"]);
+    feat.row_strs(&["Boards", "1x S10 (simulated)", "2x Stratix V", "15x VC709"]);
+    println!("{}", feat.render());
+
+    // --- LeNet L1-L6 comparison, batch 384 (paper's setting) ---
+    let batch = 384;
+    let ours = fecaffe_lenet_rows(batch)?;
+    let machine = fcnn::FcnnMachine::default();
+    let theirs: Vec<(String, f64, f64)> = fcnn::lenet_layers()
+        .iter()
+        .map(|(n, w)| {
+            (
+                n.to_string(),
+                machine.forward_s(*w, batch) * 1e3,
+                machine.backward_s(*w, batch) * 1e3,
+            )
+        })
+        .collect();
+    let mut t = Table::new(
+        &format!("Table 4 — LeNet L1-L6 (ms, batch={batch})"),
+        &[
+            "Layer",
+            "Ours Fwd",
+            "Ours Bwd",
+            "FCNN Fwd (model)",
+            "FCNN Bwd (model)",
+            "FCNN Fwd (publ.)",
+            "FCNN Bwd (publ.)",
+        ],
+    );
+    let (mut of, mut ob, mut ff, mut fb) = (0.0, 0.0, 0.0, 0.0);
+    for (i, (name, f, b)) in ours.iter().enumerate() {
+        let (tf, tb) = (theirs[i].1, theirs[i].2);
+        t.row(&[
+            name.clone(),
+            ms(*f),
+            ms(*b),
+            ms(tf),
+            ms(tb),
+            ms(fcnn::PUBLISHED_FWD_MS[i]),
+            ms(fcnn::PUBLISHED_BWD_MS[i]),
+        ]);
+        of += f;
+        ob += b;
+        ff += tf;
+        fb += tb;
+    }
+    t.row(&[
+        "Total".into(),
+        format!("{} ({})", ms(of), ratio(ff / of)),
+        format!("{} ({})", ms(ob), ratio(fb / ob)),
+        ms(ff),
+        ms(fb),
+        "7060".into(),
+        "14300".into(),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "Headline: {:.1}x forward / {:.1}x backward average execution-time improvement\n\
+         (paper claims 6.4x / 8.4x vs FCNN under the same conditions;\n\
+          paper's own numbers: fwd 1102.162 ms, bwd 1710.090 ms)\n",
+        ff / of,
+        fb / ob
+    );
+
+    // --- epoch projections ---
+    let mut e = Table::new(
+        "Table 4 — ImageNet (1.28M images) epoch projections",
+        &["Network", "Batch", "Solver", "Hours/epoch (sim)", "Paper"],
+    );
+    for (name, batch, paper) in [
+        ("alexnet", 32usize, "86.41 h (BS:32, SGD)"),
+        ("squeezenet", 16, "(BS:16, SGD; value in paper table)"),
+        ("googlenet", 16, "291.08 h (BS:16, Adam)"),
+    ] {
+        let solver = zoo::default_solver(name)?.kind.ident().to_string();
+        let h = epoch_hours(name, batch)?;
+        e.row(&[
+            name.into(),
+            batch.to_string(),
+            solver,
+            format!("{h:.2}"),
+            paper.into(),
+        ]);
+    }
+    // FPDeep comparator row.
+    let cluster = FpdeepCluster::default();
+    e.row(&[
+        "alexnet (FPDeep model)".into(),
+        "-".into(),
+        "SGD fixp16".into(),
+        format!("{:.2}", cluster.epoch_hours(0.72e9, IMAGENET_TRAIN_IMAGES)),
+        "0.17 h".into(),
+    ]);
+    println!("{}", e.render());
+
+    // --- VGG-16 training does not fit the 2 GB board ---
+    // (batch 4 — the smallest batch anyone would train at; batch-1 F->B
+    // alone fits, which is why Table 1 has VGG numbers.)
+    let param = zoo::by_name("vgg16", 4)?;
+    // The OOM is the expected outcome — keep its panic backtrace out of
+    // the bench output.
+    let prev_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let result = std::panic::catch_unwind(|| {
+        let mut dev = timing_device(); // true 2 GB capacity
+        Net::from_param(&param, Phase::Train, &mut dev)
+            .and_then(|net| Solver::new(zoo::default_solver("vgg16")?, net, &mut dev))
+            .and_then(|mut s| s.step(&mut dev).map(|_| ()))
+    });
+    std::panic::set_hook(prev_hook);
+    match result {
+        Err(_) | Ok(Err(_)) => println!(
+            "VGG-16 training on the 2 GB board: NOT PERFORMED — FPGA DDR exhausted\n\
+             (paper: \"training of VGG-16 and VGG-19 cannot be performed\")",
+        ),
+        Ok(Ok(())) => println!("VGG-16 training unexpectedly fit — check DDR model!"),
+    }
+    Ok(())
+}

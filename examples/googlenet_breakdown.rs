@@ -1,0 +1,42 @@
+//! GoogLeNet kernel breakdown (paper §4.2): run one F→B at batch 1 on
+//! the simulated board and print the Table-2-style per-kernel statistics
+//! plus the per-group layer times — the "deepest network" analysis the
+//! paper uses to motivate its §5 optimization directions.
+//!
+//!     cargo run --release --example googlenet_breakdown
+
+use fecaffe::bench_tables::{grouped_layer_times, timing_device};
+
+fn main() -> anyhow::Result<()> {
+    // Per-layer groups (Table 1 GoogLeNet column).
+    let mut dev = timing_device();
+    let rows = grouped_layer_times("googlenet", 1, &mut dev)?;
+    println!("GoogLeNet per-group times (ms, batch 1):");
+    let (mut tf, mut tb) = (0.0, 0.0);
+    for (g, f, b) in &rows {
+        println!("  {g:<12} fwd {f:>9.3}   bwd {b:>9.3}");
+        tf += f;
+        tb += b;
+    }
+    println!("  {:<12} fwd {tf:>9.3}   bwd {tb:>9.3}   F->B {:.3}\n", "TOTAL", tf + tb);
+
+    // Kernel statistics (Table 2).
+    let (text, stats) = fecaffe::bench_tables::table2()?;
+    println!("{text}");
+
+    // The §5.2 observation: im2col + col2im share of kernel time.
+    use fecaffe::device::KClass;
+    let kernel_ms: f64 = stats
+        .iter()
+        .filter(|(c, _)| !matches!(c, KClass::WriteBuffer | KClass::ReadBuffer))
+        .map(|(_, v)| v.1)
+        .sum();
+    let im2col_ms = stats.get(&KClass::Im2col).map(|v| v.1).unwrap_or(0.0)
+        + stats.get(&KClass::Col2im).map(|v| v.1).unwrap_or(0.0);
+    println!(
+        "im2col+col2im: {im2col_ms:.1} ms = {:.0}% of kernel time (paper: 37%) — \
+         the §5.2 argument for CPU fallback of data-reshaping kernels",
+        im2col_ms / kernel_ms * 100.0
+    );
+    Ok(())
+}

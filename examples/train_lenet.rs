@@ -1,0 +1,111 @@
+//! End-to-end validation driver (DESIGN.md E6): train LeNet on the
+//! procedural digit dataset for several hundred iterations on the
+//! simulated FPGA with real kernel execution, log the loss curve and
+//! test accuracy, snapshot, and report simulated device time.
+//!
+//!     cargo run --release --example train_lenet [iters] [--cpu]
+//!
+//! The recorded run lives in EXPERIMENTS.md §E6.
+
+use fecaffe::device::cpu::CpuDevice;
+use fecaffe::device::fpga::FpgaSimDevice;
+use fecaffe::device::Device;
+use fecaffe::net::Net;
+use fecaffe::proto::Phase;
+use fecaffe::runtime::PjrtBackend;
+use fecaffe::solver::{snapshot, Solver};
+use fecaffe::zoo;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let iters: usize = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(300);
+    let use_cpu = args.iter().any(|a| a == "--cpu");
+
+    let mut dev: Box<dyn Device> = if use_cpu {
+        println!("device: cpu (fallback path)");
+        Box::new(CpuDevice::new())
+    } else {
+        let mut d = FpgaSimDevice::new();
+        match PjrtBackend::auto() {
+            Some(b) => {
+                println!("device: fpga-sim + PJRT artifacts");
+                d = d.with_backend(Box::new(b));
+            }
+            None => println!("device: fpga-sim (native math; run `make artifacts` for PJRT)"),
+        }
+        Box::new(d)
+    };
+
+    let batch = 64;
+    let param = zoo::by_name("lenet", batch)?;
+    let net = Net::from_param(&param, Phase::Train, dev.as_mut())?;
+    println!(
+        "LeNet: {} parameters, batch {batch}, {iters} iterations, SGD(inv)",
+        net.num_parameters()
+    );
+    let mut sp = zoo::default_solver("lenet")?;
+    sp.display = 0; // we log ourselves
+    sp.max_iter = iters;
+    let mut solver = Solver::new(sp, net, dev.as_mut())?;
+
+    let wall = std::time::Instant::now();
+    for i in 0..iters {
+        let loss = solver.step(dev.as_mut())?;
+        if i % 20 == 0 || i + 1 == iters {
+            println!("iter {i:>4}  loss {loss:.4}  lr {:.5}", solver.learning_rate());
+        }
+    }
+    let wall = wall.elapsed();
+
+    // Loss-curve verdict: first-20 mean vs last-20 mean.
+    let h = &solver.loss_history;
+    let head: f32 = h.iter().take(20).sum::<f32>() / 20.0_f32.min(h.len() as f32);
+    let tail: f32 = h.iter().rev().take(20).sum::<f32>() / 20.0_f32.min(h.len() as f32);
+    println!("\nloss curve: {head:.3} (first 20) -> {tail:.3} (last 20)");
+    anyhow::ensure!(
+        tail < head * 0.5,
+        "training did not converge (loss {head:.3} -> {tail:.3})"
+    );
+
+    // Evaluate on a fresh TEST-phase net sharing nothing but the weights
+    // (weights are copied through a snapshot round-trip).
+    let snap = std::env::temp_dir().join("lenet_e2e.fecaffemodel");
+    snapshot::save(&snap, &solver, dev.as_mut())?;
+    println!("snapshot written: {}", snap.display());
+
+    // Accuracy on held-out synthetic digits using the TEST-phase net.
+    let test_param = zoo::by_name("lenet", 100)?;
+    let mut test_net = Net::from_param(&test_param, Phase::Test, dev.as_mut())?;
+    // Copy trained weights in (same layer order ⇒ same param order).
+    for (src, dst) in solver.net.params().iter().zip(test_net.params().iter()) {
+        let w = src.blob.borrow_mut().data_vec(dev.as_mut());
+        dst.blob.borrow_mut().set_data(dev.as_mut(), &w);
+    }
+    test_net.forward(dev.as_mut())?;
+    let acc = test_net
+        .blob("accuracy")
+        .expect("test net has accuracy layer")
+        .borrow_mut()
+        .data_vec(dev.as_mut())[0];
+    println!("test accuracy (100 fresh digits): {:.1}%", acc * 100.0);
+    anyhow::ensure!(acc > 0.6, "accuracy too low: {acc}");
+
+    println!(
+        "\nwall time: {:.1}s ({:.2} iters/s)",
+        wall.as_secs_f64(),
+        iters as f64 / wall.as_secs_f64()
+    );
+    if let Some(ns) = dev.sim_clock_ns() {
+        println!(
+            "simulated S10 device time: {:.2} s ({:.1} ms/iter)",
+            ns as f64 / 1e9,
+            ns as f64 / 1e6 / iters as f64
+        );
+    }
+    println!("E2E OK");
+    Ok(())
+}

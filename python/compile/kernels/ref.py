@@ -1,0 +1,180 @@
+"""Pure-numpy correctness oracles for every kernel (the build-time
+equivalent of the rust native math library; pytest checks the Pallas/jnp
+kernels against these before artifacts ship)."""
+
+import numpy as np
+
+
+def gemm(a, b, ta=False, tb=False, c=None):
+    a = a.T if ta else a
+    b = b.T if tb else b
+    out = a.astype(np.float64) @ b.astype(np.float64)
+    if c is not None:
+        out = out + c
+    return out.astype(np.float32)
+
+
+def gemv(a, x, trans=False, y=None):
+    out = (a.T if trans else a).astype(np.float64) @ x.astype(np.float64)
+    if y is not None:
+        out = out + y
+    return out.astype(np.float32)
+
+
+def im2col(im, kh, kw, sh, sw, ph, pw):
+    """im: (C,H,W) -> (C*kh*kw, oh*ow), matching the rust loop order."""
+    c, h, w = im.shape
+    oh = (h + 2 * ph - kh) // sh + 1
+    ow = (w + 2 * pw - kw) // sw + 1
+    padded = np.zeros((c, h + 2 * ph, w + 2 * pw), dtype=im.dtype)
+    padded[:, ph:ph + h, pw:pw + w] = im
+    rows = []
+    for ci in range(c):
+        for ki in range(kh):
+            for kj in range(kw):
+                rows.append(
+                    padded[ci, ki:ki + sh * oh:sh, kj:kj + sw * ow:sw].reshape(-1)
+                )
+    return np.stack(rows)
+
+
+def col2im(col, c, h, w, kh, kw, sh, sw, ph, pw, im=None):
+    """Adjoint of im2col, accumulating into `im` (zeros if None)."""
+    oh = (h + 2 * ph - kh) // sh + 1
+    ow = (w + 2 * pw - kw) // sw + 1
+    padded = np.zeros((c, h + 2 * ph, w + 2 * pw), dtype=np.float32)
+    idx = 0
+    for ci in range(c):
+        for ki in range(kh):
+            for kj in range(kw):
+                padded[ci, ki:ki + sh * oh:sh, kj:kj + sw * ow:sw] += col[idx].reshape(oh, ow)
+                idx += 1
+    out = padded[:, ph:ph + h, pw:pw + w]
+    if im is not None:
+        out = out + im
+    return out
+
+
+def pooled_dim(inp, k, p, s):
+    out = int(np.ceil((inp + 2 * p - k) / s)) + 1
+    if p > 0 and (out - 1) * s >= inp + p:
+        out -= 1
+    return out
+
+
+def max_pool_forward(x, kh, kw, sh, sw, ph, pw):
+    """x: (N,C,H,W) -> (top, mask) with mask = plane argmax index."""
+    n, c, h, w = x.shape
+    oh, ow = pooled_dim(h, kh, ph, sh), pooled_dim(w, kw, pw, sw)
+    top = np.full((n, c, oh, ow), -np.inf, dtype=np.float32)
+    mask = np.zeros((n, c, oh, ow), dtype=np.float32)
+    for ni in range(n):
+        for ci in range(c):
+            for y in range(oh):
+                for xx in range(ow):
+                    hs = max(y * sh - ph, 0)
+                    ws = max(xx * sw - pw, 0)
+                    he = min(y * sh - ph + kh, h)
+                    we = min(xx * sw - pw + kw, w)
+                    win = x[ni, ci, hs:he, ws:we]
+                    ij = np.unravel_index(np.argmax(win), win.shape)
+                    top[ni, ci, y, xx] = win[ij]
+                    mask[ni, ci, y, xx] = (hs + ij[0]) * w + (ws + ij[1])
+    return top, mask
+
+
+def max_pool_backward(td, mask, h, w):
+    n, c, oh, ow = td.shape
+    bd = np.zeros((n, c, h * w), dtype=np.float32)
+    for ni in range(n):
+        for ci in range(c):
+            for y in range(oh):
+                for xx in range(ow):
+                    bd[ni, ci, int(mask[ni, ci, y, xx])] += td[ni, ci, y, xx]
+    return bd.reshape(n, c, h, w)
+
+
+def ave_pool_forward(x, kh, kw, sh, sw, ph, pw):
+    n, c, h, w = x.shape
+    oh, ow = pooled_dim(h, kh, ph, sh), pooled_dim(w, kw, pw, sw)
+    top = np.zeros((n, c, oh, ow), dtype=np.float32)
+    for y in range(oh):
+        for xx in range(ow):
+            hs0, ws0 = y * sh - ph, xx * sw - pw
+            he0 = min(hs0 + kh, h + ph)
+            we0 = min(ws0 + kw, w + pw)
+            size = (he0 - hs0) * (we0 - ws0)
+            hs, ws = max(hs0, 0), max(ws0, 0)
+            he, we = min(he0, h), min(we0, w)
+            top[:, :, y, xx] = x[:, :, hs:he, ws:we].sum(axis=(2, 3)) / size
+    return top
+
+
+def ave_pool_backward(td, h, w, kh, kw, sh, sw, ph, pw):
+    n, c, oh, ow = td.shape
+    bd = np.zeros((n, c, h, w), dtype=np.float32)
+    for y in range(oh):
+        for xx in range(ow):
+            hs0, ws0 = y * sh - ph, xx * sw - pw
+            he0 = min(hs0 + kh, h + ph)
+            we0 = min(ws0 + kw, w + pw)
+            size = (he0 - hs0) * (we0 - ws0)
+            hs, ws = max(hs0, 0), max(ws0, 0)
+            he, we = min(he0, h), min(we0, w)
+            bd[:, :, hs:he, ws:we] += td[:, :, y:y + 1, xx:xx + 1] / size
+    return bd
+
+
+def lrn_scale(x, local_size, alpha, k):
+    """x: (N,C,D) -> scale."""
+    n, c, d = x.shape
+    half = (local_size - 1) // 2
+    sq = x * x
+    out = np.zeros_like(x)
+    for ci in range(c):
+        lo, hi = max(ci - half, 0), min(ci + half + 1, c)
+        out[:, ci, :] = k + alpha / local_size * sq[:, lo:hi, :].sum(axis=1)
+    return out.astype(np.float32)
+
+
+def lrn_output(x, scale, beta):
+    return (x * np.power(scale, -beta)).astype(np.float32)
+
+
+def lrn_diff(x, top, scale, td, local_size, alpha, beta):
+    n, c, d = x.shape
+    half = (local_size - 1) // 2
+    ratio = td * top / scale
+    acc = np.zeros_like(x)
+    for ci in range(c):
+        lo, hi = max(ci - half, 0), min(ci + half + 1, c)
+        acc[:, ci, :] = ratio[:, lo:hi, :].sum(axis=1)
+    cache = 2.0 * alpha * beta / local_size
+    return (td * np.power(scale, -beta) - cache * x * acc).astype(np.float32)
+
+
+def softmax(x):
+    m = x.max(axis=1, keepdims=True)
+    e = np.exp(x - m)
+    return (e / e.sum(axis=1, keepdims=True)).astype(np.float32)
+
+
+def softmax_loss(prob, labels):
+    n = prob.shape[0]
+    p = prob[np.arange(n), labels.astype(int)]
+    return np.float32(-np.log(np.maximum(p, np.finfo(np.float32).tiny)).mean())
+
+
+def softmax_loss_backward(prob, labels, weight):
+    n, c = prob.shape
+    onehot = np.zeros_like(prob)
+    onehot[np.arange(n), labels.astype(int)] = 1.0
+    return ((prob - onehot) * (weight / n)).astype(np.float32)
+
+
+def adam(diff, m, v, data, lr, b1, b2, delta, t):
+    m2 = b1 * m + (1 - b1) * diff
+    v2 = b2 * v + (1 - b2) * diff * diff
+    corr = np.sqrt(1 - b2 ** t) / (1 - b1 ** t)
+    data2 = data - lr * corr * m2 / (np.sqrt(v2) + delta)
+    return m2.astype(np.float32), v2.astype(np.float32), data2.astype(np.float32)

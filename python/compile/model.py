@@ -1,0 +1,412 @@
+"""L2: the jax compute graphs for every FeCaffe kernel.
+
+`build(spec)` maps one manifest entry (emitted by rust's gen-manifest; see
+rust/src/runtime/plan.rs for the spec schema) to a jax function plus its
+example input ShapeDtypeStructs. GEMM/GEMV route through the L1 Pallas
+kernels in kernels/gemm.py; everything else is jnp, written to match the
+rust native math bit-for-bit in layout and tie-breaking (the runtime's
+equivalence tests depend on it).
+
+Conventions shared with rust/src/runtime/plan.rs:
+  * scalars (lr, slopes, alpha, ...) are rank-0 f32 runtime inputs;
+  * accumulating kernels take the current output as their last input;
+  * every function returns a tuple (lowered with return_tuple=True).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import gemm as gk
+
+F32 = jnp.float32
+
+
+def _s(*dims):
+    return jax.ShapeDtypeStruct(tuple(int(d) for d in dims), F32)
+
+
+SCALAR = _s()
+
+
+def _pool_geom(spec):
+    return (
+        int(spec["num"]), int(spec["channels"]), int(spec["height"]), int(spec["width"]),
+        int(spec["kernel_h"]), int(spec["kernel_w"]),
+        int(spec["stride_h"]), int(spec["stride_w"]),
+        int(spec["pad_h"]), int(spec["pad_w"]),
+    )
+
+
+def pooled_dim(inp, k, p, s):
+    out = int(np.ceil((inp + 2 * p - k) / s)) + 1
+    if p > 0 and (out - 1) * s >= inp + p:
+        out -= 1
+    return out
+
+
+def _window_gather(x, kh, kw, sh, sw, ph, pw, oh, ow, pad_value):
+    """x: (N,C,H,W) -> values (N,C,oh,ow,kh*kw) and plane indices
+    (oh,ow,kh*kw), window scan order (kh, kw) — identical to the rust
+    max-pool loop, so argmax tie-breaking matches.
+
+    IMPORTANT: index/valid grids are built from *iota* ops, never from
+    embedded numpy constants — XLA's HLO text printer elides large dense
+    literals, which would corrupt the AOT artifact (aot.py guards this)."""
+    n, c, h, w = x.shape
+    xp = jnp.pad(
+        x, ((0, 0), (0, 0), (ph, ph + kh), (pw, pw + kw)),
+        constant_values=pad_value,
+    )
+    vals = []
+    for ki in range(kh):
+        for kj in range(kw):
+            vals.append(xp[:, :, ki:ki + sh * oh:sh, kj:kj + sw * ow:sw])
+    vals = jnp.stack(vals, axis=-1)  # (N,C,oh,ow,kh*kw)
+    # plane index of each tap, from iotas: iy*w + ix (or invalid).
+    iy = jnp.arange(oh, dtype=jnp.int32)[:, None] * sh - ph  # (oh,1)
+    ix = jnp.arange(ow, dtype=jnp.int32)[None, :] * sw - pw  # (1,ow)
+    idx_taps = []
+    valid_taps = []
+    for ki in range(kh):
+        for kj in range(kw):
+            yy = iy + ki  # (oh,1)
+            xx = ix + kj  # (1,ow)
+            ok = (yy >= 0) & (yy < h) & (xx >= 0) & (xx < w)
+            plane = jnp.clip(yy, 0, h - 1) * w + jnp.clip(xx, 0, w - 1)
+            idx_taps.append(jnp.broadcast_to(plane, (oh, ow)))
+            valid_taps.append(jnp.broadcast_to(ok, (oh, ow)))
+    idx = jnp.stack(idx_taps, axis=-1)
+    valid = jnp.stack(valid_taps, axis=-1)
+    return vals, idx, valid
+
+
+def build(spec):
+    """spec (dict) -> (fn, [example args])."""
+    op = spec["op"]
+
+    if op in ("gemm_nn", "gemm_nt", "gemm_tn"):
+        m, n, k = int(spec["m"]), int(spec["n"]), int(spec["k"])
+        acc = bool(spec.get("acc", False))
+        ta = op == "gemm_tn"
+        tb = op == "gemm_nt"
+        a_shape = _s(k, m) if ta else _s(m, k)
+        b_shape = _s(n, k) if tb else _s(k, n)
+        if acc:
+            def fn(a, b, c):
+                return (gk.gemm(a, b, ta=ta, tb=tb, c=c),)
+            return fn, [a_shape, b_shape, _s(m, n)]
+        def fn(a, b):
+            return (gk.gemm(a, b, ta=ta, tb=tb),)
+        return fn, [a_shape, b_shape]
+
+    if op == "gemv":
+        m, n = int(spec["m"]), int(spec["n"])
+        trans = bool(spec.get("trans", False))
+        acc = bool(spec.get("acc", False))
+        xl, yl = (m, n) if trans else (n, m)
+        if acc:
+            def fn(a, x, y):
+                return (gk.gemv(a, x, trans=trans, y=y),)
+            return fn, [_s(m, n), _s(xl), _s(yl)]
+        def fn(a, x):
+            return (gk.gemv(a, x, trans=trans),)
+        return fn, [_s(m, n), _s(xl)]
+
+    if op == "axpy":
+        n = int(spec["n"])
+        return (lambda alpha, x, y: (alpha * x + y,)), [SCALAR, _s(n), _s(n)]
+
+    if op == "axpby":
+        n = int(spec["n"])
+        return (
+            lambda alpha, beta, x, y: (alpha * x + beta * y,),
+            [SCALAR, SCALAR, _s(n), _s(n)],
+        )
+
+    if op == "scal":
+        n = int(spec["n"])
+        return (lambda alpha, x: (alpha * x,)), [SCALAR, _s(n)]
+
+    if op == "asum":
+        n = int(spec["n"])
+        return (lambda x: (jnp.abs(x).sum()[None],)), [_s(n)]
+
+    if op == "add":
+        n = int(spec["n"])
+        return (lambda x, y: (x + y,)), [_s(n), _s(n)]
+
+    if op == "mul":
+        n = int(spec["n"])
+        return (lambda x, y: (x * y,)), [_s(n), _s(n)]
+
+    if op == "powx":
+        n = int(spec["n"])
+        return (lambda p, x: (jnp.power(x, p),)), [SCALAR, _s(n)]
+
+    if op == "relu_f":
+        n = int(spec["n"])
+        return (
+            lambda slope, x: (jnp.where(x > 0, x, slope * x),),
+            [SCALAR, _s(n)],
+        )
+
+    if op == "relu_b":
+        n = int(spec["n"])
+        return (
+            lambda slope, data, td: (td * jnp.where(data > 0, 1.0, slope),),
+            [SCALAR, _s(n), _s(n)],
+        )
+
+    if op == "dropout":
+        n = int(spec["n"])
+        return (
+            lambda scale, x, mask: (x * mask * scale,),
+            [SCALAR, _s(n), _s(n)],
+        )
+
+    if op == "bias":
+        outer, c, dim = int(spec["outer"]), int(spec["channels"]), int(spec["dim"])
+        return (
+            lambda b, top: (top + b[None, :, None],),
+            [_s(c), _s(outer, c, dim)],
+        )
+
+    if op == "im2col":
+        c, h, w = int(spec["channels"]), int(spec["height"]), int(spec["width"])
+        kh, kw = int(spec["kernel_h"]), int(spec["kernel_w"])
+        sh, sw = int(spec["stride_h"]), int(spec["stride_w"])
+        ph, pw = int(spec["pad_h"]), int(spec["pad_w"])
+        oh = (h + 2 * ph - kh) // sh + 1
+        ow = (w + 2 * pw - kw) // sw + 1
+
+        def fn(im):
+            xp = jnp.pad(im, ((0, 0), (ph, ph), (pw, pw)))
+            rows = []
+            for ki in range(kh):
+                for kj in range(kw):
+                    rows.append(
+                        xp[:, ki:ki + sh * oh:sh, kj:kj + sw * ow:sw].reshape(c, oh * ow)
+                    )
+            # order (c, kh, kw): stack taps then interleave channels
+            col = jnp.stack(rows, axis=1)  # (c, kh*kw, oh*ow)
+            return (col.reshape(c * kh * kw, oh * ow),)
+
+        return fn, [_s(c, h, w)]
+
+    if op == "col2im":
+        c, h, w = int(spec["channels"]), int(spec["height"]), int(spec["width"])
+        kh, kw = int(spec["kernel_h"]), int(spec["kernel_w"])
+        sh, sw = int(spec["stride_h"]), int(spec["stride_w"])
+        ph, pw = int(spec["pad_h"]), int(spec["pad_w"])
+        oh = (h + 2 * ph - kh) // sh + 1
+        ow = (w + 2 * pw - kw) // sw + 1
+
+        def fn(col, im):
+            colr = col.reshape(c, kh * kw, oh, ow)
+            padded = jnp.zeros((c, h + 2 * ph, w + 2 * pw), F32)
+            t = 0
+            for ki in range(kh):
+                for kj in range(kw):
+                    padded = padded.at[:, ki:ki + sh * oh:sh, kj:kj + sw * ow:sw].add(
+                        colr[:, t]
+                    )
+                    t += 1
+            return (im + padded[:, ph:ph + h, pw:pw + w],)
+
+        return fn, [_s(c * kh * kw, oh * ow), _s(c, h, w)]
+
+    if op in ("maxpool_f", "maxpool_b", "avepool_f", "avepool_b"):
+        n, c, h, w, kh, kw, sh, sw, ph, pw = _pool_geom(spec)
+        oh, ow = pooled_dim(h, kh, ph, sh), pooled_dim(w, kw, pw, sw)
+
+        if op == "maxpool_f":
+            def fn(x):
+                vals, idx, valid = _window_gather(
+                    x, kh, kw, sh, sw, ph, pw, oh, ow, -jnp.inf
+                )
+                vals = jnp.where(valid[None, None], vals, -jnp.inf)
+                arg = jnp.argmax(vals, axis=-1)
+                top = jnp.max(vals, axis=-1)
+                mask = jnp.take_along_axis(
+                    jnp.broadcast_to(idx[None, None], vals.shape).astype(F32),
+                    arg[..., None].astype(jnp.int32),
+                    axis=-1,
+                )[..., 0]
+                return top, mask
+            return fn, [_s(n, c, h, w)]
+
+        if op == "maxpool_b":
+            def fn(td, mask):
+                flat_td = td.reshape(n * c, oh * ow)
+                flat_mask = mask.reshape(n * c, oh * ow).astype(jnp.int32)
+                bd = jnp.zeros((n * c, h * w), F32)
+                rows = jnp.arange(n * c)[:, None]
+                bd = bd.at[rows, flat_mask].add(flat_td)
+                return (bd.reshape(n, c, h, w),)
+            return fn, [_s(n, c, oh, ow), _s(n, c, oh, ow)]
+
+        # Caffe's padded-window divisor — from iotas (see _window_gather
+        # note on why no numpy constants may be embedded).
+        hs0 = jnp.arange(oh, dtype=jnp.float32)[:, None] * sh - ph
+        ws0 = jnp.arange(ow, dtype=jnp.float32)[None, :] * sw - pw
+        he0 = jnp.minimum(hs0 + kh, h + ph)
+        we0 = jnp.minimum(ws0 + kw, w + pw)
+        jdiv = jnp.broadcast_to((he0 - hs0) * (we0 - ws0), (oh, ow))
+
+        if op == "avepool_f":
+            def fn(x):
+                vals, _, valid = _window_gather(x, kh, kw, sh, sw, ph, pw, oh, ow, 0.0)
+                vals = jnp.where(valid[None, None], vals, 0.0)
+                return (vals.sum(axis=-1) / jdiv[None, None],)
+            return fn, [_s(n, c, h, w)]
+
+        def fn(td):  # avepool_b: scatter shares back
+            share = td / jdiv[None, None]
+            padded = jnp.zeros((n, c, h + 2 * ph + kh, w + 2 * pw + kw), F32)
+            for ki in range(kh):
+                for kj in range(kw):
+                    padded = padded.at[
+                        :, :, ki:ki + sh * oh:sh, kj:kj + sw * ow:sw
+                    ].add(share)
+            return (padded[:, :, ph:ph + h, pw:pw + w],)
+        return fn, [_s(n, c, oh, ow)]
+
+    if op == "lrn_scale":
+        num, c, dim = int(spec["num"]), int(spec["channels"]), int(spec["dim"])
+        ls = int(spec["local_size"])
+        half = (ls - 1) // 2
+
+        def fn(alpha, k, x):
+            sq = x * x
+            acc = jnp.zeros_like(x)
+            for off in range(-half, half + 1):
+                if off < 0:
+                    acc = acc.at[:, -off:, :].add(sq[:, :off, :])
+                elif off > 0:
+                    acc = acc.at[:, :-off, :].add(sq[:, off:, :])
+                else:
+                    acc = acc + sq
+            return (k + alpha / ls * acc,)
+
+        return fn, [SCALAR, SCALAR, _s(num, c, dim)]
+
+    if op == "lrn_output":
+        n = int(spec["n"])
+        return (
+            lambda beta, x, scale: (x * jnp.power(scale, -beta),),
+            [SCALAR, _s(n), _s(n)],
+        )
+
+    if op == "lrn_diff":
+        num, c, dim = int(spec["num"]), int(spec["channels"]), int(spec["dim"])
+        ls = int(spec["local_size"])
+        half = (ls - 1) // 2
+
+        def fn(alpha, beta, x, top, scale, td):
+            ratio = td * top / scale
+            acc = jnp.zeros_like(x)
+            for off in range(-half, half + 1):
+                if off < 0:
+                    acc = acc.at[:, -off:, :].add(ratio[:, :off, :])
+                elif off > 0:
+                    acc = acc.at[:, :-off, :].add(ratio[:, off:, :])
+                else:
+                    acc = acc + ratio
+            cache = 2.0 * alpha * beta / ls
+            return (td * jnp.power(scale, -beta) - cache * x * acc,)
+
+        dims = _s(num, c, dim)
+        return fn, [SCALAR, SCALAR, dims, dims, dims, dims]
+
+    if op == "softmax":
+        n, c = int(spec["n"]), int(spec["c"])
+
+        def fn(x):
+            m = jnp.max(x, axis=1, keepdims=True)
+            e = jnp.exp(x - m)
+            return (e / jnp.sum(e, axis=1, keepdims=True),)
+
+        return fn, [_s(n, c)]
+
+    if op == "softmaxloss_f":
+        n, c = int(spec["n"]), int(spec["c"])
+
+        def fn(prob, labels):
+            p = jnp.take_along_axis(
+                prob, labels.astype(jnp.int32)[:, None], axis=1
+            )[:, 0]
+            p = jnp.maximum(p, jnp.finfo(F32).tiny)
+            return (-jnp.log(p).mean()[None],)
+
+        return fn, [_s(n, c), _s(n)]
+
+    if op == "softmaxloss_b":
+        n, c = int(spec["n"]), int(spec["c"])
+
+        def fn(weight, prob, labels):
+            onehot = jax.nn.one_hot(labels.astype(jnp.int32), c, dtype=F32)
+            return ((prob - onehot) * (weight / n),)
+
+        return fn, [SCALAR, _s(n, c), _s(n)]
+
+    # ---- solver updates (paper §4.3 compute-update kernels) ----
+    if op == "sgd":
+        n = int(spec["n"])
+
+        def fn(lr, momentum, diff, hist, data):
+            h2 = momentum * hist + lr * diff
+            return h2, data - h2
+
+        return fn, [SCALAR, SCALAR, _s(n), _s(n), _s(n)]
+
+    if op == "nesterov":
+        n = int(spec["n"])
+
+        def fn(lr, momentum, diff, hist, data):
+            h2 = momentum * hist + lr * diff
+            return h2, data - ((1 + momentum) * h2 - momentum * hist)
+
+        return fn, [SCALAR, SCALAR, _s(n), _s(n), _s(n)]
+
+    if op == "adagrad":
+        n = int(spec["n"])
+
+        def fn(lr, delta, diff, hist, data):
+            h2 = hist + diff * diff
+            return h2, data - lr * diff / (jnp.sqrt(h2) + delta)
+
+        return fn, [SCALAR, SCALAR, _s(n), _s(n), _s(n)]
+
+    if op == "rmsprop":
+        n = int(spec["n"])
+
+        def fn(lr, decay, delta, diff, hist, data):
+            h2 = decay * hist + (1 - decay) * diff * diff
+            return h2, data - lr * diff / (jnp.sqrt(h2) + delta)
+
+        return fn, [SCALAR, SCALAR, SCALAR, _s(n), _s(n), _s(n)]
+
+    if op == "adadelta":
+        n = int(spec["n"])
+
+        def fn(momentum, delta, lr, diff, hg, hu, data):
+            hg2 = momentum * hg + (1 - momentum) * diff * diff
+            update = diff * jnp.sqrt((hu + delta) / (hg2 + delta))
+            hu2 = momentum * hu + (1 - momentum) * update * update
+            return hg2, hu2, data - lr * update
+
+        return fn, [SCALAR, SCALAR, SCALAR, _s(n), _s(n), _s(n), _s(n)]
+
+    if op == "adam":
+        n = int(spec["n"])
+
+        def fn(lr, b1, b2, delta, t, diff, m, v, data):
+            m2 = b1 * m + (1 - b1) * diff
+            v2 = b2 * v + (1 - b2) * diff * diff
+            corr = jnp.sqrt(1 - jnp.power(b2, t)) / (1 - jnp.power(b1, t))
+            return m2, v2, data - lr * corr * m2 / (jnp.sqrt(v2) + delta)
+
+        return fn, [SCALAR, SCALAR, SCALAR, SCALAR, SCALAR, _s(n), _s(n), _s(n), _s(n)]
+
+    raise ValueError(f"unknown op '{op}'")

@@ -1,0 +1,55 @@
+"""AOT pipeline tests: manifest entries lower to parseable HLO text and a
+lowered kernel executes correctly through XLA (the same engine the rust
+runtime drives via PJRT)."""
+
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from compile.aot import lower_entry
+from compile.model import build
+from compile.kernels import ref
+
+
+def test_lowered_hlo_is_text_with_entry():
+    text = lower_entry("x", dict(op="relu_f", n=256))
+    assert "ENTRY" in text
+    assert "f32[256]" in text
+
+
+def test_gemm_lowering_contains_dot_or_loop():
+    text = lower_entry("g", dict(op="gemm_nn", m=20, n=30, k=25, acc=False))
+    assert "ENTRY" in text
+    # pallas interpret lowering produces a while loop over the grid or a
+    # fused dot; either implies real compute made it into the artifact
+    assert ("while" in text) or ("dot(" in text)
+
+
+def test_executable_roundtrip_matches_ref():
+    # Compile a lowered fn via jax and compare with the oracle — numerical
+    # proof the artifact math is right before rust ever loads it.
+    import jax
+    spec = dict(op="gemm_nn", m=12, n=18, k=7, acc=True)
+    fn, args = build(spec)
+    rng = np.random.default_rng(7)
+    vals = [rng.standard_normal(a.shape).astype(np.float32) for a in args]
+    out = np.asarray(jax.jit(fn)(*vals)[0])
+    np.testing.assert_allclose(out, ref.gemm(vals[0], vals[1], c=vals[2]), rtol=2e-4, atol=2e-4)
+
+
+def test_manifest_present_and_well_formed():
+    path = Path(__file__).resolve().parents[2] / "artifacts" / "manifest.json"
+    if not path.exists():
+        pytest.skip("artifacts/manifest.json not generated yet (run `make artifacts`)")
+    manifest = json.loads(path.read_text())
+    arts = manifest["artifacts"]
+    assert len(arts) > 100
+    # every spec must build
+    for key, spec in list(arts.items())[::25]:
+        fn, shapes = build(spec)
+        assert callable(fn) and shapes, key

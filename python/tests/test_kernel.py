@@ -1,0 +1,82 @@
+"""L1 Pallas kernels vs the pure-numpy oracle — the core correctness
+signal for the gemm/gemv artifacts. Shape sweeps are hypothesis-style:
+a seeded PRNG draws many random shapes/values per property."""
+
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from compile.kernels import gemm as gk
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0x5EED)
+
+
+def rand(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+@pytest.mark.parametrize("case", range(24))
+def test_gemm_nn_random_shapes(case):
+    m, n, k = (int(RNG.integers(1, 200)) for _ in range(3))
+    a, b = rand(m, k), rand(k, n)
+    out = np.asarray(gk.gemm(a, b))
+    np.testing.assert_allclose(out, ref.gemm(a, b), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("ta,tb", [(False, True), (True, False), (True, True)])
+def test_gemm_transposes(ta, tb):
+    m, n, k = 33, 65, 17
+    a = rand(k, m) if ta else rand(m, k)
+    b = rand(n, k) if tb else rand(k, n)
+    out = np.asarray(gk.gemm(a, b, ta=ta, tb=tb))
+    np.testing.assert_allclose(out, ref.gemm(a, b, ta=ta, tb=tb), rtol=2e-4, atol=2e-4)
+
+
+def test_gemm_acc():
+    a, b, c = rand(7, 9), rand(9, 11), rand(7, 11)
+    out = np.asarray(gk.gemm(a, b, c=c))
+    np.testing.assert_allclose(out, ref.gemm(a, b, c=c), rtol=2e-4, atol=2e-4)
+
+
+def test_gemm_tile_boundaries():
+    # Exercise shapes straddling the 128/512 tile edges.
+    for m, n, k in [(128, 512, 512), (129, 513, 511), (1, 1, 1), (127, 511, 513)]:
+        a, b = rand(m, k), rand(k, n)
+        out = np.asarray(gk.gemm(a, b))
+        np.testing.assert_allclose(out, ref.gemm(a, b), rtol=3e-4, atol=3e-4)
+
+
+def test_gemm_conv_shapes_from_zoo():
+    # Real conv gemm shapes: lenet conv1/conv2, googlenet 3x3, alexnet fc
+    for m, k, n in [(20, 25, 576), (50, 500, 64), (128, 1152, 784), (96, 363, 3025)]:
+        a, b = rand(m, k), rand(k, n)
+        out = np.asarray(gk.gemm(a, b))
+        np.testing.assert_allclose(out, ref.gemm(a, b), rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("case", range(12))
+def test_gemv_random(case):
+    m, n = (int(RNG.integers(1, 300)) for _ in range(2))
+    trans = bool(RNG.integers(0, 2))
+    a = rand(m, n)
+    x = rand(m if trans else n)
+    out = np.asarray(gk.gemv(a, x, trans=trans))
+    np.testing.assert_allclose(out, ref.gemv(a, x, trans=trans), rtol=2e-4, atol=2e-4)
+
+
+def test_gemv_acc():
+    a, x, y = rand(13, 7), rand(7), rand(13)
+    out = np.asarray(gk.gemv(a, x, y=y))
+    np.testing.assert_allclose(out, ref.gemv(a, x, y=y), rtol=2e-4, atol=2e-4)
+
+
+def test_vmem_budget():
+    # The tile chooser must never exceed ~1.6M floats (6.4 MB) of operand
+    # tiles — well under the 16 MB/core VMEM budget (DESIGN.md §8).
+    for m, n, k in [(4096, 4096, 4096), (1, 1_000_000, 1), (128, 784, 1152)]:
+        assert gk.vmem_floats(m, n, k) <= 400_000, (m, n, k)

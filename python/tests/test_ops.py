@@ -1,0 +1,186 @@
+"""L2 jnp op kernels vs the numpy oracle, over the manifest spec schema
+(the same `build()` the AOT driver lowers)."""
+
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from compile.kernels import ref
+from compile.model import build
+
+RNG = np.random.default_rng(0xCAFE)
+
+
+def rand(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+def run(spec, *args):
+    fn, shapes = build(spec)
+    assert len(shapes) == len(args), (len(shapes), len(args))
+    for s, a in zip(shapes, args):
+        assert tuple(s.shape) == tuple(np.shape(a)), (spec["op"], s.shape, np.shape(a))
+    return [np.asarray(o) for o in fn(*args)]
+
+
+def test_im2col_matches_ref():
+    for c, h, w, kh, kw, sh, sw, ph, pw in [
+        (1, 28, 28, 5, 5, 1, 1, 0, 0),
+        (3, 11, 13, 3, 3, 2, 2, 1, 1),
+        (2, 7, 7, 3, 3, 1, 1, 2, 2),
+    ]:
+        im = rand(c, h, w)
+        (out,) = run(
+            dict(op="im2col", channels=c, height=h, width=w, kernel_h=kh,
+                 kernel_w=kw, stride_h=sh, stride_w=sw, pad_h=ph, pad_w=pw),
+            im,
+        )
+        np.testing.assert_allclose(out, ref.im2col(im, kh, kw, sh, sw, ph, pw))
+
+
+def test_col2im_accumulates():
+    c, h, w, kh, kw, sh, sw, ph, pw = 2, 6, 6, 3, 3, 1, 1, 1, 1
+    oh = (h + 2 * ph - kh) // sh + 1
+    ow = (w + 2 * pw - kw) // sw + 1
+    col = rand(c * kh * kw, oh * ow)
+    im0 = rand(c, h, w)
+    (out,) = run(
+        dict(op="col2im", channels=c, height=h, width=w, kernel_h=kh,
+             kernel_w=kw, stride_h=sh, stride_w=sw, pad_h=ph, pad_w=pw),
+        col, im0,
+    )
+    expect = ref.col2im(col, c, h, w, kh, kw, sh, sw, ph, pw, im=im0)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "geom",
+    [
+        (2, 3, 8, 8, 2, 2, 2, 2, 0, 0),
+        (1, 2, 7, 7, 3, 3, 2, 2, 0, 0),
+        (1, 2, 6, 6, 3, 3, 1, 1, 1, 1),  # padded inception pool
+    ],
+)
+def test_maxpool_fwd_bwd(geom):
+    n, c, h, w, kh, kw, sh, sw, ph, pw = geom
+    x = rand(n, c, h, w)
+    spec = dict(op="maxpool_f", num=n, channels=c, height=h, width=w,
+                kernel_h=kh, kernel_w=kw, stride_h=sh, stride_w=sw,
+                pad_h=ph, pad_w=pw)
+    top, mask = run(spec, x)
+    rt, rm = ref.max_pool_forward(x, kh, kw, sh, sw, ph, pw)
+    np.testing.assert_allclose(top, rt)
+    np.testing.assert_array_equal(mask, rm)
+
+    td = rand(*top.shape)
+    spec["op"] = "maxpool_b"
+    (bd,) = run(spec, td, mask)
+    np.testing.assert_allclose(bd, ref.max_pool_backward(td, mask, h, w), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize(
+    "geom",
+    [
+        (2, 2, 8, 8, 2, 2, 2, 2, 0, 0),
+        (1, 3, 14, 14, 5, 5, 3, 3, 0, 0),  # googlenet aux head pool
+        (1, 2, 7, 7, 7, 7, 1, 1, 0, 0),    # global
+    ],
+)
+def test_avepool_fwd_bwd(geom):
+    n, c, h, w, kh, kw, sh, sw, ph, pw = geom
+    x = rand(n, c, h, w)
+    spec = dict(op="avepool_f", num=n, channels=c, height=h, width=w,
+                kernel_h=kh, kernel_w=kw, stride_h=sh, stride_w=sw,
+                pad_h=ph, pad_w=pw)
+    (top,) = run(spec, x)
+    np.testing.assert_allclose(
+        top, ref.ave_pool_forward(x, kh, kw, sh, sw, ph, pw), rtol=1e-5, atol=1e-6
+    )
+    td = rand(*top.shape)
+    spec["op"] = "avepool_b"
+    (bd,) = run(spec, td)
+    np.testing.assert_allclose(
+        bd, ref.ave_pool_backward(td, h, w, kh, kw, sh, sw, ph, pw), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_lrn_chain():
+    num, c, dim, ls = 2, 6, 5, 5
+    alpha, beta, k = np.float32(1e-2), np.float32(0.75), np.float32(1.0)
+    x = rand(num, c, dim)
+    (scale,) = run(dict(op="lrn_scale", num=num, channels=c, dim=dim, local_size=ls),
+                   alpha, k, x)
+    np.testing.assert_allclose(scale, ref.lrn_scale(x, ls, alpha, k), rtol=1e-5)
+    nflat = num * c * dim
+    (top,) = run(dict(op="lrn_output", n=nflat), beta,
+                 x.reshape(-1), scale.reshape(-1))
+    np.testing.assert_allclose(
+        top, ref.lrn_output(x, scale.reshape(x.shape), beta).reshape(-1), rtol=1e-5
+    )
+    td = rand(num, c, dim)
+    (bd,) = run(dict(op="lrn_diff", num=num, channels=c, dim=dim, local_size=ls),
+                alpha, beta, x, top.reshape(x.shape), scale.reshape(x.shape), td)
+    np.testing.assert_allclose(
+        bd, ref.lrn_diff(x, top.reshape(x.shape), scale.reshape(x.shape), td, ls, alpha, beta),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_softmax_family():
+    n, c = 4, 7
+    x = rand(n, c)
+    (prob,) = run(dict(op="softmax", n=n, c=c), x)
+    np.testing.assert_allclose(prob, ref.softmax(x), rtol=1e-5, atol=1e-6)
+    labels = RNG.integers(0, c, n).astype(np.float32)
+    (loss,) = run(dict(op="softmaxloss_f", n=n, c=c), prob, labels)
+    np.testing.assert_allclose(loss[0], ref.softmax_loss(prob, labels), rtol=1e-5)
+    (grad,) = run(dict(op="softmaxloss_b", n=n, c=c), np.float32(0.3), prob, labels)
+    np.testing.assert_allclose(
+        grad, ref.softmax_loss_backward(prob, labels, 0.3), rtol=1e-5, atol=1e-7
+    )
+
+
+def test_eltwise_ops():
+    n = 64
+    x, y = rand(n), rand(n)
+    (out,) = run(dict(op="axpy", n=n), np.float32(2.5), x, y)
+    np.testing.assert_allclose(out, 2.5 * x + y, rtol=1e-6)
+    (out,) = run(dict(op="axpby", n=n), np.float32(2.0), np.float32(-0.5), x, y)
+    np.testing.assert_allclose(out, 2.0 * x - 0.5 * y, rtol=1e-6)
+    (out,) = run(dict(op="relu_f", n=n), np.float32(0.1), x)
+    np.testing.assert_allclose(out, np.where(x > 0, x, 0.1 * x), rtol=1e-6)
+    (out,) = run(dict(op="relu_b", n=n), np.float32(0.0), x, y)
+    np.testing.assert_allclose(out, y * (x > 0), rtol=1e-6)
+    (out,) = run(dict(op="asum", n=n), x)
+    np.testing.assert_allclose(out[0], np.abs(x).sum(), rtol=1e-5)
+    mask = (RNG.random(n) > 0.5).astype(np.float32)
+    (out,) = run(dict(op="dropout", n=n), np.float32(2.0), x, mask)
+    np.testing.assert_allclose(out, x * mask * 2.0, rtol=1e-6)
+
+
+def test_bias_broadcast():
+    outer, c, dim = 2, 3, 4
+    b, top = rand(c), rand(outer, c, dim)
+    (out,) = run(dict(op="bias", outer=outer, channels=c, dim=dim), b, top)
+    np.testing.assert_allclose(out, top + b[None, :, None], rtol=1e-6)
+
+
+def test_solver_updates_match_ref():
+    n = 128
+    diff, m, v, data = rand(n), rand(n) * 0.1, np.abs(rand(n)) * 0.1, rand(n)
+    m2, v2, d2 = run(dict(op="adam", n=n), np.float32(0.01), np.float32(0.9),
+                     np.float32(0.999), np.float32(1e-8), np.float32(3.0),
+                     diff, m, v, data)
+    rm, rv, rd = ref.adam(diff, m, v, data, 0.01, 0.9, 0.999, 1e-8, 3)
+    np.testing.assert_allclose(m2, rm, rtol=1e-5)
+    np.testing.assert_allclose(v2, rv, rtol=1e-5)
+    np.testing.assert_allclose(d2, rd, rtol=1e-4, atol=1e-6)
+
+    hist = np.abs(rand(n))
+    h2, d2 = run(dict(op="sgd", n=n), np.float32(0.1), np.float32(0.9), diff, hist, data)
+    np.testing.assert_allclose(h2, 0.9 * hist + 0.1 * diff, rtol=1e-6)
+    np.testing.assert_allclose(d2, data - h2, rtol=1e-5, atol=1e-6)

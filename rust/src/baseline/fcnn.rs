@@ -1,0 +1,165 @@
+//! F-CNN execution model (the paper's Table 4 comparator).
+//!
+//! F-CNN maps each layer onto a fixed systolic pipeline reconfigured
+//! between layers, streaming feature maps from board DDR at 150 MHz.
+//! The model: convolution is compute-bound on the pipeline with a
+//! per-layer *fill efficiency* (shallow input channels fill the systolic
+//! chain better — F-CNN's own published numbers imply ~1.25 MAC/cycle on
+//! conv1 (C_in = 1) vs ~0.88 on conv2 (C_in = 20)); pooling streams at an
+//! effective ~40 MB/s (their pool layers are reconfiguration/stream
+//! bound); FC layers are compute-bound plus a fixed ~170 ms
+//! reconfiguration. Backward multiplies by the measured fwd→bwd factor
+//! (two extra passes at lower pipeline efficiency).
+//!
+//! Every constant is calibrated against the *published* LeNet batch-384
+//! per-layer times from [8] and validated by the unit tests below; the
+//! Table 4 ratios then emerge from running this model and the FeCaffe
+//! simulator on the same workload.
+
+/// F-CNN machine constants (from [8] and its board spec).
+pub struct FcnnMachine {
+    pub fmax_hz: f64,
+    /// Pipeline fill efficiency by input depth: MACs/cycle.
+    pub conv_eff_shallow: f64, // C_in < 8
+    pub conv_eff_deep: f64,    // C_in ≥ 8
+    /// Effective pooling stream rate (reconfig + DDR bound).
+    pub pool_bytes_per_s: f64,
+    /// FC pipeline efficiency (MACs/cycle) and per-layer reconfig.
+    pub fc_eff: f64,
+    pub fc_reconfig_s: f64,
+    /// Backward multipliers (measured from [8]: conv ≈ 2.1×, pool ≈ 1.07×,
+    /// fc ≈ 2×).
+    pub conv_bwd_factor: f64,
+    pub pool_bwd_factor: f64,
+    pub fc_bwd_factor: f64,
+}
+
+impl Default for FcnnMachine {
+    fn default() -> Self {
+        FcnnMachine {
+            fmax_hz: 150.0e6,
+            conv_eff_shallow: 1.25,
+            conv_eff_deep: 0.88,
+            pool_bytes_per_s: 40.0e6,
+            fc_eff: 1.11,
+            fc_reconfig_s: 0.17,
+            conv_bwd_factor: 2.1,
+            pool_bwd_factor: 1.07,
+            fc_bwd_factor: 2.0,
+        }
+    }
+}
+
+/// LeNet layer workload description (per image).
+#[derive(Debug, Clone, Copy)]
+pub enum LayerWork {
+    /// (MACs per image, input channels)
+    Conv { macs: u64, c_in: usize },
+    /// bytes streamed per image (in + out feature maps)
+    Pool { bytes: u64 },
+    /// MACs per image
+    Fc { macs: u64 },
+}
+
+impl FcnnMachine {
+    fn conv_eff(&self, c_in: usize) -> f64 {
+        if c_in < 8 {
+            self.conv_eff_shallow
+        } else {
+            self.conv_eff_deep
+        }
+    }
+
+    /// Forward time for a layer over `batch` images, seconds.
+    pub fn forward_s(&self, work: LayerWork, batch: usize) -> f64 {
+        let b = batch as f64;
+        match work {
+            LayerWork::Conv { macs, c_in } => {
+                b * macs as f64 / (self.conv_eff(c_in) * self.fmax_hz)
+            }
+            LayerWork::Pool { bytes } => b * bytes as f64 / self.pool_bytes_per_s,
+            LayerWork::Fc { macs } => {
+                b * macs as f64 / (self.fc_eff * self.fmax_hz) + self.fc_reconfig_s
+            }
+        }
+    }
+
+    /// Backward time for a layer over `batch` images, seconds.
+    pub fn backward_s(&self, work: LayerWork, batch: usize) -> f64 {
+        match work {
+            LayerWork::Conv { .. } => self.forward_s(work, batch) * self.conv_bwd_factor,
+            LayerWork::Pool { .. } => self.forward_s(work, batch) * self.pool_bwd_factor,
+            LayerWork::Fc { .. } => {
+                (self.forward_s(work, batch) - self.fc_reconfig_s) * self.fc_bwd_factor
+                    + self.fc_reconfig_s
+            }
+        }
+    }
+}
+
+/// LeNet L1–L6 workloads (per image), matching the paper's row labels.
+pub fn lenet_layers() -> Vec<(&'static str, LayerWork)> {
+    vec![
+        ("L1 (Conv)", LayerWork::Conv { macs: 20 * 24 * 24 * 25, c_in: 1 }),
+        ("L2 (Pool)", LayerWork::Pool { bytes: 4 * (20 * 24 * 24 + 20 * 12 * 12) }),
+        ("L3 (Conv)", LayerWork::Conv { macs: 50 * 8 * 8 * 25 * 20, c_in: 20 }),
+        ("L4 (Pool)", LayerWork::Pool { bytes: 4 * (50 * 8 * 8 + 50 * 4 * 4) }),
+        ("L5 (FC)", LayerWork::Fc { macs: 800 * 500 }),
+        ("L6 (FC)", LayerWork::Fc { macs: 500 * 10 }),
+    ]
+}
+
+/// The published LeNet batch-384 numbers from [8] (ms) for validation.
+pub const PUBLISHED_FWD_MS: [f64; 6] = [590.0, 530.0, 4670.0, 180.0, 920.0, 180.0];
+pub const PUBLISHED_BWD_MS: [f64; 6] = [1210.0, 570.0, 10320.0, 180.0, 1820.0, 200.0];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_reproduces_published_totals_within_15pct() {
+        let m = FcnnMachine::default();
+        let layers = lenet_layers();
+        let fwd: f64 = layers
+            .iter()
+            .map(|(_, w)| m.forward_s(*w, 384) * 1e3)
+            .sum();
+        let bwd: f64 = layers
+            .iter()
+            .map(|(_, w)| m.backward_s(*w, 384) * 1e3)
+            .sum();
+        let pub_fwd: f64 = PUBLISHED_FWD_MS.iter().sum();
+        let pub_bwd: f64 = PUBLISHED_BWD_MS.iter().sum();
+        assert!(
+            (fwd - pub_fwd).abs() / pub_fwd < 0.15,
+            "fwd {fwd:.0} vs published {pub_fwd:.0}"
+        );
+        assert!(
+            (bwd - pub_bwd).abs() / pub_bwd < 0.15,
+            "bwd {bwd:.0} vs published {pub_bwd:.0}"
+        );
+    }
+
+    #[test]
+    fn per_layer_within_2x_of_published() {
+        let m = FcnnMachine::default();
+        for (i, (name, w)) in lenet_layers().iter().enumerate() {
+            let fwd = m.forward_s(*w, 384) * 1e3;
+            let bwd = m.backward_s(*w, 384) * 1e3;
+            let rf = fwd / PUBLISHED_FWD_MS[i];
+            let rb = bwd / PUBLISHED_BWD_MS[i];
+            assert!((0.5..2.0).contains(&rf), "{name} fwd ratio {rf}");
+            assert!((0.5..2.0).contains(&rb), "{name} bwd ratio {rb}");
+        }
+    }
+
+    #[test]
+    fn conv2_dominates_like_published() {
+        let m = FcnnMachine::default();
+        let layers = lenet_layers();
+        let times: Vec<f64> = layers.iter().map(|(_, w)| m.forward_s(*w, 384)).collect();
+        let max = times.iter().cloned().fold(0.0, f64::max);
+        assert_eq!(times[2], max, "conv2 must be the slowest layer");
+    }
+}

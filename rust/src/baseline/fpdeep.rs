@@ -1,0 +1,64 @@
+//! FPDeep cluster model (Table 4's second comparator).
+//!
+//! FPDeep pipelines *all layers* of the network across a 15-FPGA chain
+//! (VC709 / V7-690T, 2880 DSPs each), keeps every weight/activation in
+//! BRAM, and computes in fixed-point 16 — so its throughput is DSP-bound,
+//! not DDR-bound. We model the cluster as a dense systolic farm:
+//! `imgs/s = DSPs_total × fmax × util / MACs_per_image` (2 MACs per DSP
+//! per cycle at fixp16).
+
+pub struct FpdeepCluster {
+    pub boards: usize,
+    pub dsps_per_board: u64,
+    pub fmax_hz: f64,
+    pub macs_per_dsp_cycle: f64,
+    pub utilization: f64,
+}
+
+impl Default for FpdeepCluster {
+    fn default() -> Self {
+        FpdeepCluster {
+            boards: 15,
+            dsps_per_board: 2880,
+            fmax_hz: 150.0e6,
+            macs_per_dsp_cycle: 2.0, // fixp16 packs two MACs per DSP48
+            utilization: 0.55,
+        }
+    }
+}
+
+impl FpdeepCluster {
+    pub fn total_dsps(&self) -> u64 {
+        self.boards as u64 * self.dsps_per_board
+    }
+
+    /// Images/second on a network of `macs_per_image` (fwd+bwd ≈ 3× fwd).
+    pub fn train_images_per_s(&self, fwd_macs_per_image: f64) -> f64 {
+        let macs_s =
+            self.total_dsps() as f64 * self.fmax_hz * self.macs_per_dsp_cycle * self.utilization;
+        macs_s / (3.0 * fwd_macs_per_image)
+    }
+
+    /// Hours to train one ImageNet epoch.
+    pub fn epoch_hours(&self, fwd_macs_per_image: f64, images: usize) -> f64 {
+        images as f64 / self.train_images_per_s(fwd_macs_per_image) / 3600.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_epoch_near_published() {
+        // AlexNet ≈ 0.72 GMACs/image forward; published epoch: 0.17 h.
+        let c = FpdeepCluster::default();
+        let h = c.epoch_hours(0.72e9, 1_281_167);
+        assert!((0.05..0.5).contains(&h), "epoch {h} h vs published 0.17 h");
+    }
+
+    #[test]
+    fn dsp_total_matches_paper() {
+        assert_eq!(FpdeepCluster::default().total_dsps(), 43_200);
+    }
+}

@@ -1,0 +1,11 @@
+//! Comparator systems from paper Table 4.
+//!
+//! * [`fcnn`] — F-CNN (Zhao et al., ASAP'16): 2× Stratix V GSD8 boards,
+//!   MaxCompiler systolic conv/pool pipelines at 150 MHz, FP32. The paper
+//!   compares LeNet per-layer times against it (6.4×/8.4×).
+//! * [`fpdeep`] — FPDeep (Geng et al.): 15-FPGA deeply-pipelined cluster,
+//!   fixed-point 16, all weights/activations in BRAM (AlexNet epoch
+//!   0.17 h).
+
+pub mod fcnn;
+pub mod fpdeep;

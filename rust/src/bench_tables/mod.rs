@@ -1,0 +1,347 @@
+//! Paper-table regeneration harness (DESIGN.md §5 experiment index).
+//!
+//! Each `benches/*.rs` binary is a thin wrapper over a function here, so
+//! integration tests can assert on the same numbers the benches print.
+//! All timings come from the FPGA simulator's deterministic clock
+//! (timing-only mode): one iteration is exact — where the paper averaged
+//! 100 noisy wallclock runs, the simulator's model is noise-free.
+
+use crate::device::fpga::{FpgaSimDevice, QueueMode};
+use crate::device::{Device, KClass};
+use crate::net::Net;
+use crate::proto::Phase;
+use crate::util::table::{ms, Table};
+use crate::zoo;
+use std::collections::BTreeMap;
+
+/// A timing-only simulated board.
+pub fn timing_device() -> FpgaSimDevice {
+    let mut dev = FpgaSimDevice::new();
+    dev.timing_only = true;
+    dev
+}
+
+/// Larger-capacity variant for headroom experiments (§5.1 "enlarging DDR
+/// storage" direction). The paper-setting benches all fit the true 2 GB
+/// board thanks to the shared im2col scratch region.
+pub fn timing_device_large() -> FpgaSimDevice {
+    let mut dev = FpgaSimDevice::new().with_capacity(4 * 1024 * 1024 * 1024);
+    dev.timing_only = true;
+    dev
+}
+
+/// Paper Table 1 row grouping: fold relu/norm/pool/dropout/split layers
+/// into their host group the way the paper's rows do ("the convolution
+/// also involves a couple of operations associated").
+pub fn group_of(net: &str, layer: &str) -> String {
+    // Split layers inherit their source blob's group.
+    let base = layer.strip_suffix("_split").unwrap_or(layer);
+    match net {
+        "alexnet" => {
+            if base == "data" || base == "loss" || base == "accuracy" {
+                return base.to_string();
+            }
+            let digit = base.chars().rev().find(|c| c.is_ascii_digit());
+            match digit {
+                Some(d @ '1'..='5') => format!("conv{d}"),
+                Some(d) => format!("fc{d}"),
+                None => base.to_string(),
+            }
+        }
+        "vgg16" => {
+            if let Some(rest) = base.strip_prefix("conv") {
+                return format!("conv{}", &rest[..1]);
+            }
+            if let Some(rest) = base.strip_prefix("pool") {
+                return format!("conv{}", &rest[..1]);
+            }
+            if let Some(rest) = base.strip_prefix("relu_conv") {
+                return format!("conv{}", &rest[..1]);
+            }
+            let digit = base.chars().rev().find(|c| c.is_ascii_digit());
+            match (
+                base.starts_with("fc") || base.starts_with("relu") || base.starts_with("drop"),
+                digit,
+            ) {
+                (true, Some(d)) => format!("fc{d}"),
+                _ => base.to_string(),
+            }
+        }
+        "squeezenet" => {
+            let base = base.strip_prefix("relu_").unwrap_or(base);
+            if let Some(head) = base.split('/').next() {
+                if head.starts_with("fire") {
+                    return head.to_string();
+                }
+            }
+            match base {
+                "pool1" | "relu_conv1" => "conv1".into(),
+                "pool4" => "fire4".into(),
+                "pool8" => "fire8".into(),
+                "drop9" => "fire9".into(),
+                "relu_conv10" | "pool10" => "conv10".into(),
+                other => other.into(),
+            }
+        }
+        "googlenet" => {
+            let base2 = base.strip_prefix("relu_").unwrap_or(base);
+            let head = base2.split('/').next().unwrap_or(base2);
+            match head {
+                "pool1" | "conv1" => "conv1".into(),
+                "conv2" | "pool2" => "conv2".into(),
+                "pool3" => "incep_3b".into(),
+                "pool4" => "incep_4e".into(),
+                "pool5" | "loss3" => "loss3".into(),
+                h if h.starts_with("inception_") => {
+                    format!("incep_{}", &h["inception_".len()..])
+                }
+                other => other.into(),
+            }
+        }
+        _ => base.to_string(),
+    }
+}
+
+/// Grouped per-layer fwd/bwd times for a net at a batch size, in
+/// first-appearance order. Returns (group, fwd_ms, bwd_ms).
+pub fn grouped_layer_times(
+    name: &str,
+    batch: usize,
+    dev: &mut FpgaSimDevice,
+) -> anyhow::Result<Vec<(String, f64, f64)>> {
+    let param = zoo::by_name(name, batch)?;
+    let mut net = Net::from_param(&param, Phase::Train, dev)?;
+    // Warm one forward so lazily-created buffers (loss scalars) exist,
+    // then reset the clock for a clean measured pass.
+    net.forward(dev)?;
+    dev.reset_timing();
+    let names = net.layer_names();
+    let (_, fwd) = net.forward_timed(dev)?;
+    let bwd = net.backward_timed(dev)?;
+    let mut order: Vec<String> = Vec::new();
+    let mut agg: BTreeMap<String, (f64, f64)> = BTreeMap::new();
+    for (i, lname) in names.iter().enumerate() {
+        let group = group_of(name, lname);
+        if !agg.contains_key(&group) {
+            order.push(group.clone());
+        }
+        let e = agg.entry(group).or_insert((0.0, 0.0));
+        e.0 += fwd[i] as f64 / 1e6;
+        e.1 += bwd[i] as f64 / 1e6;
+    }
+    Ok(order
+        .into_iter()
+        .map(|g| {
+            let (f, b) = agg[&g];
+            (g, f, b)
+        })
+        .collect())
+}
+
+/// Table 1: per-layer fwd/bwd for the four ImageNet nets at batch 1.
+pub fn table1() -> anyhow::Result<String> {
+    let mut out = String::new();
+    for name in ["alexnet", "vgg16", "squeezenet", "googlenet"] {
+        let mut dev = timing_device();
+        let rows = grouped_layer_times(name, 1, &mut dev)?;
+        let mut t = Table::new(
+            &format!("Table 1 — {name} (ms, batch=1, simulated S10)"),
+            &["Layer", "Forward", "Backward"],
+        );
+        let (mut tf, mut tb) = (0.0, 0.0);
+        for (g, f, b) in &rows {
+            t.row(&[g.clone(), ms(*f), ms(*b)]);
+            tf += f;
+            tb += b;
+        }
+        t.row(&["TOTAL".into(), ms(tf), ms(tb)]);
+        t.row(&["F->B".into(), ms(tf + tb), String::new()]);
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+/// Table 2: kernel statistics for one GoogLeNet F→B at batch 1.
+pub fn table2() -> anyhow::Result<(String, BTreeMap<KClass, (u64, f64)>)> {
+    let mut dev = timing_device();
+    let param = zoo::by_name("googlenet", 1)?;
+    let mut net = Net::from_param(&param, Phase::Train, &mut dev)?;
+    net.forward(&mut dev)?; // warmup allocations
+    dev.reset_timing();
+    net.forward(&mut dev)?;
+    net.backward(&mut dev)?;
+    dev.synchronize();
+    let total_fb_ms = dev.sim_clock_ns().unwrap() as f64 / 1e6;
+
+    let mut t = Table::new(
+        "Table 2 — kernel statistics within F->B for GoogLeNet (batch=1)",
+        &["Kernels", "Instance Count", "Total Time (ms)", "Efficiency"],
+    );
+    let mut stats_out = BTreeMap::new();
+    let mut total_inst = 0u64;
+    let mut total_ms = 0.0f64;
+    for (class, s) in dev.profiler.stats() {
+        let time_ms = s.total_ns as f64 / 1e6;
+        let eff = match class {
+            KClass::WriteBuffer | KClass::ReadBuffer => {
+                format!("{:.0}% (PCIe)", 1.906 / 15.75 * 100.0)
+            }
+            c => format!(
+                "{:.0}% (DDR)",
+                crate::device::fpga::costmodel::ddr_efficiency(*c) * 100.0
+            ),
+        };
+        t.row(&[
+            class.label().to_string(),
+            s.instances.to_string(),
+            ms(time_ms),
+            eff,
+        ]);
+        stats_out.insert(*class, (s.instances, time_ms));
+        total_inst += s.instances;
+        total_ms += time_ms;
+    }
+    t.row(&[
+        "Total".into(),
+        total_inst.to_string(),
+        ms(total_ms),
+        format!("{:.0}% (F->B)", total_ms / total_fb_ms * 100.0),
+    ]);
+    let mut text = t.render();
+    text.push_str(&format!(
+        "\n(total simulated F->B wall: {:.3} ms; kernel+transfer share {:.0}%)\n",
+        total_fb_ms,
+        total_ms / total_fb_ms * 100.0
+    ));
+    Ok((text, stats_out))
+}
+
+/// Table 3: hardware utilization model.
+pub fn table3() -> String {
+    use crate::device::fpga::resources::*;
+    let (gemm, gemv, total) = full_bitstream();
+    let mut t = Table::new(
+        "Table 3 — modeled hardware utilization on S10 (GX2800)",
+        &["", "ALMs", "Regs", "M20K", "DSPs", "Fmax"],
+    );
+    let row = |u: &Usage, name: &str, fmax: &str| {
+        vec![
+            name.to_string(),
+            format!("{}K ({:.0}%)", u.alms / 1000, pct(u.alms, S10_ALMS)),
+            format!("{}K", u.regs / 1000),
+            format!("{} ({:.0}%)", u.m20k, pct(u.m20k, S10_M20K)),
+            format!("{} ({:.0}%)", u.dsps, pct(u.dsps, S10_DSPS)),
+            fmax.to_string(),
+        ]
+    };
+    t.row(&row(&gemm, "Gemm", "252 MHz"));
+    t.row(&row(&gemv, "Gemv", "253 MHz"));
+    t.row(&row(&total, "Total", "253 MHz"));
+    t.render()
+}
+
+/// Async-queue ablation (§5.2): GoogLeNet F→B sync vs async sim time.
+pub fn ablation_async() -> anyhow::Result<String> {
+    let mut results = Vec::new();
+    for mode in [QueueMode::Sync, QueueMode::Async] {
+        let mut dev = timing_device();
+        dev.set_mode(mode);
+        let param = zoo::by_name("googlenet", 1)?;
+        let mut net = Net::from_param(&param, Phase::Train, &mut dev)?;
+        net.forward(&mut dev)?;
+        dev.reset_timing();
+        net.forward(&mut dev)?;
+        net.backward(&mut dev)?;
+        dev.synchronize();
+        results.push((mode, dev.sim_clock_ns().unwrap() as f64 / 1e6));
+    }
+    let speedup = results[0].1 / results[1].1;
+    let mut t = Table::new(
+        "Ablation — §5.2 asynchronous queue (GoogLeNet F->B, batch=1)",
+        &["Queue mode", "Simulated time (ms)", "Speedup"],
+    );
+    t.row(&["sync (paper default)".into(), ms(results[0].1), "1.0x".into()]);
+    t.row(&[
+        "async (§5.2 optimization)".into(),
+        ms(results[1].1),
+        format!("{speedup:.2}x"),
+    ]);
+    Ok(t.render())
+}
+
+/// §5.2 partition ablation: GoogLeNet F→B with im2col/col2im on the FPGA
+/// (paper default) vs partitioned to the host CPU.
+pub fn ablation_partition() -> anyhow::Result<String> {
+    let mut results = Vec::new();
+    for partition in [false, true] {
+        let mut dev = timing_device();
+        if partition {
+            dev.partition_to_host(KClass::Im2col);
+            dev.partition_to_host(KClass::Col2im);
+        }
+        let param = zoo::by_name("googlenet", 1)?;
+        let mut net = Net::from_param(&param, Phase::Train, &mut dev)?;
+        net.forward(&mut dev)?;
+        dev.reset_timing();
+        net.forward(&mut dev)?;
+        net.backward(&mut dev)?;
+        dev.synchronize();
+        results.push(dev.sim_clock_ns().unwrap() as f64 / 1e6);
+    }
+    let mut t = Table::new(
+        "Ablation — §5.2 workload partition (GoogLeNet F->B, batch=1)",
+        &["im2col/col2im placement", "Simulated time (ms)", "Speedup"],
+    );
+    t.row(&["FPGA (paper default)".into(), ms(results[0]), "1.0x".into()]);
+    t.row(&[
+        "host CPU (§5.2 partition)".into(),
+        ms(results[1]),
+        format!("{:.2}x", results[0] / results[1]),
+    ]);
+    Ok(t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grouping_rules() {
+        assert_eq!(group_of("alexnet", "norm1"), "conv1");
+        assert_eq!(group_of("alexnet", "pool5"), "conv5");
+        assert_eq!(group_of("alexnet", "drop6"), "fc6");
+        assert_eq!(group_of("vgg16", "conv3_2"), "conv3");
+        assert_eq!(group_of("vgg16", "relu_conv4_1"), "conv4");
+        assert_eq!(group_of("vgg16", "pool5"), "conv5");
+        assert_eq!(group_of("squeezenet", "fire4/expand3x3"), "fire4");
+        assert_eq!(group_of("squeezenet", "fire2/squeeze1x1_split"), "fire2");
+        assert_eq!(group_of("googlenet", "inception_3a/5x5_reduce"), "incep_3a");
+        assert_eq!(group_of("googlenet", "inception_4e/output_split"), "incep_4e");
+        assert_eq!(group_of("googlenet", "pool3/3x3_s2"), "incep_3b");
+        assert_eq!(group_of("googlenet", "loss1/conv"), "loss1");
+        assert_eq!(group_of("googlenet", "pool5/drop_7x7_s1"), "loss3");
+        assert_eq!(group_of("googlenet", "relu_conv2/3x3"), "conv2");
+    }
+
+    #[test]
+    fn lenet_grouped_times_positive() {
+        let mut dev = timing_device();
+        let rows = grouped_layer_times("lenet", 1, &mut dev).unwrap();
+        assert!(rows.iter().any(|(g, _, _)| g == "conv1"));
+        let total_f: f64 = rows.iter().map(|r| r.1).sum();
+        assert!(total_f > 0.0);
+    }
+
+    #[test]
+    fn table3_renders() {
+        let t = table3();
+        assert!(t.contains("Gemm") && t.contains("DSPs"));
+    }
+
+    #[test]
+    fn async_ablation_overlaps() {
+        let text = ablation_async().unwrap();
+        assert!(text.contains("async"));
+    }
+}

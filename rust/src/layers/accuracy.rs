@@ -1,0 +1,111 @@
+//! Accuracy layer — evaluation-only metric computed host-side (Caffe does
+//! the same: AccuracyLayer has no GPU implementation), which exercises the
+//! FPGA→host read path of the syncedmem state machine.
+
+use super::{Layer, SharedBlob};
+use crate::device::Device;
+use crate::math::accuracy;
+use crate::proto::LayerParameter;
+
+pub struct AccuracyLayer {
+    name: String,
+    top_k: usize,
+    n: usize,
+    c: usize,
+}
+
+impl AccuracyLayer {
+    pub fn new(param: &LayerParameter) -> AccuracyLayer {
+        AccuracyLayer {
+            name: param.name.clone(),
+            top_k: param.accuracy.as_ref().map(|a| a.top_k).unwrap_or(1),
+            n: 0,
+            c: 0,
+        }
+    }
+}
+
+impl Layer for AccuracyLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn kind(&self) -> &'static str {
+        "Accuracy"
+    }
+    fn needs_backward(&self) -> bool {
+        false
+    }
+
+    fn setup(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(bottoms.len() == 2, "Accuracy: needs [scores, labels]");
+        let b = bottoms[0].borrow();
+        self.n = b.num();
+        self.c = b.count() / self.n;
+        drop(b);
+        tops[0].borrow_mut().reshape(dev, &[1]);
+        Ok(())
+    }
+
+    fn forward(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<f32> {
+        // Host-side: sync scores + labels back (Read_Buffer events on the
+        // FPGA device).
+        let mut s = bottoms[0].borrow_mut();
+        let scores = s.data.host_data(dev).to_vec();
+        drop(s);
+        let mut l = bottoms[1].borrow_mut();
+        let labels = l.data.host_data(dev).to_vec();
+        drop(l);
+        let acc = accuracy(&scores, &labels, self.n, self.c, self.top_k);
+        tops[0].borrow_mut().set_data(dev, &[acc]);
+        Ok(0.0)
+    }
+
+    fn backward(
+        &mut self,
+        _dev: &mut dyn Device,
+        _tops: &[SharedBlob],
+        _prop_down: &[bool],
+        _bottoms: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::Blob;
+    use crate::device::cpu::CpuDevice;
+
+    #[test]
+    fn computes_topk() {
+        let mut dev = CpuDevice::new();
+        let mut lp = LayerParameter::new("acc", "Accuracy");
+        lp.accuracy = Some(crate::proto::AccuracyParameter { top_k: 1 });
+        let mut layer = AccuracyLayer::new(&lp);
+        let scores = super::super::shared(Blob::new("s", &[2, 3]));
+        let labels = super::super::shared(Blob::new("y", &[2]));
+        let top = super::super::shared(Blob::new("a", &[1]));
+        scores
+            .borrow_mut()
+            .set_data(&mut dev, &[0.9, 0.05, 0.05, 0.1, 0.1, 0.8]);
+        labels.borrow_mut().set_data(&mut dev, &[0.0, 0.0]);
+        layer
+            .setup(&mut dev, &[scores.clone(), labels.clone()], &[top.clone()])
+            .unwrap();
+        layer
+            .forward(&mut dev, &[scores, labels], &[top.clone()])
+            .unwrap();
+        assert_eq!(top.borrow_mut().data_vec(&mut dev), vec![0.5]);
+    }
+}

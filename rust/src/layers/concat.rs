@@ -1,0 +1,160 @@
+//! Concat layer (channel axis) — GoogLeNet's inception joiner. One
+//! `Concat` kernel invocation per bottom per direction: 9 inceptions × 4
+//! branches × (fwd+bwd) = the paper's 72 Concat instances.
+
+use super::{Layer, SharedBlob};
+use crate::device::{Device, Kernel, KernelCall};
+use crate::proto::LayerParameter;
+
+pub struct ConcatLayer {
+    name: String,
+    axis: usize,
+    num: usize,
+    /// channels*dim of each bottom and their channel-offsets in the top.
+    sizes: Vec<usize>,
+    offsets: Vec<usize>,
+    total: usize,
+}
+
+impl ConcatLayer {
+    pub fn new(param: &LayerParameter) -> ConcatLayer {
+        ConcatLayer {
+            name: param.name.clone(),
+            axis: param.concat.as_ref().map(|c| c.axis).unwrap_or(1),
+            num: 0,
+            sizes: Vec::new(),
+            offsets: Vec::new(),
+            total: 0,
+        }
+    }
+}
+
+impl Layer for ConcatLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn kind(&self) -> &'static str {
+        "Concat"
+    }
+
+    fn setup(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(self.axis == 1, "concat: only channel axis supported");
+        anyhow::ensure!(!bottoms.is_empty());
+        let first = bottoms[0].borrow();
+        let (num, h, w) = (first.num(), first.height(), first.width());
+        drop(first);
+        self.num = num;
+        let mut channels = 0;
+        self.sizes.clear();
+        self.offsets.clear();
+        for b in bottoms {
+            let bb = b.borrow();
+            anyhow::ensure!(
+                bb.num() == num && bb.height() == h && bb.width() == w,
+                "concat {}: inconsistent bottom shapes",
+                self.name
+            );
+            self.offsets.push(channels * h * w);
+            self.sizes.push(bb.channels() * h * w);
+            channels += bb.channels();
+        }
+        self.total = channels * h * w;
+        tops[0].borrow_mut().reshape(dev, &[num, channels, h, w]);
+        Ok(())
+    }
+
+    fn forward(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<f32> {
+        let t_id = tops[0].borrow_mut().data.dev_data_mut(dev);
+        for (i, b) in bottoms.iter().enumerate() {
+            let b_id = b.borrow_mut().data.dev_data(dev);
+            dev.launch(&KernelCall::new(
+                Kernel::ConcatF {
+                    num: self.num,
+                    this: self.sizes[i],
+                    total: self.total,
+                    offset: self.offsets[i],
+                },
+                &[b_id],
+                &[t_id],
+            ))?;
+        }
+        Ok(0.0)
+    }
+
+    fn backward(
+        &mut self,
+        dev: &mut dyn Device,
+        tops: &[SharedBlob],
+        prop_down: &[bool],
+        bottoms: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        let td_id = tops[0].borrow_mut().diff.dev_data(dev);
+        for (i, b) in bottoms.iter().enumerate() {
+            if !prop_down.get(i).copied().unwrap_or(true) {
+                continue;
+            }
+            let bd_id = b.borrow_mut().diff.dev_data_mut(dev);
+            dev.launch(&KernelCall::new(
+                Kernel::ConcatB {
+                    num: self.num,
+                    this: self.sizes[i],
+                    total: self.total,
+                    offset: self.offsets[i],
+                },
+                &[td_id],
+                &[bd_id],
+            ))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::Blob;
+    use crate::device::cpu::CpuDevice;
+
+    #[test]
+    fn concat_and_deconcat_two_branches() {
+        let mut dev = CpuDevice::new();
+        let mut layer = ConcatLayer::new(&LayerParameter::new("cat", "Concat"));
+        let a = super::super::shared(Blob::new("a", &[2, 1, 1, 2]));
+        let b = super::super::shared(Blob::new("b", &[2, 2, 1, 2]));
+        let top = super::super::shared(Blob::new("t", &[1]));
+        a.borrow_mut().set_data(&mut dev, &[1.0, 2.0, 11.0, 12.0]);
+        b.borrow_mut()
+            .set_data(&mut dev, &[3.0, 4.0, 5.0, 6.0, 13.0, 14.0, 15.0, 16.0]);
+        layer
+            .setup(&mut dev, &[a.clone(), b.clone()], &[top.clone()])
+            .unwrap();
+        assert_eq!(top.borrow().shape(), &[2, 3, 1, 2]);
+        layer
+            .forward(&mut dev, &[a.clone(), b.clone()], &[top.clone()])
+            .unwrap();
+        assert_eq!(
+            top.borrow_mut().data_vec(&mut dev),
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 11.0, 12.0, 13.0, 14.0, 15.0, 16.0]
+        );
+        let td: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        top.borrow_mut().set_diff(&mut dev, &td);
+        layer
+            .backward(&mut dev, &[top], &[true, true], &[a.clone(), b.clone()])
+            .unwrap();
+        assert_eq!(a.borrow_mut().diff_vec(&mut dev), vec![0.0, 1.0, 6.0, 7.0]);
+        assert_eq!(
+            b.borrow_mut().diff_vec(&mut dev),
+            vec![2.0, 3.0, 4.0, 5.0, 8.0, 9.0, 10.0, 11.0]
+        );
+    }
+}

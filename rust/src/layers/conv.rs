@@ -1,0 +1,460 @@
+//! Convolution layer: im2col + grouped GEMM + Bias, exactly Caffe's
+//! lowering (and therefore the paper's kernel-instance accounting: one
+//! `Im2col` per image, one `Gemm` per (image, group), one `Bias` per
+//! image in forward; `Gemv` bias-grad, `Gemm` weight/data-grad and
+//! `Col2im` per image in backward). 1×1/stride-1/pad-0 convolutions skip
+//! im2col and address the input directly (Caffe's `is_1x1_` fast path).
+
+use super::{fill_blob, Layer, SharedBlob};
+use crate::blob::Blob;
+use crate::device::{BufId, Device, Kernel, KernelCall};
+use crate::math::ConvGeom;
+use crate::proto::{ConvolutionParameter, LayerParameter, ParamSpec};
+use crate::util::prng::Pcg32;
+
+pub struct ConvolutionLayer {
+    name: String,
+    p: ConvolutionParameter,
+    specs: Vec<ParamSpec>,
+    weight: SharedBlob,
+    bias: Option<SharedBlob>,
+    /// ones(out_h*out_w) for the bias-gradient gemv.
+    ones: Option<BufId>,
+    geom: Option<ConvGeom>,
+    num: usize,
+    is_1x1: bool,
+}
+
+impl ConvolutionLayer {
+    pub fn new(param: &LayerParameter) -> anyhow::Result<ConvolutionLayer> {
+        let p = param
+            .conv
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("layer {}: missing convolution_param", param.name))?;
+        Ok(ConvolutionLayer {
+            name: param.name.clone(),
+            specs: param.params.clone(),
+            p,
+            weight: super::shared(Blob::new("w", &[0])),
+            bias: None,
+            ones: None,
+            geom: None,
+            num: 0,
+            is_1x1: false,
+        })
+    }
+
+    fn seed(&self) -> u64 {
+        // Deterministic per-layer-name seed so CPU and FPGA-sim nets share
+        // identical initialization.
+        self.name
+            .bytes()
+            .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+                (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+            })
+    }
+}
+
+impl Layer for ConvolutionLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn kind(&self) -> &'static str {
+        "Convolution"
+    }
+
+    fn setup(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(bottoms.len() == 1 && tops.len() == 1, "conv: 1 bottom, 1 top");
+        let b = bottoms[0].borrow();
+        let (num, channels, height, width) =
+            (b.num(), b.channels(), b.height(), b.width());
+        drop(b);
+        anyhow::ensure!(
+            channels % self.p.group == 0 && self.p.num_output % self.p.group == 0,
+            "conv {}: channels/num_output not divisible by group",
+            self.name
+        );
+        let geom = ConvGeom {
+            channels,
+            height,
+            width,
+            kernel_h: self.p.kernel_h,
+            kernel_w: self.p.kernel_w,
+            pad_h: self.p.pad_h,
+            pad_w: self.p.pad_w,
+            stride_h: self.p.stride_h,
+            stride_w: self.p.stride_w,
+        };
+        let (oh, ow) = (geom.out_h(), geom.out_w());
+        self.is_1x1 = self.p.kernel_h == 1
+            && self.p.kernel_w == 1
+            && self.p.stride_h == 1
+            && self.p.stride_w == 1
+            && self.p.pad_h == 0
+            && self.p.pad_w == 0;
+        self.num = num;
+        self.geom = Some(geom);
+
+        // Learnable blobs.
+        let k_per_group = channels / self.p.group * self.p.kernel_h * self.p.kernel_w;
+        let mut rng = Pcg32::new(self.seed());
+        {
+            let mut w = self.weight.borrow_mut();
+            w.reshape(
+                dev,
+                &[
+                    self.p.num_output,
+                    channels / self.p.group,
+                    self.p.kernel_h,
+                    self.p.kernel_w,
+                ],
+            );
+            fill_blob(&mut w, dev, &self.p.weight_filler, k_per_group, &mut rng);
+        }
+        if self.p.bias_term {
+            let bias = super::shared(Blob::new("b", &[self.p.num_output]));
+            fill_blob(
+                &mut bias.borrow_mut(),
+                dev,
+                &self.p.bias_filler,
+                k_per_group,
+                &mut rng,
+            );
+            self.bias = Some(bias);
+        }
+
+        // Scratch: the col/col_diff matrices live in device scratch slots
+        // 0/1 shared across all conv layers (one global DDR region, like
+        // the OpenCL implementation) — reserve capacity now.
+        if !self.is_1x1 {
+            dev.scratch(0, geom.col_len())?;
+            dev.scratch(1, geom.col_len())?;
+        }
+        // ones vector for bias gradient (filled on device).
+        let ones = dev.alloc(oh * ow)?;
+        dev.launch(&KernelCall::new(
+            Kernel::SetConst { n: oh * ow, value: 1.0 },
+            &[],
+            &[ones],
+        ))?;
+        self.ones = Some(ones);
+
+        tops[0]
+            .borrow_mut()
+            .reshape(dev, &[num, self.p.num_output, oh, ow]);
+        Ok(())
+    }
+
+    fn forward(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<f32> {
+        let geom = self.geom.unwrap();
+        let g = self.p.group;
+        let (oh, ow) = (geom.out_h(), geom.out_w());
+        let ohw = oh * ow;
+        let m_g = self.p.num_output / g; // output channels per group
+        let k_g = geom.col_rows() / g; // col rows per group
+        let in_len = geom.im_len();
+        let top_len = self.p.num_output * ohw;
+
+        let mut bottom = bottoms[0].borrow_mut();
+        let mut top = tops[0].borrow_mut();
+        let b_id = bottom.data.dev_data(dev);
+        let t_id = top.data.dev_data_mut(dev);
+        let w_id = self.weight.borrow_mut().data.dev_data(dev);
+
+        for i in 0..self.num {
+            // im2col (skipped for 1x1: the input *is* the col matrix).
+            let (col_id, col_base) = if self.is_1x1 {
+                (b_id, i * in_len)
+            } else {
+                let cid = dev.scratch(0, geom.col_len())?;
+                dev.launch(
+                    &KernelCall::new(Kernel::Im2col { geom }, &[b_id], &[cid])
+                        .at(&[i * in_len], &[0]),
+                )?;
+                (cid, 0)
+            };
+            for gi in 0..g {
+                dev.launch(
+                    &KernelCall::new(
+                        Kernel::GemmNN { m: m_g, n: ohw, k: k_g, alpha: 1.0, beta: 0.0 },
+                        &[w_id, col_id],
+                        &[t_id],
+                    )
+                    .at(
+                        &[gi * m_g * k_g, col_base + gi * k_g * ohw],
+                        &[i * top_len + gi * m_g * ohw],
+                    ),
+                )?;
+            }
+            if let Some(bias) = &self.bias {
+                let bias_id = bias.borrow_mut().data.dev_data(dev);
+                dev.launch(
+                    &KernelCall::new(
+                        Kernel::BiasF { outer: 1, channels: self.p.num_output, dim: ohw },
+                        &[bias_id],
+                        &[t_id],
+                    )
+                    .at(&[0], &[i * top_len]),
+                )?;
+            }
+        }
+        Ok(0.0)
+    }
+
+    fn backward(
+        &mut self,
+        dev: &mut dyn Device,
+        tops: &[SharedBlob],
+        prop_down: &[bool],
+        bottoms: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        let geom = self.geom.unwrap();
+        let g = self.p.group;
+        let ohw = geom.out_h() * geom.out_w();
+        let m_g = self.p.num_output / g;
+        let k_g = geom.col_rows() / g;
+        let in_len = geom.im_len();
+        let top_len = self.p.num_output * ohw;
+
+        let mut bottom = bottoms[0].borrow_mut();
+        let mut top = tops[0].borrow_mut();
+        let td_id = top.data.dev_data(dev); // not needed, but keeps data resident
+        let _ = td_id;
+        let tdiff_id = top.diff.dev_data(dev);
+        let b_id = bottom.data.dev_data(dev);
+        let w_id = self.weight.borrow_mut().data.dev_data(dev);
+        let wd_id = self.weight.borrow_mut().diff.dev_data_rw(dev);
+
+        // Bias gradient: gemv(top_diff_i · ones), accumulated over images.
+        if let Some(bias) = &self.bias {
+            let bd_id = bias.borrow_mut().diff.dev_data_rw(dev);
+            let ones = self.ones.unwrap();
+            for i in 0..self.num {
+                dev.launch(
+                    &KernelCall::new(
+                        Kernel::Gemv {
+                            trans: false,
+                            m: self.p.num_output,
+                            n: ohw,
+                            alpha: 1.0,
+                            beta: 1.0,
+                        },
+                        &[tdiff_id, ones],
+                        &[bd_id],
+                    )
+                    .at(&[i * top_len, 0], &[0]),
+                )?;
+            }
+        }
+
+        let prop = prop_down.first().copied().unwrap_or(true);
+        if prop {
+            // bottom_diff zeroed once; col2im accumulates into it.
+            let bdiff_id = bottom.diff.dev_data_mut(dev);
+            dev.launch(&KernelCall::new(
+                Kernel::SetConst { n: self.num * in_len, value: 0.0 },
+                &[],
+                &[bdiff_id],
+            ))?;
+        }
+
+        for i in 0..self.num {
+            // Recompute col (Caffe does the same in backward).
+            let (col_id, col_base) = if self.is_1x1 {
+                (b_id, i * in_len)
+            } else {
+                let cid = dev.scratch(0, geom.col_len())?;
+                dev.launch(
+                    &KernelCall::new(Kernel::Im2col { geom }, &[b_id], &[cid])
+                        .at(&[i * in_len], &[0]),
+                )?;
+                (cid, 0)
+            };
+            // Weight gradient: wd_g += top_diff_g · col_g^T.
+            for gi in 0..g {
+                dev.launch(
+                    &KernelCall::new(
+                        Kernel::GemmNT { m: m_g, n: k_g, k: ohw, alpha: 1.0, beta: 1.0 },
+                        &[tdiff_id, col_id],
+                        &[wd_id],
+                    )
+                    .at(
+                        &[i * top_len + gi * m_g * ohw, col_base + gi * k_g * ohw],
+                        &[gi * m_g * k_g],
+                    ),
+                )?;
+            }
+            if prop {
+                let bdiff_id = bottom.diff.dev_data_mut(dev);
+                if self.is_1x1 {
+                    // col_diff IS bottom_diff slice; beta=1 accumulates over
+                    // (nothing else writes it, but keep the zero+acc scheme).
+                    for gi in 0..g {
+                        dev.launch(
+                            &KernelCall::new(
+                                Kernel::GemmTN {
+                                    m: k_g,
+                                    n: ohw,
+                                    k: m_g,
+                                    alpha: 1.0,
+                                    beta: 1.0,
+                                },
+                                &[w_id, tdiff_id],
+                                &[bdiff_id],
+                            )
+                            .at(
+                                &[gi * m_g * k_g, i * top_len + gi * m_g * ohw],
+                                &[i * in_len + gi * k_g * ohw],
+                            ),
+                        )?;
+                    }
+                } else {
+                    let cd_id = dev.scratch(1, geom.col_len())?;
+                    for gi in 0..g {
+                        dev.launch(
+                            &KernelCall::new(
+                                Kernel::GemmTN {
+                                    m: k_g,
+                                    n: ohw,
+                                    k: m_g,
+                                    alpha: 1.0,
+                                    beta: 0.0,
+                                },
+                                &[w_id, tdiff_id],
+                                &[cd_id],
+                            )
+                            .at(
+                                &[gi * m_g * k_g, i * top_len + gi * m_g * ohw],
+                                &[gi * k_g * ohw],
+                            ),
+                        )?;
+                    }
+                    dev.launch(
+                        &KernelCall::new(Kernel::Col2im { geom }, &[cd_id], &[bdiff_id])
+                            .at(&[0], &[i * in_len]),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn param_blobs(&self) -> Vec<SharedBlob> {
+        let mut v = vec![self.weight.clone()];
+        if let Some(b) = &self.bias {
+            v.push(b.clone());
+        }
+        v
+    }
+
+    fn param_specs(&self) -> Vec<ParamSpec> {
+        self.specs.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::cpu::CpuDevice;
+    use crate::proto::parse_text;
+
+    fn conv_param(text: &str) -> LayerParameter {
+        let m = parse_text(text).unwrap();
+        let lp = LayerParameter::from_message(m.msgs("layer").next().unwrap()).unwrap();
+        lp
+    }
+
+    fn simple_conv(num_output: usize, k: usize) -> ConvolutionLayer {
+        let text = format!(
+            r#"layer {{ name: "c" type: "Convolution" bottom: "x" top: "y"
+                 convolution_param {{ num_output: {num_output} kernel_size: {k}
+                   weight_filler {{ type: "constant" value: 1 }} }} }}"#
+        );
+        ConvolutionLayer::new(&conv_param(&text)).unwrap()
+    }
+
+    #[test]
+    fn forward_sum_filter() {
+        // all-ones 2x2 filter over a known image = windowed sums (+0 bias)
+        let mut dev = CpuDevice::new();
+        let mut layer = simple_conv(1, 2);
+        let bottom = super::super::shared(Blob::new("x", &[1, 1, 3, 3]));
+        let top = super::super::shared(Blob::new("y", &[1]));
+        bottom
+            .borrow_mut()
+            .set_data(&mut dev, &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        layer.setup(&mut dev, &[bottom.clone()], &[top.clone()]).unwrap();
+        assert_eq!(top.borrow().shape(), &[1, 1, 2, 2]);
+        layer.forward(&mut dev, &[bottom.clone()], &[top.clone()]).unwrap();
+        let out = top.borrow_mut().data_vec(&mut dev);
+        assert_eq!(out, vec![8.0, 12.0, 20.0, 24.0]);
+    }
+
+    #[test]
+    fn output_geometry_alexnet_conv1() {
+        // AlexNet conv1: 227x227, k11 s4 → 55x55
+        let text = r#"layer { name: "c" type: "Convolution" bottom: "x" top: "y"
+            convolution_param { num_output: 96 kernel_size: 11 stride: 4 } }"#;
+        let mut layer = ConvolutionLayer::new(&conv_param(text)).unwrap();
+        let mut dev = CpuDevice::new();
+        let bottom = super::super::shared(Blob::new("x", &[1, 3, 227, 227]));
+        let top = super::super::shared(Blob::new("y", &[1]));
+        layer.setup(&mut dev, &[bottom], &[top.clone()]).unwrap();
+        assert_eq!(top.borrow().shape(), &[1, 96, 55, 55]);
+    }
+
+    #[test]
+    fn group_conv_blocks_cross_group_flow() {
+        // 2 groups, 2-in 2-out channels, 1x1 kernel: out_c0 only sees in_c0.
+        let text = r#"layer { name: "c" type: "Convolution" bottom: "x" top: "y"
+            convolution_param { num_output: 2 kernel_size: 1 group: 2 bias_term: false
+              weight_filler { type: "constant" value: 1 } } }"#;
+        let mut layer = ConvolutionLayer::new(&conv_param(text)).unwrap();
+        let mut dev = CpuDevice::new();
+        let bottom = super::super::shared(Blob::new("x", &[1, 2, 2, 2]));
+        let top = super::super::shared(Blob::new("y", &[1]));
+        bottom
+            .borrow_mut()
+            .set_data(&mut dev, &[1.0, 1.0, 1.0, 1.0, 5.0, 5.0, 5.0, 5.0]);
+        layer.setup(&mut dev, &[bottom.clone()], &[top.clone()]).unwrap();
+        layer.forward(&mut dev, &[bottom], &[top.clone()]).unwrap();
+        let out = top.borrow_mut().data_vec(&mut dev);
+        assert_eq!(out, vec![1.0, 1.0, 1.0, 1.0, 5.0, 5.0, 5.0, 5.0]);
+    }
+
+    #[test]
+    fn one_by_one_skips_im2col() {
+        let text = r#"layer { name: "c" type: "Convolution" bottom: "x" top: "y"
+            convolution_param { num_output: 4 kernel_size: 1 } }"#;
+        let mut layer = ConvolutionLayer::new(&conv_param(text)).unwrap();
+        let mut dev = CpuDevice::new();
+        let bottom = super::super::shared(Blob::new("x", &[2, 3, 5, 5]));
+        let top = super::super::shared(Blob::new("y", &[1]));
+        layer.setup(&mut dev, &[bottom.clone()], &[top.clone()]).unwrap();
+        assert!(layer.is_1x1);
+        let before = dev.launches();
+        layer.forward(&mut dev, &[bottom], &[top]).unwrap();
+        // 2 images × (1 gemm + 1 bias) = 4 launches, no im2col
+        assert_eq!(dev.launches() - before, 4);
+    }
+
+    #[test]
+    fn param_blobs_and_specs() {
+        let mut dev = CpuDevice::new();
+        let mut layer = simple_conv(3, 2);
+        let bottom = super::super::shared(Blob::new("x", &[1, 1, 4, 4]));
+        let top = super::super::shared(Blob::new("y", &[1]));
+        layer.setup(&mut dev, &[bottom], &[top]).unwrap();
+        assert_eq!(layer.param_blobs().len(), 2); // weight + bias
+    }
+}

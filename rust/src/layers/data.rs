@@ -1,0 +1,135 @@
+//! SyntheticData layer — the input layer (stands in for Caffe's LMDB
+//! `Data` layer; see DESIGN.md substitution table). Each forward draws a
+//! host-side batch from the configured [`crate::data::DataSource`] and
+//! uploads it, so on the FPGA device every iteration starts with the
+//! same `Write_Buffer` traffic real FeCaffe pays for input data.
+
+use super::{Layer, SharedBlob};
+use crate::data::{create_source, DataSource};
+use crate::device::Device;
+use crate::proto::{LayerParameter, Phase, SyntheticDataParameter};
+use crate::util::prng::Pcg32;
+
+pub struct SyntheticDataLayer {
+    name: String,
+    p: SyntheticDataParameter,
+    source: Box<dyn DataSource>,
+    rng: Pcg32,
+}
+
+impl SyntheticDataLayer {
+    pub fn new(param: &LayerParameter, phase: Phase) -> anyhow::Result<SyntheticDataLayer> {
+        let p = param
+            .data
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("layer {}: missing data_param", param.name))?;
+        let source = create_source(&p.source, p.channels, p.height, p.width, p.num_classes)?;
+        // Distinct stream per phase so TRAIN and TEST see different data.
+        let stream = match phase {
+            Phase::Train => 1,
+            Phase::Test => 2,
+        };
+        Ok(SyntheticDataLayer {
+            name: param.name.clone(),
+            rng: Pcg32::with_stream(p.seed, stream),
+            p,
+            source,
+        })
+    }
+}
+
+impl Layer for SyntheticDataLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn kind(&self) -> &'static str {
+        "SyntheticData"
+    }
+    fn needs_backward(&self) -> bool {
+        false
+    }
+
+    fn setup(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(bottoms.is_empty(), "data layer takes no bottoms");
+        anyhow::ensure!(tops.len() == 2, "data layer: tops = [data, label]");
+        let (c, h, w) = self.source.shape();
+        tops[0]
+            .borrow_mut()
+            .reshape(dev, &[self.p.batch_size, c, h, w]);
+        tops[1].borrow_mut().reshape(dev, &[self.p.batch_size]);
+        Ok(())
+    }
+
+    fn forward(
+        &mut self,
+        dev: &mut dyn Device,
+        _bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<f32> {
+        let batch = self.source.batch(&mut self.rng, self.p.batch_size);
+        tops[0].borrow_mut().set_data(dev, &batch.data);
+        tops[1].borrow_mut().set_data(dev, &batch.labels);
+        // Push to device now so the Write_Buffer cost lands in this
+        // layer's timing (as the paper's data loading does).
+        tops[0].borrow_mut().data.dev_data(dev);
+        tops[1].borrow_mut().data.dev_data(dev);
+        Ok(0.0)
+    }
+
+    fn backward(
+        &mut self,
+        _dev: &mut dyn Device,
+        _tops: &[SharedBlob],
+        _prop_down: &[bool],
+        _bottoms: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::Blob;
+    use crate::device::cpu::CpuDevice;
+    use crate::proto::parse_text;
+
+    fn mk(batch: usize) -> SyntheticDataLayer {
+        let text = format!(
+            r#"layer {{ name: "d" type: "SyntheticData" top: "data" top: "label"
+                 data_param {{ batch_size: {batch} channels: 1 height: 28 width: 28
+                               num_classes: 10 source: "digits" seed: 3 }} }}"#
+        );
+        let m = parse_text(&text).unwrap();
+        let lp = LayerParameter::from_message(m.msgs("layer").next().unwrap()).unwrap();
+        SyntheticDataLayer::new(&lp, Phase::Train).unwrap()
+    }
+
+    #[test]
+    fn shapes_and_fresh_batches() {
+        let mut dev = CpuDevice::new();
+        let mut layer = mk(4);
+        let data = super::super::shared(Blob::new("data", &[1]));
+        let label = super::super::shared(Blob::new("label", &[1]));
+        layer
+            .setup(&mut dev, &[], &[data.clone(), label.clone()])
+            .unwrap();
+        assert_eq!(data.borrow().shape(), &[4, 1, 28, 28]);
+        layer
+            .forward(&mut dev, &[], &[data.clone(), label.clone()])
+            .unwrap();
+        let b1 = data.borrow_mut().data_vec(&mut dev);
+        layer
+            .forward(&mut dev, &[], &[data.clone(), label.clone()])
+            .unwrap();
+        let b2 = data.borrow_mut().data_vec(&mut dev);
+        assert_ne!(b1, b2, "successive batches must differ");
+        let labels = label.borrow_mut().data_vec(&mut dev);
+        assert!(labels.iter().all(|&l| (0.0..10.0).contains(&l)));
+    }
+}

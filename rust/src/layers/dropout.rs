@@ -1,0 +1,204 @@
+//! Dropout layer (kernels `Dropout_F/B`). The Bernoulli mask is drawn
+//! host-side (as Caffe does with its RNG) and uploaded — so on the FPGA
+//! device every training-phase dropout also produces a `Write_Buffer`
+//! event, matching the paper's transfer accounting.
+
+use super::{Layer, SharedBlob};
+use crate::blob::Blob;
+use crate::device::{Device, Kernel, KernelCall};
+use crate::proto::{LayerParameter, Phase};
+use crate::util::prng::Pcg32;
+use std::rc::Rc;
+
+pub struct DropoutLayer {
+    name: String,
+    ratio: f32,
+    phase: Phase,
+    mask: Option<SharedBlob>,
+    rng: Pcg32,
+    count: usize,
+}
+
+impl DropoutLayer {
+    pub fn new(param: &LayerParameter, phase: Phase) -> DropoutLayer {
+        let seed = param
+            .name
+            .bytes()
+            .fold(0x9e37_79b9_7f4a_7c15u64, |h, b| {
+                (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+            });
+        DropoutLayer {
+            name: param.name.clone(),
+            ratio: param.dropout.as_ref().map(|d| d.dropout_ratio).unwrap_or(0.5),
+            phase,
+            mask: None,
+            rng: Pcg32::new(seed),
+            count: 0,
+        }
+    }
+
+    fn scale(&self) -> f32 {
+        1.0 / (1.0 - self.ratio)
+    }
+}
+
+impl Layer for DropoutLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn kind(&self) -> &'static str {
+        "Dropout"
+    }
+
+    fn setup(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        self.count = bottoms[0].borrow().count();
+        let shape = bottoms[0].borrow().shape().to_vec();
+        if !Rc::ptr_eq(&bottoms[0], &tops[0]) {
+            tops[0].borrow_mut().reshape(dev, &shape);
+        }
+        self.mask = Some(super::shared(Blob::new("mask", &shape)));
+        Ok(())
+    }
+
+    fn forward(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<f32> {
+        let in_place = Rc::ptr_eq(&bottoms[0], &tops[0]);
+        if self.phase == Phase::Test {
+            // Inference: identity (Caffe scales at train time).
+            if !in_place {
+                let b_id = bottoms[0].borrow_mut().data.dev_data(dev);
+                let t_id = tops[0].borrow_mut().data.dev_data_mut(dev);
+                dev.launch(&KernelCall::new(
+                    Kernel::Axpby { n: self.count, alpha: 1.0, beta: 0.0 },
+                    &[b_id],
+                    &[t_id],
+                ))?;
+            }
+            return Ok(0.0);
+        }
+        // Draw mask on host, upload (Write_Buffer on the FPGA device).
+        let mask = self.mask.as_ref().unwrap();
+        {
+            let mut m = mask.borrow_mut();
+            let host = m.data.host_data_mut(dev);
+            for v in host.iter_mut() {
+                *v = if self.rng.bernoulli(self.ratio) { 0.0 } else { 1.0 };
+            }
+        }
+        let m_id = mask.borrow_mut().data.dev_data(dev);
+        let scale = self.scale();
+        if in_place {
+            let mut b = bottoms[0].borrow_mut();
+            let id = b.data.dev_data_rw(dev);
+            dev.launch(&KernelCall::new(
+                Kernel::DropoutF { n: self.count, scale },
+                &[id, m_id],
+                &[id],
+            ))?;
+        } else {
+            let b_id = bottoms[0].borrow_mut().data.dev_data(dev);
+            let t_id = tops[0].borrow_mut().data.dev_data_mut(dev);
+            dev.launch(&KernelCall::new(
+                Kernel::DropoutF { n: self.count, scale },
+                &[b_id, m_id],
+                &[t_id],
+            ))?;
+        }
+        Ok(0.0)
+    }
+
+    fn backward(
+        &mut self,
+        dev: &mut dyn Device,
+        tops: &[SharedBlob],
+        prop_down: &[bool],
+        bottoms: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        if !prop_down.first().copied().unwrap_or(true) {
+            return Ok(());
+        }
+        if self.phase == Phase::Test {
+            anyhow::bail!("dropout backward in TEST phase");
+        }
+        let m_id = self.mask.as_ref().unwrap().borrow_mut().data.dev_data(dev);
+        let scale = self.scale();
+        let in_place = Rc::ptr_eq(&bottoms[0], &tops[0]);
+        if in_place {
+            let mut b = bottoms[0].borrow_mut();
+            let d_id = b.diff.dev_data_rw(dev);
+            dev.launch(&KernelCall::new(
+                Kernel::DropoutB { n: self.count, scale },
+                &[d_id, m_id],
+                &[d_id],
+            ))?;
+        } else {
+            let td_id = tops[0].borrow_mut().diff.dev_data(dev);
+            let bd_id = bottoms[0].borrow_mut().diff.dev_data_mut(dev);
+            dev.launch(&KernelCall::new(
+                Kernel::DropoutB { n: self.count, scale },
+                &[td_id, m_id],
+                &[bd_id],
+            ))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::cpu::CpuDevice;
+
+    fn mk(ratio: f32, phase: Phase) -> DropoutLayer {
+        let mut lp = LayerParameter::new("drop", "Dropout");
+        lp.dropout = Some(crate::proto::DropoutParameter { dropout_ratio: ratio });
+        DropoutLayer::new(&lp, phase)
+    }
+
+    #[test]
+    fn test_phase_is_identity() {
+        let mut dev = CpuDevice::new();
+        let mut layer = mk(0.5, Phase::Test);
+        let bottom = super::super::shared(Blob::new("x", &[4]));
+        let top = super::super::shared(Blob::new("y", &[4]));
+        bottom.borrow_mut().set_data(&mut dev, &[1.0, 2.0, 3.0, 4.0]);
+        layer.setup(&mut dev, &[bottom.clone()], &[top.clone()]).unwrap();
+        layer.forward(&mut dev, &[bottom], &[top.clone()]).unwrap();
+        assert_eq!(top.borrow_mut().data_vec(&mut dev), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn train_phase_zeroes_and_scales() {
+        let mut dev = CpuDevice::new();
+        let mut layer = mk(0.5, Phase::Train);
+        let n = 1000;
+        let bottom = super::super::shared(Blob::new("x", &[n]));
+        let top = super::super::shared(Blob::new("y", &[n]));
+        bottom.borrow_mut().set_data(&mut dev, &vec![1.0; n]);
+        layer.setup(&mut dev, &[bottom.clone()], &[top.clone()]).unwrap();
+        layer.forward(&mut dev, &[bottom.clone()], &[top.clone()]).unwrap();
+        let out = top.borrow_mut().data_vec(&mut dev);
+        let kept = out.iter().filter(|&&v| v != 0.0).count();
+        assert!(out.iter().all(|&v| v == 0.0 || v == 2.0));
+        assert!((300..700).contains(&kept), "kept {kept} of {n}");
+
+        // Backward uses the same mask.
+        top.borrow_mut().set_diff(&mut dev, &vec![1.0; n]);
+        layer
+            .backward(&mut dev, &[top.clone()], &[true], &[bottom.clone()])
+            .unwrap();
+        let bd = bottom.borrow_mut().diff_vec(&mut dev);
+        for i in 0..n {
+            assert_eq!(bd[i] != 0.0, out[i] != 0.0, "mask mismatch at {i}");
+        }
+    }
+}

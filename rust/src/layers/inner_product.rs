@@ -1,0 +1,239 @@
+//! InnerProduct (fully-connected) layer. Forward is one `Gemm` over the
+//! whole batch + `Bias`; backward is two `Gemm`s + a `Gemv` — the exact
+//! BLAS lowering of `caffe::InnerProductLayer`, which is why FC-heavy
+//! nets (AlexNet fc6-8, VGG) spend their time in the gemm/gemv kernels.
+
+use super::{fill_blob, Layer, SharedBlob};
+use crate::blob::Blob;
+use crate::device::{Device, Kernel, KernelCall};
+use crate::proto::{InnerProductParameter, LayerParameter, ParamSpec};
+use crate::util::prng::Pcg32;
+
+pub struct InnerProductLayer {
+    name: String,
+    p: InnerProductParameter,
+    specs: Vec<ParamSpec>,
+    weight: SharedBlob, // [num_output, K]
+    bias: Option<SharedBlob>,
+    m: usize, // batch
+    k: usize, // flattened input dim
+}
+
+impl InnerProductLayer {
+    pub fn new(param: &LayerParameter) -> anyhow::Result<InnerProductLayer> {
+        let p = param
+            .inner_product
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("layer {}: missing inner_product_param", param.name))?;
+        Ok(InnerProductLayer {
+            name: param.name.clone(),
+            specs: param.params.clone(),
+            p,
+            weight: super::shared(Blob::new("w", &[0])),
+            bias: None,
+            m: 0,
+            k: 0,
+        })
+    }
+
+    fn seed(&self) -> u64 {
+        self.name
+            .bytes()
+            .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+                (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+            })
+    }
+}
+
+impl Layer for InnerProductLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn kind(&self) -> &'static str {
+        "InnerProduct"
+    }
+
+    fn setup(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        let b = bottoms[0].borrow();
+        self.m = b.num();
+        self.k = b.count() / self.m;
+        drop(b);
+        let n = self.p.num_output;
+        let mut rng = Pcg32::new(self.seed());
+        {
+            let mut w = self.weight.borrow_mut();
+            w.reshape(dev, &[n, self.k]);
+            fill_blob(&mut w, dev, &self.p.weight_filler, self.k, &mut rng);
+        }
+        if self.p.bias_term {
+            let bias = super::shared(Blob::new("b", &[n]));
+            fill_blob(&mut bias.borrow_mut(), dev, &self.p.bias_filler, self.k, &mut rng);
+            self.bias = Some(bias);
+        }
+        tops[0].borrow_mut().reshape(dev, &[self.m, n]);
+        Ok(())
+    }
+
+    fn forward(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<f32> {
+        let n = self.p.num_output;
+        let b_id = bottoms[0].borrow_mut().data.dev_data(dev);
+        let w_id = self.weight.borrow_mut().data.dev_data(dev);
+        let t_id = tops[0].borrow_mut().data.dev_data_mut(dev);
+        // top(M,N) = bottom(M,K) · weight(N,K)^T
+        dev.launch(&KernelCall::new(
+            Kernel::GemmNT { m: self.m, n, k: self.k, alpha: 1.0, beta: 0.0 },
+            &[b_id, w_id],
+            &[t_id],
+        ))?;
+        if let Some(bias) = &self.bias {
+            let bias_id = bias.borrow_mut().data.dev_data(dev);
+            dev.launch(&KernelCall::new(
+                Kernel::BiasF { outer: self.m, channels: n, dim: 1 },
+                &[bias_id],
+                &[t_id],
+            ))?;
+        }
+        Ok(0.0)
+    }
+
+    fn backward(
+        &mut self,
+        dev: &mut dyn Device,
+        tops: &[SharedBlob],
+        prop_down: &[bool],
+        bottoms: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        let n = self.p.num_output;
+        let td_id = tops[0].borrow_mut().diff.dev_data(dev);
+        let b_id = bottoms[0].borrow_mut().data.dev_data(dev);
+        // weight_diff(N,K) += top_diff(M,N)^T · bottom(M,K)
+        let wd_id = self.weight.borrow_mut().diff.dev_data_rw(dev);
+        dev.launch(&KernelCall::new(
+            Kernel::GemmTN { m: n, n: self.k, k: self.m, alpha: 1.0, beta: 1.0 },
+            &[td_id, b_id],
+            &[wd_id],
+        ))?;
+        if let Some(bias) = &self.bias {
+            // bias_diff(N) += top_diff(M,N)^T · ones(M)
+            let bd_id = bias.borrow_mut().diff.dev_data_rw(dev);
+            let ones = dev.alloc(self.m)?;
+            dev.launch(&KernelCall::new(
+                Kernel::SetConst { n: self.m, value: 1.0 },
+                &[],
+                &[ones],
+            ))?;
+            dev.launch(&KernelCall::new(
+                Kernel::Gemv { trans: true, m: self.m, n, alpha: 1.0, beta: 1.0 },
+                &[td_id, ones],
+                &[bd_id],
+            ))?;
+            dev.free(ones);
+        }
+        if prop_down.first().copied().unwrap_or(true) {
+            // bottom_diff(M,K) = top_diff(M,N) · weight(N,K)
+            let w_id = self.weight.borrow_mut().data.dev_data(dev);
+            let bd_id = bottoms[0].borrow_mut().diff.dev_data_mut(dev);
+            dev.launch(&KernelCall::new(
+                Kernel::GemmNN { m: self.m, n: self.k, k: n, alpha: 1.0, beta: 0.0 },
+                &[td_id, w_id],
+                &[bd_id],
+            ))?;
+        }
+        Ok(())
+    }
+
+    fn param_blobs(&self) -> Vec<SharedBlob> {
+        let mut v = vec![self.weight.clone()];
+        if let Some(b) = &self.bias {
+            v.push(b.clone());
+        }
+        v
+    }
+
+    fn param_specs(&self) -> Vec<ParamSpec> {
+        self.specs.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::cpu::CpuDevice;
+    use crate::proto::parse_text;
+
+    fn ip_layer(n: usize, filler: &str) -> InnerProductLayer {
+        let text = format!(
+            r#"layer {{ name: "fc" type: "InnerProduct" bottom: "x" top: "y"
+                 inner_product_param {{ num_output: {n}
+                   weight_filler {{ type: "{filler}" value: 1 }} }} }}"#
+        );
+        let m = parse_text(&text).unwrap();
+        let lp = LayerParameter::from_message(m.msgs("layer").next().unwrap()).unwrap();
+        InnerProductLayer::new(&lp).unwrap()
+    }
+
+    #[test]
+    fn forward_is_row_sums_with_ones_weight() {
+        let mut dev = CpuDevice::new();
+        let mut layer = ip_layer(2, "constant");
+        let bottom = super::super::shared(Blob::new("x", &[2, 3]));
+        let top = super::super::shared(Blob::new("y", &[1]));
+        bottom
+            .borrow_mut()
+            .set_data(&mut dev, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        layer.setup(&mut dev, &[bottom.clone()], &[top.clone()]).unwrap();
+        layer.forward(&mut dev, &[bottom], &[top.clone()]).unwrap();
+        assert_eq!(
+            top.borrow_mut().data_vec(&mut dev),
+            vec![6.0, 6.0, 15.0, 15.0]
+        );
+    }
+
+    #[test]
+    fn backward_gradients_match_hand_computation() {
+        let mut dev = CpuDevice::new();
+        let mut layer = ip_layer(1, "constant");
+        let bottom = super::super::shared(Blob::new("x", &[1, 2]));
+        let top = super::super::shared(Blob::new("y", &[1]));
+        bottom.borrow_mut().set_data(&mut dev, &[3.0, 4.0]);
+        layer.setup(&mut dev, &[bottom.clone()], &[top.clone()]).unwrap();
+        layer
+            .forward(&mut dev, &[bottom.clone()], &[top.clone()])
+            .unwrap();
+        top.borrow_mut().set_diff(&mut dev, &[2.0]);
+        layer
+            .backward(&mut dev, &[top], &[true], &[bottom.clone()])
+            .unwrap();
+        // dW = td^T · x = [6, 8]; db = 2; dx = td · W = [2, 2] (W = ones)
+        assert_eq!(
+            layer.weight.borrow_mut().diff_vec(&mut dev),
+            vec![6.0, 8.0]
+        );
+        assert_eq!(
+            layer.bias.as_ref().unwrap().borrow_mut().diff_vec(&mut dev),
+            vec![2.0]
+        );
+        assert_eq!(bottom.borrow_mut().diff_vec(&mut dev), vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn flattens_spatial_input() {
+        let mut dev = CpuDevice::new();
+        let mut layer = ip_layer(5, "xavier");
+        let bottom = super::super::shared(Blob::new("x", &[2, 3, 4, 4]));
+        let top = super::super::shared(Blob::new("y", &[1]));
+        layer.setup(&mut dev, &[bottom], &[top.clone()]).unwrap();
+        assert_eq!(layer.k, 48);
+        assert_eq!(top.borrow().shape(), &[2, 5]);
+    }
+}

@@ -1,0 +1,142 @@
+//! LRN layer (cross-channel), decomposed into the paper's three kernels:
+//! `LRN_Scale` + `LRN_Output` forward, `LRN_Diff` backward — which is why
+//! GoogLeNet's 2 LRN layers produce 2 instances of each in Table 2.
+
+use super::{Layer, SharedBlob};
+use crate::blob::Blob;
+use crate::device::{Device, Kernel, KernelCall};
+use crate::proto::{LayerParameter, LrnParameter};
+
+pub struct LrnLayer {
+    name: String,
+    p: LrnParameter,
+    scale: Option<SharedBlob>,
+    dims: (usize, usize, usize), // (num, channels, spatial dim)
+}
+
+impl LrnLayer {
+    pub fn new(param: &LayerParameter) -> LrnLayer {
+        LrnLayer {
+            name: param.name.clone(),
+            p: param.lrn.clone().unwrap_or_default(),
+            scale: None,
+            dims: (0, 0, 0),
+        }
+    }
+}
+
+impl Layer for LrnLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn kind(&self) -> &'static str {
+        "LRN"
+    }
+
+    fn setup(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        let b = bottoms[0].borrow();
+        let shape = b.shape().to_vec();
+        self.dims = (b.num(), b.channels(), b.height() * b.width());
+        drop(b);
+        tops[0].borrow_mut().reshape(dev, &shape);
+        self.scale = Some(super::shared(Blob::new("scale", &shape)));
+        Ok(())
+    }
+
+    fn forward(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<f32> {
+        let (num, channels, dim) = self.dims;
+        let b_id = bottoms[0].borrow_mut().data.dev_data(dev);
+        let s_id = self.scale.as_ref().unwrap().borrow_mut().data.dev_data_mut(dev);
+        dev.launch(&KernelCall::new(
+            Kernel::LrnScale {
+                num,
+                channels,
+                dim,
+                local_size: self.p.local_size,
+                alpha: self.p.alpha,
+                k: self.p.k,
+            },
+            &[b_id],
+            &[s_id],
+        ))?;
+        let t_id = tops[0].borrow_mut().data.dev_data_mut(dev);
+        dev.launch(&KernelCall::new(
+            Kernel::LrnOutput { n: num * channels * dim, beta: self.p.beta },
+            &[b_id, s_id],
+            &[t_id],
+        ))?;
+        Ok(0.0)
+    }
+
+    fn backward(
+        &mut self,
+        dev: &mut dyn Device,
+        tops: &[SharedBlob],
+        prop_down: &[bool],
+        bottoms: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        if !prop_down.first().copied().unwrap_or(true) {
+            return Ok(());
+        }
+        let (num, channels, dim) = self.dims;
+        let b_id = bottoms[0].borrow_mut().data.dev_data(dev);
+        let t_id = tops[0].borrow_mut().data.dev_data(dev);
+        let s_id = self.scale.as_ref().unwrap().borrow_mut().data.dev_data(dev);
+        let td_id = tops[0].borrow_mut().diff.dev_data(dev);
+        let bd_id = bottoms[0].borrow_mut().diff.dev_data_mut(dev);
+        dev.launch(&KernelCall::new(
+            Kernel::LrnDiff {
+                num,
+                channels,
+                dim,
+                local_size: self.p.local_size,
+                alpha: self.p.alpha,
+                beta: self.p.beta,
+            },
+            &[b_id, t_id, s_id, td_id],
+            &[bd_id],
+        ))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::cpu::CpuDevice;
+
+    #[test]
+    fn forward_normalizes_and_backward_runs() {
+        let mut dev = CpuDevice::new();
+        let mut lp = LayerParameter::new("n", "LRN");
+        lp.lrn = Some(LrnParameter { local_size: 3, alpha: 1.0, beta: 0.5, k: 1.0 });
+        let mut layer = LrnLayer::new(&lp);
+        let bottom = super::super::shared(Blob::new("x", &[1, 3, 1, 1]));
+        let top = super::super::shared(Blob::new("y", &[1]));
+        bottom.borrow_mut().set_data(&mut dev, &[3.0, 0.0, 4.0]);
+        layer.setup(&mut dev, &[bottom.clone()], &[top.clone()]).unwrap();
+        layer.forward(&mut dev, &[bottom.clone()], &[top.clone()]).unwrap();
+        let out = top.borrow_mut().data_vec(&mut dev);
+        // scale(c=1) = 1 + (1/3)(9+0+16) = 9.333; out1 = 0
+        assert_eq!(out[1], 0.0);
+        // scale(c=0) = 1 + (1/3)(9) = 4 → 3 * 4^-0.5 = 1.5
+        assert!((out[0] - 1.5).abs() < 1e-5);
+        top.borrow_mut().set_diff(&mut dev, &[1.0, 1.0, 1.0]);
+        layer
+            .backward(&mut dev, &[top], &[true], &[bottom.clone()])
+            .unwrap();
+        let bd = bottom.borrow_mut().diff_vec(&mut dev);
+        assert!(bd.iter().all(|v| v.is_finite()));
+        assert!(bd[0] != 0.0);
+    }
+}

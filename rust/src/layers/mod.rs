@@ -1,0 +1,145 @@
+//! Layer classes — the paper's L3 "class layer".
+//!
+//! Every layer implements [`Layer`]: `setup` shapes tops and initializes
+//! learnable blobs, `forward`/`backward` enqueue kernels on the
+//! [`Device`] through the same fine-grained calls the paper's wrapper
+//! layer makes (one `im2col` per image, one `gemm` per group, one `Bias`
+//! per conv, ...), so kernel instance counts in the profiler match the
+//! paper's Table 2 accounting scheme.
+
+pub mod conv;
+pub mod pooling;
+pub mod relu;
+pub mod lrn;
+pub mod inner_product;
+pub mod softmax;
+pub mod softmax_loss;
+pub mod accuracy;
+pub mod dropout;
+pub mod concat;
+pub mod split;
+pub mod data;
+
+use crate::blob::Blob;
+use crate::device::Device;
+use crate::proto::{LayerParameter, ParamSpec, Phase};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Shared tensor handle (blobs are shared between layers and the net).
+pub type SharedBlob = Rc<RefCell<Blob>>;
+
+pub fn shared(blob: Blob) -> SharedBlob {
+    Rc::new(RefCell::new(blob))
+}
+
+/// The layer interface (mirrors caffe::Layer).
+pub trait Layer {
+    fn name(&self) -> &str;
+    fn kind(&self) -> &'static str;
+
+    /// Shape tops (and allocate internal buffers / learnable params).
+    fn setup(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()>;
+
+    /// Compute tops from bottoms; returns this layer's weighted loss
+    /// contribution (0 for non-loss layers).
+    fn forward(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<f32>;
+
+    /// Compute bottom diffs (and param diffs) from top diffs.
+    /// `prop_down[i]` gates gradient propagation to `bottoms[i]`.
+    fn backward(
+        &mut self,
+        dev: &mut dyn Device,
+        tops: &[SharedBlob],
+        prop_down: &[bool],
+        bottoms: &[SharedBlob],
+    ) -> anyhow::Result<()>;
+
+    /// Learnable parameter blobs (weights, biases).
+    fn param_blobs(&self) -> Vec<SharedBlob> {
+        Vec::new()
+    }
+
+    /// lr/decay multipliers aligned with `param_blobs` (padded with
+    /// defaults by the net when absent).
+    fn param_specs(&self) -> Vec<ParamSpec> {
+        Vec::new()
+    }
+
+    /// True if this layer produces a loss (drives backward from here).
+    fn is_loss(&self) -> bool {
+        false
+    }
+
+    /// Whether backward needs to run at all (data layers: no).
+    fn needs_backward(&self) -> bool {
+        true
+    }
+}
+
+/// Construct a layer from its prototxt definition (the layer registry).
+pub fn create_layer(param: &LayerParameter, phase: Phase) -> anyhow::Result<Box<dyn Layer>> {
+    let l: Box<dyn Layer> = match param.kind.as_str() {
+        "Convolution" => Box::new(conv::ConvolutionLayer::new(param)?),
+        "Pooling" => Box::new(pooling::PoolingLayer::new(param)?),
+        "ReLU" => Box::new(relu::ReluLayer::new(param)),
+        "LRN" => Box::new(lrn::LrnLayer::new(param)),
+        "InnerProduct" => Box::new(inner_product::InnerProductLayer::new(param)?),
+        "Softmax" => Box::new(softmax::SoftmaxLayer::new(param)),
+        "SoftmaxWithLoss" => Box::new(softmax_loss::SoftmaxWithLossLayer::new(param)),
+        "Accuracy" => Box::new(accuracy::AccuracyLayer::new(param)),
+        "Dropout" => Box::new(dropout::DropoutLayer::new(param, phase)),
+        "Concat" => Box::new(concat::ConcatLayer::new(param)),
+        "Split" => Box::new(split::SplitLayer::new(param)),
+        "SyntheticData" | "Data" => Box::new(data::SyntheticDataLayer::new(param, phase)?),
+        other => anyhow::bail!("unknown layer type '{other}' (layer {})", param.name),
+    };
+    Ok(l)
+}
+
+/// Weight-filler dispatch shared by conv/ip layers.
+pub(crate) fn fill_blob(
+    blob: &mut Blob,
+    dev: &mut dyn Device,
+    filler: &crate::proto::FillerParameter,
+    fan_in: usize,
+    rng: &mut crate::util::prng::Pcg32,
+) {
+    let data = blob.data.host_data_mut(dev);
+    match filler.kind.as_str() {
+        "xavier" => rng.fill_xavier(data, fan_in),
+        "gaussian" => rng.fill_gaussian(data, filler.mean, filler.std),
+        "uniform" => rng.fill_uniform(data, filler.min, filler.max),
+        _ => crate::math::set(data, filler.value),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::LayerParameter;
+
+    #[test]
+    fn registry_knows_all_simple_layers() {
+        for kind in ["ReLU", "Softmax", "Concat", "Split", "Accuracy"] {
+            let p = LayerParameter::new("x", kind);
+            assert!(create_layer(&p, Phase::Train).is_ok(), "{kind}");
+        }
+    }
+
+    #[test]
+    fn registry_rejects_unknown() {
+        let p = LayerParameter::new("x", "FancyAttention");
+        assert!(create_layer(&p, Phase::Train).is_err());
+    }
+}

@@ -1,0 +1,211 @@
+//! Pooling layer (MAX/AVE, incl. global pooling) — kernels
+//! `Max_pool_F/B`, `Ave_pool_F/B`; one invocation covers the whole batch,
+//! matching the paper's instance counts (13 max-pool layers → 13
+//! `Max_pool_F` instances for GoogLeNet F→B).
+
+use super::{Layer, SharedBlob};
+use crate::blob::Blob;
+use crate::device::{Device, Kernel, KernelCall};
+use crate::math::PoolGeom;
+use crate::proto::{LayerParameter, PoolMethod, PoolingParameter};
+
+pub struct PoolingLayer {
+    name: String,
+    p: PoolingParameter,
+    geom: Option<PoolGeom>,
+    num: usize,
+    /// argmax mask (device) for MAX backward.
+    mask: Option<SharedBlob>,
+}
+
+impl PoolingLayer {
+    pub fn new(param: &LayerParameter) -> anyhow::Result<PoolingLayer> {
+        let p = param
+            .pool
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("layer {}: missing pooling_param", param.name))?;
+        Ok(PoolingLayer { name: param.name.clone(), p, geom: None, num: 0, mask: None })
+    }
+}
+
+impl Layer for PoolingLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn kind(&self) -> &'static str {
+        "Pooling"
+    }
+
+    fn setup(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        let b = bottoms[0].borrow();
+        let (num, c, h, w) = (b.num(), b.channels(), b.height(), b.width());
+        drop(b);
+        let (kh, kw) = if self.p.global_pooling {
+            (h, w)
+        } else {
+            (self.p.kernel_h, self.p.kernel_w)
+        };
+        let geom = PoolGeom {
+            channels: c,
+            height: h,
+            width: w,
+            kernel_h: kh,
+            kernel_w: kw,
+            pad_h: self.p.pad_h,
+            pad_w: self.p.pad_w,
+            stride_h: self.p.stride_h,
+            stride_w: self.p.stride_w,
+        };
+        let (oh, ow) = (geom.out_h(), geom.out_w());
+        self.num = num;
+        self.geom = Some(geom);
+        tops[0].borrow_mut().reshape(dev, &[num, c, oh, ow]);
+        if self.p.method == PoolMethod::Max {
+            self.mask = Some(super::shared(Blob::new("mask", &[num, c, oh, ow])));
+        }
+        Ok(())
+    }
+
+    fn forward(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<f32> {
+        let geom = self.geom.unwrap();
+        let b_id = bottoms[0].borrow_mut().data.dev_data(dev);
+        let t_id = tops[0].borrow_mut().data.dev_data_mut(dev);
+        match self.p.method {
+            PoolMethod::Max => {
+                let m_id = self
+                    .mask
+                    .as_ref()
+                    .unwrap()
+                    .borrow_mut()
+                    .data
+                    .dev_data_mut(dev);
+                dev.launch(&KernelCall::new(
+                    Kernel::MaxPoolF { geom, num: self.num },
+                    &[b_id],
+                    &[t_id, m_id],
+                ))?;
+            }
+            PoolMethod::Ave => {
+                dev.launch(&KernelCall::new(
+                    Kernel::AvePoolF { geom, num: self.num },
+                    &[b_id],
+                    &[t_id],
+                ))?;
+            }
+        }
+        Ok(0.0)
+    }
+
+    fn backward(
+        &mut self,
+        dev: &mut dyn Device,
+        tops: &[SharedBlob],
+        prop_down: &[bool],
+        bottoms: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        if !prop_down.first().copied().unwrap_or(true) {
+            return Ok(());
+        }
+        let geom = self.geom.unwrap();
+        let td_id = tops[0].borrow_mut().diff.dev_data(dev);
+        let bd_id = bottoms[0].borrow_mut().diff.dev_data_mut(dev);
+        match self.p.method {
+            PoolMethod::Max => {
+                let m_id = self.mask.as_ref().unwrap().borrow_mut().data.dev_data(dev);
+                dev.launch(&KernelCall::new(
+                    Kernel::MaxPoolB { geom, num: self.num },
+                    &[td_id, m_id],
+                    &[bd_id],
+                ))?;
+            }
+            PoolMethod::Ave => {
+                dev.launch(&KernelCall::new(
+                    Kernel::AvePoolB { geom, num: self.num },
+                    &[td_id],
+                    &[bd_id],
+                ))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::cpu::CpuDevice;
+    use crate::proto::parse_text;
+
+    fn mk(kind: &str, extra: &str) -> PoolingLayer {
+        let text = format!(
+            r#"layer {{ name: "p" type: "Pooling" bottom: "x" top: "y"
+                 pooling_param {{ pool: {kind} {extra} }} }}"#
+        );
+        let m = parse_text(&text).unwrap();
+        let lp = LayerParameter::from_message(m.msgs("layer").next().unwrap()).unwrap();
+        PoolingLayer::new(&lp).unwrap()
+    }
+
+    #[test]
+    fn max_forward_backward_batch2() {
+        let mut dev = CpuDevice::new();
+        let mut layer = mk("MAX", "kernel_size: 2 stride: 2");
+        let bottom = super::super::shared(Blob::new("x", &[2, 1, 2, 2]));
+        let top = super::super::shared(Blob::new("y", &[1]));
+        bottom
+            .borrow_mut()
+            .set_data(&mut dev, &[1.0, 2.0, 3.0, 4.0, 8.0, 7.0, 6.0, 5.0]);
+        layer.setup(&mut dev, &[bottom.clone()], &[top.clone()]).unwrap();
+        assert_eq!(top.borrow().shape(), &[2, 1, 1, 1]);
+        layer.forward(&mut dev, &[bottom.clone()], &[top.clone()]).unwrap();
+        assert_eq!(top.borrow_mut().data_vec(&mut dev), vec![4.0, 8.0]);
+
+        top.borrow_mut().set_diff(&mut dev, &[1.0, 2.0]);
+        layer
+            .backward(&mut dev, &[top], &[true], &[bottom.clone()])
+            .unwrap();
+        assert_eq!(
+            bottom.borrow_mut().diff_vec(&mut dev),
+            vec![0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 0.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn global_pooling_covers_input() {
+        let mut dev = CpuDevice::new();
+        let mut layer = mk("AVE", "global_pooling: true");
+        let bottom = super::super::shared(Blob::new("x", &[1, 2, 3, 3]));
+        let top = super::super::shared(Blob::new("y", &[1]));
+        let mut data = vec![1.0; 9];
+        data.extend(vec![5.0; 9]);
+        bottom.borrow_mut().set_data(&mut dev, &data);
+        layer.setup(&mut dev, &[bottom.clone()], &[top.clone()]).unwrap();
+        assert_eq!(top.borrow().shape(), &[1, 2, 1, 1]);
+        layer.forward(&mut dev, &[bottom], &[top.clone()]).unwrap();
+        assert_eq!(top.borrow_mut().data_vec(&mut dev), vec![1.0, 5.0]);
+    }
+
+    #[test]
+    fn prop_down_false_skips_kernel() {
+        let mut dev = CpuDevice::new();
+        let mut layer = mk("MAX", "kernel_size: 2 stride: 2");
+        let bottom = super::super::shared(Blob::new("x", &[1, 1, 2, 2]));
+        let top = super::super::shared(Blob::new("y", &[1]));
+        layer.setup(&mut dev, &[bottom.clone()], &[top.clone()]).unwrap();
+        let before = dev.launches();
+        layer
+            .backward(&mut dev, &[top], &[false], &[bottom])
+            .unwrap();
+        assert_eq!(dev.launches(), before);
+    }
+}

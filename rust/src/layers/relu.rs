@@ -1,0 +1,149 @@
+//! ReLU layer (kernels `ReLU_F` / `ReLU_B`), in-place capable like
+//! Caffe's — GoogLeNet's prototxt uses in-place ReLU everywhere.
+
+use super::{Layer, SharedBlob};
+use crate::device::{Device, Kernel, KernelCall};
+use crate::proto::LayerParameter;
+use std::rc::Rc;
+
+pub struct ReluLayer {
+    name: String,
+    slope: f32,
+    count: usize,
+}
+
+impl ReluLayer {
+    pub fn new(param: &LayerParameter) -> ReluLayer {
+        ReluLayer { name: param.name.clone(), slope: 0.0, count: 0 }
+    }
+}
+
+impl Layer for ReluLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn kind(&self) -> &'static str {
+        "ReLU"
+    }
+
+    fn setup(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        self.count = bottoms[0].borrow().count();
+        if !Rc::ptr_eq(&bottoms[0], &tops[0]) {
+            let shape = bottoms[0].borrow().shape().to_vec();
+            tops[0].borrow_mut().reshape(dev, &shape);
+        }
+        Ok(())
+    }
+
+    fn forward(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<f32> {
+        let in_place = Rc::ptr_eq(&bottoms[0], &tops[0]);
+        if in_place {
+            let mut b = bottoms[0].borrow_mut();
+            let id = b.data.dev_data_rw(dev);
+            dev.launch(&KernelCall::new(
+                Kernel::ReluF { n: self.count, slope: self.slope },
+                &[id],
+                &[id],
+            ))?;
+        } else {
+            let b_id = bottoms[0].borrow_mut().data.dev_data(dev);
+            let t_id = tops[0].borrow_mut().data.dev_data_mut(dev);
+            dev.launch(&KernelCall::new(
+                Kernel::ReluF { n: self.count, slope: self.slope },
+                &[b_id],
+                &[t_id],
+            ))?;
+        }
+        Ok(0.0)
+    }
+
+    fn backward(
+        &mut self,
+        dev: &mut dyn Device,
+        tops: &[SharedBlob],
+        prop_down: &[bool],
+        bottoms: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        if !prop_down.first().copied().unwrap_or(true) {
+            return Ok(());
+        }
+        // NOTE on in-place: bottom data was overwritten by forward, but
+        // relu'd data has the same sign pattern (x>0 ⇔ relu(x)>0 for
+        // slope 0), so Caffe's in-place relu backward stays exact.
+        let in_place = Rc::ptr_eq(&bottoms[0], &tops[0]);
+        if in_place {
+            let mut b = bottoms[0].borrow_mut();
+            let data_id = b.data.dev_data(dev);
+            let diff_id = b.diff.dev_data_rw(dev);
+            dev.launch(&KernelCall::new(
+                Kernel::ReluB { n: self.count, slope: self.slope },
+                &[data_id, diff_id],
+                &[diff_id],
+            ))?;
+        } else {
+            let b_data = bottoms[0].borrow_mut().data.dev_data(dev);
+            let t_diff = tops[0].borrow_mut().diff.dev_data(dev);
+            let b_diff = bottoms[0].borrow_mut().diff.dev_data_mut(dev);
+            dev.launch(&KernelCall::new(
+                Kernel::ReluB { n: self.count, slope: self.slope },
+                &[b_data, t_diff],
+                &[b_diff],
+            ))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::Blob;
+    use crate::device::cpu::CpuDevice;
+
+    #[test]
+    fn separate_top_forward_backward() {
+        let mut dev = CpuDevice::new();
+        let mut layer = ReluLayer::new(&LayerParameter::new("r", "ReLU"));
+        let bottom = super::super::shared(Blob::new("x", &[4]));
+        let top = super::super::shared(Blob::new("y", &[4]));
+        bottom.borrow_mut().set_data(&mut dev, &[-1.0, 2.0, -3.0, 4.0]);
+        layer.setup(&mut dev, &[bottom.clone()], &[top.clone()]).unwrap();
+        layer.forward(&mut dev, &[bottom.clone()], &[top.clone()]).unwrap();
+        assert_eq!(top.borrow_mut().data_vec(&mut dev), vec![0.0, 2.0, 0.0, 4.0]);
+        top.borrow_mut().set_diff(&mut dev, &[1.0; 4]);
+        layer
+            .backward(&mut dev, &[top], &[true], &[bottom.clone()])
+            .unwrap();
+        assert_eq!(
+            bottom.borrow_mut().diff_vec(&mut dev),
+            vec![0.0, 1.0, 0.0, 1.0]
+        );
+    }
+
+    #[test]
+    fn in_place_roundtrip() {
+        let mut dev = CpuDevice::new();
+        let mut layer = ReluLayer::new(&LayerParameter::new("r", "ReLU"));
+        let blob = super::super::shared(Blob::new("x", &[3]));
+        blob.borrow_mut().set_data(&mut dev, &[-1.0, 0.5, 2.0]);
+        layer.setup(&mut dev, &[blob.clone()], &[blob.clone()]).unwrap();
+        layer.forward(&mut dev, &[blob.clone()], &[blob.clone()]).unwrap();
+        assert_eq!(blob.borrow_mut().data_vec(&mut dev), vec![0.0, 0.5, 2.0]);
+        blob.borrow_mut().set_diff(&mut dev, &[5.0, 5.0, 5.0]);
+        layer
+            .backward(&mut dev, &[blob.clone()], &[true], &[blob.clone()])
+            .unwrap();
+        // data after forward: [0, .5, 2] → gradient passes where data > 0
+        assert_eq!(blob.borrow_mut().diff_vec(&mut dev), vec![0.0, 5.0, 5.0]);
+    }
+}

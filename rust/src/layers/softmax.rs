@@ -1,0 +1,91 @@
+//! Softmax layer (deploy-model head; kernel `Softmax`).
+
+use super::{Layer, SharedBlob};
+use crate::device::{Device, Kernel, KernelCall};
+use crate::proto::LayerParameter;
+
+pub struct SoftmaxLayer {
+    name: String,
+    n: usize,
+    c: usize,
+}
+
+impl SoftmaxLayer {
+    pub fn new(param: &LayerParameter) -> SoftmaxLayer {
+        SoftmaxLayer { name: param.name.clone(), n: 0, c: 0 }
+    }
+}
+
+impl Layer for SoftmaxLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn kind(&self) -> &'static str {
+        "Softmax"
+    }
+
+    fn setup(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        let b = bottoms[0].borrow();
+        self.n = b.num();
+        self.c = b.count() / self.n;
+        let shape = b.shape().to_vec();
+        drop(b);
+        tops[0].borrow_mut().reshape(dev, &shape);
+        Ok(())
+    }
+
+    fn forward(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<f32> {
+        let b_id = bottoms[0].borrow_mut().data.dev_data(dev);
+        let t_id = tops[0].borrow_mut().data.dev_data_mut(dev);
+        dev.launch(&KernelCall::new(
+            Kernel::SoftmaxF { n: self.n, c: self.c },
+            &[b_id],
+            &[t_id],
+        ))?;
+        Ok(0.0)
+    }
+
+    fn backward(
+        &mut self,
+        _dev: &mut dyn Device,
+        _tops: &[SharedBlob],
+        _prop_down: &[bool],
+        _bottoms: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        // Deploy-only head in this zoo (training nets use SoftmaxWithLoss).
+        anyhow::bail!("Softmax layer backward is not used by the zoo's training nets")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::Blob;
+    use crate::device::cpu::CpuDevice;
+
+    #[test]
+    fn rows_sum_to_one() {
+        let mut dev = CpuDevice::new();
+        let mut layer = SoftmaxLayer::new(&LayerParameter::new("s", "Softmax"));
+        let bottom = super::super::shared(Blob::new("x", &[2, 3]));
+        let top = super::super::shared(Blob::new("y", &[1]));
+        bottom
+            .borrow_mut()
+            .set_data(&mut dev, &[1.0, 2.0, 3.0, 0.0, 0.0, 0.0]);
+        layer.setup(&mut dev, &[bottom.clone()], &[top.clone()]).unwrap();
+        layer.forward(&mut dev, &[bottom], &[top.clone()]).unwrap();
+        let out = top.borrow_mut().data_vec(&mut dev);
+        assert!((out[0..3].iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!((out[3] - 1.0 / 3.0).abs() < 1e-6);
+    }
+}

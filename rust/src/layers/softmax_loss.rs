@@ -1,0 +1,167 @@
+//! SoftmaxWithLoss layer (kernels `Softmax` + `SoftmaxLoss_F/B`).
+//!
+//! The loss scalar is read back over PCIe — the paper's three
+//! `Read_Buffer` instances per GoogLeNet F→B are exactly its three loss
+//! heads doing this.
+
+use super::{Layer, SharedBlob};
+use crate::blob::Blob;
+use crate::device::{BufId, Device, Kernel, KernelCall};
+use crate::proto::LayerParameter;
+
+pub struct SoftmaxWithLossLayer {
+    name: String,
+    loss_weight: f32,
+    prob: Option<SharedBlob>,
+    loss_buf: Option<BufId>,
+    n: usize,
+    c: usize,
+}
+
+impl SoftmaxWithLossLayer {
+    pub fn new(param: &LayerParameter) -> SoftmaxWithLossLayer {
+        SoftmaxWithLossLayer {
+            name: param.name.clone(),
+            loss_weight: param.loss_weight.first().copied().unwrap_or(1.0),
+            prob: None,
+            loss_buf: None,
+            n: 0,
+            c: 0,
+        }
+    }
+
+    pub fn probabilities(&self) -> Option<SharedBlob> {
+        self.prob.clone()
+    }
+}
+
+impl Layer for SoftmaxWithLossLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn kind(&self) -> &'static str {
+        "SoftmaxWithLoss"
+    }
+    fn is_loss(&self) -> bool {
+        true
+    }
+
+    fn setup(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(bottoms.len() == 2, "SoftmaxWithLoss: needs [scores, labels]");
+        let b = bottoms[0].borrow();
+        self.n = b.num();
+        self.c = b.count() / self.n;
+        let shape = b.shape().to_vec();
+        drop(b);
+        self.prob = Some(super::shared(Blob::new("prob", &shape)));
+        self.loss_buf = Some(dev.alloc(1)?);
+        tops[0].borrow_mut().reshape(dev, &[1]);
+        Ok(())
+    }
+
+    fn forward(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<f32> {
+        let scores = bottoms[0].borrow_mut().data.dev_data(dev);
+        let labels = bottoms[1].borrow_mut().data.dev_data(dev);
+        let p_id = self.prob.as_ref().unwrap().borrow_mut().data.dev_data_mut(dev);
+        dev.launch(&KernelCall::new(
+            Kernel::SoftmaxF { n: self.n, c: self.c },
+            &[scores],
+            &[p_id],
+        ))?;
+        let l_id = self.loss_buf.unwrap();
+        dev.launch(&KernelCall::new(
+            Kernel::SoftmaxLossF { n: self.n, c: self.c },
+            &[p_id, labels],
+            &[l_id],
+        ))?;
+        // Read the loss scalar back to the host (a Read_Buffer event).
+        let mut loss = [0.0f32];
+        dev.read(l_id, &mut loss);
+        tops[0].borrow_mut().set_data(dev, &[loss[0]]);
+        Ok(loss[0] * self.loss_weight)
+    }
+
+    fn backward(
+        &mut self,
+        dev: &mut dyn Device,
+        _tops: &[SharedBlob],
+        prop_down: &[bool],
+        bottoms: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        if !prop_down.first().copied().unwrap_or(true) {
+            return Ok(());
+        }
+        let labels = bottoms[1].borrow_mut().data.dev_data(dev);
+        let p_id = self.prob.as_ref().unwrap().borrow_mut().data.dev_data(dev);
+        let bd_id = bottoms[0].borrow_mut().diff.dev_data_mut(dev);
+        dev.launch(&KernelCall::new(
+            Kernel::SoftmaxLossB { n: self.n, c: self.c, weight: self.loss_weight },
+            &[p_id, labels],
+            &[bd_id],
+        ))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::cpu::CpuDevice;
+
+    #[test]
+    fn loss_and_gradient() {
+        let mut dev = CpuDevice::new();
+        let mut layer = SoftmaxWithLossLayer::new(&LayerParameter::new("l", "SoftmaxWithLoss"));
+        let scores = super::super::shared(Blob::new("s", &[2, 3]));
+        let labels = super::super::shared(Blob::new("y", &[2]));
+        let top = super::super::shared(Blob::new("loss", &[1]));
+        scores
+            .borrow_mut()
+            .set_data(&mut dev, &[10.0, 0.0, 0.0, 0.0, 10.0, 0.0]);
+        labels.borrow_mut().set_data(&mut dev, &[0.0, 1.0]);
+        layer
+            .setup(&mut dev, &[scores.clone(), labels.clone()], &[top.clone()])
+            .unwrap();
+        let loss = layer
+            .forward(&mut dev, &[scores.clone(), labels.clone()], &[top.clone()])
+            .unwrap();
+        assert!(loss < 0.01, "confident correct predictions ⇒ tiny loss, got {loss}");
+        layer
+            .backward(&mut dev, &[top], &[true, false], &[scores.clone(), labels])
+            .unwrap();
+        let grad = scores.borrow_mut().diff_vec(&mut dev);
+        // gradient ≈ (prob - onehot)/n: tiny at the right class, positive elsewhere
+        assert!(grad[0] < 0.0 && grad[1] > 0.0);
+        assert!(grad.iter().all(|v| v.abs() < 1.0));
+    }
+
+    #[test]
+    fn loss_weight_scales_loss() {
+        let mut dev = CpuDevice::new();
+        let mut lp = LayerParameter::new("aux", "SoftmaxWithLoss");
+        lp.loss_weight = vec![0.3];
+        let mut layer = SoftmaxWithLossLayer::new(&lp);
+        let scores = super::super::shared(Blob::new("s", &[1, 2]));
+        let labels = super::super::shared(Blob::new("y", &[1]));
+        let top = super::super::shared(Blob::new("loss", &[1]));
+        scores.borrow_mut().set_data(&mut dev, &[0.0, 0.0]);
+        labels.borrow_mut().set_data(&mut dev, &[0.0]);
+        layer
+            .setup(&mut dev, &[scores.clone(), labels.clone()], &[top.clone()])
+            .unwrap();
+        let loss = layer
+            .forward(&mut dev, &[scores, labels], &[top])
+            .unwrap();
+        assert!((loss - 0.3 * (2.0f32).ln()).abs() < 1e-5);
+    }
+}

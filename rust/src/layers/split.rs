@@ -1,0 +1,131 @@
+//! Split layer — auto-inserted by the net when one blob feeds several
+//! consumers (GoogLeNet's inception fan-outs). Forward shares data
+//! (zero-copy, like Caffe); backward *accumulates* the top diffs with the
+//! `Split` kernel — the paper's 41 Split instances per GoogLeNet F→B.
+
+use super::{Layer, SharedBlob};
+use crate::device::{Device, Kernel, KernelCall};
+use crate::proto::LayerParameter;
+
+pub struct SplitLayer {
+    name: String,
+    count: usize,
+}
+
+impl SplitLayer {
+    pub fn new(param: &LayerParameter) -> SplitLayer {
+        SplitLayer { name: param.name.clone(), count: 0 }
+    }
+}
+
+impl Layer for SplitLayer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn kind(&self) -> &'static str {
+        "Split"
+    }
+
+    fn setup(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        self.count = bottoms[0].borrow().count();
+        let shape = bottoms[0].borrow().shape().to_vec();
+        for t in tops {
+            t.borrow_mut().reshape(dev, &shape);
+        }
+        Ok(())
+    }
+
+    fn forward(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<f32> {
+        // Data sharing: copy bottom data into each top (device-side copy;
+        // Caffe shares pointers, we pay one eltwise copy per top to keep
+        // blob ownership simple — same DDR traffic the Concat kernel has).
+        let b_id = bottoms[0].borrow_mut().data.dev_data(dev);
+        for t in tops {
+            let t_id = t.borrow_mut().data.dev_data_mut(dev);
+            dev.launch(&KernelCall::new(
+                Kernel::Axpby { n: self.count, alpha: 1.0, beta: 0.0 },
+                &[b_id],
+                &[t_id],
+            ))?;
+        }
+        Ok(0.0)
+    }
+
+    fn backward(
+        &mut self,
+        dev: &mut dyn Device,
+        tops: &[SharedBlob],
+        prop_down: &[bool],
+        bottoms: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        if !prop_down.first().copied().unwrap_or(true) {
+            return Ok(());
+        }
+        // bottom_diff = Σ top_diffs: first top overwrites, rest accumulate
+        // via the Split kernel.
+        let bd_id = bottoms[0].borrow_mut().diff.dev_data_mut(dev);
+        // subsequent Split kernels read+write bd; head already AtDevice
+        for (i, t) in tops.iter().enumerate() {
+            let td_id = t.borrow_mut().diff.dev_data(dev);
+            if i == 0 {
+                dev.launch(&KernelCall::new(
+                    Kernel::Axpby { n: self.count, alpha: 1.0, beta: 0.0 },
+                    &[td_id],
+                    &[bd_id],
+                ))?;
+            } else {
+                dev.launch(&KernelCall::new(
+                    Kernel::Split { n: self.count },
+                    &[td_id],
+                    &[bd_id],
+                ))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::Blob;
+    use crate::device::cpu::CpuDevice;
+
+    #[test]
+    fn forward_copies_backward_sums() {
+        let mut dev = CpuDevice::new();
+        let mut layer = SplitLayer::new(&LayerParameter::new("sp", "Split"));
+        let bottom = super::super::shared(Blob::new("x", &[3]));
+        let t1 = super::super::shared(Blob::new("x_split_0", &[1]));
+        let t2 = super::super::shared(Blob::new("x_split_1", &[1]));
+        bottom.borrow_mut().set_data(&mut dev, &[1.0, 2.0, 3.0]);
+        layer
+            .setup(&mut dev, &[bottom.clone()], &[t1.clone(), t2.clone()])
+            .unwrap();
+        layer
+            .forward(&mut dev, &[bottom.clone()], &[t1.clone(), t2.clone()])
+            .unwrap();
+        assert_eq!(t1.borrow_mut().data_vec(&mut dev), vec![1.0, 2.0, 3.0]);
+        assert_eq!(t2.borrow_mut().data_vec(&mut dev), vec![1.0, 2.0, 3.0]);
+
+        t1.borrow_mut().set_diff(&mut dev, &[1.0, 1.0, 1.0]);
+        t2.borrow_mut().set_diff(&mut dev, &[10.0, 20.0, 30.0]);
+        layer
+            .backward(&mut dev, &[t1, t2], &[true], &[bottom.clone()])
+            .unwrap();
+        assert_eq!(
+            bottom.borrow_mut().diff_vec(&mut dev),
+            vec![11.0, 21.0, 31.0]
+        );
+    }
+}

@@ -1,0 +1,36 @@
+//! # FeCaffe — FPGA-enabled Caffe, reproduced as a Rust + JAX/Pallas stack
+//!
+//! This crate is the Layer-3 coordinator of the reproduction of
+//! *"FeCaffe: FPGA-enabled Caffe with OpenCL for Deep Learning Training
+//! and Inference on Intel Stratix 10"* (He et al., 2019). It contains:
+//!
+//! * a Caffe-workalike framework: [`proto`] (prototxt parser), [`blob`]
+//!   (+ the paper's extended `syncedmem` state machine), [`layers`],
+//!   [`net`], [`solver`];
+//! * the FPGA substrate the paper ran on, rebuilt as a simulator:
+//!   [`device::fpga`] (device DDR, OpenCL-style command queue, PCIe
+//!   model, per-kernel cost model, profiler);
+//! * the AOT kernel runtime: [`runtime`] loads `artifacts/*.hlo.txt`
+//!   (JAX/Pallas kernels lowered at build time) and executes them through
+//!   PJRT — the `.aocx` bitstream analogue;
+//! * a native math library [`math`] used as the CPU fallback device and
+//!   as the correctness oracle;
+//! * the paper's evaluation: [`bench_tables`] regenerates Tables 1–4 and
+//!   Figures 4/5, with [`baseline`] implementing the F-CNN comparator.
+//!
+//! See `DESIGN.md` for the experiment index and substitution notes.
+
+pub mod util;
+pub mod proto;
+pub mod blob;
+pub mod math;
+pub mod device;
+pub mod runtime;
+pub mod layers;
+pub mod net;
+pub mod solver;
+pub mod data;
+pub mod zoo;
+pub mod baseline;
+pub mod trace;
+pub mod bench_tables;

@@ -1,0 +1,213 @@
+//! fecaffe CLI — the conventional Caffe workflow (`caffe train`,
+//! `caffe time`) over the FPGA-simulated backend, paper Table 4's
+//! "Ease of Use" row.
+//!
+//! ```text
+//! fecaffe train --solver path/to/solver.prototxt [--device fpga|cpu] [--iters N]
+//! fecaffe train --net lenet --iters 200            # zoo net + default solver
+//! fecaffe time  --net googlenet --batch 1 --iterations 10
+//! fecaffe zoo                                      # list networks
+//! fecaffe export --net lenet                       # print prototxt
+//! ```
+
+use fecaffe::device::cpu::CpuDevice;
+use fecaffe::device::fpga::FpgaSimDevice;
+use fecaffe::device::Device;
+use fecaffe::net::Net;
+use fecaffe::proto::{self, Phase};
+use fecaffe::runtime::PjrtBackend;
+use fecaffe::solver::Solver;
+use fecaffe::util::cli::{usage, Args, Spec};
+use fecaffe::zoo;
+
+const SPECS: &[Spec] = &[
+    Spec::opt("solver", None, "solver prototxt path"),
+    Spec::opt("net", None, "zoo network name or net prototxt path"),
+    Spec::opt("device", Some("fpga"), "fpga | cpu"),
+    Spec::opt("batch", Some("1"), "train batch size (zoo nets)"),
+    Spec::opt("iters", None, "override solver max_iter"),
+    Spec::opt("iterations", Some("10"), "timing iterations (time command)"),
+    Spec::opt("snapshot", None, "restore from snapshot before training"),
+    Spec::flag("timing-only", "skip numerics, simulate timing only"),
+    Spec::flag("no-artifacts", "force native math (skip PJRT artifacts)"),
+];
+
+fn make_device(args: &Args) -> anyhow::Result<Box<dyn Device>> {
+    match args.get("device").unwrap_or("fpga") {
+        "cpu" => Ok(Box::new(CpuDevice::new())),
+        "fpga" => {
+            let mut dev = FpgaSimDevice::new();
+            if args.has_flag("timing-only") {
+                dev.timing_only = true;
+            } else if !args.has_flag("no-artifacts") {
+                match PjrtBackend::auto() {
+                    Some(b) => {
+                        eprintln!(
+                            "[fecaffe] PJRT artifacts loaded from {:?}",
+                            fecaffe::runtime::find_artifacts_dir().unwrap()
+                        );
+                        dev = dev.with_backend(Box::new(b));
+                    }
+                    None => eprintln!(
+                        "[fecaffe] no artifacts found (run `make artifacts`); using native math"
+                    ),
+                }
+            }
+            Ok(Box::new(dev))
+        }
+        other => anyhow::bail!("unknown device '{other}'"),
+    }
+}
+
+fn load_net_param(args: &Args) -> anyhow::Result<proto::NetParameter> {
+    let name = args
+        .get("net")
+        .ok_or_else(|| anyhow::anyhow!("--net required"))?;
+    let batch = args.get_usize("batch").map_err(anyhow::Error::msg)?;
+    if std::path::Path::new(name).is_file() {
+        let text = std::fs::read_to_string(name)?;
+        proto::parse_net(&text).map_err(anyhow::Error::msg)
+    } else {
+        zoo::by_name(name, batch)
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let mut dev = make_device(args)?;
+    let (netp, mut solverp) = if let Some(path) = args.get("solver") {
+        let text = std::fs::read_to_string(path)?;
+        let sp = proto::parse_solver(&text).map_err(anyhow::Error::msg)?;
+        let netp = if std::path::Path::new(&sp.net).is_file() {
+            proto::parse_net(&std::fs::read_to_string(&sp.net)?).map_err(anyhow::Error::msg)?
+        } else {
+            let batch = args.get_usize("batch").map_err(anyhow::Error::msg)?;
+            zoo::by_name(&sp.net, batch)?
+        };
+        (netp, sp)
+    } else {
+        let netp = load_net_param(args)?;
+        let name = args.get("net").unwrap();
+        let sp = zoo::default_solver(name).unwrap_or_default();
+        (netp, sp)
+    };
+    if let Ok(iters) = args.get_usize("iters") {
+        solverp.max_iter = iters;
+    }
+    println!(
+        "Training {} on {} with {} (lr {} / {}), {} iterations",
+        netp.name,
+        dev.kind(),
+        solverp.kind.ident(),
+        solverp.base_lr,
+        solverp.lr_policy,
+        solverp.max_iter
+    );
+    let net = Net::from_param(&netp, Phase::Train, dev.as_mut())?;
+    println!(
+        "Net: {} layers, {} parameters",
+        net.layer_names().len(),
+        net.num_parameters()
+    );
+    let max_iter = solverp.max_iter;
+    let mut solver = Solver::new(solverp, net, dev.as_mut())?;
+    if let Some(snap) = args.get("snapshot") {
+        fecaffe::solver::snapshot::restore(snap, &mut solver, dev.as_mut())?;
+        println!("Restored snapshot {} (iter {})", snap, solver.iter);
+    }
+    let t0 = std::time::Instant::now();
+    solver.solve(dev.as_mut(), max_iter)?;
+    let wall = t0.elapsed();
+    let tail = solver.loss_history.len().min(10);
+    let final_loss: f32 =
+        solver.loss_history.iter().rev().take(tail).sum::<f32>() / tail.max(1) as f32;
+    println!(
+        "Done: {} iterations in {:.1}s wall, final loss ({}-iter mean) {:.4}",
+        solver.iter,
+        wall.as_secs_f64(),
+        tail,
+        final_loss
+    );
+    if let Some(ns) = dev.sim_clock_ns() {
+        println!("Simulated device time: {:.3} s", ns as f64 / 1e9);
+    }
+    Ok(())
+}
+
+fn cmd_time(args: &Args) -> anyhow::Result<()> {
+    let mut dev = make_device(args)?;
+    let netp = load_net_param(args)?;
+    let iters = args.get_usize("iterations").map_err(anyhow::Error::msg)?;
+    let mut net = Net::from_param(&netp, Phase::Train, dev.as_mut())?;
+    println!("*** Benchmark begins ***  ({} iterations, {})", iters, dev.kind());
+    let names = net.layer_names();
+    let mut fwd = vec![0u64; names.len()];
+    let mut bwd = vec![0u64; names.len()];
+    for _ in 0..iters {
+        let (_, f) = net.forward_timed(dev.as_mut())?;
+        let b = net.backward_timed(dev.as_mut())?;
+        for i in 0..names.len() {
+            fwd[i] += f[i];
+            bwd[i] += b[i];
+        }
+    }
+    let mut table = fecaffe::util::table::Table::new(
+        &format!("{} per-layer time (ms, avg of {iters})", netp.name),
+        &["Layer", "Forward", "Backward"],
+    );
+    for i in 0..names.len() {
+        table.row(&[
+            names[i].clone(),
+            format!("{:.3}", fwd[i] as f64 / iters as f64 / 1e6),
+            format!("{:.3}", bwd[i] as f64 / iters as f64 / 1e6),
+        ]);
+    }
+    let tf: u64 = fwd.iter().sum();
+    let tb: u64 = bwd.iter().sum();
+    table.row(&[
+        "TOTAL".into(),
+        format!("{:.3}", tf as f64 / iters as f64 / 1e6),
+        format!("{:.3}", tb as f64 / iters as f64 / 1e6),
+    ]);
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv, SPECS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", usage("fecaffe", "FeCaffe coordinator", SPECS));
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "train" => cmd_train(&args),
+        "time" => cmd_time(&args),
+        "zoo" => {
+            for n in zoo::NETWORKS {
+                println!("{n}");
+            }
+            Ok(())
+        }
+        "export" => load_net_param(&args).map(|p| {
+            print!("{}", proto::emit::emit_net(&p));
+        }),
+        _ => {
+            println!(
+                "{}",
+                usage(
+                    "fecaffe <train|time|zoo|export>",
+                    "FeCaffe: FPGA-enabled Caffe (simulated Stratix 10 + PJRT AOT kernels)",
+                    SPECS
+                )
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,200 @@
+//! Level-1 BLAS + elementwise kernels (paper Table 2: `Add`, `Asum`,
+//! `Axpy`, `Scale`, `ReLU_F/B`, `Dropout_F/B`, `Bias`, ...). These are the
+//! "BLAS-related" kernel group of the paper's L1 layer.
+
+/// y += alpha * x
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yv, &xv) in y.iter_mut().zip(x.iter()) {
+        *yv += alpha * xv;
+    }
+}
+
+/// y = alpha * x + beta * y
+pub fn axpby(alpha: f32, x: &[f32], beta: f32, y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yv, &xv) in y.iter_mut().zip(x.iter()) {
+        *yv = alpha * xv + beta * *yv;
+    }
+}
+
+/// x *= alpha
+pub fn scal(alpha: f32, x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// sum of |x|
+pub fn asum(x: &[f32]) -> f32 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// dot product
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y.iter()).map(|(a, b)| a * b).sum()
+}
+
+/// z = x + y (paper's `Add` kernel — eltwise sum used by Split backward)
+pub fn add(x: &[f32], y: &[f32], z: &mut [f32]) {
+    assert!(x.len() == y.len() && y.len() == z.len());
+    for i in 0..z.len() {
+        z[i] = x[i] + y[i];
+    }
+}
+
+/// z = x * y elementwise
+pub fn mul(x: &[f32], y: &[f32], z: &mut [f32]) {
+    assert!(x.len() == y.len() && y.len() == z.len());
+    for i in 0..z.len() {
+        z[i] = x[i] * y[i];
+    }
+}
+
+/// y = x^p elementwise
+pub fn powx(x: &[f32], p: f32, y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yv, &xv) in y.iter_mut().zip(x.iter()) {
+        *yv = xv.powf(p);
+    }
+}
+
+pub fn set(x: &mut [f32], value: f32) {
+    for v in x.iter_mut() {
+        *v = value;
+    }
+}
+
+/// ReLU forward: top = max(bottom, 0) + slope * min(bottom, 0)
+pub fn relu_forward(bottom: &[f32], top: &mut [f32], negative_slope: f32) {
+    assert_eq!(bottom.len(), top.len());
+    for (t, &b) in top.iter_mut().zip(bottom.iter()) {
+        *t = if b > 0.0 { b } else { negative_slope * b };
+    }
+}
+
+/// ReLU backward: bottom_diff = top_diff * (bottom > 0 ? 1 : slope)
+pub fn relu_backward(
+    bottom_data: &[f32],
+    top_diff: &[f32],
+    bottom_diff: &mut [f32],
+    negative_slope: f32,
+) {
+    assert!(bottom_data.len() == top_diff.len() && top_diff.len() == bottom_diff.len());
+    for i in 0..bottom_diff.len() {
+        bottom_diff[i] = top_diff[i]
+            * if bottom_data[i] > 0.0 {
+                1.0
+            } else {
+                negative_slope
+            };
+    }
+}
+
+/// Dropout forward (train): top = bottom * mask * scale, mask ∈ {0,1}.
+/// The mask is produced host-side (Caffe does the same with its RNG) and
+/// passed in so forward/backward agree.
+pub fn dropout_forward(bottom: &[f32], mask: &[f32], scale: f32, top: &mut [f32]) {
+    assert!(bottom.len() == mask.len() && mask.len() == top.len());
+    for i in 0..top.len() {
+        top[i] = bottom[i] * mask[i] * scale;
+    }
+}
+
+pub fn dropout_backward(top_diff: &[f32], mask: &[f32], scale: f32, bottom_diff: &mut [f32]) {
+    assert!(top_diff.len() == mask.len() && mask.len() == bottom_diff.len());
+    for i in 0..bottom_diff.len() {
+        bottom_diff[i] = top_diff[i] * mask[i] * scale;
+    }
+}
+
+/// Bias forward (paper's `Bias` kernel): top[n,c,h,w] += bias[c].
+/// `dim` = spatial size (H*W), applied over `outer` images of `channels`.
+pub fn bias_forward(top: &mut [f32], bias: &[f32], outer: usize, channels: usize, dim: usize) {
+    assert_eq!(top.len(), outer * channels * dim);
+    assert_eq!(bias.len(), channels);
+    for o in 0..outer {
+        for c in 0..channels {
+            let base = (o * channels + c) * dim;
+            let bv = bias[c];
+            for v in top[base..base + dim].iter_mut() {
+                *v += bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_axpby_scal() {
+        let x = [1.0, 2.0];
+        let mut y = [10.0, 20.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0]);
+        axpby(1.0, &x, 0.5, &mut y);
+        assert_eq!(y, [7.0, 14.0]);
+        scal(2.0, &mut y);
+        assert_eq!(y, [14.0, 28.0]);
+    }
+
+    #[test]
+    fn reductions() {
+        assert_eq!(asum(&[1.0, -2.0, 3.0]), 6.0);
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+
+    #[test]
+    fn eltwise() {
+        let mut z = [0.0; 2];
+        add(&[1.0, 2.0], &[3.0, 4.0], &mut z);
+        assert_eq!(z, [4.0, 6.0]);
+        mul(&[2.0, 3.0], &[4.0, 5.0], &mut z);
+        assert_eq!(z, [8.0, 15.0]);
+        powx(&[4.0, 9.0], 0.5, &mut z);
+        assert_eq!(z, [2.0, 3.0]);
+    }
+
+    #[test]
+    fn relu_fwd_bwd() {
+        let bottom = [-1.0, 0.0, 2.0];
+        let mut top = [0.0; 3];
+        relu_forward(&bottom, &mut top, 0.0);
+        assert_eq!(top, [0.0, 0.0, 2.0]);
+        relu_forward(&bottom, &mut top, 0.1);
+        assert_eq!(top, [-0.1, 0.0, 2.0]);
+
+        let top_diff = [1.0, 1.0, 1.0];
+        let mut bd = [9.0; 3];
+        relu_backward(&bottom, &top_diff, &mut bd, 0.0);
+        assert_eq!(bd, [0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn dropout_scales_kept_units() {
+        let bottom = [1.0, 2.0, 3.0, 4.0];
+        let mask = [1.0, 0.0, 1.0, 0.0];
+        let scale = 2.0; // 1/(1-0.5)
+        let mut top = [0.0; 4];
+        dropout_forward(&bottom, &mask, scale, &mut top);
+        assert_eq!(top, [2.0, 0.0, 6.0, 0.0]);
+        let mut bd = [0.0; 4];
+        dropout_backward(&top, &mask, scale, &mut bd);
+        assert_eq!(bd, [4.0, 0.0, 12.0, 0.0]);
+    }
+
+    #[test]
+    fn bias_broadcast() {
+        // 1 image, 2 channels, dim 2
+        let mut top = [0.0, 0.0, 10.0, 10.0];
+        bias_forward(&mut top, &[1.0, 2.0], 1, 2, 2);
+        assert_eq!(top, [1.0, 1.0, 12.0, 12.0]);
+        // 2 images
+        let mut top2 = [0.0f32; 8];
+        bias_forward(&mut top2, &[1.0, 2.0], 2, 2, 2);
+        assert_eq!(top2, [1.0, 1.0, 2.0, 2.0, 1.0, 1.0, 2.0, 2.0]);
+    }
+}

@@ -1,0 +1,348 @@
+//! GEMM / GEMV — the paper's two "significant kernels" (Table 3).
+//!
+//! `gemm` computes `C = alpha * op(A) * op(B) + beta * C` for row-major
+//! matrices, like `caffe_cpu_gemm`. The NN inner loop is written as a
+//! register-blocked, cache-tiled kernel (see §Perf in EXPERIMENTS.md);
+//! the transposed variants take the simple path since convolution's hot
+//! call is NN (im2col'd convolution) by construction.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trans {
+    No,
+    Yes,
+}
+
+/// Row-major GEMM: C[m,n] = alpha*op(A)[m,k]*op(B)[k,n] + beta*C.
+///
+/// `a` is m×k when `ta == No`, k×m when `ta == Yes` (same storage order as
+/// caffe_cpu_gemm's lda conventions).
+pub fn gemm(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+) {
+    assert!(c.len() >= m * n, "gemm: C too small");
+    match (ta, tb) {
+        (Trans::No, Trans::No) => {
+            assert!(a.len() >= m * k && b.len() >= k * n, "gemm NN: input too small");
+            gemm_nn(m, n, k, alpha, a, b, beta, c);
+        }
+        _ => {
+            assert!(
+                a.len() >= m * k && b.len() >= k * n,
+                "gemm {:?}{:?}: input too small",
+                ta,
+                tb
+            );
+            gemm_generic(ta, tb, m, n, k, alpha, a, b, beta, c);
+        }
+    }
+}
+
+/// Cache-tiled NN kernel. Tiles: MC×KC panel of A, KC×NC panel of B; the
+/// micro-kernel accumulates 4 rows at a time over a contiguous B row —
+/// auto-vectorizes cleanly.
+fn gemm_nn(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+) {
+    const MC: usize = 64;
+    const KC: usize = 256;
+    const NC: usize = 512;
+
+    if beta != 1.0 {
+        for v in c[..m * n].iter_mut() {
+            *v *= beta;
+        }
+    }
+    let mut i0 = 0;
+    while i0 < m {
+        let ib = MC.min(m - i0);
+        let mut k0 = 0;
+        while k0 < k {
+            let kb = KC.min(k - k0);
+            let mut j0 = 0;
+            while j0 < n {
+                let jb = NC.min(n - j0);
+                // Micro: process 4 rows of A together.
+                let mut i = 0;
+                while i + 4 <= ib {
+                    let (r0, r1, r2, r3) = (i0 + i, i0 + i + 1, i0 + i + 2, i0 + i + 3);
+                    for kk in 0..kb {
+                        let a0 = alpha * a[r0 * k + k0 + kk];
+                        let a1 = alpha * a[r1 * k + k0 + kk];
+                        let a2 = alpha * a[r2 * k + k0 + kk];
+                        let a3 = alpha * a[r3 * k + k0 + kk];
+                        if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[(k0 + kk) * n + j0..(k0 + kk) * n + j0 + jb];
+                        let c0 = r0 * n + j0;
+                        let c1 = r1 * n + j0;
+                        let c2 = r2 * n + j0;
+                        let c3 = r3 * n + j0;
+                        for (jj, &bv) in brow.iter().enumerate() {
+                            c[c0 + jj] += a0 * bv;
+                            c[c1 + jj] += a1 * bv;
+                            c[c2 + jj] += a2 * bv;
+                            c[c3 + jj] += a3 * bv;
+                        }
+                    }
+                    i += 4;
+                }
+                // Remainder rows.
+                while i < ib {
+                    let r = i0 + i;
+                    for kk in 0..kb {
+                        let av = alpha * a[r * k + k0 + kk];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[(k0 + kk) * n + j0..(k0 + kk) * n + j0 + jb];
+                        let crow = &mut c[r * n + j0..r * n + j0 + jb];
+                        for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                            *cv += av * bv;
+                        }
+                    }
+                    i += 1;
+                }
+                j0 += NC;
+            }
+            k0 += KC;
+        }
+        i0 += MC;
+    }
+}
+
+fn gemm_generic(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+) {
+    let at = |i: usize, kk: usize| match ta {
+        Trans::No => a[i * k + kk],
+        Trans::Yes => a[kk * m + i],
+    };
+    for i in 0..m {
+        match tb {
+            Trans::No => {
+                // Accumulate row-wise over contiguous B rows.
+                let crow = &mut c[i * n..(i + 1) * n];
+                if beta != 1.0 {
+                    for v in crow.iter_mut() {
+                        *v *= beta;
+                    }
+                }
+                for kk in 0..k {
+                    let av = alpha * at(i, kk);
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..kk * n + n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+            Trans::Yes => {
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    // B^T: element (kk, j) is b[j * k + kk] — contiguous in kk.
+                    let bcol = &b[j * k..j * k + k];
+                    for (kk, &bv) in bcol.iter().enumerate() {
+                        acc += at(i, kk) * bv;
+                    }
+                    let idx = i * n + j;
+                    c[idx] = alpha * acc + beta * c[idx];
+                }
+            }
+        }
+    }
+}
+
+/// Row-major GEMV: y = alpha*op(A)*x + beta*y, A is m×n.
+pub fn gemv(
+    ta: Trans,
+    m: usize,
+    n: usize,
+    alpha: f32,
+    a: &[f32],
+    x: &[f32],
+    beta: f32,
+    y: &mut [f32],
+) {
+    match ta {
+        Trans::No => {
+            assert!(a.len() >= m * n && x.len() >= n && y.len() >= m);
+            for i in 0..m {
+                let row = &a[i * n..i * n + n];
+                let mut acc = 0.0f32;
+                for (av, xv) in row.iter().zip(x.iter()) {
+                    acc += av * xv;
+                }
+                y[i] = alpha * acc + beta * y[i];
+            }
+        }
+        Trans::Yes => {
+            assert!(a.len() >= m * n && x.len() >= m && y.len() >= n);
+            if beta != 1.0 {
+                for v in y[..n].iter_mut() {
+                    *v *= beta;
+                }
+            }
+            for i in 0..m {
+                let av = alpha * x[i];
+                if av == 0.0 {
+                    continue;
+                }
+                let row = &a[i * n..i * n + n];
+                for (yv, rv) in y[..n].iter_mut().zip(row.iter()) {
+                    *yv += av * rv;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::tcheck;
+
+    fn naive_gemm(
+        ta: Trans,
+        tb: Trans,
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f32,
+        a: &[f32],
+        b: &[f32],
+        beta: f32,
+        c: &mut [f32],
+    ) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for kk in 0..k {
+                    let av = match ta {
+                        Trans::No => a[i * k + kk],
+                        Trans::Yes => a[kk * m + i],
+                    };
+                    let bv = match tb {
+                        Trans::No => b[kk * n + j],
+                        Trans::Yes => b[j * k + kk],
+                    };
+                    acc += av * bv;
+                }
+                c[i * n + j] = alpha * acc + beta * c[i * n + j];
+            }
+        }
+    }
+
+    #[test]
+    fn small_closed_form() {
+        // [[1,2],[3,4]] * [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut c = [0.0; 4];
+        gemm(Trans::No, Trans::No, 2, 2, 2, 1.0, &a, &b, 0.0, &mut c);
+        assert_eq!(c, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn alpha_beta() {
+        let a = [1.0, 0.0, 0.0, 1.0];
+        let b = [2.0, 0.0, 0.0, 2.0];
+        let mut c = [1.0, 1.0, 1.0, 1.0];
+        gemm(Trans::No, Trans::No, 2, 2, 2, 0.5, &a, &b, 2.0, &mut c);
+        assert_eq!(c, [3.0, 2.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn all_transpose_combos_match_naive() {
+        tcheck::check("gemm_vs_naive", 48, |rng| {
+            let m = rng.range_u(1, 33) as usize;
+            let n = rng.range_u(1, 33) as usize;
+            let k = rng.range_u(1, 33) as usize;
+            let ta = if rng.bernoulli(0.5) { Trans::Yes } else { Trans::No };
+            let tb = if rng.bernoulli(0.5) { Trans::Yes } else { Trans::No };
+            let alpha = rng.uniform(-2.0, 2.0);
+            let beta = if rng.bernoulli(0.5) { 0.0 } else { rng.uniform(-1.0, 1.0) };
+            let mut a = vec![0.0; m * k];
+            let mut b = vec![0.0; k * n];
+            let mut c = vec![0.0; m * n];
+            rng.fill_uniform(&mut a, -1.0, 1.0);
+            rng.fill_uniform(&mut b, -1.0, 1.0);
+            rng.fill_uniform(&mut c, -1.0, 1.0);
+            let mut c_ref = c.clone();
+            gemm(ta, tb, m, n, k, alpha, &a, &b, beta, &mut c);
+            naive_gemm(ta, tb, m, n, k, alpha, &a, &b, beta, &mut c_ref);
+            tcheck::close(&c, &c_ref, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn large_shapes_cross_tile_boundaries() {
+        let mut rng = Pcg32::new(5);
+        // m not divisible by 4/MC; k crosses KC; n crosses NC.
+        let (m, n, k) = (67, 521, 300);
+        let mut a = vec![0.0; m * k];
+        let mut b = vec![0.0; k * n];
+        rng.fill_uniform(&mut a, -1.0, 1.0);
+        rng.fill_uniform(&mut b, -1.0, 1.0);
+        let mut c = vec![0.0; m * n];
+        let mut c_ref = vec![0.0; m * n];
+        gemm(Trans::No, Trans::No, m, n, k, 1.0, &a, &b, 0.0, &mut c);
+        naive_gemm(Trans::No, Trans::No, m, n, k, 1.0, &a, &b, 0.0, &mut c_ref);
+        tcheck::close(&c, &c_ref, 1e-3, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn gemv_matches_gemm() {
+        tcheck::check("gemv_vs_gemm", 32, |rng| {
+            let m = rng.range_u(1, 40) as usize;
+            let n = rng.range_u(1, 40) as usize;
+            let t = if rng.bernoulli(0.5) { Trans::Yes } else { Trans::No };
+            let (xl, yl) = match t {
+                Trans::No => (n, m),
+                Trans::Yes => (m, n),
+            };
+            let mut a = vec![0.0; m * n];
+            let mut x = vec![0.0; xl];
+            let mut y = vec![0.0; yl];
+            rng.fill_uniform(&mut a, -1.0, 1.0);
+            rng.fill_uniform(&mut x, -1.0, 1.0);
+            rng.fill_uniform(&mut y, -1.0, 1.0);
+            let mut y_ref = y.clone();
+            gemv(t, m, n, 1.5, &a, &x, 0.5, &mut y);
+            // gemv == gemm with a 1-column vector, using matching op dims.
+            match t {
+                Trans::No => naive_gemm(Trans::No, Trans::No, m, 1, n, 1.5, &a, &x, 0.5, &mut y_ref),
+                Trans::Yes => naive_gemm(Trans::Yes, Trans::No, n, 1, m, 1.5, &a, &x, 0.5, &mut y_ref),
+            }
+            tcheck::close(&y, &y_ref, 1e-4, 1e-4)
+        });
+    }
+}

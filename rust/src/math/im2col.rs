@@ -1,0 +1,255 @@
+//! im2col / col2im — the paper's single biggest kernel-time consumer
+//! (Table 2: 187.4 ms over 98 instances) and the §5.2 candidate for CPU
+//! fallback. Lowers convolution to GEMM exactly like Caffe.
+
+/// Convolution geometry for one image (batch handled by callers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeom {
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+    pub kernel_h: usize,
+    pub kernel_w: usize,
+    pub pad_h: usize,
+    pub pad_w: usize,
+    pub stride_h: usize,
+    pub stride_w: usize,
+}
+
+impl ConvGeom {
+    pub fn out_h(&self) -> usize {
+        (self.height + 2 * self.pad_h - self.kernel_h) / self.stride_h + 1
+    }
+    pub fn out_w(&self) -> usize {
+        (self.width + 2 * self.pad_w - self.kernel_w) / self.stride_w + 1
+    }
+    /// Rows of the col matrix: C*kh*kw.
+    pub fn col_rows(&self) -> usize {
+        self.channels * self.kernel_h * self.kernel_w
+    }
+    /// Cols of the col matrix: out_h*out_w.
+    pub fn col_cols(&self) -> usize {
+        self.out_h() * self.out_w()
+    }
+    pub fn col_len(&self) -> usize {
+        self.col_rows() * self.col_cols()
+    }
+    pub fn im_len(&self) -> usize {
+        self.channels * self.height * self.width
+    }
+}
+
+/// data_im (C,H,W) → data_col (C*kh*kw, out_h*out_w), zero padding.
+pub fn im2col(g: &ConvGeom, data_im: &[f32], data_col: &mut [f32]) {
+    assert!(data_im.len() >= g.im_len(), "im2col: image too small");
+    assert!(data_col.len() >= g.col_len(), "im2col: col too small");
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let mut col_idx = 0;
+    for c in 0..g.channels {
+        for kh in 0..g.kernel_h {
+            for kw in 0..g.kernel_w {
+                for y in 0..oh {
+                    let iy = (y * g.stride_h + kh) as isize - g.pad_h as isize;
+                    if iy < 0 || iy >= g.height as isize {
+                        for _ in 0..ow {
+                            data_col[col_idx] = 0.0;
+                            col_idx += 1;
+                        }
+                        continue;
+                    }
+                    let row_base = (c * g.height + iy as usize) * g.width;
+                    for x in 0..ow {
+                        let ix = (x * g.stride_w + kw) as isize - g.pad_w as isize;
+                        data_col[col_idx] = if ix < 0 || ix >= g.width as isize {
+                            0.0
+                        } else {
+                            data_im[row_base + ix as usize]
+                        };
+                        col_idx += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// data_col → data_im, *accumulating* overlapping windows (gradient path).
+/// The output image must be zeroed by the caller if it starts fresh.
+pub fn col2im(g: &ConvGeom, data_col: &[f32], data_im: &mut [f32]) {
+    assert!(data_col.len() >= g.col_len(), "col2im: col too small");
+    assert!(data_im.len() >= g.im_len(), "col2im: image too small");
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let mut col_idx = 0;
+    for c in 0..g.channels {
+        for kh in 0..g.kernel_h {
+            for kw in 0..g.kernel_w {
+                for y in 0..oh {
+                    let iy = (y * g.stride_h + kh) as isize - g.pad_h as isize;
+                    if iy < 0 || iy >= g.height as isize {
+                        col_idx += ow;
+                        continue;
+                    }
+                    let row_base = (c * g.height + iy as usize) * g.width;
+                    for x in 0..ow {
+                        let ix = (x * g.stride_w + kw) as isize - g.pad_w as isize;
+                        if ix >= 0 && ix < g.width as isize {
+                            data_im[row_base + ix as usize] += data_col[col_idx];
+                        }
+                        col_idx += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::tcheck;
+
+    #[test]
+    fn identity_1x1() {
+        let g = ConvGeom {
+            channels: 2,
+            height: 2,
+            width: 2,
+            kernel_h: 1,
+            kernel_w: 1,
+            pad_h: 0,
+            pad_w: 0,
+            stride_h: 1,
+            stride_w: 1,
+        };
+        let im: Vec<f32> = (0..8).map(|v| v as f32).collect();
+        let mut col = vec![0.0; g.col_len()];
+        im2col(&g, &im, &mut col);
+        assert_eq!(col, im);
+    }
+
+    #[test]
+    fn known_3x3_kernel_2x2_no_pad() {
+        let g = ConvGeom {
+            channels: 1,
+            height: 3,
+            width: 3,
+            kernel_h: 2,
+            kernel_w: 2,
+            pad_h: 0,
+            pad_w: 0,
+            stride_h: 1,
+            stride_w: 1,
+        };
+        // image 0..9 row-major
+        let im: Vec<f32> = (0..9).map(|v| v as f32).collect();
+        let mut col = vec![0.0; g.col_len()]; // 4 rows x 4 cols
+        im2col(&g, &im, &mut col);
+        // row 0 = top-left of each window: [0,1,3,4]
+        assert_eq!(&col[0..4], &[0.0, 1.0, 3.0, 4.0]);
+        // row 3 = bottom-right of each window: [4,5,7,8]
+        assert_eq!(&col[12..16], &[4.0, 5.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn padding_produces_zero_border() {
+        let g = ConvGeom {
+            channels: 1,
+            height: 2,
+            width: 2,
+            kernel_h: 3,
+            kernel_w: 3,
+            pad_h: 1,
+            pad_w: 1,
+            stride_h: 1,
+            stride_w: 1,
+        };
+        let im = [1.0, 2.0, 3.0, 4.0];
+        let mut col = vec![9.0; g.col_len()];
+        im2col(&g, &im, &mut col);
+        // kernel position (0,0) hits padding for the first output pixel
+        assert_eq!(col[0], 0.0);
+        // center tap (kh=1, kw=1) copies the image directly
+        let center_row = (1 * 3 + 1) * g.col_cols();
+        assert_eq!(&col[center_row..center_row + 4], &im);
+    }
+
+    /// col2im is the adjoint of im2col: <im2col(x), y> == <x, col2im(y)>.
+    #[test]
+    fn adjoint_property() {
+        tcheck::check("im2col_adjoint", 32, |rng| {
+            let g = ConvGeom {
+                channels: rng.range_u(1, 3) as usize,
+                height: rng.range_u(3, 8) as usize,
+                width: rng.range_u(3, 8) as usize,
+                kernel_h: rng.range_u(1, 3) as usize,
+                kernel_w: rng.range_u(1, 3) as usize,
+                pad_h: rng.range_u(0, 1) as usize,
+                pad_w: rng.range_u(0, 1) as usize,
+                stride_h: rng.range_u(1, 2) as usize,
+                stride_w: rng.range_u(1, 2) as usize,
+            };
+            if g.height + 2 * g.pad_h < g.kernel_h || g.width + 2 * g.pad_w < g.kernel_w {
+                return Ok(());
+            }
+            let mut x = vec![0.0; g.im_len()];
+            let mut y = vec![0.0; g.col_len()];
+            rng.fill_uniform(&mut x, -1.0, 1.0);
+            rng.fill_uniform(&mut y, -1.0, 1.0);
+            let mut colx = vec![0.0; g.col_len()];
+            im2col(&g, &x, &mut colx);
+            let mut imy = vec![0.0; g.im_len()];
+            col2im(&g, &y, &mut imy);
+            let lhs: f32 = colx.iter().zip(y.iter()).map(|(a, b)| a * b).sum();
+            let rhs: f32 = x.iter().zip(imy.iter()).map(|(a, b)| a * b).sum();
+            if (lhs - rhs).abs() > 1e-3 * (1.0 + lhs.abs()) {
+                return Err(format!("adjoint mismatch: {lhs} vs {rhs} for {g:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn col2im_accumulates_overlaps() {
+        let g = ConvGeom {
+            channels: 1,
+            height: 3,
+            width: 1,
+            kernel_h: 2,
+            kernel_w: 1,
+            pad_h: 0,
+            pad_w: 0,
+            stride_h: 1,
+            stride_w: 1,
+        };
+        // col is 2 rows x 2 cols of ones; middle image pixel is covered twice.
+        let col = vec![1.0; 4];
+        let mut im = vec![0.0; 3];
+        col2im(&g, &col, &mut im);
+        assert_eq!(im, vec![1.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn stride_geometry() {
+        let g = ConvGeom {
+            channels: 1,
+            height: 5,
+            width: 5,
+            kernel_h: 3,
+            kernel_w: 3,
+            pad_h: 0,
+            pad_w: 0,
+            stride_h: 2,
+            stride_w: 2,
+        };
+        assert_eq!((g.out_h(), g.out_w()), (2, 2));
+        let mut rng = Pcg32::new(3);
+        let mut im = vec![0.0; g.im_len()];
+        rng.fill_uniform(&mut im, -1.0, 1.0);
+        let mut col = vec![0.0; g.col_len()];
+        im2col(&g, &im, &mut col);
+        // window at (1,1) output covers image rows 2..5, cols 2..5; its
+        // (0,0) tap is image[2*5+2].
+        assert_eq!(col[3], im[12]);
+    }
+}

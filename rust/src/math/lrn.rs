@@ -1,0 +1,161 @@
+//! Cross-channel Local Response Normalization, split into the paper's
+//! three kernels (Table 2: `LRN_Scale`, `LRN_Output`, `LRN_Diff`):
+//!
+//!   scale[i]  = k + (alpha/n) * sum_{j in window(i)} x[j]^2
+//!   top[i]    = x[i] * scale[i]^(-beta)
+//!   bdiff[i]  = tdiff[i]*scale[i]^(-beta)
+//!               - (2*alpha*beta/n) * x[i] * sum_{j} tdiff[j]*top[j]/scale[j]
+//!
+//! matching Caffe's `LRNLayer` (ACROSS_CHANNELS).
+
+/// scale = k + (alpha/local_size) * window-sum of squares, per channel.
+/// Shapes: (channels, dim) where dim = H*W for one image.
+pub fn lrn_scale(
+    bottom: &[f32],
+    scale: &mut [f32],
+    channels: usize,
+    dim: usize,
+    local_size: usize,
+    alpha: f32,
+    k: f32,
+) {
+    assert!(bottom.len() >= channels * dim && scale.len() >= channels * dim);
+    let half = (local_size - 1) / 2;
+    let a = alpha / local_size as f32;
+    for d in 0..dim {
+        for c in 0..channels {
+            let lo = c.saturating_sub(half);
+            let hi = (c + half + 1).min(channels);
+            let mut acc = 0.0f32;
+            for j in lo..hi {
+                let v = bottom[j * dim + d];
+                acc += v * v;
+            }
+            scale[c * dim + d] = k + a * acc;
+        }
+    }
+}
+
+/// top = bottom * scale^(-beta)
+pub fn lrn_output(bottom: &[f32], scale: &[f32], top: &mut [f32], beta: f32) {
+    assert!(bottom.len() == scale.len() && scale.len() == top.len());
+    for i in 0..top.len() {
+        top[i] = bottom[i] * scale[i].powf(-beta);
+    }
+}
+
+/// LRN backward (one image).
+#[allow(clippy::too_many_arguments)]
+pub fn lrn_diff(
+    bottom: &[f32],
+    top: &[f32],
+    scale: &[f32],
+    top_diff: &[f32],
+    bottom_diff: &mut [f32],
+    channels: usize,
+    dim: usize,
+    local_size: usize,
+    alpha: f32,
+    beta: f32,
+) {
+    let half = (local_size - 1) / 2;
+    let cache_ratio = 2.0 * alpha * beta / local_size as f32;
+    for d in 0..dim {
+        for c in 0..channels {
+            let i = c * dim + d;
+            let mut acc = 0.0f32;
+            let lo = c.saturating_sub(half);
+            let hi = (c + half + 1).min(channels);
+            for j in lo..hi {
+                let jj = j * dim + d;
+                acc += top_diff[jj] * top[jj] / scale[jj];
+            }
+            bottom_diff[i] = top_diff[i] * scale[i].powf(-beta) - cache_ratio * bottom[i] * acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tcheck;
+
+    #[test]
+    fn scale_with_k_only() {
+        // zero input → scale = k everywhere
+        let bottom = vec![0.0; 6];
+        let mut scale = vec![0.0; 6];
+        lrn_scale(&bottom, &mut scale, 3, 2, 3, 2.0, 1.5);
+        assert!(scale.iter().all(|&v| v == 1.5));
+    }
+
+    #[test]
+    fn scale_window_clips_at_edges() {
+        // channels=3, dim=1, local_size=3, alpha=3 (so alpha/n = 1), k=0
+        let bottom = [1.0, 2.0, 3.0];
+        let mut scale = [0.0; 3];
+        lrn_scale(&bottom, &mut scale, 3, 1, 3, 3.0, 0.0);
+        // c0 window {0,1}: 1+4=5; c1 {0,1,2}: 14; c2 {1,2}: 13
+        assert_eq!(scale, [5.0, 14.0, 13.0]);
+    }
+
+    #[test]
+    fn output_formula() {
+        let bottom = [2.0];
+        let scale = [4.0];
+        let mut top = [0.0];
+        lrn_output(&bottom, &scale, &mut top, 0.5);
+        assert!((top[0] - 1.0).abs() < 1e-6); // 2 * 4^-0.5 = 1
+    }
+
+    #[test]
+    fn gradient_matches_fd() {
+        tcheck::check("lrn_fd", 12, |rng| {
+            let channels = rng.range_u(3, 6) as usize;
+            let dim = rng.range_u(1, 4) as usize;
+            let local_size = 3;
+            let (alpha, beta, k) = (1e-1, 0.75, 1.0);
+            let n = channels * dim;
+            let mut bottom = vec![0.0; n];
+            rng.fill_uniform(&mut bottom, -1.0, 1.0);
+            let mut td = vec![0.0; n];
+            rng.fill_uniform(&mut td, -1.0, 1.0);
+
+            let fwd = |b: &[f32]| -> Vec<f32> {
+                let mut s = vec![0.0; n];
+                let mut t = vec![0.0; n];
+                lrn_scale(b, &mut s, channels, dim, local_size, alpha, k);
+                lrn_output(b, &s, &mut t, beta);
+                t
+            };
+
+            let mut scale = vec![0.0; n];
+            lrn_scale(&bottom, &mut scale, channels, dim, local_size, alpha, k);
+            let mut top = vec![0.0; n];
+            lrn_output(&bottom, &scale, &mut top, beta);
+            let mut bd = vec![0.0; n];
+            lrn_diff(
+                &bottom, &top, &scale, &td, &mut bd, channels, dim, local_size, alpha, beta,
+            );
+
+            let eps = 1e-3;
+            for i in 0..n {
+                let mut bp = bottom.clone();
+                bp[i] += eps;
+                let mut bm = bottom.clone();
+                bm[i] -= eps;
+                let (fp, fm) = (fwd(&bp), fwd(&bm));
+                let fd: f32 = fp
+                    .iter()
+                    .zip(fm.iter())
+                    .zip(td.iter())
+                    .map(|((p, m), t)| (p - m) / (2.0 * eps) * t)
+                    .sum();
+                if (fd - bd[i]).abs() > 2e-2 {
+                    return Err(format!("lrn fd mismatch at {i}: {fd} vs {}", bd[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+}

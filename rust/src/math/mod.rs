@@ -1,0 +1,26 @@
+//! Native math substrate: the BLAS-ish library Caffe leans on (paper
+//! Figure 1's "Math Functions → MKL/BLAS" box), implemented in Rust.
+//!
+//! Three roles:
+//! 1. the CPU fallback device's compute (paper §3.3 / §5.2 workload
+//!    partitioning),
+//! 2. the correctness oracle every PJRT artifact is tested against,
+//! 3. the numerical engine behind the FPGA simulator when an artifact is
+//!    (deliberately) not generated for a shape.
+//!
+//! All tensors are dense row-major f32, matching both Caffe and the HLO
+//! artifacts.
+
+pub mod gemm;
+pub mod blas1;
+pub mod im2col;
+pub mod pool;
+pub mod lrn;
+pub mod softmax;
+
+pub use blas1::*;
+pub use gemm::{gemm, gemv, Trans};
+pub use im2col::{col2im, im2col, ConvGeom};
+pub use lrn::*;
+pub use pool::*;
+pub use softmax::*;

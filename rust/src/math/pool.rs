@@ -1,0 +1,331 @@
+//! Max/Average pooling forward + backward (paper kernels `Max_pool_F/B`,
+//! `Ave_pool_F/B`). Follows Caffe's geometry: ceil-mode output sizing and
+//! clipping at the (padded) borders.
+
+use super::im2col::ConvGeom;
+
+/// Pooled output size, Caffe style (ceil), with the guarantee that the
+/// last window starts inside the (unpadded) image.
+pub fn pooled_dim(input: usize, kernel: usize, pad: usize, stride: usize) -> usize {
+    let mut out = ((input + 2 * pad - kernel) as f64 / stride as f64).ceil() as usize + 1;
+    if pad > 0 {
+        // Clip last pooling window to start strictly inside image + pad.
+        if (out - 1) * stride >= input + pad {
+            out -= 1;
+        }
+    }
+    out
+}
+
+/// Geometry helper mirroring ConvGeom but with pooling output rules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolGeom {
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+    pub kernel_h: usize,
+    pub kernel_w: usize,
+    pub pad_h: usize,
+    pub pad_w: usize,
+    pub stride_h: usize,
+    pub stride_w: usize,
+}
+
+impl PoolGeom {
+    pub fn out_h(&self) -> usize {
+        pooled_dim(self.height, self.kernel_h, self.pad_h, self.stride_h)
+    }
+    pub fn out_w(&self) -> usize {
+        pooled_dim(self.width, self.kernel_w, self.pad_w, self.stride_w)
+    }
+    pub fn in_len(&self) -> usize {
+        self.channels * self.height * self.width
+    }
+    pub fn out_len(&self) -> usize {
+        self.channels * self.out_h() * self.out_w()
+    }
+    pub fn as_conv(&self) -> ConvGeom {
+        ConvGeom {
+            channels: self.channels,
+            height: self.height,
+            width: self.width,
+            kernel_h: self.kernel_h,
+            kernel_w: self.kernel_w,
+            pad_h: self.pad_h,
+            pad_w: self.pad_w,
+            stride_h: self.stride_h,
+            stride_w: self.stride_w,
+        }
+    }
+}
+
+/// Max pooling forward for one image; writes the argmax index (into the
+/// per-channel plane) to `mask` for the backward pass.
+pub fn max_pool_forward(g: &PoolGeom, bottom: &[f32], top: &mut [f32], mask: &mut [f32]) {
+    assert!(bottom.len() >= g.in_len());
+    assert!(top.len() >= g.out_len() && mask.len() >= g.out_len());
+    let (oh, ow) = (g.out_h(), g.out_w());
+    for c in 0..g.channels {
+        let plane = &bottom[c * g.height * g.width..(c + 1) * g.height * g.width];
+        for y in 0..oh {
+            for x in 0..ow {
+                let hs = (y * g.stride_h) as isize - g.pad_h as isize;
+                let ws = (x * g.stride_w) as isize - g.pad_w as isize;
+                let he = (hs + g.kernel_h as isize).min(g.height as isize);
+                let we = (ws + g.kernel_w as isize).min(g.width as isize);
+                let hs = hs.max(0) as usize;
+                let ws = ws.max(0) as usize;
+                let mut best = f32::NEG_INFINITY;
+                let mut best_idx = 0usize;
+                for iy in hs..he as usize {
+                    for ix in ws..we as usize {
+                        let idx = iy * g.width + ix;
+                        if plane[idx] > best {
+                            best = plane[idx];
+                            best_idx = idx;
+                        }
+                    }
+                }
+                let o = (c * oh + y) * ow + x;
+                top[o] = best;
+                mask[o] = best_idx as f32;
+            }
+        }
+    }
+}
+
+/// Max pooling backward: route top_diff to the argmax positions.
+/// `bottom_diff` must be zeroed by the caller.
+pub fn max_pool_backward(g: &PoolGeom, top_diff: &[f32], mask: &[f32], bottom_diff: &mut [f32]) {
+    assert!(bottom_diff.len() >= g.in_len());
+    let (oh, ow) = (g.out_h(), g.out_w());
+    assert!(top_diff.len() >= g.out_len() && mask.len() >= g.out_len());
+    for c in 0..g.channels {
+        let plane_base = c * g.height * g.width;
+        for y in 0..oh {
+            for x in 0..ow {
+                let o = (c * oh + y) * ow + x;
+                bottom_diff[plane_base + mask[o] as usize] += top_diff[o];
+            }
+        }
+    }
+}
+
+/// Average pooling forward for one image. Caffe divides by the *padded*
+/// window size (clipped to padded borders).
+pub fn ave_pool_forward(g: &PoolGeom, bottom: &[f32], top: &mut [f32]) {
+    assert!(bottom.len() >= g.in_len() && top.len() >= g.out_len());
+    let (oh, ow) = (g.out_h(), g.out_w());
+    for c in 0..g.channels {
+        let plane = &bottom[c * g.height * g.width..(c + 1) * g.height * g.width];
+        for y in 0..oh {
+            for x in 0..ow {
+                let hs0 = (y * g.stride_h) as isize - g.pad_h as isize;
+                let ws0 = (x * g.stride_w) as isize - g.pad_w as isize;
+                let he0 = (hs0 + g.kernel_h as isize).min((g.height + g.pad_h) as isize);
+                let we0 = (ws0 + g.kernel_w as isize).min((g.width + g.pad_w) as isize);
+                let pool_size = ((he0 - hs0) * (we0 - ws0)) as f32;
+                let hs = hs0.max(0) as usize;
+                let ws = ws0.max(0) as usize;
+                let he = he0.min(g.height as isize) as usize;
+                let we = we0.min(g.width as isize) as usize;
+                let mut acc = 0.0f32;
+                for iy in hs..he {
+                    for ix in ws..we {
+                        acc += plane[iy * g.width + ix];
+                    }
+                }
+                top[(c * oh + y) * ow + x] = acc / pool_size;
+            }
+        }
+    }
+}
+
+/// Average pooling backward. `bottom_diff` must be zeroed by the caller.
+pub fn ave_pool_backward(g: &PoolGeom, top_diff: &[f32], bottom_diff: &mut [f32]) {
+    assert!(bottom_diff.len() >= g.in_len() && top_diff.len() >= g.out_len());
+    let (oh, ow) = (g.out_h(), g.out_w());
+    for c in 0..g.channels {
+        let plane_base = c * g.height * g.width;
+        for y in 0..oh {
+            for x in 0..ow {
+                let hs0 = (y * g.stride_h) as isize - g.pad_h as isize;
+                let ws0 = (x * g.stride_w) as isize - g.pad_w as isize;
+                let he0 = (hs0 + g.kernel_h as isize).min((g.height + g.pad_h) as isize);
+                let we0 = (ws0 + g.kernel_w as isize).min((g.width + g.pad_w) as isize);
+                let pool_size = ((he0 - hs0) * (we0 - ws0)) as f32;
+                let hs = hs0.max(0) as usize;
+                let ws = ws0.max(0) as usize;
+                let he = he0.min(g.height as isize) as usize;
+                let we = we0.min(g.width as isize) as usize;
+                let g_share = top_diff[(c * oh + y) * ow + x] / pool_size;
+                for iy in hs..he {
+                    for ix in ws..we {
+                        bottom_diff[plane_base + iy * g.width + ix] += g_share;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tcheck;
+
+    fn g2x2() -> PoolGeom {
+        PoolGeom {
+            channels: 1,
+            height: 4,
+            width: 4,
+            kernel_h: 2,
+            kernel_w: 2,
+            pad_h: 0,
+            pad_w: 0,
+            stride_h: 2,
+            stride_w: 2,
+        }
+    }
+
+    #[test]
+    fn caffe_output_sizing() {
+        // AlexNet pool1: 55x55, k3 s2 → 27? Caffe ceil mode: (55-3)/2+1 = 27
+        assert_eq!(pooled_dim(55, 3, 0, 2), 27);
+        // GoogLeNet pool1: 112, k3 s2 → ceil((112-3)/2)+1 = 56
+        assert_eq!(pooled_dim(112, 3, 0, 2), 56);
+        // ceil kicks in: 7, k3 s2 → ceil(4/2)+1 = 3
+        assert_eq!(pooled_dim(7, 3, 0, 2), 3);
+        // SqueezeNet pool: 111 k3 s2 → ceil(108/2)+1 = 55
+        assert_eq!(pooled_dim(111, 3, 0, 2), 55);
+    }
+
+    #[test]
+    fn max_forward_and_mask() {
+        let g = g2x2();
+        let bottom: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let mut top = vec![0.0; g.out_len()];
+        let mut mask = vec![0.0; g.out_len()];
+        max_pool_forward(&g, &bottom, &mut top, &mut mask);
+        assert_eq!(top, vec![5.0, 7.0, 13.0, 15.0]);
+        assert_eq!(mask, vec![5.0, 7.0, 13.0, 15.0]); // indices match values here
+    }
+
+    #[test]
+    fn max_backward_routes_to_argmax() {
+        let g = g2x2();
+        let bottom: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let mut top = vec![0.0; 4];
+        let mut mask = vec![0.0; 4];
+        max_pool_forward(&g, &bottom, &mut top, &mut mask);
+        let mut bd = vec![0.0; 16];
+        max_pool_backward(&g, &[1.0, 2.0, 3.0, 4.0], &mask, &mut bd);
+        assert_eq!(bd[5], 1.0);
+        assert_eq!(bd[7], 2.0);
+        assert_eq!(bd[13], 3.0);
+        assert_eq!(bd[15], 4.0);
+        assert_eq!(bd.iter().sum::<f32>(), 10.0);
+    }
+
+    #[test]
+    fn ave_forward_simple() {
+        let g = g2x2();
+        let bottom = vec![1.0; 16];
+        let mut top = vec![0.0; 4];
+        ave_pool_forward(&g, &bottom, &mut top);
+        assert_eq!(top, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn ave_global_pool() {
+        // GoogLeNet pool5: 7x7 global average.
+        let g = PoolGeom {
+            channels: 2,
+            height: 7,
+            width: 7,
+            kernel_h: 7,
+            kernel_w: 7,
+            pad_h: 0,
+            pad_w: 0,
+            stride_h: 1,
+            stride_w: 1,
+        };
+        assert_eq!((g.out_h(), g.out_w()), (1, 1));
+        let mut bottom = vec![2.0; g.in_len()];
+        for v in bottom[49..].iter_mut() {
+            *v = 4.0;
+        }
+        let mut top = vec![0.0; 2];
+        ave_pool_forward(&g, &bottom, &mut top);
+        assert_eq!(top, vec![2.0, 4.0]);
+    }
+
+    /// Gradient check: pooling backward == finite differences of forward.
+    #[test]
+    fn pool_gradients_match_fd() {
+        tcheck::check("pool_fd", 16, |rng| {
+            let g = PoolGeom {
+                channels: rng.range_u(1, 2) as usize,
+                height: rng.range_u(3, 6) as usize,
+                width: rng.range_u(3, 6) as usize,
+                kernel_h: 2,
+                kernel_w: 2,
+                pad_h: 0,
+                pad_w: 0,
+                stride_h: rng.range_u(1, 2) as usize,
+                stride_w: rng.range_u(1, 2) as usize,
+            };
+            let mut bottom = vec![0.0; g.in_len()];
+            rng.fill_uniform(&mut bottom, -1.0, 1.0);
+            // random top_diff
+            let mut td = vec![0.0; g.out_len()];
+            rng.fill_uniform(&mut td, -1.0, 1.0);
+
+            for ave in [false, true] {
+                let fwd = |b: &[f32]| -> Vec<f32> {
+                    let mut t = vec![0.0; g.out_len()];
+                    if ave {
+                        ave_pool_forward(&g, b, &mut t);
+                    } else {
+                        let mut m = vec![0.0; g.out_len()];
+                        max_pool_forward(&g, b, &mut t, &mut m);
+                    }
+                    t
+                };
+                let mut bd = vec![0.0; g.in_len()];
+                if ave {
+                    ave_pool_backward(&g, &td, &mut bd);
+                } else {
+                    let mut t = vec![0.0; g.out_len()];
+                    let mut m = vec![0.0; g.out_len()];
+                    max_pool_forward(&g, &bottom, &mut t, &mut m);
+                    max_pool_backward(&g, &td, &m, &mut bd);
+                }
+                let eps = 1e-3;
+                for i in 0..bottom.len() {
+                    let mut bp = bottom.clone();
+                    bp[i] += eps;
+                    let mut bm = bottom.clone();
+                    bm[i] -= eps;
+                    let fp = fwd(&bp);
+                    let fm = fwd(&bm);
+                    let fd: f32 = fp
+                        .iter()
+                        .zip(fm.iter())
+                        .zip(td.iter())
+                        .map(|((p, m_), t)| (p - m_) / (2.0 * eps) * t)
+                        .sum();
+                    // max-pool FD near ties is unstable; tolerate generously
+                    let tol = if ave { 1e-3 } else { 0.35 };
+                    if (fd - bd[i]).abs() > tol {
+                        return Err(format!(
+                            "pool fd mismatch ave={ave} at {i}: {fd} vs {} ({g:?})",
+                            bd[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,162 @@
+//! Softmax + SoftmaxWithLoss (paper kernels `Softmax`,
+//! `SoftmaxLoss_F/B`), matching Caffe's numerically-stable formulation.
+
+/// Row-wise softmax over an (n, c) matrix.
+pub fn softmax_forward(bottom: &[f32], top: &mut [f32], n: usize, c: usize) {
+    assert!(bottom.len() >= n * c && top.len() >= n * c);
+    for i in 0..n {
+        let row = &bottom[i * c..(i + 1) * c];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let out = &mut top[i * c..(i + 1) * c];
+        let mut sum = 0.0f32;
+        for (o, &v) in out.iter_mut().zip(row.iter()) {
+            *o = (v - max).exp();
+            sum += *o;
+        }
+        for o in out.iter_mut() {
+            *o /= sum;
+        }
+    }
+}
+
+/// Multinomial logistic loss of softmax probabilities against integer
+/// labels (stored as f32, Caffe-style). Returns mean NLL over the batch.
+pub fn softmax_loss_forward(prob: &[f32], labels: &[f32], n: usize, c: usize) -> f32 {
+    assert!(prob.len() >= n * c && labels.len() >= n);
+    let mut loss = 0.0f32;
+    for i in 0..n {
+        let label = labels[i] as usize;
+        assert!(label < c, "label {label} out of range (c={c})");
+        loss -= prob[i * c + label].max(f32::MIN_POSITIVE).ln();
+    }
+    loss / n as f32
+}
+
+/// d loss / d logits = (prob - onehot(label)) * loss_weight / n.
+pub fn softmax_loss_backward(
+    prob: &[f32],
+    labels: &[f32],
+    bottom_diff: &mut [f32],
+    n: usize,
+    c: usize,
+    loss_weight: f32,
+) {
+    assert!(prob.len() >= n * c && bottom_diff.len() >= n * c && labels.len() >= n);
+    let scale = loss_weight / n as f32;
+    for i in 0..n {
+        let label = labels[i] as usize;
+        for j in 0..c {
+            let idx = i * c + j;
+            let indicator = if j == label { 1.0 } else { 0.0 };
+            bottom_diff[idx] = (prob[idx] - indicator) * scale;
+        }
+    }
+}
+
+/// Top-k accuracy (the Accuracy layer's math).
+pub fn accuracy(scores: &[f32], labels: &[f32], n: usize, c: usize, top_k: usize) -> f32 {
+    let mut correct = 0usize;
+    for i in 0..n {
+        let row = &scores[i * c..(i + 1) * c];
+        let label = labels[i] as usize;
+        let target = row[label];
+        // count strictly-greater scores; ties resolve optimistically like
+        // Caffe's partial_sort ordering by index
+        let rank = row.iter().filter(|&&v| v > target).count();
+        if rank < top_k {
+            correct += 1;
+        }
+    }
+    correct as f32 / n as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tcheck;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let bottom = [1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        let mut top = [0.0; 6];
+        softmax_forward(&bottom, &mut top, 2, 3);
+        for i in 0..2 {
+            let s: f32 = top[i * 3..(i + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        // monotonicity preserved
+        assert!(top[0] < top[1] && top[1] < top[2]);
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant_and_stable() {
+        let a = [1000.0, 1001.0, 1002.0];
+        let b = [0.0, 1.0, 2.0];
+        let mut ta = [0.0; 3];
+        let mut tb = [0.0; 3];
+        softmax_forward(&a, &mut ta, 1, 3);
+        softmax_forward(&b, &mut tb, 1, 3);
+        tcheck::close(&ta, &tb, 1e-6, 0.0).unwrap();
+        assert!(ta.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn loss_of_perfect_prediction_is_zero() {
+        let prob = [1.0, 0.0, 0.0, 1.0]; // 2 samples, 2 classes
+        let labels = [0.0, 1.0];
+        let l = softmax_loss_forward(&prob, &labels, 2, 2);
+        assert!(l.abs() < 1e-6);
+    }
+
+    #[test]
+    fn loss_of_uniform_prediction_is_log_c() {
+        let c = 4;
+        let prob = vec![0.25; c];
+        let l = softmax_loss_forward(&prob, &[2.0], 1, c);
+        assert!((l - (c as f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn backward_matches_fd_through_softmax() {
+        tcheck::check("softmax_loss_fd", 16, |rng| {
+            let n = rng.range_u(1, 4) as usize;
+            let c = rng.range_u(2, 6) as usize;
+            let mut logits = vec![0.0; n * c];
+            rng.fill_uniform(&mut logits, -2.0, 2.0);
+            let labels: Vec<f32> = (0..n).map(|_| rng.below(c as u32) as f32).collect();
+
+            let loss_of = |lg: &[f32]| -> f32 {
+                let mut p = vec![0.0; n * c];
+                softmax_forward(lg, &mut p, n, c);
+                softmax_loss_forward(&p, &labels, n, c)
+            };
+
+            let mut prob = vec![0.0; n * c];
+            softmax_forward(&logits, &mut prob, n, c);
+            let mut grad = vec![0.0; n * c];
+            softmax_loss_backward(&prob, &labels, &mut grad, n, c, 1.0);
+
+            let eps = 1e-2;
+            for i in 0..n * c {
+                let mut lp = logits.clone();
+                lp[i] += eps;
+                let mut lm = logits.clone();
+                lm[i] -= eps;
+                let fd = (loss_of(&lp) - loss_of(&lm)) / (2.0 * eps);
+                if (fd - grad[i]).abs() > 1e-3 {
+                    return Err(format!("fd mismatch at {i}: {fd} vs {}", grad[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn topk_accuracy() {
+        // scores: sample0 best=c2, sample1 best=c0
+        let scores = [0.1, 0.2, 0.7, 0.8, 0.1, 0.1];
+        let labels = [2.0, 1.0];
+        assert_eq!(accuracy(&scores, &labels, 2, 3, 1), 0.5);
+        assert_eq!(accuracy(&scores, &labels, 2, 3, 2), 1.0);
+    }
+}

@@ -1,0 +1,451 @@
+//! Net: the layer graph (caffe::Net).
+//!
+//! Built from a [`NetParameter`] for one phase. Reproduces Caffe's
+//! initialization semantics the paper relies on:
+//!
+//! * **auto-Split insertion** — when one blob feeds several consumers
+//!   (GoogLeNet's inception fan-out), a `Split` layer is inserted whose
+//!   backward *accumulates* the branch gradients (paper Table 2's 41
+//!   `Split` instances);
+//! * **in-place layers** — ReLU/Dropout with `bottom == top` share the
+//!   blob (versioned, so split counting stays correct);
+//! * **backward-need propagation** — gradients only flow where a learnable
+//!   parameter or a grad-needing bottom lies upstream (`prop_down`).
+
+use crate::blob::Blob;
+use crate::device::Device;
+use crate::layers::{create_layer, shared, Layer, SharedBlob};
+use crate::proto::{LayerParameter, NetParameter, ParamSpec, Phase};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+/// One learnable parameter with its schedule multipliers and owner.
+pub struct NetParam {
+    pub blob: SharedBlob,
+    pub spec: ParamSpec,
+    pub owner: String,
+}
+
+pub struct Net {
+    pub name: String,
+    pub phase: Phase,
+    layers: Vec<Box<dyn Layer>>,
+    bottoms: Vec<Vec<SharedBlob>>,
+    tops: Vec<Vec<SharedBlob>>,
+    prop_down: Vec<Vec<bool>>,
+    layer_need_bw: Vec<bool>,
+    blobs: BTreeMap<String, SharedBlob>,
+    params: Vec<NetParam>,
+}
+
+impl Net {
+    /// Build + setup the net for `phase` on `dev`.
+    pub fn from_param(
+        param: &NetParameter,
+        phase: Phase,
+        dev: &mut dyn Device,
+    ) -> anyhow::Result<Net> {
+        let phase_layers: Vec<LayerParameter> = param
+            .layers_for_phase(phase)
+            .into_iter()
+            .cloned()
+            .collect();
+        let with_splits = insert_splits(&phase_layers);
+
+        let mut net = Net {
+            name: param.name.clone(),
+            phase,
+            layers: Vec::new(),
+            bottoms: Vec::new(),
+            tops: Vec::new(),
+            prop_down: Vec::new(),
+            layer_need_bw: Vec::new(),
+            blobs: BTreeMap::new(),
+            params: Vec::new(),
+        };
+
+        // Deploy-style explicit inputs.
+        for (name, shape) in &param.inputs {
+            net.blobs
+                .insert(name.clone(), shared(Blob::new(name, shape)));
+        }
+
+        // Which blobs carry gradient back (label/data blobs don't).
+        let mut blob_needs_grad: HashMap<String, bool> = HashMap::new();
+        for (name, _) in &param.inputs {
+            blob_needs_grad.insert(name.clone(), false);
+        }
+
+        for lp in &with_splits {
+            let mut layer = create_layer(lp, phase)?;
+            // Resolve bottoms (must already exist).
+            let mut bots = Vec::new();
+            for b in &lp.bottoms {
+                let blob = net
+                    .blobs
+                    .get(b)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("layer {}: unknown bottom blob '{b}'", lp.name)
+                    })?
+                    .clone();
+                bots.push(blob);
+            }
+            // Resolve/create tops (in-place reuses the bottom's blob).
+            let mut tops = Vec::new();
+            for t in &lp.tops {
+                if let Some(pos) = lp.bottoms.iter().position(|b| b == t) {
+                    tops.push(bots[pos].clone()); // in-place
+                } else {
+                    let blob = shared(Blob::new(t, &[1]));
+                    net.blobs.insert(t.clone(), blob.clone());
+                    tops.push(blob);
+                }
+            }
+            layer.setup(dev, &bots, &tops)?;
+
+            // prop_down: does each bottom need a gradient?
+            let pd: Vec<bool> = lp
+                .bottoms
+                .iter()
+                .map(|b| *blob_needs_grad.get(b).unwrap_or(&true))
+                .collect();
+            // This layer needs backward if it has params or any bottom
+            // needs grad — and the layer type participates at all.
+            let has_params = !layer.param_blobs().is_empty();
+            let need_bw =
+                layer.needs_backward() && (has_params || pd.iter().any(|&v| v));
+            // Tops produced by a backward-participating layer carry grads.
+            for t in &lp.tops {
+                // Label outputs of data layers never need grad; covered by
+                // needs_backward() == false for data layers.
+                blob_needs_grad.insert(t.clone(), need_bw || layer.is_loss());
+            }
+
+            // Collect params with specs (padded with defaults like Caffe).
+            let pblobs = layer.param_blobs();
+            let specs = layer.param_specs();
+            for (i, pb) in pblobs.iter().enumerate() {
+                net.params.push(NetParam {
+                    blob: pb.clone(),
+                    spec: specs.get(i).copied().unwrap_or_default(),
+                    owner: lp.name.clone(),
+                });
+            }
+
+            net.layers.push(layer);
+            net.bottoms.push(bots);
+            net.tops.push(tops);
+            net.prop_down.push(pd);
+            net.layer_need_bw.push(need_bw);
+        }
+        Ok(net)
+    }
+
+    /// Full forward pass; returns the total (weighted) loss.
+    pub fn forward(&mut self, dev: &mut dyn Device) -> anyhow::Result<f32> {
+        let mut loss = 0.0;
+        for i in 0..self.layers.len() {
+            loss += self.layers[i].forward(dev, &self.bottoms[i], &self.tops[i])?;
+        }
+        Ok(loss)
+    }
+
+    /// Forward with per-layer timing (`caffe time` behaviour). Returns
+    /// (loss, per-layer ns) using the device's simulated clock when
+    /// available, else wallclock.
+    pub fn forward_timed(&mut self, dev: &mut dyn Device) -> anyhow::Result<(f32, Vec<u64>)> {
+        let mut loss = 0.0;
+        let mut times = Vec::with_capacity(self.layers.len());
+        for i in 0..self.layers.len() {
+            let t0 = clock(dev);
+            loss += self.layers[i].forward(dev, &self.bottoms[i], &self.tops[i])?;
+            dev.synchronize();
+            times.push(clock(dev) - t0);
+        }
+        Ok((loss, times))
+    }
+
+    /// Full backward pass.
+    pub fn backward(&mut self, dev: &mut dyn Device) -> anyhow::Result<()> {
+        for i in (0..self.layers.len()).rev() {
+            if self.layer_need_bw[i] {
+                self.layers[i].backward(dev, &self.tops[i], &self.prop_down[i], &self.bottoms[i])?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Backward with per-layer timing (reverse order, like `caffe time`).
+    pub fn backward_timed(&mut self, dev: &mut dyn Device) -> anyhow::Result<Vec<u64>> {
+        let mut times = vec![0u64; self.layers.len()];
+        for i in (0..self.layers.len()).rev() {
+            let t0 = clock(dev);
+            if self.layer_need_bw[i] {
+                self.layers[i].backward(dev, &self.tops[i], &self.prop_down[i], &self.bottoms[i])?;
+            }
+            dev.synchronize();
+            times[i] = clock(dev) - t0;
+        }
+        Ok(times)
+    }
+
+    pub fn forward_backward(&mut self, dev: &mut dyn Device) -> anyhow::Result<f32> {
+        let loss = self.forward(dev)?;
+        self.backward(dev)?;
+        Ok(loss)
+    }
+
+    pub fn blob(&self, name: &str) -> Option<SharedBlob> {
+        self.blobs.get(name).cloned()
+    }
+
+    pub fn blob_names(&self) -> Vec<String> {
+        self.blobs.keys().cloned().collect()
+    }
+
+    pub fn params(&self) -> &[NetParam] {
+        &self.params
+    }
+
+    pub fn layer_names(&self) -> Vec<String> {
+        self.layers.iter().map(|l| l.name().to_string()).collect()
+    }
+
+    pub fn layer_kinds(&self) -> Vec<&'static str> {
+        self.layers.iter().map(|l| l.kind()).collect()
+    }
+
+    /// Total learnable parameter count.
+    pub fn num_parameters(&self) -> usize {
+        self.params.iter().map(|p| p.blob.borrow().count()).sum()
+    }
+
+    /// Sum of all blob bytes (data+diff), the device-DDR footprint driver.
+    pub fn activation_bytes(&self) -> usize {
+        self.blobs
+            .values()
+            .map(|b| 2 * b.borrow().bytes())
+            .sum()
+    }
+}
+
+fn clock(dev: &mut dyn Device) -> u64 {
+    dev.sim_clock_ns().unwrap_or_else(|| {
+        use std::time::{SystemTime, UNIX_EPOCH};
+        SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .unwrap()
+            .as_nanos() as u64
+    })
+}
+
+/// Caffe's `insert_splits`: version blobs through in-place layers, count
+/// consumers per version, and materialize a Split layer wherever a
+/// version has more than one consumer.
+pub fn insert_splits(layers: &[LayerParameter]) -> Vec<LayerParameter> {
+    type Key = (String, usize);
+    let mut version: HashMap<String, usize> = HashMap::new();
+    let mut consumers: HashMap<Key, usize> = HashMap::new();
+
+    // Pass 1: count consumers of each blob version.
+    for lp in layers {
+        for b in &lp.bottoms {
+            let v = *version.get(b).unwrap_or(&0);
+            *consumers.entry((b.clone(), v)).or_insert(0) += 1;
+        }
+        for t in &lp.tops {
+            if lp.bottoms.contains(t) {
+                *version.entry(t.clone()).or_insert(0) += 1; // in-place
+            } else {
+                version.insert(t.clone(), 0);
+            }
+        }
+    }
+
+    // Pass 2: rebuild with Split layers + remapped bottoms.
+    let mut out = Vec::new();
+    let mut version2: HashMap<String, usize> = HashMap::new();
+    let mut pending: HashMap<Key, VecDeque<String>> = HashMap::new();
+
+    for lp in layers {
+        let mut lp = lp.clone();
+        let in_place: Vec<bool> = lp
+            .tops
+            .iter()
+            .map(|t| lp.bottoms.contains(t))
+            .collect();
+        // Remap bottoms through pending split outputs.
+        let mut remapped: HashMap<String, String> = HashMap::new();
+        for b in lp.bottoms.iter_mut() {
+            let v = *version2.get(b.as_str()).unwrap_or(&0);
+            if let Some(q) = pending.get_mut(&(b.clone(), v)) {
+                if let Some(alias) = q.pop_front() {
+                    remapped.insert(b.clone(), alias.clone());
+                    *b = alias;
+                }
+            }
+        }
+        // Keep in-place layers in-place after remapping. An in-place
+        // layer whose bottom was remapped would need name forwarding for
+        // later versions — no net in the zoo produces that pattern, so we
+        // reject it loudly rather than mis-wire silently.
+        for (i, t) in lp.tops.iter_mut().enumerate() {
+            if in_place[i] {
+                if let Some(alias) = remapped.get(t.as_str()) {
+                    assert!(
+                        !version.contains_key(alias),
+                        "insert_splits: unsupported in-place-after-split on '{t}'"
+                    );
+                    *t = alias.clone();
+                }
+            }
+        }
+        let tops_now = lp.tops.clone();
+        out.push(lp);
+        for t in &tops_now {
+            // Determine version for counting: split outputs aren't in the
+            // consumers map (version2 entry created fresh).
+            let was_in_place = version2.contains_key(t);
+            let v = if was_in_place {
+                let e = version2.get_mut(t).unwrap();
+                *e += 1;
+                *e
+            } else {
+                version2.insert(t.clone(), 0);
+                0
+            };
+            let n = *consumers.get(&(t.clone(), v)).unwrap_or(&0);
+            if n > 1 {
+                // Materialize the split.
+                let split_name = format!("{t}_split");
+                let mut sp = LayerParameter::new(&split_name, "Split");
+                sp.bottoms = vec![t.clone()];
+                let mut q = VecDeque::new();
+                for j in 0..n {
+                    let alias = format!("{t}_split_{j}");
+                    sp.tops.push(alias.clone());
+                    q.push_back(alias);
+                }
+                pending.insert((t.clone(), v), q);
+                out.push(sp);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::cpu::CpuDevice;
+    use crate::proto::parse_net;
+
+    const TINY_NET: &str = r#"
+name: "tiny"
+layer { name: "data" type: "SyntheticData" top: "data" top: "label"
+        data_param { batch_size: 2 channels: 1 height: 8 width: 8 num_classes: 3 source: "digits" } }
+layer { name: "conv1" type: "Convolution" bottom: "data" top: "conv1"
+        convolution_param { num_output: 4 kernel_size: 3
+          weight_filler { type: "xavier" } } }
+layer { name: "relu1" type: "ReLU" bottom: "conv1" top: "conv1" }
+layer { name: "pool1" type: "Pooling" bottom: "conv1" top: "pool1"
+        pooling_param { pool: MAX kernel_size: 2 stride: 2 } }
+layer { name: "fc" type: "InnerProduct" bottom: "pool1" top: "fc"
+        inner_product_param { num_output: 3 weight_filler { type: "xavier" } } }
+layer { name: "loss" type: "SoftmaxWithLoss" bottom: "fc" bottom: "label" top: "loss" }
+"#;
+
+    #[test]
+    fn builds_and_runs_forward_backward() {
+        let mut dev = CpuDevice::new();
+        let param = parse_net(TINY_NET).unwrap();
+        let mut net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+        // conv(w,b) + fc(w,b) = 4 param blobs
+        assert_eq!(net.params().len(), 4);
+        let loss = net.forward_backward(&mut dev).unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+        // conv weights received a gradient
+        let g = net.params()[0].blob.borrow_mut().diff_vec(&mut dev);
+        assert!(g.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn split_inserted_for_fanout() {
+        let text = r#"
+layer { name: "data" type: "SyntheticData" top: "data" top: "label"
+        data_param { batch_size: 1 channels: 1 height: 8 width: 8 num_classes: 3 source: "digits" } }
+layer { name: "fc1" type: "InnerProduct" bottom: "data" top: "fc1"
+        inner_product_param { num_output: 4 weight_filler { type: "xavier" } } }
+layer { name: "a" type: "ReLU" bottom: "fc1" top: "a" }
+layer { name: "b" type: "ReLU" bottom: "fc1" top: "b" }
+"#;
+        let param = parse_net(text).unwrap();
+        let with_splits = insert_splits(&param.layers);
+        let kinds: Vec<&str> = with_splits.iter().map(|l| l.kind.as_str()).collect();
+        assert!(kinds.contains(&"Split"));
+        let split = with_splits.iter().find(|l| l.kind == "Split").unwrap();
+        assert_eq!(split.tops.len(), 2);
+        // Consumers remapped to distinct split outputs.
+        let a = with_splits.iter().find(|l| l.name == "a").unwrap();
+        let b = with_splits.iter().find(|l| l.name == "b").unwrap();
+        assert_ne!(a.bottoms[0], b.bottoms[0]);
+        assert!(a.bottoms[0].starts_with("fc1_split_"));
+
+        // And the built net accumulates both branch gradients.
+        let mut dev = CpuDevice::new();
+        let net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+        assert!(net.layer_kinds().contains(&"Split"));
+    }
+
+    #[test]
+    fn in_place_chain_needs_no_split() {
+        let text = r#"
+layer { name: "data" type: "SyntheticData" top: "data" top: "label"
+        data_param { batch_size: 1 channels: 1 height: 8 width: 8 num_classes: 3 source: "digits" } }
+layer { name: "fc1" type: "InnerProduct" bottom: "data" top: "fc1"
+        inner_product_param { num_output: 4 weight_filler { type: "xavier" } } }
+layer { name: "r" type: "ReLU" bottom: "fc1" top: "fc1" }
+layer { name: "fc2" type: "InnerProduct" bottom: "fc1" top: "fc2"
+        inner_product_param { num_output: 2 weight_filler { type: "xavier" } } }
+"#;
+        let param = parse_net(text).unwrap();
+        let with_splits = insert_splits(&param.layers);
+        assert!(with_splits.iter().all(|l| l.kind != "Split"));
+    }
+
+    #[test]
+    fn label_blob_gets_no_gradient() {
+        let mut dev = CpuDevice::new();
+        let param = parse_net(TINY_NET).unwrap();
+        let mut net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+        net.forward_backward(&mut dev).unwrap();
+        // loss layer prop_down for the label bottom must be false
+        let loss_idx = net
+            .layer_kinds()
+            .iter()
+            .position(|&k| k == "SoftmaxWithLoss")
+            .unwrap();
+        assert_eq!(net.prop_down[loss_idx], vec![true, false]);
+    }
+
+    #[test]
+    fn deploy_inputs_create_blobs() {
+        let text = r#"
+name: "deploy"
+input: "data"
+input_shape { dim: 1 dim: 1 dim: 4 dim: 4 }
+layer { name: "r" type: "ReLU" bottom: "data" top: "out" }
+"#;
+        let mut dev = CpuDevice::new();
+        let param = parse_net(text).unwrap();
+        let mut net = Net::from_param(&param, Phase::Test, &mut dev).unwrap();
+        net.blob("data")
+            .unwrap()
+            .borrow_mut()
+            .set_data(&mut dev, &[-1.0; 16]);
+        net.forward(&mut dev).unwrap();
+        assert_eq!(
+            net.blob("out").unwrap().borrow_mut().data_vec(&mut dev),
+            vec![0.0; 16]
+        );
+    }
+}

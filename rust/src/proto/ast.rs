@@ -1,0 +1,234 @@
+//! Generic protobuf-text message tree.
+//!
+//! Field order is preserved and repeated fields are natural — exactly the
+//! semantics Caffe relies on (e.g. repeated `layer { ... }` entries define
+//! the network's topological intent and `top`/`bottom` repeat).
+
+use super::lexer::{Tok, Token};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum PValue {
+    Str(String),
+    Num(f64),
+    /// Bare identifiers: enum values (`MAX`, `TRAIN`) and booleans.
+    Ident(String),
+    Msg(PMessage),
+}
+
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PMessage {
+    /// (field name, value) in source order; repeated fields appear multiple
+    /// times.
+    pub fields: Vec<(String, PValue)>,
+}
+
+impl PMessage {
+    /// First value of a field.
+    pub fn get(&self, name: &str) -> Option<&PValue> {
+        self.fields.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+    }
+
+    /// All values of a repeated field.
+    pub fn get_all<'a>(&'a self, name: &'a str) -> impl Iterator<Item = &'a PValue> {
+        self.fields
+            .iter()
+            .filter(move |(n, _)| n == name)
+            .map(|(_, v)| v)
+    }
+
+    pub fn get_str(&self, name: &str) -> Option<&str> {
+        match self.get(name) {
+            Some(PValue::Str(s)) => Some(s),
+            Some(PValue::Ident(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_num(&self, name: &str) -> Option<f64> {
+        match self.get(name) {
+            Some(PValue::Num(n)) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn get_u(&self, name: &str) -> Option<usize> {
+        self.get_num(name).map(|n| n as usize)
+    }
+
+    pub fn get_bool(&self, name: &str) -> Option<bool> {
+        match self.get(name) {
+            Some(PValue::Ident(s)) => match s.as_str() {
+                "true" => Some(true),
+                "false" => Some(false),
+                _ => None,
+            },
+            _ => None,
+        }
+    }
+
+    pub fn get_msg(&self, name: &str) -> Option<&PMessage> {
+        match self.get(name) {
+            Some(PValue::Msg(m)) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn strs(&self, name: &str) -> Vec<String> {
+        self.get_all(name)
+            .filter_map(|v| match v {
+                PValue::Str(s) | PValue::Ident(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    pub fn nums(&self, name: &str) -> Vec<f64> {
+        self.get_all(name)
+            .filter_map(|v| match v {
+                PValue::Num(n) => Some(*n),
+                _ => None,
+            })
+            .collect()
+    }
+
+    pub fn msgs<'a>(&'a self, name: &'a str) -> impl Iterator<Item = &'a PMessage> {
+        self.get_all(name).filter_map(|v| match v {
+            PValue::Msg(m) => Some(m),
+            _ => None,
+        })
+    }
+
+    pub fn push(&mut self, name: &str, value: PValue) -> &mut Self {
+        self.fields.push((name.to_string(), value));
+        self
+    }
+}
+
+/// Parse a token stream into a message (the whole file is one message body).
+pub fn parse(tokens: &[Token]) -> Result<PMessage, String> {
+    let mut pos = 0;
+    let msg = parse_body(tokens, &mut pos, true)?;
+    if pos != tokens.len() {
+        return Err(format!(
+            "line {}: unexpected trailing tokens",
+            tokens[pos].line
+        ));
+    }
+    Ok(msg)
+}
+
+fn parse_body(tokens: &[Token], pos: &mut usize, top: bool) -> Result<PMessage, String> {
+    let mut msg = PMessage::default();
+    loop {
+        match tokens.get(*pos) {
+            None => {
+                if top {
+                    return Ok(msg);
+                }
+                return Err("unexpected end of input (unclosed '{')".into());
+            }
+            Some(Token { tok: Tok::RBrace, line }) => {
+                if top {
+                    return Err(format!("line {line}: unmatched '}}'"));
+                }
+                *pos += 1;
+                return Ok(msg);
+            }
+            Some(Token { tok: Tok::Ident(name), line }) => {
+                let name = name.clone();
+                let line = *line;
+                *pos += 1;
+                match tokens.get(*pos) {
+                    Some(Token { tok: Tok::Colon, .. }) => {
+                        *pos += 1;
+                        let val = match tokens.get(*pos) {
+                            Some(Token { tok: Tok::Str(s), .. }) => PValue::Str(s.clone()),
+                            Some(Token { tok: Tok::Num(n), .. }) => PValue::Num(*n),
+                            Some(Token { tok: Tok::Ident(s), .. }) => PValue::Ident(s.clone()),
+                            Some(Token { tok: Tok::LBrace, .. }) => {
+                                // `field: { ... }` is also legal text format.
+                                *pos += 1;
+                                let inner = parse_body(tokens, pos, false)?;
+                                msg.push(&name, PValue::Msg(inner));
+                                continue;
+                            }
+                            other => {
+                                return Err(format!(
+                                    "line {line}: expected value after '{name}:', found {other:?}"
+                                ))
+                            }
+                        };
+                        *pos += 1;
+                        msg.push(&name, val);
+                    }
+                    Some(Token { tok: Tok::LBrace, .. }) => {
+                        *pos += 1;
+                        let inner = parse_body(tokens, pos, false)?;
+                        msg.push(&name, PValue::Msg(inner));
+                    }
+                    other => {
+                        return Err(format!(
+                            "line {line}: expected ':' or '{{' after '{name}', found {other:?}"
+                        ))
+                    }
+                }
+            }
+            Some(Token { tok, line }) => {
+                return Err(format!("line {line}: unexpected token {tok:?}"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn parse_str(s: &str) -> PMessage {
+        parse(&lex(s).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn scalar_fields() {
+        let m = parse_str("name: \"LeNet\" base_lr: 0.01 solver_mode: GPU debug: true");
+        assert_eq!(m.get_str("name"), Some("LeNet"));
+        assert_eq!(m.get_num("base_lr"), Some(0.01));
+        assert_eq!(m.get_str("solver_mode"), Some("GPU"));
+        assert_eq!(m.get_bool("debug"), Some(true));
+    }
+
+    #[test]
+    fn repeated_and_nested() {
+        let m = parse_str(
+            "layer { name: \"a\" top: \"a\" }\nlayer { name: \"b\" bottom: \"a\" bottom: \"a2\" }",
+        );
+        let layers: Vec<&PMessage> = m.msgs("layer").collect();
+        assert_eq!(layers.len(), 2);
+        assert_eq!(layers[1].strs("bottom"), vec!["a", "a2"]);
+    }
+
+    #[test]
+    fn colon_brace_form() {
+        let m = parse_str("param: { lr_mult: 2 }");
+        assert_eq!(m.get_msg("param").unwrap().get_num("lr_mult"), Some(2.0));
+    }
+
+    #[test]
+    fn deep_nesting() {
+        let m = parse_str("a { b { c { d: 4 } } }");
+        let d = m
+            .get_msg("a")
+            .and_then(|x| x.get_msg("b"))
+            .and_then(|x| x.get_msg("c"))
+            .and_then(|x| x.get_num("d"));
+        assert_eq!(d, Some(4.0));
+    }
+
+    #[test]
+    fn errors_on_malformed() {
+        assert!(parse(&lex("a: ").unwrap()).is_err());
+        assert!(parse(&lex("}").unwrap()).is_err());
+        assert!(parse(&lex("a {").unwrap()).is_err());
+    }
+}

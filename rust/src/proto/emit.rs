@@ -1,0 +1,265 @@
+//! Prototxt emitter: NetParameter/SolverParameter → text.
+//!
+//! The model zoo builds networks programmatically; this emitter turns them
+//! back into standard prototxt so (a) users can inspect/edit them, and
+//! (b) the parser is tested by the emit→parse→emit fixpoint property.
+
+use super::schema::*;
+use std::fmt::Write as _;
+
+fn filler(out: &mut String, ind: &str, field: &str, f: &FillerParameter) {
+    let _ = writeln!(out, "{ind}{field} {{");
+    let _ = writeln!(out, "{ind}  type: \"{}\"", f.kind);
+    match f.kind.as_str() {
+        "constant" => {
+            if f.value != 0.0 {
+                let _ = writeln!(out, "{ind}  value: {}", f.value);
+            }
+        }
+        "gaussian" => {
+            let _ = writeln!(out, "{ind}  std: {}", f.std);
+            if f.mean != 0.0 {
+                let _ = writeln!(out, "{ind}  mean: {}", f.mean);
+            }
+        }
+        "uniform" => {
+            let _ = writeln!(out, "{ind}  min: {}", f.min);
+            let _ = writeln!(out, "{ind}  max: {}", f.max);
+        }
+        _ => {}
+    }
+    let _ = writeln!(out, "{ind}}}");
+}
+
+pub fn emit_layer(l: &LayerParameter) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "layer {{");
+    let _ = writeln!(out, "  name: \"{}\"", l.name);
+    let _ = writeln!(out, "  type: \"{}\"", l.kind);
+    for b in &l.bottoms {
+        let _ = writeln!(out, "  bottom: \"{b}\"");
+    }
+    for t in &l.tops {
+        let _ = writeln!(out, "  top: \"{t}\"");
+    }
+    if let Some(ph) = l.phase {
+        let _ = writeln!(out, "  include {{ phase: {} }}", ph.ident());
+    }
+    for lw in &l.loss_weight {
+        let _ = writeln!(out, "  loss_weight: {lw}");
+    }
+    for p in &l.params {
+        let _ = writeln!(
+            out,
+            "  param {{ lr_mult: {} decay_mult: {} }}",
+            p.lr_mult, p.decay_mult
+        );
+    }
+    if let Some(c) = &l.conv {
+        let _ = writeln!(out, "  convolution_param {{");
+        let _ = writeln!(out, "    num_output: {}", c.num_output);
+        if c.kernel_h == c.kernel_w {
+            let _ = writeln!(out, "    kernel_size: {}", c.kernel_h);
+        } else {
+            let _ = writeln!(out, "    kernel_h: {}", c.kernel_h);
+            let _ = writeln!(out, "    kernel_w: {}", c.kernel_w);
+        }
+        if (c.stride_h, c.stride_w) != (1, 1) {
+            if c.stride_h == c.stride_w {
+                let _ = writeln!(out, "    stride: {}", c.stride_h);
+            } else {
+                let _ = writeln!(out, "    stride_h: {}", c.stride_h);
+                let _ = writeln!(out, "    stride_w: {}", c.stride_w);
+            }
+        }
+        if (c.pad_h, c.pad_w) != (0, 0) {
+            if c.pad_h == c.pad_w {
+                let _ = writeln!(out, "    pad: {}", c.pad_h);
+            } else {
+                let _ = writeln!(out, "    pad_h: {}", c.pad_h);
+                let _ = writeln!(out, "    pad_w: {}", c.pad_w);
+            }
+        }
+        if c.group != 1 {
+            let _ = writeln!(out, "    group: {}", c.group);
+        }
+        if !c.bias_term {
+            let _ = writeln!(out, "    bias_term: false");
+        }
+        filler(&mut out, "    ", "weight_filler", &c.weight_filler);
+        filler(&mut out, "    ", "bias_filler", &c.bias_filler);
+        let _ = writeln!(out, "  }}");
+    }
+    if let Some(p) = &l.pool {
+        let method = match p.method {
+            PoolMethod::Max => "MAX",
+            PoolMethod::Ave => "AVE",
+        };
+        let _ = writeln!(out, "  pooling_param {{");
+        let _ = writeln!(out, "    pool: {method}");
+        if p.global_pooling {
+            let _ = writeln!(out, "    global_pooling: true");
+        } else {
+            let _ = writeln!(out, "    kernel_size: {}", p.kernel_h);
+            let _ = writeln!(out, "    stride: {}", p.stride_h);
+            if p.pad_h != 0 {
+                let _ = writeln!(out, "    pad: {}", p.pad_h);
+            }
+        }
+        let _ = writeln!(out, "  }}");
+    }
+    if let Some(ip) = &l.inner_product {
+        let _ = writeln!(out, "  inner_product_param {{");
+        let _ = writeln!(out, "    num_output: {}", ip.num_output);
+        if !ip.bias_term {
+            let _ = writeln!(out, "    bias_term: false");
+        }
+        filler(&mut out, "    ", "weight_filler", &ip.weight_filler);
+        filler(&mut out, "    ", "bias_filler", &ip.bias_filler);
+        let _ = writeln!(out, "  }}");
+    }
+    if let Some(p) = &l.lrn {
+        let _ = writeln!(
+            out,
+            "  lrn_param {{ local_size: {} alpha: {} beta: {} k: {} }}",
+            p.local_size, p.alpha, p.beta, p.k
+        );
+    }
+    if let Some(d) = &l.dropout {
+        let _ = writeln!(out, "  dropout_param {{ dropout_ratio: {} }}", d.dropout_ratio);
+    }
+    if let Some(c) = &l.concat {
+        let _ = writeln!(out, "  concat_param {{ axis: {} }}", c.axis);
+    }
+    if let Some(d) = &l.data {
+        let _ = writeln!(out, "  data_param {{");
+        let _ = writeln!(out, "    batch_size: {}", d.batch_size);
+        let _ = writeln!(out, "    channels: {}", d.channels);
+        let _ = writeln!(out, "    height: {}", d.height);
+        let _ = writeln!(out, "    width: {}", d.width);
+        let _ = writeln!(out, "    num_classes: {}", d.num_classes);
+        let _ = writeln!(out, "    source: \"{}\"", d.source);
+        let _ = writeln!(out, "    seed: {}", d.seed);
+        let _ = writeln!(out, "  }}");
+    }
+    if let Some(a) = &l.accuracy {
+        if a.top_k != 1 {
+            let _ = writeln!(out, "  accuracy_param {{ top_k: {} }}", a.top_k);
+        }
+    }
+    let _ = writeln!(out, "}}");
+    out
+}
+
+pub fn emit_net(net: &NetParameter) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "name: \"{}\"", net.name);
+    for (name, shape) in &net.inputs {
+        let _ = writeln!(out, "input: \"{name}\"");
+        let _ = writeln!(
+            out,
+            "input_shape {{ dim: {} dim: {} dim: {} dim: {} }}",
+            shape[0], shape[1], shape[2], shape[3]
+        );
+    }
+    for l in &net.layers {
+        out.push_str(&emit_layer(l));
+    }
+    out
+}
+
+pub fn emit_solver(s: &SolverParameter) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "net: \"{}\"", s.net);
+    let _ = writeln!(out, "type: \"{}\"", s.kind.ident());
+    let _ = writeln!(out, "base_lr: {}", s.base_lr);
+    let _ = writeln!(out, "lr_policy: \"{}\"", s.lr_policy);
+    let _ = writeln!(out, "gamma: {}", s.gamma);
+    let _ = writeln!(out, "power: {}", s.power);
+    let _ = writeln!(out, "stepsize: {}", s.stepsize);
+    let _ = writeln!(out, "momentum: {}", s.momentum);
+    let _ = writeln!(out, "momentum2: {}", s.momentum2);
+    let _ = writeln!(out, "rms_decay: {}", s.rms_decay);
+    let _ = writeln!(out, "delta: {}", s.delta);
+    let _ = writeln!(out, "weight_decay: {}", s.weight_decay);
+    let _ = writeln!(out, "regularization_type: \"{}\"", s.regularization_type);
+    let _ = writeln!(out, "max_iter: {}", s.max_iter);
+    let _ = writeln!(out, "iter_size: {}", s.iter_size);
+    let _ = writeln!(out, "display: {}", s.display);
+    let _ = writeln!(out, "snapshot: {}", s.snapshot);
+    let _ = writeln!(out, "snapshot_prefix: \"{}\"", s.snapshot_prefix);
+    let _ = writeln!(out, "test_iter: {}", s.test_iter);
+    let _ = writeln!(out, "test_interval: {}", s.test_interval);
+    let _ = writeln!(out, "random_seed: {}", s.random_seed);
+    let _ = writeln!(out, "clip_gradients: {}", s.clip_gradients);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{parse_net, parse_solver};
+    use super::*;
+
+    #[test]
+    fn solver_roundtrip() {
+        let mut s = SolverParameter::default();
+        s.net = "lenet".into();
+        s.kind = SolverKind::RmsProp;
+        s.base_lr = 0.003;
+        s.lr_policy = "inv".into();
+        s.rms_decay = 0.97;
+        let text = emit_solver(&s);
+        let back = parse_solver(&text).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn layer_roundtrip_conv() {
+        let mut l = LayerParameter::new("conv1", "Convolution");
+        l.bottoms = vec!["data".into()];
+        l.tops = vec!["conv1".into()];
+        l.params = vec![
+            ParamSpec { lr_mult: 1.0, decay_mult: 1.0 },
+            ParamSpec { lr_mult: 2.0, decay_mult: 0.0 },
+        ];
+        let mut c = ConvolutionParameter::default();
+        c.num_output = 96;
+        c.kernel_h = 11;
+        c.kernel_w = 11;
+        c.stride_h = 4;
+        c.stride_w = 4;
+        c.weight_filler.kind = "gaussian".into();
+        c.weight_filler.std = 0.01;
+        l.conv = Some(c);
+        let mut net = NetParameter::default();
+        net.name = "t".into();
+        net.layers.push(l);
+        let text = emit_net(&net);
+        let back = parse_net(&text).unwrap();
+        assert_eq!(net, back);
+    }
+
+    #[test]
+    fn net_emit_parse_emit_fixpoint() {
+        let mut net = NetParameter::default();
+        net.name = "fix".into();
+        net.inputs.push(("data".into(), [1, 3, 32, 32]));
+        let mut pool = LayerParameter::new("p", "Pooling");
+        pool.bottoms = vec!["data".into()];
+        pool.tops = vec!["p".into()];
+        pool.pool = Some(PoolingParameter {
+            method: PoolMethod::Ave,
+            kernel_h: 2,
+            kernel_w: 2,
+            stride_h: 2,
+            stride_w: 2,
+            pad_h: 0,
+            pad_w: 0,
+            global_pooling: false,
+        });
+        net.layers.push(pool);
+        let t1 = emit_net(&net);
+        let t2 = emit_net(&parse_net(&t1).unwrap());
+        assert_eq!(t1, t2);
+    }
+}

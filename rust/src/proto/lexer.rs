@@ -1,0 +1,159 @@
+//! Tokenizer for the protobuf text format subset Caffe uses.
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Str(String),
+    Num(f64),
+    LBrace,
+    RBrace,
+    Colon,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: usize,
+}
+
+pub fn lex(text: &str) -> Result<Vec<Token>, String> {
+    let mut out = Vec::new();
+    let b: Vec<char> = text.chars().collect();
+    let mut i = 0;
+    let mut line = 1;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            ' ' | '\t' | '\r' | ',' => i += 1,
+            '#' => {
+                while i < b.len() && b[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '{' => {
+                out.push(Token { tok: Tok::LBrace, line });
+                i += 1;
+            }
+            '}' => {
+                out.push(Token { tok: Tok::RBrace, line });
+                i += 1;
+            }
+            ':' => {
+                out.push(Token { tok: Tok::Colon, line });
+                i += 1;
+            }
+            '"' | '\'' => {
+                let quote = c;
+                i += 1;
+                let mut s = String::new();
+                while i < b.len() && b[i] != quote {
+                    if b[i] == '\\' && i + 1 < b.len() {
+                        i += 1;
+                        s.push(match b[i] {
+                            'n' => '\n',
+                            't' => '\t',
+                            other => other,
+                        });
+                    } else {
+                        if b[i] == '\n' {
+                            return Err(format!("line {line}: newline in string"));
+                        }
+                        s.push(b[i]);
+                    }
+                    i += 1;
+                }
+                if i >= b.len() {
+                    return Err(format!("line {line}: unterminated string"));
+                }
+                i += 1; // closing quote
+                out.push(Token { tok: Tok::Str(s), line });
+            }
+            c if c.is_ascii_digit() || c == '-' || c == '+' || c == '.' => {
+                let start = i;
+                i += 1;
+                while i < b.len()
+                    && (b[i].is_ascii_digit()
+                        || b[i] == '.'
+                        || b[i] == 'e'
+                        || b[i] == 'E'
+                        || b[i] == '-'
+                        || b[i] == '+')
+                {
+                    // Only allow -/+ right after an exponent marker.
+                    if (b[i] == '-' || b[i] == '+') && !(b[i - 1] == 'e' || b[i - 1] == 'E') {
+                        break;
+                    }
+                    i += 1;
+                }
+                let s: String = b[start..i].iter().collect();
+                let n = s
+                    .parse::<f64>()
+                    .map_err(|_| format!("line {line}: bad number '{s}'"))?;
+                out.push(Token { tok: Tok::Num(n), line });
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                let s: String = b[start..i].iter().collect();
+                out.push(Token { tok: Tok::Ident(s), line });
+            }
+            other => return Err(format!("line {line}: unexpected character '{other}'")),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_typical_prototxt() {
+        let toks = lex("layer {\n  name: \"conv1\" # comment\n  lr_mult: 1.5\n}").unwrap();
+        let kinds: Vec<&Tok> = toks.iter().map(|t| &t.tok).collect();
+        assert_eq!(kinds[0], &Tok::Ident("layer".into()));
+        assert_eq!(kinds[1], &Tok::LBrace);
+        assert_eq!(kinds[4], &Tok::Str("conv1".into()));
+        assert!(matches!(kinds[7], Tok::Num(n) if *n == 1.5));
+        assert_eq!(*kinds.last().unwrap(), &Tok::RBrace);
+    }
+
+    #[test]
+    fn tracks_line_numbers() {
+        let toks = lex("a: 1\nb: 2\n\nc: 3").unwrap();
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[3].line, 2);
+        assert_eq!(toks[6].line, 4);
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers() {
+        let toks = lex("x: -0.5 y: 1e-3 z: 2.5E+2").unwrap();
+        let nums: Vec<f64> = toks
+            .iter()
+            .filter_map(|t| match t.tok {
+                Tok::Num(n) => Some(n),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(nums, vec![-0.5, 1e-3, 250.0]);
+    }
+
+    #[test]
+    fn string_escapes() {
+        let toks = lex(r#"s: "a\nb\"c""#).unwrap();
+        assert!(matches!(&toks[2].tok, Tok::Str(s) if s == "a\nb\"c"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(lex("s: \"unterminated").is_err());
+        assert!(lex("@").is_err());
+    }
+}

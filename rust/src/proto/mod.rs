@@ -1,0 +1,32 @@
+//! Caffe prototxt support: a protobuf *text format* subset parser,
+//! a generic message tree, typed schema extraction, and an emitter.
+//!
+//! FeCaffe's "ease of use" claim (paper Table 4) is that users keep the
+//! conventional Caffe workflow — prototxt + solver files + snapshots —
+//! unchanged while kernels run on the FPGA. This module makes that real:
+//! the model zoo, the CLI (`fecaffe train --solver ...`) and the tests all
+//! speak standard prototxt.
+
+pub mod lexer;
+pub mod ast;
+pub mod schema;
+pub mod emit;
+
+pub use ast::{PMessage, PValue};
+pub use schema::*;
+
+/// Parse prototxt text into a generic message tree.
+pub fn parse_text(text: &str) -> Result<PMessage, String> {
+    let tokens = lexer::lex(text)?;
+    ast::parse(&tokens)
+}
+
+/// Parse a full NetParameter from prototxt text.
+pub fn parse_net(text: &str) -> Result<NetParameter, String> {
+    NetParameter::from_message(&parse_text(text)?)
+}
+
+/// Parse a SolverParameter from prototxt text.
+pub fn parse_solver(text: &str) -> Result<SolverParameter, String> {
+    SolverParameter::from_message(&parse_text(text)?)
+}

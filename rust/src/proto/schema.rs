@@ -1,0 +1,768 @@
+//! Typed Caffe parameter messages extracted from the generic tree.
+//!
+//! Covers the subset of `caffe.proto` that LeNet, AlexNet, VGG-16,
+//! SqueezeNet v1.0 and GoogLeNet v1 (train_val + deploy) plus the paper's
+//! solver configurations actually use.
+
+use super::ast::PMessage;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Train,
+    Test,
+}
+
+impl Phase {
+    pub fn from_ident(s: &str) -> Result<Phase, String> {
+        match s {
+            "TRAIN" => Ok(Phase::Train),
+            "TEST" => Ok(Phase::Test),
+            other => Err(format!("unknown phase '{other}'")),
+        }
+    }
+    pub fn ident(&self) -> &'static str {
+        match self {
+            Phase::Train => "TRAIN",
+            Phase::Test => "TEST",
+        }
+    }
+}
+
+/// Weight/bias filler (`weight_filler { type: "xavier" }`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FillerParameter {
+    pub kind: String, // "constant" | "xavier" | "gaussian" | "uniform"
+    pub value: f32,   // for constant
+    pub std: f32,     // for gaussian
+    pub mean: f32,
+    pub min: f32,
+    pub max: f32,
+}
+
+impl Default for FillerParameter {
+    fn default() -> Self {
+        FillerParameter {
+            kind: "constant".into(),
+            value: 0.0,
+            std: 0.01,
+            mean: 0.0,
+            min: 0.0,
+            max: 1.0,
+        }
+    }
+}
+
+impl FillerParameter {
+    pub fn from_message(m: &PMessage) -> FillerParameter {
+        let mut f = FillerParameter::default();
+        if let Some(t) = m.get_str("type") {
+            f.kind = t.to_string();
+        }
+        if let Some(v) = m.get_num("value") {
+            f.value = v as f32;
+        }
+        if let Some(v) = m.get_num("std") {
+            f.std = v as f32;
+        }
+        if let Some(v) = m.get_num("mean") {
+            f.mean = v as f32;
+        }
+        if let Some(v) = m.get_num("min") {
+            f.min = v as f32;
+        }
+        if let Some(v) = m.get_num("max") {
+            f.max = v as f32;
+        }
+        f
+    }
+}
+
+/// Per-learnable-param multipliers (`param { lr_mult: 1 decay_mult: 1 }`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParamSpec {
+    pub lr_mult: f32,
+    pub decay_mult: f32,
+}
+
+impl Default for ParamSpec {
+    fn default() -> Self {
+        ParamSpec { lr_mult: 1.0, decay_mult: 1.0 }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvolutionParameter {
+    pub num_output: usize,
+    pub kernel_h: usize,
+    pub kernel_w: usize,
+    pub stride_h: usize,
+    pub stride_w: usize,
+    pub pad_h: usize,
+    pub pad_w: usize,
+    pub group: usize,
+    pub bias_term: bool,
+    pub weight_filler: FillerParameter,
+    pub bias_filler: FillerParameter,
+}
+
+impl Default for ConvolutionParameter {
+    fn default() -> Self {
+        ConvolutionParameter {
+            num_output: 0,
+            kernel_h: 1,
+            kernel_w: 1,
+            stride_h: 1,
+            stride_w: 1,
+            pad_h: 0,
+            pad_w: 0,
+            group: 1,
+            bias_term: true,
+            weight_filler: FillerParameter::default(),
+            bias_filler: FillerParameter::default(),
+        }
+    }
+}
+
+impl ConvolutionParameter {
+    pub fn from_message(m: &PMessage) -> Result<ConvolutionParameter, String> {
+        let mut p = ConvolutionParameter::default();
+        p.num_output = m
+            .get_u("num_output")
+            .ok_or("convolution_param: missing num_output")?;
+        if let Some(k) = m.get_u("kernel_size") {
+            p.kernel_h = k;
+            p.kernel_w = k;
+        }
+        if let Some(k) = m.get_u("kernel_h") {
+            p.kernel_h = k;
+        }
+        if let Some(k) = m.get_u("kernel_w") {
+            p.kernel_w = k;
+        }
+        if let Some(s) = m.get_u("stride") {
+            p.stride_h = s;
+            p.stride_w = s;
+        }
+        if let Some(s) = m.get_u("stride_h") {
+            p.stride_h = s;
+        }
+        if let Some(s) = m.get_u("stride_w") {
+            p.stride_w = s;
+        }
+        if let Some(v) = m.get_u("pad") {
+            p.pad_h = v;
+            p.pad_w = v;
+        }
+        if let Some(v) = m.get_u("pad_h") {
+            p.pad_h = v;
+        }
+        if let Some(v) = m.get_u("pad_w") {
+            p.pad_w = v;
+        }
+        if let Some(g) = m.get_u("group") {
+            p.group = g;
+        }
+        if let Some(b) = m.get_bool("bias_term") {
+            p.bias_term = b;
+        }
+        if let Some(f) = m.get_msg("weight_filler") {
+            p.weight_filler = FillerParameter::from_message(f);
+        }
+        if let Some(f) = m.get_msg("bias_filler") {
+            p.bias_filler = FillerParameter::from_message(f);
+        }
+        if p.kernel_h == 0 || p.kernel_w == 0 {
+            return Err("convolution_param: kernel size is zero".into());
+        }
+        Ok(p)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolMethod {
+    Max,
+    Ave,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolingParameter {
+    pub method: PoolMethod,
+    pub kernel_h: usize,
+    pub kernel_w: usize,
+    pub stride_h: usize,
+    pub stride_w: usize,
+    pub pad_h: usize,
+    pub pad_w: usize,
+    pub global_pooling: bool,
+}
+
+impl Default for PoolingParameter {
+    fn default() -> Self {
+        PoolingParameter {
+            method: PoolMethod::Max,
+            kernel_h: 1,
+            kernel_w: 1,
+            stride_h: 1,
+            stride_w: 1,
+            pad_h: 0,
+            pad_w: 0,
+            global_pooling: false,
+        }
+    }
+}
+
+impl PoolingParameter {
+    pub fn from_message(m: &PMessage) -> Result<PoolingParameter, String> {
+        let mut p = PoolingParameter::default();
+        match m.get_str("pool") {
+            Some("MAX") | None => p.method = PoolMethod::Max,
+            Some("AVE") => p.method = PoolMethod::Ave,
+            Some(other) => return Err(format!("pooling_param: unsupported pool {other}")),
+        }
+        if let Some(k) = m.get_u("kernel_size") {
+            p.kernel_h = k;
+            p.kernel_w = k;
+        }
+        if let Some(s) = m.get_u("stride") {
+            p.stride_h = s;
+            p.stride_w = s;
+        }
+        if let Some(v) = m.get_u("pad") {
+            p.pad_h = v;
+            p.pad_w = v;
+        }
+        if let Some(b) = m.get_bool("global_pooling") {
+            p.global_pooling = b;
+        }
+        Ok(p)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct InnerProductParameter {
+    pub num_output: usize,
+    pub bias_term: bool,
+    pub weight_filler: FillerParameter,
+    pub bias_filler: FillerParameter,
+}
+
+impl InnerProductParameter {
+    pub fn from_message(m: &PMessage) -> Result<InnerProductParameter, String> {
+        Ok(InnerProductParameter {
+            num_output: m
+                .get_u("num_output")
+                .ok_or("inner_product_param: missing num_output")?,
+            bias_term: m.get_bool("bias_term").unwrap_or(true),
+            weight_filler: m
+                .get_msg("weight_filler")
+                .map(FillerParameter::from_message)
+                .unwrap_or_default(),
+            bias_filler: m
+                .get_msg("bias_filler")
+                .map(FillerParameter::from_message)
+                .unwrap_or_default(),
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LrnParameter {
+    pub local_size: usize,
+    pub alpha: f32,
+    pub beta: f32,
+    pub k: f32,
+}
+
+impl Default for LrnParameter {
+    fn default() -> Self {
+        LrnParameter { local_size: 5, alpha: 1.0, beta: 0.75, k: 1.0 }
+    }
+}
+
+impl LrnParameter {
+    pub fn from_message(m: &PMessage) -> LrnParameter {
+        let mut p = LrnParameter::default();
+        if let Some(v) = m.get_u("local_size") {
+            p.local_size = v;
+        }
+        if let Some(v) = m.get_num("alpha") {
+            p.alpha = v as f32;
+        }
+        if let Some(v) = m.get_num("beta") {
+            p.beta = v as f32;
+        }
+        if let Some(v) = m.get_num("k") {
+            p.k = v as f32;
+        }
+        p
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DropoutParameter {
+    pub dropout_ratio: f32,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConcatParameter {
+    pub axis: usize,
+}
+
+/// Synthetic data layer parameters (stands in for Caffe's DataParameter;
+/// see DESIGN.md substitution table — no LMDB/ImageNet offline).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyntheticDataParameter {
+    pub batch_size: usize,
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+    pub num_classes: usize,
+    /// "digits" (procedural MNIST-like) or "imagenet" (label-conditioned
+    /// Gaussian blobs at ImageNet shapes).
+    pub source: String,
+    pub seed: u64,
+}
+
+impl SyntheticDataParameter {
+    pub fn from_message(m: &PMessage) -> Result<SyntheticDataParameter, String> {
+        Ok(SyntheticDataParameter {
+            batch_size: m.get_u("batch_size").ok_or("data_param: missing batch_size")?,
+            channels: m.get_u("channels").unwrap_or(3),
+            height: m.get_u("height").unwrap_or(224),
+            width: m.get_u("width").unwrap_or(224),
+            num_classes: m.get_u("num_classes").unwrap_or(1000),
+            source: m.get_str("source").unwrap_or("imagenet").to_string(),
+            seed: m.get_num("seed").unwrap_or(1.0) as u64,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccuracyParameter {
+    pub top_k: usize,
+}
+
+/// One layer definition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerParameter {
+    pub name: String,
+    pub kind: String, // Caffe `type`: "Convolution", "ReLU", ...
+    pub bottoms: Vec<String>,
+    pub tops: Vec<String>,
+    pub phase: Option<Phase>, // from include { phase: ... }
+    pub params: Vec<ParamSpec>,
+    pub loss_weight: Vec<f32>,
+    pub conv: Option<ConvolutionParameter>,
+    pub pool: Option<PoolingParameter>,
+    pub inner_product: Option<InnerProductParameter>,
+    pub lrn: Option<LrnParameter>,
+    pub dropout: Option<DropoutParameter>,
+    pub concat: Option<ConcatParameter>,
+    pub data: Option<SyntheticDataParameter>,
+    pub accuracy: Option<AccuracyParameter>,
+}
+
+impl LayerParameter {
+    pub fn new(name: &str, kind: &str) -> LayerParameter {
+        LayerParameter {
+            name: name.to_string(),
+            kind: kind.to_string(),
+            bottoms: Vec::new(),
+            tops: Vec::new(),
+            phase: None,
+            params: Vec::new(),
+            loss_weight: Vec::new(),
+            conv: None,
+            pool: None,
+            inner_product: None,
+            lrn: None,
+            dropout: None,
+            concat: None,
+            data: None,
+            accuracy: None,
+        }
+    }
+
+    pub fn from_message(m: &PMessage) -> Result<LayerParameter, String> {
+        let name = m
+            .get_str("name")
+            .ok_or("layer: missing name")?
+            .to_string();
+        let kind = m
+            .get_str("type")
+            .ok_or_else(|| format!("layer {name}: missing type"))?
+            .to_string();
+        let mut l = LayerParameter::new(&name, &kind);
+        l.bottoms = m.strs("bottom");
+        l.tops = m.strs("top");
+        for inc in m.msgs("include") {
+            if let Some(ph) = inc.get_str("phase") {
+                l.phase = Some(Phase::from_ident(ph)?);
+            }
+        }
+        for pm in m.msgs("param") {
+            l.params.push(ParamSpec {
+                lr_mult: pm.get_num("lr_mult").unwrap_or(1.0) as f32,
+                decay_mult: pm.get_num("decay_mult").unwrap_or(1.0) as f32,
+            });
+        }
+        l.loss_weight = m.nums("loss_weight").iter().map(|&v| v as f32).collect();
+        if let Some(cm) = m.get_msg("convolution_param") {
+            l.conv = Some(ConvolutionParameter::from_message(cm)?);
+        }
+        if let Some(pm) = m.get_msg("pooling_param") {
+            l.pool = Some(PoolingParameter::from_message(pm)?);
+        }
+        if let Some(im) = m.get_msg("inner_product_param") {
+            l.inner_product = Some(InnerProductParameter::from_message(im)?);
+        }
+        if let Some(lm) = m.get_msg("lrn_param") {
+            l.lrn = Some(LrnParameter::from_message(lm));
+        }
+        if let Some(dm) = m.get_msg("dropout_param") {
+            l.dropout = Some(DropoutParameter {
+                dropout_ratio: dm.get_num("dropout_ratio").unwrap_or(0.5) as f32,
+            });
+        }
+        if let Some(cm) = m.get_msg("concat_param") {
+            l.concat = Some(ConcatParameter { axis: cm.get_u("axis").unwrap_or(1) });
+        }
+        if let Some(dm) = m.get_msg("data_param") {
+            l.data = Some(SyntheticDataParameter::from_message(dm)?);
+        }
+        if let Some(am) = m.get_msg("accuracy_param") {
+            l.accuracy = Some(AccuracyParameter { top_k: am.get_u("top_k").unwrap_or(1) });
+        }
+        Ok(l)
+    }
+}
+
+/// Whole-network definition.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct NetParameter {
+    pub name: String,
+    pub layers: Vec<LayerParameter>,
+    /// Deploy-style explicit inputs: (blob name, NCHW shape).
+    pub inputs: Vec<(String, [usize; 4])>,
+}
+
+impl NetParameter {
+    pub fn from_message(m: &PMessage) -> Result<NetParameter, String> {
+        let mut net = NetParameter {
+            name: m.get_str("name").unwrap_or("net").to_string(),
+            ..Default::default()
+        };
+        // deploy format: input: "data" input_shape { dim: 1 dim: 3 ... }
+        let input_names = m.strs("input");
+        let shapes: Vec<[usize; 4]> = m
+            .msgs("input_shape")
+            .map(|sm| {
+                let dims = sm.nums("dim");
+                let mut s = [1usize; 4];
+                for (i, d) in dims.iter().take(4).enumerate() {
+                    s[i] = *d as usize;
+                }
+                s
+            })
+            .collect();
+        for (i, n) in input_names.iter().enumerate() {
+            let shape = shapes.get(i).copied().unwrap_or([1, 1, 1, 1]);
+            net.inputs.push((n.clone(), shape));
+        }
+        for lm in m.msgs("layer") {
+            net.layers.push(LayerParameter::from_message(lm)?);
+        }
+        Ok(net)
+    }
+
+    /// Layers visible in `phase` (layers without an include clause are in
+    /// every phase).
+    pub fn layers_for_phase(&self, phase: Phase) -> Vec<&LayerParameter> {
+        self.layers
+            .iter()
+            .filter(|l| l.phase.map_or(true, |p| p == phase))
+            .collect()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverKind {
+    Sgd,
+    Nesterov,
+    AdaGrad,
+    RmsProp,
+    AdaDelta,
+    Adam,
+}
+
+impl SolverKind {
+    pub fn from_ident(s: &str) -> Result<SolverKind, String> {
+        match s.to_ascii_uppercase().as_str() {
+            "SGD" => Ok(SolverKind::Sgd),
+            "NESTEROV" => Ok(SolverKind::Nesterov),
+            "ADAGRAD" => Ok(SolverKind::AdaGrad),
+            "RMSPROP" => Ok(SolverKind::RmsProp),
+            "ADADELTA" => Ok(SolverKind::AdaDelta),
+            "ADAM" => Ok(SolverKind::Adam),
+            other => Err(format!("unknown solver type '{other}'")),
+        }
+    }
+    pub fn ident(&self) -> &'static str {
+        match self {
+            SolverKind::Sgd => "SGD",
+            SolverKind::Nesterov => "Nesterov",
+            SolverKind::AdaGrad => "AdaGrad",
+            SolverKind::RmsProp => "RMSProp",
+            SolverKind::AdaDelta => "AdaDelta",
+            SolverKind::Adam => "Adam",
+        }
+    }
+}
+
+/// Solver configuration (`lenet_solver.prototxt` style).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolverParameter {
+    pub net: String, // path or zoo name
+    pub kind: SolverKind,
+    pub base_lr: f32,
+    pub lr_policy: String, // fixed | step | exp | inv | poly | sigmoid
+    pub gamma: f32,
+    pub power: f32,
+    pub stepsize: usize,
+    pub momentum: f32,
+    pub momentum2: f32, // adam beta2
+    pub rms_decay: f32,
+    pub delta: f32, // numerical stability for adagrad/adadelta/adam/rmsprop
+    pub weight_decay: f32,
+    pub regularization_type: String, // L2 | L1
+    pub max_iter: usize,
+    pub iter_size: usize,
+    pub display: usize,
+    pub snapshot: usize,
+    pub snapshot_prefix: String,
+    pub test_iter: usize,
+    pub test_interval: usize,
+    pub random_seed: u64,
+    pub clip_gradients: f32, // <=0 disables
+}
+
+impl Default for SolverParameter {
+    fn default() -> Self {
+        SolverParameter {
+            net: String::new(),
+            kind: SolverKind::Sgd,
+            base_lr: 0.01,
+            lr_policy: "fixed".into(),
+            gamma: 0.1,
+            power: 0.75,
+            stepsize: 100_000,
+            momentum: 0.9,
+            momentum2: 0.999,
+            rms_decay: 0.99,
+            delta: 1e-8,
+            weight_decay: 0.0,
+            regularization_type: "L2".into(),
+            max_iter: 100,
+            iter_size: 1,
+            display: 20,
+            snapshot: 0,
+            snapshot_prefix: "snapshots/net".into(),
+            test_iter: 0,
+            test_interval: 0,
+            random_seed: 1,
+            clip_gradients: -1.0,
+        }
+    }
+}
+
+impl SolverParameter {
+    pub fn from_message(m: &PMessage) -> Result<SolverParameter, String> {
+        let mut s = SolverParameter::default();
+        if let Some(v) = m.get_str("net") {
+            s.net = v.to_string();
+        }
+        if let Some(v) = m.get_str("type") {
+            s.kind = SolverKind::from_ident(v)?;
+        }
+        if let Some(v) = m.get_str("solver_type") {
+            s.kind = SolverKind::from_ident(v)?;
+        }
+        macro_rules! num {
+            ($field:ident, $name:literal, $t:ty) => {
+                if let Some(v) = m.get_num($name) {
+                    s.$field = v as $t;
+                }
+            };
+        }
+        num!(base_lr, "base_lr", f32);
+        num!(gamma, "gamma", f32);
+        num!(power, "power", f32);
+        num!(stepsize, "stepsize", usize);
+        num!(momentum, "momentum", f32);
+        num!(momentum2, "momentum2", f32);
+        num!(rms_decay, "rms_decay", f32);
+        num!(delta, "delta", f32);
+        num!(weight_decay, "weight_decay", f32);
+        num!(max_iter, "max_iter", usize);
+        num!(iter_size, "iter_size", usize);
+        num!(display, "display", usize);
+        num!(snapshot, "snapshot", usize);
+        num!(test_iter, "test_iter", usize);
+        num!(test_interval, "test_interval", usize);
+        num!(random_seed, "random_seed", u64);
+        num!(clip_gradients, "clip_gradients", f32);
+        if let Some(v) = m.get_str("lr_policy") {
+            s.lr_policy = v.to_string();
+        }
+        if let Some(v) = m.get_str("regularization_type") {
+            s.regularization_type = v.to_string();
+        }
+        if let Some(v) = m.get_str("snapshot_prefix") {
+            s.snapshot_prefix = v.to_string();
+        }
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse_text;
+    use super::*;
+
+    const LENET_CONV: &str = r#"
+layer {
+  name: "conv1"
+  type: "Convolution"
+  bottom: "data"
+  top: "conv1"
+  param { lr_mult: 1 }
+  param { lr_mult: 2 decay_mult: 0 }
+  convolution_param {
+    num_output: 20
+    kernel_size: 5
+    stride: 1
+    weight_filler { type: "xavier" }
+    bias_filler { type: "constant" }
+  }
+}
+"#;
+
+    #[test]
+    fn parses_conv_layer() {
+        let m = parse_text(LENET_CONV).unwrap();
+        let l = LayerParameter::from_message(m.msgs("layer").next().unwrap()).unwrap();
+        assert_eq!(l.name, "conv1");
+        assert_eq!(l.kind, "Convolution");
+        assert_eq!(l.bottoms, vec!["data"]);
+        let c = l.conv.unwrap();
+        assert_eq!(c.num_output, 20);
+        assert_eq!((c.kernel_h, c.kernel_w), (5, 5));
+        assert_eq!(c.weight_filler.kind, "xavier");
+        assert_eq!(l.params.len(), 2);
+        assert_eq!(l.params[1].lr_mult, 2.0);
+        assert_eq!(l.params[1].decay_mult, 0.0);
+    }
+
+    #[test]
+    fn parses_phase_include() {
+        let text = r#"
+layer { name: "d" type: "SyntheticData" top: "data" top: "label"
+        include { phase: TRAIN }
+        data_param { batch_size: 64 channels: 1 height: 28 width: 28 num_classes: 10 source: "digits" } }
+"#;
+        let m = parse_text(text).unwrap();
+        let l = LayerParameter::from_message(m.msgs("layer").next().unwrap()).unwrap();
+        assert_eq!(l.phase, Some(Phase::Train));
+        let d = l.data.unwrap();
+        assert_eq!(d.batch_size, 64);
+        assert_eq!(d.source, "digits");
+        assert_eq!(l.tops, vec!["data", "label"]);
+    }
+
+    #[test]
+    fn parses_pooling_variants() {
+        let text = r#"
+layer { name: "p1" type: "Pooling" bottom: "c" top: "p"
+        pooling_param { pool: MAX kernel_size: 3 stride: 2 } }
+layer { name: "p2" type: "Pooling" bottom: "p" top: "q"
+        pooling_param { pool: AVE kernel_size: 7 stride: 1 } }
+layer { name: "p3" type: "Pooling" bottom: "q" top: "r"
+        pooling_param { pool: AVE global_pooling: true } }
+"#;
+        let net = NetParameter::from_message(&parse_text(text).unwrap()).unwrap();
+        assert_eq!(net.layers[0].pool.as_ref().unwrap().method, PoolMethod::Max);
+        assert_eq!(net.layers[1].pool.as_ref().unwrap().method, PoolMethod::Ave);
+        assert!(net.layers[2].pool.as_ref().unwrap().global_pooling);
+    }
+
+    #[test]
+    fn parses_deploy_inputs() {
+        let text = r#"
+name: "Deploy"
+input: "data"
+input_shape { dim: 1 dim: 3 dim: 224 dim: 224 }
+layer { name: "r" type: "ReLU" bottom: "data" top: "data" }
+"#;
+        let net = NetParameter::from_message(&parse_text(text).unwrap()).unwrap();
+        assert_eq!(net.inputs, vec![("data".to_string(), [1, 3, 224, 224])]);
+    }
+
+    #[test]
+    fn parses_solver() {
+        let text = r#"
+net: "lenet"
+type: "Adam"
+base_lr: 0.001
+lr_policy: "step"
+gamma: 0.5
+stepsize: 200
+momentum: 0.9
+momentum2: 0.995
+weight_decay: 0.0005
+max_iter: 500
+display: 50
+snapshot: 250
+snapshot_prefix: "snapshots/lenet"
+random_seed: 7
+"#;
+        let s = parse_solver(text).unwrap();
+        assert_eq!(s.kind, SolverKind::Adam);
+        assert_eq!(s.base_lr, 0.001);
+        assert_eq!(s.lr_policy, "step");
+        assert_eq!(s.stepsize, 200);
+        assert_eq!(s.momentum2, 0.995);
+        assert_eq!(s.random_seed, 7);
+    }
+
+    use super::super::parse_solver;
+
+    #[test]
+    fn phase_filter() {
+        let text = r#"
+layer { name: "a" type: "ReLU" include { phase: TRAIN } }
+layer { name: "b" type: "ReLU" include { phase: TEST } }
+layer { name: "c" type: "ReLU" }
+"#;
+        let net = NetParameter::from_message(&parse_text(text).unwrap()).unwrap();
+        let train: Vec<&str> = net
+            .layers_for_phase(Phase::Train)
+            .iter()
+            .map(|l| l.name.as_str())
+            .collect();
+        assert_eq!(train, vec!["a", "c"]);
+    }
+
+    #[test]
+    fn solver_kind_roundtrip() {
+        for k in [
+            SolverKind::Sgd,
+            SolverKind::Nesterov,
+            SolverKind::AdaGrad,
+            SolverKind::RmsProp,
+            SolverKind::AdaDelta,
+            SolverKind::Adam,
+        ] {
+            assert_eq!(SolverKind::from_ident(k.ident()).unwrap(), k);
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! AOT kernel runtime — the `.aocx` loading half of the architecture.
+//!
+//! `make artifacts` runs `gen-manifest` (walks the zoo with a
+//! [`recording::RecordingDevice`] and emits `artifacts/manifest.json`),
+//! then python lowers every entry to `artifacts/<key>.hlo.txt` (L1
+//! Pallas gemm/gemv + L2 jnp kernels, `interpret=True`). At run time
+//! [`pjrt::PjrtBackend`] lazily compiles each HLO on the PJRT CPU client
+//! and serves kernel launches from the executable cache; python is never
+//! on the request path.
+
+pub mod plan;
+pub mod recording;
+pub mod pjrt;
+
+pub use plan::{kernel_plan, Arg, ExecPlan};
+pub use pjrt::PjrtBackend;
+
+/// Default artifacts directory (relative to the repo root / cwd).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts dir: $FECAFFE_ARTIFACTS, ./artifacts, or
+/// ../artifacts (for tests running in target dirs).
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("FECAFFE_ARTIFACTS") {
+        let p = std::path::PathBuf::from(p);
+        if p.is_dir() {
+            return Some(p);
+        }
+    }
+    for cand in [ARTIFACTS_DIR, "../artifacts", "../../artifacts"] {
+        let p = std::path::PathBuf::from(cand);
+        if p.join("manifest.json").is_file() {
+            return Some(p);
+        }
+    }
+    None
+}

@@ -1,0 +1,178 @@
+//! PjrtBackend — executes kernel launches through AOT-compiled HLO
+//! artifacts on the PJRT CPU client (the `.aocx` load-and-launch
+//! analogue; see /opt/xla-example/load_hlo for the reference wiring).
+//!
+//! HLO **text** is the interchange format: jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see aot.py).
+
+use super::plan::{kernel_plan, Arg};
+use crate::device::fpga::NumericBackend;
+use crate::device::native::Slab;
+use crate::device::KernelCall;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+enum Entry {
+    Compiled(xla::PjRtLoadedExecutable),
+    Missing,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct BackendStats {
+    pub artifact_hits: u64,
+    pub artifact_misses: u64,
+    pub compiles: u64,
+}
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, Entry>,
+    pub stats: BackendStats,
+}
+
+impl PjrtBackend {
+    /// Open the backend over an artifacts directory (must contain
+    /// `manifest.json` + `<key>.hlo.txt` files from `make artifacts`).
+    pub fn new(dir: impl Into<PathBuf>) -> anyhow::Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+        Ok(PjrtBackend {
+            client,
+            dir: dir.into(),
+            cache: HashMap::new(),
+            stats: BackendStats::default(),
+        })
+    }
+
+    /// Auto-locate artifacts; None if `make artifacts` hasn't run.
+    pub fn auto() -> Option<PjrtBackend> {
+        let dir = super::find_artifacts_dir()?;
+        PjrtBackend::new(dir).ok()
+    }
+
+    fn executable(&mut self, key: &str) -> anyhow::Result<Option<&xla::PjRtLoadedExecutable>> {
+        if !self.cache.contains_key(key) {
+            let path = self.dir.join(format!("{key}.hlo.txt"));
+            let entry = if path.is_file() {
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| anyhow::anyhow!("compile {key}: {e}"))?;
+                self.stats.compiles += 1;
+                Entry::Compiled(exe)
+            } else {
+                Entry::Missing
+            };
+            self.cache.insert(key.to_string(), entry);
+        }
+        match self.cache.get(key).unwrap() {
+            Entry::Compiled(e) => Ok(Some(e)),
+            Entry::Missing => Ok(None),
+        }
+    }
+}
+
+fn f32_literal(data: &[f32], dims: &[usize]) -> anyhow::Result<xla::Literal> {
+    let want: usize = dims.iter().product();
+    let bytes: &[u8] = if data.len() == want {
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, want * 4) }
+    } else {
+        // Bucketed kernel: pad with zeros (copy path).
+        return padded_literal(data, dims, want);
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+        .map_err(|e| anyhow::anyhow!("literal {dims:?}: {e}"))
+}
+
+fn padded_literal(data: &[f32], dims: &[usize], want: usize) -> anyhow::Result<xla::Literal> {
+    let mut padded = vec![0f32; want];
+    let n = data.len().min(want);
+    padded[..n].copy_from_slice(&data[..n]);
+    let bytes =
+        unsafe { std::slice::from_raw_parts(padded.as_ptr() as *const u8, want * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+        .map_err(|e| anyhow::anyhow!("padded literal {dims:?}: {e}"))
+}
+
+impl NumericBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn execute(&mut self, slab: &mut Slab, call: &KernelCall) -> anyhow::Result<bool> {
+        let Some(plan) = kernel_plan(&call.kernel) else {
+            return Ok(false); // data-movement kernel: native path
+        };
+        // Borrow-check dance: look up the executable first.
+        if self.executable(&plan.key)?.is_none() {
+            self.stats.artifact_misses += 1;
+            return Ok(false);
+        }
+
+        // Marshal arguments.
+        let mut literals = Vec::with_capacity(plan.args.len());
+        for arg in &plan.args {
+            let lit = match arg {
+                Arg::Scalar(v) => xla::Literal::scalar(*v),
+                Arg::Buf { idx, dims } => {
+                    let id = call.inputs[*idx];
+                    let off = call.in_offsets[*idx];
+                    let want: usize = dims.iter().product();
+                    let buf = slab.get(id);
+                    let end = (off + want).min(buf.len());
+                    f32_literal(&buf[off..end], dims)?
+                }
+                Arg::OutBuf { idx, dims } => {
+                    let id = call.outputs[*idx];
+                    let off = call.out_offsets[*idx];
+                    let want: usize = dims.iter().product();
+                    let buf = slab.get(id);
+                    let end = (off + want).min(buf.len());
+                    f32_literal(&buf[off..end], dims)?
+                }
+            };
+            literals.push(lit);
+        }
+
+        let exe = match self.cache.get(&plan.key) {
+            Some(Entry::Compiled(e)) => e,
+            _ => unreachable!("checked above"),
+        };
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e}", plan.key))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {}: {e}", plan.key))?;
+        // aot.py lowers with return_tuple=True → always a tuple.
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {}: {e}", plan.key))?;
+        anyhow::ensure!(
+            parts.len() == plan.outs.len(),
+            "{}: artifact returned {} outputs, plan expects {}",
+            plan.key,
+            parts.len(),
+            plan.outs.len()
+        );
+        for (part, om) in parts.iter().zip(plan.outs.iter()) {
+            let vals: Vec<f32> = part
+                .to_vec()
+                .map_err(|e| anyhow::anyhow!("read output of {}: {e}", plan.key))?;
+            let id = call.outputs[om.idx];
+            let off = call.out_offsets[om.idx];
+            let dst = slab.get_mut(id);
+            let n = om.len.min(vals.len());
+            dst[off..off + n].copy_from_slice(&vals[..n]);
+        }
+        self.stats.artifact_hits += 1;
+        Ok(true)
+    }
+}
+
+// Tests that need real artifacts live in rust/tests/integration_runtime.rs
+// (they skip gracefully when `make artifacts` hasn't run).

@@ -1,0 +1,550 @@
+//! Kernel → artifact execution plans.
+//!
+//! Maps every AOT-covered [`Kernel`] to a stable artifact key, the input
+//! marshalling recipe (buffers with shapes, runtime scalars), the output
+//! mapping, and a JSON spec the python AOT side lowers from. Scalars
+//! (learning rate, alpha, slopes, ...) are rank-0 *runtime inputs* of the
+//! HLO, so one artifact serves all values — exactly like an OpenCL kernel
+//! taking them as arguments.
+//!
+//! Elementwise kernels are generated at power-of-two size *buckets*
+//! (padded at dispatch, truncated on writeback) to bound the artifact
+//! count; shaped kernels (gemm, im2col, pool, lrn, softmax) are exact.
+
+use crate::device::Kernel;
+use crate::util::json::Json;
+
+/// Bucket an elementwise length: next power of two (min 256). Very large
+/// tensors (> 2^20) use their exact size — padding 37 M-element FC
+/// weights to 64 M would double the traffic for nothing.
+pub fn bucket(n: usize) -> usize {
+    if n > (1 << 20) {
+        return n;
+    }
+    n.max(256).next_power_of_two()
+}
+
+/// One input argument of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arg {
+    /// call.inputs[idx], reshaped to dims (padded to product(dims) if the
+    /// buffer slice is shorter — bucketed kernels).
+    Buf { idx: usize, dims: Vec<usize> },
+    /// Current contents of call.outputs[idx] (accumulating kernels:
+    /// beta=1 gemm, col2im, bias, solver history/data).
+    OutBuf { idx: usize, dims: Vec<usize> },
+    /// Runtime scalar (rank-0 f32 input).
+    Scalar(f32),
+}
+
+/// Where tuple element `i` of the result goes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutMap {
+    /// Index into call.outputs.
+    pub idx: usize,
+    /// Number of valid elements to copy back (truncates bucket padding).
+    pub len: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecPlan {
+    pub key: String,
+    pub args: Vec<Arg>,
+    pub outs: Vec<OutMap>,
+    /// Lowering spec for python (op + shape params).
+    pub spec: Json,
+}
+
+fn spec(op: &str, fields: &[(&str, Json)]) -> Json {
+    let mut o = Json::obj();
+    o.set("op", Json::str(op));
+    for (k, v) in fields {
+        o.set(k, v.clone());
+    }
+    o
+}
+
+fn buf(idx: usize, dims: &[usize]) -> Arg {
+    Arg::Buf { idx, dims: dims.to_vec() }
+}
+
+fn outbuf(idx: usize, dims: &[usize]) -> Arg {
+    Arg::OutBuf { idx, dims: dims.to_vec() }
+}
+
+/// Build the execution plan for a kernel, or None if the kernel is pure
+/// data movement served natively (Concat, SetConst).
+pub fn kernel_plan(kernel: &Kernel) -> Option<ExecPlan> {
+    use Kernel::*;
+    let plan = match kernel {
+        GemmNN { m, n, k, beta, .. } | GemmNT { m, n, k, beta, .. }
+        | GemmTN { m, n, k, beta, .. } => {
+            let (op, a_dims, b_dims) = match kernel {
+                GemmNN { .. } => ("gemm_nn", vec![*m, *k], vec![*k, *n]),
+                GemmNT { .. } => ("gemm_nt", vec![*m, *k], vec![*n, *k]),
+                _ => ("gemm_tn", vec![*k, *m], vec![*k, *n]),
+            };
+            let acc = *beta != 0.0;
+            let key = format!("{op}_{m}x{k}x{n}{}", if acc { "_acc" } else { "" });
+            let mut args = vec![buf(0, &a_dims), buf(1, &b_dims)];
+            if acc {
+                args.push(outbuf(0, &[*m, *n]));
+            }
+            ExecPlan {
+                key,
+                args,
+                outs: vec![OutMap { idx: 0, len: m * n }],
+                spec: spec(op, &[
+                    ("m", Json::num(*m as f64)),
+                    ("n", Json::num(*n as f64)),
+                    ("k", Json::num(*k as f64)),
+                    ("acc", Json::Bool(acc)),
+                ]),
+            }
+        }
+        Gemv { trans, m, n, beta, .. } => {
+            let acc = *beta != 0.0;
+            let t = if *trans { "t" } else { "n" };
+            let (xl, yl) = if *trans { (*m, *n) } else { (*n, *m) };
+            let key = format!("gemv_{t}_{m}x{n}{}", if acc { "_acc" } else { "" });
+            let mut args = vec![buf(0, &[*m, *n]), buf(1, &[xl])];
+            if acc {
+                args.push(outbuf(0, &[yl]));
+            }
+            ExecPlan {
+                key,
+                args,
+                outs: vec![OutMap { idx: 0, len: yl }],
+                spec: spec("gemv", &[
+                    ("m", Json::num(*m as f64)),
+                    ("n", Json::num(*n as f64)),
+                    ("trans", Json::Bool(*trans)),
+                    ("acc", Json::Bool(acc)),
+                ]),
+            }
+        }
+        Axpy { n, alpha } => eltwise2_acc("axpy", *n, &[Arg::Scalar(*alpha)]),
+        Split { n } => eltwise2_acc("axpy", *n, &[Arg::Scalar(1.0)]),
+        Axpby { n, alpha, beta } => {
+            eltwise2_acc("axpby", *n, &[Arg::Scalar(*alpha), Arg::Scalar(*beta)])
+        }
+        Scal { n, alpha } => {
+            let b = bucket(*n);
+            ExecPlan {
+                key: format!("scal_{b}"),
+                args: vec![Arg::Scalar(*alpha), outbuf(0, &[b])],
+                outs: vec![OutMap { idx: 0, len: *n }],
+                spec: spec("scal", &[("n", Json::num(b as f64))]),
+            }
+        }
+        Asum { n } => {
+            let b = bucket(*n);
+            ExecPlan {
+                key: format!("asum_{b}"),
+                args: vec![buf(0, &[b])],
+                outs: vec![OutMap { idx: 0, len: 1 }],
+                spec: spec("asum", &[("n", Json::num(b as f64))]),
+            }
+        }
+        Add { n } => eltwise3("add", *n, &[]),
+        Mul { n } => eltwise3("mul", *n, &[]),
+        PowX { n, p } => {
+            let b = bucket(*n);
+            ExecPlan {
+                key: format!("powx_{b}"),
+                args: vec![Arg::Scalar(*p), buf(0, &[b])],
+                outs: vec![OutMap { idx: 0, len: *n }],
+                spec: spec("powx", &[("n", Json::num(b as f64))]),
+            }
+        }
+        SetConst { .. } => return None, // trivial fill: native
+        Im2col { geom } | Col2im { geom } => {
+            let g = geom;
+            let is_i2c = matches!(kernel, Im2col { .. });
+            let op = if is_i2c { "im2col" } else { "col2im" };
+            let key = format!(
+                "{op}_{}x{}x{}_k{}x{}_s{}x{}_p{}x{}",
+                g.channels, g.height, g.width, g.kernel_h, g.kernel_w, g.stride_h,
+                g.stride_w, g.pad_h, g.pad_w
+            );
+            let im_dims = vec![g.channels, g.height, g.width];
+            let col_dims = vec![g.col_rows(), g.col_cols()];
+            let (args, outs) = if is_i2c {
+                (vec![buf(0, &im_dims)], vec![OutMap { idx: 0, len: g.col_len() }])
+            } else {
+                (
+                    vec![buf(0, &col_dims), outbuf(0, &im_dims)],
+                    vec![OutMap { idx: 0, len: g.im_len() }],
+                )
+            };
+            ExecPlan {
+                key,
+                args,
+                outs,
+                spec: spec(op, &[
+                    ("channels", Json::num(g.channels as f64)),
+                    ("height", Json::num(g.height as f64)),
+                    ("width", Json::num(g.width as f64)),
+                    ("kernel_h", Json::num(g.kernel_h as f64)),
+                    ("kernel_w", Json::num(g.kernel_w as f64)),
+                    ("stride_h", Json::num(g.stride_h as f64)),
+                    ("stride_w", Json::num(g.stride_w as f64)),
+                    ("pad_h", Json::num(g.pad_h as f64)),
+                    ("pad_w", Json::num(g.pad_w as f64)),
+                ]),
+            }
+        }
+        MaxPoolF { geom, num } | MaxPoolB { geom, num } | AvePoolF { geom, num }
+        | AvePoolB { geom, num } => {
+            let g = geom;
+            let (op, fwd, is_max) = match kernel {
+                MaxPoolF { .. } => ("maxpool_f", true, true),
+                MaxPoolB { .. } => ("maxpool_b", false, true),
+                AvePoolF { .. } => ("avepool_f", true, false),
+                _ => ("avepool_b", false, false),
+            };
+            let key = format!(
+                "{op}_{num}x{}x{}x{}_k{}x{}_s{}x{}_p{}x{}",
+                g.channels, g.height, g.width, g.kernel_h, g.kernel_w, g.stride_h,
+                g.stride_w, g.pad_h, g.pad_w
+            );
+            let in_dims = vec![*num, g.channels, g.height, g.width];
+            let out_dims = vec![*num, g.channels, g.out_h(), g.out_w()];
+            let (args, outs) = match (fwd, is_max) {
+                (true, true) => (
+                    vec![buf(0, &in_dims)],
+                    vec![
+                        OutMap { idx: 0, len: num * g.out_len() },
+                        OutMap { idx: 1, len: num * g.out_len() },
+                    ],
+                ),
+                (true, false) => (
+                    vec![buf(0, &in_dims)],
+                    vec![OutMap { idx: 0, len: num * g.out_len() }],
+                ),
+                (false, true) => (
+                    vec![buf(0, &out_dims), buf(1, &out_dims)],
+                    vec![OutMap { idx: 0, len: num * g.in_len() }],
+                ),
+                (false, false) => (
+                    vec![buf(0, &out_dims)],
+                    vec![OutMap { idx: 0, len: num * g.in_len() }],
+                ),
+            };
+            ExecPlan {
+                key,
+                args,
+                outs,
+                spec: spec(op, &[
+                    ("num", Json::num(*num as f64)),
+                    ("channels", Json::num(g.channels as f64)),
+                    ("height", Json::num(g.height as f64)),
+                    ("width", Json::num(g.width as f64)),
+                    ("kernel_h", Json::num(g.kernel_h as f64)),
+                    ("kernel_w", Json::num(g.kernel_w as f64)),
+                    ("stride_h", Json::num(g.stride_h as f64)),
+                    ("stride_w", Json::num(g.stride_w as f64)),
+                    ("pad_h", Json::num(g.pad_h as f64)),
+                    ("pad_w", Json::num(g.pad_w as f64)),
+                ]),
+            }
+        }
+        LrnScale { num, channels, dim, local_size, alpha, k } => {
+            let key = format!("lrn_scale_{num}x{channels}x{dim}_ls{local_size}");
+            ExecPlan {
+                key,
+                args: vec![
+                    Arg::Scalar(*alpha),
+                    Arg::Scalar(*k),
+                    buf(0, &[*num, *channels, *dim]),
+                ],
+                outs: vec![OutMap { idx: 0, len: num * channels * dim }],
+                spec: spec("lrn_scale", &[
+                    ("num", Json::num(*num as f64)),
+                    ("channels", Json::num(*channels as f64)),
+                    ("dim", Json::num(*dim as f64)),
+                    ("local_size", Json::num(*local_size as f64)),
+                ]),
+            }
+        }
+        LrnOutput { n, beta } => {
+            let b = bucket(*n);
+            ExecPlan {
+                key: format!("lrn_output_{b}"),
+                args: vec![Arg::Scalar(*beta), buf(0, &[b]), buf(1, &[b])],
+                outs: vec![OutMap { idx: 0, len: *n }],
+                spec: spec("lrn_output", &[("n", Json::num(b as f64))]),
+            }
+        }
+        LrnDiff { num, channels, dim, local_size, alpha, beta } => {
+            let key = format!("lrn_diff_{num}x{channels}x{dim}_ls{local_size}");
+            let dims = [*num, *channels, *dim];
+            ExecPlan {
+                key,
+                args: vec![
+                    Arg::Scalar(*alpha),
+                    Arg::Scalar(*beta),
+                    buf(0, &dims),
+                    buf(1, &dims),
+                    buf(2, &dims),
+                    buf(3, &dims),
+                ],
+                outs: vec![OutMap { idx: 0, len: num * channels * dim }],
+                spec: spec("lrn_diff", &[
+                    ("num", Json::num(*num as f64)),
+                    ("channels", Json::num(*channels as f64)),
+                    ("dim", Json::num(*dim as f64)),
+                    ("local_size", Json::num(*local_size as f64)),
+                ]),
+            }
+        }
+        DropoutF { n, scale } | DropoutB { n, scale } => {
+            let b = bucket(*n);
+            ExecPlan {
+                key: format!("dropout_{b}"),
+                args: vec![Arg::Scalar(*scale), buf(0, &[b]), buf(1, &[b])],
+                outs: vec![OutMap { idx: 0, len: *n }],
+                spec: spec("dropout", &[("n", Json::num(b as f64))]),
+            }
+        }
+        ReluF { n, slope } => {
+            let b = bucket(*n);
+            ExecPlan {
+                key: format!("relu_f_{b}"),
+                args: vec![Arg::Scalar(*slope), buf(0, &[b])],
+                outs: vec![OutMap { idx: 0, len: *n }],
+                spec: spec("relu_f", &[("n", Json::num(b as f64))]),
+            }
+        }
+        ReluB { n, slope } => {
+            let b = bucket(*n);
+            ExecPlan {
+                key: format!("relu_b_{b}"),
+                args: vec![Arg::Scalar(*slope), buf(0, &[b]), buf(1, &[b])],
+                outs: vec![OutMap { idx: 0, len: *n }],
+                spec: spec("relu_b", &[("n", Json::num(b as f64))]),
+            }
+        }
+        BiasF { outer, channels, dim } => {
+            let key = format!("bias_{outer}x{channels}x{dim}");
+            ExecPlan {
+                key,
+                args: vec![buf(0, &[*channels]), outbuf(0, &[*outer, *channels, *dim])],
+                outs: vec![OutMap { idx: 0, len: outer * channels * dim }],
+                spec: spec("bias", &[
+                    ("outer", Json::num(*outer as f64)),
+                    ("channels", Json::num(*channels as f64)),
+                    ("dim", Json::num(*dim as f64)),
+                ]),
+            }
+        }
+        SoftmaxF { n, c } => ExecPlan {
+            key: format!("softmax_{n}x{c}"),
+            args: vec![buf(0, &[*n, *c])],
+            outs: vec![OutMap { idx: 0, len: n * c }],
+            spec: spec("softmax", &[
+                ("n", Json::num(*n as f64)),
+                ("c", Json::num(*c as f64)),
+            ]),
+        },
+        SoftmaxLossF { n, c } => ExecPlan {
+            key: format!("softmaxloss_f_{n}x{c}"),
+            args: vec![buf(0, &[*n, *c]), buf(1, &[*n])],
+            outs: vec![OutMap { idx: 0, len: 1 }],
+            spec: spec("softmaxloss_f", &[
+                ("n", Json::num(*n as f64)),
+                ("c", Json::num(*c as f64)),
+            ]),
+        },
+        SoftmaxLossB { n, c, weight } => ExecPlan {
+            key: format!("softmaxloss_b_{n}x{c}"),
+            args: vec![Arg::Scalar(*weight), buf(0, &[*n, *c]), buf(1, &[*n])],
+            outs: vec![OutMap { idx: 0, len: n * c }],
+            spec: spec("softmaxloss_b", &[
+                ("n", Json::num(*n as f64)),
+                ("c", Json::num(*c as f64)),
+            ]),
+        },
+        ConcatF { .. } | ConcatB { .. } => return None, // data movement: native
+        SgdUpdate { n, lr, momentum } => solver_plan(
+            "sgd",
+            *n,
+            &[Arg::Scalar(*lr), Arg::Scalar(*momentum)],
+            1,
+        ),
+        NesterovUpdate { n, lr, momentum } => solver_plan(
+            "nesterov",
+            *n,
+            &[Arg::Scalar(*lr), Arg::Scalar(*momentum)],
+            1,
+        ),
+        AdaGradUpdate { n, lr, delta } => solver_plan(
+            "adagrad",
+            *n,
+            &[Arg::Scalar(*lr), Arg::Scalar(*delta)],
+            1,
+        ),
+        RmsPropUpdate { n, lr, decay, delta } => solver_plan(
+            "rmsprop",
+            *n,
+            &[Arg::Scalar(*lr), Arg::Scalar(*decay), Arg::Scalar(*delta)],
+            1,
+        ),
+        AdaDeltaUpdate { n, momentum, delta, lr } => solver_plan(
+            "adadelta",
+            *n,
+            &[Arg::Scalar(*momentum), Arg::Scalar(*delta), Arg::Scalar(*lr)],
+            2,
+        ),
+        AdamUpdate { n, lr, beta1, beta2, delta, t } => solver_plan(
+            "adam",
+            *n,
+            &[
+                Arg::Scalar(*lr),
+                Arg::Scalar(*beta1),
+                Arg::Scalar(*beta2),
+                Arg::Scalar(*delta),
+                Arg::Scalar(*t as f32),
+            ],
+            2,
+        ),
+    };
+    Some(plan)
+}
+
+/// z = f(x, y-as-accumulator): key op_B, args [scalars..., x, out].
+fn eltwise2_acc(op: &str, n: usize, scalars: &[Arg]) -> ExecPlan {
+    let b = bucket(n);
+    let mut args = scalars.to_vec();
+    args.push(buf(0, &[b]));
+    args.push(outbuf(0, &[b]));
+    ExecPlan {
+        key: format!("{op}_{b}"),
+        args,
+        outs: vec![OutMap { idx: 0, len: n }],
+        spec: spec(op, &[("n", Json::num(b as f64))]),
+    }
+}
+
+/// z = f(x, y): two inputs, one output.
+fn eltwise3(op: &str, n: usize, scalars: &[Arg]) -> ExecPlan {
+    let b = bucket(n);
+    let mut args = scalars.to_vec();
+    args.push(buf(0, &[b]));
+    args.push(buf(1, &[b]));
+    ExecPlan {
+        key: format!("{op}_{b}"),
+        args,
+        outs: vec![OutMap { idx: 0, len: n }],
+        spec: spec(op, &[("n", Json::num(b as f64))]),
+    }
+}
+
+/// Solver update: inputs [scalars..., diff, hist..(outbufs), data(outbuf)],
+/// outputs tuple (hist.., data).
+fn solver_plan(op: &str, n: usize, scalars: &[Arg], hist_slots: usize) -> ExecPlan {
+    let b = bucket(n);
+    let mut args = scalars.to_vec();
+    args.push(buf(0, &[b])); // diff
+    for s in 0..hist_slots {
+        args.push(outbuf(s, &[b]));
+    }
+    args.push(outbuf(hist_slots, &[b])); // data
+    let mut outs = Vec::new();
+    for s in 0..hist_slots {
+        outs.push(OutMap { idx: s, len: n });
+    }
+    outs.push(OutMap { idx: hist_slots, len: n });
+    ExecPlan {
+        key: format!("{op}_{b}"),
+        args,
+        outs,
+        spec: spec(op, &[("n", Json::num(b as f64))]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::ConvGeom;
+
+    #[test]
+    fn bucket_rules() {
+        assert_eq!(bucket(1), 256);
+        assert_eq!(bucket(257), 512);
+        assert_eq!(bucket(1 << 20), 1 << 20);
+        assert_eq!(bucket((1 << 20) + 5), (1 << 20) + 5); // exact above 1M
+    }
+
+    #[test]
+    fn gemm_keys_and_acc() {
+        let k0 = Kernel::GemmNN { m: 2, n: 3, k: 4, alpha: 1.0, beta: 0.0 };
+        let p0 = kernel_plan(&k0).unwrap();
+        assert_eq!(p0.key, "gemm_nn_2x4x3");
+        assert_eq!(p0.args.len(), 2);
+        let k1 = Kernel::GemmNT { m: 2, n: 3, k: 4, alpha: 1.0, beta: 1.0 };
+        let p1 = kernel_plan(&k1).unwrap();
+        assert_eq!(p1.key, "gemm_nt_2x4x3_acc");
+        assert_eq!(p1.args.len(), 3);
+        assert!(matches!(p1.args[2], Arg::OutBuf { .. }));
+    }
+
+    #[test]
+    fn relu_bucketed_key_is_shared() {
+        let a = kernel_plan(&Kernel::ReluF { n: 300, slope: 0.0 }).unwrap();
+        let b = kernel_plan(&Kernel::ReluF { n: 500, slope: 0.1 }).unwrap();
+        assert_eq!(a.key, b.key); // same bucket (512), slope is runtime scalar
+        assert_eq!(a.key, "relu_f_512");
+        assert_eq!(a.outs[0].len, 300);
+    }
+
+    #[test]
+    fn concat_and_setconst_are_native() {
+        assert!(kernel_plan(&Kernel::ConcatF { num: 1, this: 4, total: 8, offset: 0 }).is_none());
+        assert!(kernel_plan(&Kernel::SetConst { n: 4, value: 0.0 }).is_none());
+    }
+
+    #[test]
+    fn im2col_key_encodes_geometry() {
+        let geom = ConvGeom {
+            channels: 3,
+            height: 227,
+            width: 227,
+            kernel_h: 11,
+            kernel_w: 11,
+            pad_h: 0,
+            pad_w: 0,
+            stride_h: 4,
+            stride_w: 4,
+        };
+        let p = kernel_plan(&Kernel::Im2col { geom }).unwrap();
+        assert_eq!(p.key, "im2col_3x227x227_k11x11_s4x4_p0x0");
+    }
+
+    #[test]
+    fn adam_plan_has_three_outputs() {
+        let p = kernel_plan(&Kernel::AdamUpdate {
+            n: 1000,
+            lr: 0.1,
+            beta1: 0.9,
+            beta2: 0.99,
+            delta: 1e-8,
+            t: 3,
+        })
+        .unwrap();
+        assert_eq!(p.outs.len(), 3);
+        assert_eq!(p.key, "adam_1024");
+        // lr/betas/delta/t are runtime scalars, not in the key
+        assert_eq!(
+            p.args.iter().filter(|a| matches!(a, Arg::Scalar(_))).count(),
+            5
+        );
+    }
+
+    #[test]
+    fn spec_json_is_self_describing() {
+        let p = kernel_plan(&Kernel::SoftmaxF { n: 4, c: 10 }).unwrap();
+        assert_eq!(p.spec.get("op").unwrap().as_str().unwrap(), "softmax");
+        assert_eq!(p.spec.get("n").unwrap().as_usize().unwrap(), 4);
+    }
+}

@@ -1,0 +1,147 @@
+//! RecordingDevice — walks networks collecting the exact (kernel, shape)
+//! set they launch, to drive manifest generation (`gen-manifest`).
+//!
+//! By default launches are *not* executed numerically (shapes are fixed
+//! by host-side setup, so recording a VGG-16 F→B takes milliseconds, not
+//! minutes); pass `compute = true` when recorded runs must also produce
+//! real numbers.
+
+use crate::device::native::{execute, Slab};
+use crate::device::{BufId, Device, KernelCall, ScratchAction, ScratchPool};
+use crate::runtime::plan::kernel_plan;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+pub struct RecordingDevice {
+    slab: Slab,
+    scratch: ScratchPool,
+    pub compute: bool,
+    /// key → lowering spec
+    pub specs: BTreeMap<String, Json>,
+    pub native_only: u64,
+    pub launches: u64,
+}
+
+impl RecordingDevice {
+    pub fn new(compute: bool) -> RecordingDevice {
+        RecordingDevice {
+            slab: Slab::new(),
+            scratch: ScratchPool::new(),
+            compute,
+            specs: BTreeMap::new(),
+            native_only: 0,
+            launches: 0,
+        }
+    }
+
+    /// The manifest document: {"artifacts": {key: spec}}.
+    pub fn manifest(&self) -> Json {
+        let mut arts = Json::obj();
+        for (k, v) in &self.specs {
+            arts.set(k, v.clone());
+        }
+        let mut root = Json::obj();
+        root.set("artifacts", arts);
+        root.set("version", Json::num(1));
+        root
+    }
+
+    /// Merge another recording into this one.
+    pub fn merge_from(&mut self, other: &RecordingDevice) {
+        for (k, v) in &other.specs {
+            self.specs.insert(k.clone(), v.clone());
+        }
+    }
+}
+
+impl Device for RecordingDevice {
+    fn kind(&self) -> &'static str {
+        "recording"
+    }
+
+    fn alloc(&mut self, len: usize) -> anyhow::Result<BufId> {
+        Ok(self.slab.alloc(len))
+    }
+
+    fn free(&mut self, id: BufId) {
+        self.slab.free(id);
+    }
+
+    fn write(&mut self, id: BufId, data: &[f32]) {
+        self.slab.get_mut(id)[..data.len()].copy_from_slice(data);
+    }
+
+    fn read(&mut self, id: BufId, out: &mut [f32]) {
+        let buf = self.slab.get(id);
+        out.copy_from_slice(&buf[..out.len()]);
+    }
+
+    fn launch(&mut self, call: &KernelCall) -> anyhow::Result<()> {
+        self.launches += 1;
+        match kernel_plan(&call.kernel) {
+            Some(plan) => {
+                self.specs.entry(plan.key).or_insert(plan.spec);
+            }
+            None => self.native_only += 1,
+        }
+        if self.compute {
+            execute(&mut self.slab, call)?;
+        }
+        Ok(())
+    }
+
+    fn scratch(&mut self, slot: usize, len: usize) -> anyhow::Result<BufId> {
+        match self.scratch.plan(slot, len) {
+            ScratchAction::Use(id) => Ok(id),
+            ScratchAction::Grow(old) => {
+                if let Some(id) = old {
+                    self.slab.free(id);
+                }
+                let id = self.slab.alloc(len);
+                self.scratch.commit(slot, id, len);
+                Ok(id)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::Net;
+    use crate::proto::Phase;
+    use crate::zoo;
+
+    #[test]
+    fn lenet_recording_collects_expected_keys() {
+        let mut dev = RecordingDevice::new(false);
+        let param = zoo::by_name("lenet", 2).unwrap();
+        let mut net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+        net.forward_backward(&mut dev).unwrap();
+        let keys: Vec<&String> = dev.specs.keys().collect();
+        // conv1 fwd gemm: M=20, K=25, N=576
+        assert!(dev.specs.contains_key("gemm_nn_20x25x576"), "{keys:?}");
+        // im2col for conv1 geometry
+        assert!(dev.specs.contains_key("im2col_1x28x28_k5x5_s1x1_p0x0"));
+        // pool + relu + softmax heads
+        assert!(keys.iter().any(|k| k.starts_with("maxpool_f_2x20x24x24")));
+        assert!(keys.iter().any(|k| k.starts_with("relu_f_")));
+        assert!(dev.specs.contains_key("softmax_2x10"));
+        // backward keys
+        assert!(keys.iter().any(|k| k.starts_with("gemm_nt_")));
+        assert!(keys.iter().any(|k| k.starts_with("col2im_")));
+    }
+
+    #[test]
+    fn recording_without_compute_is_fast_and_stable() {
+        let mut dev = RecordingDevice::new(false);
+        let param = zoo::by_name("lenet", 1).unwrap();
+        let mut net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+        net.forward_backward(&mut dev).unwrap();
+        let first = dev.specs.len();
+        net.forward_backward(&mut dev).unwrap();
+        assert_eq!(dev.specs.len(), first, "second pass adds no new keys");
+        let manifest = dev.manifest();
+        assert!(manifest.get("artifacts").is_some());
+    }
+}

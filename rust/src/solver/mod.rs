@@ -1,0 +1,386 @@
+//! Solvers — the paper's §4.3 training-on-FPGA machinery.
+//!
+//! Caffe's weight update has three compute phases, and FeCaffe maps each
+//! to device kernels exactly as the paper describes: **normalization**
+//! (`Scal` by 1/iter_size) and **regularization** (`Axpy` of λ·w into the
+//! gradient) are "combinations of BLAS-based kernels", while the
+//! **compute update** is a dedicated solver kernel per policy
+//! (`SgdUpdate`, `NesterovUpdate`, `AdaGradUpdate`, `RmsPropUpdate`,
+//! `AdaDeltaUpdate`, `AdamUpdate` — Table 4's "Solver Supported" row).
+//!
+//! Learning-rate policies, gradient clipping, snapshot/restore and the
+//! train loop match `caffe::Solver`/`caffe::SGDSolver` semantics.
+
+pub mod snapshot;
+
+use crate::device::{BufId, Device, Kernel, KernelCall};
+use crate::net::Net;
+use crate::proto::{SolverKind, SolverParameter};
+
+pub struct Solver {
+    pub param: SolverParameter,
+    pub net: Net,
+    pub iter: usize,
+    /// Per-parameter history buffers on the device (1 slot for SGD-family,
+    /// 2 for AdaDelta/Adam).
+    history: Vec<Vec<BufId>>,
+    /// Loss trace (one entry per iteration) for convergence reporting.
+    pub loss_history: Vec<f32>,
+}
+
+impl Solver {
+    pub fn new(param: SolverParameter, net: Net, dev: &mut dyn Device) -> anyhow::Result<Solver> {
+        let slots = match param.kind {
+            SolverKind::AdaDelta | SolverKind::Adam => 2,
+            _ => 1,
+        };
+        let mut history = Vec::new();
+        for p in net.params() {
+            let n = p.blob.borrow().count();
+            let mut bufs = Vec::new();
+            for _ in 0..slots {
+                let id = dev.alloc(n)?;
+                // zero-initialize
+                dev.launch(&KernelCall::new(
+                    Kernel::SetConst { n, value: 0.0 },
+                    &[],
+                    &[id],
+                ))?;
+                bufs.push(id);
+            }
+            history.push(bufs);
+        }
+        Ok(Solver { param, net, iter: 0, history, loss_history: Vec::new() })
+    }
+
+    /// Current learning rate under the configured policy (caffe
+    /// `GetLearningRate`).
+    pub fn learning_rate(&self) -> f32 {
+        let p = &self.param;
+        let iter = self.iter as f32;
+        match p.lr_policy.as_str() {
+            "fixed" => p.base_lr,
+            "step" => {
+                let current_step = (self.iter / p.stepsize.max(1)) as i32;
+                p.base_lr * p.gamma.powi(current_step)
+            }
+            "exp" => p.base_lr * p.gamma.powf(iter),
+            "inv" => p.base_lr * (1.0 + p.gamma * iter).powf(-p.power),
+            "poly" => {
+                let max = self.param.max_iter.max(1) as f32;
+                p.base_lr * (1.0 - iter / max).max(0.0).powf(p.power)
+            }
+            "sigmoid" => {
+                p.base_lr / (1.0 + (-p.gamma * (iter - p.stepsize as f32)).exp())
+            }
+            other => panic!("unknown lr_policy '{other}'"),
+        }
+    }
+
+    /// One training iteration: forward/backward + update. Returns loss.
+    pub fn step(&mut self, dev: &mut dyn Device) -> anyhow::Result<f32> {
+        let mut loss = 0.0;
+        // iter_size forward/backwards accumulate gradients (Caffe's
+        // gradient accumulation for large effective batches).
+        for _ in 0..self.param.iter_size {
+            loss += self.net.forward_backward(dev)?;
+        }
+        loss /= self.param.iter_size as f32;
+        self.apply_update(dev)?;
+        self.iter += 1;
+        self.loss_history.push(loss);
+        Ok(loss)
+    }
+
+    /// Run `iters` iterations with Caffe-style display logging.
+    pub fn solve(&mut self, dev: &mut dyn Device, iters: usize) -> anyhow::Result<()> {
+        for _ in 0..iters {
+            let loss = self.step(dev)?;
+            if self.param.display > 0 && self.iter % self.param.display == 0 {
+                println!(
+                    "Iteration {}, lr = {:.6}, loss = {loss:.6}",
+                    self.iter,
+                    self.learning_rate()
+                );
+            }
+            if self.param.snapshot > 0 && self.iter % self.param.snapshot == 0 {
+                let path = format!("{}_iter_{}.fecaffemodel", self.param.snapshot_prefix, self.iter);
+                snapshot::save(&path, self, dev)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Normalize → regularize → clip → compute-update, all on-device.
+    pub fn apply_update(&mut self, dev: &mut dyn Device) -> anyhow::Result<()> {
+        let rate = self.learning_rate();
+        let p = self.param.clone();
+
+        // Gradient clipping by global L2 norm (host-side norm of the
+        // per-param asums, like caffe's ClipGradients).
+        let clip_scale = if p.clip_gradients > 0.0 {
+            let mut sumsq = 0.0f64;
+            for np in self.net.params() {
+                let mut blob = np.blob.borrow_mut();
+                let d = blob.diff.host_data(dev);
+                sumsq += d.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+            }
+            let l2 = sumsq.sqrt() as f32;
+            if l2 > p.clip_gradients {
+                p.clip_gradients / l2
+            } else {
+                1.0
+            }
+        } else {
+            1.0
+        };
+
+        for (i, np) in self.net.params().iter().enumerate() {
+            let mut blob = np.blob.borrow_mut();
+            let n = blob.count();
+            let diff_id = blob.diff.dev_data_rw(dev);
+            let data_id = blob.data.dev_data_rw(dev);
+
+            // 1. normalization: diff /= iter_size (skip when 1, like caffe)
+            let mut scale = clip_scale;
+            if p.iter_size > 1 {
+                scale /= p.iter_size as f32;
+            }
+            if scale != 1.0 {
+                dev.launch(&KernelCall::new(
+                    Kernel::Scal { n, alpha: scale },
+                    &[diff_id],
+                    &[diff_id],
+                ))?;
+            }
+
+            // 2. regularization: diff += λ·decay_mult · data  (L2)
+            let local_decay = p.weight_decay * np.spec.decay_mult;
+            if local_decay != 0.0 {
+                match p.regularization_type.as_str() {
+                    "L2" => {
+                        dev.launch(&KernelCall::new(
+                            Kernel::Axpy { n, alpha: local_decay },
+                            &[data_id],
+                            &[diff_id],
+                        ))?;
+                    }
+                    "L1" => {
+                        // sign(data) computed host-side into a temp, then axpy.
+                        let sgn: Vec<f32> = blob
+                            .data
+                            .host_data(dev)
+                            .iter()
+                            .map(|&v| {
+                                if v > 0.0 {
+                                    1.0
+                                } else if v < 0.0 {
+                                    -1.0
+                                } else {
+                                    0.0
+                                }
+                            })
+                            .collect();
+                        let tmp = dev.alloc(n)?;
+                        dev.write(tmp, &sgn);
+                        dev.launch(&KernelCall::new(
+                            Kernel::Axpy { n, alpha: local_decay },
+                            &[tmp],
+                            &[diff_id],
+                        ))?;
+                        dev.free(tmp);
+                    }
+                    other => anyhow::bail!("unknown regularization_type '{other}'"),
+                }
+            }
+
+            // 3. compute update (dedicated kernel per solver type)
+            let local_rate = rate * np.spec.lr_mult;
+            let hist = &self.history[i];
+            let kernel = match p.kind {
+                SolverKind::Sgd => Kernel::SgdUpdate { n, lr: local_rate, momentum: p.momentum },
+                SolverKind::Nesterov => {
+                    Kernel::NesterovUpdate { n, lr: local_rate, momentum: p.momentum }
+                }
+                SolverKind::AdaGrad => {
+                    Kernel::AdaGradUpdate { n, lr: local_rate, delta: p.delta }
+                }
+                SolverKind::RmsProp => Kernel::RmsPropUpdate {
+                    n,
+                    lr: local_rate,
+                    decay: p.rms_decay,
+                    delta: p.delta,
+                },
+                SolverKind::AdaDelta => Kernel::AdaDeltaUpdate {
+                    n,
+                    momentum: p.momentum,
+                    delta: p.delta,
+                    lr: local_rate,
+                },
+                SolverKind::Adam => Kernel::AdamUpdate {
+                    n,
+                    lr: local_rate,
+                    beta1: p.momentum,
+                    beta2: p.momentum2,
+                    delta: p.delta,
+                    t: self.iter + 1,
+                },
+            };
+            let outputs: Vec<BufId> = hist.iter().copied().chain([data_id]).collect();
+            dev.launch(&KernelCall::new(kernel, &[diff_id], &outputs))?;
+
+            // Zero the diff for the next iteration (caffe:
+            // net_->ClearParamDiffs()).
+            dev.launch(&KernelCall::new(
+                Kernel::SetConst { n, value: 0.0 },
+                &[],
+                &[diff_id],
+            ))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::cpu::CpuDevice;
+    use crate::net::Net;
+    use crate::proto::{parse_net, Phase};
+
+    const NET: &str = r#"
+name: "t"
+layer { name: "data" type: "SyntheticData" top: "data" top: "label"
+        data_param { batch_size: 8 channels: 1 height: 8 width: 8 num_classes: 3 source: "digits" seed: 5 } }
+layer { name: "fc" type: "InnerProduct" bottom: "data" top: "fc"
+        inner_product_param { num_output: 3 weight_filler { type: "xavier" } } }
+layer { name: "loss" type: "SoftmaxWithLoss" bottom: "fc" bottom: "label" top: "loss" }
+"#;
+
+    fn mk_solver(kind: &str, dev: &mut CpuDevice) -> Solver {
+        let netp = parse_net(NET).unwrap();
+        let net = Net::from_param(&netp, Phase::Train, dev).unwrap();
+        let mut sp = SolverParameter::default();
+        sp.kind = SolverKind::from_ident(kind).unwrap();
+        sp.base_lr = 0.05;
+        sp.display = 0;
+        Solver::new(sp, net, dev).unwrap()
+    }
+
+    #[test]
+    fn every_solver_reduces_loss() {
+        for kind in ["SGD", "Nesterov", "AdaGrad", "RMSProp", "AdaDelta", "Adam"] {
+            let mut dev = CpuDevice::new();
+            let mut s = mk_solver(kind, &mut dev);
+            let mut iters = 60;
+            if s.param.kind == SolverKind::AdaDelta {
+                // caffe convention: adadelta lr ≈ 1; its effective step
+                // warms up slowly (update history starts at zero)
+                s.param.base_lr = 1.0;
+                s.param.delta = 1e-2;
+                iters = 300;
+            }
+            let first: f32 = (0..5).map(|_| s.step(&mut dev).unwrap()).sum::<f32>() / 5.0;
+            for _ in 0..iters {
+                s.step(&mut dev).unwrap();
+            }
+            let last: f32 =
+                s.loss_history.iter().rev().take(5).sum::<f32>() / 5.0;
+            assert!(
+                last < first * 0.9,
+                "{kind}: loss did not decrease ({first} → {last})"
+            );
+        }
+    }
+
+    #[test]
+    fn lr_policies() {
+        let mut dev = CpuDevice::new();
+        let mut s = mk_solver("SGD", &mut dev);
+        s.param.base_lr = 0.1;
+        s.param.lr_policy = "step".into();
+        s.param.gamma = 0.5;
+        s.param.stepsize = 10;
+        s.iter = 0;
+        assert_eq!(s.learning_rate(), 0.1);
+        s.iter = 10;
+        assert_eq!(s.learning_rate(), 0.05);
+        s.iter = 25;
+        assert_eq!(s.learning_rate(), 0.025);
+
+        s.param.lr_policy = "inv".into();
+        s.param.gamma = 1e-4;
+        s.param.power = 0.75;
+        s.iter = 0;
+        assert_eq!(s.learning_rate(), 0.1);
+        s.iter = 10000;
+        assert!(s.learning_rate() < 0.1);
+
+        s.param.lr_policy = "poly".into();
+        s.param.max_iter = 100;
+        s.iter = 100;
+        assert_eq!(s.learning_rate(), 0.0);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_weights() {
+        let mut dev = CpuDevice::new();
+        let mut s = mk_solver("SGD", &mut dev);
+        s.param.weight_decay = 0.5;
+        s.param.base_lr = 0.1;
+        s.param.momentum = 0.0;
+        // Zero gradients path: update = -lr*decay*w ⇒ weights shrink.
+        let w0: f32 = {
+            let p = &s.net.params()[0];
+            let mut b = p.blob.borrow_mut();
+            b.data.host_data(&mut dev).iter().map(|v| v.abs()).sum()
+        };
+        s.apply_update(&mut dev).unwrap();
+        let w1: f32 = {
+            let p = &s.net.params()[0];
+            let mut b = p.blob.borrow_mut();
+            b.data.host_data(&mut dev).iter().map(|v| v.abs()).sum()
+        };
+        assert!(w1 < w0, "decay should shrink weights: {w0} → {w1}");
+    }
+
+    #[test]
+    fn gradient_clipping_bounds_update() {
+        let mut dev = CpuDevice::new();
+        let mut s = mk_solver("SGD", &mut dev);
+        s.param.clip_gradients = 1e-3;
+        s.param.momentum = 0.0;
+        s.net.forward_backward(&mut dev).unwrap();
+        // L2 of all diffs after clipping must be ≤ clip (checked via data
+        // change magnitude ≈ lr * clipped grad)
+        let before: Vec<f32> = {
+            let p = &s.net.params()[0];
+            let mut b = p.blob.borrow_mut();
+            b.data.host_data(&mut dev).to_vec()
+        };
+        s.apply_update(&mut dev).unwrap();
+        let after: Vec<f32> = {
+            let p = &s.net.params()[0];
+            let mut b = p.blob.borrow_mut();
+            b.data.host_data(&mut dev).to_vec()
+        };
+        let delta_l2: f32 = before
+            .iter()
+            .zip(after.iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt();
+        assert!(delta_l2 <= s.param.base_lr * 1.2e-3, "delta {delta_l2}");
+    }
+
+    #[test]
+    fn diffs_cleared_after_update() {
+        let mut dev = CpuDevice::new();
+        let mut s = mk_solver("SGD", &mut dev);
+        s.step(&mut dev).unwrap();
+        for p in s.net.params() {
+            let mut b = p.blob.borrow_mut();
+            assert!(b.diff.host_data(&mut dev).iter().all(|&v| v == 0.0));
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Timeline export — the stand-in for the paper's VTune / OpenCL-profiler
+//! views (Figures 4 and 5).
+//!
+//! Two renderers over [`crate::device::fpga::profiler::Span`]s:
+//! * chrome-trace JSON (open in `chrome://tracing` / Perfetto) with one
+//!   track per lane (host / pcie / fpga-kernel), mirroring Figure 4's
+//!   CPU-green vs FPGA-pink lanes;
+//! * an ASCII timeline for terminals and EXPERIMENTS.md.
+
+use crate::device::fpga::profiler::Span;
+use crate::util::json::Json;
+
+/// Spans → chrome-trace JSON ("traceEvents" array of X events).
+pub fn chrome_trace(spans: &[Span]) -> String {
+    let mut events = Vec::new();
+    for s in spans {
+        let tid = match s.lane {
+            "host" => 0,
+            "pcie" => 1,
+            _ => 2,
+        };
+        let mut e = Json::obj();
+        e.set("name", Json::str(s.name.clone()))
+            .set("ph", Json::str("X"))
+            .set("pid", Json::num(1))
+            .set("tid", Json::num(tid))
+            .set("ts", Json::num(s.start_ns as f64 / 1e3))
+            .set("dur", Json::num((s.dur_ns.max(1)) as f64 / 1e3))
+            .set("cat", Json::str(s.lane));
+        events.push(e);
+    }
+    // Thread name metadata.
+    for (tid, name) in [(0, "host"), (1, "pcie"), (2, "fpga-kernel")] {
+        let mut args = Json::obj();
+        args.set("name", Json::str(name));
+        let mut e = Json::obj();
+        e.set("name", Json::str("thread_name"))
+            .set("ph", Json::str("M"))
+            .set("pid", Json::num(1))
+            .set("tid", Json::num(tid))
+            .set("args", args);
+        events.push(e);
+    }
+    let mut root = Json::obj();
+    root.set("traceEvents", Json::Arr(events));
+    root.to_string()
+}
+
+/// Spans → fixed-width ASCII timeline (Figure 4 in a terminal).
+/// `cols` character cells cover the full [0, end] range.
+pub fn ascii_timeline(spans: &[Span], cols: usize) -> String {
+    let end = spans
+        .iter()
+        .map(|s| s.start_ns + s.dur_ns)
+        .max()
+        .unwrap_or(1)
+        .max(1);
+    let mut out = String::new();
+    let lanes = ["pcie", "fpga-kernel"];
+    for lane in lanes {
+        let mut row = vec![b'.'; cols];
+        for s in spans.iter().filter(|s| s.lane == lane) {
+            let a = (s.start_ns as u128 * cols as u128 / end as u128) as usize;
+            let b = (((s.start_ns + s.dur_ns) as u128 * cols as u128 + end as u128 - 1)
+                / end as u128) as usize;
+            let glyph = s.name.bytes().next().unwrap_or(b'#');
+            for c in row.iter_mut().take(b.min(cols)).skip(a) {
+                *c = glyph;
+            }
+        }
+        out.push_str(&format!(
+            "{:<12} |{}|\n",
+            lane,
+            String::from_utf8_lossy(&row)
+        ));
+    }
+    out.push_str(&format!(
+        "{:<12}  0 {:>width$.3} ms\n",
+        "",
+        end as f64 / 1e6,
+        width = cols.saturating_sub(2)
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spans() -> Vec<Span> {
+        vec![
+            Span { lane: "pcie", name: "Write_Buffer".into(), start_ns: 0, dur_ns: 100 },
+            Span { lane: "fpga-kernel", name: "Gemm".into(), start_ns: 100, dur_ns: 300 },
+            Span { lane: "fpga-kernel", name: "ReLU_F".into(), start_ns: 400, dur_ns: 50 },
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_all_events() {
+        let text = chrome_trace(&spans());
+        let v = Json::parse(&text).unwrap();
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 spans + 3 metadata
+        assert_eq!(events.len(), 6);
+        let first = &events[0];
+        assert_eq!(first.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(first.get("ts").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn ascii_timeline_shows_lanes() {
+        let text = ascii_timeline(&spans(), 40);
+        assert!(text.contains("pcie"));
+        assert!(text.contains("fpga-kernel"));
+        // gemm glyph appears
+        assert!(text.contains('G'));
+        assert!(text.contains('W'));
+    }
+
+    #[test]
+    fn empty_spans_dont_panic() {
+        let text = ascii_timeline(&[], 10);
+        assert!(text.contains("pcie"));
+        let json = chrome_trace(&[]);
+        assert!(Json::parse(&json).is_ok());
+    }
+}

@@ -1,0 +1,163 @@
+//! Tiny declarative CLI argument parser (no clap offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands; generates usage text. Only what the `fecaffe` binary
+//! and the bench harnesses need.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Option/flag specification used for parsing + usage text.
+#[derive(Debug, Clone)]
+pub struct Spec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+impl Spec {
+    pub const fn opt(name: &'static str, default: Option<&'static str>, help: &'static str) -> Spec {
+        Spec { name, takes_value: true, default, help }
+    }
+    pub const fn flag(name: &'static str, help: &'static str) -> Spec {
+        Spec { name, takes_value: false, default: None, help }
+    }
+}
+
+impl Args {
+    /// Parse `argv` (without the program name) against the spec table.
+    pub fn parse(argv: &[String], specs: &[Spec]) -> Result<Args, String> {
+        let mut out = Args::default();
+        // Seed defaults.
+        for s in specs {
+            if let Some(d) = s.default {
+                out.options.insert(s.name.to_string(), d.to_string());
+            }
+        }
+        let find = |name: &str| specs.iter().find(|s| s.name == name);
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = find(name).ok_or_else(|| format!("unknown option --{name}"))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    };
+                    out.options.insert(name.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+pub fn usage(prog: &str, about: &str, specs: &[Spec]) -> String {
+    let mut out = format!("{about}\n\nUsage: {prog} [options]\n\nOptions:\n");
+    for s in specs {
+        let lhs = if s.takes_value {
+            format!("--{} <v>", s.name)
+        } else {
+            format!("--{}", s.name)
+        };
+        let def = s
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        out.push_str(&format!("  {lhs:<24} {}{def}\n", s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    const SPECS: &[Spec] = &[
+        Spec::opt("model", Some("lenet"), "network name"),
+        Spec::opt("iterations", Some("100"), "iteration count"),
+        Spec::flag("verbose", "chatty output"),
+    ];
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = Args::parse(&sv(&["--iterations", "7"]), SPECS).unwrap();
+        assert_eq!(a.get("model"), Some("lenet"));
+        assert_eq!(a.get_usize("iterations").unwrap(), 7);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_flags_and_positional() {
+        let a = Args::parse(&sv(&["train", "--model=googlenet", "--verbose"]), SPECS).unwrap();
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("model"), Some("googlenet"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(&sv(&["--nope"]), SPECS).is_err());
+        assert!(Args::parse(&sv(&["--model"]), SPECS).is_err());
+        assert!(Args::parse(&sv(&["--verbose=1"]), SPECS).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_every_spec() {
+        let u = usage("fecaffe", "about", SPECS);
+        for s in SPECS {
+            assert!(u.contains(s.name));
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Small self-contained substrates (the offline vendor set has only the
+//! `xla` crate closure, so PRNG, JSON, CLI parsing, table formatting,
+//! bench statistics and the property-test harness are all built here —
+//! see DESIGN.md §10).
+
+pub mod prng;
+pub mod json;
+pub mod cli;
+pub mod table;
+pub mod stats;
+pub mod tcheck;

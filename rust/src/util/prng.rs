@@ -1,0 +1,181 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! A small PCG-XSH-RR 64/32 implementation plus the distributions Caffe's
+//! fillers need (uniform, Gaussian via Box–Muller, Bernoulli). Determinism
+//! matters twice here: weight init must be reproducible across the CPU and
+//! FPGA-sim devices for the equivalence tests, and the property-test
+//! harness logs seeds for replay.
+
+/// PCG-XSH-RR 64/32: 64-bit state, 32-bit output. Small, fast, and good
+/// enough statistical quality for fillers and test-case generation.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        // 24 mantissa bits of a u32.
+        (self.next_u32() >> 8) as f32 * (1.0 / 16_777_216.0)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Uniform integer in [0, n). Rejection-free Lemire reduction.
+    #[inline]
+    pub fn below(&mut self, n: u32) -> u32 {
+        ((self.next_u32() as u64 * n as u64) >> 32) as u32
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    #[inline]
+    pub fn range_u(&mut self, lo: u32, hi: u32) -> u32 {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Standard normal via Box–Muller (one value per call; the pair's
+    /// second half is dropped to keep state handling trivial).
+    pub fn gaussian(&mut self, mean: f32, std: f32) -> f32 {
+        let mut u1 = self.next_f32();
+        if u1 < 1e-12 {
+            u1 = 1e-12;
+        }
+        let u2 = self.next_f32();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f32::consts::PI * u2;
+        mean + std * r * theta.cos()
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f32) -> bool {
+        self.next_f32() < p
+    }
+
+    /// Fill a slice with uniform values.
+    pub fn fill_uniform(&mut self, buf: &mut [f32], lo: f32, hi: f32) {
+        for v in buf {
+            *v = self.uniform(lo, hi);
+        }
+    }
+
+    /// Fill a slice with Gaussian values.
+    pub fn fill_gaussian(&mut self, buf: &mut [f32], mean: f32, std: f32) {
+        for v in buf {
+            *v = self.gaussian(mean, std);
+        }
+    }
+
+    /// Xavier/Glorot-style fill used by Caffe's `xavier` filler:
+    /// uniform(-s, s) with s = sqrt(3 / fan_in).
+    pub fn fill_xavier(&mut self, buf: &mut [f32], fan_in: usize) {
+        let s = (3.0 / fan_in.max(1) as f32).sqrt();
+        self.fill_uniform(buf, -s, s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg32::new(1);
+        let mut b = Pcg32::new(2);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut rng = Pcg32::new(7);
+        let mut sum = 0.0f64;
+        let n = 20_000;
+        for _ in 0..n {
+            let v = rng.uniform(-2.0, 2.0);
+            assert!((-2.0..2.0).contains(&v));
+            sum += v as f64;
+        }
+        assert!((sum / n as f64).abs() < 0.05, "mean {}", sum / n as f64);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Pcg32::new(11);
+        let n = 40_000;
+        let (mut s1, mut s2) = (0f64, 0f64);
+        for _ in 0..n {
+            let v = rng.gaussian(1.0, 2.0) as f64;
+            s1 += v;
+            s2 += v * v;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - 1.0).abs() < 0.05, "mean {mean}");
+        assert!((var - 4.0).abs() < 0.2, "var {var}");
+    }
+
+    #[test]
+    fn below_is_in_range() {
+        let mut rng = Pcg32::new(3);
+        for _ in 0..1000 {
+            assert!(rng.below(10) < 10);
+            let v = rng.range_u(5, 9);
+            assert!((5..=9).contains(&v));
+        }
+    }
+
+    #[test]
+    fn xavier_bound_tracks_fan_in() {
+        let mut rng = Pcg32::new(9);
+        let mut buf = vec![0f32; 1000];
+        rng.fill_xavier(&mut buf, 300);
+        let s = (3.0f32 / 300.0).sqrt();
+        assert!(buf.iter().all(|v| v.abs() <= s));
+        assert!(buf.iter().any(|v| v.abs() > s * 0.5));
+    }
+}

@@ -1,0 +1,115 @@
+//! Bench statistics (criterion is unavailable offline — DESIGN.md §10).
+//!
+//! `Sampler` runs a closure repeatedly with warmup, collects wallclock
+//! samples and reports median/p95/mean. All perf numbers in
+//! EXPERIMENTS.md §Perf come through this.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Summary {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} n={:<4} median={:>12} mean={:>12} p95={:>12} min={:>12}",
+            self.name,
+            self.samples,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run `f` for `warmup` + `samples` iterations and summarize the timed part.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_nanos() as f64);
+    }
+    summarize(name, &mut times)
+}
+
+pub fn summarize(name: &str, times: &mut [f64]) -> Summary {
+    assert!(!times.is_empty());
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = times.len();
+    let mean = times.iter().sum::<f64>() / n as f64;
+    let median = if n % 2 == 1 {
+        times[n / 2]
+    } else {
+        0.5 * (times[n / 2 - 1] + times[n / 2])
+    };
+    let p95 = times[((n as f64 * 0.95) as usize).min(n - 1)];
+    Summary {
+        name: name.to_string(),
+        samples: n,
+        mean_ns: mean,
+        median_ns: median,
+        p95_ns: p95,
+        min_ns: times[0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarize_basic() {
+        let mut t = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        let s = summarize("x", &mut t);
+        assert_eq!(s.median_ns, 3.0);
+        assert_eq!(s.mean_ns, 3.0);
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.p95_ns, 5.0);
+    }
+
+    #[test]
+    fn even_median_interpolates() {
+        let mut t = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(summarize("x", &mut t).median_ns, 2.5);
+    }
+
+    #[test]
+    fn bench_runs_closure() {
+        let mut count = 0;
+        let s = bench("noop", 2, 10, || count += 1);
+        assert_eq!(count, 12);
+        assert_eq!(s.samples, 10);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5.0e4).contains("us"));
+        assert!(fmt_ns(5.0e7).contains("ms"));
+        assert!(fmt_ns(5.0e9).contains("s"));
+    }
+}

@@ -1,0 +1,118 @@
+//! ASCII table rendering for the paper-table benches.
+//!
+//! Produces aligned, pipe-delimited tables (markdown-compatible) so the
+//! bench output can be pasted directly into EXPERIMENTS.md next to the
+//! paper's numbers.
+
+#[derive(Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut width = vec![0usize; cols];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n", self.title));
+        }
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<w$} |", c, w = width[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        let mut sep = String::from("|");
+        for w in &width {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &width));
+        }
+        out
+    }
+}
+
+/// Format milliseconds the way the paper's tables do (3 decimals).
+pub fn ms(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+/// Format a ratio like "6.4x".
+pub fn ratio(v: f64) -> String {
+    format!("{v:.1}x")
+}
+
+/// Format a percentage like "77%".
+pub fn pct(v: f64) -> String {
+    format!("{:.0}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new("Demo", &["Layer", "Forward", "Backward"]);
+        t.row_strs(&["conv1", "20.269", "23.144"]);
+        t.row_strs(&["fc8", "1.976", "5.603"]);
+        let s = t.render();
+        assert!(s.contains("### Demo"));
+        let lines: Vec<&str> = s.lines().collect();
+        // header + sep + 2 rows + title
+        assert_eq!(lines.len(), 5);
+        // all body lines the same width
+        assert_eq!(lines[1].len(), lines[2].len());
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(ms(1.23456), "1.235");
+        assert_eq!(ratio(6.44), "6.4x");
+        assert_eq!(pct(0.77), "77%");
+    }
+}

@@ -1,0 +1,122 @@
+//! Hand-rolled property-test harness (proptest is not in the offline
+//! vendor set — DESIGN.md §10).
+//!
+//! `check(name, cases, |rng| ...)` runs a property closure against many
+//! PRNG-seeded cases. On failure it panics with the failing case index and
+//! the *derived seed*, so the exact case replays with
+//! `replay(name, seed, |rng| ...)`. Each case gets an independent PCG
+//! stream so shrinking the case count never changes earlier cases.
+
+use crate::util::prng::Pcg32;
+
+pub const DEFAULT_CASES: usize = 64;
+
+/// Base seed: fixed for reproducible CI; override with FECAFFE_TCHECK_SEED.
+fn base_seed() -> u64 {
+    std::env::var("FECAFFE_TCHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eed_f0ca_ffe0_2019)
+}
+
+/// Run `prop` for `cases` random cases. The closure returns `Result<(),
+/// String>`; `Err` (or a panic inside) fails the property with replay info.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    let base = base_seed();
+    for i in 0..cases {
+        let seed = base ^ (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let mut rng = Pcg32::with_stream(seed, i as u64);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {i}/{cases}: {msg}\n  \
+                 replay: tcheck::replay(\"{name}\", 0x{seed:016x}, {i}, ..)"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn replay<F>(_name: &str, seed: u64, case: usize, mut prop: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    let mut rng = Pcg32::with_stream(seed, case as u64);
+    prop(&mut rng).expect("replayed property failed");
+}
+
+/// Assert two f32 slices match within atol+rtol; returns a useful error.
+pub fn close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!(
+                "mismatch at [{i}]: {x} vs {y} (|d|={}, tol={tol})",
+                (x - y).abs()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Random shape helper: dims in [1, max_dim], total elements capped.
+pub fn small_shape(rng: &mut Pcg32, rank: usize, max_dim: u32, max_elems: usize) -> Vec<usize> {
+    loop {
+        let shape: Vec<usize> = (0..rank).map(|_| rng.range_u(1, max_dim) as usize).collect();
+        if shape.iter().product::<usize>() <= max_elems {
+            return shape;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("count", 10, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_name() {
+        check("fails", 5, |rng| {
+            if rng.next_f32() >= 0.0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn close_detects_mismatch() {
+        assert!(close(&[1.0, 2.0], &[1.0, 2.0], 1e-6, 0.0).is_ok());
+        assert!(close(&[1.0], &[1.1], 1e-3, 0.0).is_err());
+        assert!(close(&[1.0], &[1.0, 2.0], 1e-3, 0.0).is_err());
+        // rtol scales with magnitude
+        assert!(close(&[1000.0], &[1000.5], 0.0, 1e-3).is_ok());
+    }
+
+    #[test]
+    fn small_shape_respects_caps() {
+        let mut rng = Pcg32::new(1);
+        for _ in 0..50 {
+            let s = small_shape(&mut rng, 4, 8, 256);
+            assert_eq!(s.len(), 4);
+            assert!(s.iter().product::<usize>() <= 256);
+            assert!(s.iter().all(|&d| (1..=8).contains(&d)));
+        }
+    }
+}

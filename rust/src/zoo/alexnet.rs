@@ -1,0 +1,61 @@
+//! AlexNet (BVLC `bvlc_alexnet` train_val): 227×227 input, grouped conv2/4/5,
+//! two LRN stages, fc6/7 with dropout — paper Table 1's first column.
+
+use super::{gaussian, NetBuilder};
+use crate::proto::{NetParameter, PoolMethod};
+
+pub fn alexnet(batch: usize) -> NetParameter {
+    let mut b = NetBuilder::new("AlexNet");
+    b.data(batch, 3, 227, 1000, "imagenet");
+    b.conv_full("conv1", "data", "conv1", 96, 11, 4, 0, 1, gaussian(0.01));
+    b.relu_inplace("relu1", "conv1");
+    b.lrn("norm1", "conv1");
+    b.pool("pool1", "norm1", PoolMethod::Max, 3, 2, 0);
+    b.conv_full("conv2", "pool1", "conv2", 256, 5, 1, 2, 2, gaussian(0.01));
+    b.relu_inplace("relu2", "conv2");
+    b.lrn("norm2", "conv2");
+    b.pool("pool2", "norm2", PoolMethod::Max, 3, 2, 0);
+    b.conv_full("conv3", "pool2", "conv3", 384, 3, 1, 1, 1, gaussian(0.01));
+    b.relu_inplace("relu3", "conv3");
+    b.conv_full("conv4", "conv3", "conv4", 384, 3, 1, 1, 2, gaussian(0.01));
+    b.relu_inplace("relu4", "conv4");
+    b.conv_full("conv5", "conv4", "conv5", 256, 3, 1, 1, 2, gaussian(0.01));
+    b.relu_inplace("relu5", "conv5");
+    b.pool("pool5", "conv5", PoolMethod::Max, 3, 2, 0);
+    b.fc("fc6", "pool5", 4096);
+    b.relu_inplace("relu6", "fc6");
+    b.dropout_inplace("drop6", "fc6", 0.5);
+    b.fc("fc7", "fc6", 4096);
+    b.relu_inplace("relu7", "fc7");
+    b.dropout_inplace("drop7", "fc7", 0.5);
+    b.fc("fc8", "fc7", 1000);
+    b.accuracy("accuracy", "fc8");
+    b.softmax_loss("loss", "fc8", 1.0);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::cpu::CpuDevice;
+    use crate::net::Net;
+    use crate::proto::Phase;
+
+    #[test]
+    fn geometry_matches_alexnet() {
+        let mut dev = CpuDevice::new();
+        let param = alexnet(1);
+        let net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+        let shape = |n: &str| net.blob(n).unwrap().borrow().shape().to_vec();
+        assert_eq!(shape("conv1"), vec![1, 96, 55, 55]);
+        assert_eq!(shape("pool1"), vec![1, 96, 27, 27]);
+        assert_eq!(shape("conv2"), vec![1, 256, 27, 27]);
+        assert_eq!(shape("pool2"), vec![1, 256, 13, 13]);
+        assert_eq!(shape("conv5"), vec![1, 256, 13, 13]);
+        assert_eq!(shape("pool5"), vec![1, 256, 6, 6]);
+        assert_eq!(shape("fc8"), vec![1, 1000]);
+        // ~61M params
+        let p = net.num_parameters();
+        assert!((58_000_000..64_000_000).contains(&p), "params {p}");
+    }
+}

@@ -1,0 +1,132 @@
+//! GoogLeNet v1 (BVLC train_val): 9 inception modules, two LRNs, three
+//! loss heads (loss1/loss2 at weight 0.3) — the paper's deepest network
+//! and the subject of its Table 2 kernel breakdown and Figures 4/5
+//! training traces.
+
+use super::NetBuilder;
+use crate::proto::{NetParameter, PoolMethod};
+
+/// Inception module: four branches concatenated on channels.
+#[allow(clippy::too_many_arguments)]
+pub fn inception(
+    b: &mut NetBuilder,
+    name: &str,
+    bottom: &str,
+    c1x1: usize,
+    c3x3r: usize,
+    c3x3: usize,
+    c5x5r: usize,
+    c5x5: usize,
+    pool_proj: usize,
+) {
+    let b1 = format!("{name}/1x1");
+    let b3r = format!("{name}/3x3_reduce");
+    let b3 = format!("{name}/3x3");
+    let b5r = format!("{name}/5x5_reduce");
+    let b5 = format!("{name}/5x5");
+    let bp = format!("{name}/pool");
+    let bpp = format!("{name}/pool_proj");
+    b.conv_relu(&b1, bottom, c1x1, 1, 1, 0);
+    b.conv_relu(&b3r, bottom, c3x3r, 1, 1, 0);
+    b.conv_relu(&b3, &b3r, c3x3, 3, 1, 1);
+    b.conv_relu(&b5r, bottom, c5x5r, 1, 1, 0);
+    b.conv_relu(&b5, &b5r, c5x5, 5, 1, 2);
+    b.pool(&bp, bottom, PoolMethod::Max, 3, 1, 1);
+    b.conv_relu(&bpp, &bp, pool_proj, 1, 1, 0);
+    b.concat(&format!("{name}/output"), &[&b1, &b3, &b5, &bpp]);
+}
+
+/// Auxiliary classifier head (loss1/loss2, weight 0.3).
+fn aux_head(b: &mut NetBuilder, name: &str, bottom: &str) {
+    let pool = format!("{name}/ave_pool");
+    let conv = format!("{name}/conv");
+    let fc = format!("{name}/fc");
+    let cls = format!("{name}/classifier");
+    b.pool(&pool, bottom, PoolMethod::Ave, 5, 3, 0);
+    b.conv_relu(&conv, &pool, 128, 1, 1, 0);
+    b.fc(&fc, &conv, 1024);
+    b.relu_inplace(&format!("{name}/relu_fc"), &fc);
+    b.dropout_inplace(&format!("{name}/drop_fc"), &fc, 0.7);
+    b.fc(&cls, &fc, 1000);
+    b.softmax_loss(&format!("{name}/loss"), &cls, 0.3);
+}
+
+pub fn googlenet(batch: usize) -> NetParameter {
+    let mut b = NetBuilder::new("GoogLeNet_v1");
+    b.data(batch, 3, 224, 1000, "imagenet");
+    b.conv_relu("conv1/7x7_s2", "data", 64, 7, 2, 3);
+    b.pool("pool1/3x3_s2", "conv1/7x7_s2", PoolMethod::Max, 3, 2, 0);
+    b.lrn("pool1/norm1", "pool1/3x3_s2");
+    b.conv_relu("conv2/3x3_reduce", "pool1/norm1", 64, 1, 1, 0);
+    b.conv_relu("conv2/3x3", "conv2/3x3_reduce", 192, 3, 1, 1);
+    b.lrn("conv2/norm2", "conv2/3x3");
+    b.pool("pool2/3x3_s2", "conv2/norm2", PoolMethod::Max, 3, 2, 0);
+    inception(&mut b, "inception_3a", "pool2/3x3_s2", 64, 96, 128, 16, 32, 32);
+    inception(&mut b, "inception_3b", "inception_3a/output", 128, 128, 192, 32, 96, 64);
+    b.pool("pool3/3x3_s2", "inception_3b/output", PoolMethod::Max, 3, 2, 0);
+    inception(&mut b, "inception_4a", "pool3/3x3_s2", 192, 96, 208, 16, 48, 64);
+    aux_head(&mut b, "loss1", "inception_4a/output");
+    inception(&mut b, "inception_4b", "inception_4a/output", 160, 112, 224, 24, 64, 64);
+    inception(&mut b, "inception_4c", "inception_4b/output", 128, 128, 256, 24, 64, 64);
+    inception(&mut b, "inception_4d", "inception_4c/output", 112, 144, 288, 32, 64, 64);
+    aux_head(&mut b, "loss2", "inception_4d/output");
+    inception(&mut b, "inception_4e", "inception_4d/output", 256, 160, 320, 32, 128, 128);
+    b.pool("pool4/3x3_s2", "inception_4e/output", PoolMethod::Max, 3, 2, 0);
+    inception(&mut b, "inception_5a", "pool4/3x3_s2", 256, 160, 320, 32, 128, 128);
+    inception(&mut b, "inception_5b", "inception_5a/output", 384, 192, 384, 48, 128, 128);
+    b.global_ave_pool("pool5/7x7_s1", "inception_5b/output");
+    b.dropout_inplace("pool5/drop_7x7_s1", "pool5/7x7_s1", 0.4);
+    b.fc("loss3/classifier", "pool5/7x7_s1", 1000);
+    b.accuracy("accuracy", "loss3/classifier");
+    b.softmax_loss("loss3/loss3", "loss3/classifier", 1.0);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::cpu::CpuDevice;
+    use crate::net::Net;
+    use crate::proto::Phase;
+
+    #[test]
+    fn structure_counts() {
+        let net = googlenet(1);
+        let convs = net.layers.iter().filter(|l| l.kind == "Convolution").count();
+        // 3 stem + 9 inceptions × 6 + 2 aux heads × 1 = 59
+        assert_eq!(convs, 59);
+        let relus = net.layers.iter().filter(|l| l.kind == "ReLU").count();
+        // 59 conv-relus + 2 aux fc relus = 61 (paper Table 2: 61 ReLU_F!)
+        assert_eq!(relus, 61);
+        let losses = net
+            .layers
+            .iter()
+            .filter(|l| l.kind == "SoftmaxWithLoss")
+            .count();
+        assert_eq!(losses, 3);
+        let pools = net.layers.iter().filter(|l| l.kind == "Pooling").count();
+        // 4 stem/stage max pools + 9 inception pools + 2 aux ave + global = 16
+        assert_eq!(pools, 16);
+    }
+
+    #[test]
+    fn builds_with_correct_geometry() {
+        let mut dev = CpuDevice::new();
+        let param = googlenet(1);
+        let net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+        let shape = |n: &str| net.blob(n).unwrap().borrow().shape().to_vec();
+        assert_eq!(shape("conv1/7x7_s2"), vec![1, 64, 112, 112]);
+        assert_eq!(shape("pool1/3x3_s2"), vec![1, 64, 56, 56]);
+        assert_eq!(shape("pool2/3x3_s2"), vec![1, 192, 28, 28]);
+        assert_eq!(shape("inception_3a/output"), vec![1, 256, 28, 28]);
+        assert_eq!(shape("inception_3b/output"), vec![1, 480, 28, 28]);
+        assert_eq!(shape("inception_4e/output"), vec![1, 832, 14, 14]);
+        assert_eq!(shape("inception_5b/output"), vec![1, 1024, 7, 7]);
+        assert_eq!(shape("pool5/7x7_s1"), vec![1, 1024, 1, 1]);
+        // ~13.4M params (with aux heads)
+        let p = net.num_parameters();
+        assert!((12_000_000..15_000_000).contains(&p), "params {p}");
+        // Splits exist for inception fan-outs
+        assert!(net.layer_kinds().iter().filter(|&&k| k == "Split").count() >= 9);
+    }
+}

@@ -1,0 +1,55 @@
+//! LeNet (Caffe `lenet_train_test.prototxt`) — the paper's Table 4
+//! comparison workload against F-CNN: L1 conv(20×5) → L2 pool → L3
+//! conv(50×5) → L4 pool → L5 fc(500) → L6 fc(10).
+
+use super::NetBuilder;
+use crate::proto::{NetParameter, PoolMethod};
+
+pub fn lenet(batch: usize) -> NetParameter {
+    let mut b = NetBuilder::new("LeNet");
+    b.data(batch, 1, 28, 10, "digits");
+    b.conv("conv1", "data", 20, 5, 1, 0);
+    b.pool("pool1", "conv1", PoolMethod::Max, 2, 2, 0);
+    b.conv("conv2", "pool1", 50, 5, 1, 0);
+    b.pool("pool2", "conv2", PoolMethod::Max, 2, 2, 0);
+    b.fc("ip1", "pool2", 500);
+    b.relu_inplace("relu1", "ip1");
+    b.fc("ip2", "ip1", 10);
+    b.accuracy("accuracy", "ip2");
+    b.softmax_loss("loss", "ip2", 1.0);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::cpu::CpuDevice;
+    use crate::net::Net;
+    use crate::proto::Phase;
+
+    #[test]
+    fn builds_with_expected_shapes() {
+        let mut dev = CpuDevice::new();
+        let param = lenet(2);
+        let mut net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+        let shapes: Vec<(String, Vec<usize>)> = ["conv1", "pool1", "conv2", "pool2", "ip1", "ip2"]
+            .iter()
+            .map(|n| {
+                let b = net.blob(n).unwrap();
+                let s = b.borrow().shape().to_vec();
+                (n.to_string(), s)
+            })
+            .collect();
+        assert_eq!(shapes[0].1, vec![2, 20, 24, 24]);
+        assert_eq!(shapes[1].1, vec![2, 20, 12, 12]);
+        assert_eq!(shapes[2].1, vec![2, 50, 8, 8]);
+        assert_eq!(shapes[3].1, vec![2, 50, 4, 4]);
+        assert_eq!(shapes[4].1, vec![2, 500]);
+        assert_eq!(shapes[5].1, vec![2, 10]);
+        // ~430k params like the classic LeNet
+        let p = net.num_parameters();
+        assert!((400_000..450_000).contains(&p), "params {p}");
+        let loss = net.forward_backward(&mut dev).unwrap();
+        assert!(loss.is_finite());
+    }
+}

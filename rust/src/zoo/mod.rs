@@ -1,0 +1,342 @@
+//! Model zoo: programmatic builders for the paper's five networks
+//! (LeNet, AlexNet, VGG-16, SqueezeNet v1.0, GoogLeNet v1), matching the
+//! BVLC train_val prototxts layer-for-layer. `emit::emit_net` turns any
+//! of them back into standard prototxt (and the parser round-trips them —
+//! see the property suite).
+
+pub mod lenet;
+pub mod alexnet;
+pub mod vgg;
+pub mod squeezenet;
+pub mod googlenet;
+
+use crate::proto::*;
+
+/// All networks the zoo provides (paper Table 4 "Network Topologies
+/// Supported" row).
+pub const NETWORKS: &[&str] = &["lenet", "alexnet", "vgg16", "squeezenet", "googlenet"];
+
+/// Build a train_val network by name with the given train batch size.
+pub fn by_name(name: &str, batch: usize) -> anyhow::Result<NetParameter> {
+    match name {
+        "lenet" => Ok(lenet::lenet(batch)),
+        "alexnet" => Ok(alexnet::alexnet(batch)),
+        "vgg16" => Ok(vgg::vgg16(batch)),
+        "squeezenet" => Ok(squeezenet::squeezenet(batch)),
+        "googlenet" => Ok(googlenet::googlenet(batch)),
+        other => anyhow::bail!(
+            "unknown network '{other}' (have: {})",
+            NETWORKS.join(", ")
+        ),
+    }
+}
+
+/// Paper-style default solver for a network (Table 4: "BS:32 and Default
+/// Solver" etc.).
+pub fn default_solver(name: &str) -> anyhow::Result<SolverParameter> {
+    let mut s = SolverParameter::default();
+    s.net = name.to_string();
+    match name {
+        "lenet" => {
+            s.base_lr = 0.01;
+            s.lr_policy = "inv".into();
+            s.gamma = 1e-4;
+            s.power = 0.75;
+            s.momentum = 0.9;
+            s.weight_decay = 5e-4;
+            s.max_iter = 500;
+            s.display = 50;
+        }
+        "alexnet" => {
+            s.base_lr = 0.01;
+            s.lr_policy = "step".into();
+            s.gamma = 0.1;
+            s.stepsize = 100_000;
+            s.momentum = 0.9;
+            s.weight_decay = 5e-4;
+        }
+        "vgg16" => {
+            s.base_lr = 0.001;
+            s.lr_policy = "step".into();
+            s.gamma = 0.1;
+            s.stepsize = 100_000;
+            s.momentum = 0.9;
+            s.weight_decay = 5e-4;
+        }
+        "squeezenet" => {
+            s.base_lr = 0.04;
+            s.lr_policy = "poly".into();
+            s.power = 1.0;
+            s.momentum = 0.9;
+            s.weight_decay = 2e-4;
+        }
+        "googlenet" => {
+            // Paper §Table 4: "Default Solver with Adam".
+            s.kind = SolverKind::Adam;
+            s.base_lr = 0.001;
+            s.lr_policy = "fixed".into();
+            s.momentum = 0.9;
+            s.momentum2 = 0.999;
+            s.weight_decay = 2e-4;
+        }
+        other => anyhow::bail!("no default solver for '{other}'"),
+    }
+    Ok(s)
+}
+
+// ---------------------------------------------------------------- builder
+
+/// Small fluent builder the per-net modules share.
+pub struct NetBuilder {
+    pub net: NetParameter,
+}
+
+impl NetBuilder {
+    pub fn new(name: &str) -> NetBuilder {
+        NetBuilder {
+            net: NetParameter { name: name.into(), layers: Vec::new(), inputs: Vec::new() },
+        }
+    }
+
+    pub fn finish(self) -> NetParameter {
+        self.net
+    }
+
+    pub fn data(
+        &mut self,
+        batch: usize,
+        channels: usize,
+        hw: usize,
+        num_classes: usize,
+        source: &str,
+    ) -> &mut Self {
+        let mut l = LayerParameter::new("data", "SyntheticData");
+        l.tops = vec!["data".into(), "label".into()];
+        l.data = Some(SyntheticDataParameter {
+            batch_size: batch,
+            channels,
+            height: hw,
+            width: hw,
+            num_classes,
+            source: source.into(),
+            seed: 1,
+        });
+        self.net.layers.push(l);
+        self
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv_full(
+        &mut self,
+        name: &str,
+        bottom: &str,
+        top: &str,
+        num_output: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+        group: usize,
+        filler: FillerParameter,
+    ) -> &mut Self {
+        let mut l = LayerParameter::new(name, "Convolution");
+        l.bottoms = vec![bottom.into()];
+        l.tops = vec![top.into()];
+        l.params = vec![
+            ParamSpec { lr_mult: 1.0, decay_mult: 1.0 },
+            ParamSpec { lr_mult: 2.0, decay_mult: 0.0 },
+        ];
+        let mut c = ConvolutionParameter::default();
+        c.num_output = num_output;
+        c.kernel_h = kernel;
+        c.kernel_w = kernel;
+        c.stride_h = stride;
+        c.stride_w = stride;
+        c.pad_h = pad;
+        c.pad_w = pad;
+        c.group = group;
+        c.weight_filler = filler;
+        c.bias_filler = FillerParameter::default();
+        l.conv = Some(c);
+        self.net.layers.push(l);
+        self
+    }
+
+    pub fn conv(
+        &mut self,
+        name: &str,
+        bottom: &str,
+        num_output: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+    ) -> &mut Self {
+        self.conv_full(name, bottom, name, num_output, kernel, stride, pad, 1, xavier())
+    }
+
+    /// conv + in-place ReLU (the zoo's nets always pair them).
+    pub fn conv_relu(
+        &mut self,
+        name: &str,
+        bottom: &str,
+        num_output: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+    ) -> &mut Self {
+        self.conv(name, bottom, num_output, kernel, stride, pad);
+        self.relu_inplace(&format!("relu_{name}"), name)
+    }
+
+    pub fn relu_inplace(&mut self, name: &str, blob: &str) -> &mut Self {
+        let mut l = LayerParameter::new(name, "ReLU");
+        l.bottoms = vec![blob.into()];
+        l.tops = vec![blob.into()];
+        self.net.layers.push(l);
+        self
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn pool(
+        &mut self,
+        name: &str,
+        bottom: &str,
+        method: PoolMethod,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+    ) -> &mut Self {
+        let mut l = LayerParameter::new(name, "Pooling");
+        l.bottoms = vec![bottom.into()];
+        l.tops = vec![name.into()];
+        l.pool = Some(PoolingParameter {
+            method,
+            kernel_h: kernel,
+            kernel_w: kernel,
+            stride_h: stride,
+            stride_w: stride,
+            pad_h: pad,
+            pad_w: pad,
+            global_pooling: false,
+        });
+        self.net.layers.push(l);
+        self
+    }
+
+    pub fn global_ave_pool(&mut self, name: &str, bottom: &str) -> &mut Self {
+        let mut l = LayerParameter::new(name, "Pooling");
+        l.bottoms = vec![bottom.into()];
+        l.tops = vec![name.into()];
+        let mut p = PoolingParameter::default();
+        p.method = PoolMethod::Ave;
+        p.global_pooling = true;
+        l.pool = Some(p);
+        self.net.layers.push(l);
+        self
+    }
+
+    pub fn lrn(&mut self, name: &str, bottom: &str) -> &mut Self {
+        let mut l = LayerParameter::new(name, "LRN");
+        l.bottoms = vec![bottom.into()];
+        l.tops = vec![name.into()];
+        l.lrn = Some(LrnParameter { local_size: 5, alpha: 1e-4, beta: 0.75, k: 1.0 });
+        self.net.layers.push(l);
+        self
+    }
+
+    pub fn fc(&mut self, name: &str, bottom: &str, num_output: usize) -> &mut Self {
+        let mut l = LayerParameter::new(name, "InnerProduct");
+        l.bottoms = vec![bottom.into()];
+        l.tops = vec![name.into()];
+        l.params = vec![
+            ParamSpec { lr_mult: 1.0, decay_mult: 1.0 },
+            ParamSpec { lr_mult: 2.0, decay_mult: 0.0 },
+        ];
+        l.inner_product = Some(InnerProductParameter {
+            num_output,
+            bias_term: true,
+            weight_filler: xavier(),
+            bias_filler: FillerParameter::default(),
+        });
+        self.net.layers.push(l);
+        self
+    }
+
+    pub fn dropout_inplace(&mut self, name: &str, blob: &str, ratio: f32) -> &mut Self {
+        let mut l = LayerParameter::new(name, "Dropout");
+        l.bottoms = vec![blob.into()];
+        l.tops = vec![blob.into()];
+        l.dropout = Some(DropoutParameter { dropout_ratio: ratio });
+        self.net.layers.push(l);
+        self
+    }
+
+    pub fn concat(&mut self, name: &str, bottoms: &[&str]) -> &mut Self {
+        let mut l = LayerParameter::new(name, "Concat");
+        l.bottoms = bottoms.iter().map(|s| s.to_string()).collect();
+        l.tops = vec![name.into()];
+        l.concat = Some(ConcatParameter { axis: 1 });
+        self.net.layers.push(l);
+        self
+    }
+
+    pub fn softmax_loss(&mut self, name: &str, scores: &str, weight: f32) -> &mut Self {
+        let mut l = LayerParameter::new(name, "SoftmaxWithLoss");
+        l.bottoms = vec![scores.into(), "label".into()];
+        l.tops = vec![name.into()];
+        if weight != 1.0 {
+            l.loss_weight = vec![weight];
+        }
+        self.net.layers.push(l);
+        self
+    }
+
+    pub fn accuracy(&mut self, name: &str, scores: &str) -> &mut Self {
+        let mut l = LayerParameter::new(name, "Accuracy");
+        l.bottoms = vec![scores.into(), "label".into()];
+        l.tops = vec![name.into()];
+        l.phase = Some(Phase::Test);
+        self.net.layers.push(l);
+        self
+    }
+}
+
+pub fn xavier() -> FillerParameter {
+    FillerParameter { kind: "xavier".into(), ..Default::default() }
+}
+
+pub fn gaussian(std: f32) -> FillerParameter {
+    FillerParameter { kind: "gaussian".into(), std, ..Default::default() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::{emit, parse_net};
+
+    #[test]
+    fn registry_builds_every_network() {
+        for name in NETWORKS {
+            let net = by_name(name, 1).unwrap();
+            assert!(!net.layers.is_empty(), "{name}");
+            // prototxt round-trip
+            let text = emit::emit_net(&net);
+            let back = parse_net(&text).unwrap();
+            assert_eq!(net, back, "{name} prototxt round-trip");
+        }
+        assert!(by_name("resnet", 1).is_err());
+    }
+
+    #[test]
+    fn default_solvers_exist() {
+        for name in NETWORKS {
+            let s = default_solver(name).unwrap();
+            assert!(s.base_lr > 0.0);
+        }
+    }
+
+    #[test]
+    fn googlenet_uses_adam_by_default() {
+        let s = default_solver("googlenet").unwrap();
+        assert_eq!(s.kind, SolverKind::Adam);
+    }
+}

@@ -1,0 +1,75 @@
+//! SqueezeNet v1.0 — fire modules (squeeze 1×1 → expand 1×1 ∥ 3×3 →
+//! concat). The paper highlights FeCaffe as the *first* to train
+//! SqueezeNet on FPGA; Table 1's "fire" rows aggregate each module.
+
+use super::NetBuilder;
+use crate::proto::{NetParameter, PoolMethod};
+
+/// Append fire module `name` on `bottom`: squeeze s1x1, expand e1x1+e3x3.
+pub fn fire(b: &mut NetBuilder, name: &str, bottom: &str, s: usize, e1: usize, e3: usize) {
+    let sq = format!("{name}/squeeze1x1");
+    let ex1 = format!("{name}/expand1x1");
+    let ex3 = format!("{name}/expand3x3");
+    b.conv_relu(&sq, bottom, s, 1, 1, 0);
+    b.conv_relu(&ex1, &sq, e1, 1, 1, 0);
+    b.conv_relu(&ex3, &sq, e3, 3, 1, 1);
+    b.concat(&format!("{name}/concat"), &[&ex1, &ex3]);
+}
+
+pub fn squeezenet(batch: usize) -> NetParameter {
+    let mut b = NetBuilder::new("SqueezeNet_v1.0");
+    b.data(batch, 3, 227, 1000, "imagenet");
+    b.conv_relu("conv1", "data", 96, 7, 2, 0);
+    b.pool("pool1", "conv1", PoolMethod::Max, 3, 2, 0);
+    fire(&mut b, "fire2", "pool1", 16, 64, 64);
+    fire(&mut b, "fire3", "fire2/concat", 16, 64, 64);
+    fire(&mut b, "fire4", "fire3/concat", 32, 128, 128);
+    b.pool("pool4", "fire4/concat", PoolMethod::Max, 3, 2, 0);
+    fire(&mut b, "fire5", "pool4", 32, 128, 128);
+    fire(&mut b, "fire6", "fire5/concat", 48, 192, 192);
+    fire(&mut b, "fire7", "fire6/concat", 48, 192, 192);
+    fire(&mut b, "fire8", "fire7/concat", 64, 256, 256);
+    b.pool("pool8", "fire8/concat", PoolMethod::Max, 3, 2, 0);
+    fire(&mut b, "fire9", "pool8", 64, 256, 256);
+    b.dropout_inplace("drop9", "fire9/concat", 0.5);
+    b.conv_relu("conv10", "fire9/concat", 1000, 1, 1, 0);
+    b.global_ave_pool("pool10", "conv10");
+    b.accuracy("accuracy", "pool10");
+    b.softmax_loss("loss", "pool10", 1.0);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::cpu::CpuDevice;
+    use crate::net::Net;
+    use crate::proto::Phase;
+
+    #[test]
+    fn structure() {
+        let net = squeezenet(1);
+        let convs = net.layers.iter().filter(|l| l.kind == "Convolution").count();
+        // conv1 + 8 fires × 3 + conv10 = 26
+        assert_eq!(convs, 26);
+        let concats = net.layers.iter().filter(|l| l.kind == "Concat").count();
+        assert_eq!(concats, 8);
+    }
+
+    #[test]
+    fn builds_and_fans_out_with_splits() {
+        let mut dev = CpuDevice::new();
+        let param = squeezenet(1);
+        let net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+        // fire squeeze output feeds both expands → Split layers inserted
+        assert!(net.layer_kinds().iter().filter(|&&k| k == "Split").count() >= 8);
+        let shape = |n: &str| net.blob(n).unwrap().borrow().shape().to_vec();
+        assert_eq!(shape("conv1"), vec![1, 96, 111, 111]);
+        assert_eq!(shape("pool1"), vec![1, 96, 55, 55]);
+        assert_eq!(shape("fire2/concat"), vec![1, 128, 55, 55]);
+        assert_eq!(shape("pool10"), vec![1, 1000, 1, 1]);
+        // ~1.25M params
+        let p = net.num_parameters();
+        assert!((1_150_000..1_350_000).contains(&p), "params {p}");
+    }
+}

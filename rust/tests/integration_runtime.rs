@@ -1,0 +1,178 @@
+//! Integration over the PJRT runtime: artifact execution must match the
+//! native math bit-for-bit (within fp tolerance) on every kernel family,
+//! and a whole net forward on the artifact-backed FPGA device must match
+//! the CPU device. Skips (with a notice) when `make artifacts` hasn't run.
+
+use fecaffe::device::cpu::CpuDevice;
+use fecaffe::device::fpga::FpgaSimDevice;
+use fecaffe::device::{Device, Kernel, KernelCall};
+use fecaffe::math::{ConvGeom, PoolGeom};
+use fecaffe::net::Net;
+use fecaffe::proto::Phase;
+use fecaffe::runtime::PjrtBackend;
+use fecaffe::util::prng::Pcg32;
+use fecaffe::zoo;
+
+fn backend() -> Option<PjrtBackend> {
+    let b = PjrtBackend::auto();
+    if b.is_none() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+    }
+    b
+}
+
+/// Run one call on both devices with identical inputs; compare outputs.
+fn check_kernel(kernel: Kernel, in_lens: &[usize], out_lens: &[usize], tol: f32) {
+    let Some(backend) = backend() else { return };
+    let mut fpga = FpgaSimDevice::new().with_backend(Box::new(backend));
+    let mut cpu = CpuDevice::new();
+    let mut rng = Pcg32::new(0xA07_u64);
+    let mut data: Vec<Vec<f32>> = Vec::new();
+    for &n in in_lens.iter().chain(out_lens.iter()) {
+        let mut v = vec![0f32; n];
+        rng.fill_uniform(&mut v, -1.0, 1.0);
+        data.push(v);
+    }
+    let run = |dev: &mut dyn Device| -> Vec<Vec<f32>> {
+        let mut ids = Vec::new();
+        for v in &data {
+            let id = dev.alloc(v.len()).unwrap();
+            dev.write(id, v);
+            ids.push(id);
+        }
+        let (ins, outs) = ids.split_at(in_lens.len());
+        dev.launch(&KernelCall::new(kernel.clone(), ins, outs)).unwrap();
+        outs.iter()
+            .zip(out_lens.iter())
+            .map(|(&id, &n)| {
+                let mut out = vec![0f32; n];
+                dev.read(id, &mut out);
+                out
+            })
+            .collect()
+    };
+    let got_f = run(&mut fpga);
+    let got_c = run(&mut cpu);
+    assert!(fpga.profiler.artifact_launches > 0, "{kernel:?} did not use the artifact");
+    for (i, (a, b)) in got_f.iter().zip(got_c.iter()).enumerate() {
+        fecaffe::util::tcheck::close(a, b, tol, tol)
+            .unwrap_or_else(|e| panic!("{kernel:?} output {i}: {e}"));
+    }
+}
+
+#[test]
+fn pjrt_gemm_matches_native() {
+    // lenet conv1 forward shape (in the manifest for sure)
+    check_kernel(
+        Kernel::GemmNN { m: 20, n: 576, k: 25, alpha: 1.0, beta: 0.0 },
+        &[20 * 25, 25 * 576],
+        &[20 * 576],
+        1e-4,
+    );
+}
+
+#[test]
+fn pjrt_gemm_acc_matches_native() {
+    // lenet conv1 weight-grad (GemmNT beta=1)
+    check_kernel(
+        Kernel::GemmNT { m: 20, n: 25, k: 576, alpha: 1.0, beta: 1.0 },
+        &[20 * 576, 25 * 576],
+        &[20 * 25],
+        1e-3,
+    );
+}
+
+#[test]
+fn pjrt_relu_bucketed_matches_native() {
+    // n=300 pads into the 512 bucket
+    check_kernel(Kernel::ReluF { n: 300, slope: 0.0 }, &[300], &[300], 0.0);
+}
+
+#[test]
+fn pjrt_im2col_matches_native() {
+    let geom = ConvGeom {
+        channels: 1, height: 28, width: 28,
+        kernel_h: 5, kernel_w: 5, pad_h: 0, pad_w: 0, stride_h: 1, stride_w: 1,
+    };
+    check_kernel(
+        Kernel::Im2col { geom },
+        &[geom.im_len()],
+        &[geom.col_len()],
+        0.0,
+    );
+}
+
+#[test]
+fn pjrt_maxpool_matches_native_including_mask() {
+    let geom = PoolGeom {
+        channels: 20, height: 24, width: 24,
+        kernel_h: 2, kernel_w: 2, pad_h: 0, pad_w: 0, stride_h: 2, stride_w: 2,
+    };
+    check_kernel(
+        Kernel::MaxPoolF { geom, num: 1 },
+        &[geom.in_len()],
+        &[geom.out_len(), geom.out_len()],
+        0.0,
+    );
+}
+
+#[test]
+fn pjrt_sgd_update_matches_native() {
+    let n = 510; // pads into 512 bucket
+    check_kernel(
+        Kernel::SgdUpdate { n, lr: 0.05, momentum: 0.9 },
+        &[n],
+        &[n, n],
+        1e-5,
+    );
+}
+
+#[test]
+fn lenet_forward_identical_on_pjrt_and_cpu() {
+    let Some(backend) = backend() else { return };
+    let param = zoo::by_name("lenet", 2).unwrap();
+    let mut cpu = CpuDevice::new();
+    let mut net_c = Net::from_param(&param, Phase::Train, &mut cpu).unwrap();
+    let loss_c = net_c.forward_backward(&mut cpu).unwrap();
+
+    let mut fpga = FpgaSimDevice::new().with_backend(Box::new(backend));
+    let mut net_f = Net::from_param(&param, Phase::Train, &mut fpga).unwrap();
+    let loss_f = net_f.forward_backward(&mut fpga).unwrap();
+    assert!(
+        fpga.profiler.artifact_launches > fpga.profiler.native_launches,
+        "most launches should ride artifacts: {} vs {}",
+        fpga.profiler.artifact_launches,
+        fpga.profiler.native_launches
+    );
+    assert!(
+        (loss_c - loss_f).abs() < 1e-3,
+        "loss mismatch: cpu {loss_c} vs pjrt {loss_f}"
+    );
+    // conv1 gradients agree
+    let gc = net_c.params()[0].blob.borrow_mut().diff_vec(&mut cpu);
+    let gf = net_f.params()[0].blob.borrow_mut().diff_vec(&mut fpga);
+    fecaffe::util::tcheck::close(&gf, &gc, 1e-3, 1e-3).unwrap();
+}
+
+#[test]
+fn artifact_miss_falls_back_to_native() {
+    let Some(backend) = backend() else { return };
+    let mut fpga = FpgaSimDevice::new().with_backend(Box::new(backend));
+    // A gemm shape no zoo net uses → miss → native fallback, same result.
+    let (m, n, k) = (7usize, 13, 11);
+    let a = fpga.alloc(m * k).unwrap();
+    let b = fpga.alloc(k * n).unwrap();
+    let c = fpga.alloc(m * n).unwrap();
+    fpga.write(a, &vec![0.5; m * k]);
+    fpga.write(b, &vec![2.0; k * n]);
+    fpga.launch(&KernelCall::new(
+        Kernel::GemmNN { m, n, k, alpha: 1.0, beta: 0.0 },
+        &[a, b],
+        &[c],
+    ))
+    .unwrap();
+    assert_eq!(fpga.profiler.native_launches, 1);
+    let mut out = vec![0f32; m * n];
+    fpga.read(c, &mut out);
+    assert!((out[0] - 11.0).abs() < 1e-4);
+}

@@ -1,0 +1,144 @@
+//! Training integration: convergence on the synthetic digit task across
+//! devices and solvers, snapshot-resume determinism, and the Caffe-style
+//! solver configuration path (prototxt text end to end).
+
+use fecaffe::device::cpu::CpuDevice;
+use fecaffe::device::fpga::FpgaSimDevice;
+use fecaffe::net::Net;
+use fecaffe::proto::{parse_solver, Phase};
+use fecaffe::solver::{snapshot, Solver};
+use fecaffe::zoo;
+
+#[test]
+fn lenet_converges_on_fpga_sim() {
+    let mut dev = FpgaSimDevice::new();
+    let param = zoo::by_name("lenet", 32).unwrap();
+    let net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+    let mut sp = zoo::default_solver("lenet").unwrap();
+    sp.display = 0;
+    let mut solver = Solver::new(sp, net, &mut dev).unwrap();
+    for _ in 0..60 {
+        solver.step(&mut dev).unwrap();
+    }
+    let head: f32 = solver.loss_history[..5].iter().sum::<f32>() / 5.0;
+    let tail: f32 = solver.loss_history.iter().rev().take(5).sum::<f32>() / 5.0;
+    assert!(
+        tail < head * 0.7,
+        "no convergence on fpga-sim: {head:.3} -> {tail:.3}"
+    );
+    // Training really ran on the simulated device.
+    assert!(dev.profiler.total_instances() > 1000);
+}
+
+#[test]
+fn solver_prototxt_end_to_end() {
+    let text = r#"
+net: "lenet"
+type: "Nesterov"
+base_lr: 0.01
+lr_policy: "step"
+gamma: 0.5
+stepsize: 40
+momentum: 0.9
+weight_decay: 0.0005
+display: 0
+"#;
+    let sp = parse_solver(text).unwrap();
+    let mut dev = CpuDevice::new();
+    let param = zoo::by_name(&sp.net, 16).unwrap();
+    let net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+    let mut solver = Solver::new(sp, net, &mut dev).unwrap();
+    let l0 = solver.step(&mut dev).unwrap();
+    for _ in 0..40 {
+        solver.step(&mut dev).unwrap();
+    }
+    let l1 = *solver.loss_history.last().unwrap();
+    assert!(l1.is_finite() && l1 < l0 * 1.5);
+    // lr stepped down after stepsize iterations
+    assert!((solver.learning_rate() - 0.005).abs() < 1e-6);
+}
+
+#[test]
+fn snapshot_resume_after_restart_is_deterministic() {
+    let run = |resume_at: Option<usize>| -> Vec<f32> {
+        let mut dev = CpuDevice::new();
+        let param = zoo::by_name("lenet", 8).unwrap();
+        let net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+        let mut sp = zoo::default_solver("lenet").unwrap();
+        sp.display = 0;
+        let mut solver = Solver::new(sp, net, &mut dev).unwrap();
+        let snap = std::env::temp_dir().join("fecaffe_it_resume.bin");
+        if let Some(at) = resume_at {
+            // advance the data stream like the original run did
+            for _ in 0..at {
+                solver.net.forward(&mut dev).unwrap();
+            }
+            snapshot::restore(&snap, &mut solver, &mut dev).unwrap();
+        } else {
+            for _ in 0..4 {
+                solver.step(&mut dev).unwrap();
+            }
+            snapshot::save(&snap, &solver, &mut dev).unwrap();
+        }
+        let mut out = Vec::new();
+        for _ in 0..4 {
+            out.push(solver.step(&mut dev).unwrap());
+        }
+        out
+    };
+    let original = run(None);
+    let resumed = run(Some(4));
+    for (a, b) in original.iter().zip(resumed.iter()) {
+        assert!((a - b).abs() < 1e-5, "{original:?} vs {resumed:?}");
+    }
+}
+
+#[test]
+fn adam_trains_googlenet_stem_without_nans() {
+    // A GoogLeNet-like slice (stem + one inception) at tiny resolution
+    // would need a custom net; instead run full GoogLeNet 2 iterations at
+    // batch 1 with Adam and check numerics stay finite end to end.
+    let mut dev = CpuDevice::new();
+    let param = zoo::by_name("googlenet", 1).unwrap();
+    let net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+    let mut sp = zoo::default_solver("googlenet").unwrap();
+    sp.display = 0;
+    let mut solver = Solver::new(sp, net, &mut dev).unwrap();
+    for _ in 0..2 {
+        let loss = solver.step(&mut dev).unwrap();
+        assert!(loss.is_finite(), "loss diverged: {loss}");
+        // three loss heads: total ≈ (1 + 0.3 + 0.3) * ln(1000) at init
+        assert!(loss > 2.0 && loss < 20.0, "implausible loss {loss}");
+    }
+}
+
+#[test]
+fn accuracy_improves_with_training() {
+    let mut dev = CpuDevice::new();
+    let param = zoo::by_name("lenet", 32).unwrap();
+    let net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+    let mut sp = zoo::default_solver("lenet").unwrap();
+    sp.display = 0;
+    let mut solver = Solver::new(sp, net, &mut dev).unwrap();
+
+    let eval = |solver: &Solver, dev: &mut CpuDevice| -> f32 {
+        let tp = zoo::by_name("lenet", 100).unwrap();
+        let mut tnet = Net::from_param(&tp, Phase::Test, dev).unwrap();
+        for (src, dst) in solver.net.params().iter().zip(tnet.params().iter()) {
+            let w = src.blob.borrow_mut().data_vec(dev);
+            dst.blob.borrow_mut().set_data(dev, &w);
+        }
+        tnet.forward(dev).unwrap();
+        tnet.blob("accuracy").unwrap().borrow_mut().data_vec(dev)[0]
+    };
+
+    let acc0 = eval(&solver, &mut dev);
+    for _ in 0..80 {
+        solver.step(&mut dev).unwrap();
+    }
+    let acc1 = eval(&solver, &mut dev);
+    assert!(
+        acc1 > acc0 + 0.2,
+        "accuracy did not improve: {acc0:.2} -> {acc1:.2}"
+    );
+}

@@ -1,0 +1,262 @@
+//! Property tests (hand-rolled tcheck harness — DESIGN.md §10) over the
+//! substrates' invariants: allocator, syncedmem coherence, prototxt
+//! round-trips, split insertion, and the simulator's queue model.
+
+use fecaffe::blob::{MemState, SyncedMem};
+use fecaffe::device::cpu::CpuDevice;
+use fecaffe::device::fpga::ddr::DdrTracker;
+use fecaffe::device::fpga::{FpgaSimDevice, QueueMode};
+use fecaffe::device::{Device, Kernel, KernelCall};
+use fecaffe::net::insert_splits;
+use fecaffe::proto::{self, LayerParameter};
+use fecaffe::util::tcheck;
+
+#[test]
+fn ddr_tracker_never_overbooks() {
+    tcheck::check("ddr_overbook", 64, |rng| {
+        let cap = rng.range_u(1_000, 100_000) as u64;
+        let mut ddr = DdrTracker::new(cap);
+        let mut live: Vec<(usize, u64)> = Vec::new();
+        let mut next_id = 0usize;
+        for _ in 0..200 {
+            if rng.bernoulli(0.6) || live.is_empty() {
+                let sz = rng.range_u(1, (cap / 4).max(2) as u32) as u64;
+                if ddr.alloc(next_id, sz).is_ok() {
+                    live.push((next_id, sz));
+                }
+                next_id += 1;
+            } else {
+                let i = rng.below(live.len() as u32) as usize;
+                let (id, _) = live.swap_remove(i);
+                ddr.free(id);
+            }
+            let used: u64 = live.iter().map(|(_, s)| s).sum();
+            if ddr.used() != used {
+                return Err(format!("accounting drift: {} vs {}", ddr.used(), used));
+            }
+            if ddr.used() > cap {
+                return Err("over capacity".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn syncedmem_random_walk_never_loses_data() {
+    tcheck::check("syncedmem_walk", 48, |rng| {
+        let mut dev = CpuDevice::new();
+        let n = rng.range_u(1, 64) as usize;
+        let mut mem = SyncedMem::new(n);
+        // shadow = ground truth
+        let mut shadow = vec![0f32; n];
+        for step in 0..40 {
+            match rng.below(4) {
+                0 => {
+                    // host write
+                    let v = rng.uniform(-5.0, 5.0);
+                    let idx = rng.below(n as u32) as usize;
+                    mem.host_data_mut(&mut dev)[idx] = v;
+                    shadow[idx] = v;
+                }
+                1 => {
+                    // device write through a kernel (scale by known factor)
+                    let id = mem.dev_data(&mut dev);
+                    let id2 = mem.dev_data_rw(&mut dev);
+                    assert_eq!(id, id2);
+                    dev.launch(&KernelCall::new(
+                        Kernel::Scal { n, alpha: 2.0 },
+                        &[id2],
+                        &[id2],
+                    ))
+                    .unwrap();
+                    for v in shadow.iter_mut() {
+                        *v *= 2.0;
+                    }
+                }
+                2 => {
+                    // read host — must equal shadow
+                    let host = mem.host_data(&mut dev);
+                    if host != &shadow[..] {
+                        return Err(format!("step {step}: host {host:?} != {shadow:?}"));
+                    }
+                }
+                _ => {
+                    let _ = mem.dev_data(&mut dev); // sync only
+                }
+            }
+        }
+        let host = mem.host_data(&mut dev).to_vec();
+        if host != shadow {
+            return Err("final state diverged".into());
+        }
+        if mem.state() == MemState::Uninit {
+            return Err("state machine stuck at Uninit".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prototxt_emit_parse_emit_fixpoint_random_nets() {
+    tcheck::check("prototxt_fixpoint", 32, |rng| {
+        // Build a random sequential net with the builder.
+        let mut b = fecaffe::zoo::NetBuilder::new("rand");
+        b.data(rng.range_u(1, 8) as usize, 1, 16, 4, "digits");
+        let mut prev = "data".to_string();
+        let depth = rng.range_u(1, 5);
+        for i in 0..depth {
+            match rng.below(3) {
+                0 => {
+                    let name = format!("conv{i}");
+                    b.conv_relu(&name, &prev, rng.range_u(1, 8) as usize, 3, 1, 1);
+                    prev = name;
+                }
+                1 => {
+                    let name = format!("pool{i}");
+                    b.pool(&name, &prev, proto::PoolMethod::Max, 2, 2, 0);
+                    prev = name;
+                }
+                _ => {
+                    let name = format!("fc{i}");
+                    b.fc(&name, &prev, rng.range_u(2, 16) as usize);
+                    prev = name;
+                }
+            }
+        }
+        b.softmax_loss("loss", &prev, 1.0);
+        let net = b.finish();
+        let t1 = proto::emit::emit_net(&net);
+        let parsed = proto::parse_net(&t1).map_err(|e| e.to_string())?;
+        if parsed != net {
+            return Err("parse(emit(net)) != net".into());
+        }
+        let t2 = proto::emit::emit_net(&parsed);
+        if t1 != t2 {
+            return Err("emit not a fixpoint".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn insert_splits_preserves_consumer_counts() {
+    tcheck::check("split_consumers", 32, |rng| {
+        // Random DAG: each layer consumes a random earlier blob.
+        let mut layers = Vec::new();
+        let mut d = LayerParameter::new("data", "SyntheticData");
+        d.tops = vec!["b0".into()];
+        layers.push(d);
+        let n = rng.range_u(2, 10) as usize;
+        for i in 1..=n {
+            let src = rng.below(i as u32) as usize;
+            let mut l = LayerParameter::new(&format!("l{i}"), "ReLU");
+            l.bottoms = vec![format!("b{src}")];
+            l.tops = vec![format!("b{i}")];
+            layers.push(l);
+        }
+        let out = insert_splits(&layers);
+        // Invariant 1: every bottom reference resolves to a produced blob.
+        let mut produced: std::collections::HashSet<String> = Default::default();
+        for l in &out {
+            for b in &l.bottoms {
+                if !produced.contains(b) {
+                    return Err(format!("{}: bottom {b} not yet produced", l.name));
+                }
+            }
+            for t in &l.tops {
+                produced.insert(t.clone());
+            }
+        }
+        // Invariant 2: after splitting, no blob is consumed twice.
+        let mut seen: std::collections::HashMap<String, usize> = Default::default();
+        for l in &out {
+            for b in &l.bottoms {
+                *seen.entry(b.clone()).or_insert(0) += 1;
+            }
+        }
+        for (b, c) in seen {
+            if c > 1 {
+                return Err(format!("blob {b} still has {c} consumers"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn async_never_slower_than_sync() {
+    tcheck::check("async_le_sync", 24, |rng| {
+        let ops: Vec<(usize, bool)> = (0..rng.range_u(2, 20))
+            .map(|_| (rng.range_u(100, 100_000) as usize, rng.bernoulli(0.4)))
+            .collect();
+        let run = |mode: QueueMode| -> u64 {
+            let mut dev = FpgaSimDevice::new();
+            dev.timing_only = true;
+            dev.set_mode(mode);
+            let x = dev.alloc(100_000).unwrap();
+            let y = dev.alloc(100_000).unwrap();
+            let data = vec![0f32; 100_000];
+            for &(n, is_write) in &ops {
+                if is_write {
+                    dev.write(x, &data[..n]);
+                } else {
+                    dev.launch(&KernelCall::new(
+                        Kernel::ReluF { n, slope: 0.0 },
+                        &[x],
+                        &[y],
+                    ))
+                    .unwrap();
+                }
+            }
+            dev.synchronize();
+            dev.sim_clock_ns().unwrap()
+        };
+        let sync = run(QueueMode::Sync);
+        let async_ = run(QueueMode::Async);
+        if async_ > sync {
+            return Err(format!("async {async_} > sync {sync}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gemm_matches_naive_on_random_shapes() {
+    tcheck::check("gemm_naive", 32, |rng| {
+        let (m, n, k) = (
+            rng.range_u(1, 48) as usize,
+            rng.range_u(1, 48) as usize,
+            rng.range_u(1, 48) as usize,
+        );
+        let mut a = vec![0f32; m * k];
+        let mut b = vec![0f32; k * n];
+        rng.fill_uniform(&mut a, -1.0, 1.0);
+        rng.fill_uniform(&mut b, -1.0, 1.0);
+        let mut c = vec![0f32; m * n];
+        fecaffe::math::gemm(
+            fecaffe::math::Trans::No,
+            fecaffe::math::Trans::No,
+            m,
+            n,
+            k,
+            1.0,
+            &a,
+            &b,
+            0.0,
+            &mut c,
+        );
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += a[i * k + kk] * b[kk * n + j];
+                }
+                if (acc - c[i * n + j]).abs() > 1e-3 {
+                    return Err(format!("({i},{j}): {acc} vs {}", c[i * n + j]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
