@@ -1,0 +1,69 @@
+//! Serving-engine throughput bench: LeNet under a closed-loop load test
+//! at micro-batch caps 1 / 8 / 32, emitting `BENCH_serve.json`
+//! (requests/s and p99 latency per configuration).
+//! `cargo bench --bench serve_throughput`.
+
+use fecaffe::serve::{load_test, DeviceKind, Engine, EngineConfig};
+use fecaffe::util::json::Json;
+use fecaffe::util::stats::summarize;
+use fecaffe::zoo;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    const WORKERS: usize = 4;
+    const CLIENTS: usize = 16;
+    const REQUESTS: usize = 384;
+
+    let param = zoo::by_name("lenet", 1)?;
+    let mut results = Vec::new();
+    for &max_batch in &[1usize, 8, 32] {
+        let cfg = EngineConfig {
+            workers: WORKERS,
+            max_batch,
+            max_linger: Duration::from_micros(1000),
+            queue_capacity: 1024,
+            device: DeviceKind::Cpu,
+        };
+        let engine = Engine::new(&param, cfg)?;
+        // Warm the replicas (first forward pays blob upload + scratch
+        // growth), then snapshot so warm-up traffic doesn't contaminate
+        // the measured batch statistics.
+        let _ = load_test(&engine, CLIENTS, CLIENTS * 2, 1);
+        let warm = engine.metrics().snapshot();
+        let report = load_test(&engine, CLIENTS, REQUESTS, 7);
+        engine.shutdown();
+        let snap = engine.metrics().snapshot();
+        let batches = snap.batches - warm.batches;
+        let samples = snap.batched_samples - warm.batched_samples;
+        let mean_batch = if batches == 0 { 0.0 } else { samples as f64 / batches as f64 };
+
+        anyhow::ensure!(report.requests > 0, "no completed requests at max-batch {max_batch}");
+        let mut lats = report.latencies_ns.clone();
+        let s = summarize(&format!("lenet serve, max-batch {max_batch:>2}"), &mut lats);
+        println!(
+            "{}   ({:.1} req/s, mean batch {mean_batch:.2})",
+            s.line(),
+            report.rps,
+        );
+
+        let mut o = Json::obj();
+        o.set("max_batch", Json::num(max_batch as f64));
+        o.set("requests", Json::num(report.requests as f64));
+        o.set("failed", Json::num(report.failed as f64));
+        o.set("rps", Json::num(report.rps));
+        o.set("p50_ms", Json::num(s.median_ns / 1e6));
+        o.set("p99_ms", Json::num(s.p99_ns / 1e6));
+        o.set("mean_batch", Json::num(mean_batch));
+        results.push(o);
+    }
+
+    let mut root = Json::obj();
+    root.set("bench", Json::str("serve_throughput"));
+    root.set("net", Json::str("lenet"));
+    root.set("workers", Json::num(WORKERS as f64));
+    root.set("clients", Json::num(CLIENTS as f64));
+    root.set("results", Json::Arr(results));
+    std::fs::write("BENCH_serve.json", root.to_pretty())?;
+    println!("wrote BENCH_serve.json");
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Minimal serving-engine walkthrough: start an engine over LeNet,
+//! submit a few single-sample requests, read the class probabilities,
+//! shut down gracefully. `cargo run --release --example serve_quickstart`.
+
+use fecaffe::serve::{DeviceKind, Engine, EngineConfig};
+use fecaffe::util::prng::Pcg32;
+use fecaffe::zoo;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let param = zoo::by_name("lenet", 1)?;
+    let engine = Engine::new(
+        &param,
+        EngineConfig {
+            workers: 2,
+            max_batch: 4,
+            max_linger: Duration::from_millis(1),
+            queue_capacity: 64,
+            device: DeviceKind::Cpu,
+        },
+    )?;
+    println!(
+        "engine up: {} inputs/sample, {} classes",
+        engine.sample_len(),
+        engine.output_len()
+    );
+
+    // Submit four random digits; handles resolve as batches complete.
+    let mut rng = Pcg32::new(11);
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let mut sample = vec![0f32; engine.sample_len()];
+            rng.fill_uniform(&mut sample, 0.0, 1.0);
+            engine.submit(sample).expect("admission")
+        })
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = h.wait().expect("response");
+        println!(
+            "request {i}: class {} (p={:.3}) in {:?}",
+            resp.argmax(),
+            resp.values[resp.argmax()],
+            resp.latency
+        );
+    }
+
+    engine.shutdown();
+    println!("{}", engine.metrics().snapshot().render());
+    Ok(())
+}

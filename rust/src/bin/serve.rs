@@ -1,0 +1,135 @@
+//! `serve` — batched, multi-worker inference serving for any zoo model,
+//! with a self-driven closed-loop load test and a latency/throughput
+//! report.
+//!
+//! ```text
+//! serve --net lenet --workers 4 --max-batch 32
+//! serve --net googlenet --workers 2 --max-batch 8 --requests 64 --clients 8
+//! serve --net lenet --device fpga --json BENCH_serve.json
+//! ```
+
+use fecaffe::serve::{load_test, DeviceKind, Engine, EngineConfig};
+use fecaffe::util::cli::{usage, Args, Spec};
+use fecaffe::util::json::Json;
+use fecaffe::util::stats::{fmt_ns, summarize};
+use fecaffe::util::table::Table;
+use fecaffe::zoo;
+use std::time::Duration;
+
+const SPECS: &[Spec] = &[
+    Spec::opt("net", Some("lenet"), "zoo network name or net prototxt path"),
+    Spec::opt("workers", Some("4"), "worker replicas (threads)"),
+    Spec::opt("max-batch", Some("32"), "micro-batch upper bound"),
+    Spec::opt("linger-us", Some("2000"), "micro-batch linger deadline, microseconds"),
+    Spec::opt("queue-cap", Some("1024"), "admission queue capacity (backpressure bound)"),
+    Spec::opt("device", Some("cpu"), "worker device: cpu | fpga"),
+    Spec::opt("requests", Some("512"), "load-test request count"),
+    Spec::opt("clients", Some("8"), "load-test client threads"),
+    Spec::opt("json", None, "also write the report as JSON to this path"),
+];
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    let name = args.get("net").unwrap_or("lenet");
+    let param = if std::path::Path::new(name).is_file() {
+        let text = std::fs::read_to_string(name)?;
+        fecaffe::proto::parse_net(&text).map_err(anyhow::Error::msg)?
+    } else {
+        zoo::by_name(name, 1)?
+    };
+    let device = match args.get("device").unwrap_or("cpu") {
+        "cpu" => DeviceKind::Cpu,
+        "fpga" => DeviceKind::FpgaSim,
+        other => anyhow::bail!("unknown device '{other}' (cpu | fpga)"),
+    };
+    let cfg = EngineConfig {
+        workers: args.get_usize("workers").map_err(anyhow::Error::msg)?,
+        max_batch: args.get_usize("max-batch").map_err(anyhow::Error::msg)?,
+        max_linger: Duration::from_micros(
+            args.get_usize("linger-us").map_err(anyhow::Error::msg)? as u64,
+        ),
+        queue_capacity: args.get_usize("queue-cap").map_err(anyhow::Error::msg)?,
+        device,
+    };
+    let requests = args.get_usize("requests").map_err(anyhow::Error::msg)?;
+    let clients = args.get_usize("clients").map_err(anyhow::Error::msg)?;
+
+    println!(
+        "[serve] {} | {} worker(s) on {:?} | max-batch {} | linger {:?} | queue {}",
+        param.name, cfg.workers, cfg.device, cfg.max_batch, cfg.max_linger, cfg.queue_capacity
+    );
+    let engine = Engine::new(&param, cfg.clone())?;
+    println!(
+        "[serve] model ready: {} inputs/sample, {} outputs/sample, {} shared parameters",
+        engine.sample_len(),
+        engine.output_len(),
+        engine.weights().num_parameters()
+    );
+    println!("[serve] load test: {requests} requests from {clients} client(s)...");
+
+    let report = load_test(&engine, clients, requests, 0xF_EC_AF_FE);
+    engine.shutdown();
+    let snap = engine.metrics().snapshot();
+
+    anyhow::ensure!(
+        report.requests > 0,
+        "load test completed no requests ({} failed) — see worker errors above",
+        report.failed
+    );
+    let mut lats = report.latencies_ns.clone();
+    let s = summarize("request latency", &mut lats);
+
+    let mut table = Table::new(
+        &format!("{} serving load test", param.name),
+        &["Metric", "Value"],
+    );
+    table.row(&["requests completed".into(), format!("{}", report.requests)]);
+    table.row(&["wall time".into(), format!("{:.3} s", report.wall.as_secs_f64())]);
+    table.row(&["throughput".into(), format!("{:.1} req/s", report.rps)]);
+    table.row(&["latency p50".into(), fmt_ns(s.median_ns)]);
+    table.row(&["latency p95".into(), fmt_ns(s.p95_ns)]);
+    table.row(&["latency p99".into(), fmt_ns(s.p99_ns)]);
+    table.row(&["latency mean".into(), fmt_ns(s.mean_ns)]);
+    table.row(&["batches executed".into(), format!("{}", snap.batches)]);
+    table.row(&["mean batch size".into(), format!("{:.2}", snap.mean_batch)]);
+    table.row(&["full batches".into(), format!("{}", snap.full_batches)]);
+    table.row(&[
+        "backpressure retries".into(),
+        format!("{}", report.backpressure_retries),
+    ]);
+    table.row(&["failed requests".into(), format!("{}", report.failed)]);
+    println!("{}", table.render());
+
+    if let Some(path) = args.get("json") {
+        let mut o = Json::obj();
+        o.set("net", Json::str(param.name.clone()));
+        o.set("workers", Json::num(cfg.workers as f64));
+        o.set("max_batch", Json::num(cfg.max_batch as f64));
+        o.set("requests", Json::num(report.requests as f64));
+        o.set("rps", Json::num(report.rps));
+        o.set("p50_ms", Json::num(s.median_ns / 1e6));
+        o.set("p95_ms", Json::num(s.p95_ns / 1e6));
+        o.set("p99_ms", Json::num(s.p99_ns / 1e6));
+        o.set("mean_batch", Json::num(snap.mean_batch));
+        std::fs::write(path, o.to_pretty())?;
+        println!("[serve] wrote {path}");
+    }
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv, SPECS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!(
+                "error: {e}\n\n{}",
+                usage("serve", "Batched multi-worker inference serving engine", SPECS)
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -13,6 +13,34 @@
 //! (gradient) SyncedMems.
 
 use crate::device::{BufId, Device};
+use std::sync::Arc;
+
+/// Host-side storage of a [`SyncedMem`]: owned by this blob, or an
+/// `Arc` shared read-only across net replicas (weight sharing for the
+/// serving engine — see `net::WeightSnapshot`). Shared buffers detach
+/// copy-on-write the moment someone asks for mutable host access, so
+/// training a replica never writes through another replica's weights.
+#[derive(Debug, Clone)]
+enum HostBuf {
+    Owned(Vec<f32>),
+    Shared(Arc<Vec<f32>>),
+}
+
+impl HostBuf {
+    fn len(&self) -> usize {
+        match self {
+            HostBuf::Owned(v) => v.len(),
+            HostBuf::Shared(a) => a.len(),
+        }
+    }
+
+    fn as_slice(&self) -> &[f32] {
+        match self {
+            HostBuf::Owned(v) => v,
+            HostBuf::Shared(a) => a,
+        }
+    }
+}
 
 /// Head-of-data location. Mirrors paper Figure 3 (top).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,14 +59,19 @@ pub enum MemState {
 #[derive(Debug)]
 pub struct SyncedMem {
     len: usize,
-    host: Vec<f32>,
+    host: HostBuf,
     dev: Option<BufId>,
     state: MemState,
 }
 
 impl SyncedMem {
     pub fn new(len: usize) -> SyncedMem {
-        SyncedMem { len, host: Vec::new(), dev: None, state: MemState::Uninit }
+        SyncedMem {
+            len,
+            host: HostBuf::Owned(Vec::new()),
+            dev: None,
+            state: MemState::Uninit,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -58,7 +91,7 @@ impl SyncedMem {
     pub fn resize(&mut self, dev: &mut dyn Device, len: usize) {
         if len != self.len {
             self.len = len;
-            self.host.clear();
+            self.host = HostBuf::Owned(Vec::new());
             if let Some(id) = self.dev.take() {
                 dev.free(id);
             }
@@ -68,7 +101,23 @@ impl SyncedMem {
 
     fn ensure_host(&mut self) {
         if self.host.len() != self.len {
-            self.host = vec![0.0; self.len];
+            self.host = HostBuf::Owned(vec![0.0; self.len]);
+        }
+    }
+
+    /// Detach from a shared host buffer (copy-on-write).
+    fn make_owned(&mut self) {
+        if let HostBuf::Shared(a) = &self.host {
+            self.host = HostBuf::Owned(a.as_ref().clone());
+        }
+    }
+
+    /// Owned host buffer of the right length whose contents are about to
+    /// be fully overwritten (device readback): skips the copy-on-write
+    /// clone a `make_owned` would pay on a shared buffer.
+    fn ensure_owned_for_overwrite(&mut self) {
+        if self.host.len() != self.len || matches!(self.host, HostBuf::Shared(_)) {
+            self.host = HostBuf::Owned(vec![0.0; self.len]);
         }
     }
 
@@ -86,14 +135,62 @@ impl SyncedMem {
     /// `to_cpu` in the paper: make the host copy fresh.
     pub fn host_data(&mut self, dev: &mut dyn Device) -> &[f32] {
         self.sync_to_host(dev);
-        &self.host
+        self.host.as_slice()
     }
 
-    /// Mutable host access: head moves to host.
+    /// Mutable host access: head moves to host (detaching from a shared
+    /// buffer first, so replicas never write through each other).
     pub fn host_data_mut(&mut self, dev: &mut dyn Device) -> &mut [f32] {
         self.sync_to_host(dev);
+        self.make_owned();
         self.state = MemState::AtHost;
-        &mut self.host
+        match &mut self.host {
+            HostBuf::Owned(v) => v,
+            HostBuf::Shared(_) => unreachable!("make_owned detached"),
+        }
+    }
+
+    /// Snapshot the host copy as a shared (`Arc`) buffer. Subsequent
+    /// replicas can [`SyncedMem::adopt_shared`] it without copying; this
+    /// mem keeps using the same storage (read-only until the next
+    /// mutable access detaches it).
+    pub fn share_host(&mut self, dev: &mut dyn Device) -> Arc<Vec<f32>> {
+        self.sync_to_host(dev);
+        if let HostBuf::Owned(v) = &mut self.host {
+            let arc = Arc::new(std::mem::take(v));
+            self.host = HostBuf::Shared(arc);
+        }
+        match &self.host {
+            HostBuf::Shared(a) => a.clone(),
+            HostBuf::Owned(_) => unreachable!("just converted to shared"),
+        }
+    }
+
+    /// Attach a shared host buffer (replica weight adoption). The head
+    /// moves to the host; any stale device copy is released and will be
+    /// re-uploaded on the next device access.
+    pub fn adopt_shared(
+        &mut self,
+        dev: &mut dyn Device,
+        data: Arc<Vec<f32>>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            data.len() == self.len,
+            "adopt_shared: buffer has {} elements, mem expects {}",
+            data.len(),
+            self.len
+        );
+        if let Some(id) = self.dev.take() {
+            dev.free(id);
+        }
+        self.host = HostBuf::Shared(data);
+        self.state = MemState::AtHost;
+        Ok(())
+    }
+
+    /// True while the host copy is an `Arc` shared with other mems.
+    pub fn is_shared(&self) -> bool {
+        matches!(self.host, HostBuf::Shared(_))
     }
 
     /// `to_fpga` in the paper: make the device copy fresh, return its id.
@@ -126,8 +223,12 @@ impl SyncedMem {
                 self.state = MemState::AtHost;
             }
             MemState::AtDevice => {
-                self.ensure_host();
-                dev.read(self.dev.expect("AtDevice without device buffer"), &mut self.host);
+                self.ensure_owned_for_overwrite();
+                let id = self.dev.expect("AtDevice without device buffer");
+                match &mut self.host {
+                    HostBuf::Owned(v) => dev.read(id, v),
+                    HostBuf::Shared(_) => unreachable!("ensure_owned_for_overwrite"),
+                }
                 self.state = MemState::Synced;
             }
             MemState::AtHost | MemState::Synced => self.ensure_host(),
@@ -140,15 +241,12 @@ impl SyncedMem {
                 // Allocate and zero-fill on device (Caffe zero-initializes).
                 self.ensure_host();
                 let id = self.ensure_dev(dev);
-                dev.write(id, &self.host);
+                dev.write(id, self.host.as_slice());
                 self.state = MemState::Synced;
             }
             MemState::AtHost => {
                 let id = self.ensure_dev(dev);
-                // Borrow dance: write needs &mut dev and &self.host.
-                let host = std::mem::take(&mut self.host);
-                dev.write(id, &host);
-                self.host = host;
+                dev.write(id, self.host.as_slice());
                 self.state = MemState::Synced;
             }
             MemState::AtDevice | MemState::Synced => {
@@ -161,8 +259,11 @@ impl SyncedMem {
     pub fn release_dev(&mut self, dev: &mut dyn Device) {
         if let Some(id) = self.dev.take() {
             if self.state == MemState::AtDevice {
-                self.ensure_host();
-                dev.read(id, &mut self.host);
+                self.ensure_owned_for_overwrite();
+                match &mut self.host {
+                    HostBuf::Owned(v) => dev.read(id, v),
+                    HostBuf::Shared(_) => unreachable!("ensure_owned_for_overwrite"),
+                }
                 self.state = MemState::AtHost;
             } else if self.state == MemState::Synced {
                 self.state = MemState::AtHost;
@@ -317,6 +418,60 @@ mod tests {
         );
         let fc = Blob::new("y", &[10, 20]);
         assert_eq!((fc.num(), fc.channels(), fc.height(), fc.width()), (10, 20, 1, 1));
+    }
+
+    #[test]
+    fn share_and_adopt_host_buffers() {
+        let mut dev = CpuDevice::new();
+        let mut a = SyncedMem::new(3);
+        a.host_data_mut(&mut dev).copy_from_slice(&[1.0, 2.0, 3.0]);
+        let arc = a.share_host(&mut dev);
+        assert!(a.is_shared());
+        assert_eq!(a.host_data(&mut dev), &[1.0, 2.0, 3.0]);
+
+        // A second mem adopts the same storage without copying.
+        let mut b = SyncedMem::new(3);
+        b.adopt_shared(&mut dev, arc.clone()).unwrap();
+        assert!(b.is_shared());
+        assert_eq!(b.state(), MemState::AtHost);
+        assert_eq!(b.host_data(&mut dev), &[1.0, 2.0, 3.0]);
+
+        // Length mismatch is rejected.
+        let mut c = SyncedMem::new(2);
+        assert!(c.adopt_shared(&mut dev, arc).is_err());
+    }
+
+    #[test]
+    fn shared_host_detaches_copy_on_write() {
+        let mut dev = CpuDevice::new();
+        let mut a = SyncedMem::new(2);
+        a.host_data_mut(&mut dev).copy_from_slice(&[5.0, 6.0]);
+        let arc = a.share_host(&mut dev);
+        let mut b = SyncedMem::new(2);
+        b.adopt_shared(&mut dev, arc).unwrap();
+
+        // Writing through b must not be visible to a (or the Arc).
+        b.host_data_mut(&mut dev)[0] = 99.0;
+        assert!(!b.is_shared(), "mutable access must detach");
+        assert_eq!(b.host_data(&mut dev), &[99.0, 6.0]);
+        assert_eq!(a.host_data(&mut dev), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn adopted_buffer_uploads_to_device() {
+        let mut dev = CpuDevice::new();
+        let mut a = SyncedMem::new(2);
+        a.host_data_mut(&mut dev).copy_from_slice(&[7.0, 8.0]);
+        let arc = a.share_host(&mut dev);
+        let mut b = SyncedMem::new(2);
+        // Give b a device copy first; adoption must invalidate it.
+        let id0 = b.dev_data_mut(&mut dev);
+        dev.write(id0, &[0.0, 0.0]);
+        b.adopt_shared(&mut dev, arc).unwrap();
+        let id = b.dev_data(&mut dev);
+        let mut out = [0.0f32; 2];
+        dev.read(id, &mut out);
+        assert_eq!(out, [7.0, 8.0]);
     }
 
     #[test]

@@ -24,8 +24,9 @@ use profiler::Profiler;
 
 /// Pluggable numerical engine (implemented by `runtime::PjrtBackend`).
 /// Returns Ok(true) if it executed the call, Ok(false) if no artifact
-/// covers it (caller falls back to native math).
-pub trait NumericBackend {
+/// covers it (caller falls back to native math). `Send` so a device
+/// holding a backend can move into a serving worker thread.
+pub trait NumericBackend: Send {
     fn execute(&mut self, slab: &mut Slab, call: &KernelCall) -> anyhow::Result<bool>;
     /// Identifier for logs.
     fn name(&self) -> &'static str;

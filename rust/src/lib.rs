@@ -16,7 +16,10 @@
 //! * a native math library [`math`] used as the CPU fallback device and
 //!   as the correctness oracle;
 //! * the paper's evaluation: [`bench_tables`] regenerates Tables 1–4 and
-//!   Figures 4/5, with [`baseline`] implementing the F-CNN comparator.
+//!   Figures 4/5, with [`baseline`] implementing the F-CNN comparator;
+//! * an inference serving engine: [`serve`] micro-batches single-sample
+//!   requests onto a pool of warm net replicas with `Arc`-shared weights
+//!   (the `serve` binary drives it under load).
 //!
 //! See `DESIGN.md` for the experiment index and substitution notes.
 
@@ -28,6 +31,7 @@ pub mod device;
 pub mod runtime;
 pub mod layers;
 pub mod net;
+pub mod serve;
 pub mod solver;
 pub mod data;
 pub mod zoo;

@@ -17,6 +17,34 @@ use crate::device::Device;
 use crate::layers::{create_layer, shared, Layer, SharedBlob};
 use crate::proto::{LayerParameter, NetParameter, ParamSpec, Phase};
 use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::Arc;
+
+/// Immutable host-side snapshot of every learnable parameter, shared
+/// between net replicas via `Arc` — the serving engine's "weights
+/// shared, activations per-replica" contract. The snapshot is `Send +
+/// Sync`, so it can cross threads even though `Net` itself (built on
+/// `Rc<RefCell<Blob>>`) cannot: each worker thread builds its own
+/// replica from the same `NetParameter` and adopts the snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct WeightSnapshot {
+    blobs: Vec<Arc<Vec<f32>>>,
+}
+
+impl WeightSnapshot {
+    /// Number of parameter blobs in the snapshot.
+    pub fn len(&self) -> usize {
+        self.blobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blobs.is_empty()
+    }
+
+    /// Total learnable parameter count.
+    pub fn num_parameters(&self) -> usize {
+        self.blobs.iter().map(|b| b.len()).sum()
+    }
+}
 
 /// One learnable parameter with its schedule multipliers and owner.
 pub struct NetParam {
@@ -226,6 +254,55 @@ impl Net {
             .map(|b| 2 * b.borrow().bytes())
             .sum()
     }
+
+    /// Publish this net's weights as a shared snapshot. O(1) per blob
+    /// (the host vectors are moved into `Arc`s, not copied); this net
+    /// keeps using the same storage and detaches copy-on-write if it
+    /// later mutates a weight (solver step).
+    pub fn share_weights(&mut self, dev: &mut dyn Device) -> WeightSnapshot {
+        let mut blobs = Vec::with_capacity(self.params.len());
+        for p in &self.params {
+            blobs.push(p.blob.borrow_mut().data.share_host(dev));
+        }
+        WeightSnapshot { blobs }
+    }
+
+    /// Attach a shared weight snapshot to this replica. The nets must be
+    /// built from the same `NetParameter` (parameter order and sizes
+    /// must line up); activations and gradients stay per-replica.
+    pub fn adopt_weights(
+        &mut self,
+        dev: &mut dyn Device,
+        snap: &WeightSnapshot,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            snap.blobs.len() == self.params.len(),
+            "weight snapshot has {} blobs, net '{}' has {} params",
+            snap.blobs.len(),
+            self.name,
+            self.params.len()
+        );
+        // Validate every blob before mutating anything, so a mismatch
+        // can't leave the net half-adopted (mixing two weight sets).
+        for (p, shared) in self.params.iter().zip(snap.blobs.iter()) {
+            let want = p.blob.borrow().count();
+            anyhow::ensure!(
+                shared.len() == want,
+                "param of layer '{}': snapshot blob has {} elements, blob expects {}",
+                p.owner,
+                shared.len(),
+                want
+            );
+        }
+        for (p, shared) in self.params.iter().zip(snap.blobs.iter()) {
+            p.blob
+                .borrow_mut()
+                .data
+                .adopt_shared(dev, shared.clone())
+                .map_err(|e| anyhow::anyhow!("param of layer '{}': {e}", p.owner))?;
+        }
+        Ok(())
+    }
 }
 
 fn clock(dev: &mut dyn Device) -> u64 {
@@ -425,6 +502,68 @@ layer { name: "fc2" type: "InnerProduct" bottom: "fc1" top: "fc2"
             .position(|&k| k == "SoftmaxWithLoss")
             .unwrap();
         assert_eq!(net.prop_down[loss_idx], vec![true, false]);
+    }
+
+    #[test]
+    fn weight_snapshot_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<WeightSnapshot>();
+    }
+
+    #[test]
+    fn replica_adopts_shared_weights() {
+        let param = parse_net(TINY_NET).unwrap();
+
+        // Master: perturb its weights away from the seeded init so
+        // adoption is observable.
+        let mut dev_m = CpuDevice::new();
+        let mut master = Net::from_param(&param, Phase::Train, &mut dev_m).unwrap();
+        {
+            let blob = master.params()[0].blob.clone();
+            let mut b = blob.borrow_mut();
+            let w = b.data.host_data_mut(&mut dev_m);
+            for v in w.iter_mut() {
+                *v += 0.25;
+            }
+        }
+        let snap = master.share_weights(&mut dev_m);
+        assert_eq!(snap.len(), master.params().len());
+        assert_eq!(snap.num_parameters(), master.num_parameters());
+
+        // Replica on its own device adopts the snapshot: identical loss.
+        let mut dev_r = CpuDevice::new();
+        let mut replica = Net::from_param(&param, Phase::Train, &mut dev_r).unwrap();
+        replica.adopt_weights(&mut dev_r, &snap).unwrap();
+        let wm = master.params()[0].blob.borrow_mut().data_vec(&mut dev_m);
+        let wr = replica.params()[0].blob.borrow_mut().data_vec(&mut dev_r);
+        assert_eq!(wm, wr, "replica must see the master's weights");
+
+        // Both data layers draw the same seeded batch stream, so the
+        // forward losses agree bit-for-bit.
+        let lm = master.forward(&mut dev_m).unwrap();
+        let lr = replica.forward(&mut dev_r).unwrap();
+        assert_eq!(lm, lr);
+
+        // A replica backward step detaches (copy-on-write) instead of
+        // corrupting the master's weights.
+        replica.backward(&mut dev_r).unwrap();
+        {
+            let blob = replica.params()[0].blob.clone();
+            let mut b = blob.borrow_mut();
+            let w = b.data.host_data_mut(&mut dev_r);
+            w[0] = 1234.5;
+        }
+        let wm2 = master.params()[0].blob.borrow_mut().data_vec(&mut dev_m);
+        assert_eq!(wm, wm2, "master weights must be unaffected");
+    }
+
+    #[test]
+    fn adopt_rejects_mismatched_snapshot() {
+        let param = parse_net(TINY_NET).unwrap();
+        let mut dev = CpuDevice::new();
+        let mut net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+        let empty = WeightSnapshot::default();
+        assert!(net.adopt_weights(&mut dev, &empty).is_err());
     }
 
     #[test]

@@ -10,6 +10,14 @@
 
 pub mod plan;
 pub mod recording;
+
+// The PJRT executor needs the offline-vendored `xla` crate closure, so it
+// is gated behind the off-by-default `xla` feature; the stub keeps the
+// same public surface and routes every kernel to the native math path.
+#[cfg(feature = "xla")]
+pub mod pjrt;
+#[cfg(not(feature = "xla"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use plan::{kernel_plan, Arg, ExecPlan};

@@ -1,0 +1,53 @@
+//! Stub PJRT backend — compiled when the `xla` cargo feature is off.
+//!
+//! Mirrors the public surface of the real `pjrt` module so every caller
+//! (the `fecaffe` CLI, benches, integration tests) builds without the
+//! offline-vendored xla crate closure: `auto()` reports that no
+//! artifacts are available and `execute` always declines, so kernel
+//! launches fall back to the native math library. Build with
+//! `--features xla` (and the vendored `xla` crate) for real artifact
+//! execution.
+
+use crate::device::fpga::NumericBackend;
+use crate::device::native::Slab;
+use crate::device::KernelCall;
+use std::path::PathBuf;
+
+#[derive(Debug, Default, Clone)]
+pub struct BackendStats {
+    pub artifact_hits: u64,
+    pub artifact_misses: u64,
+    pub compiles: u64,
+}
+
+/// Placeholder for the PJRT-backed artifact executor.
+pub struct PjrtBackend {
+    pub stats: BackendStats,
+}
+
+impl PjrtBackend {
+    /// Always fails: this build has no PJRT client.
+    pub fn new(_dir: impl Into<PathBuf>) -> anyhow::Result<PjrtBackend> {
+        anyhow::bail!(
+            "fecaffe was built without the `xla` feature; \
+             rebuild with `--features xla` for PJRT artifact execution"
+        )
+    }
+
+    /// Auto-locate artifacts: always `None` in a stub build.
+    pub fn auto() -> Option<PjrtBackend> {
+        None
+    }
+}
+
+impl NumericBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+
+    /// Never claims a kernel: the device runs everything natively.
+    fn execute(&mut self, _slab: &mut Slab, _call: &KernelCall) -> anyhow::Result<bool> {
+        self.stats.artifact_misses += 1;
+        Ok(false)
+    }
+}

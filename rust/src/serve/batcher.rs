@@ -1,0 +1,128 @@
+//! Deadline-aware dynamic micro-batcher.
+//!
+//! A single batcher thread sits between the admission queue and the
+//! worker pool: it blocks for the first request, then lingers up to
+//! `max_linger` collecting more, and flushes as soon as the batch is
+//! full *or* the deadline passes — the classic latency/throughput knob
+//! pair (big `max_batch` + long linger amortizes per-launch overhead;
+//! linger 0 degenerates to one-request batches). The gather/scatter
+//! helpers below are the blob-packing half: N single samples become one
+//! `[max_batch, C, H, W]` input blob, and the batched output rows
+//! scatter back to the per-request response slots.
+
+use super::engine::Request;
+use super::metrics::Metrics;
+use super::queue::{Pop, SharedQueue};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Flush when this many requests have coalesced.
+    pub max_batch: usize,
+    /// Flush when the oldest request in the forming batch has waited
+    /// this long.
+    pub max_linger: Duration,
+}
+
+/// One coalesced unit of work for a worker.
+pub(crate) struct Batch {
+    pub requests: Vec<Request>,
+}
+
+/// Pack up to `max_batch` samples (each `sample_len` elements) into one
+/// batched input blob, zero-padding unused tail slots.
+pub fn gather(samples: &[&[f32]], sample_len: usize, max_batch: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; max_batch * sample_len];
+    for (i, s) in samples.iter().take(max_batch).enumerate() {
+        assert_eq!(s.len(), sample_len, "gather: sample {i} length mismatch");
+        out[i * sample_len..(i + 1) * sample_len].copy_from_slice(s);
+    }
+    out
+}
+
+/// Split the first `k` rows of a batched output blob back into
+/// per-request vectors.
+pub fn scatter(batched: &[f32], row_len: usize, k: usize) -> Vec<Vec<f32>> {
+    assert!(batched.len() >= k * row_len, "scatter: output too small");
+    (0..k)
+        .map(|i| batched[i * row_len..(i + 1) * row_len].to_vec())
+        .collect()
+}
+
+/// Batcher thread body: drains `submit` into coalesced batches on
+/// `dispatch` until `submit` is closed *and* empty (graceful shutdown
+/// therefore flushes every admitted request).
+pub(crate) fn run(
+    submit: Arc<SharedQueue<Request>>,
+    dispatch: Arc<SharedQueue<Batch>>,
+    cfg: BatcherConfig,
+    metrics: Arc<Metrics>,
+) {
+    while let Some(first) = submit.pop() {
+        // Anchor the linger at the oldest request's submit time, so queue
+        // wait counts against the deadline instead of stacking on top of
+        // it. Under backlog the deadline is already past, but pop_until
+        // still drains queued items without waiting — batches stay full.
+        let deadline = (first.submitted + cfg.max_linger).max(Instant::now());
+        let mut requests = vec![first];
+        while requests.len() < cfg.max_batch {
+            match submit.pop_until(deadline) {
+                Pop::Item(r) => requests.push(r),
+                Pop::TimedOut | Pop::Closed => break,
+            }
+        }
+        metrics.record_batch(requests.len(), cfg.max_batch);
+        if let Err(batch) = dispatch.push(Batch { requests }) {
+            // Dispatch closed under us: the worker pool is gone (build
+            // failures or panics exhausted it). Stop admissions and fail
+            // everything in flight so no caller blocks forever on a
+            // request nothing will ever pop.
+            submit.close();
+            for req in batch.requests {
+                req.fail("serving worker pool exhausted");
+            }
+            while let Some(req) = submit.pop() {
+                req.fail("serving worker pool exhausted");
+            }
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_packs_and_pads() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0];
+        let packed = gather(&[&a, &b], 2, 4);
+        assert_eq!(packed, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn scatter_returns_first_k_rows() {
+        let out = [0.1f32, 0.9, 0.8, 0.2, 7.0, 7.0];
+        let rows = scatter(&out, 2, 2);
+        assert_eq!(rows, vec![vec![0.1, 0.9], vec![0.8, 0.2]]);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let s0 = [5.0f32, 6.0, 7.0];
+        let s1 = [8.0f32, 9.0, 10.0];
+        let packed = gather(&[&s0, &s1], 3, 2);
+        let rows = scatter(&packed, 3, 2);
+        assert_eq!(rows[0], s0);
+        assert_eq!(rows[1], s1);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn gather_rejects_wrong_sample_len() {
+        let s = [1.0f32];
+        gather(&[&s], 2, 1);
+    }
+}

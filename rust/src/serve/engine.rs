@@ -1,0 +1,397 @@
+//! The serving engine: public submit/response API, admission control,
+//! and lifecycle (spawn → serve → graceful shutdown).
+//!
+//! `Engine::new` builds one *master* net replica to initialize weights,
+//! publishes them as a [`WeightSnapshot`] (host vectors behind `Arc`s),
+//! and spawns the batcher plus a pool of workers that each own a net
+//! replica adopting the snapshot — weights shared, activations
+//! per-worker. `submit` is non-blocking: when the bounded admission
+//! queue is full the caller gets [`ServeError::Overloaded`] and must
+//! back off (HTTP-429 semantics), which keeps tail latency bounded
+//! instead of letting the queue grow without limit.
+
+use super::batcher::{self, Batch, BatcherConfig};
+use super::metrics::Metrics;
+use super::queue::{PushError, SharedQueue};
+use super::worker;
+use crate::net::{Net, WeightSnapshot};
+use crate::proto::{NetParameter, Phase};
+use crate::zoo::{deploy, DeployNet};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Device each worker replica binds (one device instance per worker).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    /// Native CPU math.
+    Cpu,
+    /// Simulated Stratix 10 board (native math numerics + cost-model
+    /// timing; each worker owns a private board).
+    FpgaSim,
+}
+
+impl DeviceKind {
+    pub(crate) fn create(&self) -> Box<dyn crate::device::Device> {
+        match self {
+            DeviceKind::Cpu => Box::new(crate::device::cpu::CpuDevice::new()),
+            DeviceKind::FpgaSim => Box::new(crate::device::fpga::FpgaSimDevice::new()),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Worker replicas (one thread + one net + one device each).
+    pub workers: usize,
+    /// Micro-batch upper bound (also the replica input batch size).
+    pub max_batch: usize,
+    /// Micro-batch linger deadline.
+    pub max_linger: Duration,
+    /// Admission queue capacity — the backpressure bound.
+    pub queue_capacity: usize,
+    pub device: DeviceKind,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            workers: 2,
+            max_batch: 8,
+            max_linger: Duration::from_millis(2),
+            queue_capacity: 256,
+            device: DeviceKind::Cpu,
+        }
+    }
+}
+
+/// Why a submission (or a wait) failed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// Admission queue full — back off and retry. Hands the rejected
+    /// sample back so retries don't have to clone it per attempt.
+    Overloaded(Vec<f32>),
+    /// Engine is shutting down (or already shut down).
+    ShuttingDown,
+    /// Sample didn't match the model's input schema.
+    BadRequest(String),
+    /// Worker-side failure while executing the request.
+    Worker(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded(_) => write!(f, "engine overloaded (admission queue full)"),
+            ServeError::ShuttingDown => write!(f, "engine is shutting down"),
+            ServeError::BadRequest(m) => write!(f, "bad request: {m}"),
+            ServeError::Worker(m) => write!(f, "worker error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// One-shot response slot shared between a request and its handle.
+struct Slot {
+    result: Mutex<Option<Result<Vec<f32>, ServeError>>>,
+    ready: Condvar,
+}
+
+/// Handle to one in-flight request.
+pub struct ResponseHandle {
+    slot: Arc<Slot>,
+    submitted: Instant,
+}
+
+impl ResponseHandle {
+    /// Block until the response (or failure) arrives.
+    pub fn wait(self) -> Result<Response, ServeError> {
+        let mut guard = self.slot.result.lock().unwrap();
+        while guard.is_none() {
+            guard = self.slot.ready.wait(guard).unwrap();
+        }
+        let values = guard.take().expect("checked is_some")?;
+        Ok(Response { values, latency: self.submitted.elapsed() })
+    }
+}
+
+/// One completed inference.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// The model's output row for this sample (post-softmax scores).
+    pub values: Vec<f32>,
+    /// Submit-to-response wall time as seen by this handle.
+    pub latency: Duration,
+}
+
+impl Response {
+    /// Index of the highest-scoring class.
+    pub fn argmax(&self) -> usize {
+        let mut best = 0;
+        for (i, v) in self.values.iter().enumerate() {
+            if *v > self.values[best] {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Internal request record flowing submit → batcher → worker.
+pub(crate) struct Request {
+    pub sample: Vec<f32>,
+    pub submitted: Instant,
+    slot: Arc<Slot>,
+    metrics: Arc<Metrics>,
+}
+
+impl Request {
+    /// Resolve the slot; returns true if this call set the result.
+    fn complete(&self, r: Result<Vec<f32>, ServeError>) -> bool {
+        let mut g = self.slot.result.lock().unwrap();
+        if g.is_some() {
+            return false;
+        }
+        *g = Some(r);
+        drop(g);
+        self.slot.ready.notify_all();
+        true
+    }
+
+    pub(crate) fn fulfill(self, values: Vec<f32>) {
+        self.complete(Ok(values));
+    }
+
+    /// Fail the request; accounted in `Metrics::failed` exactly once.
+    pub(crate) fn fail(self, why: &str) {
+        if self.complete(Err(ServeError::Worker(why.to_string()))) {
+            self.metrics.record_failed();
+        }
+    }
+}
+
+impl Drop for Request {
+    /// A request dropped anywhere on the pipeline (queue teardown,
+    /// worker panic unwinding a batch) still resolves its handle — so
+    /// callers never hang on a lost request — and still counts as a
+    /// failure in the metrics.
+    fn drop(&mut self) {
+        if self.complete(Err(ServeError::Worker(
+            "request dropped before completion".to_string(),
+        ))) {
+            self.metrics.record_failed();
+        }
+    }
+}
+
+struct Threads {
+    batcher: JoinHandle<()>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// Batched, multi-worker inference serving engine.
+pub struct Engine {
+    cfg: EngineConfig,
+    deploy: DeployNet,
+    weights: WeightSnapshot,
+    output_len: usize,
+    submit_q: Arc<SharedQueue<Request>>,
+    dispatch_q: Arc<SharedQueue<Batch>>,
+    metrics: Arc<Metrics>,
+    threads: Mutex<Option<Threads>>,
+}
+
+impl Engine {
+    /// Build and start an engine for a train_val (or deploy-style)
+    /// `NetParameter`.
+    pub fn new(param: &NetParameter, cfg: EngineConfig) -> anyhow::Result<Engine> {
+        anyhow::ensure!(cfg.workers >= 1, "engine needs at least one worker");
+        anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        let dep = deploy(param, cfg.max_batch)?;
+
+        // Master replica: initialize weights once, publish the snapshot,
+        // and learn the output row length from the shaped net. Built on
+        // the *configured* device kind so device-specific build failures
+        // surface here as an Err instead of as silent worker deaths
+        // later.
+        let mut dev = cfg.device.create();
+        let mut master = Net::from_param(&dep.param, Phase::Test, dev.as_mut())?;
+        let weights = master.share_weights(dev.as_mut());
+        let out_blob = master.blob(&dep.output).ok_or_else(|| {
+            anyhow::anyhow!("deploy output blob '{}' not found in net", dep.output)
+        })?;
+        let out_count = out_blob.borrow().count();
+        anyhow::ensure!(
+            out_count % cfg.max_batch == 0,
+            "output blob '{}' count {} is not a multiple of batch {}",
+            dep.output,
+            out_count,
+            cfg.max_batch
+        );
+        let output_len = out_count / cfg.max_batch;
+        drop(out_blob);
+        drop(master);
+
+        let submit_q = Arc::new(SharedQueue::new(cfg.queue_capacity));
+        // Small dispatch buffer: enough to keep workers busy, small
+        // enough that queueing (and thus latency) stays visible at the
+        // admission queue where backpressure applies.
+        let dispatch_q = Arc::new(SharedQueue::new(cfg.workers * 2));
+        let metrics = Arc::new(Metrics::new());
+
+        // On a thread-spawn failure partway through, close the queues and
+        // join what already started — otherwise the spawned workers (each
+        // holding a warm net replica) would park on the queue forever.
+        let unwind = |workers: Vec<JoinHandle<()>>| {
+            submit_q.close();
+            dispatch_q.close();
+            for w in workers {
+                let _ = w.join();
+            }
+        };
+
+        let healthy = Arc::new(std::sync::atomic::AtomicUsize::new(cfg.workers));
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for wid in 0..cfg.workers {
+            let ctx = worker::WorkerContext {
+                id: wid,
+                deploy: dep.clone(),
+                weights: weights.clone(),
+                device: cfg.device,
+                output_len,
+                queue: dispatch_q.clone(),
+                metrics: metrics.clone(),
+                healthy: healthy.clone(),
+            };
+            match std::thread::Builder::new()
+                .name(format!("serve-worker-{wid}"))
+                .spawn(move || worker::run(ctx))
+            {
+                Ok(handle) => workers.push(handle),
+                Err(e) => {
+                    unwind(workers);
+                    return Err(anyhow::anyhow!("spawn worker {wid}: {e}"));
+                }
+            }
+        }
+
+        let bcfg = BatcherConfig { max_batch: cfg.max_batch, max_linger: cfg.max_linger };
+        let (sq, dq, bm) = (submit_q.clone(), dispatch_q.clone(), metrics.clone());
+        let batcher = match std::thread::Builder::new()
+            .name("serve-batcher".to_string())
+            .spawn(move || batcher::run(sq, dq, bcfg, bm))
+        {
+            Ok(handle) => handle,
+            Err(e) => {
+                unwind(workers);
+                return Err(anyhow::anyhow!("spawn batcher: {e}"));
+            }
+        };
+
+        Ok(Engine {
+            cfg,
+            deploy: dep,
+            weights,
+            output_len,
+            submit_q,
+            dispatch_q,
+            metrics,
+            threads: Mutex::new(Some(Threads { batcher, workers })),
+        })
+    }
+
+    /// Elements per input sample (C*H*W).
+    pub fn sample_len(&self) -> usize {
+        self.deploy.sample_len
+    }
+
+    /// Elements per output row (e.g. number of classes).
+    pub fn output_len(&self) -> usize {
+        self.output_len
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    pub fn deploy_net(&self) -> &DeployNet {
+        &self.deploy
+    }
+
+    /// The shared weight snapshot every worker replica serves from.
+    pub fn weights(&self) -> WeightSnapshot {
+        self.weights.clone()
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Submit one sample. Non-blocking admission: `Overloaded` means the
+    /// bounded queue is full and the caller should back off.
+    pub fn submit(&self, sample: Vec<f32>) -> Result<ResponseHandle, ServeError> {
+        if sample.len() != self.deploy.sample_len {
+            return Err(ServeError::BadRequest(format!(
+                "sample has {} elements, model expects {}",
+                sample.len(),
+                self.deploy.sample_len
+            )));
+        }
+        // Cheap pre-check so the common rejection path pays no Slot
+        // allocation (racy; try_push below still enforces the bound).
+        if self.submit_q.is_full() {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(ServeError::Overloaded(sample));
+        }
+        let slot = Arc::new(Slot { result: Mutex::new(None), ready: Condvar::new() });
+        let submitted = Instant::now();
+        let req = Request {
+            sample,
+            submitted,
+            slot: slot.clone(),
+            metrics: self.metrics.clone(),
+        };
+        match self.submit_q.try_push(req) {
+            Ok(()) => {
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(ResponseHandle { slot, submitted })
+            }
+            Err(PushError::Full(mut req)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                // Hand the sample back for a clone-free retry. Resolve
+                // the never-exposed slot here so the drop below doesn't
+                // book a `failed` on top of the `rejected`.
+                let sample = std::mem::take(&mut req.sample);
+                req.complete(Err(ServeError::ShuttingDown));
+                Err(ServeError::Overloaded(sample))
+            }
+            Err(PushError::Closed(_)) => Err(ServeError::ShuttingDown),
+        }
+    }
+
+    /// Graceful shutdown: stop admissions, drain every already-admitted
+    /// request through the workers, then join all threads. Idempotent;
+    /// also invoked by `Drop`.
+    pub fn shutdown(&self) {
+        let threads = self.threads.lock().unwrap().take();
+        let Some(Threads { batcher, workers }) = threads else {
+            return;
+        };
+        // 1. No new admissions; the batcher drains what's queued.
+        self.submit_q.close();
+        let _ = batcher.join();
+        // 2. Batcher flushed everything into dispatch; workers drain it.
+        self.dispatch_q.close();
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

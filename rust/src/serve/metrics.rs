@@ -1,0 +1,252 @@
+//! Serving metrics: lock-free throughput counters and a power-of-two
+//! latency histogram (p50/p95/p99).
+//!
+//! Counters are plain relaxed atomics so the request hot path never
+//! takes a lock; exact-quantile reporting for offline load tests goes
+//! through [`crate::util::stats`] instead (the CLI and bench collect
+//! per-request samples client-side and `summarize` them).
+
+use crate::util::stats::fmt_ns;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const BUCKETS: usize = 64;
+
+/// Log2-bucketed histogram over nanoseconds: bucket `i` counts samples
+/// in `[2^i, 2^(i+1))`. Quantiles return the geometric midpoint of the
+/// bucket holding the requested rank — coarse (±~40%) but constant-space
+/// and wait-free, which is what a serving hot path wants.
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, ns: u64) {
+        let idx = (63 - ns.max(1).leading_zeros() as usize).min(BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Nearest-rank quantile estimate (`q` in 0..=1).
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                // Geometric midpoint of [2^i, 2^(i+1)).
+                return (1u64 << i) as f64 * std::f64::consts::SQRT_2;
+            }
+        }
+        self.max_ns() as f64
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// Engine-wide counters, shared by the submit path, the batcher and
+/// every worker.
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_samples: AtomicU64,
+    pub full_batches: AtomicU64,
+    pub latency: Histogram,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            submitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_samples: AtomicU64::new(0),
+            full_batches: AtomicU64::new(0),
+            latency: Histogram::new(),
+        }
+    }
+
+    pub(crate) fn record_batch(&self, size: usize, max_batch: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_samples.fetch_add(size as u64, Ordering::Relaxed);
+        if size >= max_batch {
+            self.full_batches.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub(crate) fn record_done(&self, latency_ns: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latency.record(latency_ns);
+    }
+
+    pub(crate) fn record_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsReport {
+        let batches = self.batches.load(Ordering::Relaxed);
+        let samples = self.batched_samples.load(Ordering::Relaxed);
+        MetricsReport {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches,
+            batched_samples: samples,
+            full_batches: self.full_batches.load(Ordering::Relaxed),
+            mean_batch: if batches == 0 { 0.0 } else { samples as f64 / batches as f64 },
+            p50_ns: self.latency.quantile_ns(0.50),
+            p95_ns: self.latency.quantile_ns(0.95),
+            p99_ns: self.latency.quantile_ns(0.99),
+            mean_ns: self.latency.mean_ns(),
+            max_ns: self.latency.max_ns(),
+        }
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+/// Point-in-time view of [`Metrics`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsReport {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub batched_samples: u64,
+    pub full_batches: u64,
+    pub mean_batch: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+    pub mean_ns: f64,
+    pub max_ns: u64,
+}
+
+impl MetricsReport {
+    pub fn render(&self) -> String {
+        format!(
+            "requests: {} submitted, {} completed, {} failed, {} rejected\n\
+             batches:  {} ({} full), mean size {:.2}\n\
+             latency:  p50 {} / p95 {} / p99 {} (mean {}, max {})",
+            self.submitted,
+            self.completed,
+            self.failed,
+            self.rejected,
+            self.batches,
+            self.full_batches,
+            self.mean_batch,
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.p99_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.max_ns as f64),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = Histogram::new();
+        for _ in 0..90 {
+            h.record(1_000); // bucket [512, 1024) ≈ 724 ns midpoint
+        }
+        for _ in 0..10 {
+            h.record(1_000_000);
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile_ns(0.50);
+        assert!((500.0..2_000.0).contains(&p50), "p50 {p50}");
+        let p99 = h.quantile_ns(0.99);
+        assert!((500_000.0..2_000_000.0).contains(&p99), "p99 {p99}");
+        assert_eq!(h.max_ns(), 1_000_000);
+        assert!(h.mean_ns() > 1_000.0 && h.mean_ns() < 1_000_000.0);
+    }
+
+    #[test]
+    fn histogram_handles_extremes() {
+        let h = Histogram::new();
+        h.record(0); // clamped into the first bucket
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile_ns(0.01) >= 1.0);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_ns(0.99), 0.0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn metrics_snapshot_aggregates() {
+        let m = Metrics::new();
+        m.record_batch(4, 4);
+        m.record_batch(2, 4);
+        for _ in 0..6 {
+            m.record_done(2_000);
+        }
+        m.record_failed();
+        let r = m.snapshot();
+        assert_eq!(r.batches, 2);
+        assert_eq!(r.batched_samples, 6);
+        assert_eq!(r.full_batches, 1);
+        assert_eq!(r.completed, 6);
+        assert_eq!(r.failed, 1);
+        assert!((r.mean_batch - 3.0).abs() < 1e-9);
+        assert!(r.render().contains("mean size 3.00"));
+    }
+}

@@ -1,0 +1,140 @@
+//! `serve` — a batched, multi-worker inference serving engine.
+//!
+//! The path from "a trained zoo model" to "serving heavy traffic":
+//!
+//! ```text
+//!             submit()                          dispatch
+//!  clients ──────────────▶ [admission queue] ─▶ batcher ─▶ [batch queue] ─▶ worker 0..N-1
+//!             non-blocking   bounded:             deadline-aware             each: Net replica
+//!             ResponseHandle backpressure         micro-batching             + own Device
+//!                            (Overloaded)         (max_batch, max_linger)         │
+//!  ResponseHandle::wait() ◀──────────── result scatter (one output row per request)
+//! ```
+//!
+//! * **Admission control** — `Engine::submit` pushes into a bounded
+//!   queue and returns `Err(Overloaded)` when it's full, so overload
+//!   surfaces to callers instead of growing tail latency.
+//! * **Micro-batching** — the batcher coalesces single-sample requests
+//!   into one batched input blob (up to `max_batch`), flushing early
+//!   when the oldest request has lingered `max_linger`. Per-sample math
+//!   in every layer is batch-invariant, so batched outputs are
+//!   bit-identical to sequential single-sample forwards (see
+//!   `tests/integration_serve.rs`).
+//! * **Worker pool** — N threads, each owning `Net` replicas bound to
+//!   its own device (CPU or FPGA sim): a full-`max_batch` replica plus
+//!   a batch-1 fast path, both pre-built at startup, so lone requests
+//!   don't pay full-batch compute and nothing is constructed on the
+//!   serving path. Replicas adopt one shared
+//!   [`crate::net::WeightSnapshot`] (`Arc`-shared host weights);
+//!   activations stay per-worker.
+//! * **Metrics** — wait-free counters and a log2 latency histogram
+//!   (p50/p95/p99); exact quantiles for load tests come from
+//!   [`crate::util::stats`].
+//!
+//! See the `serve` binary (`cargo run --release --bin serve`) for the
+//! CLI and `benches/serve_throughput.rs` for the standing benchmark.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+mod queue;
+mod worker;
+
+pub use batcher::BatcherConfig;
+pub use engine::{
+    DeviceKind, Engine, EngineConfig, Response, ResponseHandle, ServeError,
+};
+pub use metrics::{Histogram, Metrics, MetricsReport};
+
+use crate::util::prng::Pcg32;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// Result of [`load_test`].
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Requests that completed successfully.
+    pub requests: u64,
+    /// Requests that failed (worker error, or submit refused outright).
+    pub failed: u64,
+    /// Submit attempts that hit backpressure and were retried.
+    pub backpressure_retries: u64,
+    pub wall: Duration,
+    /// Completed requests per second of wall time.
+    pub rps: f64,
+    /// Per-request submit→response latencies, nanoseconds (unsorted;
+    /// successful requests only).
+    pub latencies_ns: Vec<f64>,
+}
+
+/// Closed-loop self-driven load test: `clients` threads submit `total`
+/// random single-sample requests and wait for every response, retrying
+/// (with a short backoff) when the engine applies backpressure. Failures
+/// are counted, not fatal, so a report always comes back.
+pub fn load_test(engine: &Engine, clients: usize, total: usize, seed: u64) -> LoadReport {
+    let clients = clients.max(1);
+    let issued = AtomicUsize::new(0);
+    let retries = AtomicU64::new(0);
+    let failed = AtomicU64::new(0);
+    let t0 = Instant::now();
+    let latencies_ns: Vec<f64> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(clients);
+        for cid in 0..clients {
+            let issued = &issued;
+            let retries = &retries;
+            let failed = &failed;
+            handles.push(scope.spawn(move || {
+                let mut rng = Pcg32::with_stream(seed, cid as u64 + 1);
+                let mut lats = Vec::new();
+                'requests: loop {
+                    // Ticket per request; stop when the budget is spent.
+                    if issued.fetch_add(1, Ordering::Relaxed) >= total {
+                        break;
+                    }
+                    let mut sample = vec![0f32; engine.sample_len()];
+                    rng.fill_uniform(&mut sample, 0.0, 1.0);
+                    let handle = loop {
+                        match engine.submit(sample) {
+                            Ok(h) => break h,
+                            Err(ServeError::Overloaded(rejected)) => {
+                                // Backpressure hands the sample back —
+                                // retry without recloning it.
+                                sample = rejected;
+                                retries.fetch_add(1, Ordering::Relaxed);
+                                std::thread::sleep(Duration::from_micros(200));
+                            }
+                            Err(_) => {
+                                // Engine refused outright (shutting down,
+                                // schema mismatch): count and give up on
+                                // this client — retrying can't succeed.
+                                failed.fetch_add(1, Ordering::Relaxed);
+                                break 'requests;
+                            }
+                        }
+                    };
+                    match handle.wait() {
+                        Ok(resp) => lats.push(resp.latency.as_nanos() as f64),
+                        Err(_) => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                lats
+            }));
+        }
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("load_test client panicked"))
+            .collect()
+    });
+    let wall = t0.elapsed();
+    let requests = latencies_ns.len() as u64;
+    LoadReport {
+        requests,
+        failed: failed.load(Ordering::Relaxed),
+        backpressure_retries: retries.load(Ordering::Relaxed),
+        wall,
+        rps: requests as f64 / wall.as_secs_f64().max(1e-9),
+        latencies_ns,
+    }
+}

@@ -1,0 +1,248 @@
+//! Bounded blocking MPMC queue (Mutex + Condvar, std-only).
+//!
+//! `std::sync::mpsc` receivers are single-consumer, but the serving
+//! engine needs one dispatch queue drained by many workers and one
+//! admission queue that rejects (rather than grows) under overload —
+//! so this small queue implements both, plus the close-then-drain
+//! protocol graceful shutdown relies on: after `close`, producers fail
+//! fast while consumers keep popping until the queue is empty.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+pub struct SharedQueue<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    capacity: usize,
+    closed: bool,
+}
+
+/// Why a non-blocking push failed (the item is handed back).
+pub enum PushError<T> {
+    Full(T),
+    Closed(T),
+}
+
+/// Outcome of a deadline-bounded pop.
+pub enum Pop<T> {
+    Item(T),
+    /// Deadline passed with the queue still empty.
+    TimedOut,
+    /// Queue closed and fully drained.
+    Closed,
+}
+
+impl<T> SharedQueue<T> {
+    pub fn new(capacity: usize) -> SharedQueue<T> {
+        SharedQueue {
+            state: Mutex::new(State {
+                items: VecDeque::new(),
+                capacity: capacity.max(1),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Non-blocking push — the admission-control path.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err(PushError::Closed(item));
+        }
+        if s.items.len() >= s.capacity {
+            return Err(PushError::Full(item));
+        }
+        s.items.push_back(item);
+        drop(s);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push; `Err(item)` if the queue closed while waiting.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.closed {
+                return Err(item);
+            }
+            if s.items.len() < s.capacity {
+                break;
+            }
+            s = self.not_full.wait(s).unwrap();
+        }
+        s.items.push_back(item);
+        drop(s);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                drop(s);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    /// Pop with a deadline — the micro-batch linger wait.
+    pub fn pop_until(&self, deadline: Instant) -> Pop<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                drop(s);
+                self.not_full.notify_one();
+                return Pop::Item(item);
+            }
+            if s.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::TimedOut;
+            }
+            let (guard, _) = self.not_empty.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
+        }
+    }
+
+    /// Close the queue: wake every waiter. Producers fail from here on;
+    /// consumers keep draining until empty.
+    pub fn close(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.closed = true;
+        drop(s);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    /// Cheap admission pre-check. Racy by design — `try_push` still
+    /// enforces the bound — and false when closed so the closed case
+    /// surfaces as Closed, not Full.
+    pub fn is_full(&self) -> bool {
+        let s = self.state.lock().unwrap();
+        !s.closed && s.items.len() >= s.capacity
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_and_capacity() {
+        let q = SharedQueue::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        match q.try_push(3) {
+            Err(PushError::Full(v)) => assert_eq!(v, 3),
+            _ => panic!("expected Full"),
+        }
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(3).is_ok());
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn close_drains_then_stops() {
+        let q = SharedQueue::new(8);
+        q.try_push(1).ok();
+        q.try_push(2).ok();
+        q.close();
+        match q.try_push(3) {
+            Err(PushError::Closed(v)) => assert_eq!(v, 3),
+            _ => panic!("expected Closed"),
+        }
+        // Consumers still drain what was admitted.
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_until_times_out_then_delivers() {
+        let q = SharedQueue::new(4);
+        let deadline = Instant::now() + Duration::from_millis(10);
+        match q.pop_until(deadline) {
+            Pop::TimedOut => {}
+            _ => panic!("expected TimedOut"),
+        }
+        q.try_push(7).ok();
+        match q.pop_until(Instant::now() + Duration::from_millis(10)) {
+            Pop::Item(v) => assert_eq!(v, 7),
+            _ => panic!("expected Item"),
+        }
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumer() {
+        let q = Arc::new(SharedQueue::<u32>::new(1));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(t.join().unwrap(), None);
+    }
+
+    #[test]
+    fn multi_producer_multi_consumer() {
+        let q = Arc::new(SharedQueue::new(4));
+        let mut producers = Vec::new();
+        for p in 0..4u32 {
+            let q = q.clone();
+            producers.push(std::thread::spawn(move || {
+                for i in 0..25u32 {
+                    q.push(p * 100 + i).unwrap();
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for _ in 0..2 {
+            let q = q.clone();
+            consumers.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = q.pop() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let total: usize = consumers.into_iter().map(|c| c.join().unwrap().len()).sum();
+        assert_eq!(total, 100);
+    }
+}

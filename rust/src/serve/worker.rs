@@ -1,0 +1,160 @@
+//! Worker pool: each worker thread owns warm net replicas bound to its
+//! own device and drains the shared dispatch queue.
+//!
+//! `Net` is built on `Rc<RefCell<Blob>>` and cannot cross threads, so a
+//! worker *builds* its replicas inside the thread from the (Send)
+//! `NetParameter` and adopts the engine's `WeightSnapshot` — the
+//! `Arc`-shared host weights. Activations, scratch buffers and the
+//! device are all private to the worker, which is what makes N workers
+//! run forwards concurrently without any locking on the hot path.
+//!
+//! A worker pre-builds two replica shapes at startup — full `max_batch`
+//! for coalesced traffic and batch-1 for lone requests — so the common
+//! low-occupancy case doesn't pay a full-batch forward per request, and
+//! no net construction ever happens on the serving path.
+
+use super::batcher::{gather, scatter, Batch};
+use super::engine::DeviceKind;
+use super::metrics::Metrics;
+use super::queue::SharedQueue;
+use crate::device::Device;
+use crate::layers::SharedBlob;
+use crate::net::{Net, WeightSnapshot};
+use crate::proto::Phase;
+use crate::zoo::DeployNet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+pub(crate) struct WorkerContext {
+    pub id: usize,
+    pub deploy: DeployNet,
+    pub weights: WeightSnapshot,
+    pub device: DeviceKind,
+    /// Elements per output row (classes).
+    pub output_len: usize,
+    pub queue: Arc<SharedQueue<Batch>>,
+    pub metrics: Arc<Metrics>,
+    /// Workers still able to serve (shared across the pool).
+    pub healthy: Arc<AtomicUsize>,
+}
+
+/// Retires the worker from `healthy` however the thread exits — clean
+/// return, failed build, or panic mid-batch. The last worker out closes
+/// and fail-drains the dispatch queue, so the batcher can never block
+/// pushing into a dead pool and no caller hangs on a queued request.
+struct PoolGuard {
+    queue: Arc<SharedQueue<Batch>>,
+    healthy: Arc<AtomicUsize>,
+}
+
+impl Drop for PoolGuard {
+    fn drop(&mut self) {
+        if self.healthy.fetch_sub(1, Ordering::AcqRel) > 1 {
+            return; // healthy workers remain; they keep draining
+        }
+        self.queue.close();
+        while let Some(batch) = self.queue.pop() {
+            for req in batch.requests {
+                req.fail("serving worker pool exhausted");
+            }
+        }
+    }
+}
+
+/// One net replica at a fixed batch shape.
+struct Replica {
+    net: Net,
+    input: SharedBlob,
+    output: SharedBlob,
+    batch: usize,
+}
+
+impl Replica {
+    fn build(ctx: &WorkerContext, batch: usize, dev: &mut dyn Device) -> anyhow::Result<Replica> {
+        let mut param = ctx.deploy.param.clone();
+        anyhow::ensure!(!param.inputs.is_empty(), "deploy param has no inputs");
+        param.inputs[0].1[0] = batch;
+        let mut net = Net::from_param(&param, Phase::Test, dev)?;
+        net.adopt_weights(dev, &ctx.weights)?;
+        let input = net
+            .blob(&ctx.deploy.input)
+            .ok_or_else(|| anyhow::anyhow!("input blob '{}' missing", ctx.deploy.input))?;
+        let output = net
+            .blob(&ctx.deploy.output)
+            .ok_or_else(|| anyhow::anyhow!("output blob '{}' missing", ctx.deploy.output))?;
+        Ok(Replica { net, input, output, batch })
+    }
+
+    /// Execute one coalesced batch and scatter the results.
+    fn serve(&mut self, dev: &mut dyn Device, batch: Batch, ctx: &WorkerContext) {
+        let k = batch.requests.len();
+        let samples: Vec<&[f32]> =
+            batch.requests.iter().map(|r| r.sample.as_slice()).collect();
+        let packed = gather(&samples, ctx.deploy.sample_len, self.batch);
+        drop(samples);
+        self.input.borrow_mut().set_data(dev, &packed);
+        match self.net.forward(dev) {
+            Ok(_) => {
+                let out = self.output.borrow_mut().data_vec(dev);
+                let rows = scatter(&out, ctx.output_len, k);
+                for (req, row) in batch.requests.into_iter().zip(rows) {
+                    let ns = req.submitted.elapsed().as_nanos() as u64;
+                    req.fulfill(row);
+                    ctx.metrics.record_done(ns);
+                }
+            }
+            Err(e) => {
+                let msg = format!("worker {}: forward failed: {e:#}", ctx.id);
+                for req in batch.requests {
+                    req.fail(&msg);
+                }
+            }
+        }
+    }
+}
+
+pub(crate) fn run(ctx: WorkerContext) {
+    let _guard = PoolGuard {
+        queue: ctx.queue.clone(),
+        healthy: ctx.healthy.clone(),
+    };
+
+    let mut dev: Box<dyn Device> = ctx.device.create();
+
+    // Pre-build both replica shapes before taking traffic, so no net
+    // construction (layer setup + weight-filler init) ever lands on the
+    // serving path. The full-batch replica is mandatory (the guard
+    // retires this worker if it fails); the batch-1 replica is a
+    // fast-path optimization and its absence only costs padding.
+    let max_batch = ctx.deploy.batch;
+    let mut full = match Replica::build(&ctx, max_batch, dev.as_mut()) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("[serve] worker {}: replica build failed: {e:#}", ctx.id);
+            return;
+        }
+    };
+    let mut single = if max_batch > 1 {
+        match Replica::build(&ctx, 1, dev.as_mut()) {
+            Ok(r) => Some(r),
+            Err(e) => {
+                eprintln!(
+                    "[serve] worker {}: batch-1 replica build failed ({e:#}); \
+                     lone requests will pad to the full batch",
+                    ctx.id
+                );
+                None
+            }
+        }
+    } else {
+        None
+    };
+
+    while let Some(batch) = ctx.queue.pop() {
+        let replica = match (&mut single, batch.requests.len()) {
+            (Some(s), 1) => s,
+            _ => &mut full,
+        };
+        replica.serve(dev.as_mut(), batch, &ctx);
+    }
+}

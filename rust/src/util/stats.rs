@@ -13,21 +13,30 @@ pub struct Summary {
     pub mean_ns: f64,
     pub median_ns: f64,
     pub p95_ns: f64,
+    pub p99_ns: f64,
     pub min_ns: f64,
 }
 
 impl Summary {
     pub fn line(&self) -> String {
         format!(
-            "{:<40} n={:<4} median={:>12} mean={:>12} p95={:>12} min={:>12}",
+            "{:<40} n={:<4} median={:>12} mean={:>12} p95={:>12} p99={:>12} min={:>12}",
             self.name,
             self.samples,
             fmt_ns(self.median_ns),
             fmt_ns(self.mean_ns),
             fmt_ns(self.p95_ns),
+            fmt_ns(self.p99_ns),
             fmt_ns(self.min_ns),
         )
     }
+}
+
+/// Nearest-rank quantile of an ascending-sorted sample (`q` in 0..=1).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample");
+    let idx = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
 }
 
 pub fn fmt_ns(ns: f64) -> String {
@@ -66,13 +75,13 @@ pub fn summarize(name: &str, times: &mut [f64]) -> Summary {
     } else {
         0.5 * (times[n / 2 - 1] + times[n / 2])
     };
-    let p95 = times[((n as f64 * 0.95) as usize).min(n - 1)];
     Summary {
         name: name.to_string(),
         samples: n,
         mean_ns: mean,
         median_ns: median,
-        p95_ns: p95,
+        p95_ns: percentile(times, 0.95),
+        p99_ns: percentile(times, 0.99),
         min_ns: times[0],
     }
 }
@@ -95,6 +104,17 @@ mod tests {
     fn even_median_interpolates() {
         let mut t = vec![1.0, 2.0, 3.0, 4.0];
         assert_eq!(summarize("x", &mut t).median_ns, 2.5);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let sorted: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        assert_eq!(percentile(&sorted, 0.50), 50.0);
+        assert_eq!(percentile(&sorted, 0.95), 95.0);
+        assert_eq!(percentile(&sorted, 0.99), 99.0);
+        assert_eq!(percentile(&sorted, 1.0), 100.0);
+        assert_eq!(percentile(&sorted, 0.0), 1.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
     }
 
     #[test]

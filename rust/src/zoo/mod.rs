@@ -84,6 +84,121 @@ pub fn default_solver(name: &str) -> anyhow::Result<SolverParameter> {
     Ok(s)
 }
 
+// ----------------------------------------------------------------- deploy
+
+/// A deploy-style (inference-only) net derived from a train_val net:
+/// explicit `input` blob instead of a data layer, label-consuming layers
+/// (loss, accuracy) stripped, and a `Softmax` head producing
+/// probabilities. This is what the serving engine replicates per worker.
+#[derive(Debug, Clone)]
+pub struct DeployNet {
+    pub param: NetParameter,
+    /// Name of the input blob to fill before `forward`.
+    pub input: String,
+    /// Name of the output blob to read after `forward`.
+    pub output: String,
+    /// Batch size the input blob is shaped for.
+    pub batch: usize,
+    /// Per-sample input shape (C, H, W).
+    pub sample_shape: [usize; 3],
+    /// Elements per input sample (C*H*W).
+    pub sample_len: usize,
+}
+
+/// Derive a deploy net at the given batch size from a train_val net
+/// (zoo builder output or parsed prototxt). Nets that already use
+/// deploy-style explicit inputs are re-batched instead.
+pub fn deploy(train: &NetParameter, batch: usize) -> anyhow::Result<DeployNet> {
+    anyhow::ensure!(batch >= 1, "deploy: batch must be >= 1");
+    let mut param = NetParameter {
+        name: format!("{}_deploy", train.name),
+        ..Default::default()
+    };
+
+    let mut score_blob: Option<String> = None;
+    let mut data_shape: Option<[usize; 3]> = None;
+    let mut input_name = "data".to_string();
+    for lp in train.layers_for_phase(Phase::Test) {
+        match lp.kind.as_str() {
+            "SyntheticData" | "Data" => {
+                let p = lp.data.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!("deploy: data layer '{}' has no data_param", lp.name)
+                })?;
+                data_shape = Some([p.channels, p.height, p.width]);
+                if let Some(t) = lp.tops.first() {
+                    input_name = t.clone();
+                }
+            }
+            // Label consumers are dropped; the *last* loss names the
+            // score blob the Softmax head attaches to (GoogLeNet's aux
+            // heads come first, the main classifier last).
+            "SoftmaxWithLoss" => {
+                score_blob = lp.bottoms.first().cloned();
+            }
+            "Accuracy" => {}
+            _ => param.layers.push(lp.clone()),
+        }
+    }
+
+    let (input, sample_shape) = if let Some((name, shape)) = train.inputs.first() {
+        // Already deploy-style: re-batch the first input, keep the rest.
+        let mut s = *shape;
+        s[0] = batch;
+        param.inputs.push((name.clone(), s));
+        for (n, sh) in train.inputs.iter().skip(1) {
+            param.inputs.push((n.clone(), *sh));
+        }
+        (name.clone(), [shape[1], shape[2], shape[3]])
+    } else {
+        let [c, h, w] = data_shape.ok_or_else(|| {
+            anyhow::anyhow!("deploy: net '{}' has neither a data layer nor inputs", train.name)
+        })?;
+        param.inputs.push((input_name.clone(), [batch, c, h, w]));
+        (input_name, [c, h, w])
+    };
+
+    let output = match score_blob {
+        Some(score) => {
+            let mut sm = LayerParameter::new("prob", "Softmax");
+            sm.bottoms = vec![score];
+            sm.tops = vec!["prob".into()];
+            param.layers.push(sm);
+            "prob".to_string()
+        }
+        None => param
+            .layers
+            .last()
+            .and_then(|l| l.tops.first().cloned())
+            .ok_or_else(|| anyhow::anyhow!("deploy: net '{}' has no layers", train.name))?,
+    };
+
+    // Prune layers with no path to the output — stripping a loss leaves
+    // its upstream branch dangling (GoogLeNet's aux classifier heads are
+    // ~half the parameters), and Caffe deploy prototxts drop them too.
+    // Reverse reachability over blob names handles in-place chains.
+    let mut needed: std::collections::HashSet<String> =
+        std::iter::once(output.clone()).collect();
+    let mut keep = vec![false; param.layers.len()];
+    for (i, lp) in param.layers.iter().enumerate().rev() {
+        if lp.tops.iter().any(|t| needed.contains(t)) {
+            keep[i] = true;
+            for b in &lp.bottoms {
+                needed.insert(b.clone());
+            }
+        }
+    }
+    let mut keep_it = keep.iter();
+    param.layers.retain(|_| *keep_it.next().expect("keep mask aligned"));
+
+    let sample_len = sample_shape.iter().product();
+    Ok(DeployNet { param, input, output, batch, sample_shape, sample_len })
+}
+
+/// Convenience: deploy net for a zoo network by name.
+pub fn deploy_by_name(name: &str, batch: usize) -> anyhow::Result<DeployNet> {
+    deploy(&by_name(name, 1)?, batch)
+}
+
 // ---------------------------------------------------------------- builder
 
 /// Small fluent builder the per-net modules share.
@@ -338,5 +453,69 @@ mod tests {
     fn googlenet_uses_adam_by_default() {
         let s = default_solver("googlenet").unwrap();
         assert_eq!(s.kind, SolverKind::Adam);
+    }
+
+    #[test]
+    fn deploy_strips_training_layers() {
+        let d = deploy_by_name("lenet", 4).unwrap();
+        assert_eq!(d.batch, 4);
+        assert_eq!(d.sample_shape, [1, 28, 28]);
+        assert_eq!(d.sample_len, 28 * 28);
+        assert_eq!(d.input, "data");
+        assert_eq!(d.output, "prob");
+        assert_eq!(d.param.inputs, vec![("data".to_string(), [4, 1, 28, 28])]);
+        let kinds: Vec<&str> = d.param.layers.iter().map(|l| l.kind.as_str()).collect();
+        assert!(!kinds.contains(&"SyntheticData"));
+        assert!(!kinds.contains(&"SoftmaxWithLoss"));
+        assert!(!kinds.contains(&"Accuracy"));
+        assert_eq!(*kinds.last().unwrap(), "Softmax");
+    }
+
+    #[test]
+    fn deploy_net_runs_and_softmax_rows_sum_to_one() {
+        use crate::device::cpu::CpuDevice;
+        use crate::net::Net;
+
+        let d = deploy_by_name("lenet", 2).unwrap();
+        let mut dev = CpuDevice::new();
+        let mut net = Net::from_param(&d.param, Phase::Test, &mut dev).unwrap();
+        let input = net.blob(&d.input).unwrap();
+        assert_eq!(input.borrow().shape(), &[2, 1, 28, 28]);
+        input
+            .borrow_mut()
+            .set_data(&mut dev, &vec![0.5; 2 * d.sample_len]);
+        net.forward(&mut dev).unwrap();
+        let out = net.blob(&d.output).unwrap().borrow_mut().data_vec(&mut dev);
+        assert_eq!(out.len(), 2 * 10);
+        for row in out.chunks(10) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "softmax row sum {s}");
+        }
+    }
+
+    #[test]
+    fn deploy_builds_for_every_zoo_network() {
+        for name in NETWORKS {
+            let d = deploy_by_name(name, 1).unwrap();
+            assert!(!d.param.layers.is_empty(), "{name}");
+            assert_eq!(d.output, "prob", "{name}");
+        }
+    }
+
+    #[test]
+    fn deploy_prunes_dead_branches() {
+        // GoogLeNet's aux classifier heads hang off stripped losses —
+        // they must not survive into the serving net.
+        let d = deploy_by_name("googlenet", 1).unwrap();
+        for l in &d.param.layers {
+            assert!(
+                !l.name.starts_with("loss1/") && !l.name.starts_with("loss2/"),
+                "aux-head layer '{}' should be pruned",
+                l.name
+            );
+        }
+        // The main path survives intact up to the Softmax head.
+        assert!(d.param.layers.iter().any(|l| l.name == "loss3/classifier"));
+        assert_eq!(d.param.layers.last().unwrap().kind, "Softmax");
     }
 }

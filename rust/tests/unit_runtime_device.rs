@@ -1,0 +1,129 @@
+//! Focused coverage for two substrate pieces the serving engine leans
+//! on: `runtime::plan::bucket` (artifact-count bounding) and the
+//! `device::ScratchPool` plan/commit protocol both devices implement.
+
+use fecaffe::device::cpu::CpuDevice;
+use fecaffe::device::{BufId, Device, ScratchAction, ScratchPool};
+use fecaffe::runtime::plan::bucket;
+
+// ------------------------------------------------------------- bucket
+
+#[test]
+fn bucket_minimum_is_256() {
+    assert_eq!(bucket(0), 256);
+    assert_eq!(bucket(1), 256);
+    assert_eq!(bucket(255), 256);
+    assert_eq!(bucket(256), 256);
+}
+
+#[test]
+fn bucket_rounds_up_to_powers_of_two() {
+    assert_eq!(bucket(257), 512);
+    assert_eq!(bucket(512), 512);
+    assert_eq!(bucket(513), 1024);
+    assert_eq!(bucket(100_000), 131_072);
+    assert_eq!(bucket(1 << 20), 1 << 20);
+    // Power-of-two outputs all the way up to the exact-size threshold.
+    for n in [2usize, 300, 5_000, 900_000] {
+        assert!(bucket(n).is_power_of_two(), "bucket({n})");
+        assert!(bucket(n) >= n);
+    }
+}
+
+#[test]
+fn bucket_is_exact_above_two_pow_twenty() {
+    // Padding 37M-element FC weights to 64M would double the traffic —
+    // above 2^20 the bucket is the exact size.
+    assert_eq!(bucket((1 << 20) + 1), (1 << 20) + 1);
+    assert_eq!(bucket(37_748_736), 37_748_736);
+    assert_eq!(bucket((1 << 26) + 123), (1 << 26) + 123);
+}
+
+#[test]
+fn bucket_is_monotonic_and_idempotent() {
+    let mut prev = 0;
+    for n in (0..4096).step_by(7) {
+        let b = bucket(n);
+        assert!(b >= prev, "bucket must be monotonic at {n}");
+        assert_eq!(bucket(b), b, "bucket must be a fixed point at {n}");
+        prev = b;
+    }
+}
+
+// -------------------------------------------------------- ScratchPool
+
+#[test]
+fn scratch_pool_first_request_grows_from_nothing() {
+    let mut pool = ScratchPool::new();
+    match pool.plan(0, 100) {
+        ScratchAction::Grow(None) => {}
+        ScratchAction::Grow(Some(_)) => panic!("nothing to free on first use"),
+        ScratchAction::Use(_) => panic!("nothing to reuse on first use"),
+    }
+}
+
+#[test]
+fn scratch_pool_reuses_committed_capacity() {
+    let mut pool = ScratchPool::new();
+    assert!(matches!(pool.plan(0, 100), ScratchAction::Grow(None)));
+    pool.commit(0, BufId(7), 100);
+    // Equal and smaller requests reuse the committed buffer.
+    match pool.plan(0, 100) {
+        ScratchAction::Use(id) => assert_eq!(id, BufId(7)),
+        _ => panic!("expected Use"),
+    }
+    match pool.plan(0, 40) {
+        ScratchAction::Use(id) => assert_eq!(id, BufId(7)),
+        _ => panic!("expected Use for smaller request"),
+    }
+}
+
+#[test]
+fn scratch_pool_grow_hands_back_old_buffer() {
+    let mut pool = ScratchPool::new();
+    pool.plan(0, 100);
+    pool.commit(0, BufId(7), 100);
+    match pool.plan(0, 200) {
+        ScratchAction::Grow(Some(old)) => assert_eq!(old, BufId(7)),
+        _ => panic!("larger request must grow and free the old buffer"),
+    }
+    pool.commit(0, BufId(9), 200);
+    // The grown capacity now serves requests the old one couldn't.
+    match pool.plan(0, 150) {
+        ScratchAction::Use(id) => assert_eq!(id, BufId(9)),
+        _ => panic!("expected Use after growth"),
+    }
+}
+
+#[test]
+fn scratch_pool_slots_are_independent() {
+    let mut pool = ScratchPool::new();
+    pool.plan(0, 10);
+    pool.commit(0, BufId(1), 10);
+    // A far slot starts empty even though slot 0 is committed.
+    assert!(matches!(pool.plan(3, 10), ScratchAction::Grow(None)));
+    pool.commit(3, BufId(2), 10);
+    match (pool.plan(0, 10), pool.plan(3, 10)) {
+        (ScratchAction::Use(a), ScratchAction::Use(b)) => {
+            assert_eq!(a, BufId(1));
+            assert_eq!(b, BufId(2));
+        }
+        _ => panic!("both slots must reuse their own buffers"),
+    }
+}
+
+#[test]
+fn cpu_device_scratch_follows_plan_commit() {
+    let mut dev = CpuDevice::new();
+    let a = dev.scratch(0, 64).unwrap();
+    let b = dev.scratch(0, 64).unwrap();
+    assert_eq!(a, b, "same-size scratch request must reuse the buffer");
+    let c = dev.scratch(0, 32).unwrap();
+    assert_eq!(a, c, "smaller scratch request must reuse the buffer");
+    let d = dev.scratch(1, 64).unwrap();
+    assert_ne!(a, d, "slots are distinct buffers");
+    // Growth re-allocates but the committed id keeps serving afterwards.
+    let e = dev.scratch(0, 1024).unwrap();
+    let f = dev.scratch(0, 512).unwrap();
+    assert_eq!(e, f);
+}
