@@ -1,17 +1,23 @@
 //! Perf bench — the L3 hot path (DESIGN.md §7 targets):
 //!   * kernel-launch overhead on the simulator (bookkeeping only),
-//!   * native gemm throughput (CPU fallback engine),
+//!   * native gemm throughput (CPU fallback engine) at 1 and N intra-op
+//!     threads → `BENCH_gemm.json` (machine-readable perf trajectory,
+//!     like `BENCH_serve.json`),
 //!   * PJRT dispatch overhead per artifact launch (marshal + execute),
 //!   * end-to-end LeNet train-iteration rate.
-//! Results feed EXPERIMENTS.md §Perf.
+//! Results feed EXPERIMENTS.md §Perf and the README "Performance"
+//! section.
 
 use fecaffe::device::cpu::CpuDevice;
 use fecaffe::device::fpga::FpgaSimDevice;
 use fecaffe::device::{Device, Kernel, KernelCall};
+use fecaffe::math::{self, Trans};
 use fecaffe::net::Net;
 use fecaffe::proto::Phase;
 use fecaffe::runtime::PjrtBackend;
 use fecaffe::solver::Solver;
+use fecaffe::util::json::Json;
+use fecaffe::util::pool;
 use fecaffe::util::stats::bench;
 use fecaffe::zoo;
 
@@ -29,15 +35,92 @@ fn main() -> anyhow::Result<()> {
         println!("{}", s.line());
     }
 
-    // 2. Native gemm throughput (googlenet inception 3x3 shape).
+    // 2. Native packed GEMM throughput at 1 thread and the full intra-op
+    //    budget → BENCH_gemm.json. Shapes: the googlenet inception-3x3
+    //    forward NN gemm (m=128, k=1152, n=784) and a LeNet conv2
+    //    backward data-grad TN gemm (m=500, n=64, k=50).
+    {
+        struct Shape {
+            label: &'static str,
+            ta: Trans,
+            tb: Trans,
+            m: usize,
+            n: usize,
+            k: usize,
+        }
+        let shapes = [
+            Shape {
+                label: "googlenet_3x3_NN",
+                ta: Trans::No,
+                tb: Trans::No,
+                m: 128,
+                n: 784,
+                k: 1152,
+            },
+            Shape {
+                label: "lenet_conv2_bwd_TN",
+                ta: Trans::Yes,
+                tb: Trans::No,
+                m: 500,
+                n: 64,
+                k: 50,
+            },
+        ];
+        let max_threads = pool::default_threads();
+        let mut results = Vec::new();
+        for sh in &shapes {
+            // Random data: zero buffers would trip the unpacked remainder
+            // path's zero-skip and overstate throughput.
+            let mut rng = fecaffe::util::prng::Pcg32::new(1);
+            let mut va = vec![0f32; sh.m * sh.k];
+            let mut vb = vec![0f32; sh.k * sh.n];
+            rng.fill_uniform(&mut va, -1.0, 1.0);
+            rng.fill_uniform(&mut vb, -1.0, 1.0);
+            let mut vc = vec![0f32; sh.m * sh.n];
+            let flops = 2.0 * (sh.m * sh.n * sh.k) as f64;
+            let mut threads: Vec<usize> = vec![1];
+            if max_threads > 1 {
+                threads.push(max_threads);
+            }
+            for &t in &threads {
+                let name = format!("gemm {} {}x{}x{} t={t}", sh.label, sh.m, sh.n, sh.k);
+                let iters = if sh.m * sh.n * sh.k > 10_000_000 { 20 } else { 60 };
+                let s = pool::with_intra_op(t, || {
+                    bench(&name, 2, iters, || {
+                        math::gemm(
+                            sh.ta, sh.tb, sh.m, sh.n, sh.k, 1.0, &va, &vb, 0.0, &mut vc,
+                        );
+                    })
+                });
+                let gflops = flops / s.median_ns;
+                println!("{}   ({gflops:.2} GFLOP/s)", s.line());
+                let mut o = Json::obj();
+                o.set("shape", Json::str(sh.label));
+                o.set("m", Json::num(sh.m as f64));
+                o.set("n", Json::num(sh.n as f64));
+                o.set("k", Json::num(sh.k as f64));
+                o.set("threads", Json::num(t as f64));
+                o.set("median_ns", Json::num(s.median_ns));
+                o.set("gflops", Json::num(gflops));
+                results.push(o);
+            }
+        }
+        let mut root = Json::obj();
+        root.set("bench", Json::str("gemm"));
+        root.set("max_threads", Json::num(max_threads as f64));
+        root.set("results", Json::Arr(results));
+        std::fs::write("BENCH_gemm.json", root.to_pretty())?;
+        println!("wrote BENCH_gemm.json");
+    }
+
+    // 2b. Same gemm through the CPU device launch path (adds dispatch +
+    //     slab bookkeeping to the kernel time above).
     {
         let mut dev = CpuDevice::new();
         let (m, k, n) = (128usize, 1152, 784);
         let a = dev.alloc(m * k)?;
         let b = dev.alloc(k * n)?;
         let c = dev.alloc(m * n)?;
-        // Random data: zero buffers would trip the gemm zero-skip fast
-        // path and overstate throughput.
         let mut rng = fecaffe::util::prng::Pcg32::new(1);
         let mut va = vec![0f32; m * k];
         let mut vb = vec![0f32; k * n];
@@ -50,7 +133,7 @@ fn main() -> anyhow::Result<()> {
             &[a, b],
             &[c],
         );
-        let s = bench("native gemm 128x1152x784", 2, 20, || {
+        let s = bench("native gemm 128x1152x784 (device)", 2, 20, || {
             dev.launch(&call).unwrap();
         });
         let gflops = 2.0 * (m * n * k) as f64 / s.median_ns;

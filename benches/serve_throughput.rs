@@ -23,6 +23,7 @@ fn main() -> anyhow::Result<()> {
             max_linger: Duration::from_micros(1000),
             queue_capacity: 1024,
             device: DeviceKind::Cpu,
+            intra_op_threads: 0, // auto: split the machine across workers
         };
         let engine = Engine::new(&param, cfg)?;
         // Warm the replicas (first forward pays blob upload + scratch

@@ -17,6 +17,8 @@ fn main() -> anyhow::Result<()> {
             max_linger: Duration::from_millis(1),
             queue_capacity: 64,
             device: DeviceKind::Cpu,
+            // 0 = split the process thread budget across the 2 workers.
+            intra_op_threads: 0,
         },
     )?;
     println!(

@@ -23,6 +23,11 @@ const SPECS: &[Spec] = &[
     Spec::opt("linger-us", Some("2000"), "micro-batch linger deadline, microseconds"),
     Spec::opt("queue-cap", Some("1024"), "admission queue capacity (backpressure bound)"),
     Spec::opt("device", Some("cpu"), "worker device: cpu | fpga"),
+    Spec::opt(
+        "intra-op",
+        Some("0"),
+        "intra-op threads per worker (0 = split FECAFFE_THREADS evenly)",
+    ),
     Spec::opt("requests", Some("512"), "load-test request count"),
     Spec::opt("clients", Some("8"), "load-test client threads"),
     Spec::opt("json", None, "also write the report as JSON to this path"),
@@ -49,13 +54,20 @@ fn run(args: &Args) -> anyhow::Result<()> {
         ),
         queue_capacity: args.get_usize("queue-cap").map_err(anyhow::Error::msg)?,
         device,
+        intra_op_threads: args.get_usize("intra-op").map_err(anyhow::Error::msg)?,
     };
     let requests = args.get_usize("requests").map_err(anyhow::Error::msg)?;
     let clients = args.get_usize("clients").map_err(anyhow::Error::msg)?;
 
     println!(
-        "[serve] {} | {} worker(s) on {:?} | max-batch {} | linger {:?} | queue {}",
-        param.name, cfg.workers, cfg.device, cfg.max_batch, cfg.max_linger, cfg.queue_capacity
+        "[serve] {} | {} worker(s) x {} intra-op thread(s) on {:?} | max-batch {} | linger {:?} | queue {}",
+        param.name,
+        cfg.workers,
+        cfg.intra_op_budget(),
+        cfg.device,
+        cfg.max_batch,
+        cfg.max_linger,
+        cfg.queue_capacity
     );
     let engine = Engine::new(&param, cfg.clone())?;
     println!(
@@ -97,6 +109,13 @@ fn run(args: &Args) -> anyhow::Result<()> {
         format!("{}", report.backpressure_retries),
     ]);
     table.row(&["failed requests".into(), format!("{}", report.failed)]);
+    if snap.sim_batches > 0 {
+        // FPGA-sim workers: batch cost in *simulated* device time (the
+        // paper's cost model), alongside host wallclock.
+        table.row(&["sim time / batch p50".into(), fmt_ns(snap.sim_p50_ns)]);
+        table.row(&["sim time / batch p99".into(), fmt_ns(snap.sim_p99_ns)]);
+        table.row(&["sim time total".into(), fmt_ns(snap.sim_total_ns as f64)]);
+    }
     println!("{}", table.render());
 
     if let Some(path) = args.get("json") {
@@ -110,6 +129,11 @@ fn run(args: &Args) -> anyhow::Result<()> {
         o.set("p95_ms", Json::num(s.p95_ns / 1e6));
         o.set("p99_ms", Json::num(s.p99_ns / 1e6));
         o.set("mean_batch", Json::num(snap.mean_batch));
+        if snap.sim_batches > 0 {
+            o.set("sim_batch_p50_ms", Json::num(snap.sim_p50_ns / 1e6));
+            o.set("sim_batch_p99_ms", Json::num(snap.sim_p99_ns / 1e6));
+            o.set("sim_total_ms", Json::num(snap.sim_total_ns as f64 / 1e6));
+        }
         std::fs::write(path, o.to_pretty())?;
         println!("[serve] wrote {path}");
     }

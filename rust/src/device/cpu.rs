@@ -7,17 +7,29 @@
 
 use super::native::{execute, Slab};
 use super::{BufId, Device, KernelCall, ScratchAction, ScratchPool};
+use crate::util::pool;
 
 #[derive(Default)]
 pub struct CpuDevice {
     slab: Slab,
     launches: u64,
     scratch: ScratchPool,
+    /// Intra-op thread cap applied around kernel execution (0 = inherit
+    /// the calling thread's budget / process default).
+    intra_op: usize,
 }
 
 impl CpuDevice {
     pub fn new() -> CpuDevice {
         CpuDevice::default()
+    }
+
+    /// Cap this device's kernels at `threads` intra-op threads (0 clears
+    /// the cap). Serving workers use this so N inter-op workers × their
+    /// intra-op pools never oversubscribe the machine.
+    pub fn with_intra_op(mut self, threads: usize) -> CpuDevice {
+        self.intra_op = threads;
+        self
     }
 
     pub fn launches(&self) -> u64 {
@@ -62,7 +74,8 @@ impl Device for CpuDevice {
 
     fn launch(&mut self, call: &KernelCall) -> anyhow::Result<()> {
         self.launches += 1;
-        execute(&mut self.slab, call)
+        let slab = &mut self.slab;
+        pool::with_intra_op(self.intra_op, || execute(slab, call))
     }
 
     fn scratch(&mut self, slot: usize, len: usize) -> anyhow::Result<BufId> {

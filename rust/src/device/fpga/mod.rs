@@ -66,6 +66,10 @@ pub struct FpgaSimDevice {
     /// Effective host memory bandwidth for partitioned kernels (a single
     /// Core i7-7700K channel pair sustains ~20 GB/s).
     pub host_bw_bytes_per_s: f64,
+    /// Intra-op thread cap for *native* kernel execution (0 = inherit).
+    /// Only the host-side numerics engine parallelizes; the simulated
+    /// board's timing is unaffected.
+    intra_op: usize,
 }
 
 impl FpgaSimDevice {
@@ -87,7 +91,15 @@ impl FpgaSimDevice {
             timing_only: false,
             host_classes: Default::default(),
             host_bw_bytes_per_s: 20.0e9,
+            intra_op: 0,
         }
+    }
+
+    /// Cap native-numerics kernels at `threads` intra-op threads
+    /// (0 clears the cap); see [`crate::util::pool`].
+    pub fn with_intra_op(mut self, threads: usize) -> FpgaSimDevice {
+        self.intra_op = threads;
+        self
     }
 
     /// Enable §5.2 partitioning for a kernel class (e.g. Im2col/Col2im).
@@ -231,7 +243,8 @@ impl Device for FpgaSimDevice {
             if via_artifact {
                 self.profiler.artifact_launches += 1;
             } else {
-                execute(&mut self.slab, call)?;
+                let slab = &mut self.slab;
+                crate::util::pool::with_intra_op(self.intra_op, || execute(slab, call))?;
                 self.profiler.native_launches += 1;
             }
         }

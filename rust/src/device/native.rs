@@ -179,60 +179,47 @@ pub fn execute(slab: &mut Slab, call: &KernelCall) -> anyhow::Result<()> {
             Im2col { geom } => math::im2col(geom, inp(0), out!(0)),
             Col2im { geom } => math::col2im(geom, inp(0), out!(0)),
             MaxPoolF { geom, num } => {
+                // top=0, mask=1 — whole batch, images sharded in the math
+                // layer across the intra-op pool.
                 let (il, ol) = (geom.in_len(), geom.out_len());
                 let (ot, om) = (call.out_offsets[0], call.out_offsets[1]);
-                // take both outputs: top=0, mask=1 — iterate images
-                for i in 0..*num {
-                    let bottom = &inp(0)[i * il..(i + 1) * il];
-                    // split the two output buffers
-                    let (top_pair, mask_pair) = out_bufs.split_at_mut(1);
-                    math::max_pool_forward(
-                        geom,
-                        bottom,
-                        &mut top_pair[0].1[ot + i * ol..ot + (i + 1) * ol],
-                        &mut mask_pair[0].1[om + i * ol..om + (i + 1) * ol],
-                    );
-                }
+                let (top_pair, mask_pair) = out_bufs.split_at_mut(1);
+                math::max_pool_forward_batch(
+                    geom,
+                    *num,
+                    &inp(0)[..*num * il],
+                    &mut top_pair[0].1[ot..ot + *num * ol],
+                    &mut mask_pair[0].1[om..om + *num * ol],
+                );
             }
             MaxPoolB { geom, num } => {
-                let (il, ol) = (geom.in_len(), geom.out_len());
-                let bd = &mut out_bufs[0].1[call.out_offsets[0]..];
-                for v in bd.iter_mut() {
-                    *v = 0.0;
-                }
-                for i in 0..*num {
-                    math::max_pool_backward(
-                        geom,
-                        &inp(0)[i * ol..(i + 1) * ol],
-                        &inp(1)[i * ol..(i + 1) * ol],
-                        &mut bd[i * il..(i + 1) * il],
-                    );
-                }
+                let ol = geom.out_len();
+                math::max_pool_backward_batch(
+                    geom,
+                    *num,
+                    &inp(0)[..*num * ol],
+                    &inp(1)[..*num * ol],
+                    &mut out_bufs[0].1[call.out_offsets[0]..],
+                );
             }
             AvePoolF { geom, num } => {
                 let (il, ol) = (geom.in_len(), geom.out_len());
                 let ot = call.out_offsets[0];
-                for i in 0..*num {
-                    math::ave_pool_forward(
-                        geom,
-                        &inp(0)[i * il..(i + 1) * il],
-                        &mut out_bufs[0].1[ot + i * ol..ot + (i + 1) * ol],
-                    );
-                }
+                math::ave_pool_forward_batch(
+                    geom,
+                    *num,
+                    &inp(0)[..*num * il],
+                    &mut out_bufs[0].1[ot..ot + *num * ol],
+                );
             }
             AvePoolB { geom, num } => {
-                let (il, ol) = (geom.in_len(), geom.out_len());
-                let bd = &mut out_bufs[0].1[call.out_offsets[0]..];
-                for v in bd.iter_mut() {
-                    *v = 0.0;
-                }
-                for i in 0..*num {
-                    math::ave_pool_backward(
-                        geom,
-                        &inp(0)[i * ol..(i + 1) * ol],
-                        &mut bd[i * il..(i + 1) * il],
-                    );
-                }
+                let ol = geom.out_len();
+                math::ave_pool_backward_batch(
+                    geom,
+                    *num,
+                    &inp(0)[..*num * ol],
+                    &mut out_bufs[0].1[call.out_offsets[0]..],
+                );
             }
             ReluF { n, slope } => {
                 math::relu_forward(&inp(0)[..*n], &mut out!(0)[..*n], *slope)
@@ -246,38 +233,36 @@ pub fn execute(slab: &mut Slab, call: &KernelCall) -> anyhow::Result<()> {
             LrnScale { num, channels, dim, local_size, alpha, k } => {
                 let plane = channels * dim;
                 let ot = call.out_offsets[0];
-                for i in 0..*num {
-                    math::lrn_scale(
-                        &inp(0)[i * plane..(i + 1) * plane],
-                        &mut out_bufs[0].1[ot + i * plane..ot + (i + 1) * plane],
-                        *channels,
-                        *dim,
-                        *local_size,
-                        *alpha,
-                        *k,
-                    );
-                }
+                math::lrn_scale_batch(
+                    *num,
+                    &inp(0)[..*num * plane],
+                    &mut out_bufs[0].1[ot..ot + *num * plane],
+                    *channels,
+                    *dim,
+                    *local_size,
+                    *alpha,
+                    *k,
+                );
             }
             LrnOutput { n, beta } => {
                 math::lrn_output(&inp(0)[..*n], &inp(1)[..*n], &mut out!(0)[..*n], *beta)
             }
             LrnDiff { num, channels, dim, local_size, alpha, beta } => {
                 let plane = channels * dim;
-                for i in 0..*num {
-                    let r = i * plane..(i + 1) * plane;
-                    math::lrn_diff(
-                        &inp(0)[r.clone()],
-                        &inp(1)[r.clone()],
-                        &inp(2)[r.clone()],
-                        &inp(3)[r.clone()],
-                        &mut out_bufs[0].1[call.out_offsets[0] + r.start..call.out_offsets[0] + r.end],
-                        *channels,
-                        *dim,
-                        *local_size,
-                        *alpha,
-                        *beta,
-                    );
-                }
+                let o = call.out_offsets[0];
+                math::lrn_diff_batch(
+                    *num,
+                    inp(0),
+                    inp(1),
+                    inp(2),
+                    inp(3),
+                    &mut out_bufs[0].1[o..o + *num * plane],
+                    *channels,
+                    *dim,
+                    *local_size,
+                    *alpha,
+                    *beta,
+                );
             }
             DropoutF { n, scale } => math::dropout_forward(
                 &inp(0)[..*n],

@@ -4,6 +4,15 @@
 //! image in forward; `Gemv` bias-grad, `Gemm` weight/data-grad and
 //! `Col2im` per image in backward). 1×1/stride-1/pad-0 convolutions skip
 //! im2col and address the input directly (Caffe's `is_1x1_` fast path).
+//!
+//! The per-(image, group) loop stays serial at the launch level — kernel
+//! ordering is the paper's accounting unit and the device interface is
+//! synchronous — but every launched kernel (im2col, the packed GEMMs,
+//! col2im, the bias gemv) shards internally across the intra-op pool
+//! (`util::pool`), so the training hot path uses the whole machine while
+//! per-image results stay bit-identical to the serial schedule. All
+//! loop-invariant buffer lookups are hoisted out of the image loop so
+//! the launch path does no redundant blob resolution.
 
 use super::{fill_blob, Layer, SharedBlob};
 use crate::blob::Blob;
@@ -170,18 +179,25 @@ impl Layer for ConvolutionLayer {
         let b_id = bottom.data.dev_data(dev);
         let t_id = top.data.dev_data_mut(dev);
         let w_id = self.weight.borrow_mut().data.dev_data(dev);
+        // Hoisted: resolving the bias blob per image would re-walk the
+        // SyncedMem state machine num times for the same BufId.
+        let bias_id = match &self.bias {
+            Some(bias) => Some(bias.borrow_mut().data.dev_data(dev)),
+            None => None,
+        };
+        let scratch_col = if self.is_1x1 { None } else { Some(dev.scratch(0, geom.col_len())?) };
 
         for i in 0..self.num {
             // im2col (skipped for 1x1: the input *is* the col matrix).
-            let (col_id, col_base) = if self.is_1x1 {
-                (b_id, i * in_len)
-            } else {
-                let cid = dev.scratch(0, geom.col_len())?;
-                dev.launch(
-                    &KernelCall::new(Kernel::Im2col { geom }, &[b_id], &[cid])
-                        .at(&[i * in_len], &[0]),
-                )?;
-                (cid, 0)
+            let (col_id, col_base) = match scratch_col {
+                None => (b_id, i * in_len),
+                Some(cid) => {
+                    dev.launch(
+                        &KernelCall::new(Kernel::Im2col { geom }, &[b_id], &[cid])
+                            .at(&[i * in_len], &[0]),
+                    )?;
+                    (cid, 0)
+                }
             };
             for gi in 0..g {
                 dev.launch(
@@ -196,8 +212,7 @@ impl Layer for ConvolutionLayer {
                     ),
                 )?;
             }
-            if let Some(bias) = &self.bias {
-                let bias_id = bias.borrow_mut().data.dev_data(dev);
+            if let Some(bias_id) = bias_id {
                 dev.launch(
                     &KernelCall::new(
                         Kernel::BiasF { outer: 1, channels: self.p.num_output, dim: ohw },
@@ -268,17 +283,23 @@ impl Layer for ConvolutionLayer {
             ))?;
         }
 
+        let scratch_col = if self.is_1x1 { None } else { Some(dev.scratch(0, geom.col_len())?) };
+        let scratch_cd = if self.is_1x1 || !prop {
+            None
+        } else {
+            Some(dev.scratch(1, geom.col_len())?)
+        };
         for i in 0..self.num {
             // Recompute col (Caffe does the same in backward).
-            let (col_id, col_base) = if self.is_1x1 {
-                (b_id, i * in_len)
-            } else {
-                let cid = dev.scratch(0, geom.col_len())?;
-                dev.launch(
-                    &KernelCall::new(Kernel::Im2col { geom }, &[b_id], &[cid])
-                        .at(&[i * in_len], &[0]),
-                )?;
-                (cid, 0)
+            let (col_id, col_base) = match scratch_col {
+                None => (b_id, i * in_len),
+                Some(cid) => {
+                    dev.launch(
+                        &KernelCall::new(Kernel::Im2col { geom }, &[b_id], &[cid])
+                            .at(&[i * in_len], &[0]),
+                    )?;
+                    (cid, 0)
+                }
             };
             // Weight gradient: wd_g += top_diff_g · col_g^T.
             for gi in 0..g {
@@ -319,7 +340,7 @@ impl Layer for ConvolutionLayer {
                         )?;
                     }
                 } else {
-                    let cd_id = dev.scratch(1, geom.col_len())?;
+                    let cd_id = scratch_cd.expect("col-diff scratch reserved above");
                     for gi in 0..g {
                         dev.launch(
                             &KernelCall::new(

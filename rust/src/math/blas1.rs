@@ -1,36 +1,61 @@
 //! Level-1 BLAS + elementwise kernels (paper Table 2: `Add`, `Asum`,
 //! `Axpy`, `Scale`, `ReLU_F/B`, `Dropout_F/B`, `Bias`, ...). These are the
 //! "BLAS-related" kernel group of the paper's L1 layer.
+//!
+//! Every *map*-shaped op (disjoint output element per input element)
+//! shards across the intra-op pool above [`pool::GRAIN_ELEMWISE`]
+//! elements; below that a pool wakeup costs more than the loop.
+//! Reductions (`asum`, `dot`) stay serial on purpose: chunked partial
+//! sums would make the result depend on the thread count, and these feed
+//! loss/gradient-norm numbers that must be identical between the
+//! `FECAFFE_THREADS=1` CI leg and the default one.
+
+use crate::util::pool::{self, GRAIN_ELEMWISE};
+
+/// `powf` is ~an order of magnitude more expensive than an FMA, so powx
+/// (and the LRN output path) fan out at a smaller grain.
+pub(crate) const GRAIN_POWF: usize = 1024;
 
 /// y += alpha * x
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), y.len());
-    for (yv, &xv) in y.iter_mut().zip(x.iter()) {
-        *yv += alpha * xv;
-    }
+    pool::parallel_chunks_mut(y, GRAIN_ELEMWISE, |off, yc| {
+        // Reslice once per chunk: zip gives the compiler bounds-check-free,
+        // vectorizable loops (indexing x[off + i] would not).
+        let xc = &x[off..off + yc.len()];
+        for (yv, &xv) in yc.iter_mut().zip(xc.iter()) {
+            *yv += alpha * xv;
+        }
+    });
 }
 
 /// y = alpha * x + beta * y
 pub fn axpby(alpha: f32, x: &[f32], beta: f32, y: &mut [f32]) {
     assert_eq!(x.len(), y.len());
-    for (yv, &xv) in y.iter_mut().zip(x.iter()) {
-        *yv = alpha * xv + beta * *yv;
-    }
+    pool::parallel_chunks_mut(y, GRAIN_ELEMWISE, |off, yc| {
+        let xc = &x[off..off + yc.len()];
+        for (yv, &xv) in yc.iter_mut().zip(xc.iter()) {
+            *yv = alpha * xv + beta * *yv;
+        }
+    });
 }
 
 /// x *= alpha
 pub fn scal(alpha: f32, x: &mut [f32]) {
-    for v in x.iter_mut() {
-        *v *= alpha;
-    }
+    pool::parallel_chunks_mut(x, GRAIN_ELEMWISE, |_, xc| {
+        for v in xc.iter_mut() {
+            *v *= alpha;
+        }
+    });
 }
 
-/// sum of |x|
+/// sum of |x| — serial: a fixed summation order keeps the value
+/// independent of the thread budget.
 pub fn asum(x: &[f32]) -> f32 {
     x.iter().map(|v| v.abs()).sum()
 }
 
-/// dot product
+/// dot product — serial, same determinism rationale as `asum`.
 pub fn dot(x: &[f32], y: &[f32]) -> f32 {
     assert_eq!(x.len(), y.len());
     x.iter().zip(y.iter()).map(|(a, b)| a * b).sum()
@@ -39,39 +64,55 @@ pub fn dot(x: &[f32], y: &[f32]) -> f32 {
 /// z = x + y (paper's `Add` kernel — eltwise sum used by Split backward)
 pub fn add(x: &[f32], y: &[f32], z: &mut [f32]) {
     assert!(x.len() == y.len() && y.len() == z.len());
-    for i in 0..z.len() {
-        z[i] = x[i] + y[i];
-    }
+    pool::parallel_chunks_mut(z, GRAIN_ELEMWISE, |off, zc| {
+        let xc = &x[off..off + zc.len()];
+        let yc = &y[off..off + zc.len()];
+        for ((zv, &xv), &yv) in zc.iter_mut().zip(xc.iter()).zip(yc.iter()) {
+            *zv = xv + yv;
+        }
+    });
 }
 
 /// z = x * y elementwise
 pub fn mul(x: &[f32], y: &[f32], z: &mut [f32]) {
     assert!(x.len() == y.len() && y.len() == z.len());
-    for i in 0..z.len() {
-        z[i] = x[i] * y[i];
-    }
+    pool::parallel_chunks_mut(z, GRAIN_ELEMWISE, |off, zc| {
+        let xc = &x[off..off + zc.len()];
+        let yc = &y[off..off + zc.len()];
+        for ((zv, &xv), &yv) in zc.iter_mut().zip(xc.iter()).zip(yc.iter()) {
+            *zv = xv * yv;
+        }
+    });
 }
 
 /// y = x^p elementwise
 pub fn powx(x: &[f32], p: f32, y: &mut [f32]) {
     assert_eq!(x.len(), y.len());
-    for (yv, &xv) in y.iter_mut().zip(x.iter()) {
-        *yv = xv.powf(p);
-    }
+    pool::parallel_chunks_mut(y, GRAIN_POWF, |off, yc| {
+        let xc = &x[off..off + yc.len()];
+        for (yv, &xv) in yc.iter_mut().zip(xc.iter()) {
+            *yv = xv.powf(p);
+        }
+    });
 }
 
 pub fn set(x: &mut [f32], value: f32) {
-    for v in x.iter_mut() {
-        *v = value;
-    }
+    pool::parallel_chunks_mut(x, GRAIN_ELEMWISE, |_, xc| {
+        for v in xc.iter_mut() {
+            *v = value;
+        }
+    });
 }
 
 /// ReLU forward: top = max(bottom, 0) + slope * min(bottom, 0)
 pub fn relu_forward(bottom: &[f32], top: &mut [f32], negative_slope: f32) {
     assert_eq!(bottom.len(), top.len());
-    for (t, &b) in top.iter_mut().zip(bottom.iter()) {
-        *t = if b > 0.0 { b } else { negative_slope * b };
-    }
+    pool::parallel_chunks_mut(top, GRAIN_ELEMWISE, |off, tc| {
+        let bc = &bottom[off..off + tc.len()];
+        for (t, &b) in tc.iter_mut().zip(bc.iter()) {
+            *t = if b > 0.0 { b } else { negative_slope * b };
+        }
+    });
 }
 
 /// ReLU backward: bottom_diff = top_diff * (bottom > 0 ? 1 : slope)
@@ -82,14 +123,13 @@ pub fn relu_backward(
     negative_slope: f32,
 ) {
     assert!(bottom_data.len() == top_diff.len() && top_diff.len() == bottom_diff.len());
-    for i in 0..bottom_diff.len() {
-        bottom_diff[i] = top_diff[i]
-            * if bottom_data[i] > 0.0 {
-                1.0
-            } else {
-                negative_slope
-            };
-    }
+    pool::parallel_chunks_mut(bottom_diff, GRAIN_ELEMWISE, |off, bc| {
+        let data = &bottom_data[off..off + bc.len()];
+        let td = &top_diff[off..off + bc.len()];
+        for ((bd, &dv), &tv) in bc.iter_mut().zip(data.iter()).zip(td.iter()) {
+            *bd = tv * if dv > 0.0 { 1.0 } else { negative_slope };
+        }
+    });
 }
 
 /// Dropout forward (train): top = bottom * mask * scale, mask ∈ {0,1}.
@@ -97,32 +137,45 @@ pub fn relu_backward(
 /// passed in so forward/backward agree.
 pub fn dropout_forward(bottom: &[f32], mask: &[f32], scale: f32, top: &mut [f32]) {
     assert!(bottom.len() == mask.len() && mask.len() == top.len());
-    for i in 0..top.len() {
-        top[i] = bottom[i] * mask[i] * scale;
-    }
+    pool::parallel_chunks_mut(top, GRAIN_ELEMWISE, |off, tc| {
+        let bc = &bottom[off..off + tc.len()];
+        let mc = &mask[off..off + tc.len()];
+        for ((t, &bv), &mv) in tc.iter_mut().zip(bc.iter()).zip(mc.iter()) {
+            *t = bv * mv * scale;
+        }
+    });
 }
 
 pub fn dropout_backward(top_diff: &[f32], mask: &[f32], scale: f32, bottom_diff: &mut [f32]) {
     assert!(top_diff.len() == mask.len() && mask.len() == bottom_diff.len());
-    for i in 0..bottom_diff.len() {
-        bottom_diff[i] = top_diff[i] * mask[i] * scale;
-    }
+    pool::parallel_chunks_mut(bottom_diff, GRAIN_ELEMWISE, |off, bc| {
+        let td = &top_diff[off..off + bc.len()];
+        let mc = &mask[off..off + bc.len()];
+        for ((bd, &tv), &mv) in bc.iter_mut().zip(td.iter()).zip(mc.iter()) {
+            *bd = tv * mv * scale;
+        }
+    });
 }
 
 /// Bias forward (paper's `Bias` kernel): top[n,c,h,w] += bias[c].
 /// `dim` = spatial size (H*W), applied over `outer` images of `channels`.
+/// Sharded over (image, channel) blocks — each block owns a disjoint
+/// `dim`-sized window of `top`.
 pub fn bias_forward(top: &mut [f32], bias: &[f32], outer: usize, channels: usize, dim: usize) {
     assert_eq!(top.len(), outer * channels * dim);
     assert_eq!(bias.len(), channels);
-    for o in 0..outer {
-        for c in 0..channels {
-            let base = (o * channels + c) * dim;
-            let bv = bias[c];
-            for v in top[base..base + dim].iter_mut() {
+    let grain = (GRAIN_ELEMWISE / dim.max(1)).max(1);
+    let topp = pool::SendPtr::new(top.as_mut_ptr());
+    pool::parallel_for(0..outer * channels, grain, |r| {
+        // Safety: (image, channel) block ranges are disjoint across tasks.
+        let chunk = unsafe { topp.slice(r.start * dim, r.len() * dim) };
+        for (bi, block) in r.clone().zip(chunk.chunks_exact_mut(dim)) {
+            let bv = bias[bi % channels];
+            for v in block.iter_mut() {
                 *v += bv;
             }
         }
-    }
+    });
 }
 
 #[cfg(test)]
@@ -156,6 +209,27 @@ mod tests {
         assert_eq!(z, [8.0, 15.0]);
         powx(&[4.0, 9.0], 0.5, &mut z);
         assert_eq!(z, [2.0, 3.0]);
+    }
+
+    #[test]
+    fn eltwise_parallel_matches_serial_above_grain() {
+        // Big enough to actually shard on a multi-core budget.
+        let n = GRAIN_ELEMWISE * 3 + 17;
+        let x: Vec<f32> = (0..n).map(|i| (i % 13) as f32 - 6.0).collect();
+        let mut y: Vec<f32> = (0..n).map(|i| (i % 7) as f32).collect();
+        let mut y_ref = y.clone();
+        axpy(0.5, &x, &mut y);
+        for (yv, xv) in y_ref.iter_mut().zip(x.iter()) {
+            *yv += 0.5 * xv;
+        }
+        assert_eq!(y, y_ref);
+        let mut z = vec![0.0; n];
+        relu_forward(&x, &mut z, 0.1);
+        for (i, zv) in z.iter().enumerate() {
+            let b = x[i];
+            let want = if b > 0.0 { b } else { 0.1 * b };
+            assert_eq!(*zv, want);
+        }
     }
 
     #[test]

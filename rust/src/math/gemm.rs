@@ -1,15 +1,67 @@
 //! GEMM / GEMV — the paper's two "significant kernels" (Table 3).
 //!
 //! `gemm` computes `C = alpha * op(A) * op(B) + beta * C` for row-major
-//! matrices, like `caffe_cpu_gemm`. The NN inner loop is written as a
-//! register-blocked, cache-tiled kernel (see §Perf in EXPERIMENTS.md);
-//! the transposed variants take the simple path since convolution's hot
-//! call is NN (im2col'd convolution) by construction.
+//! matrices, like `caffe_cpu_gemm`. Shapes above a small-work threshold
+//! take the *packed* path for every transpose combination: the operands
+//! are repacked into contiguous micro-panels (MR=4 rows of op(A), NR=16
+//! columns of op(B), alpha folded into the A pack) and a 4×16
+//! register-accumulator micro-kernel runs over the full depth, sharded
+//! across the intra-op thread pool (`util::pool`) along N — or along M
+//! when the output is tall and narrow. Packing pays off three ways: the
+//! micro-kernel reads both operands contiguously regardless of transpose,
+//! the 4×16 accumulator block auto-vectorizes to FMA lanes, and threads
+//! share nothing but read-only inputs.
+//!
+//! Determinism: each C element is produced by exactly one task and its
+//! k-loop always runs 0..k in order (no depth blocking of the
+//! accumulator), so results are bit-identical at any thread count — and,
+//! for `beta == 0`, bit-identical to the unpacked small paths too: every
+//! path folds alpha per term and evaluates `fl(fl(alpha*a)*b)` in the
+//! same order into a zero accumulator. That's what keeps serve's
+//! batched==single bit-exactness guarantee intact with threads on, even
+//! when a layer's batch-1 shape dispatches small while its batched shape
+//! dispatches packed.
+//!
+//! The zero-skip fast path (`if a == 0.0 { continue }`) survives ONLY in
+//! the unpacked small paths (NN remainder rows, the generic row-axpy
+//! form, gemv's transposed form) — never in the packed path, where it
+//! would distort benchmarks on zero-filled buffers and add a branch per
+//! FMA for no steady-state win. See `zero_rows_still_apply_beta` for the
+//! pinned semantics.
+
+use crate::util::pool;
+use std::cell::RefCell;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Trans {
     No,
     Yes,
+}
+
+/// Micro-panel height of op(A).
+const MR: usize = 4;
+/// Micro-panel width of op(B).
+const NR: usize = 16;
+/// Rows of op(A) packed per block (bounds the per-thread A scratch).
+const MC: usize = 64;
+/// Columns of op(B) packed per stripe block (bounds the B scratch).
+const NC: usize = 256;
+/// Below this many multiply-adds (m*n*k) packing costs more than it saves.
+const PACK_MIN_MULS: usize = 32 * 32 * 32;
+
+/// Effective (MC, NC) block sizes for depth `k`. Panels pack the *full*
+/// depth (the accumulator is never split, which is what makes results
+/// bit-identical across thread counts and dispatch paths), so at very
+/// large k the row/column block counts shrink instead — capping the
+/// per-thread pack scratch at ~¼ MiB of A and ~1 MiB of B even for
+/// VGG-FC-sized depths, at the cost of more frequent re-packing there.
+/// Depends only on shape, never on the thread budget.
+fn block_sizes(k: usize) -> (usize, usize) {
+    const A_BUDGET: usize = 64 * 1024; // elements: 256 KiB of f32
+    const B_BUDGET: usize = 256 * 1024; // elements: 1 MiB of f32
+    let mc = (A_BUDGET / k.max(1) / MR * MR).clamp(MR, MC);
+    let nc = (B_BUDGET / k.max(1) / NR * NR).clamp(NR, NC);
+    (mc, nc)
 }
 
 /// Row-major GEMM: C[m,n] = alpha*op(A)[m,k]*op(B)[k,n] + beta*C.
@@ -29,27 +81,219 @@ pub fn gemm(
     c: &mut [f32],
 ) {
     assert!(c.len() >= m * n, "gemm: C too small");
-    match (ta, tb) {
-        (Trans::No, Trans::No) => {
-            assert!(a.len() >= m * k && b.len() >= k * n, "gemm NN: input too small");
-            gemm_nn(m, n, k, alpha, a, b, beta, c);
-        }
-        _ => {
-            assert!(
-                a.len() >= m * k && b.len() >= k * n,
-                "gemm {:?}{:?}: input too small",
-                ta,
-                tb
-            );
-            gemm_generic(ta, tb, m, n, k, alpha, a, b, beta, c);
+    assert!(
+        a.len() >= m * k && b.len() >= k * n,
+        "gemm {ta:?}{tb:?}: input too small"
+    );
+    if m == 0 || n == 0 {
+        return;
+    }
+    // Dispatch on shape only (never on thread count), so a given shape
+    // always takes the same code path and stays deterministic.
+    if m * n * k >= PACK_MIN_MULS {
+        gemm_packed(ta, tb, m, n, k, alpha, a, b, beta, c);
+    } else if (ta, tb) == (Trans::No, Trans::No) {
+        gemm_nn_small(m, n, k, alpha, a, b, beta, c);
+    } else {
+        gemm_generic(ta, tb, m, n, k, alpha, a, b, beta, c);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed path
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// Per-thread packing scratch (A-panel, B-panel). Reused across calls
+    /// so the steady state allocates nothing — the math-layer analogue of
+    /// the device `ScratchPool`.
+    static PACK_A: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    static PACK_B: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// op(A)[r, kk] for the given storage layout.
+#[inline(always)]
+fn a_at(ta: Trans, a: &[f32], m: usize, k: usize, r: usize, kk: usize) -> f32 {
+    match ta {
+        Trans::No => a[r * k + kk],
+        Trans::Yes => a[kk * m + r],
+    }
+}
+
+/// Pack `alpha * op(A)[rows, 0..k]` into MR-row micro-panels:
+/// `buf[(panel, kk, i)] = alpha * op(A)[rows.start + panel*MR + i, kk]`,
+/// zero-padded to a multiple of MR rows.
+fn pack_a(
+    ta: Trans,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    rows: std::ops::Range<usize>,
+    alpha: f32,
+    buf: &mut Vec<f32>,
+) {
+    let panels = rows.len().div_ceil(MR);
+    buf.resize(panels * MR * k, 0.0);
+    for p in 0..panels {
+        let base = p * MR * k;
+        let r0 = rows.start + p * MR;
+        let live = MR.min(rows.end - r0);
+        for kk in 0..k {
+            let dst = &mut buf[base + kk * MR..base + kk * MR + MR];
+            for (i, d) in dst.iter_mut().enumerate() {
+                *d = if i < live {
+                    alpha * a_at(ta, a, m, k, r0 + i, kk)
+                } else {
+                    0.0
+                };
+            }
         }
     }
 }
 
-/// Cache-tiled NN kernel. Tiles: MC×KC panel of A, KC×NC panel of B; the
-/// micro-kernel accumulates 4 rows at a time over a contiguous B row —
-/// auto-vectorizes cleanly.
-fn gemm_nn(
+/// Pack `op(B)[0..k, cols]` into NR-column micro-panels:
+/// `buf[(panel, kk, j)] = op(B)[kk, cols.start + panel*NR + j]`,
+/// zero-padded to a multiple of NR columns.
+fn pack_b(
+    tb: Trans,
+    b: &[f32],
+    k: usize,
+    n: usize,
+    cols: std::ops::Range<usize>,
+    buf: &mut Vec<f32>,
+) {
+    let panels = cols.len().div_ceil(NR);
+    buf.resize(panels * NR * k, 0.0);
+    for p in 0..panels {
+        let base = p * NR * k;
+        let j0 = cols.start + p * NR;
+        let live = NR.min(cols.end - j0);
+        match tb {
+            Trans::No => {
+                for kk in 0..k {
+                    let src = &b[kk * n + j0..kk * n + j0 + live];
+                    let dst = &mut buf[base + kk * NR..base + kk * NR + NR];
+                    dst[..live].copy_from_slice(src);
+                    for d in dst[live..].iter_mut() {
+                        *d = 0.0;
+                    }
+                }
+            }
+            Trans::Yes => {
+                for kk in 0..k {
+                    let dst = &mut buf[base + kk * NR..base + kk * NR + NR];
+                    for (j, d) in dst.iter_mut().enumerate() {
+                        *d = if j < live { b[(j0 + j) * k + kk] } else { 0.0 };
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The 4×16 micro-kernel: acc[i][j] += ap[kk,i] * bp[kk,j] over the full
+/// depth. Both panels are contiguous, so the j-loop vectorizes and the
+/// accumulators stay in registers.
+#[inline]
+fn micro_kernel(k: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    debug_assert!(ap.len() >= k * MR && bp.len() >= k * NR);
+    for kk in 0..k {
+        // Fixed-size views: tells LLVM the lane widths are compile-time
+        // constants so the j-loop stays a straight run of FMA lanes.
+        let av: &[f32; MR] = ap[kk * MR..kk * MR + MR].try_into().unwrap();
+        let bv: &[f32; NR] = bp[kk * NR..kk * NR + NR].try_into().unwrap();
+        for i in 0..MR {
+            let ai = av[i];
+            let row = &mut acc[i];
+            for j in 0..NR {
+                row[j] += ai * bv[j];
+            }
+        }
+    }
+}
+
+/// Compute `C[rows, cols] = op(A)[rows, :] * op(B)[:, cols] + beta*C`
+/// (alpha folded into the A pack). The accumulator runs the full depth,
+/// so each C element is written exactly once — beta folds into that
+/// single writeback, and `beta == 0` *overwrites* (stale NaN/Inf never
+/// leaks through `0*C`).
+///
+/// # Safety contract
+/// `c` windows derived from `rows × cols` must be disjoint across
+/// concurrently running calls — guaranteed by the caller sharding
+/// disjoint row or column ranges.
+#[allow(clippy::too_many_arguments)]
+fn packed_region(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &pool::SendPtr<f32>,
+    rows: std::ops::Range<usize>,
+    cols: std::ops::Range<usize>,
+) {
+    let (mc_max, nc_max) = block_sizes(k);
+    PACK_A.with(|pa| {
+        PACK_B.with(|pb| {
+            let mut abuf = pa.borrow_mut();
+            let mut bbuf = pb.borrow_mut();
+            let mut jc = cols.start;
+            while jc < cols.end {
+                let nc = nc_max.min(cols.end - jc);
+                pack_b(tb, b, k, n, jc..jc + nc, &mut bbuf);
+                let npanels = nc.div_ceil(NR);
+                let mut ic = rows.start;
+                while ic < rows.end {
+                    let mc = mc_max.min(rows.end - ic);
+                    pack_a(ta, a, m, k, ic..ic + mc, alpha, &mut abuf);
+                    let mpanels = mc.div_ceil(MR);
+                    for mp in 0..mpanels {
+                        let ap = &abuf[mp * MR * k..(mp + 1) * MR * k];
+                        let r0 = ic + mp * MR;
+                        let rmax = MR.min(ic + mc - r0);
+                        for np in 0..npanels {
+                            let bp = &bbuf[np * NR * k..(np + 1) * NR * k];
+                            let j0 = jc + np * NR;
+                            let jmax = NR.min(jc + nc - j0);
+                            let mut acc = [[0f32; NR]; MR];
+                            micro_kernel(k, ap, bp, &mut acc);
+                            for i in 0..rmax {
+                                // Safety: rows/cols ranges are disjoint
+                                // across tasks and inside bounds (r0+i < m,
+                                // j0 + jmax <= n).
+                                let crow =
+                                    unsafe { c.slice((r0 + i) * n + j0, jmax) };
+                                let av = &acc[i];
+                                if beta == 0.0 {
+                                    crow.copy_from_slice(&av[..jmax]);
+                                } else if beta == 1.0 {
+                                    for (cv, av) in crow.iter_mut().zip(av.iter()) {
+                                        *cv += *av;
+                                    }
+                                } else {
+                                    for (cv, av) in crow.iter_mut().zip(av.iter()) {
+                                        *cv = *av + beta * *cv;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    ic += mc;
+                }
+                jc += nc;
+            }
+        })
+    });
+}
+
+fn gemm_packed(
+    ta: Trans,
+    tb: Trans,
     m: usize,
     n: usize,
     k: usize,
@@ -59,71 +303,103 @@ fn gemm_nn(
     beta: f32,
     c: &mut [f32],
 ) {
-    const MC: usize = 64;
-    const KC: usize = 256;
-    const NC: usize = 512;
+    // No beta pre-pass: every C element is written exactly once by its
+    // micro-tile (the accumulator is never depth-split), so beta folds
+    // into that writeback — one sweep over C instead of two.
+    let cptr = pool::SendPtr::new(c.as_mut_ptr());
+    // Shard whichever dimension offers more micro-panels of parallelism
+    // (shape-only decision, so the path never depends on thread count).
+    // Tasks get contiguous *panel* ranges, so interior chunk boundaries
+    // stay NR/MR-aligned and only the final panel is zero-padded.
+    let npanels = n.div_ceil(NR);
+    let mpanels = m.div_ceil(MR);
+    if npanels >= mpanels {
+        // N-sharded: each task packs its own column stripe of B exactly
+        // once; the (smaller) A re-pack is duplicated per task.
+        pool::parallel_for(0..npanels, 1, |pr| {
+            let cols = pr.start * NR..(pr.end * NR).min(n);
+            packed_region(ta, tb, m, n, k, alpha, a, b, beta, &cptr, 0..m, cols);
+        });
+    } else {
+        // Tall-and-narrow C (e.g. conv data-grad TN with a small output
+        // map): shard M; the duplicated B pack is only k*n floats and n
+        // is small on this branch.
+        pool::parallel_for(0..mpanels, 1, |pr| {
+            let rows = pr.start * MR..(pr.end * MR).min(m);
+            packed_region(ta, tb, m, n, k, alpha, a, b, beta, &cptr, rows, 0..n);
+        });
+    }
+}
 
-    if beta != 1.0 {
-        for v in c[..m * n].iter_mut() {
+// ---------------------------------------------------------------------------
+// Small unpacked paths
+// ---------------------------------------------------------------------------
+
+/// Serial beta prologue shared by the small paths. The invariant lives
+/// here once: `beta == 0` must *overwrite* — stale NaN/Inf in C must
+/// not leak through `0*C`.
+fn apply_beta(c: &mut [f32], beta: f32) {
+    if beta == 0.0 {
+        for v in c.iter_mut() {
+            *v = 0.0;
+        }
+    } else if beta != 1.0 {
+        for v in c.iter_mut() {
             *v *= beta;
         }
     }
-    let mut i0 = 0;
-    while i0 < m {
-        let ib = MC.min(m - i0);
-        let mut k0 = 0;
-        while k0 < k {
-            let kb = KC.min(k - k0);
-            let mut j0 = 0;
-            while j0 < n {
-                let jb = NC.min(n - j0);
-                // Micro: process 4 rows of A together.
-                let mut i = 0;
-                while i + 4 <= ib {
-                    let (r0, r1, r2, r3) = (i0 + i, i0 + i + 1, i0 + i + 2, i0 + i + 3);
-                    for kk in 0..kb {
-                        let a0 = alpha * a[r0 * k + k0 + kk];
-                        let a1 = alpha * a[r1 * k + k0 + kk];
-                        let a2 = alpha * a[r2 * k + k0 + kk];
-                        let a3 = alpha * a[r3 * k + k0 + kk];
-                        if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
-                            continue;
-                        }
-                        let brow = &b[(k0 + kk) * n + j0..(k0 + kk) * n + j0 + jb];
-                        let c0 = r0 * n + j0;
-                        let c1 = r1 * n + j0;
-                        let c2 = r2 * n + j0;
-                        let c3 = r3 * n + j0;
-                        for (jj, &bv) in brow.iter().enumerate() {
-                            c[c0 + jj] += a0 * bv;
-                            c[c1 + jj] += a1 * bv;
-                            c[c2 + jj] += a2 * bv;
-                            c[c3 + jj] += a3 * bv;
-                        }
-                    }
-                    i += 4;
-                }
-                // Remainder rows.
-                while i < ib {
-                    let r = i0 + i;
-                    for kk in 0..kb {
-                        let av = alpha * a[r * k + k0 + kk];
-                        if av == 0.0 {
-                            continue;
-                        }
-                        let brow = &b[(k0 + kk) * n + j0..(k0 + kk) * n + j0 + jb];
-                        let crow = &mut c[r * n + j0..r * n + j0 + jb];
-                        for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
-                            *cv += av * bv;
-                        }
-                    }
-                    i += 1;
-                }
-                j0 += NC;
+}
+
+/// Unpacked NN kernel for shapes too small to amortize packing. The
+/// 4-row micro loop accumulates over contiguous B rows; only the
+/// single-row *remainder* loop keeps the zero-skip fast path.
+fn gemm_nn_small(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+) {
+    apply_beta(&mut c[..m * n], beta);
+    let mut i = 0;
+    while i + 4 <= m {
+        let (r0, r1, r2, r3) = (i, i + 1, i + 2, i + 3);
+        for kk in 0..k {
+            let a0 = alpha * a[r0 * k + kk];
+            let a1 = alpha * a[r1 * k + kk];
+            let a2 = alpha * a[r2 * k + kk];
+            let a3 = alpha * a[r3 * k + kk];
+            let brow = &b[kk * n..kk * n + n];
+            let c0 = r0 * n;
+            let c1 = r1 * n;
+            let c2 = r2 * n;
+            let c3 = r3 * n;
+            for (jj, &bv) in brow.iter().enumerate() {
+                c[c0 + jj] += a0 * bv;
+                c[c1 + jj] += a1 * bv;
+                c[c2 + jj] += a2 * bv;
+                c[c3 + jj] += a3 * bv;
             }
-            k0 += KC;
         }
-        i0 += MC;
+        i += 4;
+    }
+    // Remainder rows: the one place the zero-skip survives.
+    while i < m {
+        for kk in 0..k {
+            let av = alpha * a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..kk * n + n];
+            let crow = &mut c[i * n..i * n + n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+        i += 1;
     }
 }
 
@@ -139,22 +415,14 @@ fn gemm_generic(
     beta: f32,
     c: &mut [f32],
 ) {
-    let at = |i: usize, kk: usize| match ta {
-        Trans::No => a[i * k + kk],
-        Trans::Yes => a[kk * m + i],
-    };
     for i in 0..m {
         match tb {
             Trans::No => {
                 // Accumulate row-wise over contiguous B rows.
                 let crow = &mut c[i * n..(i + 1) * n];
-                if beta != 1.0 {
-                    for v in crow.iter_mut() {
-                        *v *= beta;
-                    }
-                }
+                apply_beta(crow, beta);
                 for kk in 0..k {
-                    let av = alpha * at(i, kk);
+                    let av = alpha * a_at(ta, a, m, k, i, kk);
                     if av == 0.0 {
                         continue;
                     }
@@ -168,19 +436,32 @@ fn gemm_generic(
                 for j in 0..n {
                     let mut acc = 0.0f32;
                     // B^T: element (kk, j) is b[j * k + kk] — contiguous in kk.
+                    // Alpha folds per term, like the packed path and the NN
+                    // small path, so a layer whose batch-1 shape lands here
+                    // while its batched shape goes packed still produces
+                    // bit-identical per-sample results for any alpha.
                     let bcol = &b[j * k..j * k + k];
                     for (kk, &bv) in bcol.iter().enumerate() {
-                        acc += at(i, kk) * bv;
+                        acc += (alpha * a_at(ta, a, m, k, i, kk)) * bv;
                     }
                     let idx = i * n + j;
-                    c[idx] = alpha * acc + beta * c[idx];
+                    // beta == 0 overwrites — stale NaN/Inf in C must not
+                    // leak through 0*C (matches the packed path).
+                    c[idx] = if beta == 0.0 {
+                        acc
+                    } else {
+                        acc + beta * c[idx]
+                    };
                 }
             }
         }
     }
 }
 
-/// Row-major GEMV: y = alpha*op(A)*x + beta*y, A is m×n.
+/// Row-major GEMV: y = alpha*op(A)*x + beta*y, A is m×n. The untransposed
+/// row-dot form shards rows across the pool (disjoint y elements, k-order
+/// fixed ⇒ deterministic); the transposed form is an axpy accumulation
+/// into all of y and stays serial to keep summation order fixed.
 pub fn gemv(
     ta: Trans,
     m: usize,
@@ -194,22 +475,27 @@ pub fn gemv(
     match ta {
         Trans::No => {
             assert!(a.len() >= m * n && x.len() >= n && y.len() >= m);
-            for i in 0..m {
-                let row = &a[i * n..i * n + n];
-                let mut acc = 0.0f32;
-                for (av, xv) in row.iter().zip(x.iter()) {
-                    acc += av * xv;
+            let grain = (pool::GRAIN_ELEMWISE / n.max(1)).max(1);
+            pool::parallel_chunks_mut(&mut y[..m], grain, |off, ych| {
+                for (d, yv) in ych.iter_mut().enumerate() {
+                    let i = off + d;
+                    let row = &a[i * n..i * n + n];
+                    let mut acc = 0.0f32;
+                    for (av, xv) in row.iter().zip(x.iter()) {
+                        acc += av * xv;
+                    }
+                    // beta == 0 overwrites (stale NaN/Inf must not leak).
+                    *yv = if beta == 0.0 {
+                        alpha * acc
+                    } else {
+                        alpha * acc + beta * *yv
+                    };
                 }
-                y[i] = alpha * acc + beta * y[i];
-            }
+            });
         }
         Trans::Yes => {
             assert!(a.len() >= m * n && x.len() >= m && y.len() >= n);
-            if beta != 1.0 {
-                for v in y[..n].iter_mut() {
-                    *v *= beta;
-                }
-            }
+            apply_beta(&mut y[..n], beta);
             for i in 0..m {
                 let av = alpha * x[i];
                 if av == 0.0 {
@@ -230,7 +516,7 @@ mod tests {
     use crate::util::prng::Pcg32;
     use crate::util::tcheck;
 
-    fn naive_gemm(
+    pub(crate) fn naive_gemm(
         ta: Trans,
         tb: Trans,
         m: usize,
@@ -303,10 +589,132 @@ mod tests {
         });
     }
 
+    /// Packed path at shapes crossing every tile boundary (MR, NR, MC,
+    /// NC), at thread budgets 1 / 2 / max, for all transpose combos.
+    #[test]
+    fn packed_matches_naive_across_tile_boundaries_and_threads() {
+        // (m, n, k) straddling MR=4, NR=16, MC=64, NC=256 edges; every
+        // shape clears the packed-path threshold.
+        let shapes = [
+            (4, 16, 2048),   // exact micro tile
+            (5, 17, 513),    // one past micro tile, k past nothing special
+            (3, 260, 64),    // m below MR, n past NC
+            (63, 255, 33),   // one below MC / NC
+            (65, 257, 40),   // one past MC / NC
+            (128, 31, 70),   // tall-and-narrow: M-sharded branch
+            (260, 15, 48),   // n < NR with m past NC
+        ];
+        let max_t = crate::util::pool::default_threads();
+        for &(m, n, k) in &shapes {
+            assert!(m * n * k >= PACK_MIN_MULS, "shape must take packed path");
+            for ta in [Trans::No, Trans::Yes] {
+                for tb in [Trans::No, Trans::Yes] {
+                    let mut rng = Pcg32::new((m * 31 + n * 7 + k) as u64);
+                    let mut a = vec![0.0; m * k];
+                    let mut b = vec![0.0; k * n];
+                    let mut c0 = vec![0.0; m * n];
+                    rng.fill_uniform(&mut a, -1.0, 1.0);
+                    rng.fill_uniform(&mut b, -1.0, 1.0);
+                    rng.fill_uniform(&mut c0, -1.0, 1.0);
+                    let mut c_ref = c0.clone();
+                    naive_gemm(ta, tb, m, n, k, 1.3, &a, &b, 0.7, &mut c_ref);
+                    for t in [1usize, 2, max_t] {
+                        let mut c = c0.clone();
+                        crate::util::pool::with_intra_op(t, || {
+                            gemm(ta, tb, m, n, k, 1.3, &a, &b, 0.7, &mut c);
+                        });
+                        tcheck::close(&c, &c_ref, 1e-3, 1e-4).unwrap_or_else(|e| {
+                            panic!("{ta:?}{tb:?} m={m} n={n} k={k} t={t}: {e}")
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    /// A layer whose batch-1 shape dispatches to the small path while its
+    /// batched shape dispatches packed must still give bit-identical
+    /// per-sample rows at beta == 0 (serve's batched==single guarantee) —
+    /// for any alpha, since every path folds alpha per term.
+    #[test]
+    fn small_and_packed_paths_agree_bitwise_at_beta_zero() {
+        let (n, k) = (10usize, 500usize); // LeNet ip2-like NT shape
+        let mut rng = Pcg32::new(17);
+        let mut w = vec![0.0; n * k]; // B^T storage (n×k)
+        rng.fill_uniform(&mut w, -1.0, 1.0);
+        let mut x1 = vec![0.0; k]; // one sample
+        rng.fill_uniform(&mut x1, -1.0, 1.0);
+        let m = 8;
+        assert!(n * k < PACK_MIN_MULS, "batch-1 must take the small path");
+        assert!(m * n * k >= PACK_MIN_MULS, "batch-8 must take the packed path");
+        for alpha in [1.0f32, 0.5] {
+            let mut c1 = vec![0.0f32; n];
+            gemm(Trans::No, Trans::Yes, 1, n, k, alpha, &x1, &w, 0.0, &mut c1);
+            let mut xs = vec![0.0f32; m * k];
+            xs[..k].copy_from_slice(&x1);
+            rng.fill_uniform(&mut xs[k..], -1.0, 1.0);
+            let mut c8 = vec![0.0f32; m * n];
+            gemm(Trans::No, Trans::Yes, m, n, k, alpha, &xs, &w, 0.0, &mut c8);
+            assert_eq!(c1[..], c8[..n], "alpha={alpha}: batched row 0 differs");
+        }
+    }
+
+    /// Thread count must not change a single bit of the result.
+    #[test]
+    fn packed_is_bit_identical_across_thread_counts() {
+        let (m, n, k) = (37, 300, 129);
+        let mut rng = Pcg32::new(9);
+        let mut a = vec![0.0; m * k];
+        let mut b = vec![0.0; k * n];
+        rng.fill_uniform(&mut a, -1.0, 1.0);
+        rng.fill_uniform(&mut b, -1.0, 1.0);
+        let run = |t: usize| {
+            let mut c = vec![0.0f32; m * n];
+            crate::util::pool::with_intra_op(t, || {
+                gemm(Trans::No, Trans::No, m, n, k, 1.0, &a, &b, 0.0, &mut c);
+            });
+            c
+        };
+        let c1 = run(1);
+        for t in [2, 3, crate::util::pool::default_threads()] {
+            assert_eq!(c1, run(t), "thread count {t} changed bits");
+        }
+    }
+
+    /// Zero rows in A must still see beta applied to C — the zero-skip
+    /// fast path may only skip the *accumulation*, never the beta scale.
+    /// Pinned for both the packed path and the unpacked remainder path.
+    #[test]
+    fn zero_rows_still_apply_beta() {
+        for (m, n, k) in [(3usize, 5usize, 4usize), (33, 64, 64)] {
+            let mut rng = Pcg32::new(11);
+            let mut a = vec![0.0; m * k];
+            let mut b = vec![0.0; k * n];
+            let mut c = vec![0.0; m * n];
+            rng.fill_uniform(&mut a, -1.0, 1.0);
+            rng.fill_uniform(&mut b, -1.0, 1.0);
+            rng.fill_uniform(&mut c, -1.0, 1.0);
+            // Last row of A (the remainder row when m % 4 != 0) all zero,
+            // plus scattered exact zeros elsewhere.
+            for v in a[(m - 1) * k..m * k].iter_mut() {
+                *v = 0.0;
+            }
+            a[0] = 0.0;
+            let mut c_ref = c.clone();
+            gemm(Trans::No, Trans::No, m, n, k, 1.0, &a, &b, 2.5, &mut c);
+            naive_gemm(Trans::No, Trans::No, m, n, k, 1.0, &a, &b, 2.5, &mut c_ref);
+            tcheck::close(&c, &c_ref, 1e-4, 1e-4).unwrap();
+            // The zero row's output must be exactly beta * c_before.
+            for j in 0..n {
+                assert_eq!(c[(m - 1) * n + j], c_ref[(m - 1) * n + j]);
+            }
+        }
+    }
+
     #[test]
     fn large_shapes_cross_tile_boundaries() {
         let mut rng = Pcg32::new(5);
-        // m not divisible by 4/MC; k crosses KC; n crosses NC.
+        // m not divisible by 4/MC; k large; n crosses NC.
         let (m, n, k) = (67, 521, 300);
         let mut a = vec![0.0; m * k];
         let mut b = vec![0.0; k * n];

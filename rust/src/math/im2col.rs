@@ -1,6 +1,13 @@
 //! im2col / col2im — the paper's single biggest kernel-time consumer
 //! (Table 2: 187.4 ms over 98 instances) and the §5.2 candidate for CPU
 //! fallback. Lowers convolution to GEMM exactly like Caffe.
+//!
+//! Both directions shard across the intra-op pool (`util::pool`):
+//! `im2col` over col-matrix rows (each row is written by exactly one
+//! task) and `col2im` over image *channels* (channel plane `c` only
+//! accumulates from col rows with the same `c`, so planes are disjoint).
+
+use crate::util::pool;
 
 /// Convolution geometry for one image (batch handled by callers).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -39,32 +46,91 @@ impl ConvGeom {
     }
 }
 
+/// Fill col-matrix rows `rows` (each row is one (c, kh, kw) tap across
+/// the whole output map). `data_col` starts at row `rows.start`.
+fn im2col_rows(
+    g: &ConvGeom,
+    data_im: &[f32],
+    data_col: &mut [f32],
+    rows: std::ops::Range<usize>,
+) {
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let taps = g.kernel_h * g.kernel_w;
+    let mut col_idx = 0;
+    for rid in rows {
+        let c = rid / taps;
+        let kh = (rid / g.kernel_w) % g.kernel_h;
+        let kw = rid % g.kernel_w;
+        for y in 0..oh {
+            let iy = (y * g.stride_h + kh) as isize - g.pad_h as isize;
+            if iy < 0 || iy >= g.height as isize {
+                for _ in 0..ow {
+                    data_col[col_idx] = 0.0;
+                    col_idx += 1;
+                }
+                continue;
+            }
+            let row_base = (c * g.height + iy as usize) * g.width;
+            for x in 0..ow {
+                let ix = (x * g.stride_w + kw) as isize - g.pad_w as isize;
+                data_col[col_idx] = if ix < 0 || ix >= g.width as isize {
+                    0.0
+                } else {
+                    data_im[row_base + ix as usize]
+                };
+                col_idx += 1;
+            }
+        }
+    }
+}
+
 /// data_im (C,H,W) → data_col (C*kh*kw, out_h*out_w), zero padding.
 pub fn im2col(g: &ConvGeom, data_im: &[f32], data_col: &mut [f32]) {
     assert!(data_im.len() >= g.im_len(), "im2col: image too small");
     assert!(data_col.len() >= g.col_len(), "im2col: col too small");
+    let ohw = g.col_cols();
+    let rows = g.col_rows();
+    // Enough rows per task that a chunk moves at least ~one elementwise
+    // grain of data.
+    let grain = (pool::GRAIN_ELEMWISE / ohw.max(1)).max(1);
+    let col = pool::SendPtr::new(data_col.as_mut_ptr());
+    pool::parallel_for(0..rows, grain, |r| {
+        // Safety: row ranges are disjoint across tasks; each covers
+        // exactly r.len()*ohw contiguous elements of data_col.
+        let chunk = unsafe { col.slice(r.start * ohw, r.len() * ohw) };
+        im2col_rows(g, data_im, chunk, r);
+    });
+}
+
+/// Accumulate the col rows belonging to image channels `chans` back into
+/// those channels' planes (the gradient path).
+fn col2im_channels(
+    g: &ConvGeom,
+    data_col: &[f32],
+    data_im: &mut [f32],
+    chans: std::ops::Range<usize>,
+) {
     let (oh, ow) = (g.out_h(), g.out_w());
-    let mut col_idx = 0;
-    for c in 0..g.channels {
+    let ohw = oh * ow;
+    let taps = g.kernel_h * g.kernel_w;
+    // data_im starts at channel chans.start's plane.
+    let plane0 = chans.start * g.height * g.width;
+    for c in chans.clone() {
         for kh in 0..g.kernel_h {
             for kw in 0..g.kernel_w {
+                let mut col_idx = ((c * taps) + kh * g.kernel_w + kw) * ohw;
                 for y in 0..oh {
                     let iy = (y * g.stride_h + kh) as isize - g.pad_h as isize;
                     if iy < 0 || iy >= g.height as isize {
-                        for _ in 0..ow {
-                            data_col[col_idx] = 0.0;
-                            col_idx += 1;
-                        }
+                        col_idx += ow;
                         continue;
                     }
-                    let row_base = (c * g.height + iy as usize) * g.width;
+                    let row_base = (c * g.height + iy as usize) * g.width - plane0;
                     for x in 0..ow {
                         let ix = (x * g.stride_w + kw) as isize - g.pad_w as isize;
-                        data_col[col_idx] = if ix < 0 || ix >= g.width as isize {
-                            0.0
-                        } else {
-                            data_im[row_base + ix as usize]
-                        };
+                        if ix >= 0 && ix < g.width as isize {
+                            data_im[row_base + ix as usize] += data_col[col_idx];
+                        }
                         col_idx += 1;
                     }
                 }
@@ -78,29 +144,16 @@ pub fn im2col(g: &ConvGeom, data_im: &[f32], data_col: &mut [f32]) {
 pub fn col2im(g: &ConvGeom, data_col: &[f32], data_im: &mut [f32]) {
     assert!(data_col.len() >= g.col_len(), "col2im: col too small");
     assert!(data_im.len() >= g.im_len(), "col2im: image too small");
-    let (oh, ow) = (g.out_h(), g.out_w());
-    let mut col_idx = 0;
-    for c in 0..g.channels {
-        for kh in 0..g.kernel_h {
-            for kw in 0..g.kernel_w {
-                for y in 0..oh {
-                    let iy = (y * g.stride_h + kh) as isize - g.pad_h as isize;
-                    if iy < 0 || iy >= g.height as isize {
-                        col_idx += ow;
-                        continue;
-                    }
-                    let row_base = (c * g.height + iy as usize) * g.width;
-                    for x in 0..ow {
-                        let ix = (x * g.stride_w + kw) as isize - g.pad_w as isize;
-                        if ix >= 0 && ix < g.width as isize {
-                            data_im[row_base + ix as usize] += data_col[col_idx];
-                        }
-                        col_idx += 1;
-                    }
-                }
-            }
-        }
-    }
+    let plane = g.height * g.width;
+    let per_chan = g.kernel_h * g.kernel_w * g.col_cols();
+    let grain = (pool::GRAIN_ELEMWISE / per_chan.max(1)).max(1);
+    let im = pool::SendPtr::new(data_im.as_mut_ptr());
+    pool::parallel_for(0..g.channels, grain, |r| {
+        // Safety: channel ranges are disjoint across tasks; plane `c`
+        // only receives contributions from col rows with the same `c`.
+        let chunk = unsafe { im.slice(r.start * plane, r.len() * plane) };
+        col2im_channels(g, data_col, chunk, r);
+    });
 }
 
 #[cfg(test)]

@@ -7,6 +7,13 @@
 //!               - (2*alpha*beta/n) * x[i] * sum_{j} tdiff[j]*top[j]/scale[j]
 //!
 //! matching Caffe's `LRNLayer` (ACROSS_CHANNELS).
+//!
+//! The per-image kernels carry the numerics; `lrn_scale_batch` /
+//! `lrn_diff_batch` shard the batch across the intra-op pool (disjoint
+//! per-image planes), and `lrn_output` — a flat powf map — shards
+//! elementwise.
+
+use crate::util::pool as thr;
 
 /// scale = k + (alpha/local_size) * window-sum of squares, per channel.
 /// Shapes: (channels, dim) where dim = H*W for one image.
@@ -39,9 +46,85 @@ pub fn lrn_scale(
 /// top = bottom * scale^(-beta)
 pub fn lrn_output(bottom: &[f32], scale: &[f32], top: &mut [f32], beta: f32) {
     assert!(bottom.len() == scale.len() && scale.len() == top.len());
-    for i in 0..top.len() {
-        top[i] = bottom[i] * scale[i].powf(-beta);
-    }
+    thr::parallel_chunks_mut(top, super::blas1::GRAIN_POWF, |off, tc| {
+        let bc = &bottom[off..off + tc.len()];
+        let sc = &scale[off..off + tc.len()];
+        for ((t, &bv), &sv) in tc.iter_mut().zip(bc.iter()).zip(sc.iter()) {
+            *t = bv * sv.powf(-beta);
+        }
+    });
+}
+
+/// Batched `lrn_scale`: `num` images of (channels, dim), images sharded
+/// across the intra-op pool.
+#[allow(clippy::too_many_arguments)]
+pub fn lrn_scale_batch(
+    num: usize,
+    bottom: &[f32],
+    scale: &mut [f32],
+    channels: usize,
+    dim: usize,
+    local_size: usize,
+    alpha: f32,
+    k: f32,
+) {
+    let plane = channels * dim;
+    assert!(bottom.len() >= num * plane && scale.len() >= num * plane);
+    let sp = thr::SendPtr::new(scale.as_mut_ptr());
+    thr::parallel_for(0..num, 1, |r| {
+        for i in r {
+            // Safety: image planes are disjoint across tasks.
+            let s = unsafe { sp.slice(i * plane, plane) };
+            lrn_scale(
+                &bottom[i * plane..(i + 1) * plane],
+                s,
+                channels,
+                dim,
+                local_size,
+                alpha,
+                k,
+            );
+        }
+    });
+}
+
+/// Batched `lrn_diff`, images sharded across the intra-op pool.
+#[allow(clippy::too_many_arguments)]
+pub fn lrn_diff_batch(
+    num: usize,
+    bottom: &[f32],
+    top: &[f32],
+    scale: &[f32],
+    top_diff: &[f32],
+    bottom_diff: &mut [f32],
+    channels: usize,
+    dim: usize,
+    local_size: usize,
+    alpha: f32,
+    beta: f32,
+) {
+    let plane = channels * dim;
+    assert!(bottom_diff.len() >= num * plane);
+    let bp = thr::SendPtr::new(bottom_diff.as_mut_ptr());
+    thr::parallel_for(0..num, 1, |r| {
+        for i in r {
+            let pr = i * plane..(i + 1) * plane;
+            // Safety: image planes are disjoint across tasks.
+            let bd = unsafe { bp.slice(i * plane, plane) };
+            lrn_diff(
+                &bottom[pr.clone()],
+                &top[pr.clone()],
+                &scale[pr.clone()],
+                &top_diff[pr],
+                bd,
+                channels,
+                dim,
+                local_size,
+                alpha,
+                beta,
+            );
+        }
+    });
 }
 
 /// LRN backward (one image).

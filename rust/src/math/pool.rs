@@ -1,8 +1,14 @@
 //! Max/Average pooling forward + backward (paper kernels `Max_pool_F/B`,
 //! `Ave_pool_F/B`). Follows Caffe's geometry: ceil-mode output sizing and
 //! clipping at the (padded) borders.
+//!
+//! The single-image kernels are the numerics; the `*_batch` entry points
+//! (what the native executor launches) shard the per-image loop across
+//! the intra-op pool — image `i` owns disjoint slices of every operand,
+//! so batching is embarrassingly parallel and thread-count invariant.
 
 use super::im2col::ConvGeom;
+use crate::util::pool as thr;
 
 /// Pooled output size, Caffe style (ceil), with the guarantee that the
 /// last window starts inside the (unpadded) image.
@@ -169,6 +175,91 @@ pub fn ave_pool_backward(g: &PoolGeom, top_diff: &[f32], bottom_diff: &mut [f32]
     }
 }
 
+/// Batched max-pool forward: `num` images, images sharded across the
+/// intra-op pool.
+pub fn max_pool_forward_batch(
+    g: &PoolGeom,
+    num: usize,
+    bottom: &[f32],
+    top: &mut [f32],
+    mask: &mut [f32],
+) {
+    let (il, ol) = (g.in_len(), g.out_len());
+    assert!(bottom.len() >= num * il);
+    assert!(top.len() >= num * ol && mask.len() >= num * ol);
+    let tp = thr::SendPtr::new(top.as_mut_ptr());
+    let mp = thr::SendPtr::new(mask.as_mut_ptr());
+    thr::parallel_for(0..num, 1, |r| {
+        for i in r {
+            // Safety: image slices are disjoint across tasks.
+            let t = unsafe { tp.slice(i * ol, ol) };
+            let m = unsafe { mp.slice(i * ol, ol) };
+            max_pool_forward(g, &bottom[i * il..(i + 1) * il], t, m);
+        }
+    });
+}
+
+/// Batched max-pool backward. Zeroes `bottom_diff[..num*in_len]` itself,
+/// then routes each image's gradient — image planes are disjoint.
+pub fn max_pool_backward_batch(
+    g: &PoolGeom,
+    num: usize,
+    top_diff: &[f32],
+    mask: &[f32],
+    bottom_diff: &mut [f32],
+) {
+    let (il, ol) = (g.in_len(), g.out_len());
+    assert!(top_diff.len() >= num * ol && mask.len() >= num * ol);
+    assert!(bottom_diff.len() >= num * il);
+    let bp = thr::SendPtr::new(bottom_diff.as_mut_ptr());
+    thr::parallel_for(0..num, 1, |r| {
+        for i in r {
+            // Safety: image slices are disjoint across tasks.
+            let bd = unsafe { bp.slice(i * il, il) };
+            for v in bd.iter_mut() {
+                *v = 0.0;
+            }
+            max_pool_backward(g, &top_diff[i * ol..(i + 1) * ol], &mask[i * ol..(i + 1) * ol], bd);
+        }
+    });
+}
+
+/// Batched average-pool forward.
+pub fn ave_pool_forward_batch(g: &PoolGeom, num: usize, bottom: &[f32], top: &mut [f32]) {
+    let (il, ol) = (g.in_len(), g.out_len());
+    assert!(bottom.len() >= num * il && top.len() >= num * ol);
+    let tp = thr::SendPtr::new(top.as_mut_ptr());
+    thr::parallel_for(0..num, 1, |r| {
+        for i in r {
+            // Safety: image slices are disjoint across tasks.
+            let t = unsafe { tp.slice(i * ol, ol) };
+            ave_pool_forward(g, &bottom[i * il..(i + 1) * il], t);
+        }
+    });
+}
+
+/// Batched average-pool backward. Zeroes `bottom_diff[..num*in_len]`.
+pub fn ave_pool_backward_batch(
+    g: &PoolGeom,
+    num: usize,
+    top_diff: &[f32],
+    bottom_diff: &mut [f32],
+) {
+    let (il, ol) = (g.in_len(), g.out_len());
+    assert!(top_diff.len() >= num * ol && bottom_diff.len() >= num * il);
+    let bp = thr::SendPtr::new(bottom_diff.as_mut_ptr());
+    thr::parallel_for(0..num, 1, |r| {
+        for i in r {
+            // Safety: image slices are disjoint across tasks.
+            let bd = unsafe { bp.slice(i * il, il) };
+            for v in bd.iter_mut() {
+                *v = 0.0;
+            }
+            ave_pool_backward(g, &top_diff[i * ol..(i + 1) * ol], bd);
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -327,5 +418,59 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// The batched (parallel) entry points must equal a serial per-image
+    /// loop bit for bit.
+    #[test]
+    fn batch_matches_serial_loop() {
+        let g = g2x2();
+        let num = 9;
+        let (il, ol) = (g.in_len(), g.out_len());
+        let mut rng = crate::util::prng::Pcg32::new(21);
+        let mut bottom = vec![0.0; num * il];
+        rng.fill_uniform(&mut bottom, -1.0, 1.0);
+        let mut td = vec![0.0; num * ol];
+        rng.fill_uniform(&mut td, -1.0, 1.0);
+
+        let (mut top_b, mut mask_b) = (vec![0.0; num * ol], vec![0.0; num * ol]);
+        max_pool_forward_batch(&g, num, &bottom, &mut top_b, &mut mask_b);
+        let (mut top_s, mut mask_s) = (vec![0.0; num * ol], vec![0.0; num * ol]);
+        for i in 0..num {
+            max_pool_forward(
+                &g,
+                &bottom[i * il..(i + 1) * il],
+                &mut top_s[i * ol..(i + 1) * ol],
+                &mut mask_s[i * ol..(i + 1) * ol],
+            );
+        }
+        assert_eq!(top_b, top_s);
+        assert_eq!(mask_b, mask_s);
+
+        let mut bd_b = vec![7.0; num * il]; // pre-filled: batch must zero it
+        max_pool_backward_batch(&g, num, &td, &mask_b, &mut bd_b);
+        let mut bd_s = vec![0.0; num * il];
+        for i in 0..num {
+            max_pool_backward(
+                &g,
+                &td[i * ol..(i + 1) * ol],
+                &mask_s[i * ol..(i + 1) * ol],
+                &mut bd_s[i * il..(i + 1) * il],
+            );
+        }
+        assert_eq!(bd_b, bd_s);
+
+        let mut at_b = vec![0.0; num * ol];
+        ave_pool_forward_batch(&g, num, &bottom, &mut at_b);
+        let mut abd_b = vec![7.0; num * il];
+        ave_pool_backward_batch(&g, num, &td, &mut abd_b);
+        let mut at_s = vec![0.0; num * ol];
+        let mut abd_s = vec![0.0; num * il];
+        for i in 0..num {
+            ave_pool_forward(&g, &bottom[i * il..(i + 1) * il], &mut at_s[i * ol..(i + 1) * ol]);
+            ave_pool_backward(&g, &td[i * ol..(i + 1) * ol], &mut abd_s[i * il..(i + 1) * il]);
+        }
+        assert_eq!(at_b, at_s);
+        assert_eq!(abd_b, abd_s);
     }
 }

@@ -52,6 +52,14 @@ pub struct EngineConfig {
     /// Admission queue capacity — the backpressure bound.
     pub queue_capacity: usize,
     pub device: DeviceKind,
+    /// Intra-op threads each worker's kernels may fan out to — a *cap*,
+    /// not a reservation. 0 = split the process thread budget evenly:
+    /// `default_threads() / workers`, at least 1, so inter-op workers ×
+    /// intra-op threads never oversubscribe the machine. The shared pool
+    /// runs one fan-out at a time; workers that lose the race execute
+    /// that kernel serially (see `util::pool` — intra-op parallelism
+    /// pays off most at low worker counts).
+    pub intra_op_threads: usize,
 }
 
 impl Default for EngineConfig {
@@ -62,6 +70,18 @@ impl Default for EngineConfig {
             max_linger: Duration::from_millis(2),
             queue_capacity: 256,
             device: DeviceKind::Cpu,
+            intra_op_threads: 0,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Effective per-worker intra-op thread budget.
+    pub fn intra_op_budget(&self) -> usize {
+        if self.intra_op_threads > 0 {
+            self.intra_op_threads
+        } else {
+            (crate::util::pool::default_threads() / self.workers.max(1)).max(1)
         }
     }
 }
@@ -253,6 +273,7 @@ impl Engine {
         };
 
         let healthy = Arc::new(std::sync::atomic::AtomicUsize::new(cfg.workers));
+        let intra_op = cfg.intra_op_budget();
         let mut workers = Vec::with_capacity(cfg.workers);
         for wid in 0..cfg.workers {
             let ctx = worker::WorkerContext {
@@ -260,6 +281,7 @@ impl Engine {
                 deploy: dep.clone(),
                 weights: weights.clone(),
                 device: cfg.device,
+                intra_op,
                 output_len,
                 queue: dispatch_q.clone(),
                 metrics: metrics.clone(),

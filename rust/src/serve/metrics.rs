@@ -48,6 +48,10 @@ impl Histogram {
         self.max_ns.load(Ordering::Relaxed)
     }
 
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+
     pub fn mean_ns(&self) -> f64 {
         let n = self.count();
         if n == 0 {
@@ -93,6 +97,11 @@ pub struct Metrics {
     pub batched_samples: AtomicU64,
     pub full_batches: AtomicU64,
     pub latency: Histogram,
+    /// Per-batch *simulated* device time (FPGA-sim workers only): the
+    /// `sim_clock_ns` delta across each batched forward, so batching
+    /// policy can be evaluated against the paper's cost model instead of
+    /// host wallclock. Empty when serving on the CPU device.
+    pub sim_batch: Histogram,
 }
 
 impl Metrics {
@@ -106,6 +115,7 @@ impl Metrics {
             batched_samples: AtomicU64::new(0),
             full_batches: AtomicU64::new(0),
             latency: Histogram::new(),
+            sim_batch: Histogram::new(),
         }
     }
 
@@ -126,6 +136,10 @@ impl Metrics {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub(crate) fn record_sim_batch(&self, sim_ns: u64) {
+        self.sim_batch.record(sim_ns);
+    }
+
     pub fn snapshot(&self) -> MetricsReport {
         let batches = self.batches.load(Ordering::Relaxed);
         let samples = self.batched_samples.load(Ordering::Relaxed);
@@ -143,6 +157,11 @@ impl Metrics {
             p99_ns: self.latency.quantile_ns(0.99),
             mean_ns: self.latency.mean_ns(),
             max_ns: self.latency.max_ns(),
+            sim_batches: self.sim_batch.count(),
+            sim_total_ns: self.sim_batch.sum_ns(),
+            sim_mean_ns: self.sim_batch.mean_ns(),
+            sim_p50_ns: self.sim_batch.quantile_ns(0.50),
+            sim_p99_ns: self.sim_batch.quantile_ns(0.99),
         }
     }
 }
@@ -169,11 +188,17 @@ pub struct MetricsReport {
     pub p99_ns: f64,
     pub mean_ns: f64,
     pub max_ns: u64,
+    /// Batches metered in simulated device time (FPGA-sim workers only).
+    pub sim_batches: u64,
+    pub sim_total_ns: u64,
+    pub sim_mean_ns: f64,
+    pub sim_p50_ns: f64,
+    pub sim_p99_ns: f64,
 }
 
 impl MetricsReport {
     pub fn render(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests: {} submitted, {} completed, {} failed, {} rejected\n\
              batches:  {} ({} full), mean size {:.2}\n\
              latency:  p50 {} / p95 {} / p99 {} (mean {}, max {})",
@@ -189,7 +214,18 @@ impl MetricsReport {
             fmt_ns(self.p99_ns),
             fmt_ns(self.mean_ns),
             fmt_ns(self.max_ns as f64),
-        )
+        );
+        if self.sim_batches > 0 {
+            s.push_str(&format!(
+                "\nsim time: {} batches, p50 {} / p99 {} per batch (mean {}, total {})",
+                self.sim_batches,
+                fmt_ns(self.sim_p50_ns),
+                fmt_ns(self.sim_p99_ns),
+                fmt_ns(self.sim_mean_ns),
+                fmt_ns(self.sim_total_ns as f64),
+            ));
+        }
+        s
     }
 }
 
@@ -248,5 +284,21 @@ mod tests {
         assert_eq!(r.failed, 1);
         assert!((r.mean_batch - 3.0).abs() < 1e-9);
         assert!(r.render().contains("mean size 3.00"));
+        // No FPGA-sim batches recorded: report stays silent about them.
+        assert_eq!(r.sim_batches, 0);
+        assert!(!r.render().contains("sim time"));
+    }
+
+    #[test]
+    fn sim_time_surfaces_in_snapshot_and_render() {
+        let m = Metrics::new();
+        m.record_sim_batch(2_000_000);
+        m.record_sim_batch(4_000_000);
+        let r = m.snapshot();
+        assert_eq!(r.sim_batches, 2);
+        assert_eq!(r.sim_total_ns, 6_000_000);
+        assert!((r.sim_mean_ns - 3_000_000.0).abs() < 1.0);
+        assert!(r.sim_p99_ns >= r.sim_p50_ns);
+        assert!(r.render().contains("sim time"));
     }
 }

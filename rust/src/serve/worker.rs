@@ -30,6 +30,9 @@ pub(crate) struct WorkerContext {
     pub deploy: DeployNet,
     pub weights: WeightSnapshot,
     pub device: DeviceKind,
+    /// Intra-op threads this worker's kernels may fan out to (the
+    /// engine's share of the process budget; see `util::pool`).
+    pub intra_op: usize,
     /// Elements per output row (classes).
     pub output_len: usize,
     pub queue: Arc<SharedQueue<Batch>>,
@@ -93,8 +96,14 @@ impl Replica {
         let packed = gather(&samples, ctx.deploy.sample_len, self.batch);
         drop(samples);
         self.input.borrow_mut().set_data(dev, &packed);
+        // On the FPGA sim, meter the batch in *simulated* device time so
+        // batching policy can be judged against the paper's cost model.
+        let sim_before = dev.sim_clock_ns();
         match self.net.forward(dev) {
             Ok(_) => {
+                if let (Some(t0), Some(t1)) = (sim_before, dev.sim_clock_ns()) {
+                    ctx.metrics.record_sim_batch(t1.saturating_sub(t0));
+                }
                 let out = self.output.borrow_mut().data_vec(dev);
                 let rows = scatter(&out, ctx.output_len, k);
                 for (req, row) in batch.requests.into_iter().zip(rows) {
@@ -118,6 +127,11 @@ pub(crate) fn run(ctx: WorkerContext) {
         queue: ctx.queue.clone(),
         healthy: ctx.healthy.clone(),
     };
+
+    // This worker's share of the machine: everything executed on this
+    // thread (replica build and every kernel) fans out at most
+    // `intra_op` wide, so N workers never oversubscribe the pool.
+    crate::util::pool::set_intra_op(ctx.intra_op);
 
     let mut dev: Box<dyn Device> = ctx.device.create();
 

@@ -6,6 +6,7 @@
 pub mod prng;
 pub mod json;
 pub mod cli;
+pub mod pool;
 pub mod table;
 pub mod stats;
 pub mod tcheck;

@@ -1,0 +1,435 @@
+//! Intra-op parallelism substrate: a std-only scoped thread pool with a
+//! `parallel_for` primitive and a process-wide thread *budget*.
+//!
+//! The paper's kernel-time breakdown (Table 3) is dominated by GEMM/GEMV,
+//! and the CPU fallback device is the reference every FPGA-sim and serve
+//! number is judged against — so the native math library shards its block
+//! loops across this pool. Design constraints, in order:
+//!
+//! 1. **Zero dependencies** — plain `Mutex`/`Condvar` workers, no
+//!    work-stealing deques, no channels. One job is broadcast at a time;
+//!    workers race on an atomic chunk counter for load balance.
+//! 2. **Deterministic numerics** — `parallel_for` hands out *chunks of the
+//!    index space*, never partial sums. Every output element is written by
+//!    exactly one task, so results are bit-identical at any thread count
+//!    (reductions stay serial in the math layer for the same reason).
+//! 3. **A shared budget** — serve's inter-op workers and intra-op GEMM
+//!    threads must not oversubscribe the machine. The process-wide width
+//!    is [`default_threads`] (`FECAFFE_THREADS` env, else
+//!    `available_parallelism`); each thread can additionally be capped
+//!    with [`set_intra_op`] / [`with_intra_op`], which is how
+//!    `serve::Engine` splits the machine across its worker pool and how
+//!    `Device::with_intra_op` scopes a per-device cap around kernel
+//!    execution.
+//! 4. **Never deadlock, never block on a busy pool** — the pool runs one
+//!    broadcast at a time; a competing (or nested) `parallel_for` simply
+//!    runs its body serially on the calling thread instead of waiting.
+//!    Consequence worth knowing: when several inter-op threads (e.g.
+//!    serve workers) fan out at the same instant, only one wins the
+//!    broadcast and the rest run that kernel serially — the intra-op
+//!    budget is a *cap*, not a guarantee. That's the right trade here:
+//!    concurrent inter-op workers already occupy the cores, and the cap
+//!    still prevents oversubscription; intra-op fan-out pays off most
+//!    for training and low-worker-count serving, where one thread owns
+//!    the hot path.
+//!
+//! The pool is lazily spawned on first use and lives for the process.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, Once, OnceLock};
+
+/// Elementwise ops below this many elements aren't worth a pool wakeup.
+pub const GRAIN_ELEMWISE: usize = 8192;
+
+// ---------------------------------------------------------------------------
+// Thread budget
+// ---------------------------------------------------------------------------
+
+/// Process-wide parallelism width: `FECAFFE_THREADS` if set to a positive
+/// integer, else `std::thread::available_parallelism()`. Decided once.
+pub fn default_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(s) = std::env::var("FECAFFE_THREADS") {
+            if let Ok(n) = s.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+thread_local! {
+    /// Per-thread intra-op cap; 0 = uncapped (use the process default).
+    static INTRA_OP: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Cap the calling thread's intra-op parallelism at `limit` threads
+/// (0 clears the cap). A serve worker calls this once at startup with its
+/// share of the machine; every math kernel invoked from that thread then
+/// fans out at most `limit` wide.
+pub fn set_intra_op(limit: usize) {
+    INTRA_OP.with(|c| c.set(limit));
+}
+
+/// The calling thread's intra-op cap (0 = uncapped).
+pub fn intra_op() -> usize {
+    INTRA_OP.with(|c| c.get())
+}
+
+/// Run `f` with the calling thread's intra-op cap tightened to `limit`
+/// (no-op when `limit == 0`; an existing tighter cap wins). Restores the
+/// previous cap on exit, including on panic.
+pub fn with_intra_op<R>(limit: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            set_intra_op(self.0);
+        }
+    }
+    let prev = intra_op();
+    let _restore = Restore(prev);
+    let eff = match (prev, limit) {
+        (p, 0) => p,
+        (0, l) => l,
+        (p, l) => p.min(l),
+    };
+    set_intra_op(eff);
+    f()
+}
+
+/// Effective parallelism for work submitted from the calling thread.
+pub fn current_threads() -> usize {
+    let cap = intra_op();
+    if cap == 0 {
+        default_threads()
+    } else {
+        cap.min(default_threads())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The pool
+// ---------------------------------------------------------------------------
+
+/// Type-erased pointer to a `&(dyn Fn() + Sync)` that lives on the
+/// broadcasting thread's stack. Only valid until the broadcast returns,
+/// which `broadcast_and_join` enforces by joining every claimant.
+#[derive(Clone, Copy)]
+struct Task {
+    ptr: *const (dyn Fn() + Sync),
+}
+// Safety: the pointee is Sync, and the broadcast protocol guarantees it
+// outlives every worker's use of it.
+unsafe impl Send for Task {}
+
+struct Slot {
+    /// Monotonic job id; a worker runs each epoch at most once.
+    epoch: u64,
+    /// Worker claims remaining for the current epoch.
+    claims: usize,
+    /// Workers currently inside the task body.
+    running: usize,
+    task: Option<Task>,
+    /// A worker's task body panicked during the current epoch.
+    panicked: bool,
+}
+
+pub struct ThreadPool {
+    slot: Mutex<Slot>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// Serializes broadcasts. Competing callers don't wait — they run
+    /// their body serially — which also makes nested `parallel_for` safe.
+    submit: Mutex<()>,
+    /// Helper threads (the caller is the +1th lane).
+    workers: usize,
+}
+
+static POOL: OnceLock<ThreadPool> = OnceLock::new();
+static SPAWN: Once = Once::new();
+
+/// The process-wide pool, spawned on first use with
+/// `default_threads() - 1` helper threads.
+pub fn global() -> &'static ThreadPool {
+    let pool = POOL.get_or_init(|| ThreadPool {
+        slot: Mutex::new(Slot {
+            epoch: 0,
+            claims: 0,
+            running: 0,
+            task: None,
+            panicked: false,
+        }),
+        work_cv: Condvar::new(),
+        done_cv: Condvar::new(),
+        submit: Mutex::new(()),
+        workers: default_threads().saturating_sub(1),
+    });
+    SPAWN.call_once(|| {
+        for i in 0..pool.workers {
+            std::thread::Builder::new()
+                .name(format!("fecaffe-pool-{i}"))
+                .spawn(move || worker_loop(pool))
+                .expect("spawn pool worker");
+        }
+    });
+    pool
+}
+
+fn worker_loop(pool: &'static ThreadPool) {
+    let mut seen = 0u64;
+    loop {
+        let task = {
+            let mut s = pool.slot.lock().unwrap();
+            loop {
+                if s.epoch != seen {
+                    seen = s.epoch;
+                    if s.claims > 0 {
+                        s.claims -= 1;
+                        s.running += 1;
+                        break s.task.expect("task set while claims > 0");
+                    }
+                    // Epoch already fully claimed by faster siblings.
+                }
+                s = pool.work_cv.wait(s).unwrap();
+            }
+        };
+        // Run outside the lock; a panicking body must not wedge the pool.
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe { (&*task.ptr)() }));
+        let mut s = pool.slot.lock().unwrap();
+        s.running -= 1;
+        if result.is_err() {
+            s.panicked = true;
+        }
+        if s.claims == 0 && s.running == 0 {
+            pool.done_cv.notify_all();
+        }
+    }
+}
+
+impl ThreadPool {
+    /// Run `task` on up to `claims` pool workers *and* the calling thread,
+    /// returning once every participant has finished. Panics (in any
+    /// participant) propagate to the caller after the join, so the task's
+    /// borrows never dangle.
+    fn broadcast_and_join(&self, claims: usize, task: &(dyn Fn() + Sync)) {
+        let claims = claims.min(self.workers);
+        if claims == 0 {
+            task();
+            return;
+        }
+        {
+            let mut s = self.slot.lock().unwrap();
+            s.epoch += 1;
+            s.claims = claims;
+            s.task = Some(Task { ptr: task as *const (dyn Fn() + Sync) });
+            self.work_cv.notify_all();
+        }
+        let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+        let panicked = {
+            let mut s = self.slot.lock().unwrap();
+            while s.claims > 0 || s.running > 0 {
+                s = self.done_cv.wait(s).unwrap();
+            }
+            s.task = None;
+            std::mem::replace(&mut s.panicked, false)
+        };
+        if let Err(p) = caller {
+            std::panic::resume_unwind(p);
+        }
+        if panicked {
+            panic!("fecaffe thread pool: a parallel task panicked");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// parallel_for
+// ---------------------------------------------------------------------------
+
+/// Apply `body` over `range`, split into contiguous chunks of at least
+/// `grain` indices, sharded across the pool plus the calling thread.
+///
+/// Guarantees:
+/// * every index is covered by exactly one `body` call (chunk boundaries
+///   may differ with the thread budget, so `body` must be independent
+///   per *index*, not per chunk — write elements, don't fold partial
+///   sums across a chunk into shared state);
+/// * the call returns only after every `body` invocation has finished;
+/// * runs entirely on the calling thread when the work is small, the
+///   effective budget is 1, or the pool is busy with another broadcast.
+pub fn parallel_for<F>(range: Range<usize>, grain: usize, body: F)
+where
+    F: Fn(Range<usize>) + Sync,
+{
+    let n = range.end.saturating_sub(range.start);
+    if n == 0 {
+        return;
+    }
+    let grain = grain.max(1);
+    let t = current_threads().min(n.div_ceil(grain)).max(1);
+    if t == 1 {
+        body(range);
+        return;
+    }
+    let pool = global();
+    let _submit = match pool.submit.try_lock() {
+        Ok(g) => g,
+        // A previous broadcast panicked out through the guard; the lock
+        // state itself is fine — keep using it.
+        Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+        Err(std::sync::TryLockError::WouldBlock) => {
+            // Pool busy (another broadcast, or we're nested inside one):
+            // degrade to serial rather than wait.
+            body(range);
+            return;
+        }
+    };
+    // A few chunks per lane for load balance, never smaller than grain.
+    // Chunk boundaries depend only on (n, grain, t) — and every chunk is
+    // processed independently — so numerics don't depend on which thread
+    // runs which chunk.
+    let chunk = grain.max(n.div_ceil(t * 4));
+    let nchunks = n.div_ceil(chunk);
+    let next = AtomicUsize::new(0);
+    let start = range.start;
+    let end = range.end;
+    let work = move || loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= nchunks {
+            break;
+        }
+        let s = start + i * chunk;
+        let e = (s + chunk).min(end);
+        body(s..e);
+    };
+    pool.broadcast_and_join(t - 1, &work);
+}
+
+// ---------------------------------------------------------------------------
+// Shared-slice helpers
+// ---------------------------------------------------------------------------
+
+/// A raw mutable pointer that may cross threads. Used by the math kernels
+/// to hand each `parallel_for` chunk its own *disjoint* window of an
+/// output slice; the caller is responsible for disjointness.
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(ptr: *mut T) -> SendPtr<T> {
+        SendPtr(ptr)
+    }
+
+    /// Reborrow `len` elements starting at `offset`.
+    ///
+    /// # Safety
+    /// `offset..offset + len` must lie inside the original allocation and
+    /// must not overlap any window handed to a concurrently running task.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, offset: usize, len: usize) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(offset), len)
+    }
+}
+
+/// Split `data` into contiguous chunks of at least `grain` elements and
+/// apply `body(offset, chunk)` to each, in parallel. Disjointness is by
+/// construction, so this is the safe front door for elementwise kernels.
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], grain: usize, body: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let len = data.len();
+    let ptr = SendPtr::new(data.as_mut_ptr());
+    parallel_for(0..len, grain, |r| {
+        let off = r.start;
+        let chunk = unsafe { ptr.slice(off, r.len()) };
+        body(off, chunk);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        for (n, grain) in [(0usize, 1usize), (1, 1), (7, 100), (1000, 1), (4096, 64)] {
+            let hits: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+            parallel_for(10..10 + n, grain, |r| {
+                for i in r {
+                    hits[i - 10].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "n={n} grain={grain}"
+            );
+        }
+    }
+
+    #[test]
+    fn chunks_mut_writes_disjoint_windows() {
+        let mut data = vec![0usize; 10_000];
+        parallel_chunks_mut(&mut data, 7, |off, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = off + i;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i);
+        }
+    }
+
+    #[test]
+    fn intra_op_cap_scopes_and_restores() {
+        assert_eq!(intra_op(), 0);
+        with_intra_op(2, || {
+            assert_eq!(intra_op(), 2);
+            with_intra_op(8, || assert_eq!(intra_op(), 2, "tighter cap wins"));
+            with_intra_op(1, || assert_eq!(intra_op(), 1));
+            assert_eq!(intra_op(), 2);
+        });
+        assert_eq!(intra_op(), 0);
+        assert!(current_threads() >= 1);
+    }
+
+    #[test]
+    fn nested_parallel_for_degrades_to_serial() {
+        let total = AtomicU32::new(0);
+        parallel_for(0..64, 1, |outer| {
+            // Nested call: must complete (serially) without deadlock.
+            parallel_for(0..outer.len(), 1, |inner| {
+                total.fetch_add(inner.len() as u32, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_task() {
+        let caught = std::panic::catch_unwind(|| {
+            parallel_for(0..1024, 1, |r| {
+                if r.contains(&512) {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(caught.is_err());
+        // Pool still serviceable afterwards.
+        let total = AtomicU32::new(0);
+        parallel_for(0..100, 1, |r| {
+            total.fetch_add(r.len() as u32, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 100);
+    }
+}

@@ -25,6 +25,7 @@ fn lenet_engine(workers: usize, max_batch: usize, linger: Duration, cap: usize) 
             max_linger: linger,
             queue_capacity: cap,
             device: DeviceKind::Cpu,
+            intra_op_threads: 0,
         },
     )
     .unwrap()
@@ -163,4 +164,91 @@ fn multi_worker_pool_serves_valid_probabilities() {
         output.borrow_mut().data_vec(&mut dev),
         responses[0].values
     );
+}
+
+/// The core coalescing guarantee must survive intra-op threading: with
+/// an explicit multi-thread budget per worker, batched outputs are still
+/// bit-identical to sequential batch-1 forwards (the packed GEMM's
+/// k-accumulation order is fixed regardless of thread count or batch
+/// row count — see math::gemm).
+#[test]
+fn batched_matches_single_with_intra_op_threads_on() {
+    let n = 8;
+    let param = zoo::by_name("lenet", 1).unwrap();
+    let engine = Engine::new(
+        &param,
+        EngineConfig {
+            workers: 1,
+            max_batch: n,
+            max_linger: Duration::from_millis(200),
+            queue_capacity: 64,
+            device: DeviceKind::Cpu,
+            // Explicitly multi-threaded kernels inside the worker.
+            intra_op_threads: fecaffe::util::pool::default_threads().max(2),
+        },
+    )
+    .unwrap();
+
+    let samples = random_samples(n, engine.sample_len(), 77);
+    let handles: Vec<_> = samples
+        .iter()
+        .map(|s| engine.submit(s.clone()).unwrap())
+        .collect();
+    let got: Vec<Vec<f32>> = handles
+        .into_iter()
+        .map(|h| h.wait().unwrap().values)
+        .collect();
+    engine.shutdown();
+
+    // Reference: serial batch-1 replica on this (unbudgeted) thread.
+    let deploy = zoo::deploy_by_name("lenet", 1).unwrap();
+    let mut dev = CpuDevice::new();
+    let mut reference = Net::from_param(&deploy.param, Phase::Test, &mut dev).unwrap();
+    reference.adopt_weights(&mut dev, &engine.weights()).unwrap();
+    let input = reference.blob(&deploy.input).unwrap();
+    let output = reference.blob(&deploy.output).unwrap();
+    for (i, s) in samples.iter().enumerate() {
+        input.borrow_mut().set_data(&mut dev, s);
+        reference.forward(&mut dev).unwrap();
+        let want = output.borrow_mut().data_vec(&mut dev);
+        assert_eq!(
+            got[i], want,
+            "sample {i}: intra-op threading changed batched output bits"
+        );
+    }
+}
+
+/// FPGA-sim workers surface per-batch *simulated* device time in the
+/// engine metrics (ROADMAP: evaluate batching policy against the paper's
+/// cost model, not host wallclock).
+#[test]
+fn fpga_sim_workers_report_sim_batch_time() {
+    let param = zoo::by_name("lenet", 1).unwrap();
+    let engine = Engine::new(
+        &param,
+        EngineConfig {
+            workers: 1,
+            max_batch: 4,
+            max_linger: Duration::from_micros(100),
+            queue_capacity: 64,
+            device: DeviceKind::FpgaSim,
+            intra_op_threads: 1,
+        },
+    )
+    .unwrap();
+    let samples = random_samples(6, engine.sample_len(), 3);
+    let handles: Vec<_> = samples
+        .iter()
+        .map(|s| engine.submit(s.clone()).unwrap())
+        .collect();
+    for h in handles {
+        h.wait().unwrap();
+    }
+    engine.shutdown();
+    let m = engine.metrics().snapshot();
+    assert_eq!(m.completed, 6);
+    assert!(m.sim_batches >= 1, "sim batches: {}", m.sim_batches);
+    assert_eq!(m.sim_batches, m.batches, "every batch metered in sim time");
+    assert!(m.sim_total_ns > 0, "forward must advance the sim clock");
+    assert!(m.sim_p99_ns >= m.sim_p50_ns);
 }

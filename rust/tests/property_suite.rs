@@ -260,3 +260,101 @@ fn gemm_matches_naive_on_random_shapes() {
         Ok(())
     });
 }
+
+/// `parallel_for` must cover every index exactly once and produce results
+/// identical to a serial loop, for adversarial (range, grain, budget)
+/// combinations — empty ranges, grain larger than the range, grain 1 on
+/// large ranges, and every intra-op cap from 1 to the machine width.
+#[test]
+fn parallel_for_equals_serial_for_adversarial_grains() {
+    use fecaffe::util::pool;
+    tcheck::check("parallel_for_serial_equiv", 48, |rng| {
+        let n = match rng.below(4) {
+            0 => 0usize,
+            1 => rng.range_u(1, 7) as usize,
+            2 => rng.range_u(8, 512) as usize,
+            _ => rng.range_u(513, 20_000) as usize,
+        };
+        let grain = match rng.below(3) {
+            0 => 1usize,
+            1 => rng.range_u(1, 64) as usize,
+            _ => rng.range_u(1, 40_000) as usize, // often > n
+        };
+        let start = rng.below(1000) as usize;
+        let threads = 1 + rng.below(pool::default_threads().max(2) as u32) as usize;
+
+        // Serial reference.
+        let mut want = vec![0u64; n];
+        for i in 0..n {
+            want[i] = ((start + i) as u64).wrapping_mul(0x9e37_79b9);
+        }
+        // Parallel: each chunk writes its own disjoint window.
+        let mut got = vec![0u64; n];
+        pool::with_intra_op(threads, || {
+            pool::parallel_chunks_mut(&mut got, grain, |off, chunk| {
+                for (d, v) in chunk.iter_mut().enumerate() {
+                    *v = ((start + off + d) as u64).wrapping_mul(0x9e37_79b9);
+                }
+            });
+        });
+        if got != want {
+            return Err(format!(
+                "mismatch at n={n} grain={grain} threads={threads}"
+            ));
+        }
+
+        // Exactly-once coverage of an offset range.
+        let hits: Vec<std::sync::atomic::AtomicU32> =
+            (0..n).map(|_| std::sync::atomic::AtomicU32::new(0)).collect();
+        pool::with_intra_op(threads, || {
+            pool::parallel_for(start..start + n, grain, |r| {
+                for i in r {
+                    hits[i - start].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            });
+        });
+        for (i, h) in hits.iter().enumerate() {
+            let c = h.load(std::sync::atomic::Ordering::Relaxed);
+            if c != 1 {
+                return Err(format!(
+                    "index {i} covered {c} times (n={n} grain={grain} threads={threads})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Packed GEMM must be bit-identical across thread budgets *through the
+/// device launch path* (what serving and training actually execute).
+#[test]
+fn device_gemm_bit_identical_across_intra_op_budgets() {
+    use fecaffe::util::pool;
+    let (m, n, k) = (48usize, 200, 96);
+    let mut rng = fecaffe::util::prng::Pcg32::new(40);
+    let mut va = vec![0f32; m * k];
+    let mut vb = vec![0f32; k * n];
+    rng.fill_uniform(&mut va, -1.0, 1.0);
+    rng.fill_uniform(&mut vb, -1.0, 1.0);
+    let run = |threads: usize| -> Vec<f32> {
+        let mut dev = CpuDevice::new().with_intra_op(threads);
+        let a = dev.alloc(m * k).unwrap();
+        let b = dev.alloc(k * n).unwrap();
+        let c = dev.alloc(m * n).unwrap();
+        dev.write(a, &va);
+        dev.write(b, &vb);
+        dev.launch(&KernelCall::new(
+            Kernel::GemmNN { m, n, k, alpha: 1.0, beta: 0.0 },
+            &[a, b],
+            &[c],
+        ))
+        .unwrap();
+        let mut out = vec![0f32; m * n];
+        dev.read(c, &mut out);
+        out
+    };
+    let c1 = run(1);
+    for t in [2, pool::default_threads().max(2)] {
+        assert_eq!(c1, run(t), "intra-op budget {t} changed gemm bits");
+    }
+}
