@@ -1,19 +1,24 @@
 //! Serving-engine throughput bench: LeNet under a closed-loop load test
-//! at micro-batch caps 1 / 8 / 32, emitting `BENCH_serve.json`
-//! (requests/s and p99 latency per configuration).
-//! `cargo bench --bench serve_throughput`.
+//! at micro-batch caps 1 / 8 / 32 in-process, plus the same engine
+//! config behind the HTTP front-end (real sockets, persistent
+//! connections), emitting `BENCH_serve.json` (requests/s and p99
+//! latency per configuration). `cargo bench --bench serve_throughput`.
 
-use fecaffe::serve::{load_test, DeviceKind, Engine, EngineConfig};
+use fecaffe::serve::{
+    http_load_test, load_test, DeviceKind, Engine, EngineConfig, HttpConfig, HttpServer,
+    ModelRouter, RouterConfig,
+};
 use fecaffe::util::json::Json;
 use fecaffe::util::stats::summarize;
 use fecaffe::zoo;
+use std::sync::Arc;
 use std::time::Duration;
 
-fn main() -> anyhow::Result<()> {
-    const WORKERS: usize = 4;
-    const CLIENTS: usize = 16;
-    const REQUESTS: usize = 384;
+const WORKERS: usize = 4;
+const CLIENTS: usize = 16;
+const REQUESTS: usize = 384;
 
+fn main() -> anyhow::Result<()> {
     let param = zoo::by_name("lenet", 1)?;
     let mut results = Vec::new();
     for &max_batch in &[1usize, 8, 32] {
@@ -48,6 +53,7 @@ fn main() -> anyhow::Result<()> {
         );
 
         let mut o = Json::obj();
+        o.set("transport", Json::str("inproc"));
         o.set("max_batch", Json::num(max_batch as f64));
         o.set("requests", Json::num(report.requests as f64));
         o.set("failed", Json::num(report.failed as f64));
@@ -55,6 +61,41 @@ fn main() -> anyhow::Result<()> {
         o.set("p50_ms", Json::num(s.median_ns / 1e6));
         o.set("p99_ms", Json::num(s.p99_ns / 1e6));
         o.set("mean_batch", Json::num(mean_batch));
+        results.push(o);
+    }
+
+    // HTTP path: the same serving stack behind the TcpListener
+    // front-end — measures end-to-end over real sockets (parse +
+    // JSON + engine), the number an external load generator sees.
+    {
+        let cfg = RouterConfig {
+            total_workers: WORKERS,
+            max_batch: 8,
+            max_linger: Duration::from_micros(1000),
+            queue_capacity: 1024,
+            device: DeviceKind::Cpu,
+            intra_op_threads: 0,
+        };
+        let router = Arc::new(ModelRouter::from_zoo(&["lenet"], &cfg)?);
+        let sample_len = router.engine("lenet").expect("registered").sample_len();
+        let server = HttpServer::bind("127.0.0.1:0", router, HttpConfig::default())?;
+        let addr = server.local_addr().to_string();
+        let _ = http_load_test(&addr, "lenet", sample_len, CLIENTS, CLIENTS * 2, 1)?; // warm
+        let report = http_load_test(&addr, "lenet", sample_len, CLIENTS, REQUESTS, 7)?;
+        server.shutdown();
+        anyhow::ensure!(report.requests > 0, "no completed requests over HTTP");
+        let mut lats = report.latencies_ns.clone();
+        let s = summarize("lenet serve, http max-batch  8", &mut lats);
+        println!("{}   ({:.1} req/s over HTTP)", s.line(), report.rps);
+
+        let mut o = Json::obj();
+        o.set("transport", Json::str("http"));
+        o.set("max_batch", Json::num(8.0));
+        o.set("requests", Json::num(report.requests as f64));
+        o.set("failed", Json::num(report.failed as f64));
+        o.set("rps", Json::num(report.rps));
+        o.set("p50_ms", Json::num(s.median_ns / 1e6));
+        o.set("p99_ms", Json::num(s.p99_ns / 1e6));
         results.push(o);
     }
 

@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
     for i in 0..iters {
         let loss = solver.step(dev.as_mut())?;
         if i % 20 == 0 || i + 1 == iters {
-            println!("iter {i:>4}  loss {loss:.4}  lr {:.5}", solver.learning_rate());
+            println!("iter {i:>4}  loss {loss:.4}  lr {:.5}", solver.learning_rate()?);
         }
     }
     let wall = wall.elapsed();

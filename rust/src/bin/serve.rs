@@ -1,24 +1,37 @@
-//! `serve` — batched, multi-worker inference serving for any zoo model,
-//! with a self-driven closed-loop load test and a latency/throughput
-//! report.
+//! `serve` — batched, multi-worker inference serving for any zoo model.
+//!
+//! Three modes:
 //!
 //! ```text
+//! # 1. In-process closed-loop load test (the original mode):
 //! serve --net lenet --workers 4 --max-batch 32
-//! serve --net googlenet --workers 2 --max-batch 8 --requests 64 --clients 8
 //! serve --net lenet --device fpga --json BENCH_serve.json
+//!
+//! # 2. HTTP server: one engine per model behind a TcpListener.
+//! #    Runs until `POST /admin/shutdown` (the SIGTERM equivalent),
+//! #    then drains every admitted request before exiting.
+//! serve --http 127.0.0.1:8080 --models lenet,alexnet --workers 4
+//!
+//! # 3. HTTP load generator against a running server (mode 2),
+//! #    so load finally lives outside the serving process:
+//! serve --target 127.0.0.1:8080 --net lenet --requests 512 --clients 8
 //! ```
 
-use fecaffe::serve::{load_test, DeviceKind, Engine, EngineConfig};
+use fecaffe::serve::{
+    http_load_test, http_request, load_test, DeviceKind, Engine, EngineConfig, HttpConfig,
+    HttpServer, LoadReport, ModelRouter, RouterConfig,
+};
 use fecaffe::util::cli::{usage, Args, Spec};
 use fecaffe::util::json::Json;
-use fecaffe::util::stats::{fmt_ns, summarize};
+use fecaffe::util::stats::{fmt_ns, summarize, Summary};
 use fecaffe::util::table::Table;
 use fecaffe::zoo;
+use std::sync::Arc;
 use std::time::Duration;
 
 const SPECS: &[Spec] = &[
     Spec::opt("net", Some("lenet"), "zoo network name or net prototxt path"),
-    Spec::opt("workers", Some("4"), "worker replicas (threads)"),
+    Spec::opt("workers", Some("4"), "worker replicas (threads; --http splits them across models)"),
     Spec::opt("max-batch", Some("32"), "micro-batch upper bound"),
     Spec::opt("linger-us", Some("2000"), "micro-batch linger deadline, microseconds"),
     Spec::opt("queue-cap", Some("1024"), "admission queue capacity (backpressure bound)"),
@@ -31,20 +44,157 @@ const SPECS: &[Spec] = &[
     Spec::opt("requests", Some("512"), "load-test request count"),
     Spec::opt("clients", Some("8"), "load-test client threads"),
     Spec::opt("json", None, "also write the report as JSON to this path"),
+    Spec::opt(
+        "http",
+        None,
+        "serve over HTTP on this address (e.g. 127.0.0.1:8080; port 0 picks one)",
+    ),
+    Spec::opt("models", Some("lenet"), "comma-separated zoo models for --http mode"),
+    Spec::opt(
+        "target",
+        None,
+        "run the HTTP load generator against a serve --http process at this address",
+    ),
 ];
 
-fn run(args: &Args) -> anyhow::Result<()> {
+fn parse_device(args: &Args) -> anyhow::Result<DeviceKind> {
+    match args.get("device").unwrap_or("cpu") {
+        "cpu" => Ok(DeviceKind::Cpu),
+        "fpga" => Ok(DeviceKind::FpgaSim),
+        other => anyhow::bail!("unknown device '{other}' (cpu | fpga)"),
+    }
+}
+
+fn report_table(title: &str, report: &LoadReport, s: &Summary) -> Table {
+    let mut table = Table::new(title, &["Metric", "Value"]);
+    table.row(&["requests completed".into(), format!("{}", report.requests)]);
+    table.row(&["wall time".into(), format!("{:.3} s", report.wall.as_secs_f64())]);
+    table.row(&["throughput".into(), format!("{:.1} req/s", report.rps)]);
+    table.row(&["latency p50".into(), fmt_ns(s.median_ns)]);
+    table.row(&["latency p95".into(), fmt_ns(s.p95_ns)]);
+    table.row(&["latency p99".into(), fmt_ns(s.p99_ns)]);
+    table.row(&["latency mean".into(), fmt_ns(s.mean_ns)]);
+    table.row(&[
+        "backpressure retries".into(),
+        format!("{}", report.backpressure_retries),
+    ]);
+    table.row(&["failed requests".into(), format!("{}", report.failed)]);
+    table
+}
+
+/// Mode 2: HTTP server over a multi-model router. Parks until a client
+/// POSTs /admin/shutdown, then drains and exits.
+fn run_http_server(args: &Args, addr: &str) -> anyhow::Result<()> {
+    let models: Vec<&str> = args
+        .get("models")
+        .unwrap_or("lenet")
+        .split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let cfg = RouterConfig {
+        total_workers: args.get_usize("workers").map_err(anyhow::Error::msg)?,
+        max_batch: args.get_usize("max-batch").map_err(anyhow::Error::msg)?,
+        max_linger: Duration::from_micros(
+            args.get_usize("linger-us").map_err(anyhow::Error::msg)? as u64,
+        ),
+        queue_capacity: args.get_usize("queue-cap").map_err(anyhow::Error::msg)?,
+        device: parse_device(args)?,
+        intra_op_threads: args.get_usize("intra-op").map_err(anyhow::Error::msg)?,
+    };
+    println!(
+        "[serve] building {} engine(s) ({}) | {} total worker(s) on {:?} | max-batch {} | queue {}",
+        models.len(),
+        models.join(", "),
+        cfg.total_workers,
+        cfg.device,
+        cfg.max_batch,
+        cfg.queue_capacity
+    );
+    let router = Arc::new(ModelRouter::from_zoo(&models, &cfg)?);
+    for name in router.models() {
+        let e = router.engine(name).expect("registered model");
+        println!(
+            "[serve]   {name}: {} inputs/sample, {} outputs/sample, {} worker(s)",
+            e.sample_len(),
+            e.output_len(),
+            e.config().workers
+        );
+    }
+    let server = HttpServer::bind(addr, router, HttpConfig::default())?;
+    println!("[serve] listening on http://{}", server.local_addr());
+    println!(
+        "[serve] POST /v1/models/<name>:predict | GET /v1/models | GET /metrics | GET /healthz | POST /admin/shutdown"
+    );
+    server.wait_shutdown();
+    println!("[serve] shutdown requested; draining...");
+    server.shutdown();
+    println!("[serve] drained clean");
+    Ok(())
+}
+
+/// Mode 3: closed-loop HTTP load generator against a running server.
+fn run_http_client(args: &Args, target: &str) -> anyhow::Result<()> {
+    let model = args.get("net").unwrap_or("lenet");
+    let requests = args.get_usize("requests").map_err(anyhow::Error::msg)?;
+    let clients = args.get_usize("clients").map_err(anyhow::Error::msg)?;
+
+    // Discover the model's input schema from the server's inventory.
+    let (status, body) = http_request(target, "GET", "/v1/models", b"")?;
+    anyhow::ensure!(status == 200, "GET /v1/models returned {status}");
+    let inv = Json::parse(std::str::from_utf8(&body)?).map_err(anyhow::Error::msg)?;
+    let sample_len = inv
+        .get("models")
+        .and_then(|m| m.as_arr())
+        .and_then(|arr| {
+            arr.iter()
+                .find(|m| m.get("name").and_then(|n| n.as_str()) == Some(model))
+        })
+        .and_then(|m| m.get("sample_len"))
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow::anyhow!("model '{model}' is not served at {target}"))?;
+
+    println!(
+        "[serve] HTTP load test against http://{target}: model {model} ({sample_len} inputs/sample), {requests} requests from {clients} client(s)..."
+    );
+    let report = http_load_test(target, model, sample_len, clients, requests, 0xF_EC_AF_FE)?;
+    anyhow::ensure!(
+        report.requests > 0,
+        "load test completed no requests ({} failed) — is the server healthy?",
+        report.failed
+    );
+    let mut lats = report.latencies_ns.clone();
+    let s = summarize("request latency", &mut lats);
+    println!(
+        "{}",
+        report_table(&format!("{model} HTTP serving load test"), &report, &s).render()
+    );
+
+    if let Some(path) = args.get("json") {
+        let mut o = Json::obj();
+        o.set("net", Json::str(model));
+        o.set("transport", Json::str("http"));
+        o.set("clients", Json::num(clients as f64));
+        o.set("requests", Json::num(report.requests as f64));
+        o.set("failed", Json::num(report.failed as f64));
+        o.set("rps", Json::num(report.rps));
+        o.set("p50_ms", Json::num(s.median_ns / 1e6));
+        o.set("p95_ms", Json::num(s.p95_ns / 1e6));
+        o.set("p99_ms", Json::num(s.p99_ns / 1e6));
+        std::fs::write(path, o.to_pretty())?;
+        println!("[serve] wrote {path}");
+    }
+    Ok(())
+}
+
+/// Mode 1: the original in-process closed-loop load test.
+fn run_load_test(args: &Args) -> anyhow::Result<()> {
     let name = args.get("net").unwrap_or("lenet");
     let param = if std::path::Path::new(name).is_file() {
         let text = std::fs::read_to_string(name)?;
         fecaffe::proto::parse_net(&text).map_err(anyhow::Error::msg)?
     } else {
         zoo::by_name(name, 1)?
-    };
-    let device = match args.get("device").unwrap_or("cpu") {
-        "cpu" => DeviceKind::Cpu,
-        "fpga" => DeviceKind::FpgaSim,
-        other => anyhow::bail!("unknown device '{other}' (cpu | fpga)"),
     };
     let cfg = EngineConfig {
         workers: args.get_usize("workers").map_err(anyhow::Error::msg)?,
@@ -53,7 +203,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
             args.get_usize("linger-us").map_err(anyhow::Error::msg)? as u64,
         ),
         queue_capacity: args.get_usize("queue-cap").map_err(anyhow::Error::msg)?,
-        device,
+        device: parse_device(args)?,
         intra_op_threads: args.get_usize("intra-op").map_err(anyhow::Error::msg)?,
     };
     let requests = args.get_usize("requests").map_err(anyhow::Error::msg)?;
@@ -90,25 +240,10 @@ fn run(args: &Args) -> anyhow::Result<()> {
     let mut lats = report.latencies_ns.clone();
     let s = summarize("request latency", &mut lats);
 
-    let mut table = Table::new(
-        &format!("{} serving load test", param.name),
-        &["Metric", "Value"],
-    );
-    table.row(&["requests completed".into(), format!("{}", report.requests)]);
-    table.row(&["wall time".into(), format!("{:.3} s", report.wall.as_secs_f64())]);
-    table.row(&["throughput".into(), format!("{:.1} req/s", report.rps)]);
-    table.row(&["latency p50".into(), fmt_ns(s.median_ns)]);
-    table.row(&["latency p95".into(), fmt_ns(s.p95_ns)]);
-    table.row(&["latency p99".into(), fmt_ns(s.p99_ns)]);
-    table.row(&["latency mean".into(), fmt_ns(s.mean_ns)]);
+    let mut table = report_table(&format!("{} serving load test", param.name), &report, &s);
     table.row(&["batches executed".into(), format!("{}", snap.batches)]);
     table.row(&["mean batch size".into(), format!("{:.2}", snap.mean_batch)]);
     table.row(&["full batches".into(), format!("{}", snap.full_batches)]);
-    table.row(&[
-        "backpressure retries".into(),
-        format!("{}", report.backpressure_retries),
-    ]);
-    table.row(&["failed requests".into(), format!("{}", report.failed)]);
     if snap.sim_batches > 0 {
         // FPGA-sim workers: batch cost in *simulated* device time (the
         // paper's cost model), alongside host wallclock.
@@ -121,6 +256,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
     if let Some(path) = args.get("json") {
         let mut o = Json::obj();
         o.set("net", Json::str(param.name.clone()));
+        o.set("transport", Json::str("inproc"));
         o.set("workers", Json::num(cfg.workers as f64));
         o.set("max_batch", Json::num(cfg.max_batch as f64));
         o.set("requests", Json::num(report.requests as f64));
@@ -138,6 +274,18 @@ fn run(args: &Args) -> anyhow::Result<()> {
         println!("[serve] wrote {path}");
     }
     Ok(())
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    if let Some(target) = args.get("target") {
+        let target = target.to_string();
+        return run_http_client(args, &target);
+    }
+    if let Some(addr) = args.get("http") {
+        let addr = addr.to_string();
+        return run_http_server(args, &addr);
+    }
+    run_load_test(args)
 }
 
 fn main() {

@@ -177,6 +177,9 @@ pub fn emit_solver(s: &SolverParameter) -> String {
     let _ = writeln!(out, "gamma: {}", s.gamma);
     let _ = writeln!(out, "power: {}", s.power);
     let _ = writeln!(out, "stepsize: {}", s.stepsize);
+    for v in &s.stepvalue {
+        let _ = writeln!(out, "stepvalue: {v}");
+    }
     let _ = writeln!(out, "momentum: {}", s.momentum);
     let _ = writeln!(out, "momentum2: {}", s.momentum2);
     let _ = writeln!(out, "rms_decay: {}", s.rms_decay);
@@ -209,6 +212,19 @@ mod tests {
         s.lr_policy = "inv".into();
         s.rms_decay = 0.97;
         let text = emit_solver(&s);
+        let back = parse_solver(&text).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn solver_roundtrip_multistep() {
+        let mut s = SolverParameter::default();
+        s.net = "alexnet".into();
+        s.lr_policy = "multistep".into();
+        s.gamma = 0.1;
+        s.stepvalue = vec![1000, 2000, 6000];
+        let text = emit_solver(&s);
+        assert_eq!(text.matches("stepvalue:").count(), 3);
         let back = parse_solver(&text).unwrap();
         assert_eq!(s, back);
     }

@@ -519,16 +519,25 @@ impl SolverKind {
     }
 }
 
+/// Learning-rate policies the solver implements (caffe
+/// `SGDSolver::GetLearningRate`). `SolverParameter::from_message`
+/// rejects anything else at parse time, so an unknown policy in a
+/// user-supplied prototxt is an `Err`, never a mid-training panic.
+pub const LR_POLICIES: &[&str] =
+    &["fixed", "step", "exp", "inv", "poly", "sigmoid", "multistep"];
+
 /// Solver configuration (`lenet_solver.prototxt` style).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SolverParameter {
     pub net: String, // path or zoo name
     pub kind: SolverKind,
     pub base_lr: f32,
-    pub lr_policy: String, // fixed | step | exp | inv | poly | sigmoid
+    pub lr_policy: String, // one of [`LR_POLICIES`]
     pub gamma: f32,
     pub power: f32,
     pub stepsize: usize,
+    /// `multistep` boundaries (caffe repeated `stepvalue`), ascending.
+    pub stepvalue: Vec<usize>,
     pub momentum: f32,
     pub momentum2: f32, // adam beta2
     pub rms_decay: f32,
@@ -556,6 +565,7 @@ impl Default for SolverParameter {
             gamma: 0.1,
             power: 0.75,
             stepsize: 100_000,
+            stepvalue: Vec::new(),
             momentum: 0.9,
             momentum2: 0.999,
             rms_decay: 0.99,
@@ -614,6 +624,14 @@ impl SolverParameter {
         if let Some(v) = m.get_str("lr_policy") {
             s.lr_policy = v.to_string();
         }
+        if !LR_POLICIES.contains(&s.lr_policy.as_str()) {
+            return Err(format!(
+                "unknown lr_policy '{}' (have: {})",
+                s.lr_policy,
+                LR_POLICIES.join(", ")
+            ));
+        }
+        s.stepvalue = m.nums("stepvalue").iter().map(|&v| v as usize).collect();
         if let Some(v) = m.get_str("regularization_type") {
             s.regularization_type = v.to_string();
         }
@@ -732,6 +750,32 @@ random_seed: 7
         assert_eq!(s.stepsize, 200);
         assert_eq!(s.momentum2, 0.995);
         assert_eq!(s.random_seed, 7);
+    }
+
+    #[test]
+    fn parses_multistep_stepvalues() {
+        let text = r#"
+net: "alexnet"
+base_lr: 0.01
+lr_policy: "multistep"
+gamma: 0.1
+stepvalue: 1000
+stepvalue: 2000
+stepvalue: 6000
+"#;
+        let s = parse_solver(text).unwrap();
+        assert_eq!(s.lr_policy, "multistep");
+        assert_eq!(s.stepvalue, vec![1000, 2000, 6000]);
+        // Other policies simply carry an empty list.
+        let s = parse_solver("net: \"lenet\"\nlr_policy: \"fixed\"").unwrap();
+        assert!(s.stepvalue.is_empty());
+    }
+
+    #[test]
+    fn rejects_unknown_lr_policy_at_parse() {
+        let err = parse_solver("net: \"lenet\"\nlr_policy: \"bogus\"").unwrap_err();
+        assert!(err.contains("unknown lr_policy 'bogus'"), "{err}");
+        assert!(err.contains("multistep"), "error should list valid policies: {err}");
     }
 
     use super::super::parse_solver;

@@ -94,6 +94,12 @@ pub enum ServeError {
     Overloaded(Vec<f32>),
     /// Engine is shutting down (or already shut down).
     ShuttingDown,
+    /// Internal resolution for a request refused at admission whose
+    /// handle was never exposed (`submit` returned `Overloaded` and
+    /// handed the sample back). Kept distinct from `ShuttingDown` so
+    /// debug traces and metrics can't misreport overload as shutdown;
+    /// callers never observe it from `submit` or `wait`.
+    Rejected,
     /// Sample didn't match the model's input schema.
     BadRequest(String),
     /// Worker-side failure while executing the request.
@@ -105,6 +111,9 @@ impl std::fmt::Display for ServeError {
         match self {
             ServeError::Overloaded(_) => write!(f, "engine overloaded (admission queue full)"),
             ServeError::ShuttingDown => write!(f, "engine is shutting down"),
+            ServeError::Rejected => {
+                write!(f, "request rejected at admission (queue full)")
+            }
             ServeError::BadRequest(m) => write!(f, "bad request: {m}"),
             ServeError::Worker(m) => write!(f, "worker error: {m}"),
         }
@@ -383,13 +392,21 @@ impl Engine {
             Err(PushError::Full(mut req)) => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 // Hand the sample back for a clone-free retry. Resolve
-                // the never-exposed slot here so the drop below doesn't
-                // book a `failed` on top of the `rejected`.
+                // the never-exposed slot with the dedicated `Rejected`
+                // marker — not `ShuttingDown`, which would misreport
+                // overload as shutdown in traces — so the drop below
+                // doesn't book a `failed` on top of the `rejected`.
                 let sample = std::mem::take(&mut req.sample);
-                req.complete(Err(ServeError::ShuttingDown));
+                req.complete(Err(ServeError::Rejected));
                 Err(ServeError::Overloaded(sample))
             }
-            Err(PushError::Closed(_)) => Err(ServeError::ShuttingDown),
+            Err(PushError::Closed(req)) => {
+                // Never admitted: resolve the unexposed slot with the
+                // true reason so Drop doesn't book a worker `failed`
+                // for a request that was refused at the door.
+                req.complete(Err(ServeError::ShuttingDown));
+                Err(ServeError::ShuttingDown)
+            }
         }
     }
 
@@ -415,5 +432,65 @@ impl Engine {
 impl Drop for Engine {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_request(metrics: &Arc<Metrics>) -> (Request, Arc<Slot>) {
+        let slot = Arc::new(Slot { result: Mutex::new(None), ready: Condvar::new() });
+        let req = Request {
+            sample: vec![1.0, 2.0],
+            submitted: Instant::now(),
+            slot: slot.clone(),
+            metrics: metrics.clone(),
+        };
+        (req, slot)
+    }
+
+    /// The admission-overflow resolution must be `Rejected`, not
+    /// `ShuttingDown`, and must not count as a worker failure — the
+    /// `rejected` counter (bumped by `submit`) is the only record.
+    #[test]
+    fn rejected_resolution_is_not_shutdown_and_not_a_failure() {
+        let metrics = Arc::new(Metrics::new());
+        let (req, slot) = mk_request(&metrics);
+        assert!(req.complete(Err(ServeError::Rejected)));
+        drop(req); // Drop sees the slot resolved: no double accounting.
+        assert_eq!(metrics.failed.load(Ordering::Relaxed), 0);
+        match slot.result.lock().unwrap().as_ref() {
+            Some(Err(ServeError::Rejected)) => {}
+            other => panic!("expected Rejected resolution, got {other:?}"),
+        }
+    }
+
+    /// A request dropped unresolved still books exactly one failure.
+    #[test]
+    fn dropped_request_books_one_failure() {
+        let metrics = Arc::new(Metrics::new());
+        let (req, slot) = mk_request(&metrics);
+        drop(req);
+        assert_eq!(metrics.failed.load(Ordering::Relaxed), 1);
+        match slot.result.lock().unwrap().as_ref() {
+            Some(Err(ServeError::Worker(_))) => {}
+            other => panic!("expected Worker resolution, got {other:?}"),
+        }
+    }
+
+    /// First resolution wins; later ones (including Drop) are no-ops.
+    #[test]
+    fn resolution_is_first_writer_wins() {
+        let metrics = Arc::new(Metrics::new());
+        let (req, slot) = mk_request(&metrics);
+        assert!(req.complete(Ok(vec![0.5])));
+        assert!(!req.complete(Err(ServeError::Rejected)));
+        drop(req);
+        assert_eq!(metrics.failed.load(Ordering::Relaxed), 0);
+        match slot.result.lock().unwrap().as_ref() {
+            Some(Ok(v)) => assert_eq!(v, &vec![0.5]),
+            other => panic!("expected fulfilled slot, got {other:?}"),
+        }
     }
 }

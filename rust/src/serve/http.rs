@@ -1,0 +1,841 @@
+//! HTTP/1.1 front-end for the serving engine — the network boundary
+//! that lets the load generator (and real clients) live outside the
+//! process.
+//!
+//! Std-only by design, like the rest of the crate: a `TcpListener`
+//! accept loop, one thread per connection with keep-alive, a small
+//! hand-rolled HTTP/1.1 parser (no hyper offline), and request/response
+//! bodies through [`crate::util::json`]. The REST surface maps onto a
+//! [`ModelRouter`]:
+//!
+//! ```text
+//! POST /v1/models/<name>:predict   {"instances": [[f32; sample_len], ...]}
+//!   200 {"model": "...", "predictions": [[f32; output_len], ...]}
+//!   400 bad JSON / wrong sample length     (ServeError::BadRequest)
+//!   404 unknown model, action or path
+//!   413 body over HttpConfig::max_body
+//!   429 admission queue full — back off    (ServeError::Overloaded)
+//!   500 worker-side failure                (ServeError::Worker)
+//!   503 engine shutting down               (ServeError::ShuttingDown)
+//! GET  /v1/models       model inventory (sample_len/output_len each)
+//! GET  /metrics         per-model serve::Metrics as JSON
+//! GET  /healthz         200 "ok"
+//! POST /admin/shutdown  200, then graceful drain — the SIGTERM
+//!                       equivalent (std has no signal handling)
+//! ```
+//!
+//! The module also carries the client half ([`HttpClient`],
+//! [`http_load_test`]): a blocking keep-alive HTTP client that the
+//! `serve --target` load generator, the throughput bench and the CI
+//! smoke test reuse, so the whole stack is exercised over real sockets.
+
+use super::engine::ServeError;
+use super::router::{ModelRouter, RouteError};
+use super::LoadReport;
+use crate::util::json::Json;
+use crate::util::prng::Pcg32;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Largest accepted request body, bytes (413 beyond it).
+    pub max_body: usize,
+    /// Per-connection read timeout; idle keep-alive connections are
+    /// dropped after it.
+    pub read_timeout: Duration,
+    /// Concurrent-connection cap; excess connections get an immediate
+    /// 503 and are closed (admission control at the socket layer,
+    /// mirroring the engine's bounded queue one layer down).
+    pub max_connections: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            max_body: 32 << 20,
+            read_timeout: Duration::from_secs(30),
+            max_connections: 256,
+        }
+    }
+}
+
+/// State shared between the accept loop and every connection thread.
+struct ServerState {
+    router: Arc<ModelRouter>,
+    cfg: HttpConfig,
+    /// Set once teardown starts: accept and keep-alive loops exit.
+    stop: AtomicBool,
+    /// Open connections (capacity admission at the socket layer).
+    active: AtomicUsize,
+    /// Requests currently being routed/executed — what the graceful
+    /// drain actually waits for. Idle keep-alive connections (threads
+    /// parked in `read`) don't count, so they can't stall shutdown.
+    busy: AtomicUsize,
+    shutdown_requested: Mutex<bool>,
+    shutdown_cv: Condvar,
+}
+
+impl ServerState {
+    fn request_shutdown(&self) {
+        let mut g = self.shutdown_requested.lock().unwrap();
+        *g = true;
+        self.shutdown_cv.notify_all();
+    }
+}
+
+/// The serving engine's TCP front door. Bind, then either block on
+/// [`wait_shutdown`](HttpServer::wait_shutdown) (server processes) or
+/// keep driving the router in-process (tests, benches); `shutdown`
+/// drains connections before stopping the engines.
+pub struct HttpServer {
+    state: Arc<ServerState>,
+    addr: SocketAddr,
+    accept: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` — port 0 picks a free one;
+    /// read it back from [`local_addr`](HttpServer::local_addr)) and
+    /// start serving `router`.
+    pub fn bind(
+        addr: &str,
+        router: Arc<ModelRouter>,
+        cfg: HttpConfig,
+    ) -> anyhow::Result<HttpServer> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| anyhow::anyhow!("http: bind {addr}: {e}"))?;
+        let local = listener.local_addr()?;
+        let state = Arc::new(ServerState {
+            router,
+            cfg,
+            stop: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            busy: AtomicUsize::new(0),
+            shutdown_requested: Mutex::new(false),
+            shutdown_cv: Condvar::new(),
+        });
+        let st = state.clone();
+        let accept = std::thread::Builder::new()
+            .name("serve-http-accept".to_string())
+            .spawn(move || accept_loop(listener, st))
+            .map_err(|e| anyhow::anyhow!("http: spawn accept loop: {e}"))?;
+        Ok(HttpServer { state, addr: local, accept: Mutex::new(Some(accept)) })
+    }
+
+    /// The actually-bound address (resolves a `:0` port request).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// True once a client POSTed `/admin/shutdown` (or `shutdown` ran).
+    pub fn shutdown_requested(&self) -> bool {
+        *self.state.shutdown_requested.lock().unwrap()
+    }
+
+    /// Block until shutdown is requested — the server process's main
+    /// loop (`serve --http` parks here).
+    pub fn wait_shutdown(&self) {
+        let mut g = self.state.shutdown_requested.lock().unwrap();
+        while !*g {
+            g = self.state.shutdown_cv.wait(g).unwrap();
+        }
+    }
+
+    /// Graceful drain: stop accepting, let in-flight connections finish
+    /// their current request (bounded wait), then shut the router's
+    /// engines down. Idempotent; also runs on `Drop`.
+    pub fn shutdown(&self) {
+        let accept = self.accept.lock().unwrap().take();
+        let Some(accept) = accept else { return };
+        self.state.request_shutdown();
+        self.state.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection; the
+        // loop re-checks `stop` per accepted stream. A wildcard bind
+        // (0.0.0.0 / ::) isn't connectable as-is, so aim at loopback.
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            let lo = match wake.ip() {
+                std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+            };
+            wake.set_ip(lo);
+        }
+        let woke = TcpStream::connect_timeout(&wake, Duration::from_millis(500)).is_ok();
+        if woke {
+            let _ = accept.join();
+        }
+        // If the wake connect failed (backlog full under the very
+        // overload that prompted the shutdown), don't block forever on
+        // the join — the accept thread exits on the next incoming
+        // connection; teardown proceeds without it.
+
+        // Wait (bounded) for requests that are mid-route — NOT for idle
+        // keep-alive connections, whose threads are parked in read()
+        // and exit on their own — then stop the engines so in-flight
+        // predicts have completed by the time the listener is gone.
+        let t0 = Instant::now();
+        while self.state.busy.load(Ordering::SeqCst) > 0
+            && t0.elapsed() < Duration::from_secs(10)
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        self.state.router.shutdown();
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Decrements the active-connection count however a handler exits.
+struct ConnGuard(Arc<ServerState>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
+    for stream in listener.incoming() {
+        if state.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        if state.active.load(Ordering::SeqCst) >= state.cfg.max_connections {
+            refuse_at_capacity(stream);
+            continue;
+        }
+        state.active.fetch_add(1, Ordering::SeqCst);
+        let st = state.clone();
+        let spawned = std::thread::Builder::new()
+            .name("serve-http-conn".to_string())
+            .spawn(move || {
+                let guard = ConnGuard(st);
+                handle_connection(stream, &guard.0);
+            });
+        if spawned.is_err() {
+            state.active.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Best-effort bounded drain of unread request bytes before dropping a
+/// socket: closing with data still queued in the kernel receive buffer
+/// sends a TCP RST, which discards the error response we just wrote.
+/// Hard-capped in bytes and wall time so a trickling client can't pin
+/// the caller.
+fn drain_briefly(stream: &mut TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut sink = [0u8; 4096];
+    let t0 = Instant::now();
+    let mut total = 0usize;
+    while total < 256 * 1024 && t0.elapsed() < Duration::from_millis(300) {
+        match stream.read(&mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => total += n,
+        }
+    }
+}
+
+/// Write an error response, half-close, and drain briefly so the
+/// response survives the close (see `drain_briefly`).
+fn reply_and_close(stream: &mut TcpStream, status: u16, reason: &'static str, body: &[u8]) {
+    let _ = write_response(stream, status, reason, "text/plain", body, false);
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    drain_briefly(stream);
+}
+
+/// Turn away a connection over the cap with a real 503 — on a
+/// throwaway thread, so a slow client can never stall the accept loop
+/// during the very overload this path exists for.
+fn refuse_at_capacity(stream: TcpStream) {
+    let spawned = std::thread::Builder::new()
+        .name("serve-http-refuse".to_string())
+        .spawn(move || {
+            let mut stream = stream;
+            reply_and_close(
+                &mut stream,
+                503,
+                "Service Unavailable",
+                b"server at connection capacity\n",
+            );
+        });
+    // Out of threads: just drop the stream (RST beats blocking accepts).
+    let _ = spawned;
+}
+
+fn handle_connection(stream: TcpStream, state: &Arc<ServerState>) {
+    let _ = stream.set_read_timeout(Some(state.cfg.read_timeout));
+    let _ = stream.set_nodelay(true);
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        if state.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let req = match read_request(&mut reader, state.cfg.max_body) {
+            Ok(Some(r)) => r,
+            // Clean EOF between requests: client hung up.
+            Ok(None) => return,
+            Err(HttpReadError::TooLarge) => {
+                // The body was never read, so the connection can't be
+                // reused — reply, half-close, drain, close (the drain
+                // keeps the 413 from being destroyed by a RST).
+                reply_and_close(&mut writer, 413, "Payload Too Large", b"request body too large\n");
+                return;
+            }
+            Err(HttpReadError::Io(e))
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Idle keep-alive connection timed out: drop silently.
+                return;
+            }
+            Err(HttpReadError::Io(_)) => return,
+            Err(HttpReadError::Malformed(m)) => {
+                reply_and_close(
+                    &mut writer,
+                    400,
+                    "Bad Request",
+                    format!("malformed HTTP request: {m}\n").as_bytes(),
+                );
+                return;
+            }
+        };
+        let keep_alive = req.keep_alive && !state.stop.load(Ordering::SeqCst);
+        // Mark the request in-flight while it routes and replies, so
+        // the graceful drain waits for it (and only it).
+        state.busy.fetch_add(1, Ordering::SeqCst);
+        let (status, reason, ctype, body) = route(state, &req);
+        let wrote = write_response(&mut writer, status, reason, ctype, &body, keep_alive);
+        state.busy.fetch_sub(1, Ordering::SeqCst);
+        if wrote.is_err() || !keep_alive {
+            return;
+        }
+    }
+}
+
+// ----------------------------------------------------------- parsing
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+    keep_alive: bool,
+}
+
+#[derive(Debug)]
+enum HttpReadError {
+    TooLarge,
+    Io(std::io::Error),
+    Malformed(String),
+}
+
+/// Read one CRLF- (or LF-) terminated line; `Ok(None)` on EOF before
+/// any byte. `budget`, if set, bounds the wall time from the line's
+/// *first byte* to its newline — the socket read timeout alone can't
+/// stop a slow-loris client that trickles one byte per timeout window,
+/// while waiting for the first byte (idle keep-alive) stays governed by
+/// the socket timeout only.
+fn read_line(
+    r: &mut impl BufRead,
+    limit: usize,
+    budget: Option<Duration>,
+) -> Result<Option<String>, HttpReadError> {
+    let mut buf = Vec::new();
+    let mut byte = [0u8; 1];
+    let mut started: Option<Instant> = None;
+    loop {
+        match r.read(&mut byte) {
+            Ok(0) => {
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                return Err(HttpReadError::Malformed("truncated line".to_string()));
+            }
+            Ok(_) => {
+                let t0 = *started.get_or_insert_with(Instant::now);
+                if let Some(b) = budget {
+                    if t0.elapsed() > b {
+                        return Err(HttpReadError::Malformed(
+                            "header line read timed out".to_string(),
+                        ));
+                    }
+                }
+                if byte[0] == b'\n' {
+                    break;
+                }
+                buf.push(byte[0]);
+                if buf.len() > limit {
+                    return Err(HttpReadError::Malformed("header line too long".to_string()));
+                }
+            }
+            Err(e) => return Err(HttpReadError::Io(e)),
+        }
+    }
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf)
+        .map(Some)
+        .map_err(|_| HttpReadError::Malformed("non-utf8 header bytes".to_string()))
+}
+
+/// Parse one request (request line, headers, `Content-Length` body).
+/// `Ok(None)` = clean EOF before a request started (keep-alive close).
+/// Per-line trickle budget and header-count cap: together with the
+/// 8 KB line limit they bound a request's header phase in bytes *and*
+/// wall time, so a slow-loris client can't hold a connection slot
+/// indefinitely.
+const LINE_BUDGET: Duration = Duration::from_secs(10);
+const MAX_HEADER_LINES: usize = 100;
+
+fn read_request(
+    r: &mut BufReader<TcpStream>,
+    max_body: usize,
+) -> Result<Option<HttpRequest>, HttpReadError> {
+    let line = match read_line(r, 8192, Some(LINE_BUDGET))? {
+        Some(l) => l,
+        None => return Ok(None),
+    };
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(HttpReadError::Malformed(format!("bad request line '{line}'")));
+    }
+    let mut content_length = 0usize;
+    // HTTP/1.1 defaults to keep-alive, HTTP/1.0 to close.
+    let mut keep_alive = version == "HTTP/1.1";
+    let mut header_lines = 0usize;
+    loop {
+        header_lines += 1;
+        if header_lines > MAX_HEADER_LINES {
+            return Err(HttpReadError::Malformed("too many header lines".to_string()));
+        }
+        let line = read_line(r, 8192, Some(LINE_BUDGET))?
+            .ok_or_else(|| HttpReadError::Malformed("eof inside headers".to_string()))?;
+        if line.is_empty() {
+            break;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpReadError::Malformed(format!("bad header '{line}'")));
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match name.as_str() {
+            "content-length" => {
+                content_length = value
+                    .parse()
+                    .map_err(|_| HttpReadError::Malformed("bad content-length".to_string()))?;
+            }
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.contains("close") {
+                    keep_alive = false;
+                } else if v.contains("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            "transfer-encoding" => {
+                // Chunked bodies are out of scope for this minimal
+                // parser; every client we ship sends Content-Length.
+                return Err(HttpReadError::Malformed(
+                    "transfer-encoding not supported (send content-length)".to_string(),
+                ));
+            }
+            _ => {}
+        }
+    }
+    if content_length > max_body {
+        return Err(HttpReadError::TooLarge);
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body).map_err(HttpReadError::Io)?;
+    Ok(Some(HttpRequest { method, path, body, keep_alive }))
+}
+
+fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+// ----------------------------------------------------------- routing
+
+type Reply = (u16, &'static str, &'static str, Vec<u8>);
+
+fn ok_text(s: &str) -> Reply {
+    (200, "OK", "text/plain", s.as_bytes().to_vec())
+}
+
+fn ok_json(j: &Json) -> Reply {
+    (200, "OK", "application/json", j.to_pretty().into_bytes())
+}
+
+fn error_reply(status: u16, reason: &'static str, msg: &str) -> Reply {
+    let mut o = Json::obj();
+    o.set("error", Json::str(msg));
+    (status, reason, "application/json", o.to_pretty().into_bytes())
+}
+
+/// The HTTP status contract for serving errors (documented in the
+/// README's "Serving over HTTP" section; the integration tests pin it).
+pub fn status_for(e: &RouteError) -> (u16, &'static str) {
+    match e {
+        RouteError::UnknownModel(_) => (404, "Not Found"),
+        RouteError::Serve(ServeError::BadRequest(_)) => (400, "Bad Request"),
+        RouteError::Serve(ServeError::Overloaded(_)) | RouteError::Serve(ServeError::Rejected) => {
+            (429, "Too Many Requests")
+        }
+        RouteError::Serve(ServeError::ShuttingDown) => (503, "Service Unavailable"),
+        RouteError::Serve(ServeError::Worker(_)) => (500, "Internal Server Error"),
+    }
+}
+
+fn route_error_reply(e: &RouteError) -> Reply {
+    let (status, reason) = status_for(e);
+    error_reply(status, reason, &e.to_string())
+}
+
+fn route(state: &Arc<ServerState>, req: &HttpRequest) -> Reply {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => ok_text("ok\n"),
+        ("GET", "/metrics") => ok_json(&state.router.metrics_json()),
+        ("GET", "/v1/models") => ok_json(&state.router.models_json()),
+        ("POST", "/admin/shutdown") => {
+            state.request_shutdown();
+            ok_text("shutting down\n")
+        }
+        (method, path) => {
+            if let Some(rest) = path.strip_prefix("/v1/models/") {
+                if let Some((model, action)) = rest.split_once(':') {
+                    if action != "predict" {
+                        return error_reply(
+                            404,
+                            "Not Found",
+                            &format!("unknown action '{action}' (have: predict)"),
+                        );
+                    }
+                    if method != "POST" {
+                        return error_reply(405, "Method Not Allowed", "predict requires POST");
+                    }
+                    return predict(state, model, &req.body);
+                }
+            }
+            error_reply(404, "Not Found", &format!("no route for {method} {path}"))
+        }
+    }
+}
+
+/// `{"instances": [[...], ...]}` → one sample vector per instance.
+fn parse_instances(json: &Json) -> Result<Vec<Vec<f32>>, String> {
+    let arr = json
+        .get("instances")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| "expected {\"instances\": [[...], ...]}".to_string())?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, inst) in arr.iter().enumerate() {
+        let row = inst
+            .as_arr()
+            .ok_or_else(|| format!("instance {i} is not an array of numbers"))?;
+        let mut sample = Vec::with_capacity(row.len());
+        for v in row {
+            match v.as_f64() {
+                Some(n) => sample.push(n as f32),
+                None => return Err(format!("instance {i} contains a non-number")),
+            }
+        }
+        out.push(sample);
+    }
+    Ok(out)
+}
+
+fn predict(state: &Arc<ServerState>, model: &str, body: &[u8]) -> Reply {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return error_reply(400, "Bad Request", "body is not UTF-8"),
+    };
+    let json = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => return error_reply(400, "Bad Request", &format!("bad JSON: {e}")),
+    };
+    let instances = match parse_instances(&json) {
+        Ok(v) => v,
+        Err(e) => return error_reply(400, "Bad Request", &e),
+    };
+    if instances.is_empty() {
+        return error_reply(400, "Bad Request", "no instances in request");
+    }
+    // Submit every instance (the engine's micro-batcher coalesces
+    // them), then wait for all. The first error decides the status;
+    // any already-submitted instances still execute — wasted work on a
+    // mixed outcome, but no handle is ever left blocking.
+    let mut handles = Vec::with_capacity(instances.len());
+    for sample in instances {
+        match state.router.submit(model, sample) {
+            Ok(h) => handles.push(h),
+            Err(e) => return route_error_reply(&e),
+        }
+    }
+    let mut predictions = Vec::with_capacity(handles.len());
+    for h in handles {
+        match h.wait() {
+            Ok(resp) => predictions.push(Json::nums(&resp.values)),
+            Err(e) => return route_error_reply(&RouteError::Serve(e)),
+        }
+    }
+    let mut o = Json::obj();
+    o.set("model", Json::str(model));
+    o.set("predictions", Json::Arr(predictions));
+    ok_json(&o)
+}
+
+// ------------------------------------------------------------ client
+
+/// Minimal blocking HTTP/1.1 client over one keep-alive connection —
+/// just enough for the load generator, the throughput bench and the
+/// integration tests (no reqwest offline).
+pub struct HttpClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl HttpClient {
+    pub fn connect(addr: &str) -> anyhow::Result<HttpClient> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        let writer = stream.try_clone()?;
+        Ok(HttpClient { reader: BufReader::new(stream), writer })
+    }
+
+    /// One request/response round-trip on the persistent connection;
+    /// returns (status, body).
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+    ) -> anyhow::Result<(u16, Vec<u8>)> {
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: fecaffe\r\ncontent-length: {}\r\n\r\n",
+            body.len()
+        );
+        self.writer.write_all(head.as_bytes())?;
+        self.writer.write_all(body)?;
+        self.writer.flush()?;
+        let line = read_line(&mut self.reader, 8192, None)
+            .map_err(|e| anyhow::anyhow!("read status line: {e:?}"))?
+            .ok_or_else(|| anyhow::anyhow!("server closed the connection"))?;
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("bad status line '{line}'"))?;
+        let mut content_length = 0usize;
+        loop {
+            let line = read_line(&mut self.reader, 8192, None)
+                .map_err(|e| anyhow::anyhow!("read header: {e:?}"))?
+                .ok_or_else(|| anyhow::anyhow!("eof inside response headers"))?;
+            if line.is_empty() {
+                break;
+            }
+            if let Some((name, value)) = line.split_once(':') {
+                if name.trim().eq_ignore_ascii_case("content-length") {
+                    content_length = value.trim().parse().unwrap_or(0);
+                }
+            }
+        }
+        let mut body = vec![0u8; content_length];
+        self.reader.read_exact(&mut body)?;
+        Ok((status, body))
+    }
+}
+
+/// One-shot convenience request on a fresh connection.
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> anyhow::Result<(u16, Vec<u8>)> {
+    HttpClient::connect(addr)?.request(method, path, body)
+}
+
+/// Serialize one predict body for `samples`.
+pub fn predict_body(samples: &[Vec<f32>]) -> String {
+    let mut o = Json::obj();
+    o.set(
+        "instances",
+        Json::Arr(samples.iter().map(|s| Json::nums(s)).collect()),
+    );
+    o.to_string()
+}
+
+/// Closed-loop HTTP load test against a running server: `clients`
+/// persistent connections each posting single-instance predict
+/// requests and waiting for the response, retrying with a short
+/// backoff on 429. The TCP twin of [`super::load_test`].
+pub fn http_load_test(
+    addr: &str,
+    model: &str,
+    sample_len: usize,
+    clients: usize,
+    total: usize,
+    seed: u64,
+) -> anyhow::Result<LoadReport> {
+    let clients = clients.max(1);
+    let path = format!("/v1/models/{model}:predict");
+    let issued = AtomicUsize::new(0);
+    let retries = AtomicU64::new(0);
+    let failed = AtomicU64::new(0);
+    let t0 = Instant::now();
+    let latencies_ns: Vec<f64> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(clients);
+        for cid in 0..clients {
+            let issued = &issued;
+            let retries = &retries;
+            let failed = &failed;
+            let path = &path;
+            handles.push(scope.spawn(move || {
+                let mut rng = Pcg32::with_stream(seed, cid as u64 + 1);
+                let mut lats = Vec::new();
+                let mut client = match HttpClient::connect(addr) {
+                    Ok(c) => c,
+                    Err(_) => return lats,
+                };
+                'requests: loop {
+                    if issued.fetch_add(1, Ordering::Relaxed) >= total {
+                        break;
+                    }
+                    let mut sample = vec![0f32; sample_len];
+                    rng.fill_uniform(&mut sample, 0.0, 1.0);
+                    let body = predict_body(&[sample]);
+                    loop {
+                        let t = Instant::now();
+                        match client.request("POST", path, body.as_bytes()) {
+                            Ok((200, _)) => {
+                                lats.push(t.elapsed().as_nanos() as f64);
+                                break;
+                            }
+                            Ok((429, _)) => {
+                                retries.fetch_add(1, Ordering::Relaxed);
+                                std::thread::sleep(Duration::from_micros(200));
+                            }
+                            Ok((_, _)) => {
+                                // 4xx/5xx other than backpressure:
+                                // count and move to the next request.
+                                failed.fetch_add(1, Ordering::Relaxed);
+                                break;
+                            }
+                            Err(_) => {
+                                // Connection died: one failure, then
+                                // reconnect or give up on this client.
+                                failed.fetch_add(1, Ordering::Relaxed);
+                                match HttpClient::connect(addr) {
+                                    Ok(c) => {
+                                        client = c;
+                                        break;
+                                    }
+                                    Err(_) => break 'requests,
+                                }
+                            }
+                        }
+                    }
+                }
+                lats
+            }));
+        }
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("http_load_test client panicked"))
+            .collect()
+    });
+    let wall = t0.elapsed();
+    let requests = latencies_ns.len() as u64;
+    Ok(LoadReport {
+        requests,
+        failed: failed.load(Ordering::Relaxed),
+        backpressure_retries: retries.load(Ordering::Relaxed),
+        wall,
+        rps: requests as f64 / wall.as_secs_f64().max(1e-9),
+        latencies_ns,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_contract_matches_the_readme_table() {
+        assert_eq!(status_for(&RouteError::UnknownModel("x".into())).0, 404);
+        assert_eq!(
+            status_for(&RouteError::Serve(ServeError::BadRequest("len".into()))).0,
+            400
+        );
+        assert_eq!(
+            status_for(&RouteError::Serve(ServeError::Overloaded(vec![]))).0,
+            429
+        );
+        assert_eq!(status_for(&RouteError::Serve(ServeError::Rejected)).0, 429);
+        assert_eq!(
+            status_for(&RouteError::Serve(ServeError::ShuttingDown)).0,
+            503
+        );
+        assert_eq!(
+            status_for(&RouteError::Serve(ServeError::Worker("boom".into()))).0,
+            500
+        );
+    }
+
+    #[test]
+    fn parse_instances_accepts_rows_and_rejects_garbage() {
+        let j = Json::parse(r#"{"instances": [[1, 2.5], [3, 4]]}"#).unwrap();
+        let v = parse_instances(&j).unwrap();
+        assert_eq!(v, vec![vec![1.0, 2.5], vec![3.0, 4.0]]);
+        assert!(parse_instances(&Json::parse(r#"{"inputs": []}"#).unwrap()).is_err());
+        assert!(parse_instances(&Json::parse(r#"{"instances": [1, 2]}"#).unwrap()).is_err());
+        assert!(
+            parse_instances(&Json::parse(r#"{"instances": [["a"]]}"#).unwrap()).is_err()
+        );
+    }
+
+    #[test]
+    fn predict_body_round_trips_through_parse_instances() {
+        let body = predict_body(&[vec![0.25, 0.5], vec![1.0, -2.0]]);
+        let j = Json::parse(&body).unwrap();
+        let v = parse_instances(&j).unwrap();
+        assert_eq!(v, vec![vec![0.25, 0.5], vec![1.0, -2.0]]);
+    }
+}

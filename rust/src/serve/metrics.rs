@@ -197,6 +197,35 @@ pub struct MetricsReport {
 }
 
 impl MetricsReport {
+    /// JSON object mirror of the report — the HTTP `/metrics` endpoint
+    /// and bench logs share this shape. Sim-time fields appear only
+    /// when FPGA-sim batches were metered, matching `render`.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut o = Json::obj();
+        o.set("submitted", Json::num(self.submitted as f64));
+        o.set("rejected", Json::num(self.rejected as f64));
+        o.set("completed", Json::num(self.completed as f64));
+        o.set("failed", Json::num(self.failed as f64));
+        o.set("batches", Json::num(self.batches as f64));
+        o.set("batched_samples", Json::num(self.batched_samples as f64));
+        o.set("full_batches", Json::num(self.full_batches as f64));
+        o.set("mean_batch", Json::num(self.mean_batch));
+        o.set("p50_ms", Json::num(self.p50_ns / 1e6));
+        o.set("p95_ms", Json::num(self.p95_ns / 1e6));
+        o.set("p99_ms", Json::num(self.p99_ns / 1e6));
+        o.set("mean_ms", Json::num(self.mean_ns / 1e6));
+        o.set("max_ms", Json::num(self.max_ns as f64 / 1e6));
+        if self.sim_batches > 0 {
+            o.set("sim_batches", Json::num(self.sim_batches as f64));
+            o.set("sim_total_ms", Json::num(self.sim_total_ns as f64 / 1e6));
+            o.set("sim_mean_ms", Json::num(self.sim_mean_ns / 1e6));
+            o.set("sim_p50_ms", Json::num(self.sim_p50_ns / 1e6));
+            o.set("sim_p99_ms", Json::num(self.sim_p99_ns / 1e6));
+        }
+        o
+    }
+
     pub fn render(&self) -> String {
         let mut s = format!(
             "requests: {} submitted, {} completed, {} failed, {} rejected\n\
@@ -287,6 +316,26 @@ mod tests {
         // No FPGA-sim batches recorded: report stays silent about them.
         assert_eq!(r.sim_batches, 0);
         assert!(!r.render().contains("sim time"));
+    }
+
+    #[test]
+    fn report_to_json_round_trips() {
+        use crate::util::json::Json;
+        let m = Metrics::new();
+        m.record_batch(4, 4);
+        for _ in 0..4 {
+            m.record_done(2_000_000);
+        }
+        let r = m.snapshot();
+        let j = r.to_json();
+        let back = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(back.get("completed").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(back.get("batches").unwrap().as_usize().unwrap(), 1);
+        assert!(back.get("p50_ms").unwrap().as_f64().unwrap() > 0.0);
+        // No sim batches recorded → the sim block is absent.
+        assert!(back.get("sim_batches").is_none());
+        m.record_sim_batch(1_000);
+        assert!(m.snapshot().to_json().get("sim_batches").is_some());
     }
 
     #[test]

@@ -30,13 +30,20 @@
 //! * **Metrics** — wait-free counters and a log2 latency histogram
 //!   (p50/p95/p99); exact quantiles for load tests come from
 //!   [`crate::util::stats`].
+//! * **Multi-model routing** — a [`router::ModelRouter`] owns one
+//!   engine per model with the worker/intra-op budget split across
+//!   them, and [`http::HttpServer`] puts the whole stack behind a
+//!   std-only HTTP/1.1 front-end (`POST /v1/models/<name>:predict`,
+//!   `GET /metrics`, `GET /healthz`) so load lives outside the process.
 //!
 //! See the `serve` binary (`cargo run --release --bin serve`) for the
 //! CLI and `benches/serve_throughput.rs` for the standing benchmark.
 
 pub mod batcher;
 pub mod engine;
+pub mod http;
 pub mod metrics;
+pub mod router;
 mod queue;
 mod worker;
 
@@ -44,7 +51,9 @@ pub use batcher::BatcherConfig;
 pub use engine::{
     DeviceKind, Engine, EngineConfig, Response, ResponseHandle, ServeError,
 };
+pub use http::{http_load_test, http_request, HttpClient, HttpConfig, HttpServer};
 pub use metrics::{Histogram, Metrics, MetricsReport};
+pub use router::{ModelRouter, RouteError, RouterConfig};
 
 use crate::util::prng::Pcg32;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};

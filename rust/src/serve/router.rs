@@ -1,0 +1,228 @@
+//! Multi-model routing: one admission layer over N engines.
+//!
+//! A [`ModelRouter`] owns an [`Engine`] per model (zoo nets pass
+//! through [`crate::zoo::deploy`] inside `Engine::new`), splitting one
+//! shared worker/intra-op thread budget across them so M engines × N
+//! workers never oversubscribe the machine — the same per-model
+//! dispatch unit Caffeinated FPGAs uses for layer routing. Admission
+//! stays per model: each engine keeps its own bounded queue, so one
+//! overloaded model returns `Overloaded` without starving the others.
+
+use super::engine::{DeviceKind, Engine, EngineConfig, ResponseHandle, ServeError};
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// Budget shared by every model the router serves; each engine gets an
+/// even slice (see [`ModelRouter::from_zoo`]).
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Total worker threads across all models (at least one per model).
+    pub total_workers: usize,
+    /// Micro-batch upper bound, per model.
+    pub max_batch: usize,
+    /// Micro-batch linger deadline, per model.
+    pub max_linger: Duration,
+    /// Admission queue capacity, per model.
+    pub queue_capacity: usize,
+    pub device: DeviceKind,
+    /// Intra-op threads per worker; 0 = split the process thread budget
+    /// over every worker of every engine (an engine's own auto-split
+    /// only knows its workers, not its siblings').
+    pub intra_op_threads: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            total_workers: 4,
+            max_batch: 8,
+            max_linger: Duration::from_millis(2),
+            queue_capacity: 256,
+            device: DeviceKind::Cpu,
+            intra_op_threads: 0,
+        }
+    }
+}
+
+/// Why the router refused a submission.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RouteError {
+    /// No engine registered under that name.
+    UnknownModel(String),
+    /// The model's engine refused (overload, shutdown, bad sample).
+    Serve(ServeError),
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
+            RouteError::Serve(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+/// N serving engines behind one name-keyed admission surface.
+pub struct ModelRouter {
+    engines: Vec<(String, Engine)>,
+}
+
+impl ModelRouter {
+    /// Build one engine per zoo model name, splitting `cfg`'s worker
+    /// and intra-op budgets evenly across them.
+    pub fn from_zoo(models: &[&str], cfg: &RouterConfig) -> anyhow::Result<ModelRouter> {
+        anyhow::ensure!(!models.is_empty(), "router needs at least one model");
+        let mut seen = std::collections::BTreeSet::new();
+        for m in models {
+            anyhow::ensure!(seen.insert(*m), "duplicate model '{m}'");
+        }
+        let (workers_per_model, intra_op) = split_budget(
+            cfg.total_workers,
+            models.len(),
+            cfg.intra_op_threads,
+        );
+        let mut engines = Vec::with_capacity(models.len());
+        for (name, &workers) in models.iter().zip(&workers_per_model) {
+            let param = crate::zoo::by_name(name, 1)?;
+            let ecfg = EngineConfig {
+                workers,
+                max_batch: cfg.max_batch,
+                max_linger: cfg.max_linger,
+                queue_capacity: cfg.queue_capacity,
+                device: cfg.device,
+                intra_op_threads: intra_op,
+            };
+            let engine = Engine::new(&param, ecfg)
+                .map_err(|e| e.context(format!("building engine for model '{name}'")))?;
+            engines.push((name.to_string(), engine));
+        }
+        Ok(ModelRouter { engines })
+    }
+
+    /// Wrap pre-built engines (custom prototxt models, tests). The
+    /// caller owns the budget split in this case.
+    pub fn from_engines(engines: Vec<(String, Engine)>) -> anyhow::Result<ModelRouter> {
+        anyhow::ensure!(!engines.is_empty(), "router needs at least one engine");
+        let mut seen = std::collections::BTreeSet::new();
+        for (name, _) in &engines {
+            anyhow::ensure!(seen.insert(name.clone()), "duplicate model '{name}'");
+        }
+        Ok(ModelRouter { engines })
+    }
+
+    pub fn engine(&self, model: &str) -> Option<&Engine> {
+        self.engines.iter().find(|(n, _)| n == model).map(|(_, e)| e)
+    }
+
+    /// Registered model names, in registration order.
+    pub fn models(&self) -> Vec<&str> {
+        self.engines.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// Route one sample to `model`'s engine (admission-controlled,
+    /// non-blocking — `Serve(Overloaded)` means back off and retry).
+    pub fn submit(&self, model: &str, sample: Vec<f32>) -> Result<ResponseHandle, RouteError> {
+        let engine = self
+            .engine(model)
+            .ok_or_else(|| RouteError::UnknownModel(model.to_string()))?;
+        engine.submit(sample).map_err(RouteError::Serve)
+    }
+
+    /// Per-model metrics snapshots as one JSON object (`GET /metrics`).
+    pub fn metrics_json(&self) -> Json {
+        let mut o = Json::obj();
+        for (name, engine) in &self.engines {
+            o.set(name, engine.metrics().snapshot().to_json());
+        }
+        o
+    }
+
+    /// Model inventory with input/output schema (`GET /v1/models`).
+    pub fn models_json(&self) -> Json {
+        let mut arr = Vec::new();
+        for (name, engine) in &self.engines {
+            let mut m = Json::obj();
+            m.set("name", Json::str(name.clone()));
+            m.set("sample_len", Json::num(engine.sample_len() as f64));
+            m.set("output_len", Json::num(engine.output_len() as f64));
+            m.set("max_batch", Json::num(engine.config().max_batch as f64));
+            m.set("workers", Json::num(engine.config().workers as f64));
+            arr.push(m);
+        }
+        let mut o = Json::obj();
+        o.set("models", Json::Arr(arr));
+        o
+    }
+
+    /// Gracefully shut every engine down (stop admissions, drain, join
+    /// workers). Idempotent — `Engine::shutdown` is.
+    pub fn shutdown(&self) {
+        for (_, engine) in &self.engines {
+            engine.shutdown();
+        }
+    }
+}
+
+/// Split of the shared budget: `total_workers` across `models` engines
+/// (≥1 each, the first `total % models` engines absorbing the
+/// remainder so no requested worker is silently dropped), and the
+/// process intra-op thread budget across *all* resulting workers
+/// unless the caller pinned it.
+fn split_budget(
+    total_workers: usize,
+    models: usize,
+    intra_op: usize,
+) -> (Vec<usize>, usize) {
+    let models = models.max(1);
+    let base = total_workers / models;
+    let extra = total_workers % models;
+    let per: Vec<usize> = (0..models)
+        .map(|i| (base + usize::from(i < extra)).max(1))
+        .collect();
+    let all_workers: usize = per.iter().sum();
+    let intra = if intra_op > 0 {
+        intra_op
+    } else {
+        (crate::util::pool::default_threads() / all_workers.max(1)).max(1)
+    };
+    (per, intra)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_splits_with_remainder_and_a_floor_of_one() {
+        assert_eq!(split_budget(8, 2, 1), (vec![4, 4], 1));
+        // The remainder is distributed, not dropped: 5 workers over 2
+        // models is 3+2, and 4 over 3 is 2+1+1.
+        assert_eq!(split_budget(5, 2, 1), (vec![3, 2], 1));
+        assert_eq!(split_budget(4, 3, 1), (vec![2, 1, 1], 1));
+        // More models than workers: every model still gets one worker.
+        assert_eq!(split_budget(1, 5, 2), (vec![1, 1, 1, 1, 1], 2));
+        // Auto intra-op divides the machine by total workers, never 0.
+        let (w, i) = split_budget(4, 2, 0);
+        assert_eq!(w, vec![2, 2]);
+        assert!(i >= 1);
+    }
+
+    #[test]
+    fn from_zoo_rejects_bad_model_lists() {
+        let cfg = RouterConfig::default();
+        assert!(ModelRouter::from_zoo(&[], &cfg).is_err());
+        // Duplicates and unknown names fail before any engine is built.
+        assert!(ModelRouter::from_zoo(&["lenet", "lenet"], &cfg).is_err());
+        assert!(ModelRouter::from_zoo(&["resnet"], &cfg).is_err());
+    }
+
+    #[test]
+    fn route_error_display_names_the_model() {
+        let e = RouteError::UnknownModel("squeezenet".into());
+        assert!(e.to_string().contains("squeezenet"));
+        let e = RouteError::Serve(ServeError::ShuttingDown);
+        assert!(e.to_string().contains("shutting down"));
+    }
+}

@@ -28,8 +28,47 @@ pub struct Solver {
     pub loss_history: Vec<f32>,
 }
 
+/// Learning rate for `p` at iteration `iter` — caffe
+/// `SGDSolver::GetLearningRate`, all seven stock policies. Fails on an
+/// unknown `lr_policy` instead of panicking: solver parameters built in
+/// code (rather than parsed, where the policy is already validated)
+/// reach here with arbitrary strings.
+pub fn learning_rate_at(p: &SolverParameter, iter: usize) -> anyhow::Result<f32> {
+    let t = iter as f32;
+    let rate = match p.lr_policy.as_str() {
+        "fixed" => p.base_lr,
+        "step" => {
+            let current_step = (iter / p.stepsize.max(1)) as i32;
+            p.base_lr * p.gamma.powi(current_step)
+        }
+        "exp" => p.base_lr * p.gamma.powf(t),
+        "inv" => p.base_lr * (1.0 + p.gamma * t).powf(-p.power),
+        "poly" => {
+            let max = p.max_iter.max(1) as f32;
+            p.base_lr * (1.0 - t / max).max(0.0).powf(p.power)
+        }
+        "sigmoid" => p.base_lr / (1.0 + (-p.gamma * (t - p.stepsize as f32)).exp()),
+        // Caffe advances `current_step_` once per stepvalue boundary
+        // passed; with ascending stepvalues (and the rate queried every
+        // iteration, as `apply_update` does) that equals the count of
+        // boundaries at or below the current iteration.
+        "multistep" => {
+            let current_step = p.stepvalue.iter().filter(|&&s| iter >= s).count() as i32;
+            p.base_lr * p.gamma.powi(current_step)
+        }
+        other => anyhow::bail!(
+            "unknown lr_policy '{other}' (have: {})",
+            crate::proto::LR_POLICIES.join(", ")
+        ),
+    };
+    Ok(rate)
+}
+
 impl Solver {
     pub fn new(param: SolverParameter, net: Net, dev: &mut dyn Device) -> anyhow::Result<Solver> {
+        // Reject unknown lr policies up front, so a bad configuration
+        // fails at construction instead of iterations into a run.
+        learning_rate_at(&param, 0)?;
         let slots = match param.kind {
             SolverKind::AdaDelta | SolverKind::Adam => 2,
             _ => 1,
@@ -54,27 +93,10 @@ impl Solver {
     }
 
     /// Current learning rate under the configured policy (caffe
-    /// `GetLearningRate`).
-    pub fn learning_rate(&self) -> f32 {
-        let p = &self.param;
-        let iter = self.iter as f32;
-        match p.lr_policy.as_str() {
-            "fixed" => p.base_lr,
-            "step" => {
-                let current_step = (self.iter / p.stepsize.max(1)) as i32;
-                p.base_lr * p.gamma.powi(current_step)
-            }
-            "exp" => p.base_lr * p.gamma.powf(iter),
-            "inv" => p.base_lr * (1.0 + p.gamma * iter).powf(-p.power),
-            "poly" => {
-                let max = self.param.max_iter.max(1) as f32;
-                p.base_lr * (1.0 - iter / max).max(0.0).powf(p.power)
-            }
-            "sigmoid" => {
-                p.base_lr / (1.0 + (-p.gamma * (iter - p.stepsize as f32)).exp())
-            }
-            other => panic!("unknown lr_policy '{other}'"),
-        }
+    /// `GetLearningRate`). Unknown policies surface as `Err` —
+    /// user-supplied solver prototxts reach here.
+    pub fn learning_rate(&self) -> anyhow::Result<f32> {
+        learning_rate_at(&self.param, self.iter)
     }
 
     /// One training iteration: forward/backward + update. Returns loss.
@@ -97,11 +119,8 @@ impl Solver {
         for _ in 0..iters {
             let loss = self.step(dev)?;
             if self.param.display > 0 && self.iter % self.param.display == 0 {
-                println!(
-                    "Iteration {}, lr = {:.6}, loss = {loss:.6}",
-                    self.iter,
-                    self.learning_rate()
-                );
+                let lr = self.learning_rate()?;
+                println!("Iteration {}, lr = {lr:.6}, loss = {loss:.6}", self.iter);
             }
             if self.param.snapshot > 0 && self.iter % self.param.snapshot == 0 {
                 let path = format!("{}_iter_{}.fecaffemodel", self.param.snapshot_prefix, self.iter);
@@ -113,7 +132,7 @@ impl Solver {
 
     /// Normalize → regularize → clip → compute-update, all on-device.
     pub fn apply_update(&mut self, dev: &mut dyn Device) -> anyhow::Result<()> {
-        let rate = self.learning_rate();
+        let rate = self.learning_rate()?;
         let p = self.param.clone();
 
         // Gradient clipping by global L2 norm (host-side norm of the
@@ -302,24 +321,52 @@ layer { name: "loss" type: "SoftmaxWithLoss" bottom: "fc" bottom: "label" top: "
         s.param.gamma = 0.5;
         s.param.stepsize = 10;
         s.iter = 0;
-        assert_eq!(s.learning_rate(), 0.1);
+        assert_eq!(s.learning_rate().unwrap(), 0.1);
         s.iter = 10;
-        assert_eq!(s.learning_rate(), 0.05);
+        assert_eq!(s.learning_rate().unwrap(), 0.05);
         s.iter = 25;
-        assert_eq!(s.learning_rate(), 0.025);
+        assert_eq!(s.learning_rate().unwrap(), 0.025);
 
         s.param.lr_policy = "inv".into();
         s.param.gamma = 1e-4;
         s.param.power = 0.75;
         s.iter = 0;
-        assert_eq!(s.learning_rate(), 0.1);
+        assert_eq!(s.learning_rate().unwrap(), 0.1);
         s.iter = 10000;
-        assert!(s.learning_rate() < 0.1);
+        assert!(s.learning_rate().unwrap() < 0.1);
 
         s.param.lr_policy = "poly".into();
         s.param.max_iter = 100;
         s.iter = 100;
-        assert_eq!(s.learning_rate(), 0.0);
+        assert_eq!(s.learning_rate().unwrap(), 0.0);
+
+        s.param.lr_policy = "multistep".into();
+        s.param.gamma = 0.5;
+        s.param.stepvalue = vec![10, 20];
+        s.iter = 9;
+        assert_eq!(s.learning_rate().unwrap(), 0.1);
+        s.iter = 10;
+        assert_eq!(s.learning_rate().unwrap(), 0.05);
+        s.iter = 25;
+        assert_eq!(s.learning_rate().unwrap(), 0.025);
+    }
+
+    #[test]
+    fn unknown_lr_policy_is_an_error_not_a_panic() {
+        let mut dev = CpuDevice::new();
+        let mut s = mk_solver("SGD", &mut dev);
+        s.param.lr_policy = "bogus".into();
+        let err = s.learning_rate().unwrap_err().to_string();
+        assert!(err.contains("unknown lr_policy 'bogus'"), "{err}");
+        // Mid-training the error propagates out of step() instead of
+        // aborting the process.
+        assert!(s.step(&mut dev).is_err());
+        // And Solver::new rejects the configuration up front.
+        let netp = parse_net(NET).unwrap();
+        let net = Net::from_param(&netp, Phase::Train, &mut dev).unwrap();
+        let mut sp = SolverParameter::default();
+        sp.lr_policy = "nope".into();
+        assert!(Solver::new(sp, net, &mut dev).is_err());
     }
 
     #[test]

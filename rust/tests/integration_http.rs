@@ -1,0 +1,285 @@
+//! Integration: the HTTP front-end's status-code contract and the
+//! multi-model router, over real sockets.
+//!
+//! * predict → 200 with one softmax row per instance, for two models
+//!   served concurrently from one process;
+//! * admission-queue overflow → 429 (pinned with a deliberately slow
+//!   model so the pipeline stays saturated while requests arrive);
+//! * wrong sample length / bad JSON → 400, unknown model → 404,
+//!   wrong method → 405;
+//! * engines shut down → 503; `POST /admin/shutdown` drains cleanly.
+
+use fecaffe::proto::parse_net;
+use fecaffe::serve::http::predict_body;
+use fecaffe::serve::{
+    http_request, DeviceKind, Engine, EngineConfig, HttpClient, HttpConfig, HttpServer,
+    ModelRouter,
+};
+use fecaffe::util::json::Json;
+use fecaffe::zoo;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn lenet_engine() -> Engine {
+    let param = zoo::by_name("lenet", 1).unwrap();
+    Engine::new(
+        &param,
+        EngineConfig {
+            workers: 1,
+            max_batch: 4,
+            max_linger: Duration::from_micros(500),
+            queue_capacity: 64,
+            device: DeviceKind::Cpu,
+            intra_op_threads: 1,
+        },
+    )
+    .unwrap()
+}
+
+fn parse_json(body: &[u8]) -> Json {
+    Json::parse(std::str::from_utf8(body).unwrap()).unwrap()
+}
+
+#[test]
+fn two_models_predict_healthz_metrics_inventory() {
+    // Two engines served concurrently from one process (the router's
+    // whole point); both happen to be LeNet so the test stays fast.
+    let router = Arc::new(
+        ModelRouter::from_engines(vec![
+            ("lenet-a".to_string(), lenet_engine()),
+            ("lenet-b".to_string(), lenet_engine()),
+        ])
+        .unwrap(),
+    );
+    let server = HttpServer::bind("127.0.0.1:0", router, HttpConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // healthz
+    let (status, body) = http_request(&addr, "GET", "/healthz", b"").unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(body, b"ok\n");
+
+    // Inventory lists both models with LeNet's schema.
+    let (status, body) = http_request(&addr, "GET", "/v1/models", b"").unwrap();
+    assert_eq!(status, 200);
+    let inv = parse_json(&body);
+    let models = inv.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(models.len(), 2);
+    for m in models {
+        assert_eq!(m.get("sample_len").unwrap().as_usize().unwrap(), 28 * 28);
+        assert_eq!(m.get("output_len").unwrap().as_usize().unwrap(), 10);
+    }
+
+    // Concurrent predicts against both models on persistent
+    // connections: every response is one softmax row per instance.
+    let handles: Vec<_> = ["lenet-a", "lenet-b"]
+        .into_iter()
+        .map(|model| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut client = HttpClient::connect(&addr).unwrap();
+                let path = format!("/v1/models/{model}:predict");
+                for k in 0..3 {
+                    let body =
+                        predict_body(&[vec![0.25; 28 * 28], vec![0.5; 28 * 28]]);
+                    let (status, resp) =
+                        client.request("POST", &path, body.as_bytes()).unwrap();
+                    assert_eq!(status, 200, "{model} request {k}");
+                    let json = parse_json(&resp);
+                    assert_eq!(json.get("model").unwrap().as_str().unwrap(), model);
+                    let preds = json.get("predictions").unwrap().as_arr().unwrap();
+                    assert_eq!(preds.len(), 2);
+                    for row in preds {
+                        let row = row.as_arr().unwrap();
+                        assert_eq!(row.len(), 10);
+                        let sum: f64 = row.iter().map(|v| v.as_f64().unwrap()).sum();
+                        assert!((sum - 1.0).abs() < 1e-3, "softmax row sum {sum}");
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // Metrics report both models, with completions recorded.
+    let (status, body) = http_request(&addr, "GET", "/metrics", b"").unwrap();
+    assert_eq!(status, 200);
+    let metrics = parse_json(&body);
+    for model in ["lenet-a", "lenet-b"] {
+        let m = metrics.get(model).unwrap();
+        assert_eq!(m.get("completed").unwrap().as_usize().unwrap(), 6);
+        assert_eq!(m.get("failed").unwrap().as_usize().unwrap(), 0);
+    }
+
+    server.shutdown();
+}
+
+#[test]
+fn bad_requests_map_to_4xx() {
+    let router = Arc::new(
+        ModelRouter::from_engines(vec![("lenet".to_string(), lenet_engine())]).unwrap(),
+    );
+    let server = HttpServer::bind("127.0.0.1:0", router, HttpConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let predict = "/v1/models/lenet:predict";
+
+    // Wrong sample length → the engine's BadRequest → 400.
+    let (status, body) =
+        http_request(&addr, "POST", predict, predict_body(&[vec![0.1; 3]]).as_bytes())
+            .unwrap();
+    assert_eq!(status, 400);
+    let err = parse_json(&body);
+    assert!(
+        err.get("error").unwrap().as_str().unwrap().contains("bad request"),
+        "{err:?}"
+    );
+
+    // Malformed JSON → 400.
+    let (status, _) = http_request(&addr, "POST", predict, b"{not json").unwrap();
+    assert_eq!(status, 400);
+    // Valid JSON, wrong shape → 400.
+    let (status, _) = http_request(&addr, "POST", predict, b"{\"instances\": 5}").unwrap();
+    assert_eq!(status, 400);
+    let (status, _) = http_request(&addr, "POST", predict, b"{\"instances\": []}").unwrap();
+    assert_eq!(status, 400);
+
+    // Unknown model → 404; unknown action/path → 404; GET predict → 405.
+    let (status, _) = http_request(
+        &addr,
+        "POST",
+        "/v1/models/resnet:predict",
+        predict_body(&[vec![0.0; 784]]).as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = http_request(&addr, "POST", "/v1/models/lenet:explain", b"{}").unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = http_request(&addr, "GET", "/nope", b"").unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = http_request(&addr, "GET", predict, b"").unwrap();
+    assert_eq!(status, 405);
+
+    server.shutdown();
+}
+
+/// Saturating the admission pipeline returns 429, not an error or a
+/// hang. The model is deliberately slow (three wide fully-connected
+/// layers) and the queue tiny, so the pipeline — queue(1) + batcher(1)
+/// + dispatch(2) + worker(1) — is still full when the last of ten
+/// parallel requests arrives.
+#[test]
+fn full_admission_queue_returns_429() {
+    const SLOW_NET: &str = r#"
+name: "slowmlp"
+layer { name: "data" type: "SyntheticData" top: "data" top: "label"
+        data_param { batch_size: 1 channels: 1 height: 64 width: 64 num_classes: 10 source: "digits" seed: 1 } }
+layer { name: "fc1" type: "InnerProduct" bottom: "data" top: "fc1"
+        inner_product_param { num_output: 2048 weight_filler { type: "xavier" } } }
+layer { name: "relu1" type: "ReLU" bottom: "fc1" top: "fc1" }
+layer { name: "fc2" type: "InnerProduct" bottom: "fc1" top: "fc2"
+        inner_product_param { num_output: 2048 weight_filler { type: "xavier" } } }
+layer { name: "relu2" type: "ReLU" bottom: "fc2" top: "fc2" }
+layer { name: "fc3" type: "InnerProduct" bottom: "fc2" top: "fc3"
+        inner_product_param { num_output: 10 weight_filler { type: "xavier" } } }
+layer { name: "loss" type: "SoftmaxWithLoss" bottom: "fc3" bottom: "label" top: "loss" }
+"#;
+    let netp = parse_net(SLOW_NET).unwrap();
+    let engine = Engine::new(
+        &netp,
+        EngineConfig {
+            workers: 1,
+            max_batch: 1,
+            max_linger: Duration::from_micros(100),
+            queue_capacity: 1,
+            device: DeviceKind::Cpu,
+            intra_op_threads: 1,
+        },
+    )
+    .unwrap();
+    let router =
+        Arc::new(ModelRouter::from_engines(vec![("slowmlp".to_string(), engine)]).unwrap());
+    let server = HttpServer::bind("127.0.0.1:0", router, HttpConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let body = predict_body(&[vec![0.1; 64 * 64]]);
+
+    let statuses: Vec<u16> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..10)
+            .map(|_| {
+                let addr = &addr;
+                let body = &body;
+                scope.spawn(move || {
+                    http_request(
+                        addr,
+                        "POST",
+                        "/v1/models/slowmlp:predict",
+                        body.as_bytes(),
+                    )
+                    .unwrap()
+                    .0
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert!(
+        statuses.iter().any(|&s| s == 429),
+        "expected at least one 429 from 10 parallel requests, got {statuses:?}"
+    );
+    assert!(
+        statuses.iter().any(|&s| s == 200),
+        "admitted requests must still complete, got {statuses:?}"
+    );
+    assert!(
+        statuses.iter().all(|&s| s == 200 || s == 429),
+        "only 200/429 expected under pure overload, got {statuses:?}"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn engines_down_returns_503_and_admin_shutdown_drains() {
+    let router = Arc::new(
+        ModelRouter::from_engines(vec![("lenet".to_string(), lenet_engine())]).unwrap(),
+    );
+    let server =
+        HttpServer::bind("127.0.0.1:0", router.clone(), HttpConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // A healthy predict first, proving the 503 below is the shutdown.
+    let ok_body = predict_body(&[vec![0.5; 784]]);
+    let (status, _) =
+        http_request(&addr, "POST", "/v1/models/lenet:predict", ok_body.as_bytes()).unwrap();
+    assert_eq!(status, 200);
+
+    // Stop the engines but keep the HTTP layer up: predict → 503,
+    // health endpoints still answer.
+    router.shutdown();
+    let (status, body) =
+        http_request(&addr, "POST", "/v1/models/lenet:predict", ok_body.as_bytes()).unwrap();
+    assert_eq!(status, 503);
+    assert!(
+        parse_json(&body)
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("shutting down"),
+        "503 body should name the shutdown"
+    );
+    let (status, _) = http_request(&addr, "GET", "/healthz", b"").unwrap();
+    assert_eq!(status, 200);
+
+    // The SIGTERM equivalent: POST /admin/shutdown flips the flag the
+    // server process parks on, then shutdown() drains.
+    assert!(!server.shutdown_requested());
+    let (status, _) = http_request(&addr, "POST", "/admin/shutdown", b"").unwrap();
+    assert_eq!(status, 200);
+    server.wait_shutdown(); // returns because the flag is set
+    assert!(server.shutdown_requested());
+    server.shutdown();
+
+    // Listener is gone: a fresh connection must fail.
+    assert!(http_request(&addr, "GET", "/healthz", b"").is_err());
+}

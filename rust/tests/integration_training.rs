@@ -55,7 +55,7 @@ display: 0
     let l1 = *solver.loss_history.last().unwrap();
     assert!(l1.is_finite() && l1 < l0 * 1.5);
     // lr stepped down after stepsize iterations
-    assert!((solver.learning_rate() - 0.005).abs() < 1e-6);
+    assert!((solver.learning_rate().unwrap() - 0.005).abs() < 1e-6);
 }
 
 #[test]

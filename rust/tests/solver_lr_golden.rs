@@ -1,0 +1,159 @@
+//! Golden tests for every learning-rate schedule against hand-computed
+//! `caffe::SGDSolver::GetLearningRate` values, plus the error contract:
+//! an unknown `lr_policy` in a user-supplied prototxt is an `Err` at
+//! parse time and at solver construction — never a panic.
+
+use fecaffe::device::cpu::CpuDevice;
+use fecaffe::net::Net;
+use fecaffe::proto::{parse_net, parse_solver, Phase, SolverParameter};
+use fecaffe::solver::{learning_rate_at, Solver};
+
+/// Relative tolerance for f32 schedule math.
+fn assert_close(got: f32, want: f32, what: &str) {
+    let tol = want.abs().max(1e-12) * 1e-5;
+    assert!(
+        (got - want).abs() <= tol,
+        "{what}: got {got}, want {want}"
+    );
+}
+
+fn solver_text(body: &str) -> SolverParameter {
+    parse_solver(&format!("net: \"lenet\"\n{body}")).unwrap()
+}
+
+#[test]
+fn fixed_is_constant() {
+    let p = solver_text("base_lr: 0.01\nlr_policy: \"fixed\"");
+    for iter in [0, 1, 999, 100_000] {
+        assert_close(learning_rate_at(&p, iter).unwrap(), 0.01, "fixed");
+    }
+}
+
+#[test]
+fn step_matches_caffe() {
+    // caffe: rate = base_lr * gamma^(iter / stepsize)
+    let p = solver_text("base_lr: 0.1\nlr_policy: \"step\"\ngamma: 0.5\nstepsize: 10");
+    for (iter, want) in [(0, 0.1), (9, 0.1), (10, 0.05), (19, 0.05), (20, 0.025), (35, 0.0125)] {
+        assert_close(learning_rate_at(&p, iter).unwrap(), want, "step");
+    }
+}
+
+#[test]
+fn exp_matches_caffe() {
+    // caffe: rate = base_lr * gamma^iter
+    let p = solver_text("base_lr: 0.1\nlr_policy: \"exp\"\ngamma: 0.99");
+    assert_close(learning_rate_at(&p, 0).unwrap(), 0.1, "exp@0");
+    assert_close(learning_rate_at(&p, 1).unwrap(), 0.099, "exp@1");
+    // 0.99^10 = 0.904382075...
+    assert_close(learning_rate_at(&p, 10).unwrap(), 0.090438208, "exp@10");
+}
+
+#[test]
+fn inv_matches_caffe() {
+    // caffe: rate = base_lr * (1 + gamma*iter)^(-power) — LeNet's policy.
+    let p = solver_text("base_lr: 0.01\nlr_policy: \"inv\"\ngamma: 0.0001\npower: 0.75");
+    assert_close(learning_rate_at(&p, 0).unwrap(), 0.01, "inv@0");
+    // (1 + 1)^-0.75 = 0.59460355...
+    assert_close(learning_rate_at(&p, 10_000).unwrap(), 0.0059460355, "inv@10000");
+    // (1 + 0.01)^-0.75 = 0.99256503...
+    assert_close(learning_rate_at(&p, 100).unwrap(), 0.0099256503, "inv@100");
+}
+
+#[test]
+fn poly_matches_caffe() {
+    // caffe: rate = base_lr * (1 - iter/max_iter)^power — SqueezeNet's.
+    let p = solver_text("base_lr: 0.04\nlr_policy: \"poly\"\npower: 1.0\nmax_iter: 100");
+    assert_close(learning_rate_at(&p, 0).unwrap(), 0.04, "poly@0");
+    assert_close(learning_rate_at(&p, 25).unwrap(), 0.03, "poly@25");
+    assert_close(learning_rate_at(&p, 100).unwrap(), 0.0, "poly@100");
+    let p = solver_text("base_lr: 0.04\nlr_policy: \"poly\"\npower: 2.0\nmax_iter: 100");
+    assert_close(learning_rate_at(&p, 50).unwrap(), 0.01, "poly^2@50");
+}
+
+#[test]
+fn sigmoid_matches_caffe() {
+    // caffe: rate = base_lr * (1 / (1 + exp(-gamma * (iter - stepsize))))
+    let p = solver_text("base_lr: 0.1\nlr_policy: \"sigmoid\"\ngamma: -0.01\nstepsize: 100");
+    // At iter == stepsize the sigmoid is exactly 1/2.
+    assert_close(learning_rate_at(&p, 100).unwrap(), 0.05, "sigmoid@step");
+    // gamma*(0-100) = 1 → sigma(1) = 0.73105858...
+    assert_close(learning_rate_at(&p, 0).unwrap(), 0.073105857, "sigmoid@0");
+    // gamma*(200-100) = -1 → sigma(-1) = 0.26894142...
+    assert_close(learning_rate_at(&p, 200).unwrap(), 0.026894143, "sigmoid@200");
+}
+
+#[test]
+fn multistep_matches_caffe() {
+    // caffe: current_step_ advances at each stepvalue boundary; rate =
+    // base_lr * gamma^current_step_.
+    let p = solver_text(
+        "base_lr: 0.1\nlr_policy: \"multistep\"\ngamma: 0.5\n\
+         stepvalue: 5\nstepvalue: 8\nstepvalue: 12",
+    );
+    assert_eq!(p.stepvalue, vec![5, 8, 12]);
+    let want = [
+        (0, 0.1),
+        (4, 0.1),
+        (5, 0.05),
+        (7, 0.05),
+        (8, 0.025),
+        (11, 0.025),
+        (12, 0.0125),
+        (1000, 0.0125),
+    ];
+    for (iter, w) in want {
+        assert_close(learning_rate_at(&p, iter).unwrap(), w, "multistep");
+    }
+    // No boundaries behaves like `fixed`.
+    let p = solver_text("base_lr: 0.1\nlr_policy: \"multistep\"\ngamma: 0.5");
+    assert_close(learning_rate_at(&p, 500).unwrap(), 0.1, "multistep-empty");
+}
+
+#[test]
+fn multistep_prototxt_trains_end_to_end() {
+    // A paper-style solver prototxt with multistep must parse, build and
+    // step — the schedule visibly decays across the boundaries.
+    const NET: &str = r#"
+name: "t"
+layer { name: "data" type: "SyntheticData" top: "data" top: "label"
+        data_param { batch_size: 4 channels: 1 height: 8 width: 8 num_classes: 3 source: "digits" seed: 5 } }
+layer { name: "fc" type: "InnerProduct" bottom: "data" top: "fc"
+        inner_product_param { num_output: 3 weight_filler { type: "xavier" } } }
+layer { name: "loss" type: "SoftmaxWithLoss" bottom: "fc" bottom: "label" top: "loss" }
+"#;
+    let sp = solver_text(
+        "base_lr: 0.05\nlr_policy: \"multistep\"\ngamma: 0.1\n\
+         stepvalue: 2\nstepvalue: 4\ndisplay: 0",
+    );
+    let mut dev = CpuDevice::new();
+    let netp = parse_net(NET).unwrap();
+    let net = Net::from_param(&netp, Phase::Train, &mut dev).unwrap();
+    let mut solver = Solver::new(sp, net, &mut dev).unwrap();
+    let mut rates = Vec::new();
+    for _ in 0..5 {
+        rates.push(solver.learning_rate().unwrap());
+        solver.step(&mut dev).unwrap();
+    }
+    assert_close(rates[0], 0.05, "iter 0");
+    assert_close(rates[1], 0.05, "iter 1");
+    assert_close(rates[2], 0.005, "iter 2");
+    assert_close(rates[3], 0.005, "iter 3");
+    assert_close(rates[4], 0.0005, "iter 4");
+}
+
+#[test]
+fn unknown_policy_fails_at_parse_and_at_construction() {
+    // Parse-time rejection.
+    let err = parse_solver("net: \"lenet\"\nlr_policy: \"warmup_cosine\"").unwrap_err();
+    assert!(err.contains("unknown lr_policy"), "{err}");
+
+    // Construction-time rejection for programmatically-built params.
+    let mut sp = SolverParameter::default();
+    sp.lr_policy = "warmup_cosine".into();
+    assert!(learning_rate_at(&sp, 0).is_err());
+    let mut dev = CpuDevice::new();
+    let param = fecaffe::zoo::by_name("lenet", 4).unwrap();
+    let net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+    let err = Solver::new(sp, net, &mut dev).unwrap_err().to_string();
+    assert!(err.contains("unknown lr_policy"), "{err}");
+}

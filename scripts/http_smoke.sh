@@ -1,0 +1,53 @@
+#!/usr/bin/env bash
+# HTTP serving smoke test: start `serve --http` on an ephemeral port,
+# hit healthz/predict/metrics through the binary's own load-generator
+# path, then assert a clean drain on the SIGTERM-equivalent shutdown
+# (POST /admin/shutdown). CI runs this after a release build.
+set -euo pipefail
+
+SERVE="${SERVE:-target/release/serve}"
+LOG="$(mktemp)"
+trap 'kill "$SERVER_PID" 2>/dev/null || true; rm -f "$LOG"' EXIT
+
+[ -x "$SERVE" ] || { echo "serve binary not found at $SERVE (set SERVE=...)"; exit 1; }
+
+"$SERVE" --http 127.0.0.1:0 --models lenet --workers 2 --max-batch 8 >"$LOG" 2>&1 &
+SERVER_PID=$!
+
+# Wait for the listener line and extract the bound address.
+ADDR=""
+for _ in $(seq 1 100); do
+    ADDR="$(sed -n 's|.*listening on http://||p' "$LOG" | head -n1)"
+    [ -n "$ADDR" ] && break
+    kill -0 "$SERVER_PID" 2>/dev/null || { echo "server died during startup:"; cat "$LOG"; exit 1; }
+    sleep 0.2
+done
+[ -n "$ADDR" ] || { echo "server never reported its address:"; cat "$LOG"; exit 1; }
+echo "server up at $ADDR"
+
+fail() { echo "FAIL: $1"; cat "$LOG"; exit 1; }
+
+# healthz
+curl -sf "http://$ADDR/healthz" | grep -q ok || fail "healthz"
+
+# predict + metrics through the external load-generator path.
+"$SERVE" --target "$ADDR" --net lenet --requests 64 --clients 4 || fail "http load generator"
+curl -sf "http://$ADDR/metrics" | grep -q '"completed"' || fail "metrics"
+
+# Unknown model must 404, not crash the server.
+CODE="$(curl -s -o /dev/null -w '%{http_code}' -X POST \
+    -d '{"instances": [[0]]}' "http://$ADDR/v1/models/resnet:predict")"
+[ "$CODE" = "404" ] || fail "expected 404 for unknown model, got $CODE"
+
+# SIGTERM-equivalent shutdown: the server must drain and exit 0.
+curl -sf -X POST "http://$ADDR/admin/shutdown" >/dev/null || fail "admin shutdown"
+for _ in $(seq 1 100); do
+    kill -0 "$SERVER_PID" 2>/dev/null || break
+    sleep 0.2
+done
+if kill -0 "$SERVER_PID" 2>/dev/null; then
+    fail "server did not exit after /admin/shutdown"
+fi
+wait "$SERVER_PID" || fail "server exited non-zero"
+grep -q "drained clean" "$LOG" || fail "server did not report a clean drain"
+echo "http smoke: OK"
