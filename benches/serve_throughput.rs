@@ -1,8 +1,10 @@
 //! Serving-engine throughput bench: LeNet under a closed-loop load test
-//! at micro-batch caps 1 / 8 / 32 in-process, plus the same engine
-//! config behind the HTTP front-end (real sockets, persistent
-//! connections), emitting `BENCH_serve.json` (requests/s and p99
-//! latency per configuration). `cargo bench --bench serve_throughput`.
+//! at micro-batch caps 1 / 8 / 32 in-process, the same engine config
+//! behind the HTTP front-end (real sockets, persistent connections),
+//! and a weight hot-swap leg (continuous publishes under load), emitting
+//! `BENCH_serve.json` (requests/s and p99 latency per configuration).
+//! `cargo bench --bench serve_throughput`; set `FECAFFE_BENCH_QUICK=1`
+//! for the CI smoke variant (same shape, fewer requests).
 
 use fecaffe::serve::{
     http_load_test, load_test, DeviceKind, Engine, EngineConfig, HttpConfig, HttpServer,
@@ -11,14 +13,17 @@ use fecaffe::serve::{
 use fecaffe::util::json::Json;
 use fecaffe::util::stats::summarize;
 use fecaffe::zoo;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 const WORKERS: usize = 4;
-const CLIENTS: usize = 16;
-const REQUESTS: usize = 384;
 
 fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("FECAFFE_BENCH_QUICK")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let (clients, requests) = if quick { (8, 96) } else { (16, 384) };
     let param = zoo::by_name("lenet", 1)?;
     let mut results = Vec::new();
     for &max_batch in &[1usize, 8, 32] {
@@ -34,9 +39,9 @@ fn main() -> anyhow::Result<()> {
         // Warm the replicas (first forward pays blob upload + scratch
         // growth), then snapshot so warm-up traffic doesn't contaminate
         // the measured batch statistics.
-        let _ = load_test(&engine, CLIENTS, CLIENTS * 2, 1);
+        let _ = load_test(&engine, clients, clients * 2, 1);
         let warm = engine.metrics().snapshot();
-        let report = load_test(&engine, CLIENTS, REQUESTS, 7);
+        let report = load_test(&engine, clients, requests, 7);
         engine.shutdown();
         let snap = engine.metrics().snapshot();
         let batches = snap.batches - warm.batches;
@@ -80,8 +85,8 @@ fn main() -> anyhow::Result<()> {
         let sample_len = router.engine("lenet").expect("registered").sample_len();
         let server = HttpServer::bind("127.0.0.1:0", router, HttpConfig::default())?;
         let addr = server.local_addr().to_string();
-        let _ = http_load_test(&addr, "lenet", sample_len, CLIENTS, CLIENTS * 2, 1)?; // warm
-        let report = http_load_test(&addr, "lenet", sample_len, CLIENTS, REQUESTS, 7)?;
+        let _ = http_load_test(&addr, "lenet", sample_len, clients, clients * 2, 1)?; // warm
+        let report = http_load_test(&addr, "lenet", sample_len, clients, requests, 7)?;
         server.shutdown();
         anyhow::ensure!(report.requests > 0, "no completed requests over HTTP");
         let mut lats = report.latencies_ns.clone();
@@ -99,11 +104,75 @@ fn main() -> anyhow::Result<()> {
         results.push(o);
     }
 
+    // Hot-swap path: the same in-process engine under closed-loop load
+    // while a publisher thread continuously republishes the weights —
+    // what continuous train-and-serve costs the serving path. Zero
+    // failed requests is part of the contract, not just a perf number.
+    {
+        let cfg = EngineConfig {
+            workers: WORKERS,
+            max_batch: 8,
+            max_linger: Duration::from_micros(1000),
+            queue_capacity: 1024,
+            device: DeviceKind::Cpu,
+            intra_op_threads: 0,
+        };
+        let engine = Engine::new(&param, cfg)?;
+        let _ = load_test(&engine, clients, clients * 2, 1); // warm
+        let stop = AtomicBool::new(false);
+        let publishes = AtomicU64::new(0);
+        let report = std::thread::scope(|scope| {
+            let publisher = scope.spawn(|| {
+                let snap = engine.weights();
+                while !stop.load(Ordering::Acquire) {
+                    engine
+                        .publish_weights(snap.clone().with_version(0))
+                        .expect("publish under load");
+                    publishes.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            });
+            let report = load_test(&engine, clients, requests, 7);
+            stop.store(true, Ordering::Release);
+            publisher.join().expect("publisher panicked");
+            report
+        });
+        anyhow::ensure!(
+            report.failed == 0,
+            "hot-swap load test had {} failed requests",
+            report.failed
+        );
+        anyhow::ensure!(report.requests > 0, "no completed requests under hot-swap");
+        let n_pub = publishes.load(Ordering::Relaxed);
+        let version = engine.weights_version();
+        engine.shutdown();
+        let mut lats = report.latencies_ns.clone();
+        let s = summarize("lenet serve, hot-swap     8", &mut lats);
+        println!(
+            "{}   ({:.1} req/s under {} publishes)",
+            s.line(),
+            report.rps,
+            n_pub
+        );
+
+        let mut o = Json::obj();
+        o.set("transport", Json::str("inproc+publish"));
+        o.set("max_batch", Json::num(8.0));
+        o.set("requests", Json::num(report.requests as f64));
+        o.set("failed", Json::num(report.failed as f64));
+        o.set("publishes", Json::num(n_pub as f64));
+        o.set("weights_version", Json::num(version as f64));
+        o.set("rps", Json::num(report.rps));
+        o.set("p50_ms", Json::num(s.median_ns / 1e6));
+        o.set("p99_ms", Json::num(s.p99_ns / 1e6));
+        results.push(o);
+    }
+
     let mut root = Json::obj();
     root.set("bench", Json::str("serve_throughput"));
     root.set("net", Json::str("lenet"));
     root.set("workers", Json::num(WORKERS as f64));
-    root.set("clients", Json::num(CLIENTS as f64));
+    root.set("clients", Json::num(clients as f64));
     root.set("results", Json::Arr(results));
     std::fs::write("BENCH_serve.json", root.to_pretty())?;
     println!("wrote BENCH_serve.json");

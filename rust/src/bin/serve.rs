@@ -124,7 +124,8 @@ fn run_http_server(args: &Args, addr: &str) -> anyhow::Result<()> {
     let server = HttpServer::bind(addr, router, HttpConfig::default())?;
     println!("[serve] listening on http://{}", server.local_addr());
     println!(
-        "[serve] POST /v1/models/<name>:predict | GET /v1/models | GET /metrics | GET /healthz | POST /admin/shutdown"
+        "[serve] POST /v1/models/<name>:predict | GET /v1/models | GET /metrics | GET /healthz \
+         | POST /admin/models/<name>:publish | POST /admin/shutdown"
     );
     server.wait_shutdown();
     println!("[serve] shutdown requested; draining...");

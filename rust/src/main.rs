@@ -5,9 +5,11 @@
 //! ```text
 //! fecaffe train --solver path/to/solver.prototxt [--device fpga|cpu] [--iters N]
 //! fecaffe train --net lenet --iters 200            # zoo net + default solver
+//! fecaffe train --net lenet --serve 127.0.0.1:8080 # train + serve in one process
 //! fecaffe time  --net googlenet --batch 1 --iterations 10
 //! fecaffe zoo                                      # list networks
 //! fecaffe export --net lenet                       # print prototxt
+//! fecaffe weights --net lenet --out w.fewts        # export a weight snapshot
 //! ```
 
 use fecaffe::device::cpu::CpuDevice;
@@ -16,9 +18,11 @@ use fecaffe::device::Device;
 use fecaffe::net::Net;
 use fecaffe::proto::{self, Phase};
 use fecaffe::runtime::PjrtBackend;
+use fecaffe::serve::{Engine, EngineConfig, HttpConfig, HttpServer, ModelRouter};
 use fecaffe::solver::Solver;
 use fecaffe::util::cli::{usage, Args, Spec};
 use fecaffe::zoo;
+use std::sync::Arc;
 
 const SPECS: &[Spec] = &[
     Spec::opt("solver", None, "solver prototxt path"),
@@ -28,6 +32,21 @@ const SPECS: &[Spec] = &[
     Spec::opt("iters", None, "override solver max_iter"),
     Spec::opt("iterations", Some("10"), "timing iterations (time command)"),
     Spec::opt("snapshot", None, "restore from snapshot before training"),
+    Spec::opt(
+        "serve",
+        None,
+        "train command: also serve the net over HTTP at this address, \
+         hot-swapping weights into the engine as training progresses",
+    ),
+    Spec::opt(
+        "publish-every",
+        Some("25"),
+        "publish weights into the serving engine every N iterations (--serve)",
+    ),
+    Spec::opt("serve-workers", Some("2"), "serving worker replicas (--serve)"),
+    Spec::opt("out", Some("weights.fewts"), "weights command: output file"),
+    Spec::opt("version", Some("1"), "weights command: snapshot version"),
+    Spec::opt("tag", None, "weights command: snapshot tag"),
     Spec::flag("timing-only", "skip numerics, simulate timing only"),
     Spec::flag("no-artifacts", "force native math (skip PJRT artifacts)"),
 ];
@@ -114,8 +133,59 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         fecaffe::solver::snapshot::restore(snap, &mut solver, dev.as_mut())?;
         println!("Restored snapshot {} (iter {})", snap, solver.iter);
     }
+
+    // --serve: run the HTTP serving engine in this same process and
+    // hot-swap the solver's weights into it as training progresses —
+    // the paper's "one framework for training *and* inference" claim,
+    // live. Serving workers run on the CPU device so inference never
+    // contends for the training device's simulated clock.
+    let serving = match args.get("serve") {
+        Some(addr) => {
+            let model = match args.get("net") {
+                Some(n) if !std::path::Path::new(n).is_file() => n.to_string(),
+                _ => netp.name.clone(),
+            };
+            let ecfg = EngineConfig {
+                workers: args.get_usize("serve-workers").map_err(anyhow::Error::msg)?,
+                ..EngineConfig::default()
+            };
+            let engine = Engine::new(&netp, ecfg)?;
+            let router = Arc::new(ModelRouter::from_engines(vec![(model.clone(), engine)])?);
+            let server = HttpServer::bind(addr, router.clone(), HttpConfig::default())?;
+            println!(
+                "[fecaffe] serving '{model}' on http://{} while training \
+                 (publish every {} iters)",
+                server.local_addr(),
+                args.get_usize("publish-every").map_err(anyhow::Error::msg)?
+            );
+            // Publish the starting weights so the engine serves the
+            // solver's parameters (not its own initialization) from the
+            // first request on.
+            let v = router
+                .publish(&model, solver.export_weights(dev.as_mut()))
+                .map_err(|e| anyhow::anyhow!("initial weight publish: {e}"))?;
+            println!("[fecaffe] published weights v{v} (iter {})", solver.iter);
+            Some((router, server, model))
+        }
+        None => None,
+    };
+
     let t0 = std::time::Instant::now();
-    solver.solve(dev.as_mut(), max_iter)?;
+    match &serving {
+        Some((router, _, model)) => {
+            let publish_every =
+                args.get_usize("publish-every").map_err(anyhow::Error::msg)?;
+            solver.solve_with_publish(dev.as_mut(), max_iter, publish_every, &mut |snap| {
+                let tag = snap.tag().unwrap_or("").to_string();
+                let v = router
+                    .publish(model, snap)
+                    .map_err(|e| anyhow::anyhow!("weight publish: {e}"))?;
+                println!("[fecaffe] published weights v{v} ({tag})");
+                Ok(())
+            })?;
+        }
+        None => solver.solve(dev.as_mut(), max_iter)?,
+    }
     let wall = t0.elapsed();
     let tail = solver.loss_history.len().min(10);
     let final_loss: f32 =
@@ -130,6 +200,51 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     if let Some(ns) = dev.sim_clock_ns() {
         println!("Simulated device time: {:.3} s", ns as f64 / 1e9);
     }
+
+    if let Some((router, server, model)) = serving {
+        // Publish the final weights (unless the last iteration's
+        // cadence publish already did), then keep serving the trained
+        // model until a client POSTs /admin/shutdown.
+        let publish_every = args.get_usize("publish-every").map_err(anyhow::Error::msg)?;
+        let last_iter_published =
+            publish_every > 0 && solver.iter > 0 && solver.iter % publish_every == 0;
+        if !last_iter_published {
+            let v = router
+                .publish(&model, solver.export_weights(dev.as_mut()))
+                .map_err(|e| anyhow::anyhow!("final weight publish: {e}"))?;
+            println!("[fecaffe] published final weights v{v} (iter {})", solver.iter);
+        }
+        println!("[fecaffe] training done; still serving — POST /admin/shutdown to exit");
+        server.wait_shutdown();
+        println!("[fecaffe] shutdown requested; draining...");
+        server.shutdown();
+        println!("[fecaffe] drained clean");
+    }
+    Ok(())
+}
+
+/// `fecaffe weights`: export a net's (freshly initialized) parameters
+/// as a standalone `FEWSNAP1` weight-snapshot file — the artifact the
+/// serving engine's `POST /admin/models/<name>:publish` endpoint loads.
+/// The CI smoke test uses this to hot-swap weights into a live server.
+fn cmd_weights(args: &Args) -> anyhow::Result<()> {
+    let netp = load_net_param(args)?;
+    let out = args.get("out").unwrap_or("weights.fewts");
+    let version = args.get_usize("version").map_err(anyhow::Error::msg)? as u64;
+    let mut dev = CpuDevice::new();
+    let mut net = Net::from_param(&netp, Phase::Train, &mut dev)?;
+    let mut snap = net.share_weights(&mut dev).with_version(version);
+    if let Some(tag) = args.get("tag") {
+        snap = snap.with_tag(tag);
+    }
+    snap.save(out)?;
+    println!(
+        "Wrote {} (v{}, {} blobs, {} parameters)",
+        out,
+        snap.version(),
+        snap.len(),
+        snap.num_parameters()
+    );
     Ok(())
 }
 
@@ -185,6 +300,7 @@ fn main() {
     let result = match cmd {
         "train" => cmd_train(&args),
         "time" => cmd_time(&args),
+        "weights" => cmd_weights(&args),
         "zoo" => {
             for n in zoo::NETWORKS {
                 println!("{n}");
@@ -198,7 +314,7 @@ fn main() {
             println!(
                 "{}",
                 usage(
-                    "fecaffe <train|time|zoo|export>",
+                    "fecaffe <train|time|zoo|export|weights>",
                     "FeCaffe: FPGA-enabled Caffe (simulated Stratix 10 + PJRT AOT kernels)",
                     SPECS
                 )

@@ -25,10 +25,26 @@ use std::sync::Arc;
 /// Sync`, so it can cross threads even though `Net` itself (built on
 /// `Rc<RefCell<Blob>>`) cannot: each worker thread builds its own
 /// replica from the same `NetParameter` and adopts the snapshot.
+///
+/// Snapshots are *versioned*: a monotonic `version` (0 = "unversioned";
+/// the serving engine assigns `current + 1` on publish) plus an optional
+/// free-form `tag` (e.g. `iter-500`). Each blob also carries a stable
+/// identity key — `(owner layer name, slot index within that layer)` —
+/// so a snapshot exported from a *training* net can be projected onto a
+/// *deploy* net that pruned param-carrying layers (GoogLeNet's auxiliary
+/// classifier heads) via [`WeightSnapshot::project`].
 #[derive(Debug, Clone, Default)]
 pub struct WeightSnapshot {
+    version: u64,
+    tag: Option<String>,
     blobs: Vec<Arc<Vec<f32>>>,
+    keys: Vec<(String, usize)>,
 }
+
+/// Magic header of the weight-snapshot container written by
+/// [`WeightSnapshot::save`] (distinct from the solver's `FECAFFE1`
+/// training snapshot, which also carries optimizer history).
+const WEIGHTS_MAGIC: &[u8; 8] = b"FEWSNAP1";
 
 impl WeightSnapshot {
     /// Number of parameter blobs in the snapshot.
@@ -43,6 +59,171 @@ impl WeightSnapshot {
     /// Total learnable parameter count.
     pub fn num_parameters(&self) -> usize {
         self.blobs.iter().map(|b| b.len()).sum()
+    }
+
+    /// Monotonic snapshot version (0 = unversioned; the engine assigns
+    /// the next version on publish).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Optional human-readable tag (e.g. the training iteration).
+    pub fn tag(&self) -> Option<&str> {
+        self.tag.as_deref()
+    }
+
+    pub fn with_version(mut self, version: u64) -> WeightSnapshot {
+        self.version = version;
+        self
+    }
+
+    pub fn with_tag(mut self, tag: impl Into<String>) -> WeightSnapshot {
+        self.tag = Some(tag.into());
+        self
+    }
+
+    /// Per-blob identity: (owner layer name, slot index within that
+    /// layer), aligned with `blobs`.
+    pub fn keys(&self) -> &[(String, usize)] {
+        &self.keys
+    }
+
+    /// Element count of every blob, in order.
+    pub fn blob_lens(&self) -> Vec<usize> {
+        self.blobs.iter().map(|b| b.len()).collect()
+    }
+
+    /// Read-only view of blob `i`'s values (None out of range).
+    pub fn blob_data(&self, i: usize) -> Option<&[f32]> {
+        self.blobs.get(i).map(|b| b.as_slice())
+    }
+
+    /// Re-order (and subset) this snapshot's blobs onto a target
+    /// parameter schema, matching by `(owner, slot)` key. This is how a
+    /// training-net snapshot lands on a deploy net whose pruned layers
+    /// (aux heads) dropped some params: extra blobs in `self` are
+    /// ignored, a *missing* target key or an element-count mismatch is
+    /// an error. Cheap — blobs are `Arc`-cloned, never copied.
+    pub fn project(
+        &self,
+        keys: &[(String, usize)],
+        lens: &[usize],
+    ) -> anyhow::Result<WeightSnapshot> {
+        anyhow::ensure!(
+            keys.len() == lens.len(),
+            "project: {} keys but {} lens",
+            keys.len(),
+            lens.len()
+        );
+        anyhow::ensure!(
+            self.keys.len() == self.blobs.len(),
+            "snapshot is missing blob identity keys ({} keys, {} blobs)",
+            self.keys.len(),
+            self.blobs.len()
+        );
+        let mut index: HashMap<(&str, usize), usize> = HashMap::new();
+        for (i, (owner, slot)) in self.keys.iter().enumerate() {
+            index.insert((owner.as_str(), *slot), i);
+        }
+        let mut blobs = Vec::with_capacity(keys.len());
+        for ((owner, slot), want) in keys.iter().zip(lens.iter()) {
+            let i = *index.get(&(owner.as_str(), *slot)).ok_or_else(|| {
+                anyhow::anyhow!("snapshot has no param for layer '{owner}' (slot {slot})")
+            })?;
+            let blob = &self.blobs[i];
+            anyhow::ensure!(
+                blob.len() == *want,
+                "param of layer '{owner}' slot {slot}: snapshot has {} elements, model expects {}",
+                blob.len(),
+                want
+            );
+            blobs.push(blob.clone());
+        }
+        Ok(WeightSnapshot {
+            version: self.version,
+            tag: self.tag.clone(),
+            blobs,
+            keys: keys.to_vec(),
+        })
+    }
+
+    /// Serialize to a standalone weight file (`FEWSNAP1` container:
+    /// version, tag, and per blob its identity key + f32 data, all
+    /// little-endian via [`crate::util::binio`]). The on-disk artifact
+    /// behind the serving engine's `POST /admin/models/<name>:publish`
+    /// endpoint.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        use crate::util::binio::{put_f32s, put_str, put_u32, put_u64};
+        use std::io::Write;
+        anyhow::ensure!(
+            self.keys.len() == self.blobs.len(),
+            "snapshot is missing blob identity keys"
+        );
+        if let Some(dir) = path.as_ref().parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        w.write_all(WEIGHTS_MAGIC)?;
+        put_u64(&mut w, self.version)?;
+        put_str(&mut w, self.tag.as_deref().unwrap_or(""))?;
+        put_u32(&mut w, self.blobs.len() as u32)?;
+        for ((owner, slot), blob) in self.keys.iter().zip(self.blobs.iter()) {
+            put_str(&mut w, owner)?;
+            put_u32(&mut w, *slot as u32)?;
+            put_u32(&mut w, blob.len() as u32)?;
+            put_f32s(&mut w, blob)?;
+        }
+        Ok(())
+    }
+
+    /// Load a `FEWSNAP1` weight file written by [`WeightSnapshot::save`].
+    /// Every length field is bounded by the file's actual size before
+    /// anything is allocated, so a corrupt file fed to the publish
+    /// endpoint errors out instead of requesting gigabytes inside a
+    /// live serving process.
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<WeightSnapshot> {
+        use crate::util::binio::{get_f32s, get_str, get_u32, get_u64};
+        use std::io::Read;
+        let file = std::fs::File::open(&path)?;
+        let file_len = file.metadata()?.len() as usize;
+        let mut r = std::io::BufReader::new(file);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(
+            &magic == WEIGHTS_MAGIC,
+            "not a FEWSNAP1 weight snapshot (bad magic)"
+        );
+        let version = get_u64(&mut r)?;
+        let tag = get_str(&mut r, file_len)?;
+        let count = get_u32(&mut r)? as usize;
+        // Each blob record costs at least 12 bytes of headers, so a
+        // count the file can't possibly hold is corruption.
+        anyhow::ensure!(
+            count <= file_len / 12,
+            "implausible blob count {count} for a {file_len}-byte snapshot"
+        );
+        let mut blobs = Vec::with_capacity(count);
+        let mut keys = Vec::with_capacity(count);
+        for _ in 0..count {
+            let owner = get_str(&mut r, file_len)?;
+            let slot = get_u32(&mut r)? as usize;
+            let n = get_u32(&mut r)? as usize;
+            anyhow::ensure!(
+                n <= file_len / 4,
+                "implausible blob length {n} for a {file_len}-byte snapshot"
+            );
+            let data = get_f32s(&mut r, n)?;
+            keys.push((owner, slot));
+            blobs.push(Arc::new(data));
+        }
+        Ok(WeightSnapshot {
+            version,
+            tag: if tag.is_empty() { None } else { Some(tag) },
+            blobs,
+            keys,
+        })
     }
 }
 
@@ -261,10 +442,15 @@ impl Net {
     /// later mutates a weight (solver step).
     pub fn share_weights(&mut self, dev: &mut dyn Device) -> WeightSnapshot {
         let mut blobs = Vec::with_capacity(self.params.len());
+        let mut keys = Vec::with_capacity(self.params.len());
+        let mut slot_of: HashMap<String, usize> = HashMap::new();
         for p in &self.params {
+            let slot = slot_of.entry(p.owner.clone()).or_insert(0);
+            keys.push((p.owner.clone(), *slot));
+            *slot += 1;
             blobs.push(p.blob.borrow_mut().data.share_host(dev));
         }
-        WeightSnapshot { blobs }
+        WeightSnapshot { version: 0, tag: None, blobs, keys }
     }
 
     /// Attach a shared weight snapshot to this replica. The nets must be
@@ -564,6 +750,78 @@ layer { name: "fc2" type: "InnerProduct" bottom: "fc1" top: "fc2"
         let mut net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
         let empty = WeightSnapshot::default();
         assert!(net.adopt_weights(&mut dev, &empty).is_err());
+    }
+
+    #[test]
+    fn snapshot_carries_version_tag_and_keys() {
+        let param = parse_net(TINY_NET).unwrap();
+        let mut dev = CpuDevice::new();
+        let mut net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+        let snap = net.share_weights(&mut dev).with_version(7).with_tag("iter-7");
+        assert_eq!(snap.version(), 7);
+        assert_eq!(snap.tag(), Some("iter-7"));
+        // conv1 (w, b) + fc (w, b): keys name the owner layers, slots
+        // count within each layer.
+        assert_eq!(snap.keys().len(), 4);
+        assert_eq!(snap.keys()[0], ("conv1".to_string(), 0));
+        assert_eq!(snap.keys()[1], ("conv1".to_string(), 1));
+        assert_eq!(snap.keys()[2], ("fc".to_string(), 0));
+        assert_eq!(snap.keys()[3], ("fc".to_string(), 1));
+        assert_eq!(snap.blob_lens().len(), 4);
+    }
+
+    #[test]
+    fn snapshot_projects_onto_a_param_subset_by_key() {
+        let param = parse_net(TINY_NET).unwrap();
+        let mut dev = CpuDevice::new();
+        let mut net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+        let snap = net.share_weights(&mut dev).with_version(3);
+        // A "deploy" schema that kept only the fc layer (as if conv were
+        // pruned): projection selects the right blobs by owner key.
+        let keys = vec![("fc".to_string(), 0), ("fc".to_string(), 1)];
+        let lens: Vec<usize> = snap.blob_lens()[2..].to_vec();
+        let proj = snap.project(&keys, &lens).unwrap();
+        assert_eq!(proj.version(), 3);
+        assert_eq!(proj.len(), 2);
+        assert_eq!(proj.blob_lens(), lens);
+        // Missing key and wrong length both fail loudly.
+        let missing = vec![("nope".to_string(), 0)];
+        assert!(snap.project(&missing, &[1]).is_err());
+        let wrong_len = vec![("fc".to_string(), 0)];
+        assert!(snap.project(&wrong_len, &[1]).is_err());
+    }
+
+    #[test]
+    fn snapshot_file_round_trips_and_replica_adopts_it() {
+        let tmp = std::env::temp_dir().join("fecaffe_weight_snapshot_test.fewts");
+        let param = parse_net(TINY_NET).unwrap();
+        let mut dev = CpuDevice::new();
+        let mut net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+        let snap = net.share_weights(&mut dev).with_version(42).with_tag("golden");
+        snap.save(&tmp).unwrap();
+        let back = WeightSnapshot::load(&tmp).unwrap();
+        assert_eq!(back.version(), 42);
+        assert_eq!(back.tag(), Some("golden"));
+        assert_eq!(back.keys(), snap.keys());
+        assert_eq!(back.blob_lens(), snap.blob_lens());
+
+        // A fresh replica adopting the loaded snapshot computes the
+        // same forward as the source net.
+        let mut dev_r = CpuDevice::new();
+        let mut replica = Net::from_param(&param, Phase::Train, &mut dev_r).unwrap();
+        replica.adopt_weights(&mut dev_r, &back).unwrap();
+        let lm = net.forward(&mut dev).unwrap();
+        let lr = replica.forward(&mut dev_r).unwrap();
+        assert_eq!(lm, lr);
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn snapshot_load_rejects_bad_magic() {
+        let tmp = std::env::temp_dir().join("fecaffe_weight_snapshot_bad.fewts");
+        std::fs::write(&tmp, b"NOTSNAP!rest").unwrap();
+        assert!(WeightSnapshot::load(&tmp).is_err());
+        let _ = std::fs::remove_file(tmp);
     }
 
     #[test]

@@ -11,12 +11,15 @@
 pub mod plan;
 pub mod recording;
 
-// The PJRT executor needs the offline-vendored `xla` crate closure, so it
-// is gated behind the off-by-default `xla` feature; the stub keeps the
-// same public surface and routes every kernel to the native math path.
-#[cfg(feature = "xla")]
+// The PJRT executor needs the off-by-default `xla` feature *and* the
+// offline-vendored `xla` crate closure (build.rs emits `xla_vendored`
+// when `../vendor/xla` is present). Any other combination — including
+// the CI `xla-check` leg, which turns the feature on without the
+// closure — compiles the stub, which keeps the same public surface and
+// routes every kernel to the native math path.
+#[cfg(all(feature = "xla", xla_vendored))]
 pub mod pjrt;
-#[cfg(not(feature = "xla"))]
+#[cfg(not(all(feature = "xla", xla_vendored)))]
 #[path = "pjrt_stub.rs"]
 pub mod pjrt;
 

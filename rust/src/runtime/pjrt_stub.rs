@@ -1,12 +1,14 @@
-//! Stub PJRT backend — compiled when the `xla` cargo feature is off.
+//! Stub PJRT backend — compiled when the `xla` cargo feature is off,
+//! *or* when it is on without the vendored crate closure (the CI
+//! `xla-check` leg; see `build.rs` and the `xla_vendored` cfg).
 //!
 //! Mirrors the public surface of the real `pjrt` module so every caller
 //! (the `fecaffe` CLI, benches, integration tests) builds without the
 //! offline-vendored xla crate closure: `auto()` reports that no
 //! artifacts are available and `execute` always declines, so kernel
 //! launches fall back to the native math library. Build with
-//! `--features xla` (and the vendored `xla` crate) for real artifact
-//! execution.
+//! `--features xla` *and* the vendored `xla` crate under `vendor/xla`
+//! for real artifact execution.
 
 use crate::device::fpga::NumericBackend;
 use crate::device::native::Slab;
@@ -29,8 +31,9 @@ impl PjrtBackend {
     /// Always fails: this build has no PJRT client.
     pub fn new(_dir: impl Into<PathBuf>) -> anyhow::Result<PjrtBackend> {
         anyhow::bail!(
-            "fecaffe was built without the `xla` feature; \
-             rebuild with `--features xla` for PJRT artifact execution"
+            "fecaffe was built without PJRT support; rebuild with \
+             `--features xla` and the vendored xla crate (vendor/xla) \
+             for artifact execution"
         )
     }
 

@@ -9,6 +9,12 @@
 //! queue is full the caller gets [`ServeError::Overloaded`] and must
 //! back off (HTTP-429 semantics), which keeps tail latency bounded
 //! instead of letting the queue grow without limit.
+//!
+//! Weights are *hot-swappable*: [`Engine::publish_weights`] validates a
+//! new versioned snapshot against the model's parameter schema and
+//! swaps it into a shared cell; each worker adopts it at its next batch
+//! boundary, so in-flight batches finish on the old version and no
+//! request is ever dropped or served from mixed weights.
 
 use super::batcher::{self, Batch, BatcherConfig};
 use super::metrics::Metrics;
@@ -17,7 +23,7 @@ use super::worker;
 use crate::net::{Net, WeightSnapshot};
 use crate::proto::{NetParameter, Phase};
 use crate::zoo::{deploy, DeployNet};
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -122,9 +128,54 @@ impl std::fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
+/// Why a [`Engine::publish_weights`] call was refused. Kept separate
+/// from [`ServeError`]: publishing is a control-plane operation with its
+/// own HTTP status mapping (400 for schema mismatch, 409 for a stale
+/// version), never a data-plane serving failure.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PublishError {
+    /// Snapshot doesn't cover the model's parameter schema (missing
+    /// owner key or element-count mismatch).
+    Mismatch(String),
+    /// Offered version is not greater than the currently published one
+    /// — versions are strictly monotonic per engine.
+    Stale { current: u64, offered: u64 },
+}
+
+impl std::fmt::Display for PublishError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PublishError::Mismatch(m) => write!(f, "snapshot does not match model: {m}"),
+            PublishError::Stale { current, offered } => write!(
+                f,
+                "stale weights version {offered} (currently serving {current}; \
+                 versions are strictly monotonic)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PublishError {}
+
+/// The engine's published-weights cell: workers poll `version` (one
+/// relaxed-cost atomic load per batch) and only take the `slot` lock
+/// when it moved — the hot path never contends with a publish.
+pub(crate) struct SharedWeights {
+    pub(crate) version: AtomicU64,
+    pub(crate) slot: Mutex<Arc<WeightSnapshot>>,
+}
+
+/// A successfully computed output row plus the weights version that
+/// produced it.
+#[derive(Debug)]
+struct Fulfilled {
+    values: Vec<f32>,
+    weights_version: u64,
+}
+
 /// One-shot response slot shared between a request and its handle.
 struct Slot {
-    result: Mutex<Option<Result<Vec<f32>, ServeError>>>,
+    result: Mutex<Option<Result<Fulfilled, ServeError>>>,
     ready: Condvar,
 }
 
@@ -141,8 +192,12 @@ impl ResponseHandle {
         while guard.is_none() {
             guard = self.slot.ready.wait(guard).unwrap();
         }
-        let values = guard.take().expect("checked is_some")?;
-        Ok(Response { values, latency: self.submitted.elapsed() })
+        let done = guard.take().expect("checked is_some")?;
+        Ok(Response {
+            values: done.values,
+            weights_version: done.weights_version,
+            latency: self.submitted.elapsed(),
+        })
     }
 }
 
@@ -151,6 +206,10 @@ impl ResponseHandle {
 pub struct Response {
     /// The model's output row for this sample (post-softmax scores).
     pub values: Vec<f32>,
+    /// Version of the weight snapshot this row was computed from —
+    /// exactly one version per response, never mixed (workers adopt a
+    /// published snapshot only at batch boundaries).
+    pub weights_version: u64,
     /// Submit-to-response wall time as seen by this handle.
     pub latency: Duration,
 }
@@ -178,7 +237,7 @@ pub(crate) struct Request {
 
 impl Request {
     /// Resolve the slot; returns true if this call set the result.
-    fn complete(&self, r: Result<Vec<f32>, ServeError>) -> bool {
+    fn complete(&self, r: Result<Fulfilled, ServeError>) -> bool {
         let mut g = self.slot.result.lock().unwrap();
         if g.is_some() {
             return false;
@@ -189,8 +248,8 @@ impl Request {
         true
     }
 
-    pub(crate) fn fulfill(self, values: Vec<f32>) {
-        self.complete(Ok(values));
+    pub(crate) fn fulfill(self, values: Vec<f32>, weights_version: u64) {
+        self.complete(Ok(Fulfilled { values, weights_version }));
     }
 
     /// Fail the request; accounted in `Metrics::failed` exactly once.
@@ -224,7 +283,12 @@ struct Threads {
 pub struct Engine {
     cfg: EngineConfig,
     deploy: DeployNet,
-    weights: WeightSnapshot,
+    shared: Arc<SharedWeights>,
+    /// The deploy net's parameter schema — identity keys and element
+    /// counts — against which every published snapshot is validated
+    /// (and projected) *before* it can reach a worker.
+    param_keys: Vec<(String, usize)>,
+    param_lens: Vec<usize>,
     output_len: usize,
     submit_q: Arc<SharedQueue<Request>>,
     dispatch_q: Arc<SharedQueue<Batch>>,
@@ -263,6 +327,13 @@ impl Engine {
         drop(out_blob);
         drop(master);
 
+        let param_keys = weights.keys().to_vec();
+        let param_lens = weights.blob_lens();
+        let shared = Arc::new(SharedWeights {
+            version: AtomicU64::new(weights.version()),
+            slot: Mutex::new(Arc::new(weights)),
+        });
+
         let submit_q = Arc::new(SharedQueue::new(cfg.queue_capacity));
         // Small dispatch buffer: enough to keep workers busy, small
         // enough that queueing (and thus latency) stays visible at the
@@ -288,7 +359,7 @@ impl Engine {
             let ctx = worker::WorkerContext {
                 id: wid,
                 deploy: dep.clone(),
-                weights: weights.clone(),
+                weights: shared.clone(),
                 device: cfg.device,
                 intra_op,
                 output_len,
@@ -324,7 +395,9 @@ impl Engine {
         Ok(Engine {
             cfg,
             deploy: dep,
-            weights,
+            shared,
+            param_keys,
+            param_lens,
             output_len,
             submit_q,
             dispatch_q,
@@ -351,9 +424,67 @@ impl Engine {
         &self.deploy
     }
 
-    /// The shared weight snapshot every worker replica serves from.
+    /// The currently published weight snapshot (what workers serve from
+    /// after their next batch boundary).
     pub fn weights(&self) -> WeightSnapshot {
-        self.weights.clone()
+        self.shared.slot.lock().unwrap().as_ref().clone()
+    }
+
+    /// Version of the currently published weight snapshot (0 until the
+    /// first publish — the engine's own initialization weights).
+    pub fn weights_version(&self) -> u64 {
+        self.shared.version.load(Ordering::Acquire)
+    }
+
+    /// Atomically publish a new weight snapshot. The snapshot is
+    /// validated (and, for training-net snapshots with extra params,
+    /// projected) against the deploy net's parameter schema *before*
+    /// the swap, so a bad snapshot can never reach a worker. Each
+    /// worker adopts the new weights at its next batch boundary:
+    /// in-flight batches complete on the old version, no request is
+    /// dropped, and no response ever mixes two versions.
+    ///
+    /// Versions are strictly monotonic. A snapshot with `version() ==
+    /// 0` (unversioned) is assigned `current + 1`; an explicit version
+    /// must be greater than the current one or the publish is refused
+    /// with [`PublishError::Stale`]. `u64::MAX` is reserved (accepting
+    /// it would leave `current + 1` nowhere to go, wedging every later
+    /// auto-versioned publish) and refused as a mismatch. Returns the
+    /// published version.
+    pub fn publish_weights(&self, snap: WeightSnapshot) -> Result<u64, PublishError> {
+        let projected = snap
+            .project(&self.param_keys, &self.param_lens)
+            .map_err(|e| PublishError::Mismatch(format!("{e:#}")))?;
+        let mut slot = self.shared.slot.lock().unwrap();
+        let current = self.shared.version.load(Ordering::Acquire);
+        let offered = projected.version();
+        // u64::MAX is reserved: explicit publishes of it are refused,
+        // and an auto-assignment that would reach it (the version space
+        // is exhausted) fails cleanly here instead of overflowing under
+        // the lock (debug panic would poison it; release wrap-to-0
+        // would wedge every later publish as Stale).
+        let version = if offered == 0 { current.saturating_add(1) } else { offered };
+        if version == u64::MAX {
+            return Err(PublishError::Mismatch(format!(
+                "weights version {} is reserved (max {})",
+                u64::MAX,
+                u64::MAX - 1
+            )));
+        }
+        if version <= current {
+            return Err(PublishError::Stale { current, offered: version });
+        }
+        *slot = Arc::new(projected.with_version(version));
+        // Workers poll `version` without the lock; publish it only once
+        // the slot holds the matching snapshot (still under the lock, so
+        // concurrent publishers serialize). The metrics gauge is also
+        // recorded under the lock — otherwise two racing publishers
+        // could land their `record_publish` calls out of order and
+        // leave `/metrics` reporting an older version than is served.
+        self.shared.version.store(version, Ordering::Release);
+        self.metrics.record_publish(version);
+        drop(slot);
+        Ok(version)
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -484,13 +615,67 @@ mod tests {
     fn resolution_is_first_writer_wins() {
         let metrics = Arc::new(Metrics::new());
         let (req, slot) = mk_request(&metrics);
-        assert!(req.complete(Ok(vec![0.5])));
+        assert!(req.complete(Ok(Fulfilled { values: vec![0.5], weights_version: 3 })));
         assert!(!req.complete(Err(ServeError::Rejected)));
         drop(req);
         assert_eq!(metrics.failed.load(Ordering::Relaxed), 0);
         match slot.result.lock().unwrap().as_ref() {
-            Some(Ok(v)) => assert_eq!(v, &vec![0.5]),
+            Some(Ok(f)) => {
+                assert_eq!(f.values, vec![0.5]);
+                assert_eq!(f.weights_version, 3);
+            }
             other => panic!("expected fulfilled slot, got {other:?}"),
         }
+    }
+
+    /// Stale-version publishes are refused with a message naming both
+    /// versions, and the error display reads well in HTTP bodies.
+    #[test]
+    fn publish_error_display() {
+        let e = PublishError::Stale { current: 5, offered: 5 };
+        let s = e.to_string();
+        assert!(s.contains('5') && s.contains("monotonic"), "{s}");
+        let e = PublishError::Mismatch("layer 'fc' missing".to_string());
+        assert!(e.to_string().contains("fc"));
+    }
+
+    /// u64::MAX is a reserved version: accepting it would leave the
+    /// auto-assigned `current + 1` nowhere to go (overflow in debug,
+    /// permanent Stale in release), wedging the publish path forever.
+    #[test]
+    fn publish_refuses_the_reserved_max_version() {
+        let param = crate::proto::parse_net(
+            r#"
+name: "one"
+input: "data"
+input_shape { dim: 1 dim: 1 dim: 1 dim: 2 }
+layer { name: "fc" type: "InnerProduct" bottom: "data" top: "fc"
+        inner_product_param { num_output: 1 weight_filler { type: "xavier" } } }
+"#,
+        )
+        .unwrap();
+        let engine = Engine::new(
+            &param,
+            EngineConfig { workers: 1, max_batch: 1, ..EngineConfig::default() },
+        )
+        .unwrap();
+        let snap = engine.weights().with_version(u64::MAX);
+        match engine.publish_weights(snap) {
+            Err(PublishError::Mismatch(m)) => assert!(m.contains("reserved"), "{m}"),
+            other => panic!("expected Mismatch for reserved version, got {other:?}"),
+        }
+        // The engine is not wedged: an auto-versioned publish still lands.
+        assert_eq!(engine.publish_weights(engine.weights()).unwrap(), 1);
+        // Version-space exhaustion also fails cleanly: u64::MAX - 1 is
+        // the legal ceiling, and the auto-assignment that would step
+        // past it reports the reserved version instead of overflowing
+        // (which would poison the slot lock in debug builds).
+        let ceiling = engine.weights().with_version(u64::MAX - 1);
+        assert_eq!(engine.publish_weights(ceiling).unwrap(), u64::MAX - 1);
+        match engine.publish_weights(engine.weights().with_version(0)) {
+            Err(PublishError::Mismatch(m)) => assert!(m.contains("reserved"), "{m}"),
+            other => panic!("expected clean exhaustion error, got {other:?}"),
+        }
+        engine.shutdown();
     }
 }

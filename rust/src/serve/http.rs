@@ -20,6 +20,12 @@
 //! GET  /v1/models       model inventory (sample_len/output_len each)
 //! GET  /metrics         per-model serve::Metrics as JSON
 //! GET  /healthz         200 "ok"
+//! POST /admin/models/<name>:publish   {"path": "w.fewts", ...}
+//!   200 {"model","version","tag"?}  weight hot-swap: load a FEWSNAP1
+//!       snapshot file and atomically publish it into the model's
+//!       engine; workers adopt at their next batch boundary
+//!   400 unreadable/mismatched snapshot  404 unknown model
+//!   409 stale version (versions are strictly monotonic)
 //! POST /admin/shutdown  200, then graceful drain — the SIGTERM
 //!                       equivalent (std has no signal handling)
 //! ```
@@ -29,9 +35,10 @@
 //! `serve --target` load generator, the throughput bench and the CI
 //! smoke test reuse, so the whole stack is exercised over real sockets.
 
-use super::engine::ServeError;
+use super::engine::{PublishError, ServeError};
 use super::router::{ModelRouter, RouteError};
 use super::LoadReport;
+use crate::net::WeightSnapshot;
 use crate::util::json::Json;
 use crate::util::prng::Pcg32;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -519,6 +526,8 @@ pub fn status_for(e: &RouteError) -> (u16, &'static str) {
         }
         RouteError::Serve(ServeError::ShuttingDown) => (503, "Service Unavailable"),
         RouteError::Serve(ServeError::Worker(_)) => (500, "Internal Server Error"),
+        RouteError::Publish(PublishError::Mismatch(_)) => (400, "Bad Request"),
+        RouteError::Publish(PublishError::Stale { .. }) => (409, "Conflict"),
     }
 }
 
@@ -550,6 +559,21 @@ fn route(state: &Arc<ServerState>, req: &HttpRequest) -> Reply {
                         return error_reply(405, "Method Not Allowed", "predict requires POST");
                     }
                     return predict(state, model, &req.body);
+                }
+            }
+            if let Some(rest) = path.strip_prefix("/admin/models/") {
+                if let Some((model, action)) = rest.split_once(':') {
+                    if action != "publish" {
+                        return error_reply(
+                            404,
+                            "Not Found",
+                            &format!("unknown admin action '{action}' (have: publish)"),
+                        );
+                    }
+                    if method != "POST" {
+                        return error_reply(405, "Method Not Allowed", "publish requires POST");
+                    }
+                    return publish(state, model, &req.body);
                 }
             }
             error_reply(404, "Not Found", &format!("no route for {method} {path}"))
@@ -608,16 +632,100 @@ fn predict(state: &Arc<ServerState>, model: &str, body: &[u8]) -> Reply {
         }
     }
     let mut predictions = Vec::with_capacity(handles.len());
+    let mut versions: Vec<u64> = Vec::with_capacity(handles.len());
     for h in handles {
         match h.wait() {
-            Ok(resp) => predictions.push(Json::nums(&resp.values)),
+            Ok(resp) => {
+                versions.push(resp.weights_version);
+                predictions.push(Json::nums(&resp.values));
+            }
             Err(e) => return route_error_reply(&RouteError::Serve(e)),
         }
     }
     let mut o = Json::obj();
     o.set("model", Json::str(model));
     o.set("predictions", Json::Arr(predictions));
+    // Each row is computed from exactly one snapshot version.
+    // `weights_version` (the newest across the rows) is always present
+    // — it's part of the documented 200 contract — and when a publish
+    // landed between this request's micro-batches, a per-row
+    // `weights_versions` array is added alongside it.
+    let newest = *versions.iter().max().expect("instances is non-empty");
+    o.set("weights_version", Json::num(newest as f64));
+    if versions.iter().any(|&v| v != newest) {
+        o.set(
+            "weights_versions",
+            Json::arr(versions.iter().map(|&v| Json::num(v as f64))),
+        );
+    }
     ok_json(&o)
+}
+
+/// `POST /admin/models/<name>:publish` — weight hot-swap. Body:
+/// `{"path": "<FEWSNAP1 file>", "version": N?, "tag": "..."?}`; the
+/// optional fields override what the file carries (version 0 in the
+/// file or body means "assign the next version"). The snapshot is
+/// validated against the model's parameter schema before the swap, so a
+/// bad file can never reach a worker.
+fn publish(state: &Arc<ServerState>, model: &str, body: &[u8]) -> Reply {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return error_reply(400, "Bad Request", "body is not UTF-8"),
+    };
+    let json = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => return error_reply(400, "Bad Request", &format!("bad JSON: {e}")),
+    };
+    let Some(path) = json.get("path").and_then(|p| p.as_str()) else {
+        return error_reply(
+            400,
+            "Bad Request",
+            "expected {\"path\": \"<weight snapshot file>\"}",
+        );
+    };
+    let mut snap = match WeightSnapshot::load(path) {
+        Ok(s) => s,
+        Err(e) => {
+            return error_reply(
+                400,
+                "Bad Request",
+                &format!("load snapshot '{path}': {e:#}"),
+            )
+        }
+    };
+    if let Some(v) = json.get("version") {
+        // Validate before the `as u64` cast: a negative value would
+        // silently saturate to 0 ("auto-assign"), masking a client bug
+        // the 400 contract should surface. 9e15 keeps the value inside
+        // f64's exact-integer range.
+        let version = match v.as_f64() {
+            Some(n) if n >= 0.0 && n.fract() == 0.0 && n <= 9.0e15 => n as u64,
+            _ => {
+                return error_reply(
+                    400,
+                    "Bad Request",
+                    "\"version\" must be a non-negative integer",
+                )
+            }
+        };
+        snap = snap.with_version(version);
+    }
+    if let Some(t) = json.get("tag").and_then(|t| t.as_str()) {
+        snap = snap.with_tag(t);
+    }
+    let tag = snap.tag().map(|t| t.to_string());
+    match state.router.publish(model, snap) {
+        Ok(version) => {
+            let mut o = Json::obj();
+            o.set("model", Json::str(model));
+            o.set("version", Json::num(version as f64));
+            if let Some(t) = tag {
+                o.set("tag", Json::str(t));
+            }
+            ok_json(&o)
+        }
+        Err(e) => route_error_reply(&e),
+    }
 }
 
 // ------------------------------------------------------------ client
@@ -816,6 +924,18 @@ mod tests {
         assert_eq!(
             status_for(&RouteError::Serve(ServeError::Worker("boom".into()))).0,
             500
+        );
+        assert_eq!(
+            status_for(&RouteError::Publish(PublishError::Mismatch("len".into()))).0,
+            400
+        );
+        assert_eq!(
+            status_for(&RouteError::Publish(PublishError::Stale {
+                current: 4,
+                offered: 3
+            }))
+            .0,
+            409
         );
     }
 

@@ -96,6 +96,11 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub batched_samples: AtomicU64,
     pub full_batches: AtomicU64,
+    /// Weight publishes accepted by the engine (hot-swaps).
+    pub publishes: AtomicU64,
+    /// Version of the most recently published weight snapshot (0 until
+    /// the first publish — the engine's initialization weights).
+    pub weights_version: AtomicU64,
     pub latency: Histogram,
     /// Per-batch *simulated* device time (FPGA-sim workers only): the
     /// `sim_clock_ns` delta across each batched forward, so batching
@@ -114,6 +119,8 @@ impl Metrics {
             batches: AtomicU64::new(0),
             batched_samples: AtomicU64::new(0),
             full_batches: AtomicU64::new(0),
+            publishes: AtomicU64::new(0),
+            weights_version: AtomicU64::new(0),
             latency: Histogram::new(),
             sim_batch: Histogram::new(),
         }
@@ -140,6 +147,11 @@ impl Metrics {
         self.sim_batch.record(sim_ns);
     }
 
+    pub(crate) fn record_publish(&self, version: u64) {
+        self.publishes.fetch_add(1, Ordering::Relaxed);
+        self.weights_version.store(version, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsReport {
         let batches = self.batches.load(Ordering::Relaxed);
         let samples = self.batched_samples.load(Ordering::Relaxed);
@@ -151,6 +163,8 @@ impl Metrics {
             batches,
             batched_samples: samples,
             full_batches: self.full_batches.load(Ordering::Relaxed),
+            publishes: self.publishes.load(Ordering::Relaxed),
+            weights_version: self.weights_version.load(Ordering::Relaxed),
             mean_batch: if batches == 0 { 0.0 } else { samples as f64 / batches as f64 },
             p50_ns: self.latency.quantile_ns(0.50),
             p95_ns: self.latency.quantile_ns(0.95),
@@ -182,6 +196,9 @@ pub struct MetricsReport {
     pub batches: u64,
     pub batched_samples: u64,
     pub full_batches: u64,
+    /// Accepted weight hot-swaps and the currently published version.
+    pub publishes: u64,
+    pub weights_version: u64,
     pub mean_batch: f64,
     pub p50_ns: f64,
     pub p95_ns: f64,
@@ -210,6 +227,8 @@ impl MetricsReport {
         o.set("batches", Json::num(self.batches as f64));
         o.set("batched_samples", Json::num(self.batched_samples as f64));
         o.set("full_batches", Json::num(self.full_batches as f64));
+        o.set("publishes", Json::num(self.publishes as f64));
+        o.set("weights_version", Json::num(self.weights_version as f64));
         o.set("mean_batch", Json::num(self.mean_batch));
         o.set("p50_ms", Json::num(self.p50_ns / 1e6));
         o.set("p95_ms", Json::num(self.p95_ns / 1e6));
@@ -230,6 +249,7 @@ impl MetricsReport {
         let mut s = format!(
             "requests: {} submitted, {} completed, {} failed, {} rejected\n\
              batches:  {} ({} full), mean size {:.2}\n\
+             weights:  version {} ({} publish(es))\n\
              latency:  p50 {} / p95 {} / p99 {} (mean {}, max {})",
             self.submitted,
             self.completed,
@@ -238,6 +258,8 @@ impl MetricsReport {
             self.batches,
             self.full_batches,
             self.mean_batch,
+            self.weights_version,
+            self.publishes,
             fmt_ns(self.p50_ns),
             fmt_ns(self.p95_ns),
             fmt_ns(self.p99_ns),
@@ -336,6 +358,22 @@ mod tests {
         assert!(back.get("sim_batches").is_none());
         m.record_sim_batch(1_000);
         assert!(m.snapshot().to_json().get("sim_batches").is_some());
+    }
+
+    #[test]
+    fn publish_tracking_surfaces_in_report() {
+        let m = Metrics::new();
+        let r = m.snapshot();
+        assert_eq!((r.publishes, r.weights_version), (0, 0));
+        m.record_publish(3);
+        m.record_publish(4);
+        let r = m.snapshot();
+        assert_eq!(r.publishes, 2);
+        assert_eq!(r.weights_version, 4);
+        assert!(r.render().contains("version 4 (2 publish(es))"), "{}", r.render());
+        let j = r.to_json();
+        assert_eq!(j.get("weights_version").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(j.get("publishes").unwrap().as_usize().unwrap(), 2);
     }
 
     #[test]

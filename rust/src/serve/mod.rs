@@ -35,6 +35,13 @@
 //!   them, and [`http::HttpServer`] puts the whole stack behind a
 //!   std-only HTTP/1.1 front-end (`POST /v1/models/<name>:predict`,
 //!   `GET /metrics`, `GET /healthz`) so load lives outside the process.
+//! * **Weight hot-swap** — [`Engine::publish_weights`] atomically swaps
+//!   a new versioned [`crate::net::WeightSnapshot`] behind the
+//!   admission path (a live training solver is the usual publisher:
+//!   `fecaffe train --serve`, or `POST /admin/models/<name>:publish`
+//!   from a snapshot file). Workers adopt at their next batch boundary,
+//!   so no request is dropped and no response mixes weight versions;
+//!   every response and `/metrics` report carries `weights_version`.
 //!
 //! See the `serve` binary (`cargo run --release --bin serve`) for the
 //! CLI and `benches/serve_throughput.rs` for the standing benchmark.
@@ -49,7 +56,7 @@ mod worker;
 
 pub use batcher::BatcherConfig;
 pub use engine::{
-    DeviceKind, Engine, EngineConfig, Response, ResponseHandle, ServeError,
+    DeviceKind, Engine, EngineConfig, PublishError, Response, ResponseHandle, ServeError,
 };
 pub use http::{http_load_test, http_request, HttpClient, HttpConfig, HttpServer};
 pub use metrics::{Histogram, Metrics, MetricsReport};

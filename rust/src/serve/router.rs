@@ -8,7 +8,10 @@
 //! stays per model: each engine keeps its own bounded queue, so one
 //! overloaded model returns `Overloaded` without starving the others.
 
-use super::engine::{DeviceKind, Engine, EngineConfig, ResponseHandle, ServeError};
+use super::engine::{
+    DeviceKind, Engine, EngineConfig, PublishError, ResponseHandle, ServeError,
+};
+use crate::net::WeightSnapshot;
 use crate::util::json::Json;
 use std::time::Duration;
 
@@ -44,13 +47,16 @@ impl Default for RouterConfig {
     }
 }
 
-/// Why the router refused a submission.
+/// Why the router refused a submission (or a weight publish).
 #[derive(Debug, Clone, PartialEq)]
 pub enum RouteError {
     /// No engine registered under that name.
     UnknownModel(String),
     /// The model's engine refused (overload, shutdown, bad sample).
     Serve(ServeError),
+    /// The model's engine refused a weight publish (schema mismatch or
+    /// stale version).
+    Publish(PublishError),
 }
 
 impl std::fmt::Display for RouteError {
@@ -58,6 +64,7 @@ impl std::fmt::Display for RouteError {
         match self {
             RouteError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
             RouteError::Serve(e) => write!(f, "{e}"),
+            RouteError::Publish(e) => write!(f, "{e}"),
         }
     }
 }
@@ -130,6 +137,17 @@ impl ModelRouter {
         engine.submit(sample).map_err(RouteError::Serve)
     }
 
+    /// Hot-swap `model`'s weights: validate + atomically publish `snap`
+    /// into its engine (`POST /admin/models/<name>:publish`). Workers
+    /// adopt at their next batch boundary; in-flight requests are
+    /// untouched. Returns the published version.
+    pub fn publish(&self, model: &str, snap: WeightSnapshot) -> Result<u64, RouteError> {
+        let engine = self
+            .engine(model)
+            .ok_or_else(|| RouteError::UnknownModel(model.to_string()))?;
+        engine.publish_weights(snap).map_err(RouteError::Publish)
+    }
+
     /// Per-model metrics snapshots as one JSON object (`GET /metrics`).
     pub fn metrics_json(&self) -> Json {
         let mut o = Json::obj();
@@ -149,6 +167,7 @@ impl ModelRouter {
             m.set("output_len", Json::num(engine.output_len() as f64));
             m.set("max_batch", Json::num(engine.config().max_batch as f64));
             m.set("workers", Json::num(engine.config().workers as f64));
+            m.set("weights_version", Json::num(engine.weights_version() as f64));
             arr.push(m);
         }
         let mut o = Json::obj();

@@ -12,9 +12,17 @@
 //! for coalesced traffic and batch-1 for lone requests — so the common
 //! low-occupancy case doesn't pay a full-batch forward per request, and
 //! no net construction ever happens on the serving path.
+//!
+//! **Weight hot-swap**: before executing each popped batch the worker
+//! compares the engine's published weights version (one atomic load)
+//! against the version its replicas carry; on a mismatch it takes the
+//! slot lock once, adopts the new snapshot into *both* replicas, and
+//! only then serves. Adoption is O(1) per blob (`Arc` attach), batches
+//! already popped finish on the version they started with, and every
+//! response is stamped with exactly the version that computed it.
 
 use super::batcher::{gather, scatter, Batch};
-use super::engine::DeviceKind;
+use super::engine::{DeviceKind, SharedWeights};
 use super::metrics::Metrics;
 use super::queue::SharedQueue;
 use crate::device::Device;
@@ -28,7 +36,8 @@ use std::sync::Arc;
 pub(crate) struct WorkerContext {
     pub id: usize,
     pub deploy: DeployNet,
-    pub weights: WeightSnapshot,
+    /// The engine's published-weights cell (version + snapshot slot).
+    pub weights: Arc<SharedWeights>,
     pub device: DeviceKind,
     /// Intra-op threads this worker's kernels may fan out to (the
     /// engine's share of the process budget; see `util::pool`).
@@ -39,6 +48,13 @@ pub(crate) struct WorkerContext {
     pub metrics: Arc<Metrics>,
     /// Workers still able to serve (shared across the pool).
     pub healthy: Arc<AtomicUsize>,
+}
+
+impl WorkerContext {
+    /// Snapshot currently published by the engine (cloned `Arc`).
+    fn current_weights(&self) -> Arc<WeightSnapshot> {
+        self.weights.slot.lock().unwrap().clone()
+    }
 }
 
 /// Retires the worker from `healthy` however the thread exits — clean
@@ -73,12 +89,17 @@ struct Replica {
 }
 
 impl Replica {
-    fn build(ctx: &WorkerContext, batch: usize, dev: &mut dyn Device) -> anyhow::Result<Replica> {
+    fn build(
+        ctx: &WorkerContext,
+        batch: usize,
+        snap: &WeightSnapshot,
+        dev: &mut dyn Device,
+    ) -> anyhow::Result<Replica> {
         let mut param = ctx.deploy.param.clone();
         anyhow::ensure!(!param.inputs.is_empty(), "deploy param has no inputs");
         param.inputs[0].1[0] = batch;
         let mut net = Net::from_param(&param, Phase::Test, dev)?;
-        net.adopt_weights(dev, &ctx.weights)?;
+        net.adopt_weights(dev, snap)?;
         let input = net
             .blob(&ctx.deploy.input)
             .ok_or_else(|| anyhow::anyhow!("input blob '{}' missing", ctx.deploy.input))?;
@@ -88,8 +109,9 @@ impl Replica {
         Ok(Replica { net, input, output, batch })
     }
 
-    /// Execute one coalesced batch and scatter the results.
-    fn serve(&mut self, dev: &mut dyn Device, batch: Batch, ctx: &WorkerContext) {
+    /// Execute one coalesced batch and scatter the results, stamping
+    /// every response with the weights version that computed it.
+    fn serve(&mut self, dev: &mut dyn Device, batch: Batch, ctx: &WorkerContext, version: u64) {
         let k = batch.requests.len();
         let samples: Vec<&[f32]> =
             batch.requests.iter().map(|r| r.sample.as_slice()).collect();
@@ -108,7 +130,7 @@ impl Replica {
                 let rows = scatter(&out, ctx.output_len, k);
                 for (req, row) in batch.requests.into_iter().zip(rows) {
                     let ns = req.submitted.elapsed().as_nanos() as u64;
-                    req.fulfill(row);
+                    req.fulfill(row, version);
                     ctx.metrics.record_done(ns);
                 }
             }
@@ -140,8 +162,10 @@ pub(crate) fn run(ctx: WorkerContext) {
     // serving path. The full-batch replica is mandatory (the guard
     // retires this worker if it fails); the batch-1 replica is a
     // fast-path optimization and its absence only costs padding.
+    let snap = ctx.current_weights();
+    let mut version = snap.version();
     let max_batch = ctx.deploy.batch;
-    let mut full = match Replica::build(&ctx, max_batch, dev.as_mut()) {
+    let mut full = match Replica::build(&ctx, max_batch, &snap, dev.as_mut()) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("[serve] worker {}: replica build failed: {e:#}", ctx.id);
@@ -149,7 +173,7 @@ pub(crate) fn run(ctx: WorkerContext) {
         }
     };
     let mut single = if max_batch > 1 {
-        match Replica::build(&ctx, 1, dev.as_mut()) {
+        match Replica::build(&ctx, 1, &snap, dev.as_mut()) {
             Ok(r) => Some(r),
             Err(e) => {
                 eprintln!(
@@ -163,12 +187,55 @@ pub(crate) fn run(ctx: WorkerContext) {
     } else {
         None
     };
+    drop(snap);
 
     while let Some(batch) = ctx.queue.pop() {
+        // Batch boundary: adopt a newly published snapshot before
+        // executing. One relaxed-cost atomic load in the common case;
+        // the slot lock is only taken when the version actually moved.
+        if ctx.weights.version.load(Ordering::Acquire) != version {
+            let snap = ctx.current_weights();
+            // Adopt the batch-1 fast path first: if it can't follow the
+            // swap, drop it rather than risk serving two versions from
+            // one worker. (The engine validated the snapshot against
+            // the shared schema, so failures here indicate a bug, not
+            // bad input.)
+            let mut drop_single = false;
+            if let Some(s) = single.as_mut() {
+                if let Err(e) = s.net.adopt_weights(dev.as_mut(), &snap) {
+                    eprintln!(
+                        "[serve] worker {}: batch-1 replica failed to adopt weights v{}: \
+                         {e:#}; dropping the fast path",
+                        ctx.id,
+                        snap.version()
+                    );
+                    drop_single = true;
+                }
+            }
+            if drop_single {
+                single = None;
+            }
+            match full.net.adopt_weights(dev.as_mut(), &snap) {
+                Ok(()) => version = snap.version(),
+                Err(e) => {
+                    eprintln!(
+                        "[serve] worker {}: failed to adopt weights v{}: {e:#}; \
+                         still serving v{version}",
+                        ctx.id,
+                        snap.version()
+                    );
+                    // The batch-1 replica may already carry the new
+                    // weights — drop it so this worker can't serve two
+                    // versions at once (padding to full batch is the
+                    // only cost).
+                    single = None;
+                }
+            }
+        }
         let replica = match (&mut single, batch.requests.len()) {
             (Some(s), 1) => s,
             _ => &mut full,
         };
-        replica.serve(dev.as_mut(), batch, &ctx);
+        replica.serve(dev.as_mut(), batch, &ctx, version);
     }
 }

@@ -14,7 +14,7 @@
 pub mod snapshot;
 
 use crate::device::{BufId, Device, Kernel, KernelCall};
-use crate::net::Net;
+use crate::net::{Net, WeightSnapshot};
 use crate::proto::{SolverKind, SolverParameter};
 
 pub struct Solver {
@@ -116,6 +116,23 @@ impl Solver {
 
     /// Run `iters` iterations with Caffe-style display logging.
     pub fn solve(&mut self, dev: &mut dyn Device, iters: usize) -> anyhow::Result<()> {
+        self.solve_with_publish(dev, iters, 0, &mut |_| Ok(()))
+    }
+
+    /// [`Solver::solve`] with a weight-publish hook: every
+    /// `publish_every` iterations (0 = never) the current weights are
+    /// exported as a [`WeightSnapshot`] and handed to `publish` — the
+    /// train-and-serve loop, where the callback feeds a running
+    /// `serve::Engine` (`fecaffe train --serve`). Export is O(1) per
+    /// blob (host vectors move behind `Arc`s; the next update step
+    /// detaches copy-on-write), so publishing barely perturbs training.
+    pub fn solve_with_publish(
+        &mut self,
+        dev: &mut dyn Device,
+        iters: usize,
+        publish_every: usize,
+        publish: &mut dyn FnMut(WeightSnapshot) -> anyhow::Result<()>,
+    ) -> anyhow::Result<()> {
         for _ in 0..iters {
             let loss = self.step(dev)?;
             if self.param.display > 0 && self.iter % self.param.display == 0 {
@@ -126,8 +143,21 @@ impl Solver {
                 let path = format!("{}_iter_{}.fecaffemodel", self.param.snapshot_prefix, self.iter);
                 snapshot::save(&path, self, dev)?;
             }
+            if publish_every > 0 && self.iter % publish_every == 0 {
+                publish(self.export_weights(dev))?;
+            }
         }
         Ok(())
+    }
+
+    /// Export the training net's current weights as a publishable
+    /// snapshot, tagged with the iteration. The version is left at 0
+    /// ("unversioned") so a receiving engine assigns the next monotonic
+    /// version — publish cadence and engine versioning stay decoupled.
+    pub fn export_weights(&mut self, dev: &mut dyn Device) -> WeightSnapshot {
+        self.net
+            .share_weights(dev)
+            .with_tag(format!("iter-{}", self.iter))
     }
 
     /// Normalize → regularize → clip → compute-update, all on-device.
@@ -367,6 +397,44 @@ layer { name: "loss" type: "SoftmaxWithLoss" bottom: "fc" bottom: "label" top: "
         let mut sp = SolverParameter::default();
         sp.lr_policy = "nope".into();
         assert!(Solver::new(sp, net, &mut dev).is_err());
+    }
+
+    #[test]
+    fn publish_hook_fires_on_cadence() {
+        let mut dev = CpuDevice::new();
+        let mut s = mk_solver("SGD", &mut dev);
+        let mut published: Vec<(usize, String)> = Vec::new();
+        s.solve_with_publish(&mut dev, 10, 3, &mut |snap| {
+            published.push((snap.len(), snap.tag().unwrap_or("").to_string()));
+            Ok(())
+        })
+        .unwrap();
+        // Iterations 3, 6 and 9 publish; each snapshot covers both fc
+        // param blobs (weight + bias).
+        let tags: Vec<&str> = published.iter().map(|(_, t)| t.as_str()).collect();
+        assert_eq!(tags, vec!["iter-3", "iter-6", "iter-9"]);
+        assert!(published.iter().all(|(n, _)| *n == 2), "{published:?}");
+        assert_eq!(s.iter, 10);
+    }
+
+    #[test]
+    fn exported_weights_are_immutable_under_further_training() {
+        let mut dev = CpuDevice::new();
+        let mut s = mk_solver("SGD", &mut dev);
+        s.step(&mut dev).unwrap();
+        let snap = s.export_weights(&mut dev);
+        assert_eq!(snap.tag(), Some("iter-1"));
+        assert_eq!(snap.version(), 0, "solver snapshots are engine-versioned");
+        let frozen: Vec<f32> = snap.blob_data(0).unwrap().to_vec();
+        // Training on must not write through the exported Arc (the
+        // solver's update detaches copy-on-write)...
+        for _ in 0..5 {
+            s.step(&mut dev).unwrap();
+        }
+        assert_eq!(snap.blob_data(0).unwrap(), frozen.as_slice());
+        // ...while the solver's live weights have moved past it.
+        let live = s.export_weights(&mut dev);
+        assert_ne!(live.blob_data(0).unwrap(), frozen.as_slice());
     }
 
     #[test]

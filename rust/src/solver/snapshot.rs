@@ -8,37 +8,12 @@
 
 use super::Solver;
 use crate::device::Device;
+use crate::util::binio::{get_f32s, get_u32, put_f32s, put_u32};
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"FECAFFE1";
-
-fn put_u32(w: &mut impl Write, v: u32) -> std::io::Result<()> {
-    w.write_all(&v.to_le_bytes())
-}
-
-fn put_f32s(w: &mut impl Write, vs: &[f32]) -> std::io::Result<()> {
-    for v in vs {
-        w.write_all(&v.to_le_bytes())?;
-    }
-    Ok(())
-}
-
-fn get_u32(r: &mut impl Read) -> std::io::Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
-fn get_f32s(r: &mut impl Read, n: usize) -> std::io::Result<Vec<f32>> {
-    let mut bytes = vec![0u8; n * 4];
-    r.read_exact(&mut bytes)?;
-    Ok(bytes
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
-}
 
 pub fn save(path: impl AsRef<Path>, solver: &Solver, dev: &mut dyn Device) -> anyhow::Result<()> {
     if let Some(dir) = path.as_ref().parent() {

@@ -1,0 +1,107 @@
+//! Little-endian binary IO helpers shared by the on-disk containers:
+//! the solver's `FECAFFE1` training snapshot (`solver::snapshot`) and
+//! the serving engine's `FEWSNAP1` weight snapshot
+//! (`net::WeightSnapshot::{save, load}`). One copy of the format
+//! plumbing, so endianness and error handling can't drift between the
+//! two.
+
+use std::io::{Read, Write};
+
+pub fn put_u32(w: &mut impl Write, v: u32) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+pub fn put_u64(w: &mut impl Write, v: u64) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+pub fn put_f32s(w: &mut impl Write, vs: &[f32]) -> std::io::Result<()> {
+    for v in vs {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// u32 length prefix + raw UTF-8 bytes.
+pub fn put_str(w: &mut impl Write, s: &str) -> std::io::Result<()> {
+    put_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())
+}
+
+pub fn get_u32(r: &mut impl Read) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn get_u64(r: &mut impl Read) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub fn get_f32s(r: &mut impl Read, n: usize) -> std::io::Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Counterpart of [`put_str`]; fails on non-UTF-8 bytes. `max_len`
+/// bounds the length prefix *before* the allocation, so a corrupt
+/// container can't request gigabytes — pass the container's total size
+/// (or a tighter format-specific cap).
+pub fn get_str(r: &mut impl Read, max_len: usize) -> anyhow::Result<String> {
+    let len = get_u32(r)? as usize;
+    anyhow::ensure!(
+        len <= max_len,
+        "string length {len} exceeds container bound {max_len}"
+    );
+    let mut bytes = vec![0u8; len];
+    r.read_exact(&mut bytes)?;
+    String::from_utf8(bytes).map_err(|_| anyhow::anyhow!("non-utf8 string in container"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 0xDEAD_BEEF).unwrap();
+        put_u64(&mut buf, u64::MAX - 1).unwrap();
+        put_str(&mut buf, "iter-42").unwrap();
+        put_f32s(&mut buf, &[1.5, -0.25, f32::MIN_POSITIVE]).unwrap();
+        let mut r = buf.as_slice();
+        assert_eq!(get_u32(&mut r).unwrap(), 0xDEAD_BEEF);
+        assert_eq!(get_u64(&mut r).unwrap(), u64::MAX - 1);
+        assert_eq!(get_str(&mut r, 64).unwrap(), "iter-42");
+        assert_eq!(
+            get_f32s(&mut r, 3).unwrap(),
+            vec![1.5, -0.25, f32::MIN_POSITIVE]
+        );
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn truncated_reads_error() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 7).unwrap();
+        let mut r = &buf[..2];
+        assert!(get_u32(&mut r).is_err());
+        let mut r = buf.as_slice();
+        assert!(get_f32s(&mut r, 2).is_err());
+    }
+
+    #[test]
+    fn get_str_refuses_lengths_over_the_bound_before_allocating() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, u32::MAX).unwrap(); // bogus 4 GiB length prefix
+        let mut r = buf.as_slice();
+        let err = get_str(&mut r, 1024).unwrap_err().to_string();
+        assert!(err.contains("exceeds container bound"), "{err}");
+    }
+}

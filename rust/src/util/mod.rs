@@ -3,6 +3,7 @@
 //! bench statistics and the property-test harness are all built here —
 //! see DESIGN.md §10).
 
+pub mod binio;
 pub mod prng;
 pub mod json;
 pub mod cli;

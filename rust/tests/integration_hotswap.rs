@@ -1,0 +1,348 @@
+//! Integration: weight hot-swap semantics, end to end.
+//!
+//! The contract under test (ROADMAP "Weight hot-swap"):
+//!
+//! * `Engine::publish_weights` is atomic — under concurrent predict +
+//!   publish load, every response is computed from exactly one snapshot
+//!   version (old or new, never mixed), proven by making each version's
+//!   weights produce a distinct, exactly-predictable output;
+//! * no request is ever dropped or failed by a publish;
+//! * after a publish returns and the queue drains, all subsequent
+//!   responses report the new version;
+//! * a live training solver publishes straight into a running engine
+//!   (the paper's train-and-serve-in-one-framework claim);
+//! * training-net snapshots project onto deploy nets that pruned
+//!   param-carrying layers (GoogLeNet-style aux heads);
+//! * bad snapshots are refused before they can reach a worker.
+
+use fecaffe::device::cpu::CpuDevice;
+use fecaffe::net::{Net, WeightSnapshot};
+use fecaffe::proto::{parse_net, NetParameter, Phase, SolverParameter};
+use fecaffe::serve::{DeviceKind, Engine, EngineConfig, PublishError};
+use fecaffe::solver::Solver;
+use fecaffe::zoo;
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// Deploy-style net whose output is a pure linear map of the weights:
+/// with every parameter set to the constant `c`, the output is exactly
+/// predictable, so a response proves which snapshot computed it.
+const SWAP_NET: &str = r#"
+name: "swapnet"
+input: "data"
+input_shape { dim: 1 dim: 1 dim: 1 dim: 4 }
+layer { name: "fc" type: "InnerProduct" bottom: "data" top: "fc"
+        inner_product_param { num_output: 2 weight_filler { type: "xavier" } } }
+"#;
+
+/// Train_val net with an auxiliary classifier branch: the deploy
+/// transform prunes layer "aux" (no path to the output), so its params
+/// exist in training snapshots but not in the serving engine.
+const AUX_NET: &str = r#"
+name: "auxnet"
+layer { name: "data" type: "SyntheticData" top: "data" top: "label"
+        data_param { batch_size: 2 channels: 1 height: 4 width: 4 num_classes: 3 source: "digits" seed: 2 } }
+layer { name: "trunk" type: "InnerProduct" bottom: "data" top: "trunk"
+        inner_product_param { num_output: 6 weight_filler { type: "xavier" } } }
+layer { name: "aux" type: "InnerProduct" bottom: "trunk" top: "aux"
+        inner_product_param { num_output: 3 weight_filler { type: "xavier" } } }
+layer { name: "aux_loss" type: "SoftmaxWithLoss" bottom: "aux" bottom: "label" top: "aux_loss" }
+layer { name: "main" type: "InnerProduct" bottom: "trunk" top: "main"
+        inner_product_param { num_output: 3 weight_filler { type: "xavier" } } }
+layer { name: "main_loss" type: "SoftmaxWithLoss" bottom: "main" bottom: "label" top: "main_loss" }
+"#;
+
+fn engine_for(param: &NetParameter, workers: usize, max_batch: usize) -> Engine {
+    Engine::new(
+        param,
+        EngineConfig {
+            workers,
+            max_batch,
+            max_linger: Duration::from_micros(500),
+            queue_capacity: 256,
+            device: DeviceKind::Cpu,
+            intra_op_threads: 1,
+        },
+    )
+    .unwrap()
+}
+
+/// Snapshot of `param`'s net with every parameter set to `c`.
+fn constant_snapshot(param: &NetParameter, c: f32, version: u64) -> WeightSnapshot {
+    let mut dev = CpuDevice::new();
+    let mut net = Net::from_param(param, Phase::Test, &mut dev).unwrap();
+    for p in net.params() {
+        let blob = p.blob.clone();
+        let mut b = blob.borrow_mut();
+        for w in b.data.host_data_mut(&mut dev).iter_mut() {
+            *w = c;
+        }
+    }
+    net.share_weights(&mut dev).with_version(version)
+}
+
+/// Reference forward: a fresh replica adopting `snap`, fed `input`.
+fn forward_with(param: &NetParameter, snap: &WeightSnapshot, input: &[f32]) -> Vec<f32> {
+    let mut dev = CpuDevice::new();
+    let mut net = Net::from_param(param, Phase::Test, &mut dev).unwrap();
+    net.adopt_weights(&mut dev, snap).unwrap();
+    let in_blob = net.blob("data").unwrap();
+    in_blob.borrow_mut().set_data(&mut dev, input);
+    net.forward(&mut dev).unwrap();
+    let out = net.blob("fc").unwrap();
+    let v = out.borrow_mut().data_vec(&mut dev);
+    v
+}
+
+/// The core guarantee: under concurrent predict + publish traffic every
+/// response is computed from exactly one snapshot version — its values
+/// must match that version's reference output bit for bit — and no
+/// request fails or is dropped.
+#[test]
+fn concurrent_publish_never_mixes_weight_versions() {
+    const LAST: u64 = 6;
+    let param = parse_net(SWAP_NET).unwrap();
+    let engine = engine_for(&param, 2, 4);
+    let input = vec![1.0f32; engine.sample_len()];
+
+    let mut snaps: HashMap<u64, WeightSnapshot> = HashMap::new();
+    let mut expected: HashMap<u64, Vec<f32>> = HashMap::new();
+    for v in 1..=LAST {
+        let snap = constant_snapshot(&param, v as f32, v);
+        expected.insert(v, forward_with(&param, &snap, &input));
+        snaps.insert(v, snap);
+    }
+    // Distinct weights must give distinct outputs, or the test is vacuous.
+    assert_ne!(expected[&1], expected[&2]);
+
+    // Publish v1 before any traffic: every response from here on is
+    // computed from a *published* version, never the engine's own init.
+    assert_eq!(engine.publish_weights(snaps[&1].clone()).unwrap(), 1);
+
+    let total_per_client = 60;
+    std::thread::scope(|scope| {
+        let publisher = scope.spawn(|| {
+            for v in 2..=LAST {
+                std::thread::sleep(Duration::from_millis(8));
+                let got = engine.publish_weights(snaps[&v].clone()).unwrap();
+                assert_eq!(got, v);
+            }
+        });
+        let clients: Vec<_> = (0..4)
+            .map(|_| {
+                let input = input.clone();
+                let engine = &engine;
+                let expected = &expected;
+                scope.spawn(move || {
+                    let mut seen = Vec::new();
+                    for _ in 0..total_per_client {
+                        let h = match engine.submit(input.clone()) {
+                            Ok(h) => h,
+                            Err(e) => panic!("submit failed under publish load: {e}"),
+                        };
+                        let resp = h.wait().expect("response under publish load");
+                        let want = expected.get(&resp.weights_version).unwrap_or_else(|| {
+                            panic!("response claims unpublished version {}", resp.weights_version)
+                        });
+                        assert_eq!(
+                            &resp.values, want,
+                            "version {} response does not match that version's weights \
+                             (mixed snapshot?)",
+                            resp.weights_version
+                        );
+                        seen.push(resp.weights_version);
+                    }
+                    seen
+                })
+            })
+            .collect();
+        publisher.join().unwrap();
+        let all: Vec<u64> = clients
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        // Versions only move forward per client stream overall: the
+        // engine-wide published version is monotonic, and each response
+        // carries some published version.
+        assert!(all.iter().all(|v| (1..=LAST).contains(v)), "{all:?}");
+    });
+
+    // The publisher finished before the clients stopped submitting, so
+    // the queue has drained past the last publish: from here every
+    // response must be on the final version.
+    let resp = engine.submit(input.clone()).unwrap().wait().unwrap();
+    assert_eq!(resp.weights_version, LAST);
+    assert_eq!(resp.values, expected[&LAST]);
+
+    engine.shutdown();
+    let m = engine.metrics().snapshot();
+    assert_eq!(m.failed, 0, "no request may fail across hot-swaps");
+    assert_eq!(m.completed, 4 * total_per_client as u64 + 1);
+    assert_eq!(m.weights_version, LAST);
+    assert_eq!(m.publishes, LAST);
+}
+
+/// Solver → engine: a live training loop publishes into a running
+/// engine via the `publish_every` hook; the served responses equal a
+/// reference forward through the solver's exported weights.
+#[test]
+fn solver_publishes_into_live_engine() {
+    let param = zoo::by_name("lenet", 2).unwrap();
+    let engine = engine_for(&param, 1, 2);
+
+    let mut dev = CpuDevice::new();
+    let net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+    let mut sp = SolverParameter::default();
+    sp.base_lr = 0.01;
+    sp.display = 0;
+    let mut solver = Solver::new(sp, net, &mut dev).unwrap();
+
+    // 6 iterations, publishing every 2: versions 1, 2, 3 (the engine
+    // assigns them; solver snapshots are tagged with the iteration).
+    let mut published = Vec::new();
+    solver
+        .solve_with_publish(&mut dev, 6, 2, &mut |snap| {
+            assert!(snap.tag().unwrap().starts_with("iter-"));
+            published.push(engine.publish_weights(snap)?);
+            Ok(())
+        })
+        .unwrap();
+    assert_eq!(published, vec![1, 2, 3]);
+    assert_eq!(engine.weights_version(), 3);
+
+    // A request served now must be computed from the solver's latest
+    // published weights: compare against a batch-1 deploy replica
+    // adopting the engine's current snapshot.
+    let sample: Vec<f32> = (0..engine.sample_len()).map(|i| (i % 7) as f32 / 7.0).collect();
+    let resp = engine.submit(sample.clone()).unwrap().wait().unwrap();
+    assert_eq!(resp.weights_version, 3);
+
+    let deploy = zoo::deploy(&param, 1).unwrap();
+    let mut dev_r = CpuDevice::new();
+    let mut replica = Net::from_param(&deploy.param, Phase::Test, &mut dev_r).unwrap();
+    replica.adopt_weights(&mut dev_r, &engine.weights()).unwrap();
+    let in_blob = replica.blob(&deploy.input).unwrap();
+    in_blob.borrow_mut().set_data(&mut dev_r, &sample);
+    replica.forward(&mut dev_r).unwrap();
+    let out = replica.blob(&deploy.output).unwrap();
+    let want = out.borrow_mut().data_vec(&mut dev_r);
+    assert_eq!(resp.values, want, "served row must equal the published weights' forward");
+
+    engine.shutdown();
+}
+
+/// A training-net snapshot with pruned-at-deploy extra params (aux
+/// classifier head) publishes cleanly: the engine projects it onto the
+/// deploy schema by (owner, slot) key.
+#[test]
+fn training_snapshot_projects_past_pruned_aux_head() {
+    let param = parse_net(AUX_NET).unwrap();
+    let engine = engine_for(&param, 1, 2);
+
+    // The training net carries 6 param blobs (trunk, aux, main × w/b);
+    // the deploy net pruned "aux", keeping 4.
+    let mut dev = CpuDevice::new();
+    let mut train = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+    let snap = train.share_weights(&mut dev);
+    assert_eq!(snap.len(), 6);
+    assert_eq!(engine.weights().len(), 4);
+
+    let v = engine.publish_weights(snap).unwrap();
+    assert_eq!(v, 1);
+    let published = engine.weights();
+    assert_eq!(published.len(), 4, "projection keeps only deploy params");
+    assert!(
+        published.keys().iter().all(|(owner, _)| owner != "aux"),
+        "aux params must be projected out: {:?}",
+        published.keys()
+    );
+
+    // Traffic is served from the projected snapshot without issue.
+    let resp = engine
+        .submit(vec![0.5; engine.sample_len()])
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(resp.weights_version, 1);
+    assert_eq!(resp.values.len(), engine.output_len());
+    engine.shutdown();
+    assert_eq!(engine.metrics().snapshot().failed, 0);
+}
+
+/// Publish rejections: schema mismatches are refused before the swap
+/// (and never reach a worker), stale versions are refused for
+/// monotonicity, and a failed publish leaves the served version alone.
+#[test]
+fn bad_publishes_are_refused_and_change_nothing() {
+    let param = parse_net(SWAP_NET).unwrap();
+    let engine = engine_for(&param, 1, 2);
+
+    // Empty snapshot: missing every param.
+    match engine.publish_weights(WeightSnapshot::default()) {
+        Err(PublishError::Mismatch(_)) => {}
+        other => panic!("expected Mismatch, got {other:?}"),
+    }
+    // Wrong net entirely (param names differ).
+    let other_param = parse_net(AUX_NET).unwrap();
+    let mut dev = CpuDevice::new();
+    let mut other = Net::from_param(&other_param, Phase::Train, &mut dev).unwrap();
+    match engine.publish_weights(other.share_weights(&mut dev)) {
+        Err(PublishError::Mismatch(_)) => {}
+        other => panic!("expected Mismatch, got {other:?}"),
+    }
+
+    // Good publish at v5, then anything ≤ 5 is stale.
+    let snap = constant_snapshot(&param, 1.0, 5);
+    assert_eq!(engine.publish_weights(snap.clone()).unwrap(), 5);
+    match engine.publish_weights(snap.clone().with_version(5)) {
+        Err(PublishError::Stale { current: 5, offered: 5 }) => {}
+        other => panic!("expected Stale, got {other:?}"),
+    }
+    match engine.publish_weights(snap.clone().with_version(3)) {
+        Err(PublishError::Stale { current: 5, offered: 3 }) => {}
+        other => panic!("expected Stale, got {other:?}"),
+    }
+    // Unversioned snapshots auto-advance past the failures.
+    assert_eq!(engine.publish_weights(snap.with_version(0)).unwrap(), 6);
+    assert_eq!(engine.weights_version(), 6);
+
+    // The engine still serves, on the surviving version.
+    let resp = engine
+        .submit(vec![1.0; engine.sample_len()])
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(resp.weights_version, 6);
+    engine.shutdown();
+}
+
+/// A closed-loop load test with publishes landing mid-stream completes
+/// every request: zero failures, zero drops (the acceptance bar for the
+/// hot-swap path).
+#[test]
+fn load_test_with_publishes_has_zero_failures() {
+    let param = parse_net(SWAP_NET).unwrap();
+    let engine = engine_for(&param, 2, 8);
+    let total = 300;
+    let report = std::thread::scope(|scope| {
+        let publisher = scope.spawn(|| {
+            for v in 1..=10u64 {
+                std::thread::sleep(Duration::from_millis(3));
+                engine
+                    .publish_weights(constant_snapshot(&param, v as f32, v))
+                    .unwrap();
+            }
+        });
+        let report = fecaffe::serve::load_test(&engine, 4, total, 99);
+        publisher.join().unwrap();
+        report
+    });
+    engine.shutdown();
+    assert_eq!(report.failed, 0, "publishes must not fail requests");
+    assert_eq!(report.requests, total as u64);
+    let m = engine.metrics().snapshot();
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.completed, total as u64);
+    assert_eq!(m.publishes, 10);
+    assert_eq!(m.weights_version, 10);
+}

@@ -238,6 +238,129 @@ layer { name: "loss" type: "SoftmaxWithLoss" bottom: "fc3" bottom: "label" top: 
     server.shutdown();
 }
 
+/// `POST /admin/models/<name>:publish` — the weight hot-swap endpoint:
+/// loads a FEWSNAP1 file, publishes it, and the predict / metrics /
+/// inventory surfaces all report the new `weights_version`. The error
+/// contract (400 bad file, 404 unknown model/action, 405 wrong method,
+/// 409 stale version) is pinned here and in the README.
+#[test]
+fn publish_endpoint_hot_swaps_weights() {
+    use fecaffe::device::cpu::CpuDevice;
+    use fecaffe::net::Net;
+    use fecaffe::proto::Phase;
+
+    let router = Arc::new(
+        ModelRouter::from_engines(vec![("lenet".to_string(), lenet_engine())]).unwrap(),
+    );
+    let server = HttpServer::bind("127.0.0.1:0", router, HttpConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // Baseline predict: engine-initialized weights are version 0.
+    let body = predict_body(&[vec![0.25; 784]]);
+    let (status, resp) =
+        http_request(&addr, "POST", "/v1/models/lenet:predict", body.as_bytes()).unwrap();
+    assert_eq!(status, 200);
+    let v0 = parse_json(&resp);
+    assert_eq!(v0.get("weights_version").unwrap().as_usize().unwrap(), 0);
+
+    // Write a versioned snapshot file and publish it into the engine.
+    let snap_path = std::env::temp_dir().join("fecaffe_http_publish_test.fewts");
+    let param = zoo::by_name("lenet", 1).unwrap();
+    let mut dev = CpuDevice::new();
+    let mut net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+    net.share_weights(&mut dev)
+        .with_version(3)
+        .with_tag("golden")
+        .save(&snap_path)
+        .unwrap();
+    let mut pb = Json::obj();
+    pb.set("path", Json::str(snap_path.to_str().unwrap()));
+    let (status, resp) = http_request(
+        &addr,
+        "POST",
+        "/admin/models/lenet:publish",
+        pb.to_string().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+    let j = parse_json(&resp);
+    assert_eq!(j.get("model").unwrap().as_str().unwrap(), "lenet");
+    assert_eq!(j.get("version").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(j.get("tag").unwrap().as_str().unwrap(), "golden");
+
+    // Predict now reports the new version (publish returned before the
+    // submit, so the worker adopted at the batch boundary in between).
+    let (status, resp) =
+        http_request(&addr, "POST", "/v1/models/lenet:predict", body.as_bytes()).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(
+        parse_json(&resp).get("weights_version").unwrap().as_usize().unwrap(),
+        3
+    );
+
+    // Metrics and the model inventory surface the version too.
+    let (_, m) = http_request(&addr, "GET", "/metrics", b"").unwrap();
+    let m = parse_json(&m);
+    let lenet = m.get("lenet").unwrap();
+    assert_eq!(lenet.get("weights_version").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(lenet.get("publishes").unwrap().as_usize().unwrap(), 1);
+    let (_, inv) = http_request(&addr, "GET", "/v1/models", b"").unwrap();
+    let inv = parse_json(&inv);
+    let model = &inv.get("models").unwrap().as_arr().unwrap()[0];
+    assert_eq!(model.get("weights_version").unwrap().as_usize().unwrap(), 3);
+
+    // Error contract.
+    let (status, _) = http_request(
+        &addr,
+        "POST",
+        "/admin/models/lenet:publish",
+        pb.to_string().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(status, 409, "republishing version 3 must be stale");
+    let (status, _) = http_request(
+        &addr,
+        "POST",
+        "/admin/models/resnet:publish",
+        pb.to_string().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(status, 404);
+    let mut bad = Json::obj();
+    bad.set("path", Json::str("/nonexistent/weights.fewts"));
+    let (status, _) = http_request(
+        &addr,
+        "POST",
+        "/admin/models/lenet:publish",
+        bad.to_string().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(status, 400);
+    let (status, _) =
+        http_request(&addr, "POST", "/admin/models/lenet:publish", b"{}").unwrap();
+    assert_eq!(status, 400, "missing path field");
+    let mut neg = Json::obj();
+    neg.set("path", Json::str(snap_path.to_str().unwrap()));
+    neg.set("version", Json::num(-3.0));
+    let (status, _) = http_request(
+        &addr,
+        "POST",
+        "/admin/models/lenet:publish",
+        neg.to_string().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(status, 400, "negative version must be rejected, not saturated to 0");
+    let (status, _) =
+        http_request(&addr, "GET", "/admin/models/lenet:publish", b"").unwrap();
+    assert_eq!(status, 405);
+    let (status, _) =
+        http_request(&addr, "POST", "/admin/models/lenet:republish", b"{}").unwrap();
+    assert_eq!(status, 404);
+
+    server.shutdown();
+    let _ = std::fs::remove_file(snap_path);
+}
+
 #[test]
 fn engines_down_returns_503_and_admin_shutdown_drains() {
     let router = Arc::new(

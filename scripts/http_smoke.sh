@@ -1,15 +1,21 @@
 #!/usr/bin/env bash
 # HTTP serving smoke test: start `serve --http` on an ephemeral port,
 # hit healthz/predict/metrics through the binary's own load-generator
-# path, then assert a clean drain on the SIGTERM-equivalent shutdown
-# (POST /admin/shutdown). CI runs this after a release build.
+# path, hot-swap a weight snapshot mid-load (zero failed requests,
+# weights_version must advance), then assert a clean drain on the
+# SIGTERM-equivalent shutdown (POST /admin/shutdown). CI runs this
+# after a release build.
 set -euo pipefail
 
 SERVE="${SERVE:-target/release/serve}"
+FECAFFE="${FECAFFE:-target/release/fecaffe}"
 LOG="$(mktemp)"
-trap 'kill "$SERVER_PID" 2>/dev/null || true; rm -f "$LOG"' EXIT
+SNAP="$(mktemp -u).fewts"
+LOADJSON="$(mktemp)"
+trap 'kill "$SERVER_PID" 2>/dev/null || true; rm -f "$LOG" "$SNAP" "$LOADJSON"' EXIT
 
 [ -x "$SERVE" ] || { echo "serve binary not found at $SERVE (set SERVE=...)"; exit 1; }
+[ -x "$FECAFFE" ] || { echo "fecaffe binary not found at $FECAFFE (set FECAFFE=...)"; exit 1; }
 
 "$SERVE" --http 127.0.0.1:0 --models lenet --workers 2 --max-batch 8 >"$LOG" 2>&1 &
 SERVER_PID=$!
@@ -38,6 +44,38 @@ curl -sf "http://$ADDR/metrics" | grep -q '"completed"' || fail "metrics"
 CODE="$(curl -s -o /dev/null -w '%{http_code}' -X POST \
     -d '{"instances": [[0]]}' "http://$ADDR/v1/models/resnet:predict")"
 [ "$CODE" = "404" ] || fail "expected 404 for unknown model, got $CODE"
+
+# --- Weight hot-swap under load -------------------------------------
+# Export a versioned snapshot file, publish it while the load generator
+# is mid-run, and require (a) zero failed requests across the swap and
+# (b) weights_version advancing to the published version in /metrics.
+"$FECAFFE" weights --net lenet --version 7 --tag smoke --out "$SNAP" \
+    || fail "fecaffe weights export"
+curl -sf "http://$ADDR/metrics" | grep -q '"weights_version": 0' \
+    || fail "expected weights_version 0 before publish"
+
+# A long enough run that the publish provably lands mid-load (checked
+# below: the generator must still be running after the publish returns).
+"$SERVE" --target "$ADDR" --net lenet --requests 2048 --clients 4 \
+    --json "$LOADJSON" >/dev/null 2>&1 &
+LOAD_PID=$!
+sleep 0.2
+PUB="$(curl -s -X POST -d "{\"path\": \"$SNAP\"}" \
+    "http://$ADDR/admin/models/lenet:publish")"
+echo "$PUB" | grep -q '"version": 7' || fail "publish did not return version 7: $PUB"
+kill -0 "$LOAD_PID" 2>/dev/null \
+    || fail "load generator finished before the publish — swap window not exercised"
+
+wait "$LOAD_PID" || fail "load generator failed across the hot-swap"
+grep -q '"failed": 0' "$LOADJSON" \
+    || { echo "load report:"; cat "$LOADJSON"; fail "requests failed during hot-swap"; }
+curl -sf "http://$ADDR/metrics" | grep -q '"weights_version": 7' \
+    || fail "weights_version did not advance to 7 in /metrics"
+# A stale republish is refused with 409 (strict monotonicity).
+CODE="$(curl -s -o /dev/null -w '%{http_code}' -X POST \
+    -d "{\"path\": \"$SNAP\"}" "http://$ADDR/admin/models/lenet:publish")"
+[ "$CODE" = "409" ] || fail "expected 409 for stale republish, got $CODE"
+echo "hot-swap: OK (version 7 live, zero failed requests)"
 
 # SIGTERM-equivalent shutdown: the server must drain and exit 0.
 curl -sf -X POST "http://$ADDR/admin/shutdown" >/dev/null || fail "admin shutdown"
