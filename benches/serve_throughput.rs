@@ -168,6 +168,70 @@ fn main() -> anyhow::Result<()> {
         results.push(o);
     }
 
+    // Low-occupancy path: offered load ≈ 25% of max_batch. The dynamic-
+    // shape worker reshapes its replica to each batch's bucketed size,
+    // so executed rows track offered rows instead of padding every
+    // partial batch to max_batch — this leg records both (padded_rows is
+    // what the pre-reshape pad-to-max worker would have executed) and
+    // asserts the occupancy accounting is present.
+    {
+        let max_batch = 32usize;
+        let low_clients = max_batch / 4; // 8 in-flight ≈ 25% offered load
+        let cfg = EngineConfig {
+            workers: 1,
+            max_batch,
+            max_linger: Duration::from_micros(1000),
+            queue_capacity: 1024,
+            device: DeviceKind::Cpu,
+            intra_op_threads: 0,
+        };
+        let engine = Engine::new(&param, cfg)?;
+        let _ = load_test(&engine, low_clients, low_clients * 2, 1); // warm
+        let warm = engine.metrics().snapshot();
+        let report = load_test(&engine, low_clients, requests, 7);
+        engine.shutdown();
+        let snap = engine.metrics().snapshot();
+        let batches = snap.batches - warm.batches;
+        let filled = snap.filled_rows - warm.filled_rows;
+        let executed = snap.executed_rows - warm.executed_rows;
+        let padded = batches * max_batch as u64;
+        let occupancy = if executed == 0 { 0.0 } else { filled as f64 / executed as f64 };
+
+        anyhow::ensure!(report.requests > 0, "no completed requests at low occupancy");
+        anyhow::ensure!(
+            occupancy > 0.0,
+            "low-occupancy leg must report a batch occupancy"
+        );
+        anyhow::ensure!(
+            executed < padded,
+            "dynamic shapes must execute fewer rows than pad-to-max \
+             ({executed} executed vs {padded} padded)"
+        );
+        let mut lats = report.latencies_ns.clone();
+        let s = summarize("lenet serve, low-occupancy 32", &mut lats);
+        println!(
+            "{}   ({:.1} req/s, occupancy {occupancy:.2}: {filled} filled / {executed} executed \
+             rows; pad-to-max would have executed {padded})",
+            s.line(),
+            report.rps,
+        );
+
+        let mut o = Json::obj();
+        o.set("transport", Json::str("inproc-low-occupancy"));
+        o.set("max_batch", Json::num(max_batch as f64));
+        o.set("clients", Json::num(low_clients as f64));
+        o.set("requests", Json::num(report.requests as f64));
+        o.set("failed", Json::num(report.failed as f64));
+        o.set("rps", Json::num(report.rps));
+        o.set("p50_ms", Json::num(s.median_ns / 1e6));
+        o.set("p99_ms", Json::num(s.p99_ns / 1e6));
+        o.set("filled_rows", Json::num(filled as f64));
+        o.set("executed_rows", Json::num(executed as f64));
+        o.set("padded_rows", Json::num(padded as f64));
+        o.set("occupancy", Json::num(occupancy));
+        results.push(o);
+    }
+
     let mut root = Json::obj();
     root.set("bench", Json::str("serve_throughput"));
     root.set("net", Json::str("lenet"));

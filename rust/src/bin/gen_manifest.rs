@@ -6,6 +6,7 @@
 
 use fecaffe::net::Net;
 use fecaffe::proto::Phase;
+use fecaffe::runtime::plan::batch_bucket;
 use fecaffe::runtime::recording::RecordingDevice;
 use fecaffe::solver::Solver;
 use fecaffe::zoo;
@@ -40,6 +41,22 @@ fn record_net(
     Ok(())
 }
 
+/// Record one deploy-net forward (the shapes the serving engine
+/// executes) at the given batch size.
+fn record_deploy(rec: &mut RecordingDevice, name: &str, batch: usize) -> anyhow::Result<()> {
+    let mut dev = RecordingDevice::new(false);
+    let dep = zoo::deploy_by_name(name, batch)?;
+    let mut net = Net::from_param(&dep.param, Phase::Test, &mut dev)?;
+    net.forward(&mut dev)?;
+    eprintln!(
+        "  {name} deploy (batch {batch}) -> {} distinct kernels, {} launches",
+        dev.specs.len(),
+        dev.launches
+    );
+    rec.merge_from(&dev);
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let out = std::env::args()
         .nth(1)
@@ -63,6 +80,28 @@ fn main() -> anyhow::Result<()> {
         ("googlenet", 16, true),
     ] {
         record_net(&mut rec, name, batch, solver)?;
+    }
+
+    // Serving shapes (ROADMAP "Batched AOT artifacts"): the serving
+    // engine reshapes each worker's replica to *bucketed* batch sizes
+    // (`runtime::plan::batch_bucket`), so an `xla`-featured build needs
+    // artifacts for every bucket a worker can execute, not just the
+    // batch-1 zoo shapes above. Per-net caps match sensible serving
+    // configs while keeping the recording walk inside host memory
+    // (VGG-16 activations at batch 32 are multi-GB even forward-only).
+    for (name, max_serve) in [
+        ("lenet", 32usize),
+        ("alexnet", 32),
+        ("squeezenet", 16),
+        ("googlenet", 16),
+        ("vgg16", 8),
+    ] {
+        let mut buckets: Vec<usize> =
+            (1..=max_serve).map(|k| batch_bucket(k, max_serve)).collect();
+        buckets.dedup(); // batch_bucket is nondecreasing in k
+        for b in buckets {
+            record_deploy(&mut rec, name, b)?;
+        }
     }
 
     let manifest = rec.manifest();

@@ -245,6 +245,15 @@ fn run_load_test(args: &Args) -> anyhow::Result<()> {
     table.row(&["batches executed".into(), format!("{}", snap.batches)]);
     table.row(&["mean batch size".into(), format!("{:.2}", snap.mean_batch)]);
     table.row(&["full batches".into(), format!("{}", snap.full_batches)]);
+    // Dynamic-shape accounting: rows the reshaped replicas actually
+    // executed (bucketed) vs rows that carried requests.
+    table.row(&[
+        "batch occupancy".into(),
+        format!(
+            "{:.2} ({} filled / {} executed rows)",
+            snap.batch_occupancy, snap.filled_rows, snap.executed_rows
+        ),
+    ]);
     if snap.sim_batches > 0 {
         // FPGA-sim workers: batch cost in *simulated* device time (the
         // paper's cost model), alongside host wallclock.
@@ -266,6 +275,9 @@ fn run_load_test(args: &Args) -> anyhow::Result<()> {
         o.set("p95_ms", Json::num(s.p95_ns / 1e6));
         o.set("p99_ms", Json::num(s.p99_ns / 1e6));
         o.set("mean_batch", Json::num(snap.mean_batch));
+        o.set("occupancy", Json::num(snap.batch_occupancy));
+        o.set("filled_rows", Json::num(snap.filled_rows as f64));
+        o.set("executed_rows", Json::num(snap.executed_rows as f64));
         if snap.sim_batches > 0 {
             o.set("sim_batch_p50_ms", Json::num(snap.sim_p50_ns / 1e6));
             o.set("sim_batch_p99_ms", Json::num(snap.sim_p99_ns / 1e6));

@@ -255,6 +255,26 @@ impl SyncedMem {
         }
     }
 
+    /// Read the first `out.len()` elements back to the host without
+    /// syncing (or billing PCIe for) the rest of the buffer. Used by the
+    /// serving worker to read exactly the filled rows of a grow-only
+    /// output blob whose allocation is sized for the largest batch it
+    /// has ever run. Does not move the head-of-data state.
+    pub fn read_prefix(&mut self, dev: &mut dyn Device, out: &mut [f32]) {
+        assert!(
+            out.len() <= self.len,
+            "read_prefix: asked for {} of {} elements",
+            out.len(),
+            self.len
+        );
+        if self.state == MemState::AtDevice {
+            dev.read(self.dev.expect("AtDevice without device buffer"), out);
+        } else {
+            self.sync_to_host(dev); // host already fresh (or zero-filled)
+            out.copy_from_slice(&self.host.as_slice()[..out.len()]);
+        }
+    }
+
     /// Release the device-side buffer (keeps host copy if fresh).
     pub fn release_dev(&mut self, dev: &mut dyn Device) {
         if let Some(id) = self.dev.take() {
@@ -316,6 +336,11 @@ impl Blob {
         *self.shape.get(3).unwrap_or(&1)
     }
 
+    /// Exact reshape (training semantics): storage is resized to the new
+    /// element count, contents are dropped, and — audited for the FPGA
+    /// DDR budget — a shrink releases the old oversized device buffer
+    /// immediately (`SyncedMem::resize` frees the `BufId` eagerly), so
+    /// nothing stale stays billed against device memory.
     pub fn reshape(&mut self, dev: &mut dyn Device, shape: &[usize]) {
         let count: usize = shape.iter().product();
         self.shape = shape.to_vec();
@@ -323,29 +348,54 @@ impl Blob {
         self.diff.resize(dev, count);
     }
 
+    /// Grow-only reshape (serving semantics): the logical shape changes,
+    /// but storage is only reallocated when the new count exceeds the
+    /// current allocation. A replica that cycles through batch sizes
+    /// therefore settles at its high-water allocation and pays zero
+    /// alloc/free churn per reshape; kernels are launched with shapes
+    /// derived from `shape()`, so the tail beyond `count()` is never
+    /// read. Contents are not preserved (activations are rewritten every
+    /// forward).
+    pub fn reshape_grow_only(&mut self, dev: &mut dyn Device, shape: &[usize]) {
+        let count: usize = shape.iter().product();
+        self.shape = shape.to_vec();
+        if count > self.data.len() {
+            self.data.resize(dev, count);
+        }
+        if count > self.diff.len() {
+            self.diff.resize(dev, count);
+        }
+    }
+
     /// Bytes of one copy (f32).
     pub fn bytes(&self) -> usize {
         self.count() * 4
     }
 
-    /// Convenience for tests: set host data.
+    /// Set host data for the blob's current shape. On a grow-only blob
+    /// the allocation may be larger than `count()`; only the logical
+    /// prefix is written (the tail is never read by kernels).
     pub fn set_data(&mut self, dev: &mut dyn Device, values: &[f32]) {
         assert_eq!(values.len(), self.count(), "set_data length mismatch");
-        self.data.host_data_mut(dev).copy_from_slice(values);
+        self.data.host_data_mut(dev)[..values.len()].copy_from_slice(values);
     }
 
     pub fn set_diff(&mut self, dev: &mut dyn Device, values: &[f32]) {
         assert_eq!(values.len(), self.count(), "set_diff length mismatch");
-        self.diff.host_data_mut(dev).copy_from_slice(values);
+        self.diff.host_data_mut(dev)[..values.len()].copy_from_slice(values);
     }
 
-    /// Convenience for tests/debug: snapshot host data.
+    /// Convenience for tests/debug: snapshot host data for the current
+    /// shape (`count()` elements; a grow-only blob's spare tail is not
+    /// included).
     pub fn data_vec(&mut self, dev: &mut dyn Device) -> Vec<f32> {
-        self.data.host_data(dev).to_vec()
+        let n = self.count();
+        self.data.host_data(dev)[..n].to_vec()
     }
 
     pub fn diff_vec(&mut self, dev: &mut dyn Device) -> Vec<f32> {
-        self.diff.host_data(dev).to_vec()
+        let n = self.count();
+        self.diff.host_data(dev)[..n].to_vec()
     }
 }
 
@@ -472,6 +522,87 @@ mod tests {
         let mut out = [0.0f32; 2];
         dev.read(id, &mut out);
         assert_eq!(out, [7.0, 8.0]);
+    }
+
+    /// Satellite audit pin (ISSUE 5): an exact reshape to a smaller
+    /// shape must release the oversized device buffer immediately — no
+    /// stale DDR billing, no leaked `BufId` — and a later device access
+    /// allocates a right-sized buffer.
+    #[test]
+    fn reshape_shrink_releases_device_buffer() {
+        use crate::device::fpga::FpgaSimDevice;
+        let mut dev = FpgaSimDevice::new();
+        let mut b = Blob::new("x", &[4, 4]);
+        b.set_data(&mut dev, &[1.0; 16]);
+        let _ = b.data.dev_data(&mut dev);
+        let used_big = dev.ddr().used();
+        assert!(used_big >= 16 * 4, "device copy billed: {used_big}");
+
+        b.reshape(&mut dev, &[2, 2]);
+        assert_eq!(
+            dev.ddr().used(),
+            0,
+            "shrink must free the old device buffer eagerly"
+        );
+
+        // Fresh device access allocates exactly the new size and is
+        // zero-initialized (contents dropped by the exact reshape).
+        let id = b.data.dev_data(&mut dev);
+        assert_eq!(dev.ddr().used(), 4 * 4);
+        let mut out = [9.0f32; 4];
+        dev.read(id, &mut out);
+        assert_eq!(out, [0.0; 4]);
+    }
+
+    /// Grow-only reshape keeps the high-water allocation across a
+    /// shrink (zero realloc churn for serving replicas) while the
+    /// logical shape and `count()` track the requested shape.
+    #[test]
+    fn grow_only_reshape_keeps_capacity() {
+        use crate::device::fpga::FpgaSimDevice;
+        let mut dev = FpgaSimDevice::new();
+        let mut b = Blob::new("x", &[8, 2]);
+        b.set_data(&mut dev, &[1.0; 16]);
+        let _ = b.data.dev_data(&mut dev);
+        let used_big = dev.ddr().used();
+
+        b.reshape_grow_only(&mut dev, &[2, 2]);
+        assert_eq!(b.count(), 4);
+        assert_eq!(b.shape(), &[2, 2]);
+        // Capacity (and the device buffer) stays at the high-water mark.
+        assert_eq!(b.data.len(), 16);
+        assert_eq!(dev.ddr().used(), used_big);
+
+        // set_data/data_vec operate on the logical prefix only.
+        b.set_data(&mut dev, &[7.0, 8.0, 9.0, 10.0]);
+        assert_eq!(b.data_vec(&mut dev), vec![7.0, 8.0, 9.0, 10.0]);
+
+        // Growing back within capacity is free; growing past it resizes.
+        b.reshape_grow_only(&mut dev, &[8, 2]);
+        assert_eq!(b.data.len(), 16);
+        b.reshape_grow_only(&mut dev, &[9, 2]);
+        assert_eq!(b.data.len(), 18);
+    }
+
+    #[test]
+    fn read_prefix_returns_leading_elements() {
+        let mut dev = CpuDevice::new();
+        let mut m = SyncedMem::new(4);
+        m.host_data_mut(&mut dev).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        // Host-fresh path.
+        let mut out = [0.0f32; 2];
+        m.read_prefix(&mut dev, &mut out);
+        assert_eq!(out, [1.0, 2.0]);
+        // Device-fresh path (head at device).
+        let id = m.dev_data_mut(&mut dev);
+        dev.write(id, &[5.0, 6.0, 7.0, 8.0]);
+        let mut out = [0.0f32; 3];
+        m.read_prefix(&mut dev, &mut out);
+        assert_eq!(out, [5.0, 6.0, 7.0]);
+        // read_prefix must not move the head: a full host sync still
+        // sees the device data.
+        assert_eq!(m.state(), MemState::AtDevice);
+        assert_eq!(m.host_data(&mut dev), &[5.0, 6.0, 7.0, 8.0]);
     }
 
     #[test]

@@ -43,11 +43,20 @@ impl Layer for AccuracyLayer {
         tops: &[SharedBlob],
     ) -> anyhow::Result<()> {
         anyhow::ensure!(bottoms.len() == 2, "Accuracy: needs [scores, labels]");
+        self.reshape(dev, bottoms, tops)
+    }
+
+    fn reshape(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
         let b = bottoms[0].borrow();
         self.n = b.num();
-        self.c = b.count() / self.n;
+        self.c = b.count() / self.n.max(1);
         drop(b);
-        tops[0].borrow_mut().reshape(dev, &[1]);
+        tops[0].borrow_mut().reshape_grow_only(dev, &[1]);
         Ok(())
     }
 

@@ -45,6 +45,15 @@ impl Layer for ConcatLayer {
     ) -> anyhow::Result<()> {
         anyhow::ensure!(self.axis == 1, "concat: only channel axis supported");
         anyhow::ensure!(!bottoms.is_empty());
+        self.reshape(dev, bottoms, tops)
+    }
+
+    fn reshape(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
         let first = bottoms[0].borrow();
         let (num, h, w) = (first.num(), first.height(), first.width());
         drop(first);
@@ -64,7 +73,9 @@ impl Layer for ConcatLayer {
             channels += bb.channels();
         }
         self.total = channels * h * w;
-        tops[0].borrow_mut().reshape(dev, &[num, channels, h, w]);
+        tops[0]
+            .borrow_mut()
+            .reshape_grow_only(dev, &[num, channels, h, w]);
         Ok(())
     }
 

@@ -27,8 +27,9 @@ pub struct ConvolutionLayer {
     specs: Vec<ParamSpec>,
     weight: SharedBlob,
     bias: Option<SharedBlob>,
-    /// ones(out_h*out_w) for the bias-gradient gemv.
+    /// ones(out_h*out_w) for the bias-gradient gemv (grow-only).
     ones: Option<BufId>,
+    ones_len: usize,
     geom: Option<ConvGeom>,
     num: usize,
     is_1x1: bool,
@@ -47,6 +48,7 @@ impl ConvolutionLayer {
             weight: super::shared(Blob::new("w", &[0])),
             bias: None,
             ones: None,
+            ones_len: 0,
             geom: None,
             num: 0,
             is_1x1: false,
@@ -79,35 +81,12 @@ impl Layer for ConvolutionLayer {
         tops: &[SharedBlob],
     ) -> anyhow::Result<()> {
         anyhow::ensure!(bottoms.len() == 1 && tops.len() == 1, "conv: 1 bottom, 1 top");
-        let b = bottoms[0].borrow();
-        let (num, channels, height, width) =
-            (b.num(), b.channels(), b.height(), b.width());
-        drop(b);
+        let channels = bottoms[0].borrow().channels();
         anyhow::ensure!(
             channels % self.p.group == 0 && self.p.num_output % self.p.group == 0,
             "conv {}: channels/num_output not divisible by group",
             self.name
         );
-        let geom = ConvGeom {
-            channels,
-            height,
-            width,
-            kernel_h: self.p.kernel_h,
-            kernel_w: self.p.kernel_w,
-            pad_h: self.p.pad_h,
-            pad_w: self.p.pad_w,
-            stride_h: self.p.stride_h,
-            stride_w: self.p.stride_w,
-        };
-        let (oh, ow) = (geom.out_h(), geom.out_w());
-        self.is_1x1 = self.p.kernel_h == 1
-            && self.p.kernel_w == 1
-            && self.p.stride_h == 1
-            && self.p.stride_w == 1
-            && self.p.pad_h == 0
-            && self.p.pad_w == 0;
-        self.num = num;
-        self.geom = Some(geom);
 
         // Learnable blobs.
         let k_per_group = channels / self.p.group * self.p.kernel_h * self.p.kernel_w;
@@ -137,25 +116,79 @@ impl Layer for ConvolutionLayer {
             self.bias = Some(bias);
         }
 
+        self.reshape(dev, bottoms, tops)
+    }
+
+    fn reshape(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        let b = bottoms[0].borrow();
+        let (num, channels, height, width) =
+            (b.num(), b.channels(), b.height(), b.width());
+        drop(b);
+        // Batch and spatial dims may change between reshapes; the channel
+        // count is pinned by the filters allocated at setup.
+        let w_channels = self.weight.borrow().channels();
+        anyhow::ensure!(
+            channels == w_channels * self.p.group,
+            "conv {}: bottom has {channels} channels, filters expect {}",
+            self.name,
+            w_channels * self.p.group
+        );
+        let geom = ConvGeom {
+            channels,
+            height,
+            width,
+            kernel_h: self.p.kernel_h,
+            kernel_w: self.p.kernel_w,
+            pad_h: self.p.pad_h,
+            pad_w: self.p.pad_w,
+            stride_h: self.p.stride_h,
+            stride_w: self.p.stride_w,
+        };
+        let (oh, ow) = (geom.out_h(), geom.out_w());
+        self.is_1x1 = self.p.kernel_h == 1
+            && self.p.kernel_w == 1
+            && self.p.stride_h == 1
+            && self.p.stride_w == 1
+            && self.p.pad_h == 0
+            && self.p.pad_w == 0;
+        self.num = num;
+        self.geom = Some(geom);
+
         // Scratch: the col/col_diff matrices live in device scratch slots
         // 0/1 shared across all conv layers (one global DDR region, like
-        // the OpenCL implementation) — reserve capacity now.
+        // the OpenCL implementation). Reserve at the bucketed size so
+        // repeated reshapes re-use one grown region instead of churning
+        // per geometry change (the pool itself only grows).
         if !self.is_1x1 {
-            dev.scratch(0, geom.col_len())?;
-            dev.scratch(1, geom.col_len())?;
+            let want = crate::runtime::plan::bucket(geom.col_len());
+            dev.scratch(0, want)?;
+            dev.scratch(1, want)?;
         }
-        // ones vector for bias gradient (filled on device).
-        let ones = dev.alloc(oh * ow)?;
-        dev.launch(&KernelCall::new(
-            Kernel::SetConst { n: oh * ow, value: 1.0 },
-            &[],
-            &[ones],
-        ))?;
-        self.ones = Some(ones);
+        // ones vector for the bias gradient (grow-only: a larger buffer
+        // of ones serves any smaller gemv).
+        let ohw = oh * ow;
+        if self.ones.is_none() || self.ones_len < ohw {
+            if let Some(id) = self.ones.take() {
+                dev.free(id);
+            }
+            let ones = dev.alloc(ohw)?;
+            dev.launch(&KernelCall::new(
+                Kernel::SetConst { n: ohw, value: 1.0 },
+                &[],
+                &[ones],
+            ))?;
+            self.ones = Some(ones);
+            self.ones_len = ohw;
+        }
 
         tops[0]
             .borrow_mut()
-            .reshape(dev, &[num, self.p.num_output, oh, ow]);
+            .reshape_grow_only(dev, &[num, self.p.num_output, oh, ow]);
         Ok(())
     }
 

@@ -57,11 +57,25 @@ impl Layer for SyntheticDataLayer {
     ) -> anyhow::Result<()> {
         anyhow::ensure!(bottoms.is_empty(), "data layer takes no bottoms");
         anyhow::ensure!(tops.len() == 2, "data layer: tops = [data, label]");
+        self.reshape(dev, bottoms, tops)
+    }
+
+    /// The data layer owns its batch: a net-wide reshape re-asserts the
+    /// configured `batch_size` rather than following an upstream shape
+    /// (there is none — this is the source).
+    fn reshape(
+        &mut self,
+        dev: &mut dyn Device,
+        _bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
         let (c, h, w) = self.source.shape();
         tops[0]
             .borrow_mut()
-            .reshape(dev, &[self.p.batch_size, c, h, w]);
-        tops[1].borrow_mut().reshape(dev, &[self.p.batch_size]);
+            .reshape_grow_only(dev, &[self.p.batch_size, c, h, w]);
+        tops[1]
+            .borrow_mut()
+            .reshape_grow_only(dev, &[self.p.batch_size]);
         Ok(())
     }
 

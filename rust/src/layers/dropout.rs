@@ -56,12 +56,26 @@ impl Layer for DropoutLayer {
         bottoms: &[SharedBlob],
         tops: &[SharedBlob],
     ) -> anyhow::Result<()> {
+        self.mask = Some(super::shared(Blob::new("mask", &[1])));
+        self.reshape(dev, bottoms, tops)
+    }
+
+    fn reshape(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
         self.count = bottoms[0].borrow().count();
         let shape = bottoms[0].borrow().shape().to_vec();
         if !Rc::ptr_eq(&bottoms[0], &tops[0]) {
-            tops[0].borrow_mut().reshape(dev, &shape);
+            tops[0].borrow_mut().reshape_grow_only(dev, &shape);
         }
-        self.mask = Some(super::shared(Blob::new("mask", &shape)));
+        self.mask
+            .as_ref()
+            .expect("mask blob created at setup")
+            .borrow_mut()
+            .reshape_grow_only(dev, &shape);
         Ok(())
     }
 
@@ -86,11 +100,14 @@ impl Layer for DropoutLayer {
             return Ok(0.0);
         }
         // Draw mask on host, upload (Write_Buffer on the FPGA device).
+        // Only the logical `count` elements are drawn — a grow-only mask
+        // keeps spare tail capacity the kernel never reads, and drawing
+        // into it would silently shift the RNG stream across reshapes.
         let mask = self.mask.as_ref().unwrap();
         {
             let mut m = mask.borrow_mut();
             let host = m.data.host_data_mut(dev);
-            for v in host.iter_mut() {
+            for v in host.iter_mut().take(self.count) {
                 *v = if self.rng.bernoulli(self.ratio) { 0.0 } else { 1.0 };
             }
         }

@@ -60,8 +60,8 @@ impl Layer for InnerProductLayer {
         tops: &[SharedBlob],
     ) -> anyhow::Result<()> {
         let b = bottoms[0].borrow();
-        self.m = b.num();
-        self.k = b.count() / self.m;
+        let m = b.num();
+        self.k = b.count() / m.max(1);
         drop(b);
         let n = self.p.num_output;
         let mut rng = Pcg32::new(self.seed());
@@ -75,7 +75,31 @@ impl Layer for InnerProductLayer {
             fill_blob(&mut bias.borrow_mut(), dev, &self.p.bias_filler, self.k, &mut rng);
             self.bias = Some(bias);
         }
-        tops[0].borrow_mut().reshape(dev, &[self.m, n]);
+        self.reshape(dev, bottoms, tops)
+    }
+
+    fn reshape(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
+        let b = bottoms[0].borrow();
+        let m = b.num();
+        let k = b.count() / m.max(1);
+        drop(b);
+        // The flattened per-sample dim is pinned by the weight matrix
+        // allocated at setup; only the batch dim may move.
+        anyhow::ensure!(
+            k == self.k,
+            "inner_product {}: flattened input dim {k} != weight K {}",
+            self.name,
+            self.k
+        );
+        self.m = m;
+        tops[0]
+            .borrow_mut()
+            .reshape_grow_only(dev, &[m, self.p.num_output]);
         Ok(())
     }
 

@@ -39,12 +39,26 @@ impl Layer for LrnLayer {
         bottoms: &[SharedBlob],
         tops: &[SharedBlob],
     ) -> anyhow::Result<()> {
+        self.scale = Some(super::shared(Blob::new("scale", &[1])));
+        self.reshape(dev, bottoms, tops)
+    }
+
+    fn reshape(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
         let b = bottoms[0].borrow();
         let shape = b.shape().to_vec();
         self.dims = (b.num(), b.channels(), b.height() * b.width());
         drop(b);
-        tops[0].borrow_mut().reshape(dev, &shape);
-        self.scale = Some(super::shared(Blob::new("scale", &shape)));
+        tops[0].borrow_mut().reshape_grow_only(dev, &shape);
+        self.scale
+            .as_ref()
+            .expect("scale blob created at setup")
+            .borrow_mut()
+            .reshape_grow_only(dev, &shape);
         Ok(())
     }
 

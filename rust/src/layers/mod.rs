@@ -1,7 +1,8 @@
 //! Layer classes — the paper's L3 "class layer".
 //!
-//! Every layer implements [`Layer`]: `setup` shapes tops and initializes
-//! learnable blobs, `forward`/`backward` enqueue kernels on the
+//! Every layer implements [`Layer`]: `setup` initializes learnable
+//! blobs, `reshape` propagates shapes (and may run again whenever the
+//! batch changes — dynamic-shape serving), `forward`/`backward` enqueue kernels on the
 //! [`Device`] through the same fine-grained calls the paper's wrapper
 //! layer makes (one `im2col` per image, one `gemm` per group, one `Bias`
 //! per conv, ...), so kernel instance counts in the profiler match the
@@ -34,12 +35,33 @@ pub fn shared(blob: Blob) -> SharedBlob {
 }
 
 /// The layer interface (mirrors caffe::Layer).
+///
+/// Shape propagation is a first-class phase, split from execution like
+/// Caffe's `Reshape`: `setup` runs once (validates wiring, creates and
+/// initializes learnable blobs, then calls `reshape`), while `reshape`
+/// may run again whenever a bottom's shape changed — it recomputes
+/// cached geometry and re-shapes top blobs and internal activations
+/// (grow-only, so repeated reshapes settle at the high-water allocation)
+/// without ever touching learnable parameters. `Net::reshape_batch`
+/// drives it through the whole DAG.
 pub trait Layer {
     fn name(&self) -> &str;
     fn kind(&self) -> &'static str;
 
-    /// Shape tops (and allocate internal buffers / learnable params).
+    /// One-time setup: validate, allocate + initialize learnable blobs,
+    /// then propagate shapes (implementations end by calling
+    /// [`Layer::reshape`]).
     fn setup(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()>;
+
+    /// Re-propagate shapes from the (possibly re-batched) bottoms to the
+    /// tops and internal buffers. Must not reallocate or reinitialize
+    /// learnable parameters; top/activation storage grows only.
+    fn reshape(
         &mut self,
         dev: &mut dyn Device,
         bottoms: &[SharedBlob],

@@ -42,6 +42,18 @@ impl Layer for PoolingLayer {
         bottoms: &[SharedBlob],
         tops: &[SharedBlob],
     ) -> anyhow::Result<()> {
+        if self.p.method == PoolMethod::Max {
+            self.mask = Some(super::shared(Blob::new("mask", &[1])));
+        }
+        self.reshape(dev, bottoms, tops)
+    }
+
+    fn reshape(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
         let b = bottoms[0].borrow();
         let (num, c, h, w) = (b.num(), b.channels(), b.height(), b.width());
         drop(b);
@@ -64,9 +76,9 @@ impl Layer for PoolingLayer {
         let (oh, ow) = (geom.out_h(), geom.out_w());
         self.num = num;
         self.geom = Some(geom);
-        tops[0].borrow_mut().reshape(dev, &[num, c, oh, ow]);
-        if self.p.method == PoolMethod::Max {
-            self.mask = Some(super::shared(Blob::new("mask", &[num, c, oh, ow])));
+        tops[0].borrow_mut().reshape_grow_only(dev, &[num, c, oh, ow]);
+        if let Some(mask) = &self.mask {
+            mask.borrow_mut().reshape_grow_only(dev, &[num, c, oh, ow]);
         }
         Ok(())
     }

@@ -32,10 +32,19 @@ impl Layer for ReluLayer {
         bottoms: &[SharedBlob],
         tops: &[SharedBlob],
     ) -> anyhow::Result<()> {
+        self.reshape(dev, bottoms, tops)
+    }
+
+    fn reshape(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
         self.count = bottoms[0].borrow().count();
         if !Rc::ptr_eq(&bottoms[0], &tops[0]) {
             let shape = bottoms[0].borrow().shape().to_vec();
-            tops[0].borrow_mut().reshape(dev, &shape);
+            tops[0].borrow_mut().reshape_grow_only(dev, &shape);
         }
         Ok(())
     }

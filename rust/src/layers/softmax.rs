@@ -30,12 +30,21 @@ impl Layer for SoftmaxLayer {
         bottoms: &[SharedBlob],
         tops: &[SharedBlob],
     ) -> anyhow::Result<()> {
+        self.reshape(dev, bottoms, tops)
+    }
+
+    fn reshape(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
         let b = bottoms[0].borrow();
         self.n = b.num();
-        self.c = b.count() / self.n;
+        self.c = b.count() / self.n.max(1);
         let shape = b.shape().to_vec();
         drop(b);
-        tops[0].borrow_mut().reshape(dev, &shape);
+        tops[0].borrow_mut().reshape_grow_only(dev, &shape);
         Ok(())
     }
 

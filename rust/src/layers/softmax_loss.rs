@@ -53,14 +53,28 @@ impl Layer for SoftmaxWithLossLayer {
         tops: &[SharedBlob],
     ) -> anyhow::Result<()> {
         anyhow::ensure!(bottoms.len() == 2, "SoftmaxWithLoss: needs [scores, labels]");
+        self.prob = Some(super::shared(Blob::new("prob", &[1])));
+        self.loss_buf = Some(dev.alloc(1)?);
+        self.reshape(dev, bottoms, tops)
+    }
+
+    fn reshape(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
         let b = bottoms[0].borrow();
         self.n = b.num();
-        self.c = b.count() / self.n;
+        self.c = b.count() / self.n.max(1);
         let shape = b.shape().to_vec();
         drop(b);
-        self.prob = Some(super::shared(Blob::new("prob", &shape)));
-        self.loss_buf = Some(dev.alloc(1)?);
-        tops[0].borrow_mut().reshape(dev, &[1]);
+        self.prob
+            .as_ref()
+            .expect("prob blob created at setup")
+            .borrow_mut()
+            .reshape_grow_only(dev, &shape);
+        tops[0].borrow_mut().reshape_grow_only(dev, &[1]);
         Ok(())
     }
 

@@ -32,10 +32,19 @@ impl Layer for SplitLayer {
         bottoms: &[SharedBlob],
         tops: &[SharedBlob],
     ) -> anyhow::Result<()> {
+        self.reshape(dev, bottoms, tops)
+    }
+
+    fn reshape(
+        &mut self,
+        dev: &mut dyn Device,
+        bottoms: &[SharedBlob],
+        tops: &[SharedBlob],
+    ) -> anyhow::Result<()> {
         self.count = bottoms[0].borrow().count();
         let shape = bottoms[0].borrow().shape().to_vec();
         for t in tops {
-            t.borrow_mut().reshape(dev, &shape);
+            t.borrow_mut().reshape_grow_only(dev, &shape);
         }
         Ok(())
     }

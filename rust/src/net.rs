@@ -244,6 +244,10 @@ pub struct Net {
     layer_need_bw: Vec<bool>,
     blobs: BTreeMap<String, SharedBlob>,
     params: Vec<NetParam>,
+    /// Deploy-style explicit input blob names, in declaration order
+    /// (empty for data-layer-fed training nets). The first one carries
+    /// the batch dimension [`Net::reshape_batch`] rewrites.
+    inputs: Vec<String>,
 }
 
 impl Net {
@@ -270,12 +274,14 @@ impl Net {
             layer_need_bw: Vec::new(),
             blobs: BTreeMap::new(),
             params: Vec::new(),
+            inputs: Vec::new(),
         };
 
         // Deploy-style explicit inputs.
         for (name, shape) in &param.inputs {
             net.blobs
                 .insert(name.clone(), shared(Blob::new(name, shape)));
+            net.inputs.push(name.clone());
         }
 
         // Which blobs carry gradient back (label/data blobs don't).
@@ -347,6 +353,42 @@ impl Net {
             net.layer_need_bw.push(need_bw);
         }
         Ok(net)
+    }
+
+    /// Rewrite the batch dimension of the (deploy-style) input blob to
+    /// `n` and re-propagate shapes through the whole DAG — Caffe's
+    /// reshape-on-the-fly, as one explicit phase. Learnable parameters
+    /// are untouched (never reallocated); activation `SyncedMem`s grow
+    /// only, so a replica cycling through batch sizes settles at its
+    /// high-water allocation and pays no alloc/free churn per reshape;
+    /// conv scratch is re-reserved through the bucketed scratch pool.
+    /// Data layers keep their own fixed batch (they re-assert it), so
+    /// this is only meaningful for nets with explicit `input` blobs.
+    pub fn reshape_batch(&mut self, dev: &mut dyn Device, n: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(n >= 1, "reshape_batch: batch must be >= 1");
+        let first = self.inputs.first().ok_or_else(|| {
+            anyhow::anyhow!(
+                "net '{}' has no explicit input blobs; only deploy-style nets can be re-batched",
+                self.name
+            )
+        })?;
+        let blob = self.blobs.get(first).expect("input blob registered").clone();
+        {
+            let mut b = blob.borrow_mut();
+            let mut shape = b.shape().to_vec();
+            anyhow::ensure!(
+                !shape.is_empty(),
+                "input blob '{first}' has no batch dimension"
+            );
+            shape[0] = n;
+            b.reshape_grow_only(dev, &shape);
+        }
+        for i in 0..self.layers.len() {
+            if let Err(e) = self.layers[i].reshape(dev, &self.bottoms[i], &self.tops[i]) {
+                anyhow::bail!("reshape of layer '{}': {e:#}", self.layers[i].name());
+            }
+        }
+        Ok(())
     }
 
     /// Full forward pass; returns the total (weighted) loss.
@@ -822,6 +864,69 @@ layer { name: "fc2" type: "InnerProduct" bottom: "fc1" top: "fc2"
         std::fs::write(&tmp, b"NOTSNAP!rest").unwrap();
         assert!(WeightSnapshot::load(&tmp).is_err());
         let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn reshape_batch_repropagates_shapes_without_touching_params() {
+        let text = r#"
+name: "deploy"
+input: "data"
+input_shape { dim: 4 dim: 1 dim: 8 dim: 8 }
+layer { name: "conv1" type: "Convolution" bottom: "data" top: "conv1"
+        convolution_param { num_output: 2 kernel_size: 3
+          weight_filler { type: "xavier" } } }
+layer { name: "relu1" type: "ReLU" bottom: "conv1" top: "conv1" }
+layer { name: "pool1" type: "Pooling" bottom: "conv1" top: "pool1"
+        pooling_param { pool: MAX kernel_size: 2 stride: 2 } }
+layer { name: "fc" type: "InnerProduct" bottom: "pool1" top: "fc"
+        inner_product_param { num_output: 3 weight_filler { type: "xavier" } } }
+"#;
+        let mut dev = CpuDevice::new();
+        let param = parse_net(text).unwrap();
+        let mut net = Net::from_param(&param, Phase::Test, &mut dev).unwrap();
+        let w0 = net.params()[0].blob.borrow_mut().data_vec(&mut dev);
+
+        net.reshape_batch(&mut dev, 2).unwrap();
+        assert_eq!(net.blob("data").unwrap().borrow().shape(), &[2, 1, 8, 8]);
+        assert_eq!(net.blob("conv1").unwrap().borrow().shape(), &[2, 2, 6, 6]);
+        assert_eq!(net.blob("pool1").unwrap().borrow().shape(), &[2, 2, 3, 3]);
+        assert_eq!(net.blob("fc").unwrap().borrow().shape(), &[2, 3]);
+        // Weights are untouched by the reshape.
+        assert_eq!(net.params()[0].blob.borrow_mut().data_vec(&mut dev), w0);
+
+        // Grow back past the build batch: shapes and forward still work.
+        net.reshape_batch(&mut dev, 6).unwrap();
+        assert_eq!(net.blob("fc").unwrap().borrow().shape(), &[6, 3]);
+        net.blob("data")
+            .unwrap()
+            .borrow_mut()
+            .set_data(&mut dev, &vec![0.25; 6 * 64]);
+        net.forward(&mut dev).unwrap();
+        assert_eq!(
+            net.blob("fc").unwrap().borrow_mut().data_vec(&mut dev).len(),
+            18
+        );
+    }
+
+    #[test]
+    fn reshape_batch_requires_explicit_inputs() {
+        let mut dev = CpuDevice::new();
+        let param = parse_net(TINY_NET).unwrap();
+        let mut net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+        assert!(net.reshape_batch(&mut dev, 4).is_err());
+        assert!({
+            let d = parse_net(
+                r#"
+name: "d"
+input: "data"
+input_shape { dim: 2 dim: 3 }
+layer { name: "r" type: "ReLU" bottom: "data" top: "out" }
+"#,
+            )
+            .unwrap();
+            let mut n = Net::from_param(&d, Phase::Test, &mut dev).unwrap();
+            n.reshape_batch(&mut dev, 0).is_err()
+        });
     }
 
     #[test]

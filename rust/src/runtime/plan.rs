@@ -24,6 +24,17 @@ pub fn bucket(n: usize) -> usize {
     n.max(256).next_power_of_two()
 }
 
+/// Bucket a serving batch size: next power of two, clamped to
+/// `max_batch` (the capacity the replica was built at). This is the
+/// shape policy of the dynamic-batch serving worker — a replica is
+/// reshaped to `batch_bucket(k, max_batch)` before executing a batch of
+/// `k` filled rows — bounding the distinct execution shapes (and AOT
+/// artifacts) to `log2(max_batch)+1` while never executing more than 2×
+/// the filled rows, instead of always padding to `max_batch`.
+pub fn batch_bucket(k: usize, max_batch: usize) -> usize {
+    k.max(1).next_power_of_two().min(max_batch.max(1))
+}
+
 /// One input argument of an artifact.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Arg {
@@ -474,6 +485,27 @@ mod tests {
         assert_eq!(bucket(257), 512);
         assert_eq!(bucket(1 << 20), 1 << 20);
         assert_eq!(bucket((1 << 20) + 5), (1 << 20) + 5); // exact above 1M
+    }
+
+    #[test]
+    fn batch_bucket_rules() {
+        assert_eq!(batch_bucket(1, 8), 1);
+        assert_eq!(batch_bucket(2, 8), 2);
+        assert_eq!(batch_bucket(3, 8), 4);
+        assert_eq!(batch_bucket(5, 8), 8);
+        assert_eq!(batch_bucket(8, 8), 8);
+        // Clamped to the replica capacity; degenerate inputs stay sane.
+        assert_eq!(batch_bucket(9, 8), 8);
+        assert_eq!(batch_bucket(0, 8), 1);
+        assert_eq!(batch_bucket(1, 1), 1);
+        // Monotonic nondecreasing in k (dedup-able bucket walks).
+        let max = 32;
+        let mut prev = 0;
+        for k in 1..=max {
+            let b = batch_bucket(k, max);
+            assert!(b >= k.min(max) && b >= prev && b <= max);
+            prev = b;
+        }
     }
 
     #[test]

@@ -6,9 +6,11 @@
 //! full *or* the deadline passes — the classic latency/throughput knob
 //! pair (big `max_batch` + long linger amortizes per-launch overhead;
 //! linger 0 degenerates to one-request batches). The gather/scatter
-//! helpers below are the blob-packing half: N single samples become one
-//! `[max_batch, C, H, W]` input blob, and the batched output rows
-//! scatter back to the per-request response slots.
+//! helpers below are the blob-packing half: k single samples become one
+//! `[rows, C, H, W]` input blob shaped for the batch the worker actually
+//! executes (the *bucketed* batch size — see `runtime::plan::
+//! batch_bucket` — never a pad to `max_batch`), and the batched output
+//! rows scatter back to the per-request response slots.
 
 use super::engine::Request;
 use super::metrics::Metrics;
@@ -30,11 +32,13 @@ pub(crate) struct Batch {
     pub requests: Vec<Request>,
 }
 
-/// Pack up to `max_batch` samples (each `sample_len` elements) into one
-/// batched input blob, zero-padding unused tail slots.
-pub fn gather(samples: &[&[f32]], sample_len: usize, max_batch: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; max_batch * sample_len];
-    for (i, s) in samples.iter().take(max_batch).enumerate() {
+/// Pack up to `rows` samples (each `sample_len` elements) into one
+/// batched input blob of exactly `rows` rows, zero-filling unused tail
+/// rows. `rows` is the batch shape the replica will execute (the
+/// bucketed batch size), not `max_batch`.
+pub fn gather(samples: &[&[f32]], sample_len: usize, rows: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * sample_len];
+    for (i, s) in samples.iter().take(rows).enumerate() {
         assert_eq!(s.len(), sample_len, "gather: sample {i} length mismatch");
         out[i * sample_len..(i + 1) * sample_len].copy_from_slice(s);
     }

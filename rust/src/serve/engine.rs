@@ -3,9 +3,12 @@
 //!
 //! `Engine::new` builds one *master* net replica to initialize weights,
 //! publishes them as a [`WeightSnapshot`] (host vectors behind `Arc`s),
-//! and spawns the batcher plus a pool of workers that each own a net
-//! replica adopting the snapshot — weights shared, activations
-//! per-worker. `submit` is non-blocking: when the bounded admission
+//! and spawns the batcher plus a pool of workers that each own a single
+//! shape-polymorphic net replica adopting the snapshot — weights
+//! shared, activations per-worker, the replica reshaped per batch to
+//! its bucketed row count (output rows are accounted per batch, with
+//! `output_len` fixed by the model: the deploy output count divided by
+//! the build batch). `submit` is non-blocking: when the bounded admission
 //! queue is full the caller gets [`ServeError::Overloaded`] and must
 //! back off (HTTP-429 semantics), which keeps tail latency bounded
 //! instead of letting the queue grow without limit.
@@ -51,7 +54,10 @@ impl DeviceKind {
 pub struct EngineConfig {
     /// Worker replicas (one thread + one net + one device each).
     pub workers: usize,
-    /// Micro-batch upper bound (also the replica input batch size).
+    /// Micro-batch upper bound — the capacity each worker's single
+    /// replica is built at. Workers reshape the replica down to each
+    /// popped batch's bucketed size before `forward`, so a partial
+    /// batch executes its bucket's rows, never a pad to this cap.
     pub max_batch: usize,
     /// Micro-batch linger deadline.
     pub max_linger: Duration,

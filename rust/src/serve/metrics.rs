@@ -96,6 +96,17 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub batched_samples: AtomicU64,
     pub full_batches: AtomicU64,
+    /// Rows carrying a real request across all executed batches — the
+    /// numerator of `batch_occupancy`.
+    pub filled_rows: AtomicU64,
+    /// Rows the (dynamically reshaped) replicas actually executed —
+    /// each batch contributes its *bucketed* row count, never
+    /// `max_batch` padding. The denominator of `batch_occupancy`.
+    pub executed_rows: AtomicU64,
+    /// Executed-rows-per-batch histogram (values are row counts, not
+    /// nanoseconds; buckets are exact for the power-of-two batch
+    /// buckets the workers execute).
+    pub executed_hist: Histogram,
     /// Weight publishes accepted by the engine (hot-swaps).
     pub publishes: AtomicU64,
     /// Version of the most recently published weight snapshot (0 until
@@ -119,6 +130,9 @@ impl Metrics {
             batches: AtomicU64::new(0),
             batched_samples: AtomicU64::new(0),
             full_batches: AtomicU64::new(0),
+            filled_rows: AtomicU64::new(0),
+            executed_rows: AtomicU64::new(0),
+            executed_hist: Histogram::new(),
             publishes: AtomicU64::new(0),
             weights_version: AtomicU64::new(0),
             latency: Histogram::new(),
@@ -132,6 +146,14 @@ impl Metrics {
         if size >= max_batch {
             self.full_batches.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// Record one executed batch's row accounting: `filled` rows carried
+    /// requests, the reshaped replica ran `executed` rows (its bucket).
+    pub(crate) fn record_rows(&self, filled: usize, executed: usize) {
+        self.filled_rows.fetch_add(filled as u64, Ordering::Relaxed);
+        self.executed_rows.fetch_add(executed as u64, Ordering::Relaxed);
+        self.executed_hist.record(executed as u64);
     }
 
     pub(crate) fn record_done(&self, latency_ns: u64) {
@@ -155,6 +177,8 @@ impl Metrics {
     pub fn snapshot(&self) -> MetricsReport {
         let batches = self.batches.load(Ordering::Relaxed);
         let samples = self.batched_samples.load(Ordering::Relaxed);
+        let filled_rows = self.filled_rows.load(Ordering::Relaxed);
+        let executed_rows = self.executed_rows.load(Ordering::Relaxed);
         MetricsReport {
             submitted: self.submitted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
@@ -163,6 +187,14 @@ impl Metrics {
             batches,
             batched_samples: samples,
             full_batches: self.full_batches.load(Ordering::Relaxed),
+            filled_rows,
+            executed_rows,
+            batch_occupancy: if executed_rows == 0 {
+                0.0
+            } else {
+                filled_rows as f64 / executed_rows as f64
+            },
+            mean_executed_rows: self.executed_hist.mean_ns(),
             publishes: self.publishes.load(Ordering::Relaxed),
             weights_version: self.weights_version.load(Ordering::Relaxed),
             mean_batch: if batches == 0 { 0.0 } else { samples as f64 / batches as f64 },
@@ -196,6 +228,16 @@ pub struct MetricsReport {
     pub batches: u64,
     pub batched_samples: u64,
     pub full_batches: u64,
+    /// Rows carrying real requests vs rows the reshaped replicas
+    /// actually executed (bucketed batch sizes).
+    pub filled_rows: u64,
+    pub executed_rows: u64,
+    /// filled/executed over all batches: 1.0 = every executed row
+    /// carried a request; the old pad-to-`max_batch` worker pinned this
+    /// at mean_batch/max_batch instead.
+    pub batch_occupancy: f64,
+    /// Mean executed rows per batch (from the executed-rows histogram).
+    pub mean_executed_rows: f64,
     /// Accepted weight hot-swaps and the currently published version.
     pub publishes: u64,
     pub weights_version: u64,
@@ -227,6 +269,10 @@ impl MetricsReport {
         o.set("batches", Json::num(self.batches as f64));
         o.set("batched_samples", Json::num(self.batched_samples as f64));
         o.set("full_batches", Json::num(self.full_batches as f64));
+        o.set("filled_rows", Json::num(self.filled_rows as f64));
+        o.set("executed_rows", Json::num(self.executed_rows as f64));
+        o.set("occupancy", Json::num(self.batch_occupancy));
+        o.set("mean_executed_rows", Json::num(self.mean_executed_rows));
         o.set("publishes", Json::num(self.publishes as f64));
         o.set("weights_version", Json::num(self.weights_version as f64));
         o.set("mean_batch", Json::num(self.mean_batch));
@@ -249,6 +295,7 @@ impl MetricsReport {
         let mut s = format!(
             "requests: {} submitted, {} completed, {} failed, {} rejected\n\
              batches:  {} ({} full), mean size {:.2}\n\
+             rows:     occupancy {:.2} ({} filled / {} executed, mean {:.2} rows/batch)\n\
              weights:  version {} ({} publish(es))\n\
              latency:  p50 {} / p95 {} / p99 {} (mean {}, max {})",
             self.submitted,
@@ -258,6 +305,10 @@ impl MetricsReport {
             self.batches,
             self.full_batches,
             self.mean_batch,
+            self.batch_occupancy,
+            self.filled_rows,
+            self.executed_rows,
+            self.mean_executed_rows,
             self.weights_version,
             self.publishes,
             fmt_ns(self.p50_ns),
@@ -358,6 +409,26 @@ mod tests {
         assert!(back.get("sim_batches").is_none());
         m.record_sim_batch(1_000);
         assert!(m.snapshot().to_json().get("sim_batches").is_some());
+    }
+
+    #[test]
+    fn occupancy_tracks_filled_vs_executed_rows() {
+        let m = Metrics::new();
+        // Nothing executed yet: occupancy reports 0 without dividing by 0.
+        assert_eq!(m.snapshot().batch_occupancy, 0.0);
+        // A batch of 3 bucketed to 4 rows, then a lone request at batch 1.
+        m.record_rows(3, 4);
+        m.record_rows(1, 1);
+        let r = m.snapshot();
+        assert_eq!(r.filled_rows, 4);
+        assert_eq!(r.executed_rows, 5);
+        assert!((r.batch_occupancy - 0.8).abs() < 1e-9);
+        assert!((r.mean_executed_rows - 2.5).abs() < 1e-9);
+        assert!(r.render().contains("occupancy 0.80"), "{}", r.render());
+        let j = r.to_json();
+        assert!((j.get("occupancy").unwrap().as_f64().unwrap() - 0.8).abs() < 1e-9);
+        assert_eq!(j.get("executed_rows").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(j.get("filled_rows").unwrap().as_usize().unwrap(), 4);
     }
 
     #[test]

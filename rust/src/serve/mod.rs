@@ -20,16 +20,20 @@
 //!   in every layer is batch-invariant, so batched outputs are
 //!   bit-identical to sequential single-sample forwards (see
 //!   `tests/integration_serve.rs`).
-//! * **Worker pool** — N threads, each owning `Net` replicas bound to
-//!   its own device (CPU or FPGA sim): a full-`max_batch` replica plus
-//!   a batch-1 fast path, both pre-built at startup, so lone requests
-//!   don't pay full-batch compute and nothing is constructed on the
-//!   serving path. Replicas adopt one shared
-//!   [`crate::net::WeightSnapshot`] (`Arc`-shared host weights);
-//!   activations stay per-worker.
+//! * **Worker pool, dynamic shapes** — N threads, each owning ONE
+//!   shape-polymorphic `Net` replica bound to its own device (CPU or
+//!   FPGA sim). The replica is pre-built at `max_batch` (nothing is
+//!   constructed on the serving path) and *reshaped* per batch to the
+//!   popped batch's bucketed row count
+//!   ([`crate::runtime::plan::batch_bucket`]: next power of two, capped
+//!   at `max_batch`), so partial batches cost what they compute — at
+//!   most 2× the filled rows — never a pad to `max_batch`. Replicas
+//!   adopt one shared [`crate::net::WeightSnapshot`] (`Arc`-shared host
+//!   weights); activations stay per-worker and grow-only.
 //! * **Metrics** — wait-free counters and a log2 latency histogram
-//!   (p50/p95/p99); exact quantiles for load tests come from
-//!   [`crate::util::stats`].
+//!   (p50/p95/p99), plus `batch_occupancy` (filled rows / executed rows
+//!   — how much of the executed compute carried real requests); exact
+//!   quantiles for load tests come from [`crate::util::stats`].
 //! * **Multi-model routing** — a [`router::ModelRouter`] owns one
 //!   engine per model with the worker/intra-op budget split across
 //!   them, and [`http::HttpServer`] puts the whole stack behind a

@@ -1,25 +1,31 @@
-//! Worker pool: each worker thread owns warm net replicas bound to its
-//! own device and drains the shared dispatch queue.
+//! Worker pool: each worker thread owns one warm net replica bound to
+//! its own device and drains the shared dispatch queue.
 //!
 //! `Net` is built on `Rc<RefCell<Blob>>` and cannot cross threads, so a
-//! worker *builds* its replicas inside the thread from the (Send)
+//! worker *builds* its replica inside the thread from the (Send)
 //! `NetParameter` and adopts the engine's `WeightSnapshot` — the
 //! `Arc`-shared host weights. Activations, scratch buffers and the
 //! device are all private to the worker, which is what makes N workers
 //! run forwards concurrently without any locking on the hot path.
 //!
-//! A worker pre-builds two replica shapes at startup — full `max_batch`
-//! for coalesced traffic and batch-1 for lone requests — so the common
-//! low-occupancy case doesn't pay a full-batch forward per request, and
-//! no net construction ever happens on the serving path.
+//! **Dynamic shapes**: the replica is built once at `max_batch` (warming
+//! every grow-only activation to its high-water allocation), then
+//! reshaped via `Net::reshape_batch` to each popped batch's *bucketed*
+//! size (`runtime::plan::batch_bucket`: next power of two, capped at
+//! `max_batch`). A partial batch therefore costs the FLOPs of its bucket
+//! — at most 2× its filled rows — instead of a pad-to-`max_batch`
+//! forward, and a lone request runs at batch 1 with no special-cased
+//! second replica. Reshapes between consecutive batches of the same
+//! bucket are free (no-op), and the bucket count bounds shape churn to
+//! `log2(max_batch)+1` distinct execution shapes.
 //!
 //! **Weight hot-swap**: before executing each popped batch the worker
 //! compares the engine's published weights version (one atomic load)
-//! against the version its replicas carry; on a mismatch it takes the
-//! slot lock once, adopts the new snapshot into *both* replicas, and
-//! only then serves. Adoption is O(1) per blob (`Arc` attach), batches
-//! already popped finish on the version they started with, and every
-//! response is stamped with exactly the version that computed it.
+//! against the version its replica carries; on a mismatch it takes the
+//! slot lock once, adopts the new snapshot, and only then serves.
+//! Adoption is O(1) per blob (`Arc` attach), batches already popped
+//! finish on the version they started with, and every response is
+//! stamped with exactly the version that computed it.
 
 use super::batcher::{gather, scatter, Batch};
 use super::engine::{DeviceKind, SharedWeights};
@@ -29,6 +35,7 @@ use crate::device::Device;
 use crate::layers::SharedBlob;
 use crate::net::{Net, WeightSnapshot};
 use crate::proto::Phase;
+use crate::runtime::plan::batch_bucket;
 use crate::zoo::DeployNet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -80,25 +87,30 @@ impl Drop for PoolGuard {
     }
 }
 
-/// One net replica at a fixed batch shape.
+/// The worker's single net replica, reshaped on the fly to each batch's
+/// bucketed row count.
 struct Replica {
     net: Net,
     input: SharedBlob,
     output: SharedBlob,
-    batch: usize,
+    /// Batch rows the net is currently shaped for.
+    rows: usize,
 }
 
 impl Replica {
+    /// Build at the deploy net's full `max_batch` shape, so every
+    /// grow-only activation starts at its high-water allocation and no
+    /// later reshape ever allocates on the serving path.
     fn build(
         ctx: &WorkerContext,
-        batch: usize,
         snap: &WeightSnapshot,
         dev: &mut dyn Device,
     ) -> anyhow::Result<Replica> {
-        let mut param = ctx.deploy.param.clone();
-        anyhow::ensure!(!param.inputs.is_empty(), "deploy param has no inputs");
-        param.inputs[0].1[0] = batch;
-        let mut net = Net::from_param(&param, Phase::Test, dev)?;
+        anyhow::ensure!(
+            !ctx.deploy.param.inputs.is_empty(),
+            "deploy param has no inputs"
+        );
+        let mut net = Net::from_param(&ctx.deploy.param, Phase::Test, dev)?;
         net.adopt_weights(dev, snap)?;
         let input = net
             .blob(&ctx.deploy.input)
@@ -106,16 +118,31 @@ impl Replica {
         let output = net
             .blob(&ctx.deploy.output)
             .ok_or_else(|| anyhow::anyhow!("output blob '{}' missing", ctx.deploy.output))?;
-        Ok(Replica { net, input, output, batch })
+        Ok(Replica { net, input, output, rows: ctx.deploy.batch })
     }
 
-    /// Execute one coalesced batch and scatter the results, stamping
-    /// every response with the weights version that computed it.
+    /// Reshape to the batch's bucket, execute, and scatter the results,
+    /// stamping every response with the weights version that computed it.
     fn serve(&mut self, dev: &mut dyn Device, batch: Batch, ctx: &WorkerContext, version: u64) {
         let k = batch.requests.len();
+        let rows = batch_bucket(k, ctx.deploy.batch);
+        if rows != self.rows {
+            if let Err(e) = self.net.reshape_batch(dev, rows) {
+                // A failed reshape can leave the DAG half-propagated:
+                // poison the cached shape so the next batch re-runs the
+                // reshape instead of trusting a stale `rows` match.
+                self.rows = 0;
+                let msg = format!("worker {}: reshape to batch {rows} failed: {e:#}", ctx.id);
+                for req in batch.requests {
+                    req.fail(&msg);
+                }
+                return;
+            }
+            self.rows = rows;
+        }
         let samples: Vec<&[f32]> =
             batch.requests.iter().map(|r| r.sample.as_slice()).collect();
-        let packed = gather(&samples, ctx.deploy.sample_len, self.batch);
+        let packed = gather(&samples, ctx.deploy.sample_len, rows);
         drop(samples);
         self.input.borrow_mut().set_data(dev, &packed);
         // On the FPGA sim, meter the batch in *simulated* device time so
@@ -123,12 +150,19 @@ impl Replica {
         let sim_before = dev.sim_clock_ns();
         match self.net.forward(dev) {
             Ok(_) => {
+                // Row accounting only for batches that actually ran —
+                // a failed forward must not inflate occupancy.
+                ctx.metrics.record_rows(k, rows);
                 if let (Some(t0), Some(t1)) = (sim_before, dev.sim_clock_ns()) {
                     ctx.metrics.record_sim_batch(t1.saturating_sub(t0));
                 }
-                let out = self.output.borrow_mut().data_vec(dev);
-                let rows = scatter(&out, ctx.output_len, k);
-                for (req, row) in batch.requests.into_iter().zip(rows) {
+                // Read back only the filled rows — the grow-only output
+                // blob's allocation is sized for the largest batch ever
+                // run, not this one.
+                let mut out = vec![0.0f32; k * ctx.output_len];
+                self.output.borrow_mut().data.read_prefix(dev, &mut out);
+                let result_rows = scatter(&out, ctx.output_len, k);
+                for (req, row) in batch.requests.into_iter().zip(result_rows) {
                     let ns = req.submitted.elapsed().as_nanos() as u64;
                     req.fulfill(row, version);
                     ctx.metrics.record_done(ns);
@@ -157,35 +191,16 @@ pub(crate) fn run(ctx: WorkerContext) {
 
     let mut dev: Box<dyn Device> = ctx.device.create();
 
-    // Pre-build both replica shapes before taking traffic, so no net
-    // construction (layer setup + weight-filler init) ever lands on the
-    // serving path. The full-batch replica is mandatory (the guard
-    // retires this worker if it fails); the batch-1 replica is a
-    // fast-path optimization and its absence only costs padding.
+    // Build the replica before taking traffic, so no net construction
+    // (layer setup + weight-filler init) ever lands on the serving path.
     let snap = ctx.current_weights();
     let mut version = snap.version();
-    let max_batch = ctx.deploy.batch;
-    let mut full = match Replica::build(&ctx, max_batch, &snap, dev.as_mut()) {
+    let mut replica = match Replica::build(&ctx, &snap, dev.as_mut()) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("[serve] worker {}: replica build failed: {e:#}", ctx.id);
             return;
         }
-    };
-    let mut single = if max_batch > 1 {
-        match Replica::build(&ctx, 1, &snap, dev.as_mut()) {
-            Ok(r) => Some(r),
-            Err(e) => {
-                eprintln!(
-                    "[serve] worker {}: batch-1 replica build failed ({e:#}); \
-                     lone requests will pad to the full batch",
-                    ctx.id
-                );
-                None
-            }
-        }
-    } else {
-        None
     };
     drop(snap);
 
@@ -193,29 +208,12 @@ pub(crate) fn run(ctx: WorkerContext) {
         // Batch boundary: adopt a newly published snapshot before
         // executing. One relaxed-cost atomic load in the common case;
         // the slot lock is only taken when the version actually moved.
+        // (The engine validated the snapshot against the shared schema,
+        // so an adoption failure here indicates a bug, not bad input —
+        // the worker keeps serving its current version.)
         if ctx.weights.version.load(Ordering::Acquire) != version {
             let snap = ctx.current_weights();
-            // Adopt the batch-1 fast path first: if it can't follow the
-            // swap, drop it rather than risk serving two versions from
-            // one worker. (The engine validated the snapshot against
-            // the shared schema, so failures here indicate a bug, not
-            // bad input.)
-            let mut drop_single = false;
-            if let Some(s) = single.as_mut() {
-                if let Err(e) = s.net.adopt_weights(dev.as_mut(), &snap) {
-                    eprintln!(
-                        "[serve] worker {}: batch-1 replica failed to adopt weights v{}: \
-                         {e:#}; dropping the fast path",
-                        ctx.id,
-                        snap.version()
-                    );
-                    drop_single = true;
-                }
-            }
-            if drop_single {
-                single = None;
-            }
-            match full.net.adopt_weights(dev.as_mut(), &snap) {
+            match replica.net.adopt_weights(dev.as_mut(), &snap) {
                 Ok(()) => version = snap.version(),
                 Err(e) => {
                     eprintln!(
@@ -224,18 +222,9 @@ pub(crate) fn run(ctx: WorkerContext) {
                         ctx.id,
                         snap.version()
                     );
-                    // The batch-1 replica may already carry the new
-                    // weights — drop it so this worker can't serve two
-                    // versions at once (padding to full batch is the
-                    // only cost).
-                    single = None;
                 }
             }
         }
-        let replica = match (&mut single, batch.requests.len()) {
-            (Some(s), 1) => s,
-            _ => &mut full,
-        };
         replica.serve(dev.as_mut(), batch, &ctx, version);
     }
 }

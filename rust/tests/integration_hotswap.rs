@@ -231,6 +231,59 @@ fn solver_publishes_into_live_engine() {
     engine.shutdown();
 }
 
+/// Reshape under hot-swap: the worker's single replica is reshaped to
+/// each batch's bucket *and* adopts published snapshots at batch
+/// boundaries — a publish landing between two differently-shaped
+/// batches must neither stall the reshape nor leak the old weights into
+/// the new shape.
+#[test]
+fn publish_between_reshapes_serves_exact_versions() {
+    let param = parse_net(SWAP_NET).unwrap();
+    let engine = engine_for(&param, 1, 4);
+    let input = vec![1.0f32; engine.sample_len()];
+
+    let s1 = constant_snapshot(&param, 1.0, 1);
+    let e1 = forward_with(&param, &s1, &input);
+    let s2 = constant_snapshot(&param, 2.0, 2);
+    let e2 = forward_with(&param, &s2, &input);
+    assert_ne!(e1, e2);
+
+    engine.publish_weights(s1).unwrap();
+    // Lone request: the replica reshapes down to the batch-1 bucket.
+    let r = engine.submit(input.clone()).unwrap().wait().unwrap();
+    assert_eq!(r.weights_version, 1);
+    assert_eq!(r.values, e1);
+
+    // Publish between reshapes, then a burst that reshapes back up.
+    engine.publish_weights(s2).unwrap();
+    let handles: Vec<_> = (0..3)
+        .map(|_| engine.submit(input.clone()).unwrap())
+        .collect();
+    for h in handles {
+        let r = h.wait().unwrap();
+        assert_eq!(r.weights_version, 2, "post-publish batch must serve v2");
+        assert_eq!(r.values, e2, "reshaped replica leaked old weights");
+    }
+
+    // And back down to a lone request on the new version.
+    let r = engine.submit(input.clone()).unwrap().wait().unwrap();
+    assert_eq!((r.weights_version, r.values), (2, e2));
+
+    engine.shutdown();
+    let m = engine.metrics().snapshot();
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.completed, 5);
+    // Rows were bucketed, never padded: the two lone requests cost 1 row
+    // each and the burst at most its bucket of 4 (pad-to-max would have
+    // executed 4 rows for every one of the ≥3 batches).
+    assert_eq!(m.filled_rows, 5);
+    assert!(
+        m.executed_rows <= 6,
+        "executed {} rows for 5 requests — still padding?",
+        m.executed_rows
+    );
+}
+
 /// A training-net snapshot with pruned-at-deploy extra params (aux
 /// classifier head) publishes cleanly: the engine projects it onto the
 /// deploy schema by (owner, slot) key.

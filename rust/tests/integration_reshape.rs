@@ -1,0 +1,185 @@
+//! Integration: dynamic-shape execution (ISSUE 5).
+//!
+//! The contract under test:
+//!
+//! * `Net::reshape_batch(k)` outputs are bit-identical to a *fresh*
+//!   batch-k net with the same weights, for k ∈ {1, 3, max}, on both
+//!   the CPU and the FPGA-sim device;
+//! * a grow → shrink → grow reshape cycle reproduces the original
+//!   full-batch outputs bit-for-bit (grow-only activations never
+//!   corrupt a later larger batch);
+//! * the serving engine's single shape-polymorphic replica serves a
+//!   partial batch bit-identically to a fixed batch-k net, and the
+//!   occupancy accounting reflects the bucketed rows it executed.
+
+use fecaffe::device::cpu::CpuDevice;
+use fecaffe::device::fpga::FpgaSimDevice;
+use fecaffe::device::Device;
+use fecaffe::net::Net;
+use fecaffe::proto::Phase;
+use fecaffe::serve::{DeviceKind, Engine, EngineConfig};
+use fecaffe::util::prng::Pcg32;
+use fecaffe::zoo;
+use std::time::Duration;
+
+fn mk_device(kind: DeviceKind) -> Box<dyn Device> {
+    match kind {
+        DeviceKind::Cpu => Box::new(CpuDevice::new()),
+        DeviceKind::FpgaSim => Box::new(FpgaSimDevice::new()),
+    }
+}
+
+fn random_samples(n: usize, len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    let mut v = vec![0f32; n * len];
+    rng.fill_uniform(&mut v, 0.0, 1.0);
+    v
+}
+
+/// Forward the first `k` samples through `net` (already shaped for
+/// batch k) and return the output rows.
+fn forward_k(
+    dev: &mut dyn Device,
+    net: &mut Net,
+    dep: &zoo::DeployNet,
+    samples: &[f32],
+    k: usize,
+) -> Vec<f32> {
+    let input = net.blob(&dep.input).unwrap();
+    input
+        .borrow_mut()
+        .set_data(dev, &samples[..k * dep.sample_len]);
+    net.forward(dev).unwrap();
+    let out = net.blob(&dep.output).unwrap();
+    let v = out.borrow_mut().data_vec(dev);
+    v
+}
+
+fn reshape_matches_fresh_net(kind: DeviceKind) {
+    let max = 8usize;
+    let dep = zoo::deploy_by_name("lenet", max).unwrap();
+    let mut dev = mk_device(kind);
+    let mut net = Net::from_param(&dep.param, Phase::Test, dev.as_mut()).unwrap();
+    let snap = net.share_weights(dev.as_mut());
+    let samples = random_samples(max, dep.sample_len, 99);
+
+    for &k in &[1usize, 3, max] {
+        net.reshape_batch(dev.as_mut(), k).unwrap();
+        let got = forward_k(dev.as_mut(), &mut net, &dep, &samples, k);
+        assert_eq!(got.len(), k * 10, "batch {k}: output row count");
+
+        // Reference: a *fresh* net built at batch k with the same weights.
+        let dep_k = zoo::deploy_by_name("lenet", k).unwrap();
+        let mut dev_f = mk_device(kind);
+        let mut fresh = Net::from_param(&dep_k.param, Phase::Test, dev_f.as_mut()).unwrap();
+        fresh.adopt_weights(dev_f.as_mut(), &snap).unwrap();
+        let want = forward_k(dev_f.as_mut(), &mut fresh, &dep_k, &samples, k);
+        assert_eq!(got, want, "batch {k}: reshaped net diverged from fresh net");
+    }
+}
+
+#[test]
+fn reshape_batch_matches_fresh_net_on_cpu() {
+    reshape_matches_fresh_net(DeviceKind::Cpu);
+}
+
+#[test]
+fn reshape_batch_matches_fresh_net_on_fpga_sim() {
+    reshape_matches_fresh_net(DeviceKind::FpgaSim);
+}
+
+/// Grow → shrink → grow: after cycling through smaller batches, the
+/// full-batch forward must reproduce its original outputs exactly —
+/// grow-only activations and the rebucketed scratch never leak state
+/// into a later shape.
+#[test]
+fn grow_shrink_grow_cycle_is_exact() {
+    let max = 8usize;
+    let dep = zoo::deploy_by_name("lenet", max).unwrap();
+    let mut dev = CpuDevice::new();
+    let mut net = Net::from_param(&dep.param, Phase::Test, &mut dev).unwrap();
+    let samples = random_samples(max, dep.sample_len, 5);
+
+    let full_before = forward_k(&mut dev, &mut net, &dep, &samples, max);
+
+    net.reshape_batch(&mut dev, 1).unwrap();
+    let one = forward_k(&mut dev, &mut net, &dep, &samples, 1);
+    // Per-sample math is batch-invariant: row 0 matches the full batch.
+    assert_eq!(one, full_before[..10].to_vec());
+
+    net.reshape_batch(&mut dev, 3).unwrap();
+    let three = forward_k(&mut dev, &mut net, &dep, &samples, 3);
+    assert_eq!(three, full_before[..30].to_vec());
+
+    net.reshape_batch(&mut dev, max).unwrap();
+    let full_after = forward_k(&mut dev, &mut net, &dep, &samples, max);
+    assert_eq!(full_after, full_before, "grow-shrink-grow changed bits");
+}
+
+fn engine_partial_batch_matches_fixed_net(kind: DeviceKind) {
+    let k = 3usize;
+    let max_batch = 8usize;
+    let param = zoo::by_name("lenet", 1).unwrap();
+    let engine = Engine::new(
+        &param,
+        EngineConfig {
+            workers: 1,
+            max_batch,
+            max_linger: Duration::from_millis(200),
+            queue_capacity: 64,
+            device: kind,
+            intra_op_threads: 1,
+        },
+    )
+    .unwrap();
+
+    let samples = random_samples(k, engine.sample_len(), 21);
+    let handles: Vec<_> = samples
+        .chunks(engine.sample_len())
+        .map(|s| engine.submit(s.to_vec()).unwrap())
+        .collect();
+    let got: Vec<Vec<f32>> = handles
+        .into_iter()
+        .map(|h| h.wait().unwrap().values)
+        .collect();
+    engine.shutdown();
+
+    // Occupancy accounting: 3 filled rows; the replica executed the
+    // bucketed rows for however the batcher coalesced them (one batch of
+    // 3 buckets to 4), always strictly fewer than pad-to-max.
+    let m = engine.metrics().snapshot();
+    assert_eq!(m.filled_rows, k as u64);
+    assert!(m.executed_rows >= k as u64);
+    assert!(
+        m.executed_rows < m.batches * max_batch as u64,
+        "executed {} rows across {} batches — worker still pads to max_batch",
+        m.executed_rows,
+        m.batches
+    );
+    assert!(m.batch_occupancy > 0.0 && m.batch_occupancy <= 1.0);
+
+    // Reference: a fixed batch-k net on the same device kind adopting
+    // the engine's weights; responses must match bit for bit.
+    let dep_k = zoo::deploy_by_name("lenet", k).unwrap();
+    let mut dev = mk_device(kind);
+    let mut fixed = Net::from_param(&dep_k.param, Phase::Test, dev.as_mut()).unwrap();
+    fixed.adopt_weights(dev.as_mut(), &engine.weights()).unwrap();
+    let want = forward_k(dev.as_mut(), &mut fixed, &dep_k, &samples, k);
+    for (i, row) in got.iter().enumerate() {
+        assert_eq!(
+            row,
+            &want[i * 10..(i + 1) * 10],
+            "sample {i}: dynamic batch diverged from fixed batch-{k} net"
+        );
+    }
+}
+
+#[test]
+fn engine_partial_batch_matches_fixed_net_on_cpu() {
+    engine_partial_batch_matches_fixed_net(DeviceKind::Cpu);
+}
+
+#[test]
+fn engine_partial_batch_matches_fixed_net_on_fpga_sim() {
+    engine_partial_batch_matches_fixed_net(DeviceKind::FpgaSim);
+}
