@@ -34,6 +34,7 @@ fn main() -> anyhow::Result<()> {
             queue_capacity: 1024,
             device: DeviceKind::Cpu,
             intra_op_threads: 0, // auto: split the machine across workers
+            trace_sample: 0,     // sampling off — measures the wait-free path
         };
         let engine = Engine::new(&param, cfg)?;
         // Warm the replicas (first forward pays blob upload + scratch
@@ -80,6 +81,7 @@ fn main() -> anyhow::Result<()> {
             queue_capacity: 1024,
             device: DeviceKind::Cpu,
             intra_op_threads: 0,
+            trace_sample: 0,
         };
         let router = Arc::new(ModelRouter::from_zoo(&["lenet"], &cfg)?);
         let sample_len = router.engine("lenet").expect("registered").sample_len();
@@ -116,6 +118,7 @@ fn main() -> anyhow::Result<()> {
             queue_capacity: 1024,
             device: DeviceKind::Cpu,
             intra_op_threads: 0,
+            trace_sample: 0,
         };
         let engine = Engine::new(&param, cfg)?;
         let _ = load_test(&engine, clients, clients * 2, 1); // warm
@@ -184,6 +187,7 @@ fn main() -> anyhow::Result<()> {
             queue_capacity: 1024,
             device: DeviceKind::Cpu,
             intra_op_threads: 0,
+            trace_sample: 0,
         };
         let engine = Engine::new(&param, cfg)?;
         let _ = load_test(&engine, low_clients, low_clients * 2, 1); // warm

@@ -19,6 +19,9 @@ fn main() -> anyhow::Result<()> {
             device: DeviceKind::Cpu,
             // 0 = split the process thread budget across the 2 workers.
             intra_op_threads: 0,
+            // Batch tracing off (1 would sample every batch into the
+            // ring behind Engine::obs / GET /admin/trace).
+            trace_sample: 0,
         },
     )?;
     println!(

@@ -41,6 +41,11 @@ const SPECS: &[Spec] = &[
         Some("0"),
         "intra-op threads per worker (0 = split FECAFFE_THREADS evenly)",
     ),
+    Spec::opt(
+        "trace-sample",
+        Some("0"),
+        "sample every Nth batch into the trace ring for GET /admin/trace (0 = off)",
+    ),
     Spec::opt("requests", Some("512"), "load-test request count"),
     Spec::opt("clients", Some("8"), "load-test client threads"),
     Spec::opt("json", None, "also write the report as JSON to this path"),
@@ -101,6 +106,7 @@ fn run_http_server(args: &Args, addr: &str) -> anyhow::Result<()> {
         queue_capacity: args.get_usize("queue-cap").map_err(anyhow::Error::msg)?,
         device: parse_device(args)?,
         intra_op_threads: args.get_usize("intra-op").map_err(anyhow::Error::msg)?,
+        trace_sample: args.get_usize("trace-sample").map_err(anyhow::Error::msg)? as u64,
     };
     println!(
         "[serve] building {} engine(s) ({}) | {} total worker(s) on {:?} | max-batch {} | queue {}",
@@ -124,7 +130,8 @@ fn run_http_server(args: &Args, addr: &str) -> anyhow::Result<()> {
     let server = HttpServer::bind(addr, router, HttpConfig::default())?;
     println!("[serve] listening on http://{}", server.local_addr());
     println!(
-        "[serve] POST /v1/models/<name>:predict | GET /v1/models | GET /metrics | GET /healthz \
+        "[serve] POST /v1/models/<name>:predict | GET /v1/models | GET /healthz \
+         | GET /metrics[?format=prometheus] | GET /admin/trace \
          | POST /admin/models/<name>:publish | POST /admin/shutdown"
     );
     server.wait_shutdown();
@@ -206,6 +213,7 @@ fn run_load_test(args: &Args) -> anyhow::Result<()> {
         queue_capacity: args.get_usize("queue-cap").map_err(anyhow::Error::msg)?,
         device: parse_device(args)?,
         intra_op_threads: args.get_usize("intra-op").map_err(anyhow::Error::msg)?,
+        trace_sample: args.get_usize("trace-sample").map_err(anyhow::Error::msg)? as u64,
     };
     let requests = args.get_usize("requests").map_err(anyhow::Error::msg)?;
     let clients = args.get_usize("clients").map_err(anyhow::Error::msg)?;

@@ -296,6 +296,29 @@ impl Device for FpgaSimDevice {
     fn sim_clock_ns(&self) -> Option<u64> {
         Some(self.completion())
     }
+
+    fn set_span_recording(&mut self, on: bool) {
+        self.profiler.record_spans = on;
+    }
+
+    fn take_spans(&mut self) -> Vec<profiler::Span> {
+        self.profiler.take_spans()
+    }
+
+    fn kernel_stats(&self) -> Vec<(&'static str, u64, u64)> {
+        self.profiler
+            .stats()
+            .iter()
+            .map(|(class, s)| (class.label(), s.instances, s.total_ns))
+            .collect()
+    }
+
+    fn reset_timing(&mut self) {
+        // Resolves to the inherent method (clocks + profiler), exposed
+        // here so `Box<dyn Device>` callers (the profile CLI) can reset
+        // without downcasting.
+        FpgaSimDevice::reset_timing(self);
+    }
 }
 
 #[cfg(test)]

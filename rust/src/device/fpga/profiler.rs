@@ -58,6 +58,13 @@ impl Profiler {
         &self.spans
     }
 
+    /// Drain the recorded spans, leaving counters untouched — how the
+    /// serving worker collects one sampled batch's device lanes without
+    /// resetting the Table-2 aggregates.
+    pub fn take_spans(&mut self) -> Vec<Span> {
+        std::mem::take(&mut self.spans)
+    }
+
     pub fn reset(&mut self) {
         self.stats.clear();
         self.spans.clear();
@@ -99,6 +106,17 @@ mod tests {
         p.record_spans = true;
         p.record(KClass::Gemm, "g", "fpga-kernel", 1, 1);
         assert_eq!(p.spans().len(), 1);
+    }
+
+    #[test]
+    fn take_spans_drains_timeline_but_keeps_counters() {
+        let mut p = Profiler::new();
+        p.record_spans = true;
+        p.record(KClass::Gemm, "g", "fpga-kernel", 0, 5);
+        let spans = p.take_spans();
+        assert_eq!(spans.len(), 1);
+        assert!(p.spans().is_empty());
+        assert_eq!(p.stats()[&KClass::Gemm].instances, 1);
     }
 
     #[test]

@@ -398,6 +398,25 @@ pub trait Device {
     fn sim_clock_ns(&self) -> Option<u64> {
         None
     }
+    /// Enable/disable span recording on the device profiler. No-op on
+    /// devices without one (CPU) — the serving worker toggles this per
+    /// *sampled* batch, so unprofiled devices pay nothing.
+    fn set_span_recording(&mut self, _on: bool) {}
+    /// Drain the profiler's recorded spans (lanes "host" / "pcie" /
+    /// "fpga-kernel", timestamps on the simulated clock). Empty on
+    /// devices without a profiler.
+    fn take_spans(&mut self) -> Vec<fpga::profiler::Span> {
+        Vec::new()
+    }
+    /// Per-kernel-class `(label, instances, total_ns)` rows accumulated
+    /// since the last reset — the paper's Table 2 accounting. Empty on
+    /// devices without a profiler.
+    fn kernel_stats(&self) -> Vec<(&'static str, u64, u64)> {
+        Vec::new()
+    }
+    /// Reset simulated clocks and profiler counters. No-op on
+    /// wallclock devices.
+    fn reset_timing(&mut self) {}
     /// Shared scratch buffer for slot `slot`, at least `len` elements.
     /// Conv layers share slots 0 (col) and 1 (col_diff) — one DDR scratch
     /// region for the whole net, like the OpenCL implementation's global

@@ -109,6 +109,41 @@ pub trait Layer {
     }
 }
 
+/// One layer's timing sample, delivered to a [`LayerTimer`] during a
+/// traced forward pass (`Net::forward_traced`). Offsets are relative
+/// to the start of that pass; wall time is always present, simulated
+/// device time only on devices with a sim clock (FPGA sim).
+#[derive(Debug, Clone, Copy)]
+pub struct LayerTiming<'a> {
+    /// Position in the net's execution order.
+    pub index: usize,
+    pub name: &'a str,
+    pub kind: &'static str,
+    /// Wall-clock start offset, ns, from the start of the pass.
+    pub wall_start_ns: u64,
+    pub wall_ns: u64,
+    /// Simulated-clock start offset from the start of the pass.
+    pub sim_start_ns: Option<u64>,
+    /// Simulated-clock advance across this layer. Per-layer durations
+    /// telescope: each span runs from the previous layer's synchronize
+    /// to this one's, so their sum equals the sim-clock advance of the
+    /// whole pass (the invariant `fecaffe profile` checks).
+    pub sim_ns: Option<u64>,
+}
+
+/// Per-layer timing hook for `Net::forward_traced` — how both the CPU
+/// and FPGA-sim paths report per-layer wall/sim time to the
+/// observability layer without the net knowing who is listening.
+pub trait LayerTimer {
+    fn record(&mut self, t: LayerTiming<'_>);
+}
+
+impl<F: for<'a> FnMut(LayerTiming<'a>)> LayerTimer for F {
+    fn record(&mut self, t: LayerTiming<'_>) {
+        self(t)
+    }
+}
+
 /// Construct a layer from its prototxt definition (the layer registry).
 pub fn create_layer(param: &LayerParameter, phase: Phase) -> anyhow::Result<Box<dyn Layer>> {
     let l: Box<dyn Layer> = match param.kind.as_str() {

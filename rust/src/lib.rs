@@ -19,7 +19,11 @@
 //!   Figures 4/5, with [`baseline`] implementing the F-CNN comparator;
 //! * an inference serving engine: [`serve`] micro-batches single-sample
 //!   requests onto a pool of warm net replicas with `Arc`-shared weights
-//!   (the `serve` binary drives it under load).
+//!   (the `serve` binary drives it under load);
+//! * a unified observability layer: [`obs`] (sampled batch traces,
+//!   per-layer timing hooks, training metrics) feeding the [`trace`]
+//!   timeline renderers, the Prometheus `/metrics` exposition and the
+//!   `fecaffe profile` per-layer/per-kernel breakdown.
 //!
 //! See `DESIGN.md` for the experiment index and substitution notes.
 
@@ -31,6 +35,7 @@ pub mod device;
 pub mod runtime;
 pub mod layers;
 pub mod net;
+pub mod obs;
 pub mod serve;
 pub mod solver;
 pub mod data;

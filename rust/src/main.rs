@@ -7,6 +7,7 @@
 //! fecaffe train --net lenet --iters 200            # zoo net + default solver
 //! fecaffe train --net lenet --serve 127.0.0.1:8080 # train + serve in one process
 //! fecaffe time  --net googlenet --batch 1 --iterations 10
+//! fecaffe profile --net lenet --iterations 10      # per-layer / per-kernel sim profile
 //! fecaffe zoo                                      # list networks
 //! fecaffe export --net lenet                       # print prototxt
 //! fecaffe weights --net lenet --out w.fewts        # export a weight snapshot
@@ -15,6 +16,7 @@
 use fecaffe::device::cpu::CpuDevice;
 use fecaffe::device::fpga::FpgaSimDevice;
 use fecaffe::device::Device;
+use fecaffe::layers::LayerTiming;
 use fecaffe::net::Net;
 use fecaffe::proto::{self, Phase};
 use fecaffe::runtime::PjrtBackend;
@@ -30,7 +32,7 @@ const SPECS: &[Spec] = &[
     Spec::opt("device", Some("fpga"), "fpga | cpu"),
     Spec::opt("batch", Some("1"), "train batch size (zoo nets)"),
     Spec::opt("iters", None, "override solver max_iter"),
-    Spec::opt("iterations", Some("10"), "timing iterations (time command)"),
+    Spec::opt("iterations", Some("10"), "timing iterations (time/profile commands)"),
     Spec::opt("snapshot", None, "restore from snapshot before training"),
     Spec::opt(
         "serve",
@@ -151,6 +153,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             };
             let engine = Engine::new(&netp, ecfg)?;
             let router = Arc::new(ModelRouter::from_engines(vec![(model.clone(), engine)])?);
+            // The solver's training counters ride along on the serving
+            // surface: `GET /metrics` gains a "training" section (and
+            // fecaffe_train_* Prometheus families) while training runs.
+            router.attach_training(solver.metrics.clone());
             let server = HttpServer::bind(addr, router.clone(), HttpConfig::default())?;
             println!(
                 "[fecaffe] serving '{model}' on http://{} while training \
@@ -287,6 +293,100 @@ fn cmd_time(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `fecaffe profile`: the paper's per-layer / per-kernel-class timing
+/// breakdown (Table 2 / Figure 5) from the simulated device. Runs
+/// `--iterations` forward passes after one warm-up, accumulates
+/// per-layer wall and simulated time through [`Net::forward_traced`],
+/// prints both tables, and cross-checks the telescoping invariant: the
+/// per-layer simulated times must sum to *exactly* the device's total
+/// sim-clock advance (nothing double-counted, nothing unattributed).
+fn cmd_profile(args: &Args) -> anyhow::Result<()> {
+    let mut dev = make_device(args)?;
+    let netp = load_net_param(args)?;
+    let iters = args.get_usize("iterations").map_err(anyhow::Error::msg)?.max(1);
+    let mut net = Net::from_param(&netp, Phase::Train, dev.as_mut())?;
+    // One warm-up pass keeps one-time costs (lazy activation growth,
+    // PJRT dispatch setup) out of the profile; then the clocks reset so
+    // the measured window starts at sim time 0.
+    net.forward(dev.as_mut())?;
+    dev.reset_timing();
+    let names = net.layer_names();
+    let mut kinds: Vec<&'static str> = vec![""; names.len()];
+    let mut wall = vec![0u64; names.len()];
+    let mut sim = vec![0u64; names.len()];
+    for _ in 0..iters {
+        net.forward_traced(dev.as_mut(), &mut |t: LayerTiming<'_>| {
+            kinds[t.index] = t.kind;
+            wall[t.index] += t.wall_ns;
+            sim[t.index] += t.sim_ns.unwrap_or(0);
+        })?;
+    }
+    let sim_total: u64 = sim.iter().sum();
+    let wall_total: u64 = wall.iter().sum();
+    let per_iter = |ns: u64| format!("{:.3}", ns as f64 / iters as f64 / 1e6);
+    let share = |ns: u64| {
+        if sim_total > 0 {
+            format!("{:.1}", ns as f64 * 100.0 / sim_total as f64)
+        } else {
+            "-".to_string()
+        }
+    };
+    let mut table = fecaffe::util::table::Table::new(
+        &format!("{} per-layer profile (avg of {iters} forward passes, {})", netp.name, dev.kind()),
+        &["Layer", "Kind", "Wall ms", "Sim ms", "Sim %"],
+    );
+    for i in 0..names.len() {
+        table.row(&[
+            names[i].clone(),
+            kinds[i].to_string(),
+            per_iter(wall[i]),
+            per_iter(sim[i]),
+            share(sim[i]),
+        ]);
+    }
+    table.row(&[
+        "TOTAL".into(),
+        "".into(),
+        per_iter(wall_total),
+        per_iter(sim_total),
+        share(sim_total),
+    ]);
+    println!("{}", table.render());
+
+    let stats = dev.kernel_stats();
+    if !stats.is_empty() {
+        let mut kt = fecaffe::util::table::Table::new(
+            &format!("per-kernel-class simulated time ({iters} forward passes)"),
+            &["Class", "Launches", "Total ms", "Mean us"],
+        );
+        for (label, instances, total_ns) in &stats {
+            kt.row(&[
+                label.to_string(),
+                instances.to_string(),
+                format!("{:.3}", *total_ns as f64 / 1e6),
+                format!("{:.2}", *total_ns as f64 / (*instances).max(1) as f64 / 1e3),
+            ]);
+        }
+        println!("{}", kt.render());
+    }
+
+    if let Some(total) = dev.sim_clock_ns() {
+        println!(
+            "Simulated device time: {:.3} ms; per-layer sum {:.3} ms",
+            total as f64 / 1e6,
+            sim_total as f64 / 1e6
+        );
+        if sim_total != total {
+            anyhow::bail!(
+                "per-layer sim time ({sim_total} ns) does not telescope to the \
+                 device sim clock ({total} ns)"
+            );
+        }
+        println!("Per-layer simulated times telescope exactly to the device clock.");
+    }
+    Ok(())
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match Args::parse(&argv, SPECS) {
@@ -300,6 +400,7 @@ fn main() {
     let result = match cmd {
         "train" => cmd_train(&args),
         "time" => cmd_time(&args),
+        "profile" => cmd_profile(&args),
         "weights" => cmd_weights(&args),
         "zoo" => {
             for n in zoo::NETWORKS {
@@ -314,7 +415,7 @@ fn main() {
             println!(
                 "{}",
                 usage(
-                    "fecaffe <train|time|zoo|export|weights>",
+                    "fecaffe <train|time|profile|zoo|export|weights>",
                     "FeCaffe: FPGA-enabled Caffe (simulated Stratix 10 + PJRT AOT kernels)",
                     SPECS
                 )

@@ -14,10 +14,11 @@
 
 use crate::blob::Blob;
 use crate::device::Device;
-use crate::layers::{create_layer, shared, Layer, SharedBlob};
+use crate::layers::{create_layer, shared, Layer, LayerTimer, LayerTiming, SharedBlob};
 use crate::proto::{LayerParameter, NetParameter, ParamSpec, Phase};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Immutable host-side snapshot of every learnable parameter, shared
 /// between net replicas via `Arc` — the serving engine's "weights
@@ -404,15 +405,53 @@ impl Net {
     /// (loss, per-layer ns) using the device's simulated clock when
     /// available, else wallclock.
     pub fn forward_timed(&mut self, dev: &mut dyn Device) -> anyhow::Result<(f32, Vec<u64>)> {
-        let mut loss = 0.0;
         let mut times = Vec::with_capacity(self.layers.len());
+        let loss = self.forward_traced(dev, &mut |t: LayerTiming<'_>| {
+            times.push(t.sim_ns.unwrap_or(t.wall_ns));
+        })?;
+        Ok((loss, times))
+    }
+
+    /// Forward pass with a per-layer [`LayerTimer`] hook: every layer
+    /// reports wall time (always) and simulated device time (when the
+    /// device has a sim clock), with start offsets relative to this
+    /// call. Each layer is bracketed by `dev.synchronize()`, so the
+    /// per-layer sim durations telescope — their sum is *exactly* the
+    /// sim-clock advance across the whole pass. This is the single
+    /// timing path behind `forward_timed`, the serving worker's sampled
+    /// batch traces, and `fecaffe profile`.
+    pub fn forward_traced(
+        &mut self,
+        dev: &mut dyn Device,
+        timer: &mut dyn LayerTimer,
+    ) -> anyhow::Result<f32> {
+        let wall0 = Instant::now();
+        let sim0 = dev.sim_clock_ns();
+        let mut loss = 0.0;
         for i in 0..self.layers.len() {
-            let t0 = clock(dev);
+            let wall_start = wall0.elapsed().as_nanos() as u64;
+            let sim_start = dev.sim_clock_ns();
             loss += self.layers[i].forward(dev, &self.bottoms[i], &self.tops[i])?;
             dev.synchronize();
-            times.push(clock(dev) - t0);
+            let wall_ns = (wall0.elapsed().as_nanos() as u64).saturating_sub(wall_start);
+            let sim_end = dev.sim_clock_ns();
+            timer.record(LayerTiming {
+                index: i,
+                name: self.layers[i].name(),
+                kind: self.layers[i].kind(),
+                wall_start_ns: wall_start,
+                wall_ns,
+                sim_start_ns: match (sim_start, sim0) {
+                    (Some(s), Some(base)) => Some(s.saturating_sub(base)),
+                    _ => None,
+                },
+                sim_ns: match (sim_start, sim_end) {
+                    (Some(a), Some(b)) => Some(b.saturating_sub(a)),
+                    _ => None,
+                },
+            });
         }
-        Ok((loss, times))
+        Ok(loss)
     }
 
     /// Full backward pass.

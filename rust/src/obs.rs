@@ -1,0 +1,444 @@
+//! Unified observability: sampled batch traces, per-layer aggregates
+//! and training metrics — the instrumentation substrate the paper's
+//! evaluation method (VTune / OpenCL-profiler timelines, per-kernel
+//! tables) demands for the *serving* pipeline, not just the FPGA sim.
+//!
+//! Design constraints, in order:
+//! 1. **Wait-free when off.** With `trace_sample == 0` (the default)
+//!    the hot path performs one field read and branches away — no
+//!    atomics, no locks, no clock reads.
+//! 2. **Cheap when on.** Sampling 1/N batches means one relaxed
+//!    `fetch_add` per batch to decide, and only the sampled batch pays
+//!    for `Instant::now` calls and span pushes (plain `Vec` pushes on
+//!    the worker's stack — the ring lock is taken once per *sampled*
+//!    batch, at commit).
+//! 3. **One timeline per batch.** Host-side spans (queue wait, batch
+//!    assembly, reshape, gather, per-layer forward, readback, scatter,
+//!    respond) and the FPGA sim's profiler spans (pcie / fpga-kernel
+//!    lanes) merge into a single chrome-trace view per batch — see
+//!    [`crate::trace::chrome_trace_batches`] and `GET /admin/trace`.
+//!
+//! Span timestamps are nanoseconds relative to the batch's trace
+//! origin (the oldest request's submit time). Device-profiler spans
+//! run on the *simulated* clock; they are rebased so the batch's first
+//! device operation lands at the host-side upload offset, which keeps
+//! the lanes visually aligned even though they tick different clocks.
+
+use crate::device::fpga::profiler::Span;
+use crate::serve::metrics::Histogram;
+use crate::util::json::Json;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Queue lane: admission-queue wait and dispatch wait.
+pub const LANE_QUEUE: &str = "queue";
+/// Host lane: batch-stage spans (reshape / gather / upload / forward /
+/// readback / scatter / respond) plus the sim's host-partitioned
+/// kernels.
+pub const LANE_HOST: &str = "host";
+/// Per-layer lane: one span per layer of the traced forward pass.
+pub const LANE_LAYER: &str = "layer";
+
+/// One sampled batch's complete lifecycle timeline.
+#[derive(Debug, Clone)]
+pub struct BatchTrace {
+    /// Batch sequence number (counts batches seen by the sampler).
+    pub seq: u64,
+    /// Requests carried (filled rows).
+    pub filled: usize,
+    /// Rows the reshaped replica executed (the batch bucket).
+    pub rows: usize,
+    /// Weight snapshot version the batch was served from.
+    pub weights_version: u64,
+    /// Spans, timestamps in ns relative to the oldest request's submit.
+    pub spans: Vec<Span>,
+}
+
+/// Accumulates one batch's spans on the worker stack; committed into
+/// the ring as a [`BatchTrace`] only if the batch completes.
+pub struct BatchTraceBuilder {
+    seq: u64,
+    t0: Instant,
+    filled: usize,
+    rows: usize,
+    weights_version: u64,
+    spans: Vec<Span>,
+}
+
+impl BatchTraceBuilder {
+    pub fn new(seq: u64, t0: Instant, filled: usize, weights_version: u64) -> BatchTraceBuilder {
+        BatchTraceBuilder {
+            seq,
+            t0,
+            filled,
+            rows: filled,
+            weights_version,
+            spans: Vec::with_capacity(32),
+        }
+    }
+
+    /// Record the executed row count once the batch bucket is known.
+    pub fn set_rows(&mut self, rows: usize) {
+        self.rows = rows;
+    }
+
+    /// Nanosecond offset of `at` on this batch's timeline (0 for any
+    /// instant at or before the trace origin).
+    pub fn offset_of(&self, at: Instant) -> u64 {
+        at.saturating_duration_since(self.t0).as_nanos() as u64
+    }
+
+    /// Push a span with explicit timeline-relative timestamps.
+    pub fn push(&mut self, lane: &'static str, name: String, start_ns: u64, dur_ns: u64) {
+        self.spans.push(Span { lane, name, start_ns, dur_ns });
+    }
+
+    /// Push a span covering `[from, to]` in wall time.
+    pub fn span_between(&mut self, lane: &'static str, name: &str, from: Instant, to: Instant) {
+        let start = self.offset_of(from);
+        let end = self.offset_of(to);
+        self.push(lane, name.to_string(), start, end.saturating_sub(start).max(1));
+    }
+
+    pub fn finish(self) -> BatchTrace {
+        BatchTrace {
+            seq: self.seq,
+            filled: self.filled,
+            rows: self.rows,
+            weights_version: self.weights_version,
+            spans: self.spans,
+        }
+    }
+}
+
+/// RAII span guard: records `[start, drop]` on `lane` when dropped.
+/// Built over an `Option<&mut _>` so un-sampled batches can pass
+/// `None` and pay nothing (not even a clock read).
+pub struct TraceScope<'a> {
+    builder: Option<&'a mut BatchTraceBuilder>,
+    lane: &'static str,
+    name: &'static str,
+    start: Option<Instant>,
+}
+
+impl<'a> TraceScope<'a> {
+    pub fn start(
+        builder: Option<&'a mut BatchTraceBuilder>,
+        lane: &'static str,
+        name: &'static str,
+    ) -> TraceScope<'a> {
+        let start = builder.as_ref().map(|_| Instant::now());
+        TraceScope { builder, lane, name, start }
+    }
+}
+
+impl Drop for TraceScope<'_> {
+    fn drop(&mut self) {
+        if let (Some(b), Some(start)) = (self.builder.take(), self.start) {
+            b.span_between(self.lane, self.name, start, Instant::now());
+        }
+    }
+}
+
+/// Sampled collector over a bounded ring of recent batch traces.
+///
+/// `every == 0` disables sampling entirely: [`begin`](Self::begin)
+/// returns `None` after a single plain field read, so the serving hot
+/// path stays wait-free. With `every == N`, every Nth batch is traced
+/// (1 = every batch).
+pub struct TraceCollector {
+    every: u64,
+    seq: AtomicU64,
+    cap: usize,
+    ring: Mutex<VecDeque<BatchTrace>>,
+}
+
+impl TraceCollector {
+    pub fn new(every: u64, cap: usize) -> TraceCollector {
+        TraceCollector {
+            every,
+            seq: AtomicU64::new(0),
+            cap: cap.max(1),
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// True when sampling is configured at all.
+    pub fn enabled(&self) -> bool {
+        self.every != 0
+    }
+
+    /// Per-batch sampling decision: `Some(seq)` if this batch should be
+    /// traced. The off path (`every == 0`) touches no atomics.
+    pub fn begin(&self) -> Option<u64> {
+        if self.every == 0 {
+            return None;
+        }
+        let n = self.seq.fetch_add(1, Ordering::Relaxed);
+        (n % self.every == 0).then_some(n)
+    }
+
+    /// Commit a finished trace; evicts the oldest past capacity.
+    pub fn commit(&self, trace: BatchTrace) {
+        let mut ring = self.ring.lock().unwrap();
+        ring.push_back(trace);
+        while ring.len() > self.cap {
+            ring.pop_front();
+        }
+    }
+
+    /// Snapshot of the ring, oldest first.
+    pub fn dump(&self) -> Vec<BatchTrace> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    pub fn clear(&self) {
+        self.ring.lock().unwrap().clear();
+    }
+}
+
+/// Per-layer forward-time aggregate across sampled batches.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerAgg {
+    /// Sampled batches this layer appeared in.
+    pub batches: u64,
+    pub wall_ns: u64,
+    /// Simulated device time (0 on CPU workers).
+    pub sim_ns: u64,
+}
+
+/// Name-keyed per-layer aggregates, fed by sampled batches; read by
+/// the Prometheus exposition (per-layer gauges) and `/admin/trace`
+/// consumers that want totals rather than timelines.
+#[derive(Default)]
+pub struct LayerStats {
+    inner: Mutex<BTreeMap<String, LayerAgg>>,
+}
+
+impl LayerStats {
+    pub fn new() -> LayerStats {
+        LayerStats::default()
+    }
+
+    /// Fold one sampled batch's `(layer, wall_ns, sim_ns)` rows in.
+    pub fn record(&self, entries: &[(String, u64, u64)]) {
+        let mut map = self.inner.lock().unwrap();
+        for (name, wall, sim) in entries {
+            let e = map.entry(name.clone()).or_default();
+            e.batches += 1;
+            e.wall_ns += wall;
+            e.sim_ns += sim;
+        }
+    }
+
+    /// Alphabetical (name, aggregate) snapshot.
+    pub fn snapshot(&self) -> Vec<(String, LayerAgg)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
+    }
+}
+
+/// Everything one engine exposes to observers: the sampled trace ring
+/// and the per-layer aggregates it feeds.
+pub struct EngineObs {
+    pub traces: TraceCollector,
+    pub layers: LayerStats,
+}
+
+impl EngineObs {
+    pub fn new(trace_every: u64, ring_cap: usize) -> EngineObs {
+        EngineObs {
+            traces: TraceCollector::new(trace_every, ring_cap),
+            layers: LayerStats::new(),
+        }
+    }
+}
+
+/// Solver-side training metrics, published through `train --serve`:
+/// per-iteration forward/backward/update time, the latest loss, and
+/// weight-publish latency. All wait-free (counters + log2 histograms).
+#[derive(Default)]
+pub struct TrainMetrics {
+    pub iterations: AtomicU64,
+    /// f32 bits of the most recent iteration's loss.
+    last_loss_bits: AtomicU32,
+    pub forward: Histogram,
+    pub backward: Histogram,
+    pub update: Histogram,
+    /// Publish-callback latency per weight publish.
+    pub publish: Histogram,
+}
+
+impl TrainMetrics {
+    pub fn new() -> TrainMetrics {
+        TrainMetrics::default()
+    }
+
+    pub fn record_iteration(&self, forward_ns: u64, backward_ns: u64, update_ns: u64, loss: f32) {
+        self.iterations.fetch_add(1, Ordering::Relaxed);
+        self.last_loss_bits.store(loss.to_bits(), Ordering::Relaxed);
+        self.forward.record(forward_ns);
+        self.backward.record(backward_ns);
+        self.update.record(update_ns);
+    }
+
+    pub fn record_publish(&self, ns: u64) {
+        self.publish.record(ns);
+    }
+
+    pub fn last_loss(&self) -> f32 {
+        f32::from_bits(self.last_loss_bits.load(Ordering::Relaxed))
+    }
+
+    /// JSON mirror for the `training` section of `GET /metrics`.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set(
+            "iterations",
+            Json::num(self.iterations.load(Ordering::Relaxed) as f64),
+        );
+        o.set("last_loss", Json::num(self.last_loss() as f64));
+        o.set("forward_mean_ms", Json::num(self.forward.mean_ns() / 1e6));
+        o.set(
+            "forward_p99_ms",
+            Json::num(self.forward.quantile_ns(0.99) / 1e6),
+        );
+        o.set("backward_mean_ms", Json::num(self.backward.mean_ns() / 1e6));
+        o.set(
+            "backward_p99_ms",
+            Json::num(self.backward.quantile_ns(0.99) / 1e6),
+        );
+        o.set("update_mean_ms", Json::num(self.update.mean_ns() / 1e6));
+        o.set("publishes", Json::num(self.publish.count() as f64));
+        o.set("publish_mean_ms", Json::num(self.publish.mean_ns() / 1e6));
+        o
+    }
+
+    /// Append Prometheus text-format families (summaries without
+    /// quantile lines: `_sum`/`_count` are exact, quantiles are not —
+    /// see [`Histogram::quantile_ns`]).
+    pub fn render_prometheus(&self, out: &mut String) {
+        out.push_str("# TYPE fecaffe_train_iterations_total counter\n");
+        out.push_str(&format!(
+            "fecaffe_train_iterations_total {}\n",
+            self.iterations.load(Ordering::Relaxed)
+        ));
+        out.push_str("# TYPE fecaffe_train_last_loss gauge\n");
+        out.push_str(&format!("fecaffe_train_last_loss {}\n", self.last_loss()));
+        for (name, h) in [
+            ("fecaffe_train_forward_seconds", &self.forward),
+            ("fecaffe_train_backward_seconds", &self.backward),
+            ("fecaffe_train_update_seconds", &self.update),
+            ("fecaffe_train_publish_seconds", &self.publish),
+        ] {
+            out.push_str(&format!("# TYPE {name} summary\n"));
+            out.push_str(&format!("{name}_sum {}\n", h.sum_ns() as f64 / 1e9));
+            out.push_str(&format!("{name}_count {}\n", h.count()));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn collector_off_never_samples() {
+        let c = TraceCollector::new(0, 8);
+        assert!(!c.enabled());
+        for _ in 0..100 {
+            assert!(c.begin().is_none());
+        }
+        assert!(c.dump().is_empty());
+    }
+
+    #[test]
+    fn collector_samples_every_nth_batch() {
+        let c = TraceCollector::new(4, 8);
+        let sampled: Vec<bool> = (0..12).map(|_| c.begin().is_some()).collect();
+        let expect: Vec<bool> = (0..12).map(|i| i % 4 == 0).collect();
+        assert_eq!(sampled, expect);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_fifo() {
+        let c = TraceCollector::new(1, 3);
+        for seq in 0..5 {
+            let b = BatchTraceBuilder::new(seq, Instant::now(), 1, 0);
+            c.commit(b.finish());
+        }
+        let traces = c.dump();
+        assert_eq!(traces.len(), 3);
+        assert_eq!(
+            traces.iter().map(|t| t.seq).collect::<Vec<_>>(),
+            vec![2, 3, 4]
+        );
+        c.clear();
+        assert!(c.dump().is_empty());
+    }
+
+    #[test]
+    fn builder_records_relative_spans_and_scopes() {
+        let t0 = Instant::now();
+        let mut b = BatchTraceBuilder::new(7, t0, 3, 2);
+        b.set_rows(4);
+        b.span_between(LANE_QUEUE, "queue-wait", t0, t0 + Duration::from_micros(50));
+        b.push(LANE_LAYER, "conv1".to_string(), 60_000, 10_000);
+        {
+            let scope = TraceScope::start(Some(&mut b), LANE_HOST, "gather");
+            std::thread::sleep(Duration::from_millis(1));
+            drop(scope);
+        }
+        // A None scope is free and records nothing.
+        drop(TraceScope::start(None, LANE_HOST, "noop"));
+        let t = b.finish();
+        assert_eq!((t.seq, t.filled, t.rows, t.weights_version), (7, 3, 4, 2));
+        assert_eq!(t.spans.len(), 3);
+        assert_eq!(t.spans[0].lane, LANE_QUEUE);
+        assert_eq!(t.spans[0].start_ns, 0);
+        assert!((45_000..=200_000).contains(&t.spans[0].dur_ns), "{}", t.spans[0].dur_ns);
+        assert_eq!(t.spans[1].name, "conv1");
+        assert_eq!(t.spans[2].name, "gather");
+        assert!(t.spans[2].dur_ns >= 500_000, "{}", t.spans[2].dur_ns);
+    }
+
+    #[test]
+    fn layer_stats_aggregate_across_batches() {
+        let s = LayerStats::new();
+        s.record(&[("conv1".to_string(), 100, 10), ("fc1".to_string(), 50, 5)]);
+        s.record(&[("conv1".to_string(), 300, 30)]);
+        let snap = s.snapshot();
+        assert_eq!(snap.len(), 2);
+        let conv = &snap[0];
+        assert_eq!(conv.0, "conv1");
+        assert_eq!(conv.1.batches, 2);
+        assert_eq!(conv.1.wall_ns, 400);
+        assert_eq!(conv.1.sim_ns, 40);
+    }
+
+    #[test]
+    fn train_metrics_record_and_render() {
+        let t = TrainMetrics::new();
+        t.record_iteration(1_000_000, 2_000_000, 500_000, 0.25);
+        t.record_iteration(1_000_000, 2_000_000, 500_000, 0.125);
+        t.record_publish(3_000_000);
+        assert_eq!(t.iterations.load(Ordering::Relaxed), 2);
+        assert!((t.last_loss() - 0.125).abs() < 1e-9);
+        let j = t.to_json();
+        assert_eq!(j.get("iterations").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("publishes").unwrap().as_usize().unwrap(), 1);
+        assert!(j.get("forward_mean_ms").unwrap().as_f64().unwrap() > 0.0);
+        let mut out = String::new();
+        t.render_prometheus(&mut out);
+        assert!(out.contains("fecaffe_train_iterations_total 2"));
+        assert!(out.contains("fecaffe_train_forward_seconds_count 2"));
+        assert!(out.contains("fecaffe_train_last_loss 0.125"));
+    }
+}

@@ -30,6 +30,9 @@ pub struct BatcherConfig {
 /// One coalesced unit of work for a worker.
 pub(crate) struct Batch {
     pub requests: Vec<Request>,
+    /// When the batcher sealed this batch — the boundary between
+    /// queue/linger wait and dispatch wait on a sampled trace.
+    pub formed: Instant,
 }
 
 /// Pack up to `rows` samples (each `sample_len` elements) into one
@@ -77,7 +80,9 @@ pub(crate) fn run(
             }
         }
         metrics.record_batch(requests.len(), cfg.max_batch);
-        if let Err(batch) = dispatch.push(Batch { requests }) {
+        // The drain edge of the queue-depth gauge (submit is the rise).
+        metrics.record_queue_depth(submit.len() as u64);
+        if let Err(batch) = dispatch.push(Batch { requests, formed: Instant::now() }) {
             // Dispatch closed under us: the worker pool is gone (build
             // failures or panics exhausted it). Stop admissions and fail
             // everything in flight so no caller blocks forever on a

@@ -24,9 +24,10 @@ use super::metrics::Metrics;
 use super::queue::{PushError, SharedQueue};
 use super::worker;
 use crate::net::{Net, WeightSnapshot};
+use crate::obs::EngineObs;
 use crate::proto::{NetParameter, Phase};
 use crate::zoo::{deploy, DeployNet};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -72,6 +73,11 @@ pub struct EngineConfig {
     /// that kernel serially (see `util::pool` — intra-op parallelism
     /// pays off most at low worker counts).
     pub intra_op_threads: usize,
+    /// Batch-trace sampling: record a full span timeline for one batch
+    /// in every `trace_sample` executed (0 = off). When off the hot
+    /// path takes no clock reads and no locks for tracing; when on,
+    /// only the sampled batch pays the span-recording cost.
+    pub trace_sample: u64,
 }
 
 impl Default for EngineConfig {
@@ -83,9 +89,14 @@ impl Default for EngineConfig {
             queue_capacity: 256,
             device: DeviceKind::Cpu,
             intra_op_threads: 0,
+            trace_sample: 0,
         }
     }
 }
+
+/// Sampled batch traces kept for `/admin/trace` — bounded so a
+/// long-running engine holds only the most recent timelines.
+const TRACE_RING_CAP: usize = 32;
 
 impl EngineConfig {
     /// Effective per-worker intra-op thread budget.
@@ -299,6 +310,8 @@ pub struct Engine {
     submit_q: Arc<SharedQueue<Request>>,
     dispatch_q: Arc<SharedQueue<Batch>>,
     metrics: Arc<Metrics>,
+    obs: Arc<EngineObs>,
+    healthy: Arc<AtomicUsize>,
     threads: Mutex<Option<Threads>>,
 }
 
@@ -358,7 +371,8 @@ impl Engine {
             }
         };
 
-        let healthy = Arc::new(std::sync::atomic::AtomicUsize::new(cfg.workers));
+        let healthy = Arc::new(AtomicUsize::new(cfg.workers));
+        let obs = Arc::new(EngineObs::new(cfg.trace_sample, TRACE_RING_CAP));
         let intra_op = cfg.intra_op_budget();
         let mut workers = Vec::with_capacity(cfg.workers);
         for wid in 0..cfg.workers {
@@ -371,6 +385,7 @@ impl Engine {
                 output_len,
                 queue: dispatch_q.clone(),
                 metrics: metrics.clone(),
+                obs: obs.clone(),
                 healthy: healthy.clone(),
             };
             match std::thread::Builder::new()
@@ -408,6 +423,8 @@ impl Engine {
             submit_q,
             dispatch_q,
             metrics,
+            obs,
+            healthy,
             threads: Mutex::new(Some(Threads { batcher, workers })),
         })
     }
@@ -497,6 +514,24 @@ impl Engine {
         &self.metrics
     }
 
+    /// The engine's observability hub: sampled batch traces and
+    /// per-layer timing aggregates.
+    pub fn obs(&self) -> &EngineObs {
+        &self.obs
+    }
+
+    /// Workers still alive (each decrements on replica-build failure or
+    /// batch poisoning) — the `/healthz` per-model health signal.
+    pub fn healthy_workers(&self) -> usize {
+        self.healthy.load(Ordering::Relaxed)
+    }
+
+    /// Current admission-queue depth (requests admitted, not yet pulled
+    /// into a batch).
+    pub fn queue_depth(&self) -> usize {
+        self.submit_q.len()
+    }
+
     /// Submit one sample. Non-blocking admission: `Overloaded` means the
     /// bounded queue is full and the caller should back off.
     pub fn submit(&self, sample: Vec<f32>) -> Result<ResponseHandle, ServeError> {
@@ -522,8 +557,11 @@ impl Engine {
             metrics: self.metrics.clone(),
         };
         match self.submit_q.try_push(req) {
-            Ok(()) => {
+            Ok(depth) => {
                 self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                // Depth including this request, returned by the push so
+                // the gauge costs no extra lock on the hot path.
+                self.metrics.record_queue_depth(depth as u64);
                 Ok(ResponseHandle { slot, submitted })
             }
             Err(PushError::Full(mut req)) => {

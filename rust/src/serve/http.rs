@@ -18,8 +18,16 @@
 //!   500 worker-side failure                (ServeError::Worker)
 //!   503 engine shutting down               (ServeError::ShuttingDown)
 //! GET  /v1/models       model inventory (sample_len/output_len each)
-//! GET  /metrics         per-model serve::Metrics as JSON
-//! GET  /healthz         200 "ok"
+//! GET  /metrics         per-model serve::Metrics as JSON;
+//!                       `?format=prometheus` switches to Prometheus
+//!                       text exposition (text/plain; version=0.0.4)
+//! GET  /healthz         200 JSON: status ("ok" while every model has
+//!                       at least one healthy worker, else "degraded"),
+//!                       uptime_s, per-model weights_version / worker
+//!                       counts / queue depth
+//! GET  /admin/trace     chrome-trace JSON of the sampled-batch ring
+//!                       (`--trace-sample`); `?clear=1` also empties
+//!                       the ring after the dump
 //! POST /admin/models/<name>:publish   {"path": "w.fewts", ...}
 //!   200 {"model","version","tag"?}  weight hot-swap: load a FEWSNAP1
 //!       snapshot file and atomically publish it into the model's
@@ -75,6 +83,8 @@ impl Default for HttpConfig {
 struct ServerState {
     router: Arc<ModelRouter>,
     cfg: HttpConfig,
+    /// Bind time — `/healthz` reports uptime relative to it.
+    started: Instant,
     /// Set once teardown starts: accept and keep-alive loops exit.
     stop: AtomicBool,
     /// Open connections (capacity admission at the socket layer).
@@ -120,6 +130,7 @@ impl HttpServer {
         let state = Arc::new(ServerState {
             router,
             cfg,
+            started: Instant::now(),
             stop: AtomicBool::new(false),
             active: AtomicUsize::new(0),
             busy: AtomicUsize::new(0),
@@ -536,10 +547,35 @@ fn route_error_reply(e: &RouteError) -> Reply {
     error_reply(status, reason, &e.to_string())
 }
 
+/// Value of `key` in a raw query string (`a=1&b=2`); `Some("")` for a
+/// bare flag (`?clear`). No percent-decoding — every query parameter
+/// the surface accepts is a plain token.
+fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
+    query.split('&').find_map(|pair| {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        (k == key).then_some(v)
+    })
+}
+
 fn route(state: &Arc<ServerState>, req: &HttpRequest) -> Reply {
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => ok_text("ok\n"),
-        ("GET", "/metrics") => ok_json(&state.router.metrics_json()),
+    let (path, query) = req.path.split_once('?').unwrap_or((req.path.as_str(), ""));
+    match (req.method.as_str(), path) {
+        ("GET", "/healthz") => {
+            ok_json(&state.router.health_json(state.started.elapsed().as_secs_f64()))
+        }
+        ("GET", "/metrics") => {
+            if query_param(query, "format") == Some("prometheus") {
+                let text = state.router.metrics_prometheus();
+                (200, "OK", "text/plain; version=0.0.4", text.into_bytes())
+            } else {
+                ok_json(&state.router.metrics_json())
+            }
+        }
+        ("GET", "/admin/trace") => {
+            let clear = matches!(query_param(query, "clear"), Some("1") | Some("true"));
+            let text = state.router.traces_chrome_json(clear);
+            (200, "OK", "application/json", text.into_bytes())
+        }
         ("GET", "/v1/models") => ok_json(&state.router.models_json()),
         ("POST", "/admin/shutdown") => {
             state.request_shutdown();
@@ -949,6 +985,16 @@ mod tests {
         assert!(
             parse_instances(&Json::parse(r#"{"instances": [["a"]]}"#).unwrap()).is_err()
         );
+    }
+
+    #[test]
+    fn query_param_parses_pairs_and_bare_flags() {
+        let q = "format=prometheus&clear=1";
+        assert_eq!(query_param(q, "format"), Some("prometheus"));
+        assert_eq!(query_param(q, "clear"), Some("1"));
+        assert_eq!(query_param("clear", "clear"), Some(""));
+        assert_eq!(query_param("", "clear"), None);
+        assert_eq!(query_param("clearx=1", "clear"), None);
     }
 
     #[test]

@@ -61,7 +61,34 @@ impl Histogram {
         }
     }
 
+    /// Non-empty buckets as `(upper_bound_exclusive_ns, count)` pairs,
+    /// in ascending order. Bucket bounds are exact powers of two (the
+    /// last bucket's bound saturates to `u64::MAX`), so cumulative
+    /// sums over these pairs are *exact* — this is what the Prometheus
+    /// exposition renders, and what callers should prefer over
+    /// [`Histogram::quantile_ns`] when precision matters.
+    pub fn bucket_counts(&self) -> Vec<(u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let n = b.load(Ordering::Relaxed);
+                if n == 0 {
+                    return None;
+                }
+                let bound = if i + 1 >= BUCKETS { u64::MAX } else { 1u64 << (i + 1) };
+                Some((bound, n))
+            })
+            .collect()
+    }
+
     /// Nearest-rank quantile estimate (`q` in 0..=1).
+    ///
+    /// Returns the *geometric midpoint* of the log2 bucket holding the
+    /// requested rank, so the estimate can be off by up to a factor of
+    /// √2 (±~40%) from the true quantile. Good enough for dashboards
+    /// and trend lines; for exact cumulative counts use
+    /// [`Histogram::bucket_counts`] (bucket boundaries are exact).
     pub fn quantile_ns(&self, q: f64) -> f64 {
         let total = self.count();
         if total == 0 {
@@ -107,6 +134,10 @@ pub struct Metrics {
     /// nanoseconds; buckets are exact for the power-of-two batch
     /// buckets the workers execute).
     pub executed_hist: Histogram,
+    /// Admission-queue depth observed at the latest submit/drain event,
+    /// and the deepest it has ever been — the queue-pressure gauges.
+    pub queue_depth: AtomicU64,
+    pub queue_depth_hwm: AtomicU64,
     /// Weight publishes accepted by the engine (hot-swaps).
     pub publishes: AtomicU64,
     /// Version of the most recently published weight snapshot (0 until
@@ -133,6 +164,8 @@ impl Metrics {
             filled_rows: AtomicU64::new(0),
             executed_rows: AtomicU64::new(0),
             executed_hist: Histogram::new(),
+            queue_depth: AtomicU64::new(0),
+            queue_depth_hwm: AtomicU64::new(0),
             publishes: AtomicU64::new(0),
             weights_version: AtomicU64::new(0),
             latency: Histogram::new(),
@@ -169,6 +202,14 @@ impl Metrics {
         self.sim_batch.record(sim_ns);
     }
 
+    /// Update the queue-depth gauge (and its high-water mark). Called
+    /// on both edges — submit (depth including the new request) and
+    /// batch formation (depth after the drain) — so the gauge decays.
+    pub(crate) fn record_queue_depth(&self, depth: u64) {
+        self.queue_depth.store(depth, Ordering::Relaxed);
+        self.queue_depth_hwm.fetch_max(depth, Ordering::Relaxed);
+    }
+
     pub(crate) fn record_publish(&self, version: u64) {
         self.publishes.fetch_add(1, Ordering::Relaxed);
         self.weights_version.store(version, Ordering::Relaxed);
@@ -195,6 +236,8 @@ impl Metrics {
                 filled_rows as f64 / executed_rows as f64
             },
             mean_executed_rows: self.executed_hist.mean_ns(),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            queue_depth_hwm: self.queue_depth_hwm.load(Ordering::Relaxed),
             publishes: self.publishes.load(Ordering::Relaxed),
             weights_version: self.weights_version.load(Ordering::Relaxed),
             mean_batch: if batches == 0 { 0.0 } else { samples as f64 / batches as f64 },
@@ -203,6 +246,9 @@ impl Metrics {
             p99_ns: self.latency.quantile_ns(0.99),
             mean_ns: self.latency.mean_ns(),
             max_ns: self.latency.max_ns(),
+            latency_buckets: self.latency.bucket_counts(),
+            latency_sum_ns: self.latency.sum_ns(),
+            latency_count: self.latency.count(),
             sim_batches: self.sim_batch.count(),
             sim_total_ns: self.sim_batch.sum_ns(),
             sim_mean_ns: self.sim_batch.mean_ns(),
@@ -238,6 +284,10 @@ pub struct MetricsReport {
     pub batch_occupancy: f64,
     /// Mean executed rows per batch (from the executed-rows histogram).
     pub mean_executed_rows: f64,
+    /// Admission-queue depth gauge at snapshot time, plus its
+    /// high-water mark since the engine started.
+    pub queue_depth: u64,
+    pub queue_depth_hwm: u64,
     /// Accepted weight hot-swaps and the currently published version.
     pub publishes: u64,
     pub weights_version: u64,
@@ -247,6 +297,14 @@ pub struct MetricsReport {
     pub p99_ns: f64,
     pub mean_ns: f64,
     pub max_ns: u64,
+    /// Exact latency-histogram buckets as `(upper_bound_exclusive_ns,
+    /// count)` pairs (non-empty buckets only), with the matching sum and
+    /// count. Unlike the `p*_ns` midpoint estimates above, cumulative
+    /// sums over these are exact — Prometheus `le` buckets render from
+    /// this.
+    pub latency_buckets: Vec<(u64, u64)>,
+    pub latency_sum_ns: u64,
+    pub latency_count: u64,
     /// Batches metered in simulated device time (FPGA-sim workers only).
     pub sim_batches: u64,
     pub sim_total_ns: u64,
@@ -273,6 +331,8 @@ impl MetricsReport {
         o.set("executed_rows", Json::num(self.executed_rows as f64));
         o.set("occupancy", Json::num(self.batch_occupancy));
         o.set("mean_executed_rows", Json::num(self.mean_executed_rows));
+        o.set("queue_depth", Json::num(self.queue_depth as f64));
+        o.set("queue_depth_hwm", Json::num(self.queue_depth_hwm as f64));
         o.set("publishes", Json::num(self.publishes as f64));
         o.set("weights_version", Json::num(self.weights_version as f64));
         o.set("mean_batch", Json::num(self.mean_batch));
@@ -281,6 +341,23 @@ impl MetricsReport {
         o.set("p99_ms", Json::num(self.p99_ns / 1e6));
         o.set("mean_ms", Json::num(self.mean_ns / 1e6));
         o.set("max_ms", Json::num(self.max_ns as f64 / 1e6));
+        // Exact histogram buckets: `le_ns` is the exclusive power-of-two
+        // upper bound, `count` the per-bucket tally, `cum` the exact
+        // cumulative count up to that bound (Prometheus-style).
+        let mut cum = 0u64;
+        o.set(
+            "latency_buckets",
+            Json::arr(self.latency_buckets.iter().map(|&(le_ns, count)| {
+                cum += count;
+                let mut b = Json::obj();
+                b.set("le_ns", Json::num(le_ns as f64));
+                b.set("count", Json::num(count as f64));
+                b.set("cum", Json::num(cum as f64));
+                b
+            })),
+        );
+        o.set("latency_count", Json::num(self.latency_count as f64));
+        o.set("latency_sum_ms", Json::num(self.latency_sum_ns as f64 / 1e6));
         if self.sim_batches > 0 {
             o.set("sim_batches", Json::num(self.sim_batches as f64));
             o.set("sim_total_ms", Json::num(self.sim_total_ns as f64 / 1e6));
@@ -329,6 +406,100 @@ impl MetricsReport {
         }
         s
     }
+}
+
+/// Render per-model metric reports in the Prometheus text exposition
+/// format (`text/plain; version=0.0.4`). Each family's `# HELP`/`# TYPE`
+/// header appears once, followed by one sample per model label. The
+/// request-latency family is a true Prometheus histogram: cumulative
+/// `le` buckets converted from the log2 histogram's exact power-of-two
+/// nanosecond bounds into seconds, so bucket counts carry none of the
+/// midpoint error the JSON quantile estimates have.
+pub fn prometheus_text(reports: &[(String, MetricsReport)]) -> String {
+    let mut out = String::new();
+    let counters: &[(&str, &str, fn(&MetricsReport) -> u64)] = &[
+        ("fecaffe_requests_submitted_total", "Requests admitted into the engine.", |r| r.submitted),
+        ("fecaffe_requests_rejected_total", "Requests rejected at admission (queue full).", |r| {
+            r.rejected
+        }),
+        ("fecaffe_requests_completed_total", "Requests answered successfully.", |r| r.completed),
+        ("fecaffe_requests_failed_total", "Requests that failed during execution.", |r| r.failed),
+        ("fecaffe_batches_total", "Micro-batches executed.", |r| r.batches),
+        ("fecaffe_batched_samples_total", "Requests carried across all batches.", |r| {
+            r.batched_samples
+        }),
+        ("fecaffe_full_batches_total", "Batches that filled max_batch rows.", |r| r.full_batches),
+        ("fecaffe_filled_rows_total", "Executed rows that carried a request.", |r| r.filled_rows),
+        ("fecaffe_executed_rows_total", "Rows executed by reshaped replicas.", |r| {
+            r.executed_rows
+        }),
+        ("fecaffe_weight_publishes_total", "Weight hot-swaps accepted.", |r| r.publishes),
+    ];
+    for &(name, help, get) in counters {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n"));
+        for (model, r) in reports {
+            out.push_str(&format!("{name}{{model=\"{model}\"}} {}\n", get(r)));
+        }
+    }
+    let gauges: &[(&str, &str, fn(&MetricsReport) -> f64)] = &[
+        ("fecaffe_weights_version", "Currently published weight snapshot version.", |r| {
+            r.weights_version as f64
+        }),
+        ("fecaffe_queue_depth", "Admission-queue depth at the latest submit/drain.", |r| {
+            r.queue_depth as f64
+        }),
+        ("fecaffe_queue_depth_high_water", "Deepest the admission queue has been.", |r| {
+            r.queue_depth_hwm as f64
+        }),
+        ("fecaffe_batch_occupancy", "Filled rows / executed rows over all batches.", |r| {
+            r.batch_occupancy
+        }),
+        ("fecaffe_mean_batch_size", "Mean requests per micro-batch.", |r| r.mean_batch),
+    ];
+    for &(name, help, get) in gauges {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n"));
+        for (model, r) in reports {
+            out.push_str(&format!("{name}{{model=\"{model}\"}} {}\n", get(r)));
+        }
+    }
+    let lat = "fecaffe_request_latency_seconds";
+    out.push_str(&format!(
+        "# HELP {lat} End-to-end request latency (submit to response).\n# TYPE {lat} histogram\n"
+    ));
+    for (model, r) in reports {
+        let mut cum = 0u64;
+        for &(le_ns, count) in &r.latency_buckets {
+            if le_ns == u64::MAX {
+                break; // folded into the +Inf bucket below
+            }
+            cum += count;
+            out.push_str(&format!(
+                "{lat}_bucket{{model=\"{model}\",le=\"{}\"}} {cum}\n",
+                le_ns as f64 / 1e9
+            ));
+        }
+        out.push_str(&format!(
+            "{lat}_bucket{{model=\"{model}\",le=\"+Inf\"}} {}\n",
+            r.latency_count
+        ));
+        out.push_str(&format!(
+            "{lat}_sum{{model=\"{model}\"}} {}\n",
+            r.latency_sum_ns as f64 / 1e9
+        ));
+        out.push_str(&format!("{lat}_count{{model=\"{model}\"}} {}\n", r.latency_count));
+    }
+    let sim = "fecaffe_sim_batch_seconds";
+    out.push_str(&format!(
+        "# HELP {sim} Simulated device time per batch (FPGA-sim workers).\n# TYPE {sim} summary\n"
+    ));
+    for (model, r) in reports {
+        out.push_str(&format!(
+            "{sim}_sum{{model=\"{model}\"}} {}\n",
+            r.sim_total_ns as f64 / 1e9
+        ));
+        out.push_str(&format!("{sim}_count{{model=\"{model}\"}} {}\n", r.sim_batches));
+    }
+    out
 }
 
 #[cfg(test)]
@@ -445,6 +616,78 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.get("weights_version").unwrap().as_usize().unwrap(), 4);
         assert_eq!(j.get("publishes").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn bucket_counts_are_exact_and_ordered() {
+        let h = Histogram::new();
+        h.record(1_000); // [512, 1024) → bound 1024
+        h.record(1_000);
+        h.record(3_000); // [2048, 4096) → bound 4096
+        h.record(u64::MAX); // top bucket → bound saturates
+        let buckets = h.bucket_counts();
+        assert_eq!(buckets, vec![(1024, 2), (4096, 1), (u64::MAX, 1)]);
+        // Cumulative sums over the pairs are exact — the total matches
+        // count() with no midpoint estimation involved.
+        let total: u64 = buckets.iter().map(|&(_, n)| n).sum();
+        assert_eq!(total, h.count());
+        // And they surface in the JSON report with running cumulatives.
+        let m = Metrics::new();
+        m.latency.record(1_000);
+        m.latency.record(3_000);
+        let j = m.snapshot().to_json();
+        let arr = j.get("latency_buckets").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("le_ns").unwrap().as_usize().unwrap(), 1024);
+        assert_eq!(arr[0].get("cum").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(arr[1].get("cum").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("latency_count").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn queue_depth_gauge_decays_but_hwm_sticks() {
+        let m = Metrics::new();
+        m.record_queue_depth(3);
+        m.record_queue_depth(7);
+        m.record_queue_depth(1);
+        let r = m.snapshot();
+        assert_eq!(r.queue_depth, 1);
+        assert_eq!(r.queue_depth_hwm, 7);
+        let j = r.to_json();
+        assert_eq!(j.get("queue_depth").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("queue_depth_hwm").unwrap().as_usize().unwrap(), 7);
+    }
+
+    #[test]
+    fn prometheus_text_renders_families_once_with_model_labels() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(5, Ordering::Relaxed);
+        m.record_done(1_000);
+        m.record_done(3_000);
+        m.record_queue_depth(2);
+        m.record_publish(4);
+        let reports = vec![
+            ("lenet".to_string(), m.snapshot()),
+            ("mlp".to_string(), Metrics::new().snapshot()),
+        ];
+        let text = prometheus_text(&reports);
+        // One TYPE header per family, one sample per model.
+        assert_eq!(text.matches("# TYPE fecaffe_requests_completed_total counter").count(), 1);
+        assert!(text.contains("fecaffe_requests_completed_total{model=\"lenet\"} 2"));
+        assert!(text.contains("fecaffe_requests_completed_total{model=\"mlp\"} 0"));
+        assert!(text.contains("fecaffe_queue_depth{model=\"lenet\"} 2"));
+        assert!(text.contains("fecaffe_queue_depth_high_water{model=\"lenet\"} 2"));
+        assert!(text.contains("fecaffe_weights_version{model=\"lenet\"} 4"));
+        // Histogram: exact cumulative le buckets in seconds, +Inf = count.
+        let lat = "fecaffe_request_latency_seconds";
+        assert!(text.contains(&format!("{lat}_bucket{{model=\"lenet\",le=\"0.000001024\"}} 1")));
+        assert!(text.contains(&format!("{lat}_bucket{{model=\"lenet\",le=\"+Inf\"}} 2")));
+        assert!(text.contains(&format!("{lat}_count{{model=\"lenet\"}} 2")));
+        assert!(text.contains(&format!("{lat}_count{{model=\"mlp\"}} 0")));
+        // Every line is a comment or `name{labels} value`.
+        for line in text.lines() {
+            assert!(line.starts_with('#') || line.contains("} "), "bad line: {line}");
+        }
     }
 
     #[test]

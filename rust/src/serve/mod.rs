@@ -30,10 +30,19 @@
 //!   most 2× the filled rows — never a pad to `max_batch`. Replicas
 //!   adopt one shared [`crate::net::WeightSnapshot`] (`Arc`-shared host
 //!   weights); activations stay per-worker and grow-only.
-//! * **Metrics** — wait-free counters and a log2 latency histogram
-//!   (p50/p95/p99), plus `batch_occupancy` (filled rows / executed rows
-//!   — how much of the executed compute carried real requests); exact
-//!   quantiles for load tests come from [`crate::util::stats`].
+//! * **Metrics** — wait-free counters, a log2 latency histogram
+//!   (p50/p95/p99 plus exact bucket bounds), queue-depth gauges
+//!   (current + high-water) and `batch_occupancy` (filled rows /
+//!   executed rows — how much of the executed compute carried real
+//!   requests); exact quantiles for load tests come from
+//!   [`crate::util::stats`]. `GET /metrics` serves JSON or, with
+//!   `?format=prometheus`, Prometheus text exposition.
+//! * **Tracing** — `EngineConfig::trace_sample = N` samples every Nth
+//!   batch into a ring of [`crate::obs::BatchTrace`]s: queue wait,
+//!   batch assembly, reshape, per-layer forward, device (pcie /
+//!   fpga-kernel) and scatter spans on one timeline, dumped as
+//!   chrome-trace JSON from `GET /admin/trace` (open in Perfetto).
+//!   Off (`0`) by default and wait-free when off.
 //! * **Multi-model routing** — a [`router::ModelRouter`] owns one
 //!   engine per model with the worker/intra-op budget split across
 //!   them, and [`http::HttpServer`] puts the whole stack behind a

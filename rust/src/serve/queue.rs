@@ -21,6 +21,9 @@ struct State<T> {
     items: VecDeque<T>,
     capacity: usize,
     closed: bool,
+    /// Deepest the queue has ever been — the high-water gauge the
+    /// autoscaling roadmap item reads (observable via `high_water`).
+    high_water: usize,
 }
 
 /// Why a non-blocking push failed (the item is handed back).
@@ -45,14 +48,17 @@ impl<T> SharedQueue<T> {
                 items: VecDeque::new(),
                 capacity: capacity.max(1),
                 closed: false,
+                high_water: 0,
             }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
         }
     }
 
-    /// Non-blocking push — the admission-control path.
-    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+    /// Non-blocking push — the admission-control path. On success
+    /// returns the queue depth *including* the pushed item, so callers
+    /// can export a depth gauge without re-taking the lock.
+    pub fn try_push(&self, item: T) -> Result<usize, PushError<T>> {
         let mut s = self.state.lock().unwrap();
         if s.closed {
             return Err(PushError::Closed(item));
@@ -61,9 +67,11 @@ impl<T> SharedQueue<T> {
             return Err(PushError::Full(item));
         }
         s.items.push_back(item);
+        let depth = s.items.len();
+        s.high_water = s.high_water.max(depth);
         drop(s);
         self.not_empty.notify_one();
-        Ok(())
+        Ok(depth)
     }
 
     /// Blocking push; `Err(item)` if the queue closed while waiting.
@@ -79,6 +87,8 @@ impl<T> SharedQueue<T> {
             s = self.not_full.wait(s).unwrap();
         }
         s.items.push_back(item);
+        let depth = s.items.len();
+        s.high_water = s.high_water.max(depth);
         drop(s);
         self.not_empty.notify_one();
         Ok(())
@@ -135,6 +145,11 @@ impl<T> SharedQueue<T> {
         self.state.lock().unwrap().items.len()
     }
 
+    /// Deepest the queue has ever been (monotone; survives drains).
+    pub fn high_water(&self) -> usize {
+        self.state.lock().unwrap().high_water
+    }
+
     /// Cheap admission pre-check. Racy by design — `try_push` still
     /// enforces the bound — and false when closed so the closed case
     /// surfaces as Closed, not Full.
@@ -172,6 +187,21 @@ mod tests {
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), Some(3));
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn try_push_returns_depth_and_tracks_high_water() {
+        let q = SharedQueue::new(4);
+        assert!(matches!(q.try_push(1), Ok(1)));
+        assert!(matches!(q.try_push(2), Ok(2)));
+        assert_eq!(q.high_water(), 2);
+        q.pop();
+        q.pop();
+        // Draining never lowers the high-water mark…
+        assert_eq!(q.high_water(), 2);
+        // …and pushing back below it leaves it alone.
+        assert!(matches!(q.try_push(3), Ok(1)));
+        assert_eq!(q.high_water(), 2);
     }
 
     #[test]

@@ -11,8 +11,11 @@
 use super::engine::{
     DeviceKind, Engine, EngineConfig, PublishError, ResponseHandle, ServeError,
 };
+use super::metrics::{prometheus_text, MetricsReport};
 use crate::net::WeightSnapshot;
+use crate::obs::{LayerAgg, TrainMetrics};
 use crate::util::json::Json;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Budget shared by every model the router serves; each engine gets an
@@ -32,6 +35,9 @@ pub struct RouterConfig {
     /// over every worker of every engine (an engine's own auto-split
     /// only knows its workers, not its siblings').
     pub intra_op_threads: usize,
+    /// Batch-trace sampling (per model): trace one batch in every N
+    /// executed; 0 = off. See [`EngineConfig::trace_sample`].
+    pub trace_sample: u64,
 }
 
 impl Default for RouterConfig {
@@ -43,6 +49,7 @@ impl Default for RouterConfig {
             queue_capacity: 256,
             device: DeviceKind::Cpu,
             intra_op_threads: 0,
+            trace_sample: 0,
         }
     }
 }
@@ -74,6 +81,9 @@ impl std::error::Error for RouteError {}
 /// N serving engines behind one name-keyed admission surface.
 pub struct ModelRouter {
     engines: Vec<(String, Engine)>,
+    /// Training metrics attached by `train --serve` (the live solver
+    /// publishing into this router), surfaced through `/metrics`.
+    training: Mutex<Option<Arc<TrainMetrics>>>,
 }
 
 impl ModelRouter {
@@ -100,12 +110,13 @@ impl ModelRouter {
                 queue_capacity: cfg.queue_capacity,
                 device: cfg.device,
                 intra_op_threads: intra_op,
+                trace_sample: cfg.trace_sample,
             };
             let engine = Engine::new(&param, ecfg)
                 .map_err(|e| e.context(format!("building engine for model '{name}'")))?;
             engines.push((name.to_string(), engine));
         }
-        Ok(ModelRouter { engines })
+        Ok(ModelRouter { engines, training: Mutex::new(None) })
     }
 
     /// Wrap pre-built engines (custom prototxt models, tests). The
@@ -116,7 +127,14 @@ impl ModelRouter {
         for (name, _) in &engines {
             anyhow::ensure!(seen.insert(name.clone()), "duplicate model '{name}'");
         }
-        Ok(ModelRouter { engines })
+        Ok(ModelRouter { engines, training: Mutex::new(None) })
+    }
+
+    /// Attach the metrics of a live training run (`train --serve`), so
+    /// `/metrics` reports solver-side iteration timing and loss next to
+    /// the serving counters.
+    pub fn attach_training(&self, metrics: Arc<TrainMetrics>) {
+        *self.training.lock().unwrap() = Some(metrics);
     }
 
     pub fn engine(&self, model: &str) -> Option<&Engine> {
@@ -148,12 +166,100 @@ impl ModelRouter {
         engine.publish_weights(snap).map_err(RouteError::Publish)
     }
 
-    /// Per-model metrics snapshots as one JSON object (`GET /metrics`).
+    /// Per-model metrics snapshots as one JSON object (`GET /metrics`),
+    /// plus a `training` section when a live solver is attached.
     pub fn metrics_json(&self) -> Json {
         let mut o = Json::obj();
         for (name, engine) in &self.engines {
             o.set(name, engine.metrics().snapshot().to_json());
         }
+        if let Some(t) = self.training.lock().unwrap().as_ref() {
+            o.set("training", t.to_json());
+        }
+        o
+    }
+
+    /// Everything `/metrics` knows, in the Prometheus text exposition
+    /// format (`GET /metrics?format=prometheus`): per-model serving
+    /// families (exact histogram buckets — see
+    /// [`super::metrics::prometheus_text`]), per-layer timing gauges
+    /// from sampled batches, and training families when attached.
+    pub fn metrics_prometheus(&self) -> String {
+        let reports: Vec<(String, MetricsReport)> = self
+            .engines
+            .iter()
+            .map(|(n, e)| (n.clone(), e.metrics().snapshot()))
+            .collect();
+        let mut out = prometheus_text(&reports);
+        let mut layer_rows = Vec::new();
+        for (name, engine) in &self.engines {
+            for (layer, agg) in engine.obs().layers.snapshot() {
+                layer_rows.push((name.clone(), layer, agg));
+            }
+        }
+        if !layer_rows.is_empty() {
+            let families: &[(&str, fn(&LayerAgg) -> f64)] = &[
+                ("fecaffe_layer_batches_total", |a| a.batches as f64),
+                ("fecaffe_layer_forward_seconds_total", |a| a.wall_ns as f64 / 1e9),
+                ("fecaffe_layer_sim_seconds_total", |a| a.sim_ns as f64 / 1e9),
+            ];
+            for &(name, get) in families {
+                out.push_str(&format!("# TYPE {name} counter\n"));
+                for (model, layer, agg) in &layer_rows {
+                    out.push_str(&format!(
+                        "{name}{{model=\"{model}\",layer=\"{layer}\"}} {}\n",
+                        get(agg)
+                    ));
+                }
+            }
+        }
+        if let Some(t) = self.training.lock().unwrap().as_ref() {
+            t.render_prometheus(&mut out);
+        }
+        out
+    }
+
+    /// Every sampled batch trace across every model, merged into one
+    /// chrome-trace JSON document — one named process group per batch
+    /// (`GET /admin/trace`). `clear` drains the rings afterwards.
+    pub fn traces_chrome_json(&self, clear: bool) -> String {
+        let mut batches = Vec::new();
+        for (name, engine) in &self.engines {
+            for t in engine.obs().traces.dump() {
+                let label = format!(
+                    "{name} batch {} ({}/{} rows, weights v{})",
+                    t.seq, t.filled, t.rows, t.weights_version
+                );
+                batches.push((label, t.spans));
+            }
+            if clear {
+                engine.obs().traces.clear();
+            }
+        }
+        crate::trace::chrome_trace_batches(&batches)
+    }
+
+    /// Liveness + readiness detail for `GET /healthz`: per-model weight
+    /// versions, worker health and queue depth. `status` degrades when
+    /// any model has lost every worker.
+    pub fn health_json(&self, uptime_s: f64) -> Json {
+        let mut models = Vec::new();
+        let mut all_healthy = true;
+        for (name, engine) in &self.engines {
+            let healthy = engine.healthy_workers();
+            all_healthy &= healthy > 0;
+            let mut m = Json::obj();
+            m.set("name", Json::str(name.clone()));
+            m.set("weights_version", Json::num(engine.weights_version() as f64));
+            m.set("workers", Json::num(engine.config().workers as f64));
+            m.set("healthy_workers", Json::num(healthy as f64));
+            m.set("queue_depth", Json::num(engine.queue_depth() as f64));
+            models.push(m);
+        }
+        let mut o = Json::obj();
+        o.set("status", Json::str(if all_healthy { "ok" } else { "degraded" }));
+        o.set("uptime_s", Json::num(uptime_s));
+        o.set("models", Json::Arr(models));
         o
     }
 

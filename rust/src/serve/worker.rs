@@ -32,13 +32,15 @@ use super::engine::{DeviceKind, SharedWeights};
 use super::metrics::Metrics;
 use super::queue::SharedQueue;
 use crate::device::Device;
-use crate::layers::SharedBlob;
+use crate::layers::{LayerTiming, SharedBlob};
 use crate::net::{Net, WeightSnapshot};
+use crate::obs::{BatchTraceBuilder, EngineObs, TraceScope, LANE_HOST, LANE_LAYER, LANE_QUEUE};
 use crate::proto::Phase;
 use crate::runtime::plan::batch_bucket;
 use crate::zoo::DeployNet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 pub(crate) struct WorkerContext {
     pub id: usize,
@@ -53,6 +55,8 @@ pub(crate) struct WorkerContext {
     pub output_len: usize,
     pub queue: Arc<SharedQueue<Batch>>,
     pub metrics: Arc<Metrics>,
+    /// Sampled batch traces + per-layer aggregates (engine-wide).
+    pub obs: Arc<EngineObs>,
     /// Workers still able to serve (shared across the pool).
     pub healthy: Arc<AtomicUsize>,
 }
@@ -123,10 +127,29 @@ impl Replica {
 
     /// Reshape to the batch's bucket, execute, and scatter the results,
     /// stamping every response with the weights version that computed it.
+    ///
+    /// When this batch is sampled (`obs.traces.begin()`), every stage is
+    /// bracketed in spans, the forward runs per-layer traced, and the
+    /// device profiler's pcie/fpga-kernel lanes are merged in — rebased
+    /// from the simulated clock so the batch's first device operation
+    /// lands at the host-side upload offset. Un-sampled batches pass
+    /// `None` builders everywhere and pay no clock reads.
     fn serve(&mut self, dev: &mut dyn Device, batch: Batch, ctx: &WorkerContext, version: u64) {
         let k = batch.requests.len();
         let rows = batch_bucket(k, ctx.deploy.batch);
+        // Sampled trace, origin = the oldest request's submit instant:
+        // origin→`formed` is queue + linger wait, `formed`→now is
+        // dispatch-queue wait until this worker popped the batch.
+        let mut trace = ctx.obs.traces.begin().map(|seq| {
+            let t0 = batch.requests.iter().map(|r| r.submitted).min().unwrap_or(batch.formed);
+            let mut b = BatchTraceBuilder::new(seq, t0, k, version);
+            b.set_rows(rows);
+            b.span_between(LANE_QUEUE, "queue-wait", t0, batch.formed);
+            b.span_between(LANE_QUEUE, "dispatch-wait", batch.formed, Instant::now());
+            b
+        });
         if rows != self.rows {
+            let _s = TraceScope::start(trace.as_mut(), LANE_HOST, "reshape");
             if let Err(e) = self.net.reshape_batch(dev, rows) {
                 // A failed reshape can leave the DAG half-propagated:
                 // poison the cached shape so the next batch re-runs the
@@ -140,15 +163,45 @@ impl Replica {
             }
             self.rows = rows;
         }
-        let samples: Vec<&[f32]> =
-            batch.requests.iter().map(|r| r.sample.as_slice()).collect();
-        let packed = gather(&samples, ctx.deploy.sample_len, rows);
-        drop(samples);
-        self.input.borrow_mut().set_data(dev, &packed);
+        let packed = {
+            let _s = TraceScope::start(trace.as_mut(), LANE_HOST, "gather");
+            let samples: Vec<&[f32]> =
+                batch.requests.iter().map(|r| r.sample.as_slice()).collect();
+            gather(&samples, ctx.deploy.sample_len, rows)
+        };
+        // Device lanes: turn span recording on for the sampled batch and
+        // note where its device work begins, on both clocks — `dev_base`
+        // on the batch timeline, `sim0` on the simulated clock.
+        let mut dev_base = 0u64;
+        if let Some(b) = trace.as_mut() {
+            dev.set_span_recording(true);
+            dev_base = b.offset_of(Instant::now());
+        }
+        let sim0 = dev.sim_clock_ns().unwrap_or(0);
+        {
+            let _s = TraceScope::start(trace.as_mut(), LANE_HOST, "upload");
+            self.input.borrow_mut().set_data(dev, &packed);
+        }
         // On the FPGA sim, meter the batch in *simulated* device time so
         // batching policy can be judged against the paper's cost model.
         let sim_before = dev.sim_clock_ns();
-        match self.net.forward(dev) {
+        let mut layer_rows: Vec<(String, u64, u64)> = Vec::new();
+        let fwd = match trace.as_mut() {
+            Some(b) => {
+                let fwd_base = b.offset_of(Instant::now());
+                let r = self.net.forward_traced(dev, &mut |t: LayerTiming<'_>| {
+                    let start = fwd_base + t.wall_start_ns;
+                    b.push(LANE_LAYER, t.name.to_string(), start, t.wall_ns.max(1));
+                    layer_rows.push((t.name.to_string(), t.wall_ns, t.sim_ns.unwrap_or(0)));
+                });
+                let end = b.offset_of(Instant::now());
+                let dur = end.saturating_sub(fwd_base).max(1);
+                b.push(LANE_HOST, "forward".to_string(), fwd_base, dur);
+                r
+            }
+            None => self.net.forward(dev),
+        };
+        match fwd {
             Ok(_) => {
                 // Row accounting only for batches that actually ran —
                 // a failed forward must not inflate occupancy.
@@ -156,19 +209,50 @@ impl Replica {
                 if let (Some(t0), Some(t1)) = (sim_before, dev.sim_clock_ns()) {
                     ctx.metrics.record_sim_batch(t1.saturating_sub(t0));
                 }
+                if !layer_rows.is_empty() {
+                    ctx.obs.layers.record(&layer_rows);
+                }
                 // Read back only the filled rows — the grow-only output
                 // blob's allocation is sized for the largest batch ever
                 // run, not this one.
                 let mut out = vec![0.0f32; k * ctx.output_len];
-                self.output.borrow_mut().data.read_prefix(dev, &mut out);
-                let result_rows = scatter(&out, ctx.output_len, k);
-                for (req, row) in batch.requests.into_iter().zip(result_rows) {
-                    let ns = req.submitted.elapsed().as_nanos() as u64;
-                    req.fulfill(row, version);
-                    ctx.metrics.record_done(ns);
+                {
+                    let _s = TraceScope::start(trace.as_mut(), LANE_HOST, "readback");
+                    self.output.borrow_mut().data.read_prefix(dev, &mut out);
+                }
+                // Merge the device lanes recorded across upload, forward
+                // and readback, rebased onto the batch timeline.
+                if let Some(b) = trace.as_mut() {
+                    let spans = dev.take_spans();
+                    dev.set_span_recording(false);
+                    for s in spans {
+                        let start = dev_base + s.start_ns.saturating_sub(sim0);
+                        b.push(s.lane, s.name, start, s.dur_ns.max(1));
+                    }
+                }
+                let result_rows = {
+                    let _s = TraceScope::start(trace.as_mut(), LANE_HOST, "scatter");
+                    scatter(&out, ctx.output_len, k)
+                };
+                {
+                    let _s = TraceScope::start(trace.as_mut(), LANE_HOST, "respond");
+                    for (req, row) in batch.requests.into_iter().zip(result_rows) {
+                        let ns = req.submitted.elapsed().as_nanos() as u64;
+                        req.fulfill(row, version);
+                        ctx.metrics.record_done(ns);
+                    }
+                }
+                if let Some(b) = trace.take() {
+                    ctx.obs.traces.commit(b.finish());
                 }
             }
             Err(e) => {
+                if trace.is_some() {
+                    // Leave the device clean for the next batch; the
+                    // partial trace is dropped, never committed.
+                    dev.set_span_recording(false);
+                    let _ = dev.take_spans();
+                }
                 let msg = format!("worker {}: forward failed: {e:#}", ctx.id);
                 for req in batch.requests {
                     req.fail(&msg);

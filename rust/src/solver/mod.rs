@@ -15,7 +15,10 @@ pub mod snapshot;
 
 use crate::device::{BufId, Device, Kernel, KernelCall};
 use crate::net::{Net, WeightSnapshot};
+use crate::obs::TrainMetrics;
 use crate::proto::{SolverKind, SolverParameter};
+use std::sync::Arc;
+use std::time::Instant;
 
 pub struct Solver {
     pub param: SolverParameter,
@@ -26,6 +29,11 @@ pub struct Solver {
     history: Vec<Vec<BufId>>,
     /// Loss trace (one entry per iteration) for convergence reporting.
     pub loss_history: Vec<f32>,
+    /// Wait-free training counters (iterations, last loss, phase-timing
+    /// histograms). Behind an `Arc` so a serving front-end can hold the
+    /// same handle and expose it on `/metrics` while training runs
+    /// (`fecaffe train --serve` attaches it to the router).
+    pub metrics: Arc<TrainMetrics>,
 }
 
 /// Learning rate for `p` at iteration `iter` — caffe
@@ -89,7 +97,14 @@ impl Solver {
             }
             history.push(bufs);
         }
-        Ok(Solver { param, net, iter: 0, history, loss_history: Vec::new() })
+        Ok(Solver {
+            param,
+            net,
+            iter: 0,
+            history,
+            loss_history: Vec::new(),
+            metrics: Arc::new(TrainMetrics::new()),
+        })
     }
 
     /// Current learning rate under the configured policy (caffe
@@ -100,17 +115,29 @@ impl Solver {
     }
 
     /// One training iteration: forward/backward + update. Returns loss.
+    /// Forward, backward and update wall time land in [`Solver::metrics`]
+    /// (summed across `iter_size` accumulation passes, so one sample =
+    /// one iteration regardless of accumulation).
     pub fn step(&mut self, dev: &mut dyn Device) -> anyhow::Result<f32> {
         let mut loss = 0.0;
+        let (mut forward_ns, mut backward_ns) = (0u64, 0u64);
         // iter_size forward/backwards accumulate gradients (Caffe's
         // gradient accumulation for large effective batches).
         for _ in 0..self.param.iter_size {
-            loss += self.net.forward_backward(dev)?;
+            let t0 = Instant::now();
+            loss += self.net.forward(dev)?;
+            let t1 = Instant::now();
+            self.net.backward(dev)?;
+            forward_ns += (t1 - t0).as_nanos() as u64;
+            backward_ns += t1.elapsed().as_nanos() as u64;
         }
         loss /= self.param.iter_size as f32;
+        let t2 = Instant::now();
         self.apply_update(dev)?;
+        let update_ns = t2.elapsed().as_nanos() as u64;
         self.iter += 1;
         self.loss_history.push(loss);
+        self.metrics.record_iteration(forward_ns, backward_ns, update_ns, loss);
         Ok(loss)
     }
 
@@ -144,7 +171,9 @@ impl Solver {
                 snapshot::save(&path, self, dev)?;
             }
             if publish_every > 0 && self.iter % publish_every == 0 {
+                let t0 = Instant::now();
                 publish(self.export_weights(dev))?;
+                self.metrics.record_publish(t0.elapsed().as_nanos() as u64);
             }
         }
         Ok(())
@@ -415,6 +444,15 @@ layer { name: "loss" type: "SoftmaxWithLoss" bottom: "fc" bottom: "label" top: "
         assert_eq!(tags, vec!["iter-3", "iter-6", "iter-9"]);
         assert!(published.iter().all(|(n, _)| *n == 2), "{published:?}");
         assert_eq!(s.iter, 10);
+        // Training metrics tracked the run: one sample per iteration,
+        // one publish timing per callback invocation.
+        let m = s.metrics.to_json();
+        assert_eq!(m.get("iterations").unwrap().as_usize().unwrap(), 10);
+        assert_eq!(m.get("publishes").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(
+            m.get("last_loss").unwrap().as_f64().unwrap() as f32,
+            *s.loss_history.last().unwrap()
+        );
     }
 
     #[test]

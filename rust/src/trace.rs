@@ -1,45 +1,91 @@
 //! Timeline export — the stand-in for the paper's VTune / OpenCL-profiler
 //! views (Figures 4 and 5).
 //!
-//! Two renderers over [`crate::device::fpga::profiler::Span`]s:
-//! * chrome-trace JSON (open in `chrome://tracing` / Perfetto) with one
-//!   track per lane (host / pcie / fpga-kernel), mirroring Figure 4's
-//!   CPU-green vs FPGA-pink lanes;
-//! * an ASCII timeline for terminals and EXPERIMENTS.md.
+//! Renderers over [`crate::device::fpga::profiler::Span`]s:
+//! * [`chrome_trace`] — chrome-trace JSON (open in `chrome://tracing` /
+//!   Perfetto) with one track per lane, mirroring Figure 4's CPU-green
+//!   vs FPGA-pink lanes;
+//! * [`chrome_trace_batches`] — the same, with one *process* group per
+//!   sampled serving batch (`GET /admin/trace` uses this: each batch's
+//!   queue/host/layer/pcie/fpga-kernel lanes land under its own named
+//!   group in the Perfetto track list);
+//! * [`ascii_timeline`] — a fixed-width ASCII timeline for terminals
+//!   and EXPERIMENTS.md.
 
 use crate::device::fpga::profiler::Span;
 use crate::util::json::Json;
+use std::collections::BTreeSet;
 
-/// Spans → chrome-trace JSON ("traceEvents" array of X events).
-pub fn chrome_trace(spans: &[Span]) -> String {
-    let mut events = Vec::new();
+/// Stable chrome-trace thread id per lane. The mapping is part of the
+/// trace format: saved traces diff cleanly across runs, and tests (or
+/// external tooling) can rely on it.
+pub fn lane_tid(lane: &str) -> u32 {
+    match lane {
+        "host" => 0,
+        "pcie" => 1,
+        "fpga-kernel" => 2,
+        "queue" => 3,
+        "layer" => 4,
+        _ => 5,
+    }
+}
+
+/// Append one batch's X events plus thread-name metadata for every lane
+/// actually present (no phantom empty tracks).
+fn push_batch_events(events: &mut Vec<Json>, pid: u32, spans: &[Span]) {
+    let mut lanes: BTreeSet<(u32, &str)> = BTreeSet::new();
     for s in spans {
-        let tid = match s.lane {
-            "host" => 0,
-            "pcie" => 1,
-            _ => 2,
-        };
+        lanes.insert((lane_tid(s.lane), s.lane));
         let mut e = Json::obj();
         e.set("name", Json::str(s.name.clone()))
             .set("ph", Json::str("X"))
-            .set("pid", Json::num(1))
-            .set("tid", Json::num(tid))
+            .set("pid", Json::num(pid))
+            .set("tid", Json::num(lane_tid(s.lane)))
             .set("ts", Json::num(s.start_ns as f64 / 1e3))
             .set("dur", Json::num((s.dur_ns.max(1)) as f64 / 1e3))
             .set("cat", Json::str(s.lane));
         events.push(e);
     }
-    // Thread name metadata.
-    for (tid, name) in [(0, "host"), (1, "pcie"), (2, "fpga-kernel")] {
+    for (tid, lane) in lanes {
         let mut args = Json::obj();
-        args.set("name", Json::str(name));
+        args.set("name", Json::str(lane));
         let mut e = Json::obj();
         e.set("name", Json::str("thread_name"))
             .set("ph", Json::str("M"))
-            .set("pid", Json::num(1))
+            .set("pid", Json::num(pid))
             .set("tid", Json::num(tid))
             .set("args", args);
         events.push(e);
+    }
+}
+
+/// Spans → chrome-trace JSON ("traceEvents" array of X events).
+pub fn chrome_trace(spans: &[Span]) -> String {
+    let mut events = Vec::new();
+    push_batch_events(&mut events, 1, spans);
+    let mut root = Json::obj();
+    root.set("traceEvents", Json::Arr(events));
+    root.to_string()
+}
+
+/// Labelled span sets → one chrome-trace JSON document with a named
+/// process group per entry (pid = position + 1). This is the shape
+/// `/admin/trace` serves: one group per sampled batch, each holding
+/// that batch's full host + device timeline.
+pub fn chrome_trace_batches(batches: &[(String, Vec<Span>)]) -> String {
+    let mut events = Vec::new();
+    for (i, (label, spans)) in batches.iter().enumerate() {
+        let pid = i as u32 + 1;
+        let mut args = Json::obj();
+        args.set("name", Json::str(label.clone()));
+        let mut e = Json::obj();
+        e.set("name", Json::str("process_name"))
+            .set("ph", Json::str("M"))
+            .set("pid", Json::num(pid))
+            .set("tid", Json::num(0))
+            .set("args", args);
+        events.push(e);
+        push_batch_events(&mut events, pid, spans);
     }
     let mut root = Json::obj();
     root.set("traceEvents", Json::Arr(events));
@@ -47,7 +93,9 @@ pub fn chrome_trace(spans: &[Span]) -> String {
 }
 
 /// Spans → fixed-width ASCII timeline (Figure 4 in a terminal).
-/// `cols` character cells cover the full [0, end] range.
+/// `cols` character cells cover the full [0, end] range. The device
+/// lanes always render (so empty traces still show the frame); any
+/// other lane present in the spans gets a row in first-seen order.
 pub fn ascii_timeline(spans: &[Span], cols: usize) -> String {
     let end = spans
         .iter()
@@ -56,7 +104,12 @@ pub fn ascii_timeline(spans: &[Span], cols: usize) -> String {
         .unwrap_or(1)
         .max(1);
     let mut out = String::new();
-    let lanes = ["pcie", "fpga-kernel"];
+    let mut lanes: Vec<&str> = vec!["pcie", "fpga-kernel"];
+    for s in spans {
+        if !lanes.contains(&s.lane) {
+            lanes.push(s.lane);
+        }
+    }
     for lane in lanes {
         let mut row = vec![b'.'; cols];
         for s in spans.iter().filter(|s| s.lane == lane) {
@@ -100,11 +153,57 @@ mod tests {
         let text = chrome_trace(&spans());
         let v = Json::parse(&text).unwrap();
         let events = v.get("traceEvents").unwrap().as_arr().unwrap();
-        // 3 spans + 3 metadata
-        assert_eq!(events.len(), 6);
+        // 3 spans + thread_name metadata for the 2 lanes present.
+        assert_eq!(events.len(), 5);
         let first = &events[0];
         assert_eq!(first.get("ph").unwrap().as_str().unwrap(), "X");
         assert_eq!(first.get("ts").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn lanes_map_to_stable_tids() {
+        // The mapping is frozen: traces saved from different runs (and
+        // the integration tests) rely on these exact ids.
+        let expect = [("host", 0), ("pcie", 1), ("fpga-kernel", 2), ("queue", 3), ("layer", 4)];
+        for (lane, tid) in expect {
+            assert_eq!(lane_tid(lane), tid, "{lane}");
+        }
+        assert_eq!(lane_tid("anything-else"), 5);
+        let text = chrome_trace(&spans());
+        let v = Json::parse(&text).unwrap();
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        for e in events.iter().filter(|e| e.get("cat").is_some()) {
+            let cat = e.get("cat").unwrap().as_str().unwrap().to_string();
+            let tid = e.get("tid").unwrap().as_usize().unwrap() as u32;
+            assert_eq!(tid, lane_tid(&cat));
+        }
+    }
+
+    #[test]
+    fn batched_trace_groups_by_pid_with_process_names() {
+        let batches = vec![
+            ("lenet batch 0 (3/4 rows)".to_string(), spans()),
+            ("lenet batch 8 (1/1 rows)".to_string(), spans()[..1].to_vec()),
+        ];
+        let text = chrome_trace_batches(&batches);
+        let v = Json::parse(&text).unwrap();
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        // Batch 1: process_name + 3 spans + 2 lane metas;
+        // batch 2: process_name + 1 span + 1 lane meta.
+        assert_eq!(events.len(), 9);
+        let names: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("name").unwrap().as_str() == Some("process_name"))
+            .map(|e| e.get("args").unwrap().get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["lenet batch 0 (3/4 rows)", "lenet batch 8 (1/1 rows)"]);
+        // Every X event of the second batch carries pid 2.
+        let pids: BTreeSet<usize> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .map(|e| e.get("pid").unwrap().as_usize().unwrap())
+            .collect();
+        assert_eq!(pids, BTreeSet::from([1, 2]));
     }
 
     #[test]
@@ -118,10 +217,38 @@ mod tests {
     }
 
     #[test]
+    fn ascii_timeline_stays_fixed_width_with_overlaps_and_extra_lanes() {
+        // Overlapping spans on one lane plus host-side lanes: every row
+        // must still be exactly `cols` cells between its delimiters.
+        let spans = vec![
+            Span { lane: "fpga-kernel", name: "Gemm".into(), start_ns: 0, dur_ns: 900 },
+            Span { lane: "fpga-kernel", name: "ReLU_F".into(), start_ns: 300, dur_ns: 900 },
+            Span { lane: "queue", name: "queue-wait".into(), start_ns: 0, dur_ns: 400 },
+            Span { lane: "layer", name: "conv1".into(), start_ns: 500, dur_ns: 700 },
+        ];
+        let cols = 32;
+        let text = ascii_timeline(&spans, cols);
+        for lane in ["pcie", "fpga-kernel", "queue", "layer"] {
+            assert!(text.contains(lane), "missing lane {lane}");
+        }
+        let rows: Vec<&str> = text.lines().filter(|l| l.contains('|')).collect();
+        assert_eq!(rows.len(), 4);
+        for row in rows {
+            let inner = row.split('|').nth(1).unwrap();
+            assert_eq!(inner.len(), cols, "row not fixed-width: {row}");
+        }
+        // The overlap region renders the later span's glyph, clamped in
+        // bounds — no row ever grows past `cols`.
+        assert!(text.contains('R'));
+    }
+
+    #[test]
     fn empty_spans_dont_panic() {
         let text = ascii_timeline(&[], 10);
         assert!(text.contains("pcie"));
         let json = chrome_trace(&[]);
+        assert!(Json::parse(&json).is_ok());
+        let json = chrome_trace_batches(&[]);
         assert!(Json::parse(&json).is_ok());
     }
 }

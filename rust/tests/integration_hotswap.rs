@@ -62,6 +62,7 @@ fn engine_for(param: &NetParameter, workers: usize, max_batch: usize) -> Engine 
             queue_capacity: 256,
             device: DeviceKind::Cpu,
             intra_op_threads: 1,
+            trace_sample: 0,
         },
     )
     .unwrap()

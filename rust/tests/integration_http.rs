@@ -31,6 +31,7 @@ fn lenet_engine() -> Engine {
             queue_capacity: 64,
             device: DeviceKind::Cpu,
             intra_op_threads: 1,
+            trace_sample: 0,
         },
     )
     .unwrap()
@@ -54,10 +55,22 @@ fn two_models_predict_healthz_metrics_inventory() {
     let server = HttpServer::bind("127.0.0.1:0", router, HttpConfig::default()).unwrap();
     let addr = server.local_addr().to_string();
 
-    // healthz
+    // healthz: JSON with overall status, uptime and per-model health.
     let (status, body) = http_request(&addr, "GET", "/healthz", b"").unwrap();
     assert_eq!(status, 200);
-    assert_eq!(body, b"ok\n");
+    let health = parse_json(&body);
+    assert_eq!(health.get("status").unwrap().as_str().unwrap(), "ok");
+    assert!(health.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+    let entries = health.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(entries.len(), 2);
+    for m in entries {
+        assert_eq!(m.get("weights_version").unwrap().as_usize().unwrap(), 0);
+        assert!(m.get("healthy_workers").unwrap().as_usize().unwrap() >= 1);
+        assert_eq!(
+            m.get("workers").unwrap().as_usize(),
+            m.get("healthy_workers").unwrap().as_usize()
+        );
+    }
 
     // Inventory lists both models with LeNet's schema.
     let (status, body) = http_request(&addr, "GET", "/v1/models", b"").unwrap();
@@ -195,6 +208,7 @@ layer { name: "loss" type: "SoftmaxWithLoss" bottom: "fc3" bottom: "label" top: 
             queue_capacity: 1,
             device: DeviceKind::Cpu,
             intra_op_threads: 1,
+            trace_sample: 0,
         },
     )
     .unwrap();

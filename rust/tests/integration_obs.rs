@@ -1,0 +1,180 @@
+//! Integration: the observability layer end to end.
+//!
+//! * `trace_sample: 1` on an FPGA-sim engine → every batch lands in the
+//!   trace ring with the full lifecycle on one timeline: queue wait,
+//!   host phases, per-layer forward spans and the device's rebased
+//!   pcie / fpga-kernel lanes, in causal order;
+//! * per-layer aggregates accumulate wall *and* simulated time;
+//! * over HTTP: `GET /metrics?format=prometheus` renders the metric
+//!   families, `GET /admin/trace` returns chrome-trace JSON with ≥1
+//!   sampled batch, and `?clear=1` empties the ring.
+
+use fecaffe::obs::{LANE_LAYER, LANE_QUEUE};
+use fecaffe::serve::{
+    http_request, DeviceKind, Engine, EngineConfig, HttpConfig, HttpServer, ModelRouter,
+};
+use fecaffe::util::json::Json;
+use fecaffe::zoo;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn traced_fpga_engine() -> Engine {
+    let param = zoo::by_name("lenet", 1).unwrap();
+    Engine::new(
+        &param,
+        EngineConfig {
+            workers: 1,
+            max_batch: 4,
+            max_linger: Duration::from_micros(500),
+            queue_capacity: 64,
+            device: DeviceKind::FpgaSim,
+            intra_op_threads: 1,
+            trace_sample: 1,
+        },
+    )
+    .unwrap()
+}
+
+fn run_requests(engine: &Engine, n: usize) {
+    let handles: Vec<_> = (0..n)
+        .map(|_| engine.submit(vec![0.5f32; engine.sample_len()]).unwrap())
+        .collect();
+    for h in handles {
+        h.wait().unwrap();
+    }
+}
+
+#[test]
+fn sampled_batch_trace_covers_the_full_lifecycle_in_order() {
+    let engine = traced_fpga_engine();
+    run_requests(&engine, 6);
+    engine.shutdown();
+
+    let traces = engine.obs().traces.dump();
+    assert!(!traces.is_empty(), "trace_sample=1 must capture batches");
+    let t = &traces[0];
+    assert!(t.filled >= 1 && t.rows >= t.filled, "{}/{}", t.filled, t.rows);
+
+    let find = |name: &str| t.spans.iter().find(|s| s.name == name);
+    let queue_wait = find("queue-wait").expect("queue-wait span");
+    assert_eq!(queue_wait.lane, LANE_QUEUE);
+    // The trace origin is the oldest request's submit time, so the
+    // queue wait is the first thing on the timeline.
+    assert_eq!(queue_wait.start_ns, 0);
+    let forward = find("forward").expect("host forward span");
+    let gather = find("gather").expect("host gather span");
+    let scatter = find("scatter").expect("host scatter span");
+
+    let layers: Vec<_> = t.spans.iter().filter(|s| s.lane == LANE_LAYER).collect();
+    assert!(!layers.is_empty(), "per-layer spans missing");
+    for l in &layers {
+        // Layer spans nest inside the forward envelope.
+        assert!(l.start_ns >= forward.start_ns, "{} before forward", l.name);
+        assert!(
+            l.start_ns + l.dur_ns <= forward.start_ns + forward.dur_ns + 1_000_000,
+            "{} ends long after forward",
+            l.name
+        );
+    }
+    // Causal order across phases: gather → forward → scatter.
+    assert!(gather.start_ns <= forward.start_ns);
+    assert!(forward.start_ns <= scatter.start_ns);
+
+    // The FPGA-sim device contributed rebased kernel spans that sit
+    // after the batch was picked up (never before the queue wait ends).
+    let kernels: Vec<_> = t.spans.iter().filter(|s| s.lane == "fpga-kernel").collect();
+    assert!(!kernels.is_empty(), "fpga-kernel lane missing");
+    for k in &kernels {
+        assert!(k.start_ns >= queue_wait.dur_ns, "kernel span inside queue wait");
+    }
+
+    // Per-layer aggregates saw the same batches, with simulated time.
+    let layer_stats = engine.obs().layers.snapshot();
+    assert!(!layer_stats.is_empty());
+    assert!(layer_stats.iter().any(|(_, a)| a.sim_ns > 0), "no sim time recorded");
+    assert!(layer_stats.iter().all(|(_, a)| a.batches > 0));
+}
+
+#[test]
+fn trace_ring_clear_empties_it() {
+    let engine = traced_fpga_engine();
+    run_requests(&engine, 2);
+    engine.shutdown();
+    assert!(!engine.obs().traces.dump().is_empty());
+    engine.obs().traces.clear();
+    assert!(engine.obs().traces.dump().is_empty());
+}
+
+#[test]
+fn http_surface_exposes_prometheus_and_chrome_traces() {
+    let router = Arc::new(
+        ModelRouter::from_engines(vec![("lenet".to_string(), traced_fpga_engine())]).unwrap(),
+    );
+    let sample_len = router.engine("lenet").unwrap().sample_len();
+    let server = HttpServer::bind("127.0.0.1:0", router, HttpConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // Drive a couple of predicts through the full HTTP path.
+    let body = fecaffe::serve::http::predict_body(&[vec![0.25f32; sample_len]]);
+    for _ in 0..2 {
+        let (status, _) =
+            http_request(&addr, "POST", "/v1/models/lenet:predict", body.as_bytes()).unwrap();
+        assert_eq!(status, 200);
+    }
+
+    // Prometheus exposition: families rendered once, with model labels.
+    let (status, text) =
+        http_request(&addr, "GET", "/metrics?format=prometheus", b"").unwrap();
+    assert_eq!(status, 200);
+    let text = String::from_utf8(text).unwrap();
+    for family in [
+        "# TYPE fecaffe_requests_completed_total counter",
+        "# TYPE fecaffe_request_latency_seconds histogram",
+        "# TYPE fecaffe_queue_depth gauge",
+        "fecaffe_requests_completed_total{model=\"lenet\"}",
+        "fecaffe_request_latency_seconds_bucket{model=\"lenet\",le=\"+Inf\"}",
+    ] {
+        assert!(text.contains(family), "missing: {family}\n{text}");
+    }
+    // Per-layer counters ride along once batches have executed.
+    assert!(text.contains("fecaffe_layer_sim_seconds_total"), "{text}");
+
+    // The default JSON form still works alongside.
+    let (status, json) = http_request(&addr, "GET", "/metrics", b"").unwrap();
+    assert_eq!(status, 200);
+    Json::parse(std::str::from_utf8(&json).unwrap()).unwrap();
+
+    // /admin/trace: chrome-trace JSON with at least one sampled batch.
+    // (The worker commits a batch's trace just after fulfilling its
+    // responses; give that tail a moment so the clear below is final.)
+    std::thread::sleep(Duration::from_millis(300));
+    let (status, trace) = http_request(&addr, "GET", "/admin/trace?clear=1", b"").unwrap();
+    assert_eq!(status, 200);
+    let doc = Json::parse(std::str::from_utf8(&trace).unwrap()).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "no trace events");
+    let span_names: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+        .map(|e| e.get("name").unwrap().as_str().unwrap())
+        .collect();
+    assert!(span_names.contains(&"queue-wait"), "{span_names:?}");
+    assert!(
+        events.iter().any(|e| e.get("cat").and_then(|c| c.as_str()) == Some("layer")),
+        "no layer-lane events"
+    );
+    // Process groups are labelled per batch.
+    assert!(
+        events.iter().any(|e| e.get("name").unwrap().as_str() == Some("process_name")),
+        "batch process groups missing"
+    );
+
+    // ?clear=1 above emptied the ring: with no new batches since, the
+    // next dump has no events.
+    let (status, trace) = http_request(&addr, "GET", "/admin/trace", b"").unwrap();
+    assert_eq!(status, 200);
+    let doc = Json::parse(std::str::from_utf8(&trace).unwrap()).unwrap();
+    assert!(doc.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+
+    server.shutdown();
+}

@@ -129,6 +129,7 @@ fn engine_partial_batch_matches_fixed_net(kind: DeviceKind) {
             queue_capacity: 64,
             device: kind,
             intra_op_threads: 1,
+            trace_sample: 0,
         },
     )
     .unwrap();

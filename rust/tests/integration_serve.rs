@@ -26,6 +26,7 @@ fn lenet_engine(workers: usize, max_batch: usize, linger: Duration, cap: usize) 
             queue_capacity: cap,
             device: DeviceKind::Cpu,
             intra_op_threads: 0,
+            trace_sample: 0,
         },
     )
     .unwrap()
@@ -185,6 +186,7 @@ fn batched_matches_single_with_intra_op_threads_on() {
             device: DeviceKind::Cpu,
             // Explicitly multi-threaded kernels inside the worker.
             intra_op_threads: fecaffe::util::pool::default_threads().max(2),
+            trace_sample: 0,
         },
     )
     .unwrap();
@@ -233,6 +235,7 @@ fn fpga_sim_workers_report_sim_batch_time() {
             queue_capacity: 64,
             device: DeviceKind::FpgaSim,
             intra_op_threads: 1,
+            trace_sample: 0,
         },
     )
     .unwrap();

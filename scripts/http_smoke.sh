@@ -17,7 +17,8 @@ trap 'kill "$SERVER_PID" 2>/dev/null || true; rm -f "$LOG" "$SNAP" "$LOADJSON"' 
 [ -x "$SERVE" ] || { echo "serve binary not found at $SERVE (set SERVE=...)"; exit 1; }
 [ -x "$FECAFFE" ] || { echo "fecaffe binary not found at $FECAFFE (set FECAFFE=...)"; exit 1; }
 
-"$SERVE" --http 127.0.0.1:0 --models lenet --workers 2 --max-batch 8 >"$LOG" 2>&1 &
+"$SERVE" --http 127.0.0.1:0 --models lenet --workers 2 --max-batch 8 \
+    --trace-sample 1 >"$LOG" 2>&1 &
 SERVER_PID=$!
 
 # Wait for the listener line and extract the bound address.
@@ -39,6 +40,32 @@ curl -sf "http://$ADDR/healthz" | grep -q ok || fail "healthz"
 # predict + metrics through the external load-generator path.
 "$SERVE" --target "$ADDR" --net lenet --requests 64 --clients 4 || fail "http load generator"
 curl -sf "http://$ADDR/metrics" | grep -q '"completed"' || fail "metrics"
+
+# --- Observability surface ------------------------------------------
+# Prometheus text exposition: the core metric families must render.
+PROM="$(curl -sf "http://$ADDR/metrics?format=prometheus")" || fail "prometheus metrics fetch"
+for family in \
+    'TYPE fecaffe_requests_completed_total counter' \
+    'TYPE fecaffe_request_latency_seconds histogram' \
+    'TYPE fecaffe_queue_depth gauge' \
+    'fecaffe_requests_completed_total{model="lenet"}' \
+    'fecaffe_request_latency_seconds_bucket{model="lenet",le="+Inf"}'; do
+    echo "$PROM" | grep -qF "$family" || fail "prometheus family missing: $family"
+done
+
+# /admin/trace: valid chrome-trace JSON with at least one span (the
+# server runs with --trace-sample 1, so the load above was sampled).
+TRACE="$(curl -sf "http://$ADDR/admin/trace")" || fail "trace fetch"
+echo "$TRACE" | python3 -c '
+import json, sys
+doc = json.load(sys.stdin)
+events = doc["traceEvents"]
+spans = [e for e in events if e.get("ph") == "X"]
+assert spans, "no spans in /admin/trace"
+assert any(e.get("name") == "queue-wait" for e in spans), "queue-wait span missing"
+assert any(e.get("cat") == "layer" for e in spans), "layer lane missing"
+' || fail "trace JSON invalid or missing expected spans"
+echo "observability: OK (prometheus families + sampled trace)"
 
 # Unknown model must 404, not crash the server.
 CODE="$(curl -s -o /dev/null -w '%{http_code}' -X POST \
