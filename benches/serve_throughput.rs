@@ -35,6 +35,7 @@ fn main() -> anyhow::Result<()> {
             device: DeviceKind::Cpu,
             intra_op_threads: 0, // auto: split the machine across workers
             trace_sample: 0,     // sampling off — measures the wait-free path
+            ..EngineConfig::default()
         };
         let engine = Engine::new(&param, cfg)?;
         // Warm the replicas (first forward pays blob upload + scratch
@@ -82,6 +83,7 @@ fn main() -> anyhow::Result<()> {
             device: DeviceKind::Cpu,
             intra_op_threads: 0,
             trace_sample: 0,
+            ..RouterConfig::default()
         };
         let router = Arc::new(ModelRouter::from_zoo(&["lenet"], &cfg)?);
         let sample_len = router.engine("lenet").expect("registered").sample_len();
@@ -119,6 +121,7 @@ fn main() -> anyhow::Result<()> {
             device: DeviceKind::Cpu,
             intra_op_threads: 0,
             trace_sample: 0,
+            ..EngineConfig::default()
         };
         let engine = Engine::new(&param, cfg)?;
         let _ = load_test(&engine, clients, clients * 2, 1); // warm
@@ -188,6 +191,7 @@ fn main() -> anyhow::Result<()> {
             device: DeviceKind::Cpu,
             intra_op_threads: 0,
             trace_sample: 0,
+            ..EngineConfig::default()
         };
         let engine = Engine::new(&param, cfg)?;
         let _ = load_test(&engine, low_clients, low_clients * 2, 1); // warm

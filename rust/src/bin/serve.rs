@@ -21,6 +21,7 @@ use fecaffe::serve::{
     http_load_test, http_request, load_test, DeviceKind, Engine, EngineConfig, HttpConfig,
     HttpServer, LoadReport, ModelRouter, RouterConfig,
 };
+use fecaffe::util::chaos::{FaultPlan, CHAOS_ENV};
 use fecaffe::util::cli::{usage, Args, Spec};
 use fecaffe::util::json::Json;
 use fecaffe::util::stats::{fmt_ns, summarize, Summary};
@@ -56,6 +57,12 @@ const SPECS: &[Spec] = &[
     ),
     Spec::opt("models", Some("lenet"), "comma-separated zoo models for --http mode"),
     Spec::opt(
+        "chaos",
+        None,
+        "deterministic fault-injection plan, e.g. seed=7,fault=0.05,panic=1 \
+         (overrides the FECAFFE_CHAOS env var; see README \"Fault tolerance\")",
+    ),
+    Spec::opt(
         "target",
         None,
         "run the HTTP load generator against a serve --http process at this address",
@@ -67,6 +74,20 @@ fn parse_device(args: &Args) -> anyhow::Result<DeviceKind> {
         "cpu" => Ok(DeviceKind::Cpu),
         "fpga" => Ok(DeviceKind::FpgaSim),
         other => anyhow::bail!("unknown device '{other}' (cpu | fpga)"),
+    }
+}
+
+/// `--chaos` fault plan, if any. `None` here still lets the engine pick
+/// up the `FECAFFE_CHAOS` env var — the flag just takes precedence.
+fn parse_chaos(args: &Args) -> anyhow::Result<Option<FaultPlan>> {
+    match args.get("chaos") {
+        None => Ok(None),
+        Some(spec) => {
+            let plan = FaultPlan::parse(spec)
+                .map_err(|e| anyhow::anyhow!("--chaos '{spec}': {e}"))?;
+            println!("[serve] chaos plan active: {spec}");
+            Ok(Some(plan))
+        }
     }
 }
 
@@ -83,6 +104,8 @@ fn report_table(title: &str, report: &LoadReport, s: &Summary) -> Table {
         "backpressure retries".into(),
         format!("{}", report.backpressure_retries),
     ]);
+    table.row(&["breaker retries".into(), format!("{}", report.breaker_retries)]);
+    table.row(&["shed (deadline expired)".into(), format!("{}", report.shed_expired)]);
     table.row(&["failed requests".into(), format!("{}", report.failed)]);
     table
 }
@@ -107,6 +130,7 @@ fn run_http_server(args: &Args, addr: &str) -> anyhow::Result<()> {
         device: parse_device(args)?,
         intra_op_threads: args.get_usize("intra-op").map_err(anyhow::Error::msg)?,
         trace_sample: args.get_usize("trace-sample").map_err(anyhow::Error::msg)? as u64,
+        chaos: parse_chaos(args)?,
     };
     println!(
         "[serve] building {} engine(s) ({}) | {} total worker(s) on {:?} | max-batch {} | queue {}",
@@ -117,6 +141,11 @@ fn run_http_server(args: &Args, addr: &str) -> anyhow::Result<()> {
         cfg.max_batch,
         cfg.queue_capacity
     );
+    if cfg.chaos.is_none() {
+        if let Ok(spec) = std::env::var(CHAOS_ENV) {
+            println!("[serve] {CHAOS_ENV} set: chaos plan '{spec}' (env)");
+        }
+    }
     let router = Arc::new(ModelRouter::from_zoo(&models, &cfg)?);
     for name in router.models() {
         let e = router.engine(name).expect("registered model");
@@ -185,6 +214,8 @@ fn run_http_client(args: &Args, target: &str) -> anyhow::Result<()> {
         o.set("clients", Json::num(clients as f64));
         o.set("requests", Json::num(report.requests as f64));
         o.set("failed", Json::num(report.failed as f64));
+        o.set("shed_expired", Json::num(report.shed_expired as f64));
+        o.set("breaker_retries", Json::num(report.breaker_retries as f64));
         o.set("rps", Json::num(report.rps));
         o.set("p50_ms", Json::num(s.median_ns / 1e6));
         o.set("p95_ms", Json::num(s.p95_ns / 1e6));
@@ -214,6 +245,8 @@ fn run_load_test(args: &Args) -> anyhow::Result<()> {
         device: parse_device(args)?,
         intra_op_threads: args.get_usize("intra-op").map_err(anyhow::Error::msg)?,
         trace_sample: args.get_usize("trace-sample").map_err(anyhow::Error::msg)? as u64,
+        chaos: parse_chaos(args)?,
+        ..EngineConfig::default()
     };
     let requests = args.get_usize("requests").map_err(anyhow::Error::msg)?;
     let clients = args.get_usize("clients").map_err(anyhow::Error::msg)?;
@@ -269,6 +302,18 @@ fn run_load_test(args: &Args) -> anyhow::Result<()> {
         table.row(&["sim time / batch p99".into(), fmt_ns(snap.sim_p99_ns)]);
         table.row(&["sim time total".into(), fmt_ns(snap.sim_total_ns as f64)]);
     }
+    // Failure breakdown from the engine's own counters: every
+    // non-success outcome accounted by kind, plus what the supervision
+    // machinery did about the failures.
+    table.row(&["worker-failed".into(), format!("{}", snap.failed)]);
+    table.row(&["shed-expired".into(), format!("{}", snap.shed_expired)]);
+    table.row(&["rejected (queue full)".into(), format!("{}", snap.rejected)]);
+    table.row(&["breaker-rejected".into(), format!("{}", snap.breaker_rejected)]);
+    if snap.restarts + snap.retries + snap.breaker_trips > 0 {
+        table.row(&["worker restarts".into(), format!("{}", snap.restarts)]);
+        table.row(&["transient retries".into(), format!("{}", snap.retries)]);
+        table.row(&["breaker trips".into(), format!("{}", snap.breaker_trips)]);
+    }
     println!("{}", table.render());
 
     if let Some(path) = args.get("json") {
@@ -286,6 +331,14 @@ fn run_load_test(args: &Args) -> anyhow::Result<()> {
         o.set("occupancy", Json::num(snap.batch_occupancy));
         o.set("filled_rows", Json::num(snap.filled_rows as f64));
         o.set("executed_rows", Json::num(snap.executed_rows as f64));
+        let mut fb = Json::obj();
+        fb.set("worker_failed", Json::num(snap.failed as f64));
+        fb.set("shed_expired", Json::num(snap.shed_expired as f64));
+        fb.set("rejected", Json::num(snap.rejected as f64));
+        fb.set("breaker_rejected", Json::num(snap.breaker_rejected as f64));
+        o.set("failure_breakdown", fb);
+        o.set("restarts", Json::num(snap.restarts as f64));
+        o.set("transient_retries", Json::num(snap.retries as f64));
         if snap.sim_batches > 0 {
             o.set("sim_batch_p50_ms", Json::num(snap.sim_p50_ns / 1e6));
             o.set("sim_batch_p99_ms", Json::num(snap.sim_p99_ns / 1e6));

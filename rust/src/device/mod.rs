@@ -25,6 +25,40 @@ use crate::math::{ConvGeom, PoolGeom};
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct BufId(pub usize);
 
+/// Typed device failure. Real OpenCL runtimes distinguish recoverable
+/// launch hiccups (a transient PCIe/DMA error, a queue flush) from
+/// permanent board state (out of device DDR, a lost context); the
+/// serving worker retries [`DeviceError::Transient`] failures with a
+/// short backoff before failing the batch, while
+/// [`DeviceError::Permanent`] fails it immediately.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DeviceError {
+    /// Retryable: the same call may succeed on a fresh attempt.
+    Transient(String),
+    /// Not retryable: the device (or the request) is at fault and a
+    /// retry would fail identically.
+    Permanent(String),
+}
+
+impl std::fmt::Display for DeviceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeviceError::Transient(m) => write!(f, "transient device error: {m}"),
+            DeviceError::Permanent(m) => write!(f, "permanent device error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for DeviceError {}
+
+/// True when `err` carries a [`DeviceError::Transient`] anywhere in its
+/// chain — the worker's retry gate. Untyped errors (the historical
+/// `anyhow!` paths) are conservatively treated as permanent.
+pub fn is_transient(err: &anyhow::Error) -> bool {
+    err.chain()
+        .any(|c| matches!(c.downcast_ref::<DeviceError>(), Some(DeviceError::Transient(_))))
+}
+
 /// Kernel-class grouping used for Table 2 rows and cost-model efficiency
 /// lookup. Names follow the paper's table.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -511,6 +545,20 @@ mod tests {
             stride_h: 2,
             stride_w: 2,
         }
+    }
+
+    #[test]
+    fn transient_errors_are_detected_through_anyhow_chains() {
+        let e = anyhow::Error::new(DeviceError::Transient("dma hiccup".into()));
+        assert!(is_transient(&e));
+        // Context layers don't hide the typed cause.
+        let wrapped = e.context("launching Gemm");
+        assert!(is_transient(&wrapped));
+        let p = anyhow::Error::new(DeviceError::Permanent("out of device DDR".into()));
+        assert!(!is_transient(&p));
+        // Untyped errors stay permanent (no blind retries).
+        assert!(!is_transient(&anyhow::anyhow!("some legacy failure")));
+        assert!(DeviceError::Transient("x".into()).to_string().contains("transient"));
     }
 
     #[test]

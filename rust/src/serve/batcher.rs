@@ -67,6 +67,15 @@ pub(crate) fn run(
     metrics: Arc<Metrics>,
 ) {
     while let Some(first) = submit.pop() {
+        // Load shedding before batch formation: a request whose
+        // per-request deadline already passed while queued is resolved
+        // as `DeadlineExceeded` right here — it never occupies a batch
+        // slot, so under backlog the batcher spends capacity only on
+        // work someone is still waiting for.
+        if first.expired(Instant::now()) {
+            first.shed();
+            continue;
+        }
         // Anchor the linger at the oldest request's submit time, so queue
         // wait counts against the deadline instead of stacking on top of
         // it. Under backlog the deadline is already past, but pop_until
@@ -75,7 +84,13 @@ pub(crate) fn run(
         let mut requests = vec![first];
         while requests.len() < cfg.max_batch {
             match submit.pop_until(deadline) {
-                Pop::Item(r) => requests.push(r),
+                Pop::Item(r) => {
+                    if r.expired(Instant::now()) {
+                        r.shed();
+                    } else {
+                        requests.push(r);
+                    }
+                }
                 Pop::TimedOut | Pop::Closed => break,
             }
         }

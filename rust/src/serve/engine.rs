@@ -20,14 +20,16 @@
 //! request is ever dropped or served from mixed weights.
 
 use super::batcher::{self, Batch, BatcherConfig};
+use super::lock_unpoisoned;
 use super::metrics::Metrics;
 use super::queue::{PushError, SharedQueue};
 use super::worker;
 use crate::net::{Net, WeightSnapshot};
 use crate::obs::EngineObs;
 use crate::proto::{NetParameter, Phase};
+use crate::util::chaos::{ChaosState, FaultPlan};
 use crate::zoo::{deploy, DeployNet};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -78,6 +80,24 @@ pub struct EngineConfig {
     /// path takes no clock reads and no locks for tracing; when on,
     /// only the sampled batch pays the span-recording cost.
     pub trace_sample: u64,
+    /// How many dead workers the supervisor may respawn over the
+    /// engine's lifetime (0 disables supervision — a dead worker stays
+    /// dead, as in the pre-supervision engine).
+    pub restart_budget: usize,
+    /// Base delay before a respawn; doubles per consecutive restart of
+    /// the same worker slot (capped), so a crash-looping replica can't
+    /// burn the whole budget in milliseconds.
+    pub restart_backoff: Duration,
+    /// Consecutive failed batches that trip the per-model circuit
+    /// breaker (0 disables the breaker).
+    pub breaker_threshold: usize,
+    /// How long an open circuit rejects before admitting a half-open
+    /// probe; doubles per consecutive reopening.
+    pub breaker_cooldown: Duration,
+    /// Fault-injection plan for this engine. `None` falls back to the
+    /// `FECAFFE_CHAOS` environment variable; a no-op plan (or neither
+    /// source set) leaves the serve path entirely fault-free.
+    pub chaos: Option<FaultPlan>,
 }
 
 impl Default for EngineConfig {
@@ -90,6 +110,11 @@ impl Default for EngineConfig {
             device: DeviceKind::Cpu,
             intra_op_threads: 0,
             trace_sample: 0,
+            restart_budget: 8,
+            restart_backoff: Duration::from_millis(20),
+            breaker_threshold: 5,
+            breaker_cooldown: Duration::from_millis(250),
+            chaos: None,
         }
     }
 }
@@ -127,6 +152,18 @@ pub enum ServeError {
     BadRequest(String),
     /// Worker-side failure while executing the request.
     Worker(String),
+    /// The request's deadline passed before a worker executed it; it
+    /// was shed (batcher or worker) without spending a batch slot.
+    /// HTTP 504 semantics — accounted in `shed_expired`, not `failed`.
+    DeadlineExceeded,
+    /// The model's circuit breaker is open after consecutive batch
+    /// failures: fast-rejected at submit without queueing. HTTP 503
+    /// semantics with a `Retry-After` derived from the remaining
+    /// cooldown.
+    BreakerOpen {
+        /// Milliseconds until the breaker admits a half-open probe.
+        retry_after_ms: u64,
+    },
 }
 
 impl std::fmt::Display for ServeError {
@@ -139,6 +176,13 @@ impl std::fmt::Display for ServeError {
             }
             ServeError::BadRequest(m) => write!(f, "bad request: {m}"),
             ServeError::Worker(m) => write!(f, "worker error: {m}"),
+            ServeError::DeadlineExceeded => {
+                write!(f, "deadline exceeded before execution (request shed)")
+            }
+            ServeError::BreakerOpen { retry_after_ms } => write!(
+                f,
+                "circuit breaker open (model failing consecutively; retry in {retry_after_ms} ms)"
+            ),
         }
     }
 }
@@ -174,6 +218,121 @@ impl std::fmt::Display for PublishError {
 
 impl std::error::Error for PublishError {}
 
+const BREAKER_CLOSED: u8 = 0;
+const BREAKER_OPEN: u8 = 1;
+const BREAKER_HALF_OPEN: u8 = 2;
+
+/// Per-model circuit breaker: `threshold` consecutive failed batches
+/// open the circuit, submissions are fast-rejected for `cooldown`, then
+/// one batch is admitted as a half-open probe — success re-closes, a
+/// failed probe reopens with a doubled cooldown. The closed-state hot
+/// path is a single relaxed atomic load; the mutex is touched only at
+/// batch boundaries and while the circuit is not closed.
+pub(crate) struct Breaker {
+    threshold: u32,
+    cooldown: Duration,
+    metrics: Arc<Metrics>,
+    /// Mirror of the state machine's tag for the lock-free fast path —
+    /// transitions happen only under `state`'s lock.
+    tag: AtomicU8,
+    state: Mutex<BreakerInner>,
+}
+
+struct BreakerInner {
+    /// Failed batches since the last success (closed state only).
+    consecutive: u32,
+    /// When the open circuit starts admitting a half-open probe.
+    open_until: Option<Instant>,
+    /// Consecutive reopenings (failed probes) — scales the cooldown.
+    reopenings: u32,
+}
+
+impl Breaker {
+    pub(crate) fn new(threshold: u32, cooldown: Duration, metrics: Arc<Metrics>) -> Breaker {
+        Breaker {
+            threshold,
+            cooldown,
+            metrics,
+            tag: AtomicU8::new(BREAKER_CLOSED),
+            state: Mutex::new(BreakerInner { consecutive: 0, open_until: None, reopenings: 0 }),
+        }
+    }
+
+    /// Admission check. `None` admits the request (closed, half-open,
+    /// or an open circuit whose cooldown just elapsed — that request
+    /// becomes the probe); `Some(ms)` fast-rejects with the remaining
+    /// cooldown for a `Retry-After` header.
+    pub(crate) fn check_reject(&self) -> Option<u64> {
+        if self.threshold == 0 || self.tag.load(Ordering::Relaxed) != BREAKER_OPEN {
+            return None;
+        }
+        let mut inner = lock_unpoisoned(&self.state);
+        // Re-check under the lock: a racing transition may have already
+        // moved the circuit on.
+        if self.tag.load(Ordering::Relaxed) != BREAKER_OPEN {
+            return None;
+        }
+        let now = Instant::now();
+        let until = inner.open_until.unwrap_or(now);
+        if now >= until {
+            // Cooldown over: this submission rides through as the probe.
+            inner.open_until = None;
+            self.tag.store(BREAKER_HALF_OPEN, Ordering::Relaxed);
+            self.metrics.set_breaker_state(2);
+            None
+        } else {
+            Some((until.duration_since(now).as_millis() as u64).max(1))
+        }
+    }
+
+    /// Feed one batch outcome into the state machine (workers call this
+    /// once per executed batch).
+    pub(crate) fn on_batch(&self, ok: bool) {
+        if self.threshold == 0 {
+            return;
+        }
+        let mut inner = lock_unpoisoned(&self.state);
+        if ok {
+            inner.consecutive = 0;
+            if self.tag.swap(BREAKER_CLOSED, Ordering::Relaxed) != BREAKER_CLOSED {
+                inner.reopenings = 0;
+                inner.open_until = None;
+                self.metrics.set_breaker_state(0);
+            }
+            return;
+        }
+        match self.tag.load(Ordering::Relaxed) {
+            // A straggler batch finishing after the trip changes nothing.
+            BREAKER_OPEN => {}
+            // Failed probe: reopen, doubling the cooldown.
+            BREAKER_HALF_OPEN => {
+                inner.reopenings = inner.reopenings.saturating_add(1);
+                self.open_locked(&mut inner);
+            }
+            _ => {
+                inner.consecutive = inner.consecutive.saturating_add(1);
+                if inner.consecutive >= self.threshold {
+                    self.open_locked(&mut inner);
+                }
+            }
+        }
+    }
+
+    fn open_locked(&self, inner: &mut BreakerInner) {
+        let cooldown = self.cooldown.saturating_mul(1u32 << inner.reopenings.min(10));
+        inner.open_until = Some(Instant::now() + cooldown);
+        inner.consecutive = 0;
+        self.tag.store(BREAKER_OPEN, Ordering::Relaxed);
+        self.metrics.record_breaker_trip();
+        self.metrics.set_breaker_state(1);
+    }
+
+    /// Human-readable state for `/healthz` and load reports.
+    pub(crate) fn state_name(&self) -> &'static str {
+        super::metrics::breaker_state_name(self.tag.load(Ordering::Relaxed) as u64)
+    }
+}
+
 /// The engine's published-weights cell: workers poll `version` (one
 /// relaxed-cost atomic load per batch) and only take the `slot` lock
 /// when it moved — the hot path never contends with a publish.
@@ -205,9 +364,12 @@ pub struct ResponseHandle {
 impl ResponseHandle {
     /// Block until the response (or failure) arrives.
     pub fn wait(self) -> Result<Response, ServeError> {
-        let mut guard = self.slot.result.lock().unwrap();
+        // Poison-tolerant: the slot only ever holds a valid
+        // `Option<Result<..>>`, so a panicking writer can't leave it
+        // half-updated — recover the guard instead of cascading.
+        let mut guard = lock_unpoisoned(&self.slot.result);
         while guard.is_none() {
-            guard = self.slot.ready.wait(guard).unwrap();
+            guard = self.slot.ready.wait(guard).unwrap_or_else(|p| p.into_inner());
         }
         let done = guard.take().expect("checked is_some")?;
         Ok(Response {
@@ -248,6 +410,9 @@ impl Response {
 pub(crate) struct Request {
     pub sample: Vec<f32>,
     pub submitted: Instant,
+    /// Absolute expiry; a request past it is shed (batcher or worker)
+    /// instead of spending a batch slot. `None` = no deadline.
+    pub deadline: Option<Instant>,
     slot: Arc<Slot>,
     metrics: Arc<Metrics>,
 }
@@ -255,7 +420,7 @@ pub(crate) struct Request {
 impl Request {
     /// Resolve the slot; returns true if this call set the result.
     fn complete(&self, r: Result<Fulfilled, ServeError>) -> bool {
-        let mut g = self.slot.result.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.slot.result);
         if g.is_some() {
             return false;
         }
@@ -273,6 +438,20 @@ impl Request {
     pub(crate) fn fail(self, why: &str) {
         if self.complete(Err(ServeError::Worker(why.to_string()))) {
             self.metrics.record_failed();
+        }
+    }
+
+    /// True once the request's deadline has passed.
+    pub(crate) fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+
+    /// Shed an expired request: resolve as `DeadlineExceeded` and
+    /// account in `shed_expired` (not `failed` — nothing broke, the
+    /// caller's latency budget simply ran out).
+    pub(crate) fn shed(self) {
+        if self.complete(Err(ServeError::DeadlineExceeded)) {
+            self.metrics.record_shed_expired();
         }
     }
 }
@@ -293,7 +472,112 @@ impl Drop for Request {
 
 struct Threads {
     batcher: JoinHandle<()>,
-    workers: Vec<JoinHandle<()>>,
+    supervisor: Option<JoinHandle<()>>,
+}
+
+/// Everything needed to (re)spawn a worker thread — kept by the
+/// supervisor so a respawned worker is indistinguishable from one
+/// spawned at startup.
+struct WorkerSpawner {
+    deploy: DeployNet,
+    weights: Arc<SharedWeights>,
+    device: DeviceKind,
+    intra_op: usize,
+    output_len: usize,
+    queue: Arc<SharedQueue<Batch>>,
+    metrics: Arc<Metrics>,
+    obs: Arc<EngineObs>,
+    healthy: Arc<AtomicUsize>,
+    breaker: Arc<Breaker>,
+    chaos: Option<Arc<ChaosState>>,
+}
+
+impl WorkerSpawner {
+    fn spawn(&self, wid: usize) -> std::io::Result<JoinHandle<()>> {
+        let ctx = worker::WorkerContext {
+            id: wid,
+            deploy: self.deploy.clone(),
+            weights: self.weights.clone(),
+            device: self.device,
+            intra_op: self.intra_op,
+            output_len: self.output_len,
+            queue: self.queue.clone(),
+            metrics: self.metrics.clone(),
+            obs: self.obs.clone(),
+            healthy: self.healthy.clone(),
+            breaker: self.breaker.clone(),
+            chaos: self.chaos.clone(),
+        };
+        std::thread::Builder::new()
+            .name(format!("serve-worker-{wid}"))
+            .spawn(move || worker::run(ctx))
+    }
+}
+
+/// Supervisor liveness-sweep interval (also the backoff sleep slice, so
+/// shutdown is never held up by more than one slice).
+const SUPERVISE_POLL: Duration = Duration::from_millis(10);
+
+/// Engine-side worker supervision: sweep the pool, join workers whose
+/// threads finished (replica-build failure, injected kill), and respawn
+/// them — with per-slot exponential backoff — while the restart budget
+/// lasts and the pool hasn't fully drained (a closed dispatch queue
+/// means shutdown or last-worker-out; respawning into it would serve
+/// nothing).
+fn supervise(
+    spawner: WorkerSpawner,
+    slots: Arc<Mutex<Vec<Option<JoinHandle<()>>>>>,
+    shutting_down: Arc<AtomicBool>,
+    mut budget: usize,
+    backoff: Duration,
+) {
+    let n = lock_unpoisoned(&slots).len();
+    let mut attempts = vec![0u32; n];
+    'sweep: while !shutting_down.load(Ordering::Acquire) {
+        std::thread::sleep(SUPERVISE_POLL);
+        for wid in 0..n {
+            if shutting_down.load(Ordering::Acquire) {
+                return;
+            }
+            let dead = {
+                let guard = lock_unpoisoned(&slots);
+                matches!(&guard[wid], Some(h) if h.is_finished())
+            };
+            if !dead {
+                continue;
+            }
+            if let Some(h) = lock_unpoisoned(&slots)[wid].take() {
+                let _ = h.join();
+            }
+            if budget == 0 || spawner.queue.is_closed() {
+                continue;
+            }
+            let delay = backoff.saturating_mul(1u32 << attempts[wid].min(6));
+            let respawn_at = Instant::now() + delay;
+            while Instant::now() < respawn_at {
+                if shutting_down.load(Ordering::Acquire) || spawner.queue.is_closed() {
+                    continue 'sweep;
+                }
+                std::thread::sleep(SUPERVISE_POLL.min(delay));
+            }
+            budget -= 1;
+            attempts[wid] = attempts[wid].saturating_add(1);
+            // Count the replacement as healthy *before* it runs so a
+            // burst of deaths can't observe an over-drained gauge; undo
+            // if the OS refuses the thread.
+            let now_healthy = spawner.healthy.fetch_add(1, Ordering::AcqRel) + 1;
+            spawner.metrics.set_healthy_workers(now_healthy as u64);
+            spawner.metrics.record_restart();
+            match spawner.spawn(wid) {
+                Ok(h) => lock_unpoisoned(&slots)[wid] = Some(h),
+                Err(e) => {
+                    let left = spawner.healthy.fetch_sub(1, Ordering::AcqRel) - 1;
+                    spawner.metrics.set_healthy_workers(left as u64);
+                    eprintln!("[serve] supervisor: respawn of worker {wid} failed: {e}");
+                }
+            }
+        }
+    }
 }
 
 /// Batched, multi-worker inference serving engine.
@@ -312,6 +596,9 @@ pub struct Engine {
     metrics: Arc<Metrics>,
     obs: Arc<EngineObs>,
     healthy: Arc<AtomicUsize>,
+    breaker: Arc<Breaker>,
+    shutting_down: Arc<AtomicBool>,
+    worker_slots: Arc<Mutex<Vec<Option<JoinHandle<()>>>>>,
     threads: Mutex<Option<Threads>>,
 }
 
@@ -359,42 +646,57 @@ impl Engine {
         // admission queue where backpressure applies.
         let dispatch_q = Arc::new(SharedQueue::new(cfg.workers * 2));
         let metrics = Arc::new(Metrics::new());
+        metrics.set_healthy_workers(cfg.workers as u64);
+
+        // Fault-injection plan: explicit config wins, else the
+        // `FECAFFE_CHAOS` env var (so smoke scripts can inject faults
+        // into an unmodified server invocation). A present-but-invalid
+        // spec is a hard error — never a silently fault-free run.
+        let plan = match cfg.chaos.clone() {
+            Some(p) => Some(p),
+            None => FaultPlan::from_env().map_err(|e| {
+                anyhow::anyhow!("invalid {} spec: {e}", crate::util::chaos::CHAOS_ENV)
+            })?,
+        };
+        let chaos = plan.filter(|p| !p.is_noop()).map(|p| Arc::new(ChaosState::new(p)));
+        let breaker = Arc::new(Breaker::new(
+            cfg.breaker_threshold as u32,
+            cfg.breaker_cooldown,
+            metrics.clone(),
+        ));
 
         // On a thread-spawn failure partway through, close the queues and
         // join what already started — otherwise the spawned workers (each
         // holding a warm net replica) would park on the queue forever.
-        let unwind = |workers: Vec<JoinHandle<()>>| {
+        let unwind = |slots: Vec<Option<JoinHandle<()>>>| {
             submit_q.close();
             dispatch_q.close();
-            for w in workers {
+            for w in slots.into_iter().flatten() {
                 let _ = w.join();
             }
         };
 
         let healthy = Arc::new(AtomicUsize::new(cfg.workers));
         let obs = Arc::new(EngineObs::new(cfg.trace_sample, TRACE_RING_CAP));
-        let intra_op = cfg.intra_op_budget();
-        let mut workers = Vec::with_capacity(cfg.workers);
+        let spawner = WorkerSpawner {
+            deploy: dep.clone(),
+            weights: shared.clone(),
+            device: cfg.device,
+            intra_op: cfg.intra_op_budget(),
+            output_len,
+            queue: dispatch_q.clone(),
+            metrics: metrics.clone(),
+            obs: obs.clone(),
+            healthy: healthy.clone(),
+            breaker: breaker.clone(),
+            chaos,
+        };
+        let mut slots: Vec<Option<JoinHandle<()>>> = Vec::with_capacity(cfg.workers);
         for wid in 0..cfg.workers {
-            let ctx = worker::WorkerContext {
-                id: wid,
-                deploy: dep.clone(),
-                weights: shared.clone(),
-                device: cfg.device,
-                intra_op,
-                output_len,
-                queue: dispatch_q.clone(),
-                metrics: metrics.clone(),
-                obs: obs.clone(),
-                healthy: healthy.clone(),
-            };
-            match std::thread::Builder::new()
-                .name(format!("serve-worker-{wid}"))
-                .spawn(move || worker::run(ctx))
-            {
-                Ok(handle) => workers.push(handle),
+            match spawner.spawn(wid) {
+                Ok(handle) => slots.push(Some(handle)),
                 Err(e) => {
-                    unwind(workers);
+                    unwind(slots);
                     return Err(anyhow::anyhow!("spawn worker {wid}: {e}"));
                 }
             }
@@ -408,9 +710,24 @@ impl Engine {
         {
             Ok(handle) => handle,
             Err(e) => {
-                unwind(workers);
+                unwind(slots);
                 return Err(anyhow::anyhow!("spawn batcher: {e}"));
             }
+        };
+
+        let worker_slots = Arc::new(Mutex::new(slots));
+        let shutting_down = Arc::new(AtomicBool::new(false));
+        // The supervisor is best-effort: if the OS refuses the thread
+        // the engine still serves, workers just aren't respawned.
+        let supervisor = if cfg.restart_budget > 0 {
+            let (sl, sd) = (worker_slots.clone(), shutting_down.clone());
+            let (budget, backoff) = (cfg.restart_budget, cfg.restart_backoff);
+            std::thread::Builder::new()
+                .name("serve-supervisor".to_string())
+                .spawn(move || supervise(spawner, sl, sd, budget, backoff))
+                .ok()
+        } else {
+            None
         };
 
         Ok(Engine {
@@ -425,7 +742,10 @@ impl Engine {
             metrics,
             obs,
             healthy,
-            threads: Mutex::new(Some(Threads { batcher, workers })),
+            breaker,
+            shutting_down,
+            worker_slots,
+            threads: Mutex::new(Some(Threads { batcher, supervisor })),
         })
     }
 
@@ -450,7 +770,7 @@ impl Engine {
     /// The currently published weight snapshot (what workers serve from
     /// after their next batch boundary).
     pub fn weights(&self) -> WeightSnapshot {
-        self.shared.slot.lock().unwrap().as_ref().clone()
+        lock_unpoisoned(&self.shared.slot).as_ref().clone()
     }
 
     /// Version of the currently published weight snapshot (0 until the
@@ -478,7 +798,7 @@ impl Engine {
         let projected = snap
             .project(&self.param_keys, &self.param_lens)
             .map_err(|e| PublishError::Mismatch(format!("{e:#}")))?;
-        let mut slot = self.shared.slot.lock().unwrap();
+        let mut slot = lock_unpoisoned(&self.shared.slot);
         let current = self.shared.version.load(Ordering::Acquire);
         let offered = projected.version();
         // u64::MAX is reserved: explicit publishes of it are refused,
@@ -526,6 +846,12 @@ impl Engine {
         self.healthy.load(Ordering::Relaxed)
     }
 
+    /// Current circuit-breaker state: `"closed"`, `"open"`, or
+    /// `"half-open"`.
+    pub fn breaker_state(&self) -> &'static str {
+        self.breaker.state_name()
+    }
+
     /// Current admission-queue depth (requests admitted, not yet pulled
     /// into a batch).
     pub fn queue_depth(&self) -> usize {
@@ -535,12 +861,31 @@ impl Engine {
     /// Submit one sample. Non-blocking admission: `Overloaded` means the
     /// bounded queue is full and the caller should back off.
     pub fn submit(&self, sample: Vec<f32>) -> Result<ResponseHandle, ServeError> {
+        self.submit_with_deadline(sample, None)
+    }
+
+    /// Submit one sample with an optional latency budget. A request
+    /// whose deadline passes before a worker executes it is shed
+    /// (resolved as [`ServeError::DeadlineExceeded`]) instead of
+    /// wasting a batch slot on an answer nobody is waiting for.
+    pub fn submit_with_deadline(
+        &self,
+        sample: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<ResponseHandle, ServeError> {
         if sample.len() != self.deploy.sample_len {
             return Err(ServeError::BadRequest(format!(
                 "sample has {} elements, model expects {}",
                 sample.len(),
                 self.deploy.sample_len
             )));
+        }
+        // Breaker first: while the circuit is open the model is known
+        // to be failing whole batches, so rejecting here is cheaper for
+        // everyone than queueing work that will fail.
+        if let Some(retry_after_ms) = self.breaker.check_reject() {
+            self.metrics.record_breaker_rejected();
+            return Err(ServeError::BreakerOpen { retry_after_ms });
         }
         // Cheap pre-check so the common rejection path pays no Slot
         // allocation (racy; try_push below still enforces the bound).
@@ -553,6 +898,7 @@ impl Engine {
         let req = Request {
             sample,
             submitted,
+            deadline: deadline.map(|d| submitted + d),
             slot: slot.clone(),
             metrics: self.metrics.clone(),
         };
@@ -589,16 +935,27 @@ impl Engine {
     /// request through the workers, then join all threads. Idempotent;
     /// also invoked by `Drop`.
     pub fn shutdown(&self) {
-        let threads = self.threads.lock().unwrap().take();
-        let Some(Threads { batcher, workers }) = threads else {
+        let threads = lock_unpoisoned(&self.threads).take();
+        let Some(Threads { batcher, supervisor }) = threads else {
             return;
         };
-        // 1. No new admissions; the batcher drains what's queued.
+        // 1. Stop the supervisor's respawn decisions first — a worker
+        //    exiting because the pool is draining must stay exited.
+        self.shutting_down.store(true, Ordering::Release);
+        // 2. No new admissions; the batcher drains what's queued.
         self.submit_q.close();
         let _ = batcher.join();
-        // 2. Batcher flushed everything into dispatch; workers drain it.
+        // 3. Batcher flushed everything into dispatch; workers drain it.
         self.dispatch_q.close();
-        for w in workers {
+        if let Some(s) = supervisor {
+            let _ = s.join();
+        }
+        // 4. Supervisor joined: the slot table is stable now.
+        let handles: Vec<JoinHandle<()>> = {
+            let mut slots = lock_unpoisoned(&self.worker_slots);
+            slots.iter_mut().filter_map(|s| s.take()).collect()
+        };
+        for w in handles {
             let _ = w.join();
         }
     }
@@ -619,6 +976,7 @@ mod tests {
         let req = Request {
             sample: vec![1.0, 2.0],
             submitted: Instant::now(),
+            deadline: None,
             slot: slot.clone(),
             metrics: metrics.clone(),
         };
@@ -670,6 +1028,101 @@ mod tests {
             }
             other => panic!("expected fulfilled slot, got {other:?}"),
         }
+    }
+
+    /// An expired request sheds as `DeadlineExceeded` — accounted in
+    /// `shed_expired`, never `failed` (nothing broke), exactly once.
+    #[test]
+    fn shed_request_is_deadline_exceeded_not_failed() {
+        let metrics = Arc::new(Metrics::new());
+        let (mut req, slot) = mk_request(&metrics);
+        req.deadline = Some(Instant::now() - Duration::from_millis(1));
+        assert!(req.expired(Instant::now()));
+        req.shed();
+        assert_eq!(metrics.failed.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.shed_expired.load(Ordering::Relaxed), 1);
+        match slot.result.lock().unwrap().as_ref() {
+            Some(Err(ServeError::DeadlineExceeded)) => {}
+            other => panic!("expected DeadlineExceeded resolution, got {other:?}"),
+        }
+        // No deadline, or a future one, never reads as expired.
+        let (req, _slot) = mk_request(&metrics);
+        assert!(!req.expired(Instant::now()));
+        drop(req);
+    }
+
+    /// Breaker lifecycle: threshold consecutive failures open it, the
+    /// open circuit fast-rejects with a remaining-cooldown hint, the
+    /// post-cooldown submission rides through as a half-open probe, and
+    /// a successful probe re-closes (resetting the reopening scale).
+    #[test]
+    fn breaker_opens_after_threshold_and_probe_recloses() {
+        let metrics = Arc::new(Metrics::new());
+        let b = Breaker::new(3, Duration::from_millis(20), metrics.clone());
+        assert_eq!(b.state_name(), "closed");
+        b.on_batch(false);
+        b.on_batch(false);
+        assert!(b.check_reject().is_none(), "two failures stay under threshold 3");
+        b.on_batch(true); // success resets the consecutive count
+        b.on_batch(false);
+        b.on_batch(false);
+        b.on_batch(false);
+        assert_eq!(b.state_name(), "open");
+        let ms = b.check_reject().expect("open circuit fast-rejects");
+        assert!(ms >= 1 && ms <= 20, "retry hint {ms} ms within cooldown");
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(b.check_reject().is_none(), "post-cooldown submission is the probe");
+        assert_eq!(b.state_name(), "half-open");
+        b.on_batch(true);
+        assert_eq!(b.state_name(), "closed");
+        assert_eq!(metrics.breaker_trips.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.breaker_state.load(Ordering::Relaxed), 0);
+    }
+
+    /// A failed half-open probe reopens the circuit (a second trip)
+    /// with a doubled cooldown, and threshold 0 disables the breaker.
+    #[test]
+    fn failed_probe_reopens_and_zero_threshold_disables() {
+        let metrics = Arc::new(Metrics::new());
+        let b = Breaker::new(1, Duration::from_millis(10), metrics.clone());
+        b.on_batch(false);
+        assert_eq!(b.state_name(), "open");
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(b.check_reject().is_none());
+        b.on_batch(false); // probe fails → reopen with 2× cooldown
+        assert_eq!(b.state_name(), "open");
+        assert_eq!(metrics.breaker_trips.load(Ordering::Relaxed), 2);
+        let ms = b.check_reject().expect("reopened circuit rejects");
+        assert!(ms <= 20, "doubled cooldown bounds the retry hint, got {ms}");
+
+        let off = Breaker::new(0, Duration::from_millis(10), Arc::new(Metrics::new()));
+        for _ in 0..10 {
+            off.on_batch(false);
+        }
+        assert!(off.check_reject().is_none(), "threshold 0 never trips");
+        assert_eq!(off.state_name(), "closed");
+    }
+
+    /// A panic while holding the response-slot lock must not cascade:
+    /// the slot only ever holds valid state, so waiters and completers
+    /// recover the poisoned guard instead of panicking (the satellite
+    /// mutex-poisoning audit, pinned).
+    #[test]
+    fn response_slot_survives_mutex_poisoning() {
+        let metrics = Arc::new(Metrics::new());
+        let (req, slot) = mk_request(&metrics);
+        let poisoner = slot.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.result.lock().unwrap();
+            panic!("poison the slot mutex");
+        })
+        .join();
+        assert!(slot.result.lock().is_err(), "precondition: mutex is poisoned");
+        req.fulfill(vec![0.25], 7);
+        let handle = ResponseHandle { slot, submitted: Instant::now() };
+        let resp = handle.wait().expect("wait recovers through the poison");
+        assert_eq!(resp.values, vec![0.25]);
+        assert_eq!(resp.weights_version, 7);
     }
 
     /// Stale-version publishes are refused with a message naming both

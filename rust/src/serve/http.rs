@@ -10,6 +10,9 @@
 //!
 //! ```text
 //! POST /v1/models/<name>:predict   {"instances": [[f32; sample_len], ...]}
+//!   Optional latency budget: "deadline_ms": N in the body, or an
+//!   `x-deadline-ms: N` request header (the body field wins when both
+//!   are present). Requests still queued when it expires are shed.
 //!   200 {"model": "...", "predictions": [[f32; output_len], ...]}
 //!   400 bad JSON / wrong sample length     (ServeError::BadRequest)
 //!   404 unknown model, action or path
@@ -17,14 +20,20 @@
 //!   429 admission queue full — back off    (ServeError::Overloaded)
 //!   500 worker-side failure                (ServeError::Worker)
 //!   503 engine shutting down               (ServeError::ShuttingDown)
+//!   503 + retry-after: <s>  circuit breaker open — the model failed
+//!       too many consecutive batches       (ServeError::BreakerOpen)
+//!   504 deadline expired before execution  (ServeError::DeadlineExceeded)
 //! GET  /v1/models       model inventory (sample_len/output_len each)
 //! GET  /metrics         per-model serve::Metrics as JSON;
 //!                       `?format=prometheus` switches to Prometheus
 //!                       text exposition (text/plain; version=0.0.4)
-//! GET  /healthz         200 JSON: status ("ok" while every model has
-//!                       at least one healthy worker, else "degraded"),
-//!                       uptime_s, per-model weights_version / worker
-//!                       counts / queue depth
+//! GET  /healthz         200 JSON: status "ok" (full strength, breakers
+//!                       closed) / "degraded" (a model below its
+//!                       configured worker count or with a non-closed
+//!                       breaker) / "unhealthy" (a model has zero
+//!                       healthy workers); uptime_s, per-model
+//!                       weights_version / worker counts / breaker
+//!                       state / restarts / queue depth
 //! GET  /admin/trace     chrome-trace JSON of the sampled-batch ring
 //!                       (`--trace-sample`); `?clear=1` also empties
 //!                       the ring after the dump
@@ -45,7 +54,7 @@
 
 use super::engine::{PublishError, ServeError};
 use super::router::{ModelRouter, RouteError};
-use super::LoadReport;
+use super::{lock_unpoisoned, LoadReport};
 use crate::net::WeightSnapshot;
 use crate::util::json::Json;
 use crate::util::prng::Pcg32;
@@ -99,7 +108,7 @@ struct ServerState {
 
 impl ServerState {
     fn request_shutdown(&self) {
-        let mut g = self.shutdown_requested.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.shutdown_requested);
         *g = true;
         self.shutdown_cv.notify_all();
     }
@@ -152,15 +161,19 @@ impl HttpServer {
 
     /// True once a client POSTed `/admin/shutdown` (or `shutdown` ran).
     pub fn shutdown_requested(&self) -> bool {
-        *self.state.shutdown_requested.lock().unwrap()
+        *lock_unpoisoned(&self.state.shutdown_requested)
     }
 
     /// Block until shutdown is requested — the server process's main
     /// loop (`serve --http` parks here).
     pub fn wait_shutdown(&self) {
-        let mut g = self.state.shutdown_requested.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.state.shutdown_requested);
         while !*g {
-            g = self.state.shutdown_cv.wait(g).unwrap();
+            g = self
+                .state
+                .shutdown_cv
+                .wait(g)
+                .unwrap_or_else(|p| p.into_inner());
         }
     }
 
@@ -168,7 +181,7 @@ impl HttpServer {
     /// their current request (bounded wait), then shut the router's
     /// engines down. Idempotent; also runs on `Drop`.
     pub fn shutdown(&self) {
-        let accept = self.accept.lock().unwrap().take();
+        let accept = lock_unpoisoned(&self.accept).take();
         let Some(accept) = accept else { return };
         self.state.request_shutdown();
         self.state.stop.store(true, Ordering::SeqCst);
@@ -269,7 +282,7 @@ fn drain_briefly(stream: &mut TcpStream) {
 /// Write an error response, half-close, and drain briefly so the
 /// response survives the close (see `drain_briefly`).
 fn reply_and_close(stream: &mut TcpStream, status: u16, reason: &'static str, body: &[u8]) {
-    let _ = write_response(stream, status, reason, "text/plain", body, false);
+    let _ = write_response(stream, status, reason, "text/plain", body, &[], false);
     let _ = stream.shutdown(std::net::Shutdown::Write);
     drain_briefly(stream);
 }
@@ -340,8 +353,16 @@ fn handle_connection(stream: TcpStream, state: &Arc<ServerState>) {
         // Mark the request in-flight while it routes and replies, so
         // the graceful drain waits for it (and only it).
         state.busy.fetch_add(1, Ordering::SeqCst);
-        let (status, reason, ctype, body) = route(state, &req);
-        let wrote = write_response(&mut writer, status, reason, ctype, &body, keep_alive);
+        let reply = route(state, &req);
+        let wrote = write_response(
+            &mut writer,
+            reply.status,
+            reply.reason,
+            reply.ctype,
+            &reply.body,
+            &reply.extra,
+            keep_alive,
+        );
         state.busy.fetch_sub(1, Ordering::SeqCst);
         if wrote.is_err() || !keep_alive {
             return;
@@ -356,6 +377,9 @@ struct HttpRequest {
     path: String,
     body: Vec<u8>,
     keep_alive: bool,
+    /// Per-request latency budget from an `x-deadline-ms` header
+    /// (overridden by a `deadline_ms` body field on predict).
+    deadline_ms: Option<u64>,
 }
 
 #[derive(Debug)]
@@ -442,6 +466,7 @@ fn read_request(
     let mut content_length = 0usize;
     // HTTP/1.1 defaults to keep-alive, HTTP/1.0 to close.
     let mut keep_alive = version == "HTTP/1.1";
+    let mut deadline_ms = None;
     let mut header_lines = 0usize;
     loop {
         header_lines += 1;
@@ -472,6 +497,15 @@ fn read_request(
                     keep_alive = true;
                 }
             }
+            "x-deadline-ms" => {
+                // Strict parse: a garbled deadline must surface as 400,
+                // not silently serve with no latency budget.
+                deadline_ms = Some(value.parse::<u64>().map_err(|_| {
+                    HttpReadError::Malformed(
+                        "bad x-deadline-ms (want whole milliseconds)".to_string(),
+                    )
+                })?);
+            }
             "transfer-encoding" => {
                 // Chunked bodies are out of scope for this minimal
                 // parser; every client we ship sends Content-Length.
@@ -487,7 +521,7 @@ fn read_request(
     }
     let mut body = vec![0u8; content_length];
     r.read_exact(&mut body).map_err(HttpReadError::Io)?;
-    Ok(Some(HttpRequest { method, path, body, keep_alive }))
+    Ok(Some(HttpRequest { method, path, body, keep_alive, deadline_ms }))
 }
 
 fn write_response(
@@ -496,13 +530,21 @@ fn write_response(
     reason: &str,
     content_type: &str,
     body: &[u8],
+    extra_headers: &[(&'static str, String)],
     keep_alive: bool,
 ) -> std::io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {status} {reason}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+    let mut head = format!(
+        "HTTP/1.1 {status} {reason}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\nconnection: {}\r\n",
         body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     );
+    for (name, value) in extra_headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     w.write_all(head.as_bytes())?;
     w.write_all(body)?;
     w.flush()
@@ -510,20 +552,32 @@ fn write_response(
 
 // ----------------------------------------------------------- routing
 
-type Reply = (u16, &'static str, &'static str, Vec<u8>);
+/// One routed response: status line, body, and any extra response
+/// headers (today only `retry-after` on a breaker-rejected 503).
+struct Reply {
+    status: u16,
+    reason: &'static str,
+    ctype: &'static str,
+    body: Vec<u8>,
+    extra: Vec<(&'static str, String)>,
+}
+
+fn reply(status: u16, reason: &'static str, ctype: &'static str, body: Vec<u8>) -> Reply {
+    Reply { status, reason, ctype, body, extra: Vec::new() }
+}
 
 fn ok_text(s: &str) -> Reply {
-    (200, "OK", "text/plain", s.as_bytes().to_vec())
+    reply(200, "OK", "text/plain", s.as_bytes().to_vec())
 }
 
 fn ok_json(j: &Json) -> Reply {
-    (200, "OK", "application/json", j.to_pretty().into_bytes())
+    reply(200, "OK", "application/json", j.to_pretty().into_bytes())
 }
 
 fn error_reply(status: u16, reason: &'static str, msg: &str) -> Reply {
     let mut o = Json::obj();
     o.set("error", Json::str(msg));
-    (status, reason, "application/json", o.to_pretty().into_bytes())
+    reply(status, reason, "application/json", o.to_pretty().into_bytes())
 }
 
 /// The HTTP status contract for serving errors (documented in the
@@ -536,6 +590,8 @@ pub fn status_for(e: &RouteError) -> (u16, &'static str) {
             (429, "Too Many Requests")
         }
         RouteError::Serve(ServeError::ShuttingDown) => (503, "Service Unavailable"),
+        RouteError::Serve(ServeError::BreakerOpen { .. }) => (503, "Service Unavailable"),
+        RouteError::Serve(ServeError::DeadlineExceeded) => (504, "Gateway Timeout"),
         RouteError::Serve(ServeError::Worker(_)) => (500, "Internal Server Error"),
         RouteError::Publish(PublishError::Mismatch(_)) => (400, "Bad Request"),
         RouteError::Publish(PublishError::Stale { .. }) => (409, "Conflict"),
@@ -544,7 +600,14 @@ pub fn status_for(e: &RouteError) -> (u16, &'static str) {
 
 fn route_error_reply(e: &RouteError) -> Reply {
     let (status, reason) = status_for(e);
-    error_reply(status, reason, &e.to_string())
+    let mut r = error_reply(status, reason, &e.to_string());
+    if let RouteError::Serve(ServeError::BreakerOpen { retry_after_ms }) = e {
+        // Retry-After is whole seconds; round up and floor at 1 so a
+        // 250 ms cooldown never becomes "retry immediately".
+        let secs = ((retry_after_ms + 999) / 1000).max(1);
+        r.extra.push(("retry-after", secs.to_string()));
+    }
+    r
 }
 
 /// Value of `key` in a raw query string (`a=1&b=2`); `Some("")` for a
@@ -566,7 +629,7 @@ fn route(state: &Arc<ServerState>, req: &HttpRequest) -> Reply {
         ("GET", "/metrics") => {
             if query_param(query, "format") == Some("prometheus") {
                 let text = state.router.metrics_prometheus();
-                (200, "OK", "text/plain; version=0.0.4", text.into_bytes())
+                reply(200, "OK", "text/plain; version=0.0.4", text.into_bytes())
             } else {
                 ok_json(&state.router.metrics_json())
             }
@@ -574,7 +637,7 @@ fn route(state: &Arc<ServerState>, req: &HttpRequest) -> Reply {
         ("GET", "/admin/trace") => {
             let clear = matches!(query_param(query, "clear"), Some("1") | Some("true"));
             let text = state.router.traces_chrome_json(clear);
-            (200, "OK", "application/json", text.into_bytes())
+            reply(200, "OK", "application/json", text.into_bytes())
         }
         ("GET", "/v1/models") => ok_json(&state.router.models_json()),
         ("POST", "/admin/shutdown") => {
@@ -594,7 +657,7 @@ fn route(state: &Arc<ServerState>, req: &HttpRequest) -> Reply {
                     if method != "POST" {
                         return error_reply(405, "Method Not Allowed", "predict requires POST");
                     }
-                    return predict(state, model, &req.body);
+                    return predict(state, model, req);
                 }
             }
             if let Some(rest) = path.strip_prefix("/admin/models/") {
@@ -640,8 +703,8 @@ fn parse_instances(json: &Json) -> Result<Vec<Vec<f32>>, String> {
     Ok(out)
 }
 
-fn predict(state: &Arc<ServerState>, model: &str, body: &[u8]) -> Reply {
-    let text = match std::str::from_utf8(body) {
+fn predict(state: &Arc<ServerState>, model: &str, req: &HttpRequest) -> Reply {
+    let text = match std::str::from_utf8(&req.body) {
         Ok(t) => t,
         Err(_) => return error_reply(400, "Bad Request", "body is not UTF-8"),
     };
@@ -649,6 +712,23 @@ fn predict(state: &Arc<ServerState>, model: &str, body: &[u8]) -> Reply {
         Ok(j) => j,
         Err(e) => return error_reply(400, "Bad Request", &format!("bad JSON: {e}")),
     };
+    // Latency budget: body field wins over the x-deadline-ms header.
+    // Same validation shape as publish's "version": reject negatives
+    // and fractions before the cast instead of saturating them away.
+    let deadline_ms = match json.get("deadline_ms") {
+        None => req.deadline_ms,
+        Some(v) => match v.as_f64() {
+            Some(n) if n >= 0.0 && n.fract() == 0.0 && n <= 9.0e15 => Some(n as u64),
+            _ => {
+                return error_reply(
+                    400,
+                    "Bad Request",
+                    "\"deadline_ms\" must be a non-negative integer",
+                )
+            }
+        },
+    };
+    let deadline = deadline_ms.map(Duration::from_millis);
     let instances = match parse_instances(&json) {
         Ok(v) => v,
         Err(e) => return error_reply(400, "Bad Request", &e),
@@ -662,7 +742,7 @@ fn predict(state: &Arc<ServerState>, model: &str, body: &[u8]) -> Reply {
     // mixed outcome, but no handle is ever left blocking.
     let mut handles = Vec::with_capacity(instances.len());
     for sample in instances {
-        match state.router.submit(model, sample) {
+        match state.router.submit_with_deadline(model, sample, deadline) {
             Ok(h) => handles.push(h),
             Err(e) => return route_error_reply(&e),
         }
@@ -791,10 +871,29 @@ impl HttpClient {
         path: &str,
         body: &[u8],
     ) -> anyhow::Result<(u16, Vec<u8>)> {
-        let head = format!(
-            "{method} {path} HTTP/1.1\r\nhost: fecaffe\r\ncontent-length: {}\r\n\r\n",
+        self.request_with(method, path, &[], body)
+    }
+
+    /// [`request`](HttpClient::request) with extra request headers
+    /// (e.g. `("x-deadline-ms", "50")` for a per-request deadline).
+    pub fn request_with(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> anyhow::Result<(u16, Vec<u8>)> {
+        let mut head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: fecaffe\r\ncontent-length: {}\r\n",
             body.len()
         );
+        for (name, value) in headers {
+            head.push_str(name);
+            head.push_str(": ");
+            head.push_str(value);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
         self.writer.write_all(head.as_bytes())?;
         self.writer.write_all(body)?;
         self.writer.flush()?;
@@ -849,7 +948,9 @@ pub fn predict_body(samples: &[Vec<f32>]) -> String {
 /// Closed-loop HTTP load test against a running server: `clients`
 /// persistent connections each posting single-instance predict
 /// requests and waiting for the response, retrying with a short
-/// backoff on 429. The TCP twin of [`super::load_test`].
+/// backoff on 429 (queue full) and on a breaker-open 503 (the body
+/// names the circuit breaker — a plain shutting-down 503 is terminal).
+/// 504s count as shed, not failed. The TCP twin of [`super::load_test`].
 pub fn http_load_test(
     addr: &str,
     model: &str,
@@ -862,14 +963,18 @@ pub fn http_load_test(
     let path = format!("/v1/models/{model}:predict");
     let issued = AtomicUsize::new(0);
     let retries = AtomicU64::new(0);
+    let breaker_retries = AtomicU64::new(0);
     let failed = AtomicU64::new(0);
+    let shed = AtomicU64::new(0);
     let t0 = Instant::now();
     let latencies_ns: Vec<f64> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(clients);
         for cid in 0..clients {
             let issued = &issued;
             let retries = &retries;
+            let breaker_retries = &breaker_retries;
             let failed = &failed;
+            let shed = &shed;
             let path = &path;
             handles.push(scope.spawn(move || {
                 let mut rng = Pcg32::with_stream(seed, cid as u64 + 1);
@@ -895,6 +1000,21 @@ pub fn http_load_test(
                             Ok((429, _)) => {
                                 retries.fetch_add(1, Ordering::Relaxed);
                                 std::thread::sleep(Duration::from_micros(200));
+                            }
+                            Ok((504, _)) => {
+                                // Deadline shed: the latency budget did
+                                // its job — not a failure.
+                                shed.fetch_add(1, Ordering::Relaxed);
+                                break;
+                            }
+                            Ok((503, rbody))
+                                if String::from_utf8_lossy(&rbody).contains("circuit") =>
+                            {
+                                // Breaker open: wait a beat and retry —
+                                // a breaker that re-closes must not show
+                                // up as client-visible failures.
+                                breaker_retries.fetch_add(1, Ordering::Relaxed);
+                                std::thread::sleep(Duration::from_millis(5));
                             }
                             Ok((_, _)) => {
                                 // 4xx/5xx other than backpressure:
@@ -930,7 +1050,9 @@ pub fn http_load_test(
     Ok(LoadReport {
         requests,
         failed: failed.load(Ordering::Relaxed),
+        shed_expired: shed.load(Ordering::Relaxed),
         backpressure_retries: retries.load(Ordering::Relaxed),
+        breaker_retries: breaker_retries.load(Ordering::Relaxed),
         wall,
         rps: requests as f64 / wall.as_secs_f64().max(1e-9),
         latencies_ns,
@@ -958,6 +1080,14 @@ mod tests {
             503
         );
         assert_eq!(
+            status_for(&RouteError::Serve(ServeError::BreakerOpen { retry_after_ms: 250 })).0,
+            503
+        );
+        assert_eq!(
+            status_for(&RouteError::Serve(ServeError::DeadlineExceeded)),
+            (504, "Gateway Timeout")
+        );
+        assert_eq!(
             status_for(&RouteError::Serve(ServeError::Worker("boom".into()))).0,
             500
         );
@@ -973,6 +1103,26 @@ mod tests {
             .0,
             409
         );
+    }
+
+    /// A breaker-rejected 503 must carry a whole-second `retry-after`
+    /// hint, rounded up and floored at 1 — and name the circuit breaker
+    /// in the body so clients can tell it from a shutdown 503.
+    #[test]
+    fn breaker_rejections_carry_a_retry_after_header() {
+        let r = route_error_reply(&RouteError::Serve(ServeError::BreakerOpen {
+            retry_after_ms: 250,
+        }));
+        assert_eq!(r.status, 503);
+        assert_eq!(r.extra, vec![("retry-after", "1".to_string())]);
+        assert!(String::from_utf8_lossy(&r.body).contains("circuit"));
+        let r = route_error_reply(&RouteError::Serve(ServeError::BreakerOpen {
+            retry_after_ms: 3500,
+        }));
+        assert_eq!(r.extra, vec![("retry-after", "4".to_string())]);
+        // Non-breaker errors carry no extra headers.
+        let r = route_error_reply(&RouteError::Serve(ServeError::ShuttingDown));
+        assert!(r.extra.is_empty());
     }
 
     #[test]

@@ -120,6 +120,25 @@ pub struct Metrics {
     pub rejected: AtomicU64,
     pub completed: AtomicU64,
     pub failed: AtomicU64,
+    /// Requests shed because their deadline expired before execution
+    /// (resolved as `DeadlineExceeded` / HTTP 504 — not a `failed`).
+    pub shed_expired: AtomicU64,
+    /// Submissions refused fast because the model's circuit breaker was
+    /// open (HTTP 503 + Retry-After — not a `rejected`).
+    pub breaker_rejected: AtomicU64,
+    /// Times the circuit breaker tripped open.
+    pub breaker_trips: AtomicU64,
+    /// Breaker state gauge: 0 = closed, 1 = open, 2 = half-open.
+    pub breaker_state: AtomicU64,
+    /// Transient device-fault retries performed by workers (each is one
+    /// re-attempted forward, not one request).
+    pub retries: AtomicU64,
+    /// Worker recoveries: replica rebuilds after a caught batch panic
+    /// plus supervisor respawns of dead worker threads.
+    pub restarts: AtomicU64,
+    /// Workers currently able to serve (gauge, mirrors
+    /// `Engine::healthy_workers`).
+    pub healthy_workers: AtomicU64,
     pub batches: AtomicU64,
     pub batched_samples: AtomicU64,
     pub full_batches: AtomicU64,
@@ -158,6 +177,13 @@ impl Metrics {
             rejected: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
+            shed_expired: AtomicU64::new(0),
+            breaker_rejected: AtomicU64::new(0),
+            breaker_trips: AtomicU64::new(0),
+            breaker_state: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+            healthy_workers: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_samples: AtomicU64::new(0),
             full_batches: AtomicU64::new(0),
@@ -198,6 +224,35 @@ impl Metrics {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub(crate) fn record_shed_expired(&self) {
+        self.shed_expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_breaker_rejected(&self) {
+        self.breaker_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_breaker_trip(&self) {
+        self.breaker_trips.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Breaker state gauge: 0 = closed, 1 = open, 2 = half-open.
+    pub(crate) fn set_breaker_state(&self, state: u64) {
+        self.breaker_state.store(state, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_restart(&self) {
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn set_healthy_workers(&self, n: u64) {
+        self.healthy_workers.store(n, Ordering::Relaxed);
+    }
+
     pub(crate) fn record_sim_batch(&self, sim_ns: u64) {
         self.sim_batch.record(sim_ns);
     }
@@ -225,6 +280,13 @@ impl Metrics {
             rejected: self.rejected.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
+            shed_expired: self.shed_expired.load(Ordering::Relaxed),
+            breaker_rejected: self.breaker_rejected.load(Ordering::Relaxed),
+            breaker_trips: self.breaker_trips.load(Ordering::Relaxed),
+            breaker_state: self.breaker_state.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            restarts: self.restarts.load(Ordering::Relaxed),
+            healthy_workers: self.healthy_workers.load(Ordering::Relaxed),
             batches,
             batched_samples: samples,
             full_batches: self.full_batches.load(Ordering::Relaxed),
@@ -271,6 +333,18 @@ pub struct MetricsReport {
     pub rejected: u64,
     pub completed: u64,
     pub failed: u64,
+    /// Requests shed at a deadline expiry (504s), fast breaker refusals
+    /// (503s), breaker trips, and the breaker state gauge (0 closed /
+    /// 1 open / 2 half-open).
+    pub shed_expired: u64,
+    pub breaker_rejected: u64,
+    pub breaker_trips: u64,
+    pub breaker_state: u64,
+    /// Transient-fault forward retries and worker recoveries (replica
+    /// rebuilds + supervisor respawns), plus the healthy-workers gauge.
+    pub retries: u64,
+    pub restarts: u64,
+    pub healthy_workers: u64,
     pub batches: u64,
     pub batched_samples: u64,
     pub full_batches: u64,
@@ -324,6 +398,22 @@ impl MetricsReport {
         o.set("rejected", Json::num(self.rejected as f64));
         o.set("completed", Json::num(self.completed as f64));
         o.set("failed", Json::num(self.failed as f64));
+        o.set("shed_expired", Json::num(self.shed_expired as f64));
+        o.set("breaker_rejected", Json::num(self.breaker_rejected as f64));
+        o.set("breaker_trips", Json::num(self.breaker_trips as f64));
+        o.set("breaker_state", Json::num(self.breaker_state as f64));
+        o.set("retries", Json::num(self.retries as f64));
+        o.set("restarts", Json::num(self.restarts as f64));
+        o.set("healthy_workers", Json::num(self.healthy_workers as f64));
+        // One greppable place for every way a request can not complete —
+        // bench runs and the CI chaos leg read this instead of diffing
+        // the individual counters.
+        let mut fb = Json::obj();
+        fb.set("worker_failed", Json::num(self.failed as f64));
+        fb.set("shed_expired", Json::num(self.shed_expired as f64));
+        fb.set("rejected", Json::num(self.rejected as f64));
+        fb.set("breaker_rejected", Json::num(self.breaker_rejected as f64));
+        o.set("failure_breakdown", fb);
         o.set("batches", Json::num(self.batches as f64));
         o.set("batched_samples", Json::num(self.batched_samples as f64));
         o.set("full_batches", Json::num(self.full_batches as f64));
@@ -370,15 +460,19 @@ impl MetricsReport {
 
     pub fn render(&self) -> String {
         let mut s = format!(
-            "requests: {} submitted, {} completed, {} failed, {} rejected\n\
+            "requests: {} submitted, {} completed, {} failed, {} rejected, \
+             {} shed (deadline), {} breaker-rejected\n\
              batches:  {} ({} full), mean size {:.2}\n\
              rows:     occupancy {:.2} ({} filled / {} executed, mean {:.2} rows/batch)\n\
+             faults:   {} transient retries, {} restarts, {} healthy worker(s), breaker {}\n\
              weights:  version {} ({} publish(es))\n\
              latency:  p50 {} / p95 {} / p99 {} (mean {}, max {})",
             self.submitted,
             self.completed,
             self.failed,
             self.rejected,
+            self.shed_expired,
+            self.breaker_rejected,
             self.batches,
             self.full_batches,
             self.mean_batch,
@@ -386,6 +480,10 @@ impl MetricsReport {
             self.filled_rows,
             self.executed_rows,
             self.mean_executed_rows,
+            self.retries,
+            self.restarts,
+            self.healthy_workers,
+            breaker_state_name(self.breaker_state),
             self.weights_version,
             self.publishes,
             fmt_ns(self.p50_ns),
@@ -405,6 +503,15 @@ impl MetricsReport {
             ));
         }
         s
+    }
+}
+
+/// Human name for the breaker-state gauge values (0/1/2).
+pub fn breaker_state_name(state: u64) -> &'static str {
+    match state {
+        1 => "open",
+        2 => "half-open",
+        _ => "closed",
     }
 }
 
@@ -434,6 +541,19 @@ pub fn prometheus_text(reports: &[(String, MetricsReport)]) -> String {
             r.executed_rows
         }),
         ("fecaffe_weight_publishes_total", "Weight hot-swaps accepted.", |r| r.publishes),
+        ("fecaffe_requests_shed_expired_total", "Requests shed at deadline expiry.", |r| {
+            r.shed_expired
+        }),
+        ("fecaffe_breaker_rejected_total", "Submissions refused by an open breaker.", |r| {
+            r.breaker_rejected
+        }),
+        ("fecaffe_breaker_trips_total", "Circuit-breaker open transitions.", |r| r.breaker_trips),
+        ("fecaffe_transient_retries_total", "Transient device-fault forward retries.", |r| {
+            r.retries
+        }),
+        ("fecaffe_worker_restarts_total", "Replica rebuilds plus worker respawns.", |r| {
+            r.restarts
+        }),
     ];
     for &(name, help, get) in counters {
         out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n"));
@@ -455,6 +575,12 @@ pub fn prometheus_text(reports: &[(String, MetricsReport)]) -> String {
             r.batch_occupancy
         }),
         ("fecaffe_mean_batch_size", "Mean requests per micro-batch.", |r| r.mean_batch),
+        ("fecaffe_healthy_workers", "Workers currently able to serve.", |r| {
+            r.healthy_workers as f64
+        }),
+        ("fecaffe_breaker_state", "Circuit breaker: 0 closed, 1 open, 2 half-open.", |r| {
+            r.breaker_state as f64
+        }),
     ];
     for &(name, help, get) in gauges {
         out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n"));
@@ -688,6 +814,51 @@ mod tests {
         for line in text.lines() {
             assert!(line.starts_with('#') || line.contains("} "), "bad line: {line}");
         }
+    }
+
+    #[test]
+    fn fault_counters_surface_in_report_json_and_prometheus() {
+        let m = Metrics::new();
+        m.record_shed_expired();
+        m.record_shed_expired();
+        m.record_breaker_rejected();
+        m.record_breaker_trip();
+        m.set_breaker_state(2);
+        m.record_retry();
+        m.record_restart();
+        m.set_healthy_workers(3);
+        m.rejected.fetch_add(4, Ordering::Relaxed);
+        m.record_failed();
+        let r = m.snapshot();
+        assert_eq!(r.shed_expired, 2);
+        assert_eq!(r.breaker_rejected, 1);
+        assert_eq!(r.breaker_trips, 1);
+        assert_eq!(r.breaker_state, 2);
+        assert_eq!((r.retries, r.restarts, r.healthy_workers), (1, 1, 3));
+        let rendered = r.render();
+        assert!(rendered.contains("2 shed (deadline)"), "{rendered}");
+        assert!(rendered.contains("breaker half-open"), "{rendered}");
+        // The JSON failure breakdown is the one greppable place for the
+        // four ways a request can not complete.
+        let j = r.to_json();
+        let fb = j.get("failure_breakdown").unwrap();
+        assert_eq!(fb.get("worker_failed").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(fb.get("shed_expired").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(fb.get("rejected").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(fb.get("breaker_rejected").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("restarts").unwrap().as_usize().unwrap(), 1);
+        // Prometheus families for the fault-tolerance layer.
+        let text = prometheus_text(&[("lenet".to_string(), r)]);
+        assert!(text.contains("fecaffe_requests_shed_expired_total{model=\"lenet\"} 2"));
+        assert!(text.contains("fecaffe_worker_restarts_total{model=\"lenet\"} 1"));
+        assert!(text.contains("fecaffe_transient_retries_total{model=\"lenet\"} 1"));
+        assert!(text.contains("fecaffe_breaker_rejected_total{model=\"lenet\"} 1"));
+        assert!(text.contains("fecaffe_breaker_trips_total{model=\"lenet\"} 1"));
+        assert!(text.contains("fecaffe_healthy_workers{model=\"lenet\"} 3"));
+        assert!(text.contains("fecaffe_breaker_state{model=\"lenet\"} 2"));
+        assert_eq!(breaker_state_name(0), "closed");
+        assert_eq!(breaker_state_name(1), "open");
+        assert_eq!(breaker_state_name(2), "half-open");
     }
 
     #[test]

@@ -77,7 +77,20 @@ pub use router::{ModelRouter, RouteError, RouterConfig};
 
 use crate::util::prng::Pcg32;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
+
+/// Acquire a mutex, recovering the guard if a previous holder panicked.
+///
+/// Sound only for mutexes whose protected state is valid at every await
+/// point (every `serve` mutex qualifies: queues, the weights slot, the
+/// response slots — each holds a complete value, never a half-built
+/// one). Without this, one worker panic poisons a shared lock and
+/// cascades `unwrap` panics through every other thread touching it —
+/// exactly the failure amplification a supervised pool must not have.
+pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Result of [`load_test`].
 #[derive(Debug, Clone)]
@@ -86,8 +99,14 @@ pub struct LoadReport {
     pub requests: u64,
     /// Requests that failed (worker error, or submit refused outright).
     pub failed: u64,
+    /// Requests shed because their deadline expired before execution
+    /// (HTTP 504 semantics) — not failures; nothing broke.
+    pub shed_expired: u64,
     /// Submit attempts that hit backpressure and were retried.
     pub backpressure_retries: u64,
+    /// Submit attempts fast-rejected by an open circuit breaker and
+    /// retried after the hinted cooldown.
+    pub breaker_retries: u64,
     pub wall: Duration,
     /// Completed requests per second of wall time.
     pub rps: f64,
@@ -104,14 +123,18 @@ pub fn load_test(engine: &Engine, clients: usize, total: usize, seed: u64) -> Lo
     let clients = clients.max(1);
     let issued = AtomicUsize::new(0);
     let retries = AtomicU64::new(0);
+    let breaker_retries = AtomicU64::new(0);
     let failed = AtomicU64::new(0);
+    let shed = AtomicU64::new(0);
     let t0 = Instant::now();
     let latencies_ns: Vec<f64> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(clients);
         for cid in 0..clients {
             let issued = &issued;
             let retries = &retries;
+            let breaker_retries = &breaker_retries;
             let failed = &failed;
+            let shed = &shed;
             handles.push(scope.spawn(move || {
                 let mut rng = Pcg32::with_stream(seed, cid as u64 + 1);
                 let mut lats = Vec::new();
@@ -132,6 +155,20 @@ pub fn load_test(engine: &Engine, clients: usize, total: usize, seed: u64) -> Lo
                                 retries.fetch_add(1, Ordering::Relaxed);
                                 std::thread::sleep(Duration::from_micros(200));
                             }
+                            Err(ServeError::BreakerOpen { retry_after_ms }) => {
+                                // Open circuit: wait out (a slice of) the
+                                // hinted cooldown, then retry — a breaker
+                                // that re-closes must not count as client
+                                // failures. The sample is consumed by the
+                                // error path, so regenerate it from the
+                                // same rng stream.
+                                breaker_retries.fetch_add(1, Ordering::Relaxed);
+                                std::thread::sleep(Duration::from_millis(
+                                    retry_after_ms.clamp(1, 50),
+                                ));
+                                sample = vec![0f32; engine.sample_len()];
+                                rng.fill_uniform(&mut sample, 0.0, 1.0);
+                            }
                             Err(_) => {
                                 // Engine refused outright (shutting down,
                                 // schema mismatch): count and give up on
@@ -143,6 +180,11 @@ pub fn load_test(engine: &Engine, clients: usize, total: usize, seed: u64) -> Lo
                     };
                     match handle.wait() {
                         Ok(resp) => lats.push(resp.latency.as_nanos() as f64),
+                        Err(ServeError::DeadlineExceeded) => {
+                            // Shed, not failed: the latency budget ran
+                            // out, which is the contract working.
+                            shed.fetch_add(1, Ordering::Relaxed);
+                        }
                         Err(_) => {
                             failed.fetch_add(1, Ordering::Relaxed);
                         }
@@ -161,9 +203,35 @@ pub fn load_test(engine: &Engine, clients: usize, total: usize, seed: u64) -> Lo
     LoadReport {
         requests,
         failed: failed.load(Ordering::Relaxed),
+        shed_expired: shed.load(Ordering::Relaxed),
         backpressure_retries: retries.load(Ordering::Relaxed),
+        breaker_retries: breaker_retries.load(Ordering::Relaxed),
         wall,
         rps: requests as f64 / wall.as_secs_f64().max(1e-9),
         latencies_ns,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// `lock_unpoisoned` recovers the guard (and the protected value)
+    /// after a holder panicked — the primitive behind the serve-wide
+    /// mutex-poisoning audit.
+    #[test]
+    fn lock_unpoisoned_recovers_state_after_a_panicked_holder() {
+        let shared = std::sync::Arc::new(Mutex::new(41));
+        let poisoner = shared.clone();
+        let _ = std::thread::spawn(move || {
+            let mut g = poisoner.lock().unwrap();
+            *g = 42; // completed write — the state stays valid
+            panic!("poison while holding the lock");
+        })
+        .join();
+        assert!(shared.lock().is_err(), "precondition: mutex is poisoned");
+        assert_eq!(*lock_unpoisoned(&shared), 42);
+        *lock_unpoisoned(&shared) += 1;
+        assert_eq!(*lock_unpoisoned(&shared), 43);
     }
 }

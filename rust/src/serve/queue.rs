@@ -6,7 +6,13 @@
 //! so this small queue implements both, plus the close-then-drain
 //! protocol graceful shutdown relies on: after `close`, producers fail
 //! fast while consumers keep popping until the queue is empty.
+//!
+//! Every lock acquisition here is poison-tolerant (`lock_unpoisoned`):
+//! the queue's state is valid at every await point, so a worker panic
+//! elsewhere in the pool must degrade that one batch — never cascade a
+//! poisoned mutex into every producer and consumer of the pipeline.
 
+use super::lock_unpoisoned;
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
@@ -59,7 +65,7 @@ impl<T> SharedQueue<T> {
     /// returns the queue depth *including* the pushed item, so callers
     /// can export a depth gauge without re-taking the lock.
     pub fn try_push(&self, item: T) -> Result<usize, PushError<T>> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.state);
         if s.closed {
             return Err(PushError::Closed(item));
         }
@@ -76,7 +82,7 @@ impl<T> SharedQueue<T> {
 
     /// Blocking push; `Err(item)` if the queue closed while waiting.
     pub fn push(&self, item: T) -> Result<(), T> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.state);
         loop {
             if s.closed {
                 return Err(item);
@@ -84,7 +90,7 @@ impl<T> SharedQueue<T> {
             if s.items.len() < s.capacity {
                 break;
             }
-            s = self.not_full.wait(s).unwrap();
+            s = self.not_full.wait(s).unwrap_or_else(|p| p.into_inner());
         }
         s.items.push_back(item);
         let depth = s.items.len();
@@ -96,7 +102,7 @@ impl<T> SharedQueue<T> {
 
     /// Blocking pop; `None` once the queue is closed *and* drained.
     pub fn pop(&self) -> Option<T> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.state);
         loop {
             if let Some(item) = s.items.pop_front() {
                 drop(s);
@@ -106,13 +112,13 @@ impl<T> SharedQueue<T> {
             if s.closed {
                 return None;
             }
-            s = self.not_empty.wait(s).unwrap();
+            s = self.not_empty.wait(s).unwrap_or_else(|p| p.into_inner());
         }
     }
 
     /// Pop with a deadline — the micro-batch linger wait.
     pub fn pop_until(&self, deadline: Instant) -> Pop<T> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.state);
         loop {
             if let Some(item) = s.items.pop_front() {
                 drop(s);
@@ -126,7 +132,10 @@ impl<T> SharedQueue<T> {
             if now >= deadline {
                 return Pop::TimedOut;
             }
-            let (guard, _) = self.not_empty.wait_timeout(s, deadline - now).unwrap();
+            let (guard, _) = self
+                .not_empty
+                .wait_timeout(s, deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
             s = guard;
         }
     }
@@ -134,7 +143,7 @@ impl<T> SharedQueue<T> {
     /// Close the queue: wake every waiter. Producers fail from here on;
     /// consumers keep draining until empty.
     pub fn close(&self) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.state);
         s.closed = true;
         drop(s);
         self.not_empty.notify_all();
@@ -142,19 +151,19 @@ impl<T> SharedQueue<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().items.len()
+        lock_unpoisoned(&self.state).items.len()
     }
 
     /// Deepest the queue has ever been (monotone; survives drains).
     pub fn high_water(&self) -> usize {
-        self.state.lock().unwrap().high_water
+        lock_unpoisoned(&self.state).high_water
     }
 
     /// Cheap admission pre-check. Racy by design — `try_push` still
     /// enforces the bound — and false when closed so the closed case
     /// surfaces as Closed, not Full.
     pub fn is_full(&self) -> bool {
-        let s = self.state.lock().unwrap();
+        let s = lock_unpoisoned(&self.state);
         !s.closed && s.items.len() >= s.capacity
     }
 
@@ -163,7 +172,7 @@ impl<T> SharedQueue<T> {
     }
 
     pub fn is_closed(&self) -> bool {
-        self.state.lock().unwrap().closed
+        lock_unpoisoned(&self.state).closed
     }
 }
 
@@ -243,6 +252,34 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         q.close();
         assert_eq!(t.join().unwrap(), None);
+    }
+
+    /// A thread panicking while holding the queue mutex poisons it;
+    /// every queue operation must keep working through the poison
+    /// instead of cascading the panic pool-wide (satellite audit).
+    #[test]
+    fn queue_operations_survive_a_poisoned_mutex() {
+        let q = Arc::new(SharedQueue::new(4));
+        let q2 = q.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = q2.state.lock().unwrap();
+            panic!("poison the queue mutex");
+        })
+        .join();
+        assert!(q.state.lock().is_err(), "precondition: mutex is poisoned");
+        assert!(matches!(q.try_push(1), Ok(1)));
+        q.push(2).unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.high_water(), 2);
+        assert!(!q.is_full());
+        assert_eq!(q.pop(), Some(1));
+        match q.pop_until(Instant::now() + Duration::from_millis(5)) {
+            Pop::Item(v) => assert_eq!(v, 2),
+            _ => panic!("expected Item through the poisoned lock"),
+        }
+        q.close();
+        assert!(q.is_closed());
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

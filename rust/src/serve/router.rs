@@ -11,9 +11,11 @@
 use super::engine::{
     DeviceKind, Engine, EngineConfig, PublishError, ResponseHandle, ServeError,
 };
+use super::lock_unpoisoned;
 use super::metrics::{prometheus_text, MetricsReport};
 use crate::net::WeightSnapshot;
 use crate::obs::{LayerAgg, TrainMetrics};
+use crate::util::chaos::FaultPlan;
 use crate::util::json::Json;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -38,6 +40,11 @@ pub struct RouterConfig {
     /// Batch-trace sampling (per model): trace one batch in every N
     /// executed; 0 = off. See [`EngineConfig::trace_sample`].
     pub trace_sample: u64,
+    /// Fault-injection plan shared by every model's engine (each engine
+    /// gets its own deterministic `ChaosState` seeded from the same
+    /// plan). `None` falls back to `FECAFFE_CHAOS`; see
+    /// [`EngineConfig::chaos`].
+    pub chaos: Option<FaultPlan>,
 }
 
 impl Default for RouterConfig {
@@ -50,6 +57,7 @@ impl Default for RouterConfig {
             device: DeviceKind::Cpu,
             intra_op_threads: 0,
             trace_sample: 0,
+            chaos: None,
         }
     }
 }
@@ -111,6 +119,8 @@ impl ModelRouter {
                 device: cfg.device,
                 intra_op_threads: intra_op,
                 trace_sample: cfg.trace_sample,
+                chaos: cfg.chaos.clone(),
+                ..EngineConfig::default()
             };
             let engine = Engine::new(&param, ecfg)
                 .map_err(|e| e.context(format!("building engine for model '{name}'")))?;
@@ -134,7 +144,7 @@ impl ModelRouter {
     /// `/metrics` reports solver-side iteration timing and loss next to
     /// the serving counters.
     pub fn attach_training(&self, metrics: Arc<TrainMetrics>) {
-        *self.training.lock().unwrap() = Some(metrics);
+        *lock_unpoisoned(&self.training) = Some(metrics);
     }
 
     pub fn engine(&self, model: &str) -> Option<&Engine> {
@@ -149,10 +159,22 @@ impl ModelRouter {
     /// Route one sample to `model`'s engine (admission-controlled,
     /// non-blocking — `Serve(Overloaded)` means back off and retry).
     pub fn submit(&self, model: &str, sample: Vec<f32>) -> Result<ResponseHandle, RouteError> {
+        self.submit_with_deadline(model, sample, None)
+    }
+
+    /// [`ModelRouter::submit`] with a per-request latency budget —
+    /// requests still queued when it expires are shed as
+    /// `DeadlineExceeded` (HTTP 504) instead of occupying a batch slot.
+    pub fn submit_with_deadline(
+        &self,
+        model: &str,
+        sample: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<ResponseHandle, RouteError> {
         let engine = self
             .engine(model)
             .ok_or_else(|| RouteError::UnknownModel(model.to_string()))?;
-        engine.submit(sample).map_err(RouteError::Serve)
+        engine.submit_with_deadline(sample, deadline).map_err(RouteError::Serve)
     }
 
     /// Hot-swap `model`'s weights: validate + atomically publish `snap`
@@ -173,7 +195,7 @@ impl ModelRouter {
         for (name, engine) in &self.engines {
             o.set(name, engine.metrics().snapshot().to_json());
         }
-        if let Some(t) = self.training.lock().unwrap().as_ref() {
+        if let Some(t) = lock_unpoisoned(&self.training).as_ref() {
             o.set("training", t.to_json());
         }
         o
@@ -213,7 +235,7 @@ impl ModelRouter {
                 }
             }
         }
-        if let Some(t) = self.training.lock().unwrap().as_ref() {
+        if let Some(t) = lock_unpoisoned(&self.training).as_ref() {
             t.render_prometheus(&mut out);
         }
         out
@@ -240,24 +262,46 @@ impl ModelRouter {
     }
 
     /// Liveness + readiness detail for `GET /healthz`: per-model weight
-    /// versions, worker health and queue depth. `status` degrades when
-    /// any model has lost every worker.
+    /// versions, worker health, breaker state and queue depth. Three
+    /// status tiers so load balancers can act *before* total
+    /// exhaustion: `ok` (every model at full worker strength, all
+    /// breakers closed), `degraded` (some model below its configured
+    /// worker count, or a breaker open/half-open, but every model can
+    /// still serve), `unhealthy` (some model has zero workers left).
+    /// The overall status is the worst model's.
     pub fn health_json(&self, uptime_s: f64) -> Json {
         let mut models = Vec::new();
-        let mut all_healthy = true;
+        // 0 = ok, 1 = degraded, 2 = unhealthy; overall is the max.
+        let mut worst = 0usize;
         for (name, engine) in &self.engines {
             let healthy = engine.healthy_workers();
-            all_healthy &= healthy > 0;
+            let configured = engine.config().workers;
+            let breaker = engine.breaker_state();
+            let tier = if healthy == 0 {
+                2
+            } else if healthy < configured || breaker != "closed" {
+                1
+            } else {
+                0
+            };
+            worst = worst.max(tier);
             let mut m = Json::obj();
             m.set("name", Json::str(name.clone()));
+            m.set("status", Json::str(["ok", "degraded", "unhealthy"][tier]));
             m.set("weights_version", Json::num(engine.weights_version() as f64));
-            m.set("workers", Json::num(engine.config().workers as f64));
+            m.set("workers", Json::num(configured as f64));
             m.set("healthy_workers", Json::num(healthy as f64));
+            m.set("breaker", Json::str(breaker));
+            m.set(
+                "restarts",
+                Json::num(engine.metrics().restarts.load(std::sync::atomic::Ordering::Relaxed)
+                    as f64),
+            );
             m.set("queue_depth", Json::num(engine.queue_depth() as f64));
             models.push(m);
         }
         let mut o = Json::obj();
-        o.set("status", Json::str(if all_healthy { "ok" } else { "degraded" }));
+        o.set("status", Json::str(["ok", "degraded", "unhealthy"][worst]));
         o.set("uptime_s", Json::num(uptime_s));
         o.set("models", Json::Arr(models));
         o

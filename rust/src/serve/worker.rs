@@ -28,19 +28,28 @@
 //! stamped with exactly the version that computed it.
 
 use super::batcher::{gather, scatter, Batch};
-use super::engine::{DeviceKind, SharedWeights};
+use super::engine::{Breaker, DeviceKind, SharedWeights};
+use super::lock_unpoisoned;
 use super::metrics::Metrics;
 use super::queue::SharedQueue;
-use crate::device::Device;
+use crate::device::{Device, DeviceError};
 use crate::layers::{LayerTiming, SharedBlob};
 use crate::net::{Net, WeightSnapshot};
 use crate::obs::{BatchTraceBuilder, EngineObs, TraceScope, LANE_HOST, LANE_LAYER, LANE_QUEUE};
 use crate::proto::Phase;
 use crate::runtime::plan::batch_bucket;
+use crate::util::chaos::ChaosState;
 use crate::zoo::DeployNet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Forward attempts per batch: the first try plus up to three retries
+/// on *transient* device errors (permanent errors fail immediately).
+const MAX_FORWARD_ATTEMPTS: u32 = 4;
+
+/// Base backoff between transient-fault retries; doubles per attempt.
+const RETRY_BACKOFF: Duration = Duration::from_micros(100);
 
 pub(crate) struct WorkerContext {
     pub id: usize,
@@ -59,27 +68,37 @@ pub(crate) struct WorkerContext {
     pub obs: Arc<EngineObs>,
     /// Workers still able to serve (shared across the pool).
     pub healthy: Arc<AtomicUsize>,
+    /// The engine's circuit breaker, fed one outcome per executed batch.
+    pub breaker: Arc<Breaker>,
+    /// Fault-injection plan (None in production — zero-cost).
+    pub chaos: Option<Arc<ChaosState>>,
 }
 
 impl WorkerContext {
     /// Snapshot currently published by the engine (cloned `Arc`).
+    /// Poison-tolerant: the slot always holds a complete snapshot (the
+    /// publisher builds it before the swap), so a panic elsewhere in the
+    /// pool must not cascade here.
     fn current_weights(&self) -> Arc<WeightSnapshot> {
-        self.weights.slot.lock().unwrap().clone()
+        lock_unpoisoned(&self.weights.slot).clone()
     }
 }
 
 /// Retires the worker from `healthy` however the thread exits — clean
-/// return, failed build, or panic mid-batch. The last worker out closes
+/// return, failed build, or chaos kill. The last worker out closes
 /// and fail-drains the dispatch queue, so the batcher can never block
 /// pushing into a dead pool and no caller hangs on a queued request.
 struct PoolGuard {
     queue: Arc<SharedQueue<Batch>>,
     healthy: Arc<AtomicUsize>,
+    metrics: Arc<Metrics>,
 }
 
 impl Drop for PoolGuard {
     fn drop(&mut self) {
-        if self.healthy.fetch_sub(1, Ordering::AcqRel) > 1 {
+        let left = self.healthy.fetch_sub(1, Ordering::AcqRel) - 1;
+        self.metrics.set_healthy_workers(left as u64);
+        if left > 0 {
             return; // healthy workers remain; they keep draining
         }
         self.queue.close();
@@ -134,7 +153,33 @@ impl Replica {
     /// from the simulated clock so the batch's first device operation
     /// lands at the host-side upload offset. Un-sampled batches pass
     /// `None` builders everywhere and pay no clock reads.
-    fn serve(&mut self, dev: &mut dyn Device, batch: Batch, ctx: &WorkerContext, version: u64) {
+    /// Returns the batch outcome for the circuit breaker: `Some(true)`
+    /// executed and fulfilled, `Some(false)` failed (reshape or
+    /// exhausted forward retries), `None` nothing executed — every
+    /// request's deadline had already passed and the whole batch was
+    /// shed without touching the device.
+    fn serve(
+        &mut self,
+        dev: &mut dyn Device,
+        batch: Batch,
+        ctx: &WorkerContext,
+        version: u64,
+    ) -> Option<bool> {
+        // Deadline re-check at the last moment before paying for the
+        // batch: requests that expired waiting in the dispatch queue
+        // are shed here (the batcher already shed what expired in
+        // admission), so a stall never cascades into wasted forwards.
+        let Batch { requests, formed } = batch;
+        let now = Instant::now();
+        let (live, dead): (Vec<_>, Vec<_>) =
+            requests.into_iter().partition(|r| !r.expired(now));
+        for req in dead {
+            req.shed();
+        }
+        if live.is_empty() {
+            return None;
+        }
+        let batch = Batch { requests: live, formed };
         let k = batch.requests.len();
         let rows = batch_bucket(k, ctx.deploy.batch);
         // Sampled trace, origin = the oldest request's submit instant:
@@ -159,7 +204,7 @@ impl Replica {
                 for req in batch.requests {
                     req.fail(&msg);
                 }
-                return;
+                return Some(false);
             }
             self.rows = rows;
         }
@@ -186,21 +231,49 @@ impl Replica {
         // batching policy can be judged against the paper's cost model.
         let sim_before = dev.sim_clock_ns();
         let mut layer_rows: Vec<(String, u64, u64)> = Vec::new();
-        let fwd = match trace.as_mut() {
-            Some(b) => {
-                let fwd_base = b.offset_of(Instant::now());
-                let r = self.net.forward_traced(dev, &mut |t: LayerTiming<'_>| {
-                    let start = fwd_base + t.wall_start_ns;
-                    b.push(LANE_LAYER, t.name.to_string(), start, t.wall_ns.max(1));
-                    layer_rows.push((t.name.to_string(), t.wall_ns, t.sim_ns.unwrap_or(0)));
-                });
-                let end = b.offset_of(Instant::now());
-                let dur = end.saturating_sub(fwd_base).max(1);
-                b.push(LANE_HOST, "forward".to_string(), fwd_base, dur);
-                r
+        let chaos = ctx.chaos.as_deref();
+        // First attempt: traced when sampled. An injected chaos fault
+        // replaces the forward for this attempt (it models the device
+        // erroring out, not the net computing a wrong answer).
+        let mut fwd = if let Some(msg) = chaos.and_then(|c| c.draw_fault()) {
+            Err(anyhow::Error::new(DeviceError::Transient(msg)))
+        } else {
+            match trace.as_mut() {
+                Some(b) => {
+                    let fwd_base = b.offset_of(Instant::now());
+                    let r = self.net.forward_traced(dev, &mut |t: LayerTiming<'_>| {
+                        let start = fwd_base + t.wall_start_ns;
+                        b.push(LANE_LAYER, t.name.to_string(), start, t.wall_ns.max(1));
+                        layer_rows.push((t.name.to_string(), t.wall_ns, t.sim_ns.unwrap_or(0)));
+                    });
+                    let end = b.offset_of(Instant::now());
+                    let dur = end.saturating_sub(fwd_base).max(1);
+                    b.push(LANE_HOST, "forward".to_string(), fwd_base, dur);
+                    r
+                }
+                None => self.net.forward(dev),
             }
-            None => self.net.forward(dev),
         };
+        // Bounded retry on *transient* device errors, with exponential
+        // backoff — a glitching board link should cost a retry, not a
+        // failed batch. Retries re-run the plain forward (the sampled
+        // trace, if any, keeps the first attempt's spans) and each
+        // retry re-draws chaos, so injected transients recover exactly
+        // like real ones. Permanent errors break out immediately.
+        let mut attempt = 1u32;
+        while let Err(e) = &fwd {
+            if attempt >= MAX_FORWARD_ATTEMPTS || !crate::device::is_transient(e) {
+                break;
+            }
+            ctx.metrics.record_retry();
+            std::thread::sleep(RETRY_BACKOFF * (1 << (attempt - 1).min(6)));
+            fwd = if let Some(msg) = chaos.and_then(|c| c.draw_fault()) {
+                Err(anyhow::Error::new(DeviceError::Transient(msg)))
+            } else {
+                self.net.forward(dev)
+            };
+            attempt += 1;
+        }
         match fwd {
             Ok(_) => {
                 // Row accounting only for batches that actually ran —
@@ -245,6 +318,7 @@ impl Replica {
                 if let Some(b) = trace.take() {
                     ctx.obs.traces.commit(b.finish());
                 }
+                Some(true)
             }
             Err(e) => {
                 if trace.is_some() {
@@ -257,6 +331,7 @@ impl Replica {
                 for req in batch.requests {
                     req.fail(&msg);
                 }
+                Some(false)
             }
         }
     }
@@ -266,6 +341,7 @@ pub(crate) fn run(ctx: WorkerContext) {
     let _guard = PoolGuard {
         queue: ctx.queue.clone(),
         healthy: ctx.healthy.clone(),
+        metrics: ctx.metrics.clone(),
     };
 
     // This worker's share of the machine: everything executed on this
@@ -289,6 +365,16 @@ pub(crate) fn run(ctx: WorkerContext) {
     drop(snap);
 
     while let Some(batch) = ctx.queue.pop() {
+        let chaos = ctx.chaos.as_ref().map(|c| c.on_batch()).unwrap_or_default();
+        if chaos.kill {
+            // Simulated hard death (thread exit, not a panic): drop the
+            // popped batch — `Request::drop` resolves its requests as
+            // failures — and let the PoolGuard retire this worker. The
+            // engine's supervisor respawns the slot.
+            drop(batch);
+            eprintln!("[serve] worker {}: chaos: injected worker death", ctx.id);
+            return;
+        }
         // Batch boundary: adopt a newly published snapshot before
         // executing. One relaxed-cost atomic load in the common case;
         // the slot lock is only taken when the version actually moved.
@@ -309,6 +395,53 @@ pub(crate) fn run(ctx: WorkerContext) {
                 }
             }
         }
-        replica.serve(dev.as_mut(), batch, &ctx, version);
+        // Guarded execution: a panic mid-batch (a layer bug, an
+        // injected one) fails only its own batch — requests resolve
+        // via `Request::drop` during unwinding — and costs a replica
+        // rebuild, never the worker thread. `AssertUnwindSafe` is
+        // sound because both replica and device are unconditionally
+        // rebuilt on the unwind path below, so no state observed after
+        // a panic was touched by the panicking call.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if chaos.panic {
+                panic!("chaos: injected worker panic mid-batch");
+            }
+            if let Some(delay) = chaos.slow {
+                std::thread::sleep(delay);
+            }
+            replica.serve(dev.as_mut(), batch, &ctx, version)
+        }));
+        match outcome {
+            Ok(Some(ok)) => ctx.breaker.on_batch(ok),
+            // Nothing executed (every request's deadline had passed):
+            // no outcome to feed the breaker.
+            Ok(None) => {}
+            Err(_) => {
+                ctx.breaker.on_batch(false);
+                ctx.metrics.record_restart();
+                // The panic may have left the replica (or the device)
+                // half-reshaped or mid-upload: rebuild both from the
+                // currently published snapshot before serving again.
+                dev = ctx.device.create();
+                let snap = ctx.current_weights();
+                version = snap.version();
+                match Replica::build(&ctx, &snap, dev.as_mut()) {
+                    Ok(r) => {
+                        replica = r;
+                        eprintln!(
+                            "[serve] worker {}: batch panicked; replica rebuilt, resuming",
+                            ctx.id
+                        );
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "[serve] worker {}: rebuild after batch panic failed: {e:#}",
+                            ctx.id
+                        );
+                        return;
+                    }
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,315 @@
+//! Deterministic fault injection ("chaos") for the serving stack.
+//!
+//! A [`FaultPlan`] is a small, seeded recipe of failures to inject into
+//! the serve pipeline — transient device-forward faults, worker panics
+//! mid-batch, whole-worker deaths and slow batches — parsed from the
+//! `FECAFFE_CHAOS` environment variable or `serve --chaos <spec>`. The
+//! plan is *deterministic*: every probabilistic decision draws from a
+//! [`Pcg32`] stream keyed by the plan seed and a global ticket counter,
+//! so a given seed produces the same decision for the i-th draw no
+//! matter which worker thread asks. Budgeted events (`panic=N`,
+//! `kill=N`, `fault-n=N`) fire exactly N times.
+//!
+//! Spec grammar — comma-separated `key=value` pairs:
+//!
+//! ```text
+//! seed=7,fault=0.05,fault-n=200,panic=1,panic-after=10,kill=1,kill-after=50,slow=0.01,slow-ms=5
+//!
+//! seed        PRNG seed for every probabilistic draw        (default 42)
+//! fault       P(injected transient device fault per forward attempt)
+//! fault-n     budget of injected faults (absent = unlimited)
+//! panic       worker panics to inject mid-batch (caught by the worker's
+//!             catch_unwind: the batch fails, the replica is rebuilt)
+//! panic-after batches to let through before panics arm      (default 0)
+//! kill        worker-thread deaths to inject (the thread exits; the
+//!             engine supervisor respawns it, with backoff)
+//! kill-after  batches to let through before kills arm       (default 0)
+//! slow        P(batch delayed by slow-ms before execution)
+//! slow-ms     injected delay per slow batch                 (default 1)
+//! ```
+//!
+//! Zero-cost when unset: the engine holds `Option<Arc<ChaosState>>` and
+//! every injection point is a `None` check on the hot path.
+
+use crate::util::prng::Pcg32;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Environment variable the engine reads a fault plan from when the
+/// config doesn't carry one (`serve --chaos` takes precedence).
+pub const CHAOS_ENV: &str = "FECAFFE_CHAOS";
+
+/// Seeded recipe of failures to inject (see module docs for grammar).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Probability that one device-forward *attempt* is replaced by an
+    /// injected transient [`crate::device::DeviceError`] (retryable).
+    pub fault_p: f32,
+    /// Budget of injected transient faults; `u64::MAX` = unlimited.
+    pub fault_n: u64,
+    /// Worker panics to inject mid-batch.
+    pub panic_n: u64,
+    /// Batches across the pool before the panic budget arms.
+    pub panic_after: u64,
+    /// Worker-thread deaths to inject.
+    pub kill_n: u64,
+    /// Batches across the pool before the kill budget arms.
+    pub kill_after: u64,
+    /// Probability that a batch sleeps `slow_ms` before executing.
+    pub slow_p: f32,
+    /// Injected delay per slow batch, milliseconds.
+    pub slow_ms: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 42,
+            fault_p: 0.0,
+            fault_n: u64::MAX,
+            panic_n: 0,
+            panic_after: 0,
+            kill_n: 0,
+            kill_after: 0,
+            slow_p: 0.0,
+            slow_ms: 1,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a spec string (see module docs). Unknown keys and
+    /// malformed values are errors — a typo'd chaos plan that silently
+    /// injects nothing would defeat the test that set it.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("chaos spec: expected key=value, got '{part}'"))?;
+            let (key, value) = (key.trim(), value.trim());
+            let int = || -> Result<u64, String> {
+                value.parse().map_err(|_| format!("chaos spec: bad integer '{value}' for '{key}'"))
+            };
+            let prob = || -> Result<f32, String> {
+                let p: f32 = value
+                    .parse()
+                    .map_err(|_| format!("chaos spec: bad probability '{value}' for '{key}'"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("chaos spec: '{key}' must be in [0, 1], got {p}"));
+                }
+                Ok(p)
+            };
+            match key {
+                "seed" => plan.seed = int()?,
+                "fault" => plan.fault_p = prob()?,
+                "fault-n" => plan.fault_n = int()?,
+                "panic" => plan.panic_n = int()?,
+                "panic-after" => plan.panic_after = int()?,
+                "kill" => plan.kill_n = int()?,
+                "kill-after" => plan.kill_after = int()?,
+                "slow" => plan.slow_p = prob()?,
+                "slow-ms" => plan.slow_ms = int()?,
+                other => return Err(format!("chaos spec: unknown key '{other}'")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Plan from `FECAFFE_CHAOS`, if set. `Ok(None)` when unset or
+    /// empty; a set-but-invalid spec is an error so a typo fails fast
+    /// instead of silently running without chaos.
+    pub fn from_env() -> Result<Option<FaultPlan>, String> {
+        match std::env::var(CHAOS_ENV) {
+            Ok(spec) if !spec.trim().is_empty() => FaultPlan::parse(&spec).map(Some),
+            _ => Ok(None),
+        }
+    }
+
+    /// True when the plan injects nothing (every knob at its inert
+    /// default) — the engine skips building a [`ChaosState`] for it.
+    pub fn is_noop(&self) -> bool {
+        self.fault_p == 0.0 && self.panic_n == 0 && self.kill_n == 0 && self.slow_p == 0.0
+    }
+}
+
+/// Chaos decisions a worker applies at one batch boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BatchChaos {
+    /// Panic inside the worker's guarded batch execution.
+    pub panic: bool,
+    /// Exit the worker thread (the supervisor's respawn path).
+    pub kill: bool,
+    /// Sleep this long before executing the batch.
+    pub slow: Option<Duration>,
+}
+
+/// Shared runtime state for one engine's fault plan: the plan plus the
+/// atomic ticket/budget counters that make injection exactly-N and
+/// deterministic across the worker pool.
+pub struct ChaosState {
+    plan: FaultPlan,
+    /// One ticket per probabilistic draw — the PRNG stream selector.
+    tickets: AtomicU64,
+    /// Batches observed across the pool — gates `panic_after`/`kill_after`.
+    batches: AtomicU64,
+    faults_left: AtomicU64,
+    panics_left: AtomicU64,
+    kills_left: AtomicU64,
+}
+
+/// Decrement a budget if any remains; `u64::MAX` means unlimited and is
+/// never decremented. Returns whether the event may fire.
+fn take_budget(budget: &AtomicU64) -> bool {
+    budget
+        .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            if v == u64::MAX {
+                Some(v)
+            } else {
+                v.checked_sub(1)
+            }
+        })
+        .is_ok()
+}
+
+impl ChaosState {
+    pub fn new(plan: FaultPlan) -> ChaosState {
+        ChaosState {
+            tickets: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            faults_left: AtomicU64::new(plan.fault_n),
+            panics_left: AtomicU64::new(plan.panic_n),
+            kills_left: AtomicU64::new(plan.kill_n),
+            plan,
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// One seeded coin flip. Each call consumes a ticket; the outcome
+    /// for ticket i is a pure function of (seed, i).
+    fn flip(&self, p: f32) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        let ticket = self.tickets.fetch_add(1, Ordering::Relaxed);
+        Pcg32::with_stream(self.plan.seed, ticket).bernoulli(p)
+    }
+
+    /// Decisions for the batch a worker just popped. Called once per
+    /// batch (before execution); panic takes priority over kill when
+    /// both budgets fire on the same batch.
+    pub fn on_batch(&self) -> BatchChaos {
+        let seen = self.batches.fetch_add(1, Ordering::Relaxed);
+        let panic = seen >= self.plan.panic_after
+            && self.panics_left.load(Ordering::Relaxed) > 0
+            && take_budget(&self.panics_left);
+        let kill = !panic
+            && seen >= self.plan.kill_after
+            && self.kills_left.load(Ordering::Relaxed) > 0
+            && take_budget(&self.kills_left);
+        let slow = (self.flip(self.plan.slow_p))
+            .then(|| Duration::from_millis(self.plan.slow_ms));
+        BatchChaos { panic, kill, slow }
+    }
+
+    /// Should this device-forward attempt be replaced by an injected
+    /// transient fault? Drawn per *attempt*, so a retried forward draws
+    /// again — which is what lets a bounded retry recover from it.
+    pub fn draw_fault(&self) -> Option<String> {
+        if self.faults_left.load(Ordering::Relaxed) == 0 || !self.flip(self.plan.fault_p) {
+            return None;
+        }
+        if !take_budget(&self.faults_left) {
+            return None;
+        }
+        Some("chaos: injected transient device fault".to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec_and_defaults() {
+        let p = FaultPlan::parse(
+            "seed=7, fault=0.05, fault-n=200, panic=1, panic-after=10, \
+             kill=2, kill-after=50, slow=0.5, slow-ms=3",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert!((p.fault_p - 0.05).abs() < 1e-9);
+        assert_eq!(p.fault_n, 200);
+        assert_eq!((p.panic_n, p.panic_after), (1, 10));
+        assert_eq!((p.kill_n, p.kill_after), (2, 50));
+        assert!((p.slow_p - 0.5).abs() < 1e-9);
+        assert_eq!(p.slow_ms, 3);
+        // Defaults: empty spec is the inert plan.
+        let d = FaultPlan::parse("").unwrap();
+        assert_eq!(d, FaultPlan::default());
+        assert!(d.is_noop());
+        assert!(!p.is_noop());
+    }
+
+    #[test]
+    fn parse_rejects_typos_loudly() {
+        assert!(FaultPlan::parse("falt=0.5").is_err());
+        assert!(FaultPlan::parse("fault").is_err());
+        assert!(FaultPlan::parse("fault=nope").is_err());
+        assert!(FaultPlan::parse("fault=1.5").is_err());
+        assert!(FaultPlan::parse("panic=-1").is_err());
+    }
+
+    #[test]
+    fn budgets_fire_exactly_n_times() {
+        let s = ChaosState::new(FaultPlan::parse("panic=2,panic-after=3,kill=1,kill-after=0").unwrap());
+        let mut panics = 0;
+        let mut kills = 0;
+        for _ in 0..100 {
+            let c = s.on_batch();
+            panics += u32::from(c.panic);
+            kills += u32::from(c.kill);
+        }
+        assert_eq!(panics, 2);
+        assert_eq!(kills, 1);
+        // The panic budget armed only after 3 batches: the first firing
+        // batch index is >= 3 by construction (checked via arming gate).
+        let s2 = ChaosState::new(FaultPlan::parse("panic=1,panic-after=3").unwrap());
+        let fired: Vec<bool> = (0..10).map(|_| s2.on_batch().panic).collect();
+        assert!(!fired[0] && !fired[1] && !fired[2]);
+        assert!(fired[3]);
+    }
+
+    #[test]
+    fn fault_draws_are_seeded_and_budgeted() {
+        // Same seed → same decision sequence.
+        let a = ChaosState::new(FaultPlan::parse("seed=9,fault=0.3").unwrap());
+        let b = ChaosState::new(FaultPlan::parse("seed=9,fault=0.3").unwrap());
+        let da: Vec<bool> = (0..64).map(|_| a.draw_fault().is_some()).collect();
+        let db: Vec<bool> = (0..64).map(|_| b.draw_fault().is_some()).collect();
+        assert_eq!(da, db);
+        let hits = da.iter().filter(|&&h| h).count();
+        assert!(hits > 0 && hits < 64, "p=0.3 over 64 draws hit {hits} times");
+        // A budget caps the total no matter how many draws are made.
+        let c = ChaosState::new(FaultPlan::parse("seed=9,fault=1.0,fault-n=5").unwrap());
+        let hits = (0..100).filter(|_| c.draw_fault().is_some()).count();
+        assert_eq!(hits, 5);
+    }
+
+    #[test]
+    fn slow_batches_carry_the_configured_delay() {
+        let s = ChaosState::new(FaultPlan::parse("slow=1.0,slow-ms=7").unwrap());
+        assert_eq!(s.on_batch().slow, Some(Duration::from_millis(7)));
+        let inert = ChaosState::new(FaultPlan::default());
+        let c = inert.on_batch();
+        assert_eq!(c, BatchChaos { panic: false, kill: false, slow: None });
+    }
+}

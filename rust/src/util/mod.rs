@@ -4,6 +4,7 @@
 //! see DESIGN.md §10).
 
 pub mod binio;
+pub mod chaos;
 pub mod prng;
 pub mod json;
 pub mod cli;

@@ -63,6 +63,7 @@ fn engine_for(param: &NetParameter, workers: usize, max_batch: usize) -> Engine 
             device: DeviceKind::Cpu,
             intra_op_threads: 1,
             trace_sample: 0,
+            ..EngineConfig::default()
         },
     )
     .unwrap()

@@ -32,6 +32,7 @@ fn lenet_engine() -> Engine {
             device: DeviceKind::Cpu,
             intra_op_threads: 1,
             trace_sample: 0,
+            ..EngineConfig::default()
         },
     )
     .unwrap()
@@ -209,6 +210,7 @@ layer { name: "loss" type: "SoftmaxWithLoss" bottom: "fc3" bottom: "label" top: 
             device: DeviceKind::Cpu,
             intra_op_threads: 1,
             trace_sample: 0,
+            ..EngineConfig::default()
         },
     )
     .unwrap();

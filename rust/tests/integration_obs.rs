@@ -30,6 +30,7 @@ fn traced_fpga_engine() -> Engine {
             device: DeviceKind::FpgaSim,
             intra_op_threads: 1,
             trace_sample: 1,
+            ..EngineConfig::default()
         },
     )
     .unwrap()

@@ -130,6 +130,7 @@ fn engine_partial_batch_matches_fixed_net(kind: DeviceKind) {
             device: kind,
             intra_op_threads: 1,
             trace_sample: 0,
+            ..EngineConfig::default()
         },
     )
     .unwrap();

@@ -27,6 +27,7 @@ fn lenet_engine(workers: usize, max_batch: usize, linger: Duration, cap: usize) 
             device: DeviceKind::Cpu,
             intra_op_threads: 0,
             trace_sample: 0,
+            ..EngineConfig::default()
         },
     )
     .unwrap()
@@ -187,6 +188,7 @@ fn batched_matches_single_with_intra_op_threads_on() {
             // Explicitly multi-threaded kernels inside the worker.
             intra_op_threads: fecaffe::util::pool::default_threads().max(2),
             trace_sample: 0,
+            ..EngineConfig::default()
         },
     )
     .unwrap();
@@ -236,6 +238,7 @@ fn fpga_sim_workers_report_sim_batch_time() {
             device: DeviceKind::FpgaSim,
             intra_op_threads: 1,
             trace_sample: 0,
+            ..EngineConfig::default()
         },
     )
     .unwrap();
