@@ -6,7 +6,7 @@
 
 use fecaffe::net::Net;
 use fecaffe::proto::Phase;
-use fecaffe::runtime::plan::batch_bucket;
+use fecaffe::runtime::plan::{serve_bucket_cap, serve_buckets};
 use fecaffe::runtime::recording::RecordingDevice;
 use fecaffe::solver::Solver;
 use fecaffe::zoo;
@@ -86,20 +86,12 @@ fn main() -> anyhow::Result<()> {
     // engine reshapes each worker's replica to *bucketed* batch sizes
     // (`runtime::plan::batch_bucket`), so an `xla`-featured build needs
     // artifacts for every bucket a worker can execute, not just the
-    // batch-1 zoo shapes above. Per-net caps match sensible serving
-    // configs while keeping the recording walk inside host memory
-    // (VGG-16 activations at batch 32 are multi-GB even forward-only).
-    for (name, max_serve) in [
-        ("lenet", 32usize),
-        ("alexnet", 32),
-        ("squeezenet", 16),
-        ("googlenet", 16),
-        ("vgg16", 8),
-    ] {
-        let mut buckets: Vec<usize> =
-            (1..=max_serve).map(|k| batch_bucket(k, max_serve)).collect();
-        buckets.dedup(); // batch_bucket is nondecreasing in k
-        for b in buckets {
+    // batch-1 zoo shapes above. The per-net caps and the bucket walk
+    // live in `runtime::plan` (`serve_bucket_cap`/`serve_buckets`) so
+    // the manifest, `fecaffe lint`, and engine admission all check the
+    // same shapes.
+    for name in ["lenet", "alexnet", "squeezenet", "googlenet", "vgg16"] {
+        for b in serve_buckets(serve_bucket_cap(name)) {
             record_deploy(&mut rec, name, b)?;
         }
     }

@@ -120,7 +120,7 @@ impl CostModel {
         let class = kernel.class();
         let flops = kernel.flops() as f64;
         let bytes = kernel.bytes() as f64;
-        let compute_s = flops / (dsp_used(class) as f64 * 2.0 * self.board.fmax_hz);
+        let compute_s = flops / (f64::from(dsp_used(class)) * 2.0 * self.board.fmax_hz);
         let memory_s = bytes / (self.board.ddr_bw_bytes_per_s * ddr_efficiency(class));
         ((self.board.kernel_start_s + compute_s.max(memory_s)) * 1e9) as u64
     }

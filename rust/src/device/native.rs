@@ -164,7 +164,7 @@ pub fn execute(slab: &mut Slab, call: &KernelCall) -> anyhow::Result<()> {
             ),
             Axpy { n, alpha } => math::axpy(*alpha, &inp(0)[..*n], &mut out!(0)[..*n]),
             Axpby { n, alpha, beta } => {
-                math::axpby(*alpha, &inp(0)[..*n], *beta, &mut out!(0)[..*n])
+                math::axpby(*alpha, &inp(0)[..*n], *beta, &mut out!(0)[..*n]);
             }
             Scal { n, alpha } => math::scal(*alpha, &mut out!(0)[..*n]),
             Asum { n } => {
@@ -222,7 +222,7 @@ pub fn execute(slab: &mut Slab, call: &KernelCall) -> anyhow::Result<()> {
                 );
             }
             ReluF { n, slope } => {
-                math::relu_forward(&inp(0)[..*n], &mut out!(0)[..*n], *slope)
+                math::relu_forward(&inp(0)[..*n], &mut out!(0)[..*n], *slope);
             }
             ReluB { n, slope } => math::relu_backward(
                 &inp(0)[..*n],
@@ -245,7 +245,7 @@ pub fn execute(slab: &mut Slab, call: &KernelCall) -> anyhow::Result<()> {
                 );
             }
             LrnOutput { n, beta } => {
-                math::lrn_output(&inp(0)[..*n], &inp(1)[..*n], &mut out!(0)[..*n], *beta)
+                math::lrn_output(&inp(0)[..*n], &inp(1)[..*n], &mut out!(0)[..*n], *beta);
             }
             LrnDiff { num, channels, dim, local_size, alpha, beta } => {
                 let plane = channels * dim;
@@ -277,7 +277,7 @@ pub fn execute(slab: &mut Slab, call: &KernelCall) -> anyhow::Result<()> {
                 &mut out!(0)[..*n],
             ),
             BiasF { outer, channels, dim } => {
-                math::bias_forward(&mut out!(0)[..outer * channels * dim], &inp(0)[..*channels], *outer, *channels, *dim)
+                math::bias_forward(&mut out!(0)[..outer * channels * dim], &inp(0)[..*channels], *outer, *channels, *dim);
             }
             SoftmaxF { n, c } => math::softmax_forward(inp(0), out!(0), *n, *c),
             SoftmaxLossF { n, c } => {
@@ -285,7 +285,7 @@ pub fn execute(slab: &mut Slab, call: &KernelCall) -> anyhow::Result<()> {
                 out!(0)[0] = l;
             }
             SoftmaxLossB { n, c, weight } => {
-                math::softmax_loss_backward(inp(0), inp(1), out!(0), *n, *c, *weight)
+                math::softmax_loss_backward(inp(0), inp(1), out!(0), *n, *c, *weight);
             }
             ConcatF { num, this, total, offset } => {
                 for i in 0..*num {

@@ -61,7 +61,7 @@ impl ConvolutionLayer {
         self.name
             .bytes()
             .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
-                (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+                (h ^ u64::from(b)).wrapping_mul(0x1000_0000_01b3)
             })
     }
 }
@@ -449,7 +449,7 @@ mod tests {
             .set_data(&mut dev, &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
         layer.setup(&mut dev, &[bottom.clone()], &[top.clone()]).unwrap();
         assert_eq!(top.borrow().shape(), &[1, 1, 2, 2]);
-        layer.forward(&mut dev, &[bottom.clone()], &[top.clone()]).unwrap();
+        layer.forward(&mut dev, &[bottom], &[top.clone()]).unwrap();
         let out = top.borrow_mut().data_vec(&mut dev);
         assert_eq!(out, vec![8.0, 12.0, 20.0, 24.0]);
     }

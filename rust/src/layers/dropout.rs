@@ -25,7 +25,7 @@ impl DropoutLayer {
             .name
             .bytes()
             .fold(0x9e37_79b9_7f4a_7c15u64, |h, b| {
-                (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+                (h ^ u64::from(b)).wrapping_mul(0x1000_0000_01b3)
             });
         DropoutLayer {
             name: param.name.clone(),
@@ -211,7 +211,7 @@ mod tests {
         // Backward uses the same mask.
         top.borrow_mut().set_diff(&mut dev, &vec![1.0; n]);
         layer
-            .backward(&mut dev, &[top.clone()], &[true], &[bottom.clone()])
+            .backward(&mut dev, &[top], &[true], &[bottom.clone()])
             .unwrap();
         let bd = bottom.borrow_mut().diff_vec(&mut dev);
         for i in 0..n {

@@ -40,7 +40,7 @@ impl InnerProductLayer {
         self.name
             .bytes()
             .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
-                (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+                (h ^ u64::from(b)).wrapping_mul(0x1000_0000_01b3)
             })
     }
 }

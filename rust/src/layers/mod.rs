@@ -140,7 +140,7 @@ pub trait LayerTimer {
 
 impl<F: for<'a> FnMut(LayerTiming<'a>)> LayerTimer for F {
     fn record(&mut self, t: LayerTiming<'_>) {
-        self(t)
+        self(t);
     }
 }
 

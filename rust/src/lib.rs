@@ -35,6 +35,7 @@ pub mod device;
 pub mod runtime;
 pub mod layers;
 pub mod net;
+pub mod netlint;
 pub mod obs;
 pub mod serve;
 pub mod solver;

@@ -11,6 +11,7 @@
 //! fecaffe zoo                                      # list networks
 //! fecaffe export --net lenet                       # print prototxt
 //! fecaffe weights --net lenet --out w.fewts        # export a weight snapshot
+//! fecaffe lint [--net X] [--deny-warnings] [--format json]  # static analysis
 //! ```
 
 use fecaffe::device::cpu::CpuDevice;
@@ -51,6 +52,8 @@ const SPECS: &[Spec] = &[
     Spec::opt("tag", None, "weights command: snapshot tag"),
     Spec::flag("timing-only", "skip numerics, simulate timing only"),
     Spec::flag("no-artifacts", "force native math (skip PJRT artifacts)"),
+    Spec::opt("format", Some("text"), "lint command: text | json"),
+    Spec::flag("deny-warnings", "lint command: treat warnings as errors"),
 ];
 
 fn make_device(args: &Args) -> anyhow::Result<Box<dyn Device>> {
@@ -387,6 +390,87 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `fecaffe lint`: static analysis of nets (and their solver configs)
+/// without building them — graph hygiene, allocation-free shape
+/// inference at every serving bucket, in-place aliasing safety,
+/// DDR-budget fit against the board model, lr-schedule sanity, and the
+/// train→deploy projection check. Engine admission runs the same passes
+/// at model load; this command is the ahead-of-time surface (and the CI
+/// `lint-nets` leg). With no `--net`, all zoo nets are linted.
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    use fecaffe::netlint::{lint_net, LintOptions, LintReport};
+    use fecaffe::runtime::plan::{serve_bucket_cap, serve_buckets};
+
+    let targets: Vec<String> = match args.get("net") {
+        Some(n) => vec![n.to_string()],
+        None => zoo::NETWORKS.iter().map(|n| n.to_string()).collect(),
+    };
+    let mut reports: Vec<LintReport> = Vec::new();
+    for t in &targets {
+        let (param, zoo_name) = if std::path::Path::new(t).is_file() {
+            let text = std::fs::read_to_string(t)?;
+            (proto::parse_net(&text).map_err(anyhow::Error::msg)?, None)
+        } else {
+            let batch = args.get_usize("batch").map_err(anyhow::Error::msg)?;
+            (zoo::by_name(t, batch)?, Some(t.as_str()))
+        };
+        let cap = serve_bucket_cap(zoo_name.unwrap_or(param.name.as_str()));
+        let deploy_opts = |buckets: Vec<usize>| LintOptions {
+            phase: Phase::Test,
+            buckets,
+            forward_only: true,
+            ..Default::default()
+        };
+        if param.inputs.is_empty() {
+            // train_val style: lint the training graph (with its solver
+            // schedule and the train→deploy projection), then the
+            // derived deploy net at every serving bucket.
+            let solver = zoo_name.and_then(|n| zoo::default_solver(n).ok());
+            reports.push(lint_net(
+                &param,
+                &LintOptions {
+                    phase: Phase::Train,
+                    solver,
+                    check_deploy_projection: true,
+                    ..Default::default()
+                },
+            ));
+            // A failed deploy derivation is already reported as NL0411.
+            if let Ok(dep) = zoo::deploy(&param, 1) {
+                reports.push(lint_net(&dep.param, &deploy_opts(serve_buckets(cap))));
+            }
+        } else {
+            reports.push(lint_net(&param, &deploy_opts(serve_buckets(cap))));
+        }
+    }
+
+    let errors: usize = reports.iter().map(|r| r.error_count()).sum();
+    let warnings: usize = reports.iter().map(|r| r.warning_count()).sum();
+    match args.get("format").unwrap_or("text") {
+        "json" => {
+            let arr = fecaffe::util::json::Json::arr(reports.iter().map(|r| r.render_json()));
+            println!("{}", arr.to_pretty());
+        }
+        "text" => {
+            for r in &reports {
+                print!("{}", r.render_text());
+            }
+            println!(
+                "netlint: {} net(s) checked: {errors} error(s), {warnings} warning(s)",
+                reports.len()
+            );
+        }
+        other => anyhow::bail!("unknown --format '{other}' (text | json)"),
+    }
+    if errors > 0 || (warnings > 0 && args.has_flag("deny-warnings")) {
+        anyhow::bail!(
+            "lint failed: {errors} error(s), {warnings} warning(s){}",
+            if errors == 0 { " rejected by --deny-warnings" } else { "" }
+        );
+    }
+    Ok(())
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match Args::parse(&argv, SPECS) {
@@ -402,6 +486,7 @@ fn main() {
         "time" => cmd_time(&args),
         "profile" => cmd_profile(&args),
         "weights" => cmd_weights(&args),
+        "lint" => cmd_lint(&args),
         "zoo" => {
             for n in zoo::NETWORKS {
                 println!("{n}");
@@ -415,7 +500,7 @@ fn main() {
             println!(
                 "{}",
                 usage(
-                    "fecaffe <train|time|profile|zoo|export|weights>",
+                    "fecaffe <train|time|profile|zoo|export|weights|lint>",
                     "FeCaffe: FPGA-enabled Caffe (simulated Stratix 10 + PJRT AOT kernels)",
                     SPECS
                 )

@@ -169,7 +169,7 @@ pub fn bias_forward(top: &mut [f32], bias: &[f32], outer: usize, channels: usize
     pool::parallel_for(0..outer * channels, grain, |r| {
         // Safety: (image, channel) block ranges are disjoint across tasks.
         let chunk = unsafe { topp.slice(r.start * dim, r.len() * dim) };
-        for (bi, block) in r.clone().zip(chunk.chunks_exact_mut(dim)) {
+        for (bi, block) in r.zip(chunk.chunks_exact_mut(dim)) {
             let bv = bias[bi % channels];
             for v in block.iter_mut() {
                 *v += bv;

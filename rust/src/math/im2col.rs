@@ -115,7 +115,7 @@ fn col2im_channels(
     let taps = g.kernel_h * g.kernel_w;
     // data_im starts at channel chans.start's plane.
     let plane0 = chans.start * g.height * g.width;
-    for c in chans.clone() {
+    for c in chans {
         for kh in 0..g.kernel_h {
             for kw in 0..g.kernel_w {
                 let mut col_idx = ((c * taps) + kh * g.kernel_w + kw) * ohw;

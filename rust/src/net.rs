@@ -612,34 +612,17 @@ pub fn insert_splits(layers: &[LayerParameter]) -> Vec<LayerParameter> {
 
     for lp in layers {
         let mut lp = lp.clone();
-        let in_place: Vec<bool> = lp
-            .tops
-            .iter()
-            .map(|t| lp.bottoms.contains(t))
-            .collect();
-        // Remap bottoms through pending split outputs.
-        let mut remapped: HashMap<String, String> = HashMap::new();
+        // Remap bottoms through pending split outputs. Tops keep their
+        // original names: an in-place layer whose bottom was remapped to
+        // a split alias simply stops being in-place (its top becomes a
+        // fresh blob shadowing the old name, Caffe's behavior) — the
+        // version bump in the accounting below still attributes later
+        // consumers of the name to this layer's output.
         for b in lp.bottoms.iter_mut() {
             let v = *version2.get(b.as_str()).unwrap_or(&0);
             if let Some(q) = pending.get_mut(&(b.clone(), v)) {
                 if let Some(alias) = q.pop_front() {
-                    remapped.insert(b.clone(), alias.clone());
                     *b = alias;
-                }
-            }
-        }
-        // Keep in-place layers in-place after remapping. An in-place
-        // layer whose bottom was remapped would need name forwarding for
-        // later versions — no net in the zoo produces that pattern, so we
-        // reject it loudly rather than mis-wire silently.
-        for (i, t) in lp.tops.iter_mut().enumerate() {
-            if in_place[i] {
-                if let Some(alias) = remapped.get(t.as_str()) {
-                    assert!(
-                        !version.contains_key(alias),
-                        "insert_splits: unsupported in-place-after-split on '{t}'"
-                    );
-                    *t = alias.clone();
                 }
             }
         }
@@ -754,6 +737,49 @@ layer { name: "fc2" type: "InnerProduct" bottom: "fc1" top: "fc2"
         let param = parse_net(text).unwrap();
         let with_splits = insert_splits(&param.layers);
         assert!(with_splits.iter().all(|l| l.kind != "Split"));
+    }
+
+    #[test]
+    fn split_after_in_place_keeps_later_consumers_fresh() {
+        // A produces t; C consumes the pre-activation value; B rectifies
+        // t in-place; D consumes the post-activation value. B's bottom is
+        // remapped to a split alias, and its top must KEEP the name `t`
+        // so D reads rectified data — insert_splits used to rename the
+        // top to the alias, silently feeding D the stale pre-ReLU blob.
+        let text = r#"
+input: "data"
+input_shape { dim: 1 dim: 1 dim: 1 dim: 2 }
+layer { name: "a" type: "Pooling" bottom: "data" top: "t"
+        pooling_param { pool: AVE kernel_size: 1 stride: 1 } }
+layer { name: "c" type: "Pooling" bottom: "t" top: "c"
+        pooling_param { pool: AVE global_pooling: true } }
+layer { name: "b" type: "ReLU" bottom: "t" top: "t" }
+layer { name: "d" type: "Pooling" bottom: "t" top: "d"
+        pooling_param { pool: AVE global_pooling: true } }
+"#;
+        let param = parse_net(text).unwrap();
+        let with_splits = insert_splits(&param.layers);
+        let b = with_splits.iter().find(|l| l.name == "b").unwrap();
+        assert!(
+            b.bottoms[0].starts_with("t_split_"),
+            "b must read a split alias, got '{}'",
+            b.bottoms[0]
+        );
+        assert_eq!(b.tops[0], "t", "in-place top keeps its name after remap");
+        let d_layer = with_splits.iter().find(|l| l.name == "d").unwrap();
+        assert_eq!(d_layer.bottoms[0], "t");
+
+        let mut dev = CpuDevice::new();
+        let mut net = Net::from_param(&param, Phase::Test, &mut dev).unwrap();
+        net.blob("data")
+            .unwrap()
+            .borrow_mut()
+            .set_data(&mut dev, &[-1.0, 2.0]);
+        net.forward(&mut dev).unwrap();
+        let c = net.blob("c").unwrap().borrow_mut().data_vec(&mut dev);
+        let d = net.blob("d").unwrap().borrow_mut().data_vec(&mut dev);
+        assert_eq!(c, vec![0.5], "pre-activation consumer sees the raw mean");
+        assert_eq!(d, vec![1.0], "post-activation consumer sees the rectified mean");
     }
 
     #[test]

@@ -1,0 +1,67 @@
+//! Pass 3: in-place aliasing safety.
+//!
+//! An in-place layer lists the same blob as bottom and top, overwriting
+//! its storage during forward. That is only well-defined for elementwise
+//! kinds whose runtime kernels tolerate it (`ReLU`, `Dropout`) — any
+//! other kind in-place is `NL0201`. Separately, a *pure* consumer that
+//! reads the blob before an in-place layer overwrites it, while another
+//! consumer reads it after, straddles the overwrite (`NL0202`): the net
+//! only works because split insertion materializes a copy, which costs a
+//! DDR round-trip and usually signals a miswired prototxt.
+
+use super::LintDiagnostic;
+use crate::proto::LayerParameter;
+
+/// Layer kinds whose forward kernels are safe to run in-place.
+const IN_PLACE_SAFE: &[&str] = &["ReLU", "Dropout"];
+
+pub fn check(layers: &[LayerParameter], diags: &mut Vec<LintDiagnostic>) {
+    for (i, lp) in layers.iter().enumerate() {
+        for t in &lp.tops {
+            if !lp.bottoms.contains(t) {
+                continue;
+            }
+            if !IN_PLACE_SAFE.contains(&lp.kind.as_str()) {
+                diags.push(
+                    LintDiagnostic::error(
+                        "NL0201",
+                        Some(lp.name.as_str()),
+                        format!(
+                            "{} computes blob '{t}' in-place, but its kernel reads the \
+                             full bottom while writing the top",
+                            lp.kind
+                        ),
+                    )
+                    .with_help(format!(
+                        "only {} support in-place; give the top a fresh name",
+                        IN_PLACE_SAFE.join("/")
+                    )),
+                );
+                continue;
+            }
+            // Straddle: a pure reader strictly before this overwrite plus
+            // any reader after it. Prior *in-place* writers of the same
+            // blob are a chain (relu → dropout), not a straddle.
+            let pure_before = layers[..i]
+                .iter()
+                .any(|l| l.bottoms.contains(t) && !l.tops.contains(t));
+            let reader_after = layers[i + 1..].iter().any(|l| l.bottoms.contains(t));
+            if pure_before && reader_after {
+                diags.push(
+                    LintDiagnostic::warning(
+                        "NL0202",
+                        Some(lp.name.as_str()),
+                        format!(
+                            "blob '{t}' is read before this in-place layer overwrites it \
+                             and again after; consumers see different values"
+                        ),
+                    )
+                    .with_help(
+                        "split insertion keeps this correct but forces an extra copy; \
+                         rename the in-place top if both values are really needed",
+                    ),
+                );
+            }
+        }
+    }
+}

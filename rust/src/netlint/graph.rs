@@ -1,0 +1,146 @@
+//! Pass 1: graph hygiene.
+//!
+//! Walks the phase's layer list in declaration order (the same order
+//! [`crate::net::Net::from_param`] builds in — Caffe nets are
+//! topologically sorted by construction, so any bottom that is not yet
+//! available is a wiring bug, not a scheduling choice):
+//!
+//! * `NL0001` — bottom blob never produced anywhere (dangling);
+//! * `NL0002` — bottom produced only *later* (forward reference — the
+//!   declaration-order form a cycle takes in a prototxt);
+//! * `NL0003` — non-in-place redefinition of an existing top (two
+//!   producers for one blob name; `Net::from_param` would silently
+//!   shadow the first);
+//! * `NL0004` — layer unreachable from any loss/accuracy output (dead
+//!   weight that still costs DDR and schedule slots);
+//! * `NL0005` — bottom produced only by layers of the *other* phase
+//!   (phase-inconsistent wiring).
+
+use super::LintDiagnostic;
+use crate::proto::{NetParameter, Phase};
+use std::collections::HashSet;
+
+pub fn check(param: &NetParameter, phase: Phase, diags: &mut Vec<LintDiagnostic>) {
+    let layers = param.layers_for_phase(phase);
+    let other = match phase {
+        Phase::Train => Phase::Test,
+        Phase::Test => Phase::Train,
+    };
+
+    // Every top any in-phase layer produces (for forward-reference vs
+    // dangling), and tops exclusive to the other phase (for NL0005).
+    let mut phase_tops: HashSet<&str> = HashSet::new();
+    for l in &layers {
+        phase_tops.extend(l.tops.iter().map(String::as_str));
+    }
+    let mut other_tops: HashSet<&str> = HashSet::new();
+    for l in param.layers_for_phase(other) {
+        other_tops.extend(l.tops.iter().map(String::as_str));
+    }
+
+    let mut available: HashSet<&str> = param.inputs.iter().map(|(n, _)| n.as_str()).collect();
+    let mut defined: HashSet<&str> = available.clone();
+
+    for lp in &layers {
+        for b in &lp.bottoms {
+            if available.contains(b.as_str()) {
+                continue;
+            }
+            if phase_tops.contains(b.as_str()) {
+                diags.push(
+                    LintDiagnostic::error(
+                        "NL0002",
+                        Some(lp.name.as_str()),
+                        format!("bottom '{b}' is consumed before any layer produces it"),
+                    )
+                    .with_help(
+                        "layers must be declared producer-first (a forward reference \
+                         here means a cycle or a mis-ordered prototxt)",
+                    ),
+                );
+            } else if other_tops.contains(b.as_str()) {
+                diags.push(LintDiagnostic::error(
+                    "NL0005",
+                    Some(lp.name.as_str()),
+                    format!(
+                        "bottom '{b}' is only produced in the {} phase, but this layer \
+                         runs in {}",
+                        other.ident(),
+                        phase.ident()
+                    ),
+                ));
+            } else {
+                diags.push(
+                    LintDiagnostic::error(
+                        "NL0001",
+                        Some(lp.name.as_str()),
+                        format!("bottom '{b}' is never produced by any layer or input"),
+                    )
+                    .with_help("add a producing layer, an `input:` declaration, or fix the name"),
+                );
+            }
+        }
+        let mut seen_here: HashSet<&str> = HashSet::new();
+        for t in &lp.tops {
+            let in_place = lp.bottoms.contains(t);
+            if !seen_here.insert(t.as_str()) {
+                diags.push(LintDiagnostic::error(
+                    "NL0003",
+                    Some(lp.name.as_str()),
+                    format!("top '{t}' is listed twice by the same layer"),
+                ));
+            } else if !in_place && defined.contains(t.as_str()) {
+                diags.push(
+                    LintDiagnostic::error(
+                        "NL0003",
+                        Some(lp.name.as_str()),
+                        format!("top '{t}' is already produced by an earlier layer"),
+                    )
+                    .with_help(
+                        "two producers for one blob name shadow each other; rename the \
+                         top (in-place layers must list the blob as bottom AND top)",
+                    ),
+                );
+            }
+            available.insert(t.as_str());
+            defined.insert(t.as_str());
+        }
+    }
+
+    // Dead layers: reverse reachability from loss/accuracy tops. Only
+    // meaningful when the net has such sinks (deploy nets express their
+    // output implicitly — any unconsumed top is a legitimate output).
+    let mut roots: HashSet<&str> = HashSet::new();
+    for l in &layers {
+        let is_sink = l.kind == "SoftmaxWithLoss"
+            || l.kind == "Accuracy"
+            || l.loss_weight.iter().any(|&w| w != 0.0);
+        if is_sink {
+            roots.extend(l.tops.iter().map(String::as_str));
+        }
+    }
+    if roots.is_empty() {
+        return;
+    }
+    let mut needed: HashSet<&str> = roots;
+    for lp in layers.iter().rev() {
+        if lp.tops.iter().any(|t| needed.contains(t.as_str())) {
+            needed.extend(lp.bottoms.iter().map(String::as_str));
+        } else {
+            diags.push(
+                LintDiagnostic::warning(
+                    "NL0004",
+                    Some(lp.name.as_str()),
+                    format!(
+                        "layer is unreachable from any loss/accuracy output in the {} phase",
+                        phase.ident()
+                    ),
+                )
+                .with_help(
+                    "dead layers still run and consume DDR; remove them or wire their \
+                     tops into the graph",
+                ),
+            );
+        }
+    }
+}

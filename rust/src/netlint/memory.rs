@@ -1,0 +1,191 @@
+//! Pass 4: blob liveness and DDR-budget fit.
+//!
+//! Estimates the device-DDR footprint of one serving bucket from the
+//! inferred shapes alone, mirroring what allocation actually commits:
+//!
+//! * **activations** — every blob in the net map, ×4 bytes, ×1
+//!   (forward-only) or ×2 (training keeps data + diff), exactly like
+//!   [`crate::net::Net::activation_bytes`];
+//! * **params** — conv/IP weights and biases, same data/diff factor;
+//! * **scratch** — the two shared per-device im2col slots, each sized to
+//!   the largest `bucket(col_len)` over non-1×1 convolutions
+//!   (see `ConvolutionLayer::reshape`);
+//! * **aux** — per-layer internal blobs: MAX-pool argmax mask, dropout
+//!   mask, softmax-loss probability buffer, LRN scale buffer.
+//!
+//! It also plays the forward schedule to find the *peak live* activation
+//! set (a blob is live from its producer to its last consumer; inputs
+//! from step 0, unconsumed outputs to the end). `reuse_headroom_bytes` —
+//! allocated-minus-peak — is what an arena allocator reusing dead blob
+//! storage would save. The fit check compares the (conservative,
+//! no-reuse) total against
+//! [`crate::device::fpga::costmodel::BoardParams::ddr_capacity_bytes`].
+
+use crate::device::fpga::costmodel::BoardParams;
+use crate::proto::LayerParameter;
+use crate::runtime::plan::bucket;
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+
+/// Estimated DDR footprint of one net at one batch bucket.
+#[derive(Debug, Clone)]
+pub struct BucketMemoryReport {
+    pub bucket: usize,
+    pub activation_bytes: u64,
+    pub param_bytes: u64,
+    pub scratch_bytes: u64,
+    pub aux_bytes: u64,
+    pub total_bytes: u64,
+    /// Largest simultaneously-live activation set over the forward
+    /// schedule.
+    pub peak_activation_bytes: u64,
+    /// `activation_bytes - peak_activation_bytes`: what blob-storage
+    /// reuse could reclaim.
+    pub reuse_headroom_bytes: u64,
+    pub ddr_capacity_bytes: u64,
+}
+
+impl BucketMemoryReport {
+    pub fn fits(&self) -> bool {
+        self.total_bytes <= self.ddr_capacity_bytes
+    }
+}
+
+const F32: u64 = 4;
+
+fn blob_bytes(shape: &[usize]) -> u64 {
+    shape.iter().product::<usize>() as u64 * F32
+}
+
+pub fn analyze(
+    with_splits: &[LayerParameter],
+    shapes: &BTreeMap<String, Vec<usize>>,
+    batch: usize,
+    forward_only: bool,
+    board: &BoardParams,
+) -> BucketMemoryReport {
+    // Training keeps a diff buffer next to every data buffer.
+    let factor: u64 = if forward_only { 1 } else { 2 };
+
+    let activation_bytes: u64 = shapes.values().map(|s| blob_bytes(s) * factor).sum();
+
+    let param_bytes: u64 = super::shapes::param_schema(with_splits, shapes)
+        .iter()
+        .map(|(_, len)| *len as u64 * F32 * factor)
+        .sum();
+
+    // Shared im2col scratch: two slots, each sized to the max rounded
+    // col buffer any non-1x1 conv requests.
+    let mut max_col = 0usize;
+    let mut aux_bytes = 0u64;
+    for lp in with_splits {
+        let bot = lp.bottoms.first().and_then(|b| shapes.get(b));
+        let top = lp.tops.first().and_then(|t| shapes.get(t));
+        match lp.kind.as_str() {
+            "Convolution" => {
+                let (p, b, t) = match (&lp.conv, bot, top) {
+                    (Some(p), Some(b), Some(t)) => (p, b, t),
+                    _ => continue,
+                };
+                let is_1x1 = p.kernel_h == 1
+                    && p.kernel_w == 1
+                    && p.stride_h == 1
+                    && p.stride_w == 1
+                    && p.pad_h == 0
+                    && p.pad_w == 0;
+                if !is_1x1 {
+                    let c = b.get(1).copied().unwrap_or(1);
+                    let (oh, ow) = (
+                        t.get(2).copied().unwrap_or(1),
+                        t.get(3).copied().unwrap_or(1),
+                    );
+                    let col_len = c * p.kernel_h * p.kernel_w * oh * ow;
+                    max_col = max_col.max(bucket(col_len));
+                }
+            }
+            "Pooling" => {
+                // MAX pooling keeps an argmax mask shaped like the top.
+                let is_max = lp
+                    .pool
+                    .as_ref()
+                    .is_some_and(|p| matches!(p.method, crate::proto::PoolMethod::Max));
+                if is_max {
+                    if let Some(t) = top {
+                        aux_bytes += blob_bytes(t);
+                    }
+                }
+            }
+            "Dropout" => {
+                if let Some(b) = bot {
+                    aux_bytes += blob_bytes(b);
+                }
+            }
+            "SoftmaxWithLoss" => {
+                if let Some(b) = bot {
+                    aux_bytes += blob_bytes(b);
+                }
+            }
+            "LRN" => {
+                if let Some(b) = bot {
+                    aux_bytes += blob_bytes(b);
+                }
+            }
+            _ => {}
+        }
+    }
+    let scratch_bytes = 2 * max_col as u64 * F32;
+
+    // Liveness over the forward schedule. birth < 0 ⇒ net input.
+    let steps = with_splits.len() as i64;
+    let mut birth: HashMap<&str, i64> = HashMap::new();
+    let mut last_use: HashMap<&str, i64> = HashMap::new();
+    for name in shapes.keys() {
+        birth.insert(name.as_str(), -1);
+        last_use.insert(name.as_str(), steps - 1);
+    }
+    for (i, lp) in with_splits.iter().enumerate() {
+        for t in &lp.tops {
+            // First producer wins (in-place layers reuse the blob).
+            if let Some(b) = birth.get_mut(t.as_str()) {
+                if *b == -1 && !lp.bottoms.contains(t) {
+                    *b = i as i64;
+                }
+            }
+        }
+    }
+    // Unconsumed tops stay live to the end (they are the outputs); any
+    // consumed blob dies after its last consumer.
+    let mut consumed: HashMap<&str, i64> = HashMap::new();
+    for (i, lp) in with_splits.iter().enumerate() {
+        for b in &lp.bottoms {
+            consumed.insert(b.as_str(), i as i64);
+        }
+    }
+    for (name, step) in consumed {
+        if let Some(l) = last_use.get_mut(name) {
+            *l = step;
+        }
+    }
+    let mut peak = 0u64;
+    for i in 0..steps.max(1) {
+        let live: u64 = shapes
+            .iter()
+            .filter(|(n, _)| birth[n.as_str()] <= i && i <= last_use[n.as_str()])
+            .map(|(_, s)| blob_bytes(s) * factor)
+            .sum();
+        peak = peak.max(live);
+    }
+
+    let total_bytes = activation_bytes + param_bytes + scratch_bytes + aux_bytes;
+    BucketMemoryReport {
+        bucket: batch,
+        activation_bytes,
+        param_bytes,
+        scratch_bytes,
+        aux_bytes,
+        total_bytes,
+        peak_activation_bytes: peak,
+        reuse_headroom_bytes: activation_bytes.saturating_sub(peak),
+        ddr_capacity_bytes: board.ddr_capacity_bytes,
+    }
+}

@@ -1,0 +1,413 @@
+//! netlint: static analysis of nets and solver configs.
+//!
+//! A parsed [`NetParameter`] is analyzed **without allocating blobs or
+//! touching a device** — the FPGA-deployment precondition: misconfigured
+//! nets must fail at admission (or in `fecaffe lint`) with a structured
+//! diagnostic, not deep inside `setup`/`reshape`/`forward` after DDR and
+//! batch slots were committed. Five passes:
+//!
+//! 1. **graph** ([`graph`]) — dangling bottoms, forward references /
+//!    cycles, duplicate tops, dead layers, phase-inconsistent wiring;
+//! 2. **shapes** ([`shapes`]) — allocation-free shape inference over the
+//!    whole DAG (the split-inserted graph, so blob names match
+//!    [`crate::net::Net`] exactly), per serving bucket, reusing the same
+//!    geometry math as `Layer::reshape`;
+//! 3. **alias** ([`alias`]) — in-place aliasing safety;
+//! 4. **memory** ([`memory`]) — blob liveness, peak-activation / reuse
+//!    report and DDR-budget fit per bucket against
+//!    [`crate::device::fpga::costmodel::BoardParams`];
+//! 5. **solver** ([`solver`]) — lr-schedule sanity and train→deploy
+//!    parameter-projection compatibility with
+//!    [`crate::net::WeightSnapshot::project`].
+//!
+//! Diagnostics carry stable `NLxxxx` codes (grep-able, asserted by the
+//! golden test suite) and render as text or JSON. The serving engine
+//! runs the linter at model admission and refuses error-severity nets
+//! with a typed [`LintError`].
+
+pub mod alias;
+pub mod graph;
+pub mod memory;
+pub mod shapes;
+pub mod solver;
+
+use crate::device::fpga::costmodel::BoardParams;
+use crate::proto::{NetParameter, Phase, SolverParameter};
+use crate::util::json::Json;
+
+pub use memory::BucketMemoryReport;
+pub use shapes::infer_shapes;
+
+/// Diagnostic severity. `Error` findings make a net unservable
+/// (admission refuses it); `Warning` findings are reported and fail
+/// `fecaffe lint --deny-warnings`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One finding. `code` is a stable `NLxxxx` identifier (see the README
+/// code table); `layer` names the offending layer when there is one.
+#[derive(Debug, Clone)]
+pub struct LintDiagnostic {
+    pub code: &'static str,
+    pub severity: Severity,
+    pub layer: Option<String>,
+    pub message: String,
+    pub help: Option<String>,
+}
+
+impl LintDiagnostic {
+    pub fn error(code: &'static str, layer: Option<&str>, message: String) -> LintDiagnostic {
+        LintDiagnostic {
+            code,
+            severity: Severity::Error,
+            layer: layer.map(str::to_string),
+            message,
+            help: None,
+        }
+    }
+
+    pub fn warning(code: &'static str, layer: Option<&str>, message: String) -> LintDiagnostic {
+        LintDiagnostic {
+            code,
+            severity: Severity::Warning,
+            layer: layer.map(str::to_string),
+            message,
+            help: None,
+        }
+    }
+
+    pub fn with_help(mut self, help: impl Into<String>) -> LintDiagnostic {
+        self.help = Some(help.into());
+        self
+    }
+}
+
+/// What to lint and against which budget.
+#[derive(Debug, Clone)]
+pub struct LintOptions {
+    /// Phase whose layer graph is analyzed.
+    pub phase: Phase,
+    /// Serving batch buckets for deploy-style nets (explicit `input`
+    /// blobs): shape inference and the memory pass run per bucket, with
+    /// the first input's batch dimension rewritten exactly like
+    /// [`crate::net::Net::reshape_batch`]. Empty → one pass at the
+    /// declared shapes (data-layer-fed training nets always take the
+    /// single pass at their configured batch).
+    pub buckets: Vec<usize>,
+    /// Board the DDR-fit check runs against (paper Table 4: 2 GB).
+    pub board: BoardParams,
+    /// Forward-only (serving) memory accounting: activations and params
+    /// count data only; training counts data + diff.
+    pub forward_only: bool,
+    /// Solver config to check (lr schedule sanity).
+    pub solver: Option<SolverParameter>,
+    /// For train_val nets: verify the train net's parameter schema can
+    /// satisfy [`crate::net::WeightSnapshot::project`] onto the derived
+    /// deploy net.
+    pub check_deploy_projection: bool,
+}
+
+impl Default for LintOptions {
+    fn default() -> Self {
+        LintOptions {
+            phase: Phase::Test,
+            buckets: Vec::new(),
+            board: BoardParams::default(),
+            forward_only: false,
+            solver: None,
+            check_deploy_projection: false,
+        }
+    }
+}
+
+/// Result of linting one net: diagnostics plus the per-bucket memory
+/// reports (present when the net was structurally sound enough to infer
+/// shapes).
+#[derive(Debug, Clone)]
+pub struct LintReport {
+    pub net: String,
+    pub diagnostics: Vec<LintDiagnostic>,
+    pub memory: Vec<BucketMemoryReport>,
+}
+
+impl LintReport {
+    pub fn error_count(&self) -> usize {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Warning)
+            .count()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.error_count() > 0
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Distinct codes of error-severity findings, in first-seen order.
+    pub fn error_codes(&self) -> Vec<&'static str> {
+        let mut codes = Vec::new();
+        for d in &self.diagnostics {
+            if d.severity == Severity::Error && !codes.contains(&d.code) {
+                codes.push(d.code);
+            }
+        }
+        codes
+    }
+
+    pub fn render_text(&self) -> String {
+        let mut out = format!(
+            "netlint: {}: {} error(s), {} warning(s)\n",
+            self.net,
+            self.error_count(),
+            self.warning_count()
+        );
+        for d in &self.diagnostics {
+            let at = d
+                .layer
+                .as_deref()
+                .map(|l| format!(" layer '{l}':"))
+                .unwrap_or_default();
+            out.push_str(&format!(
+                "  {}[{}]{at} {}\n",
+                d.severity.label(),
+                d.code,
+                d.message
+            ));
+            if let Some(h) = &d.help {
+                out.push_str(&format!("    help: {h}\n"));
+            }
+        }
+        if !self.memory.is_empty() {
+            out.push_str("  memory (per batch bucket, estimated device-DDR footprint):\n");
+            for m in &self.memory {
+                out.push_str(&format!(
+                    "    batch {:>4}: total {:>8} = act {} + params {} + scratch {} + aux {} \
+                     (peak-live act {}, reuse headroom {}) — {} of {} capacity\n",
+                    m.bucket,
+                    fmt_bytes(m.total_bytes),
+                    fmt_bytes(m.activation_bytes),
+                    fmt_bytes(m.param_bytes),
+                    fmt_bytes(m.scratch_bytes),
+                    fmt_bytes(m.aux_bytes),
+                    fmt_bytes(m.peak_activation_bytes),
+                    fmt_bytes(m.reuse_headroom_bytes),
+                    if m.fits() { "fits" } else { "EXCEEDS" },
+                    fmt_bytes(m.ddr_capacity_bytes),
+                ));
+            }
+        }
+        out
+    }
+
+    pub fn render_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("net", Json::str(self.net.clone()));
+        o.set("errors", Json::num(self.error_count() as f64));
+        o.set("warnings", Json::num(self.warning_count() as f64));
+        o.set(
+            "diagnostics",
+            Json::arr(self.diagnostics.iter().map(|d| {
+                let mut j = Json::obj();
+                j.set("code", Json::str(d.code));
+                j.set("severity", Json::str(d.severity.label()));
+                if let Some(l) = &d.layer {
+                    j.set("layer", Json::str(l.clone()));
+                }
+                j.set("message", Json::str(d.message.clone()));
+                if let Some(h) = &d.help {
+                    j.set("help", Json::str(h.clone()));
+                }
+                j
+            })),
+        );
+        o.set(
+            "memory",
+            Json::arr(self.memory.iter().map(|m| {
+                let mut j = Json::obj();
+                j.set("bucket", Json::num(m.bucket as f64));
+                j.set("activation_bytes", Json::num(m.activation_bytes as f64));
+                j.set("param_bytes", Json::num(m.param_bytes as f64));
+                j.set("scratch_bytes", Json::num(m.scratch_bytes as f64));
+                j.set("aux_bytes", Json::num(m.aux_bytes as f64));
+                j.set("total_bytes", Json::num(m.total_bytes as f64));
+                j.set(
+                    "peak_activation_bytes",
+                    Json::num(m.peak_activation_bytes as f64),
+                );
+                j.set(
+                    "reuse_headroom_bytes",
+                    Json::num(m.reuse_headroom_bytes as f64),
+                );
+                j.set("ddr_capacity_bytes", Json::num(m.ddr_capacity_bytes as f64));
+                j.set("fits", Json::Bool(m.fits()));
+                j
+            })),
+        );
+        o
+    }
+}
+
+fn fmt_bytes(b: u64) -> String {
+    const MIB: f64 = 1024.0 * 1024.0;
+    let b = b as f64;
+    if b >= 1024.0 * MIB {
+        format!("{:.2}GiB", b / (1024.0 * MIB))
+    } else if b >= MIB {
+        format!("{:.1}MiB", b / MIB)
+    } else {
+        format!("{:.1}KiB", b / 1024.0)
+    }
+}
+
+/// Typed admission-refusal error: a net with error-severity findings.
+/// Carries the full report; `Display` stays one-line (with the NL codes)
+/// so it reads well inside an `anyhow` chain — callers print
+/// `report.render_text()` for the details.
+#[derive(Debug)]
+pub struct LintError {
+    pub report: LintReport,
+}
+
+impl LintError {
+    pub fn new(report: LintReport) -> LintError {
+        LintError { report }
+    }
+}
+
+impl std::fmt::Display for LintError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "net '{}' rejected by netlint: {} error(s) [{}]",
+            self.report.net,
+            self.report.error_count(),
+            self.report.error_codes().join(", ")
+        )
+    }
+}
+
+impl std::error::Error for LintError {}
+
+/// Run all static passes over `param` and collect a report.
+pub fn lint_net(param: &NetParameter, opts: &LintOptions) -> LintReport {
+    let mut diags = Vec::new();
+
+    // Pass 1: graph hygiene (+ phase cross-check).
+    graph::check(param, opts.phase, &mut diags);
+    // Pass 3 needs only the phase graph, not shapes.
+    let layers: Vec<crate::proto::LayerParameter> = param
+        .layers_for_phase(opts.phase)
+        .into_iter()
+        .cloned()
+        .collect();
+    alias::check(&layers, &mut diags);
+
+    // Pass 2: shape inference over the split-inserted graph, so blob
+    // names (including `_split_` aliases) match `Net::from_param`.
+    let with_splits = crate::net::insert_splits(&layers);
+    let buckets: Vec<Option<usize>> = if param.inputs.is_empty() || opts.buckets.is_empty() {
+        vec![None]
+    } else {
+        opts.buckets.iter().map(|&b| Some(b)).collect()
+    };
+    let mut shape_sets = Vec::new();
+    for (i, b) in buckets.iter().enumerate() {
+        // Geometry diagnostics are batch-independent — collect them once
+        // (first bucket) instead of once per bucket.
+        let mut sink = Vec::new();
+        let shapes = shapes::infer_with_splits(&with_splits, &param.inputs, *b, &mut sink);
+        if i == 0 {
+            diags.extend(sink);
+        }
+        shape_sets.push((*b, shapes));
+    }
+
+    // Pass 4: memory/liveness + DDR fit, only on structurally sound nets
+    // (footprints derived from partial shapes would mislead).
+    let mut memory = Vec::new();
+    if !diags.iter().any(|d| d.severity == Severity::Error) {
+        for (b, shapes) in &shape_sets {
+            let bucket = b.unwrap_or_else(|| default_batch(param, opts.phase));
+            let rep = memory::analyze(
+                &with_splits,
+                shapes,
+                bucket,
+                opts.forward_only,
+                &opts.board,
+            );
+            if !rep.fits() {
+                diags.push(
+                    LintDiagnostic::error(
+                        "NL0301",
+                        None,
+                        format!(
+                            "batch {}: estimated DDR footprint {} exceeds board capacity {}",
+                            rep.bucket,
+                            fmt_bytes(rep.total_bytes),
+                            fmt_bytes(rep.ddr_capacity_bytes)
+                        ),
+                    )
+                    .with_help(
+                        "reduce the batch size, or serve with a smaller max_batch \
+                         (paper §4.4: VGG-16 training at batch 32 does not fit 2 GB DDR)",
+                    ),
+                );
+            } else if rep.total_bytes.saturating_mul(10) > rep.ddr_capacity_bytes.saturating_mul(9)
+            {
+                diags.push(LintDiagnostic::warning(
+                    "NL0302",
+                    None,
+                    format!(
+                        "batch {}: estimated DDR footprint {} is above 90% of board capacity {}",
+                        rep.bucket,
+                        fmt_bytes(rep.total_bytes),
+                        fmt_bytes(rep.ddr_capacity_bytes)
+                    ),
+                ));
+            }
+            memory.push(rep);
+        }
+    }
+
+    // Pass 5: solver schedule + train→deploy projection schema.
+    solver::check(param, opts, &mut diags);
+
+    LintReport {
+        net: param.name.clone(),
+        diagnostics: diags,
+        memory,
+    }
+}
+
+/// Batch size a data-layer-fed net runs at (for memory-report labeling
+/// when there is no explicit input to re-bucket).
+fn default_batch(param: &NetParameter, phase: Phase) -> usize {
+    param
+        .layers_for_phase(phase)
+        .iter()
+        .find_map(|l| l.data.as_ref().map(|d| d.batch_size))
+        .or_else(|| param.inputs.first().map(|(_, s)| s[0]))
+        .unwrap_or(1)
+}

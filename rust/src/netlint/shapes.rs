@@ -1,0 +1,420 @@
+//! Pass 2: allocation-free shape inference.
+//!
+//! Replays every layer's `reshape` geometry — the same formulas
+//! [`crate::math::ConvGeom`] / [`crate::math::pool::pooled_dim`] and the
+//! per-layer reshape impls use — over the *split-inserted* layer list,
+//! so the resulting blob-name → shape map is bit-identical to a built
+//! [`crate::net::Net`] after `reshape_batch` (the property suite asserts
+//! this for every zoo net × serving bucket). No blob is allocated and no
+//! device is touched.
+//!
+//! Geometry findings: `NL0101` invalid kernel/stride geometry, `NL0102`
+//! group/channel mismatch, `NL0103` inconsistent bottom shapes, `NL0104`
+//! wrong arity or missing/invalid layer params, `NL0105` unknown layer
+//! kind. A layer that cannot be inferred marks its tops unknown, so one
+//! root cause does not cascade into downstream noise.
+
+use super::LintDiagnostic;
+use crate::math::pool::pooled_dim;
+use crate::proto::{LayerParameter, NetParameter, Phase};
+use std::collections::{BTreeMap, HashSet};
+
+/// Mirror of `Blob::num/channels/height/width`: missing trailing axes
+/// default to 1.
+fn dim(shape: &[usize], i: usize) -> usize {
+    shape.get(i).copied().unwrap_or(1)
+}
+
+fn count(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Infer shapes for a split-inserted layer list. `batch` rewrites the
+/// *first* explicit input's leading dimension (exactly like
+/// [`crate::net::Net::reshape_batch`]); data-layer-fed nets ignore it
+/// (the data layer re-asserts its configured batch, as at runtime).
+pub fn infer_with_splits(
+    with_splits: &[LayerParameter],
+    inputs: &[(String, [usize; 4])],
+    batch: Option<usize>,
+    diags: &mut Vec<LintDiagnostic>,
+) -> BTreeMap<String, Vec<usize>> {
+    let mut shapes: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    let mut unknown: HashSet<String> = HashSet::new();
+
+    for (i, (name, shape)) in inputs.iter().enumerate() {
+        let mut s = shape.to_vec();
+        if i == 0 {
+            if let Some(b) = batch {
+                s[0] = b;
+            }
+        }
+        shapes.insert(name.clone(), s);
+    }
+
+    'layers: for lp in with_splits {
+        // Resolve bottoms; a missing bottom is a *graph* finding (pass 1
+        // owns it) — here we just stop propagating through this layer.
+        let mut bots: Vec<Vec<usize>> = Vec::with_capacity(lp.bottoms.len());
+        for b in &lp.bottoms {
+            match shapes.get(b) {
+                Some(s) => bots.push(s.clone()),
+                None => {
+                    unknown.extend(lp.tops.iter().cloned());
+                    continue 'layers;
+                }
+            }
+        }
+        let tops = infer_layer(lp, &bots, diags);
+        match tops {
+            Some(tops) => {
+                for (t, s) in lp.tops.iter().zip(tops) {
+                    shapes.insert(t.clone(), s);
+                }
+            }
+            None => unknown.extend(lp.tops.iter().cloned()),
+        }
+    }
+    shapes
+}
+
+/// Expected (bottoms, tops) arity per layer kind; `None` = variadic.
+fn arity(kind: &str) -> Option<(usize, usize)> {
+    match kind {
+        "SyntheticData" | "Data" => Some((0, 2)),
+        "Convolution" | "Pooling" | "InnerProduct" | "ReLU" | "Dropout" | "LRN"
+        | "Softmax" => Some((1, 1)),
+        "SoftmaxWithLoss" | "Accuracy" => Some((2, 1)),
+        "Concat" | "Split" => None,
+        _ => None,
+    }
+}
+
+/// Compute the top shapes of one layer, or `None` if they cannot be
+/// determined (a diagnostic explains why).
+fn infer_layer(
+    lp: &LayerParameter,
+    bots: &[Vec<usize>],
+    diags: &mut Vec<LintDiagnostic>,
+) -> Option<Vec<Vec<usize>>> {
+    let name = lp.name.as_str();
+    if let Some((nb, nt)) = arity(&lp.kind) {
+        if lp.bottoms.len() != nb || lp.tops.len() != nt {
+            diags.push(LintDiagnostic::error(
+                "NL0104",
+                Some(name),
+                format!(
+                    "{} expects {nb} bottom(s) and {nt} top(s), has {} and {}",
+                    lp.kind,
+                    lp.bottoms.len(),
+                    lp.tops.len()
+                ),
+            ));
+            return None;
+        }
+    }
+    match lp.kind.as_str() {
+        "SyntheticData" | "Data" => {
+            let p = match &lp.data {
+                Some(p) => p,
+                None => {
+                    diags.push(LintDiagnostic::error(
+                        "NL0104",
+                        Some(name),
+                        "data layer has no data_param".into(),
+                    ));
+                    return None;
+                }
+            };
+            // Mirror `data::create_source`: the "digits" source is
+            // single-channel regardless of the declared channel count.
+            let c = match p.source.as_str() {
+                "digits" => 1,
+                "imagenet" => p.channels,
+                other => {
+                    diags.push(LintDiagnostic::error(
+                        "NL0104",
+                        Some(name),
+                        format!("unknown synthetic data source '{other}'"),
+                    ));
+                    return None;
+                }
+            };
+            Some(vec![
+                vec![p.batch_size, c, p.height, p.width],
+                vec![p.batch_size],
+            ])
+        }
+        "Convolution" => {
+            let p = match &lp.conv {
+                Some(p) => p,
+                None => {
+                    diags.push(LintDiagnostic::error(
+                        "NL0104",
+                        Some(name),
+                        "convolution layer has no convolution_param".into(),
+                    ));
+                    return None;
+                }
+            };
+            let (n, c, h, w) = nchw(&bots[0]);
+            if p.stride_h == 0 || p.stride_w == 0 || p.kernel_h == 0 || p.kernel_w == 0 {
+                diags.push(LintDiagnostic::error(
+                    "NL0101",
+                    Some(name),
+                    format!(
+                        "invalid geometry: kernel {}x{}, stride {}x{} (must be >= 1)",
+                        p.kernel_h, p.kernel_w, p.stride_h, p.stride_w
+                    ),
+                ));
+                return None;
+            }
+            if p.group == 0 || c % p.group != 0 || p.num_output % p.group != 0 {
+                diags.push(LintDiagnostic::error(
+                    "NL0102",
+                    Some(name),
+                    format!(
+                        "channels {c} / num_output {} not divisible by group {}",
+                        p.num_output, p.group
+                    ),
+                ));
+                return None;
+            }
+            if h + 2 * p.pad_h < p.kernel_h || w + 2 * p.pad_w < p.kernel_w {
+                diags.push(
+                    LintDiagnostic::error(
+                        "NL0101",
+                        Some(name),
+                        format!(
+                            "kernel {}x{} exceeds padded input {}x{} (pad {}x{})",
+                            p.kernel_h, p.kernel_w, h, w, p.pad_h, p.pad_w
+                        ),
+                    )
+                    .with_help("at runtime this underflows inside ConvGeom::out_h/out_w"),
+                );
+                return None;
+            }
+            let oh = (h + 2 * p.pad_h - p.kernel_h) / p.stride_h + 1;
+            let ow = (w + 2 * p.pad_w - p.kernel_w) / p.stride_w + 1;
+            Some(vec![vec![n, p.num_output, oh, ow]])
+        }
+        "Pooling" => {
+            let p = match &lp.pool {
+                Some(p) => p,
+                None => {
+                    diags.push(LintDiagnostic::error(
+                        "NL0104",
+                        Some(name),
+                        "pooling layer has no pooling_param".into(),
+                    ));
+                    return None;
+                }
+            };
+            let (n, c, h, w) = nchw(&bots[0]);
+            let (kh, kw) = if p.global_pooling {
+                (h, w)
+            } else {
+                (p.kernel_h, p.kernel_w)
+            };
+            if p.stride_h == 0 || p.stride_w == 0 || kh == 0 || kw == 0 {
+                diags.push(LintDiagnostic::error(
+                    "NL0101",
+                    Some(name),
+                    format!(
+                        "invalid geometry: kernel {kh}x{kw}, stride {}x{} (must be >= 1)",
+                        p.stride_h, p.stride_w
+                    ),
+                ));
+                return None;
+            }
+            if h + 2 * p.pad_h < kh || w + 2 * p.pad_w < kw || p.pad_h >= kh || p.pad_w >= kw {
+                diags.push(
+                    LintDiagnostic::error(
+                        "NL0101",
+                        Some(name),
+                        format!(
+                            "kernel {kh}x{kw} incompatible with input {h}x{w} \
+                             (pad {}x{}; padding must be smaller than the kernel)",
+                            p.pad_h, p.pad_w
+                        ),
+                    )
+                    .with_help("at runtime this underflows inside pooled_dim"),
+                );
+                return None;
+            }
+            let ph = pooled_dim(h, kh, p.pad_h, p.stride_h);
+            let pw = pooled_dim(w, kw, p.pad_w, p.stride_w);
+            Some(vec![vec![n, c, ph, pw]])
+        }
+        "InnerProduct" => {
+            let p = match &lp.inner_product {
+                Some(p) => p,
+                None => {
+                    diags.push(LintDiagnostic::error(
+                        "NL0104",
+                        Some(name),
+                        "inner product layer has no inner_product_param".into(),
+                    ));
+                    return None;
+                }
+            };
+            if p.num_output == 0 {
+                diags.push(LintDiagnostic::error(
+                    "NL0104",
+                    Some(name),
+                    "inner_product_param.num_output must be >= 1".into(),
+                ));
+                return None;
+            }
+            let m = dim(&bots[0], 0);
+            Some(vec![vec![m, p.num_output]])
+        }
+        "ReLU" | "Dropout" | "LRN" | "Softmax" => Some(vec![bots[0].clone()]),
+        "Split" => {
+            if bots.len() != 1 || lp.tops.is_empty() {
+                diags.push(LintDiagnostic::error(
+                    "NL0104",
+                    Some(name),
+                    "Split expects 1 bottom and >= 1 tops".into(),
+                ));
+                return None;
+            }
+            Some(vec![bots[0].clone(); lp.tops.len()])
+        }
+        "Concat" => {
+            let axis = lp.concat.as_ref().map_or(1, |c| c.axis);
+            if axis != 1 {
+                diags.push(LintDiagnostic::error(
+                    "NL0104",
+                    Some(name),
+                    format!("Concat supports axis 1 (channels) only, got {axis}"),
+                ));
+                return None;
+            }
+            if bots.is_empty() || lp.tops.len() != 1 {
+                diags.push(LintDiagnostic::error(
+                    "NL0104",
+                    Some(name),
+                    "Concat expects >= 1 bottoms and exactly 1 top".into(),
+                ));
+                return None;
+            }
+            let (n, _, h, w) = nchw(&bots[0]);
+            let mut channels = 0;
+            for (i, b) in bots.iter().enumerate() {
+                let (bn, bc, bh, bw) = nchw(b);
+                if bn != n || bh != h || bw != w {
+                    diags.push(LintDiagnostic::error(
+                        "NL0103",
+                        Some(name),
+                        format!(
+                            "bottom '{}' has shape {}x{}x{}x{}, expected {n}x*x{h}x{w}",
+                            lp.bottoms[i], bn, bc, bh, bw
+                        ),
+                    ));
+                    return None;
+                }
+                channels += bc;
+            }
+            Some(vec![vec![n, channels, h, w]])
+        }
+        "SoftmaxWithLoss" | "Accuracy" => {
+            let n = dim(&bots[0], 0);
+            let labels = count(&bots[1]);
+            if labels != n {
+                diags.push(LintDiagnostic::error(
+                    "NL0103",
+                    Some(name),
+                    format!(
+                        "label bottom '{}' has {labels} elements, scores have batch {n}",
+                        lp.bottoms[1]
+                    ),
+                ));
+                return None;
+            }
+            Some(vec![vec![1]])
+        }
+        other => {
+            diags.push(LintDiagnostic::error(
+                "NL0105",
+                Some(name),
+                format!("unknown layer kind '{other}'"),
+            ));
+            None
+        }
+    }
+}
+
+fn nchw(shape: &[usize]) -> (usize, usize, usize, usize) {
+    (dim(shape, 0), dim(shape, 1), dim(shape, 2), dim(shape, 3))
+}
+
+/// Infer the full blob-shape map of `param` at `phase` (optionally
+/// re-batched like `Net::reshape_batch(batch)`). Errors if the net has
+/// any error-severity geometry/graph finding — use [`super::lint_net`]
+/// for diagnostics.
+pub fn infer_shapes(
+    param: &NetParameter,
+    phase: Phase,
+    batch: Option<usize>,
+) -> anyhow::Result<BTreeMap<String, Vec<usize>>> {
+    let layers: Vec<LayerParameter> = param
+        .layers_for_phase(phase)
+        .into_iter()
+        .cloned()
+        .collect();
+    let with_splits = crate::net::insert_splits(&layers);
+    let mut diags = Vec::new();
+    let shapes = infer_with_splits(&with_splits, &param.inputs, batch, &mut diags);
+    if let Some(d) = diags.iter().find(|d| d.severity == super::Severity::Error) {
+        anyhow::bail!("shape inference failed: [{}] {}", d.code, d.message);
+    }
+    Ok(shapes)
+}
+
+/// The static learnable-parameter schema of a (split-inserted) layer
+/// list: `((owner layer, slot), element count)` in the same order
+/// [`crate::net::Net::share_weights`] exports — the key space
+/// [`crate::net::WeightSnapshot::project`] matches on.
+pub fn param_schema(
+    with_splits: &[LayerParameter],
+    shapes: &BTreeMap<String, Vec<usize>>,
+) -> Vec<((String, usize), usize)> {
+    let mut out = Vec::new();
+    for lp in with_splits {
+        let bottom = lp.bottoms.first().and_then(|b| shapes.get(b));
+        match lp.kind.as_str() {
+            "Convolution" => {
+                let (p, b) = match (&lp.conv, bottom) {
+                    (Some(p), Some(b)) => (p, b),
+                    _ => continue,
+                };
+                let c = dim(b, 1);
+                if p.group == 0 || c % p.group != 0 {
+                    continue;
+                }
+                out.push((
+                    (lp.name.clone(), 0),
+                    p.num_output * (c / p.group) * p.kernel_h * p.kernel_w,
+                ));
+                if p.bias_term {
+                    out.push(((lp.name.clone(), 1), p.num_output));
+                }
+            }
+            "InnerProduct" => {
+                let (p, b) = match (&lp.inner_product, bottom) {
+                    (Some(p), Some(b)) => (p, b),
+                    _ => continue,
+                };
+                let m = dim(b, 0);
+                let k = count(b) / m.max(1);
+                out.push(((lp.name.clone(), 0), p.num_output * k));
+                if p.bias_term {
+                    out.push(((lp.name.clone(), 1), p.num_output));
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}

@@ -1,0 +1,130 @@
+//! Pass 5: solver schedule and train→deploy schema checks.
+//!
+//! * `NL0401` — `lr_policy` not in [`crate::proto::LR_POLICIES`]
+//!   (`Solver::learning_rate_at` would bail mid-training);
+//! * `NL0402` — degenerate schedule: the policy parses but never changes
+//!   the learning rate the way its parameters suggest (`step` with
+//!   `stepsize` 0, `exp`/`inv` with `gamma` 0, `poly` with `max_iter` 0,
+//!   empty `multistep` boundaries);
+//! * `NL0403` — `multistep` boundaries not strictly ascending;
+//! * `NL0411` — the train net's parameter schema cannot satisfy
+//!   [`crate::net::WeightSnapshot::project`] onto its derived deploy
+//!   net: a deploy layer's `(owner, slot)` key is missing from the train
+//!   schema, or the element counts differ. This is the exact failure
+//!   `fecaffe serve` would hit when adopting a snapshot trained from the
+//!   same prototxt.
+
+use super::{LintDiagnostic, LintOptions};
+use crate::proto::{NetParameter, Phase, LR_POLICIES};
+use std::collections::HashMap;
+
+pub fn check(param: &NetParameter, opts: &LintOptions, diags: &mut Vec<LintDiagnostic>) {
+    if let Some(s) = &opts.solver {
+        if !LR_POLICIES.contains(&s.lr_policy.as_str()) {
+            diags.push(
+                LintDiagnostic::error(
+                    "NL0401",
+                    None,
+                    format!("unknown lr_policy '{}'", s.lr_policy),
+                )
+                .with_help(format!("valid policies: {}", LR_POLICIES.join(", "))),
+            );
+        }
+        let degenerate = match s.lr_policy.as_str() {
+            "step" if s.stepsize == 0 => {
+                Some("lr_policy 'step' with stepsize 0 decays every iteration".to_string())
+            }
+            "exp" | "inv" if s.gamma == 0.0 => Some(format!(
+                "lr_policy '{}' with gamma 0 zeroes the learning rate immediately",
+                s.lr_policy
+            )),
+            "poly" if s.max_iter == 0 => {
+                Some("lr_policy 'poly' with max_iter 0 has no decay horizon".to_string())
+            }
+            "multistep" if s.stepvalue.is_empty() => {
+                Some("lr_policy 'multistep' with no stepvalue boundaries never decays".to_string())
+            }
+            _ => None,
+        };
+        if let Some(msg) = degenerate {
+            diags.push(LintDiagnostic::warning("NL0402", None, msg));
+        }
+        if s.lr_policy == "multistep" && s.stepvalue.windows(2).any(|w| w[0] >= w[1]) {
+            diags.push(LintDiagnostic::error(
+                "NL0403",
+                None,
+                format!(
+                    "multistep boundaries must be strictly ascending, got {:?}",
+                    s.stepvalue
+                ),
+            ));
+        }
+    }
+
+    if opts.check_deploy_projection {
+        check_projection(param, diags);
+    }
+}
+
+/// Build the train-phase parameter schema and verify every `(owner,
+/// slot)` key the derived deploy net will ask `WeightSnapshot::project`
+/// for exists with the same element count.
+fn check_projection(param: &NetParameter, diags: &mut Vec<LintDiagnostic>) {
+    let schema_of = |p: &NetParameter, phase: Phase| -> Option<Vec<((String, usize), usize)>> {
+        let layers: Vec<_> = p.layers_for_phase(phase).into_iter().cloned().collect();
+        let with_splits = crate::net::insert_splits(&layers);
+        let mut sink = Vec::new();
+        let shapes = super::shapes::infer_with_splits(&with_splits, &p.inputs, None, &mut sink);
+        if sink.iter().any(|d| d.severity == super::Severity::Error) {
+            return None; // geometry findings already reported by pass 2
+        }
+        Some(super::shapes::param_schema(&with_splits, &shapes))
+    };
+
+    let train: HashMap<(String, usize), usize> = match schema_of(param, Phase::Train) {
+        Some(s) => s.into_iter().collect(),
+        None => return,
+    };
+    let dep = match crate::zoo::deploy(param, 1) {
+        Ok(d) => d,
+        Err(e) => {
+            diags.push(LintDiagnostic::error(
+                "NL0411",
+                None,
+                format!("cannot derive a deploy net for projection check: {e:#}"),
+            ));
+            return;
+        }
+    };
+    let deploy_schema = match schema_of(&dep.param, Phase::Test) {
+        Some(s) => s,
+        None => return,
+    };
+    for ((owner, slot), len) in deploy_schema {
+        match train.get(&(owner.clone(), slot)) {
+            None => diags.push(
+                LintDiagnostic::error(
+                    "NL0411",
+                    Some(owner.as_str()),
+                    format!(
+                        "deploy net needs parameter ({owner}, {slot}) that the train \
+                         net never learns"
+                    ),
+                )
+                .with_help("WeightSnapshot::project onto this deploy net will fail"),
+            ),
+            Some(&tl) if tl != len => diags.push(
+                LintDiagnostic::error(
+                    "NL0411",
+                    Some(owner.as_str()),
+                    format!(
+                        "parameter ({owner}, {slot}) has {tl} elements in the train net \
+                         but {len} in the deploy net"
+                    ),
+                )
+                .with_help("WeightSnapshot::project onto this deploy net will fail"),
+            ),
+            _ => {}
+        }
+    }
+}

@@ -35,6 +35,32 @@ pub fn batch_bucket(k: usize, max_batch: usize) -> usize {
     k.max(1).next_power_of_two().min(max_batch.max(1))
 }
 
+/// Largest serving batch a zoo net is provisioned for: the per-net caps
+/// the AOT manifest records artifacts at, and the bucket set `netlint`
+/// checks DDR fit against. Caps keep the biggest nets' activations
+/// inside board/host memory (VGG-16 is multi-GB even forward-only at
+/// batch 32). Unknown nets get the engine's default capacity.
+pub fn serve_bucket_cap(name: &str) -> usize {
+    match name {
+        "lenet" | "alexnet" => 32,
+        "squeezenet" | "googlenet" => 16,
+        "vgg16" => 8,
+        _ => 8,
+    }
+}
+
+/// The distinct execution shapes a replica built at `max_batch` can be
+/// reshaped to: `batch_bucket(k, max_batch)` for every fill level k,
+/// deduped (`batch_bucket` is nondecreasing in k). This is the exact
+/// bucket walk the AOT manifest records and admission linting checks.
+pub fn serve_buckets(max_batch: usize) -> Vec<usize> {
+    let mut buckets: Vec<usize> = (1..=max_batch.max(1))
+        .map(|k| batch_bucket(k, max_batch))
+        .collect();
+    buckets.dedup();
+    buckets
+}
+
 /// One input argument of an artifact.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Arg {
@@ -505,6 +531,19 @@ mod tests {
             let b = batch_bucket(k, max);
             assert!(b >= k.min(max) && b >= prev && b <= max);
             prev = b;
+        }
+    }
+
+    #[test]
+    fn serve_bucket_walk() {
+        assert_eq!(serve_buckets(8), vec![1, 2, 4, 8]);
+        assert_eq!(serve_buckets(32), vec![1, 2, 4, 8, 16, 32]);
+        assert_eq!(serve_buckets(1), vec![1]);
+        assert_eq!(serve_buckets(0), vec![1]); // degenerate input stays sane
+        // Every zoo net has a cap and its walk ends at the cap.
+        for name in ["lenet", "alexnet", "squeezenet", "googlenet", "vgg16"] {
+            let cap = serve_bucket_cap(name);
+            assert_eq!(serve_buckets(cap).last(), Some(&cap));
         }
     }
 

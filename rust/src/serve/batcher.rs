@@ -60,6 +60,10 @@ pub fn scatter(batched: &[f32], row_len: usize, k: usize) -> Vec<Vec<f32>> {
 /// Batcher thread body: drains `submit` into coalesced batches on
 /// `dispatch` until `submit` is closed *and* empty (graceful shutdown
 /// therefore flushes every admitted request).
+// Thread entry point: the batcher thread must own its queue handles
+// and config for its whole lifetime ('static), even though the body
+// only ever borrows them.
+#[allow(clippy::needless_pass_by_value)]
 pub(crate) fn run(
     submit: Arc<SharedQueue<Request>>,
     dispatch: Arc<SharedQueue<Batch>>,

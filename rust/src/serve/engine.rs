@@ -329,7 +329,7 @@ impl Breaker {
 
     /// Human-readable state for `/healthz` and load reports.
     pub(crate) fn state_name(&self) -> &'static str {
-        super::metrics::breaker_state_name(self.tag.load(Ordering::Relaxed) as u64)
+        super::metrics::breaker_state_name(u64::from(self.tag.load(Ordering::Relaxed)))
     }
 }
 
@@ -524,6 +524,9 @@ const SUPERVISE_POLL: Duration = Duration::from_millis(10);
 /// lasts and the pool hasn't fully drained (a closed dispatch queue
 /// means shutdown or last-worker-out; respawning into it would serve
 /// nothing).
+// Thread entry point: the supervisor thread owns its handles for its
+// whole lifetime ('static), even though the body only borrows them.
+#[allow(clippy::needless_pass_by_value)]
 fn supervise(
     spawner: WorkerSpawner,
     slots: Arc<Mutex<Vec<Option<JoinHandle<()>>>>>,
@@ -609,6 +612,34 @@ impl Engine {
         anyhow::ensure!(cfg.workers >= 1, "engine needs at least one worker");
         anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
         let dep = deploy(param, cfg.max_batch)?;
+
+        // Static admission gate: lint the deploy net at every batch
+        // bucket a worker can reshape to, *before* any blob is allocated
+        // or thread spawned. Error-severity findings refuse the model
+        // with a typed `netlint::LintError`; warnings are surfaced but
+        // don't block serving.
+        let lint = crate::netlint::lint_net(
+            &dep.param,
+            &crate::netlint::LintOptions {
+                phase: Phase::Test,
+                buckets: crate::runtime::plan::serve_buckets(cfg.max_batch),
+                forward_only: true,
+                ..Default::default()
+            },
+        );
+        if lint.has_errors() {
+            eprint!("{}", lint.render_text());
+            return Err(anyhow::Error::new(crate::netlint::LintError::new(lint))
+                .context("model refused at admission"));
+        }
+        for d in &lint.diagnostics {
+            eprintln!(
+                "[serve] netlint {}[{}]: {}",
+                d.severity.label(),
+                d.code,
+                d.message
+            );
+        }
 
         // Master replica: initialize weights once, publish the snapshot,
         // and learn the output row length from the shaped net. Built on
@@ -794,6 +825,10 @@ impl Engine {
     /// it would leave `current + 1` nowhere to go, wedging every later
     /// auto-versioned publish) and refused as a mismatch. Returns the
     /// published version.
+    // By-value is the publication contract — callers hand the snapshot
+    // off to the engine. The body itself only borrows it (projection
+    // Arc-clones the blobs), which needless_pass_by_value flags.
+    #[allow(clippy::needless_pass_by_value)]
     pub fn publish_weights(&self, snap: WeightSnapshot) -> Result<u64, PublishError> {
         let projected = snap
             .project(&self.param_keys, &self.param_lens)

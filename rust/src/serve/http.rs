@@ -234,6 +234,9 @@ impl Drop for ConnGuard {
     }
 }
 
+// Thread entry point: the accept thread owns the listener and server
+// state for its whole lifetime ('static); the body only borrows them.
+#[allow(clippy::needless_pass_by_value)]
 fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
     for stream in listener.incoming() {
         if state.stop.load(Ordering::SeqCst) {

@@ -96,7 +96,11 @@ pub struct ModelRouter {
 
 impl ModelRouter {
     /// Build one engine per zoo model name, splitting `cfg`'s worker
-    /// and intra-op budgets evenly across them.
+    /// and intra-op budgets evenly across them. Every model passes the
+    /// `netlint` admission gate inside [`Engine::new`]: a net with
+    /// error-severity findings makes the whole router construction fail
+    /// with a [`crate::netlint::LintError`] in the chain (naming the
+    /// model), so a misconfigured net can never start serving.
     pub fn from_zoo(models: &[&str], cfg: &RouterConfig) -> anyhow::Result<ModelRouter> {
         anyhow::ensure!(!models.is_empty(), "router needs at least one model");
         let mut seen = std::collections::BTreeSet::new();
@@ -385,6 +389,32 @@ mod tests {
         // Duplicates and unknown names fail before any engine is built.
         assert!(ModelRouter::from_zoo(&["lenet", "lenet"], &cfg).is_err());
         assert!(ModelRouter::from_zoo(&["resnet"], &cfg).is_err());
+    }
+
+    #[test]
+    fn admission_refuses_error_severity_net() {
+        // A dangling bottom on the score path survives `zoo::deploy`'s
+        // dead-branch pruning, so the engine's netlint gate must refuse
+        // the model before any worker starts.
+        let text = r#"
+name: "broken"
+layer { name: "data" type: "SyntheticData" top: "data" top: "label"
+        data_param { batch_size: 2 channels: 1 height: 8 width: 8 num_classes: 3 source: "digits" } }
+layer { name: "fc" type: "InnerProduct" bottom: "missing" top: "fc"
+        inner_product_param { num_output: 3 weight_filler { type: "xavier" } } }
+layer { name: "loss" type: "SoftmaxWithLoss" bottom: "fc" bottom: "label" top: "loss" }
+"#;
+        let param = crate::proto::parse_net(text).unwrap();
+        let err = Engine::new(&param, EngineConfig::default())
+            .err()
+            .expect("broken net must be refused at admission");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("NL0001"), "error names the NL code: {msg}");
+        assert!(
+            err.chain()
+                .any(|c| c.downcast_ref::<crate::netlint::LintError>().is_some()),
+            "chain carries a typed LintError: {msg}"
+        );
     }
 
     #[test]

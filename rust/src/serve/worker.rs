@@ -337,6 +337,9 @@ impl Replica {
     }
 }
 
+// Thread entry point: the worker thread owns its context for its whole
+// lifetime ('static), even though the body only borrows it.
+#[allow(clippy::needless_pass_by_value)]
 pub(crate) fn run(ctx: WorkerContext) {
     let _guard = PoolGuard {
         queue: ctx.queue.clone(),

@@ -201,7 +201,7 @@ impl Solver {
             for np in self.net.params() {
                 let mut blob = np.blob.borrow_mut();
                 let d = blob.diff.host_data(dev);
-                sumsq += d.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+                sumsq += d.iter().map(|&v| f64::from(v) * f64::from(v)).sum::<f64>();
             }
             let l2 = sumsq.sqrt() as f32;
             if l2 > p.clip_gradients {

@@ -113,9 +113,9 @@ pub fn ascii_timeline(spans: &[Span], cols: usize) -> String {
     for lane in lanes {
         let mut row = vec![b'.'; cols];
         for s in spans.iter().filter(|s| s.lane == lane) {
-            let a = (s.start_ns as u128 * cols as u128 / end as u128) as usize;
-            let b = (((s.start_ns + s.dur_ns) as u128 * cols as u128 + end as u128 - 1)
-                / end as u128) as usize;
+            let a = (u128::from(s.start_ns) * cols as u128 / u128::from(end)) as usize;
+            let b = ((u128::from(s.start_ns + s.dur_ns) * cols as u128 + u128::from(end) - 1)
+                / u128::from(end)) as usize;
             let glyph = s.name.bytes().next().unwrap_or(b'#');
             for c in row.iter_mut().take(b.min(cols)).skip(a) {
                 *c = glyph;

@@ -40,7 +40,7 @@ impl Pcg32 {
 
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
-        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+        (u64::from(self.next_u32()) << 32) | u64::from(self.next_u32())
     }
 
     /// Uniform in [0, 1).
@@ -59,7 +59,7 @@ impl Pcg32 {
     /// Uniform integer in [0, n). Rejection-free Lemire reduction.
     #[inline]
     pub fn below(&mut self, n: u32) -> u32 {
-        ((self.next_u32() as u64 * n as u64) >> 32) as u32
+        ((u64::from(self.next_u32()) * u64::from(n)) >> 32) as u32
     }
 
     /// Uniform integer in [lo, hi] inclusive.
@@ -138,9 +138,9 @@ mod tests {
         for _ in 0..n {
             let v = rng.uniform(-2.0, 2.0);
             assert!((-2.0..2.0).contains(&v));
-            sum += v as f64;
+            sum += f64::from(v);
         }
-        assert!((sum / n as f64).abs() < 0.05, "mean {}", sum / n as f64);
+        assert!((sum / f64::from(n)).abs() < 0.05, "mean {}", sum / f64::from(n));
     }
 
     #[test]
@@ -149,12 +149,12 @@ mod tests {
         let n = 40_000;
         let (mut s1, mut s2) = (0f64, 0f64);
         for _ in 0..n {
-            let v = rng.gaussian(1.0, 2.0) as f64;
+            let v = f64::from(rng.gaussian(1.0, 2.0));
             s1 += v;
             s2 += v * v;
         }
-        let mean = s1 / n as f64;
-        let var = s2 / n as f64 - mean * mean;
+        let mean = s1 / f64::from(n);
+        let var = s2 / f64::from(n) - mean * mean;
         assert!((mean - 1.0).abs() < 0.05, "mean {mean}");
         assert!((var - 4.0).abs() < 0.2, "var {var}");
     }

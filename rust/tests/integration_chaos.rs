@@ -192,7 +192,7 @@ fn breaker_opens_after_consecutive_failures_and_probe_recloses() {
         let h = engine.submit(sample(&mut rng, 2)).unwrap();
         match h.wait() {
             Err(ServeError::Worker(msg)) => {
-                assert!(msg.contains("transient"), "request {i}: {msg}")
+                assert!(msg.contains("transient"), "request {i}: {msg}");
             }
             other => panic!("request {i}: expected Worker error, got {other:?}"),
         }

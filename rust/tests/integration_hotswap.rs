@@ -172,7 +172,7 @@ fn concurrent_publish_never_mixes_weight_versions() {
     // The publisher finished before the clients stopped submitting, so
     // the queue has drained past the last publish: from here every
     // response must be on the final version.
-    let resp = engine.submit(input.clone()).unwrap().wait().unwrap();
+    let resp = engine.submit(input).unwrap().wait().unwrap();
     assert_eq!(resp.weights_version, LAST);
     assert_eq!(resp.values, expected[&LAST]);
 
@@ -268,7 +268,7 @@ fn publish_between_reshapes_serves_exact_versions() {
     }
 
     // And back down to a lone request on the new version.
-    let r = engine.submit(input.clone()).unwrap().wait().unwrap();
+    let r = engine.submit(input).unwrap().wait().unwrap();
     assert_eq!((r.weights_version, r.values), (2, e2));
 
     engine.shutdown();

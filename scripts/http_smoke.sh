@@ -3,7 +3,9 @@
 # hit healthz/predict/metrics through the binary's own load-generator
 # path, hot-swap a weight snapshot mid-load (zero failed requests,
 # weights_version must advance), then assert a clean drain on the
-# SIGTERM-equivalent shutdown (POST /admin/shutdown). CI runs this
+# SIGTERM-equivalent shutdown (POST /admin/shutdown). Finally, assert
+# the netlint admission gate: a broken net must be *refused* at serve
+# startup with an NL-coded diagnostic and a non-zero exit. CI runs this
 # after a release build.
 set -euo pipefail
 
@@ -12,7 +14,8 @@ FECAFFE="${FECAFFE:-target/release/fecaffe}"
 LOG="$(mktemp)"
 SNAP="$(mktemp -u).fewts"
 LOADJSON="$(mktemp)"
-trap 'kill "$SERVER_PID" 2>/dev/null || true; rm -f "$LOG" "$SNAP" "$LOADJSON"' EXIT
+BROKEN="$(mktemp)"
+trap 'kill "$SERVER_PID" 2>/dev/null || true; rm -f "$LOG" "$SNAP" "$LOADJSON" "$BROKEN"' EXIT
 
 [ -x "$SERVE" ] || { echo "serve binary not found at $SERVE (set SERVE=...)"; exit 1; }
 [ -x "$FECAFFE" ] || { echo "fecaffe binary not found at $FECAFFE (set FECAFFE=...)"; exit 1; }
@@ -115,4 +118,31 @@ if kill -0 "$SERVER_PID" 2>/dev/null; then
 fi
 wait "$SERVER_PID" || fail "server exited non-zero"
 grep -q "drained clean" "$LOG" || fail "server did not report a clean drain"
+
+# --- Admission lint gate ---------------------------------------------
+# A structurally broken net (dangling bottom on the score path) must be
+# refused at engine admission with an NL-coded netlint diagnostic and a
+# non-zero exit — before any worker, replica, or DDR commitment.
+cat >"$BROKEN" <<'EOF'
+name: "broken"
+layer { name: "data" type: "SyntheticData" top: "data" top: "label"
+        data_param { source: "digits" batch_size: 4 channels: 1 height: 8 width: 8 } }
+layer { name: "fc" type: "InnerProduct" bottom: "missing" top: "fc"
+        inner_product_param { num_output: 3 } }
+layer { name: "loss" type: "SoftmaxWithLoss" bottom: "fc" bottom: "label" top: "loss" }
+EOF
+set +e
+REFUSE_OUT="$("$SERVE" --net "$BROKEN" --workers 1 --requests 1 --clients 1 2>&1)"
+REFUSE_CODE=$?
+set -e
+if [ "$REFUSE_CODE" -eq 0 ]; then
+    echo "$REFUSE_OUT"
+    fail "broken net was admitted (serve exited 0)"
+fi
+echo "$REFUSE_OUT" | grep -q "NL0001" \
+    || { echo "$REFUSE_OUT"; fail "refusal output lacks the NL0001 diagnostic"; }
+echo "$REFUSE_OUT" | grep -q "rejected by netlint" \
+    || { echo "$REFUSE_OUT"; fail "refusal output lacks the netlint rejection message"; }
+echo "admission lint gate: OK (broken net refused with NL0001)"
+
 echo "http smoke: OK"

@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# ThreadSanitizer sweep over the concurrency surfaces:
+#
+#   * util::pool     — work-stealing intra-op pool (property suite)
+#   * serve::queue   — bounded admission queue (MPMC handoff)
+#   * serve::engine  — SharedWeights publish/adopt (RCU-style swap)
+#   * serve::metrics — lock-free serving counters
+#
+# `-Zsanitizer=thread` is nightly-only and needs `-Zbuild-std` so std
+# itself is instrumented (otherwise TSan reports false races inside
+# uninstrumented std synchronization). CI runs this as the nightly
+# `tsan` leg (schedule/workflow_dispatch); locally:
+#
+#   rustup toolchain install nightly --component rust-src
+#   ./scripts/tsan.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+HOST="${HOST_TRIPLE:-x86_64-unknown-linux-gnu}"
+
+if ! cargo +nightly --version >/dev/null 2>&1; then
+    echo "tsan.sh: a rustup-managed nightly toolchain is required (-Zsanitizer=thread)."
+    echo "  rustup toolchain install nightly --component rust-src"
+    exit 2
+fi
+if ! rustup component list --toolchain nightly 2>/dev/null | grep -q 'rust-src.*(installed)'; then
+    echo "tsan.sh: the nightly rust-src component is required (-Zbuild-std)."
+    echo "  rustup component add rust-src --toolchain nightly"
+    exit 2
+fi
+
+export RUSTFLAGS="-Zsanitizer=thread ${RUSTFLAGS:-}"
+# TSan slows execution ~5-15x; pin a small deterministic pool size so
+# the suites stay fast while still exercising cross-thread handoffs.
+export FECAFFE_THREADS="${FECAFFE_THREADS:-4}"
+
+exec cargo +nightly test --lib -Zbuild-std --target "$HOST" -- \
+    util::pool serve::queue serve::engine serve::metrics
