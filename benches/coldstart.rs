@@ -1,0 +1,105 @@
+//! Engine cold-start bench: boot time from a warm AOT plan cache vs
+//! live admission planning, per zoo net, emitting `BENCH_coldstart.json`
+//! — the serving cold-start budget ISSUE 9 asks for. Also times the
+//! one-off `aot build` that materializes the cache.
+//!
+//! `cargo bench --bench coldstart`; `FECAFFE_BENCH_QUICK=1` for the CI
+//! smoke variant (fewer nets, fewer reps).
+
+use fecaffe::aot;
+use fecaffe::serve::{DeviceKind, Engine, EngineConfig};
+use fecaffe::util::json::Json;
+use fecaffe::zoo;
+use std::time::{Duration, Instant};
+
+fn boot_once(
+    param: &fecaffe::proto::NetParameter,
+    max_batch: usize,
+    cache: Option<&std::path::Path>,
+) -> anyhow::Result<(Duration, u64, u64)> {
+    let cfg = EngineConfig {
+        workers: 1,
+        max_batch,
+        max_linger: Duration::from_micros(500),
+        queue_capacity: 64,
+        device: DeviceKind::Cpu,
+        aot_cache: cache.map(std::path::Path::to_path_buf),
+        ..EngineConfig::default()
+    };
+    let t0 = Instant::now();
+    let engine = Engine::new(param, cfg)?;
+    let dt = t0.elapsed();
+    let snap = engine.metrics().snapshot();
+    engine.shutdown();
+    Ok((dt, snap.cache_hit, snap.cache_miss))
+}
+
+fn main() -> anyhow::Result<()> {
+    // The engine-level env fallback must not leak into the "live" legs.
+    std::env::remove_var(aot::AOT_CACHE_ENV);
+    let quick = std::env::var("FECAFFE_BENCH_QUICK")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let nets: &[&str] = if quick {
+        &["lenet", "squeezenet"]
+    } else {
+        &["lenet", "alexnet", "squeezenet", "googlenet", "vgg16"]
+    };
+    let reps = if quick { 2 } else { 3 };
+    let dir = std::env::temp_dir().join(format!("fecaffe_aot_bench_{}", std::process::id()));
+
+    // One-off cache materialization (the offline `fecaffe aot build`).
+    let t0 = Instant::now();
+    let built = aot::build_matrix(&dir, nets)?;
+    let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "aot build: {} container(s), {} plan(s) in {build_ms:.1} ms",
+        built.files.len(),
+        built.plan_count
+    );
+
+    let mut results = Vec::new();
+    for name in nets {
+        let param = zoo::by_name(name, 1)?;
+        // Boot at the net's full serving cap — the worst-case (most
+        // buckets) admission planning load, and what `serve --http`
+        // defaults resemble. Min over reps: boot time is one-shot cost,
+        // so the minimum is the least-noisy estimator.
+        let max_batch = fecaffe::runtime::plan::serve_bucket_cap(name);
+        let mut live = Duration::MAX;
+        let mut warm = Duration::MAX;
+        for _ in 0..reps {
+            let (dt, hit, miss) = boot_once(&param, max_batch, None)?;
+            anyhow::ensure!(hit == 0 && miss == 0, "{name}: live boot touched a cache");
+            live = live.min(dt);
+            let (dt, hit, miss) = boot_once(&param, max_batch, Some(&dir))?;
+            anyhow::ensure!(miss == 0, "{name}: warm-cache boot missed ({miss} miss(es))");
+            anyhow::ensure!(hit > 0, "{name}: warm-cache boot recorded no hits");
+            warm = warm.min(dt);
+        }
+        let (live_ms, warm_ms) = (live.as_secs_f64() * 1e3, warm.as_secs_f64() * 1e3);
+        println!(
+            "{name:>10} (max-batch {max_batch:>2}): live plan {live_ms:>8.2} ms, \
+             cold boot {warm_ms:>8.2} ms ({:+.1}%)",
+            (warm_ms - live_ms) * 100.0 / live_ms.max(1e-9)
+        );
+        let mut o = Json::obj();
+        o.set("net", Json::str(*name));
+        o.set("max_batch", Json::num(max_batch as f64));
+        o.set("live_plan_ms", Json::num(live_ms));
+        o.set("cold_boot_ms", Json::num(warm_ms));
+        results.push(o);
+    }
+
+    let mut root = Json::obj();
+    root.set("bench", Json::str("coldstart"));
+    root.set("quick", Json::Bool(quick));
+    root.set("cache_build_ms", Json::num(build_ms));
+    root.set("cache_containers", Json::num(built.files.len() as f64));
+    root.set("nets", Json::arr(results));
+    std::fs::write("BENCH_coldstart.json", root.to_pretty())?;
+    println!("wrote BENCH_coldstart.json");
+
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

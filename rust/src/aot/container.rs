@@ -1,0 +1,269 @@
+//! The `FEPLAN1` on-disk container: one recorded execution plan per
+//! (net, serving bucket), serialized through [`crate::util::binio`] like
+//! the `FEWSNAP1` weight snapshot — little-endian, length-prefixed
+//! strings, and every length bounded by the file size *before* any
+//! allocation, so corrupt or truncated containers fail with a typed
+//! [`AotError`] instead of an OOM or a panic.
+//!
+//! Field order is fixed by this module (all collections are emitted from
+//! sorted `Vec`s built off `BTreeMap` walks), so the same inputs always
+//! produce byte-identical files — the property the CI `repro` leg
+//! asserts over the whole artifact tree.
+
+use super::{AotError, PlanArtifact, PlanEnvelope};
+use crate::util::binio::{get_str, get_u32, get_u64, put_str, put_u32, put_u64};
+use std::io::Write;
+
+/// 8-byte container magic.
+pub const MAGIC: &[u8; 8] = b"FEPLAN1\0";
+
+/// Bumped whenever the container layout changes; readers refuse other
+/// versions (distinct from [`super::CODE_VERSION`], which keys the
+/// *content* of the plans).
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Shapes are NCHW-ish; anything past this is a corrupt dim count.
+const MAX_DIMS: usize = 16;
+
+/// Serialize `art` in the fixed field order. Infallible layout — any
+/// error is the writer's I/O error.
+pub fn write_artifact(w: &mut impl Write, art: &PlanArtifact) -> std::io::Result<()> {
+    w.write_all(MAGIC)?;
+    put_u32(w, FORMAT_VERSION)?;
+    put_str(w, &art.key)?;
+    let env = &art.envelope;
+    put_str(w, &env.net)?;
+    put_str(w, &env.device)?;
+    put_u32(w, env.code_version)?;
+    put_u64(w, env.bucket as u64)?;
+    put_u64(w, env.sample_len as u64)?;
+    put_u64(w, env.ddr_peak_bytes)?;
+    put_u64(w, env.ddr_capacity_bytes)?;
+    put_u32(w, env.blob_shapes.len() as u32)?;
+    for (name, dims) in &env.blob_shapes {
+        put_str(w, name)?;
+        put_u32(w, dims.len() as u32)?;
+        for &d in dims {
+            put_u64(w, d as u64)?;
+        }
+    }
+    put_u32(w, env.weight_keys.len() as u32)?;
+    for ((owner, slot), len) in env.weight_keys.iter().zip(&env.weight_lens) {
+        put_str(w, owner)?;
+        put_u32(w, *slot as u32)?;
+        put_u64(w, *len as u64)?;
+    }
+    put_u32(w, art.plans.len() as u32)?;
+    for (key, spec) in &art.plans {
+        put_str(w, key)?;
+        put_str(w, spec)?;
+    }
+    Ok(())
+}
+
+/// The container bytes for `art` (what `save` writes and the manifest
+/// hashes).
+pub fn artifact_bytes(art: &PlanArtifact) -> Vec<u8> {
+    let mut buf = Vec::new();
+    write_artifact(&mut buf, art).expect("Vec<u8> writes are infallible");
+    buf
+}
+
+/// Parse a container from its full byte image. `path` labels errors.
+pub fn read_artifact(bytes: &[u8], path: &str) -> Result<PlanArtifact, AotError> {
+    let file_len = bytes.len();
+    let corrupt = |detail: String| AotError::Corrupt { path: path.to_string(), detail };
+    let mut r = bytes;
+
+    let mut magic = [0u8; 8];
+    std::io::Read::read_exact(&mut r, &mut magic)
+        .map_err(|_| corrupt("shorter than the 8-byte magic".to_string()))?;
+    if &magic != MAGIC {
+        return Err(corrupt(format!("bad magic {magic:02x?} (want FEPLAN1)")));
+    }
+    let version = get_u32(&mut r).map_err(|e| corrupt(format!("format version: {e}")))?;
+    if version != FORMAT_VERSION {
+        return Err(corrupt(format!(
+            "container format v{version} (this build reads v{FORMAT_VERSION})"
+        )));
+    }
+
+    let key = get_str(&mut r, file_len).map_err(|e| corrupt(format!("content key: {e}")))?;
+    let net = get_str(&mut r, file_len).map_err(|e| corrupt(format!("net name: {e}")))?;
+    let device = get_str(&mut r, file_len).map_err(|e| corrupt(format!("device config: {e}")))?;
+    let code_version = get_u32(&mut r).map_err(|e| corrupt(format!("code version: {e}")))?;
+    let bucket = get_u64(&mut r).map_err(|e| corrupt(format!("bucket: {e}")))? as usize;
+    let sample_len = get_u64(&mut r).map_err(|e| corrupt(format!("sample_len: {e}")))? as usize;
+    let ddr_peak_bytes =
+        get_u64(&mut r).map_err(|e| corrupt(format!("ddr_peak_bytes: {e}")))?;
+    let ddr_capacity_bytes =
+        get_u64(&mut r).map_err(|e| corrupt(format!("ddr_capacity_bytes: {e}")))?;
+
+    // Each shape record is ≥ 4+4 bytes, each weight ≥ 4+4+8, each plan
+    // ≥ 4+4: counts beyond that are corrupt length prefixes, refused
+    // before any allocation sized by them.
+    let n_shapes = get_u32(&mut r).map_err(|e| corrupt(format!("shape count: {e}")))? as usize;
+    if n_shapes > file_len / 8 {
+        return Err(corrupt(format!("implausible shape count {n_shapes} for {file_len} bytes")));
+    }
+    let mut blob_shapes = Vec::with_capacity(n_shapes);
+    for i in 0..n_shapes {
+        let name =
+            get_str(&mut r, file_len).map_err(|e| corrupt(format!("shape {i} name: {e}")))?;
+        let ndim = get_u32(&mut r).map_err(|e| corrupt(format!("shape {i} ndim: {e}")))? as usize;
+        if ndim > MAX_DIMS {
+            return Err(corrupt(format!("shape '{name}' claims {ndim} dims (max {MAX_DIMS})")));
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        for d in 0..ndim {
+            dims.push(
+                get_u64(&mut r).map_err(|e| corrupt(format!("shape '{name}' dim {d}: {e}")))?
+                    as usize,
+            );
+        }
+        blob_shapes.push((name, dims));
+    }
+
+    let n_weights =
+        get_u32(&mut r).map_err(|e| corrupt(format!("weight count: {e}")))? as usize;
+    if n_weights > file_len / 16 {
+        return Err(corrupt(format!(
+            "implausible weight count {n_weights} for {file_len} bytes"
+        )));
+    }
+    let mut weight_keys = Vec::with_capacity(n_weights);
+    let mut weight_lens = Vec::with_capacity(n_weights);
+    for i in 0..n_weights {
+        let owner =
+            get_str(&mut r, file_len).map_err(|e| corrupt(format!("weight {i} owner: {e}")))?;
+        let slot =
+            get_u32(&mut r).map_err(|e| corrupt(format!("weight {i} slot: {e}")))? as usize;
+        let len = get_u64(&mut r).map_err(|e| corrupt(format!("weight {i} len: {e}")))? as usize;
+        weight_keys.push((owner, slot));
+        weight_lens.push(len);
+    }
+
+    let n_plans = get_u32(&mut r).map_err(|e| corrupt(format!("plan count: {e}")))? as usize;
+    if n_plans > file_len / 8 {
+        return Err(corrupt(format!("implausible plan count {n_plans} for {file_len} bytes")));
+    }
+    let mut plans = Vec::with_capacity(n_plans);
+    for i in 0..n_plans {
+        let k = get_str(&mut r, file_len).map_err(|e| corrupt(format!("plan {i} key: {e}")))?;
+        let spec =
+            get_str(&mut r, file_len).map_err(|e| corrupt(format!("plan '{k}' spec: {e}")))?;
+        plans.push((k, spec));
+    }
+
+    if !r.is_empty() {
+        return Err(corrupt(format!("{} trailing byte(s) after the last plan", r.len())));
+    }
+
+    Ok(PlanArtifact {
+        key,
+        envelope: PlanEnvelope {
+            net,
+            device,
+            code_version,
+            bucket,
+            sample_len,
+            ddr_peak_bytes,
+            ddr_capacity_bytes,
+            blob_shapes,
+            weight_keys,
+            weight_lens,
+        },
+        plans,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_artifact() -> PlanArtifact {
+        PlanArtifact {
+            key: "ab".repeat(32),
+            envelope: PlanEnvelope {
+                net: "LeNet_deploy".to_string(),
+                device: "board:ddr=2147483648".to_string(),
+                code_version: 1,
+                bucket: 4,
+                sample_len: 784,
+                ddr_peak_bytes: 123_456,
+                ddr_capacity_bytes: 2_147_483_648,
+                blob_shapes: vec![
+                    ("conv1".to_string(), vec![4, 20, 24, 24]),
+                    ("data".to_string(), vec![4, 1, 28, 28]),
+                ],
+                weight_keys: vec![("conv1".to_string(), 0), ("conv1".to_string(), 1)],
+                weight_lens: vec![500, 20],
+            },
+            plans: vec![
+                ("gemm_nn_20x25x576".to_string(), "{\"op\": \"gemm_nn\"}".to_string()),
+                ("relu_f_512".to_string(), "{\"op\": \"relu_f\"}".to_string()),
+            ],
+        }
+    }
+
+    #[test]
+    fn round_trips_and_is_byte_deterministic() {
+        let art = sample_artifact();
+        let a = artifact_bytes(&art);
+        let b = artifact_bytes(&art);
+        assert_eq!(a, b, "same artifact → same bytes");
+        let back = read_artifact(&a, "test.feplan").unwrap();
+        assert_eq!(back.key, art.key);
+        assert_eq!(back.envelope, art.envelope);
+        assert_eq!(back.plans, art.plans);
+    }
+
+    #[test]
+    fn refuses_bad_magic_and_version() {
+        let mut bytes = artifact_bytes(&sample_artifact());
+        bytes[0] = b'X';
+        let err = read_artifact(&bytes, "p").unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+        let mut bytes = artifact_bytes(&sample_artifact());
+        bytes[8] = 99; // format version LE byte 0
+        let err = read_artifact(&bytes, "p").unwrap_err();
+        assert!(err.to_string().contains("format v99"), "{err}");
+    }
+
+    #[test]
+    fn refuses_truncation_at_every_length() {
+        let bytes = artifact_bytes(&sample_artifact());
+        // Every strict prefix must fail typed — never panic, never parse.
+        for cut in 0..bytes.len() {
+            let err = read_artifact(&bytes[..cut], "p").unwrap_err();
+            assert!(
+                matches!(err, AotError::Corrupt { .. }),
+                "cut at {cut} gave {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn refuses_trailing_garbage() {
+        let mut bytes = artifact_bytes(&sample_artifact());
+        bytes.push(0);
+        let err = read_artifact(&bytes, "p").unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn bounds_counts_before_allocating() {
+        let art = sample_artifact();
+        let bytes = artifact_bytes(&art);
+        // Find the shape-count u32 and replace it with a huge value: the
+        // reader must refuse on plausibility, not try to allocate.
+        let key_end = 8 + 4 + 4 + art.key.len();
+        let net_end = key_end + 4 + art.envelope.net.len();
+        let dev_end = net_end + 4 + art.envelope.device.len();
+        let shape_count_at = dev_end + 4 + 8 * 4;
+        let mut evil = bytes.clone();
+        evil[shape_count_at..shape_count_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_artifact(&evil, "p").unwrap_err();
+        assert!(err.to_string().contains("implausible shape count"), "{err}");
+    }
+}

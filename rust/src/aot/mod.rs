@@ -1,0 +1,718 @@
+//! Content-addressed AOT plan cache: build, verify and cold-boot the
+//! zoo × serving-bucket execution-plan matrix.
+//!
+//! The paper's deployment story compiles kernels and network plans
+//! ahead of time and reuses them across runs; this module is that story
+//! for the simulated stack. `fecaffe aot build` records every zoo net's
+//! deploy forward at every serving bucket ([`crate::runtime::recording`])
+//! and serializes the recorded plans plus a *plan envelope* — blob
+//! shapes, the netlint memory pass's DDR peak, the weights schema — into
+//! deterministic [`container`] files keyed by a content hash of
+//! (canonical net schema, bucket, device config, code version) over
+//! [`crate::util::sha256`]. `Engine::new` cold-boots from the cache:
+//! when every bucket's artifact loads and its envelope validates against
+//! the live net and board, the engine skips live admission planning
+//! entirely; any mismatch is a typed [`AotError`] (mirroring
+//! [`crate::netlint::LintError`]) that demotes the boot to the live path
+//! and shows up as a `cache_miss` in `/metrics` — never a panic, never a
+//! silently wrong plan.
+//!
+//! Cache layout under a cache directory:
+//!
+//! ```text
+//! <dir>/lenet_deploy/bucket_001.feplan      one FEPLAN1 container per
+//! <dir>/lenet_deploy/bucket_002.feplan      (net, bucket)
+//! <dir>/...
+//! <dir>/MANIFEST.sha256                     "<sha256>  <relpath>" lines
+//! ```
+//!
+//! Two builds of the same commit produce byte-identical trees (the CI
+//! `repro` leg diffs the manifests); `fecaffe aot verify` re-derives
+//! every content key from the live zoo and checks the manifest hashes.
+
+pub mod container;
+
+use crate::device::fpga::costmodel::BoardParams;
+use crate::net::Net;
+use crate::netlint::{infer_shapes, lint_net, LintError, LintOptions};
+use crate::proto::{NetParameter, Phase};
+use crate::runtime::plan::{serve_bucket_cap, serve_buckets};
+use crate::runtime::recording::RecordingDevice;
+use crate::util::sha256;
+use crate::zoo::{self, DeployNet};
+use std::path::{Path, PathBuf};
+
+/// Version of the plan-producing code paths (recording, bucket policy,
+/// kernel keys). Bump on any change that alters recorded plans for an
+/// unchanged net, so stale caches key-miss instead of validating.
+pub const CODE_VERSION: u32 = 1;
+
+/// Environment variable naming the cache directory when
+/// `EngineConfig::aot_cache` is unset. There is deliberately no
+/// cwd-relative probing: a cache must be asked for explicitly, so tests
+/// and benches never pick one up by accident.
+pub const AOT_CACHE_ENV: &str = "FECAFFE_AOT_CACHE";
+
+/// Checksum manifest filename at the cache root.
+pub const MANIFEST_NAME: &str = "MANIFEST.sha256";
+
+// ---------------------------------------------------------------- errors
+
+/// Typed cache-validation failure, mirroring [`LintError`]: stable
+/// `AOTxxxx` codes, a one-line `Display` that reads well in an `anyhow`
+/// chain, and enough structure for callers to test each failure class.
+/// Every variant demotes a cold boot to live planning — none is fatal.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AotError {
+    /// No artifact at the expected logical path.
+    Missing { path: String },
+    /// Container bytes unreadable: bad magic, truncation, implausible
+    /// counts, trailing garbage, checksum mismatch.
+    Corrupt { path: String, detail: String },
+    /// Content key mismatch — the net schema, bucket policy, device
+    /// config or code version changed under the same logical path.
+    StaleKey { path: String, expected: String, found: String },
+    /// Container parsed and the key matched, but an envelope field
+    /// contradicts the live net/device (wrong bucket, DDR budget,
+    /// sample length, weights schema).
+    EnvelopeMismatch { path: String, detail: String },
+}
+
+impl AotError {
+    /// Stable grep-able code, in the `NLxxxx` style.
+    pub fn code(&self) -> &'static str {
+        match self {
+            AotError::Missing { .. } => "AOT0001",
+            AotError::Corrupt { .. } => "AOT0002",
+            AotError::StaleKey { .. } => "AOT0003",
+            AotError::EnvelopeMismatch { .. } => "AOT0004",
+        }
+    }
+}
+
+impl std::fmt::Display for AotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AotError::Missing { path } => {
+                write!(f, "aot[AOT0001]: no cached plan at '{path}'")
+            }
+            AotError::Corrupt { path, detail } => {
+                write!(f, "aot[AOT0002]: corrupt plan container '{path}': {detail}")
+            }
+            AotError::StaleKey { path, expected, found } => write!(
+                f,
+                "aot[AOT0003]: stale plan '{path}': content key {} does not match live {} \
+                 (net schema, bucket policy or code version changed — rebuild the cache)",
+                &found[..found.len().min(12)],
+                &expected[..expected.len().min(12)],
+            ),
+            AotError::EnvelopeMismatch { path, detail } => {
+                write!(f, "aot[AOT0004]: plan envelope mismatch in '{path}': {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AotError {}
+
+// ------------------------------------------------------------- artifacts
+
+/// Everything the engine must re-validate before trusting cached plans:
+/// the live-net facts the plans were derived from, in fully-ordered
+/// fields (sorted `Vec`s, no map iteration order anywhere).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanEnvelope {
+    /// Deploy net name (e.g. `LeNet_deploy`).
+    pub net: String,
+    /// Device-config string the DDR checks ran against
+    /// ([`device_config`]).
+    pub device: String,
+    pub code_version: u32,
+    /// Serving bucket these plans execute at.
+    pub bucket: usize,
+    /// Elements per input sample (C·H·W) — must match the live deploy.
+    pub sample_len: usize,
+    /// The netlint memory pass's estimated DDR footprint at this bucket.
+    pub ddr_peak_bytes: u64,
+    /// Board capacity the fit check used.
+    pub ddr_capacity_bytes: u64,
+    /// Inferred blob shapes at this bucket, sorted by blob name.
+    pub blob_shapes: Vec<(String, Vec<usize>)>,
+    /// Weights schema: (owner layer, slot) identity keys in snapshot
+    /// order, with per-blob element counts alongside.
+    pub weight_keys: Vec<(String, usize)>,
+    pub weight_lens: Vec<usize>,
+}
+
+/// One cached plan: the content key it was built under, the envelope,
+/// and the recorded (kernel key → lowering spec JSON) plans sorted by
+/// kernel key.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanArtifact {
+    pub key: String,
+    pub envelope: PlanEnvelope,
+    pub plans: Vec<(String, String)>,
+}
+
+// ----------------------------------------------------------- key scheme
+
+/// Canonical net schema for content addressing: the prototxt emission of
+/// the deploy param with the input batch dimension normalized to 1, so a
+/// replica built at `max_batch` and a cache built per bucket derive the
+/// *same* schema text (the bucket enters the key as its own field).
+pub fn canonical_schema(param: &NetParameter) -> String {
+    let mut p = param.clone();
+    if let Some(input) = p.inputs.first_mut() {
+        input.1[0] = 1;
+    }
+    crate::proto::emit::emit_net(&p)
+}
+
+/// Device-config component of the content key. Plans are device-kind
+/// independent (the same kernel keys serve CPU and FPGA-sim workers);
+/// what they *do* depend on is the board the DDR-fit envelope was
+/// checked against.
+pub fn device_config(board: &BoardParams) -> String {
+    format!("board:ddr={}", board.ddr_capacity_bytes)
+}
+
+/// SHA-256 content key over (canonical schema, bucket, device config,
+/// code version). Fields are length-framed so no concatenation of
+/// different inputs can collide.
+pub fn content_key(schema: &str, bucket: usize, device_cfg: &str, code_version: u32) -> String {
+    let mut h = sha256::Sha256::new();
+    for field in [
+        "feplan-key-v1",
+        schema,
+        &bucket.to_string(),
+        device_cfg,
+        &code_version.to_string(),
+    ] {
+        h.update(&(field.len() as u64).to_le_bytes());
+        h.update(field.as_bytes());
+    }
+    sha256::to_hex(&h.finalize())
+}
+
+/// Logical path of a (net, bucket) artifact relative to the cache root.
+pub fn plan_rel_path(net_name: &str, bucket: usize) -> String {
+    let dir: String = net_name
+        .chars()
+        .map(|c| {
+            let c = c.to_ascii_lowercase();
+            if c.is_ascii_alphanumeric() { c } else { '_' }
+        })
+        .collect();
+    format!("{dir}/bucket_{bucket:03}.feplan")
+}
+
+/// Cache directory from the environment (`FECAFFE_AOT_CACHE`), if set.
+pub fn env_cache_dir() -> Option<PathBuf> {
+    std::env::var(AOT_CACHE_ENV).ok().filter(|s| !s.is_empty()).map(PathBuf::from)
+}
+
+// ---------------------------------------------------------------- build
+
+/// Record one deploy net's forward at `bucket` and assemble the artifact.
+/// Lints first with the same options engine admission uses — a net that
+/// would be refused live is refused here too, so a cache can never admit
+/// what live planning would not.
+pub fn build_plan(
+    dep: &DeployNet,
+    bucket: usize,
+    board: &BoardParams,
+) -> anyhow::Result<PlanArtifact> {
+    let lint = lint_net(
+        &dep.param,
+        &LintOptions {
+            phase: Phase::Test,
+            buckets: vec![bucket],
+            forward_only: true,
+            board: board.clone(),
+            ..Default::default()
+        },
+    );
+    if lint.has_errors() {
+        return Err(anyhow::Error::new(LintError::new(lint))
+            .context(format!("refusing to cache plans for bucket {bucket}")));
+    }
+    let mem = lint
+        .memory
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("netlint produced no memory report for bucket {bucket}"))?;
+
+    let mut dev = RecordingDevice::new(false);
+    let mut net = Net::from_param(&dep.param, Phase::Test, &mut dev)?;
+    let weights = net.share_weights(&mut dev);
+    net.forward(&mut dev)?;
+
+    let shapes = infer_shapes(&dep.param, Phase::Test, Some(bucket))?;
+    Ok(PlanArtifact {
+        key: content_key(
+            &canonical_schema(&dep.param),
+            bucket,
+            &device_config(board),
+            CODE_VERSION,
+        ),
+        envelope: PlanEnvelope {
+            net: dep.param.name.clone(),
+            device: device_config(board),
+            code_version: CODE_VERSION,
+            bucket,
+            sample_len: dep.sample_len,
+            ddr_peak_bytes: mem.total_bytes,
+            ddr_capacity_bytes: mem.ddr_capacity_bytes,
+            blob_shapes: shapes.into_iter().collect(),
+            weight_keys: weights.keys().to_vec(),
+            weight_lens: weights.blob_lens(),
+        },
+        plans: dev.spec_entries(),
+    })
+}
+
+/// What `build_matrix` materialized.
+pub struct BuildReport {
+    /// `(relpath, sha256)` per written container, sorted by relpath —
+    /// exactly the `MANIFEST.sha256` content.
+    pub files: Vec<(String, String)>,
+    /// Total recorded (kernel, spec) plans across all containers.
+    pub plan_count: usize,
+}
+
+/// Build the full `nets` × serving-bucket matrix into `dir` and write
+/// the checksum manifest. Deterministic: same commit, same bytes.
+pub fn build_matrix(dir: &Path, nets: &[&str]) -> anyhow::Result<BuildReport> {
+    let mut files = Vec::new();
+    let mut plan_count = 0usize;
+    for name in nets {
+        for bucket in serve_buckets(serve_bucket_cap(name)) {
+            let dep = zoo::deploy_by_name(name, bucket)?;
+            let art = build_plan(&dep, bucket, &BoardParams::default())
+                .map_err(|e| e.context(format!("building {name} at bucket {bucket}")))?;
+            plan_count += art.plans.len();
+            let rel = plan_rel_path(&art.envelope.net, bucket);
+            let bytes = container::artifact_bytes(&art);
+            let path = dir.join(&rel);
+            if let Some(parent) = path.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(&path, &bytes)?;
+            files.push((rel, sha256::hex_digest(&bytes)));
+        }
+    }
+    files.sort();
+    let mut manifest = String::new();
+    for (rel, hash) in &files {
+        manifest.push_str(&format!("{hash}  {rel}\n"));
+    }
+    std::fs::write(dir.join(MANIFEST_NAME), manifest)?;
+    Ok(BuildReport { files, plan_count })
+}
+
+// --------------------------------------------------------------- verify
+
+/// What `verify_matrix` checked.
+pub struct VerifyReport {
+    pub files: usize,
+    pub plan_count: usize,
+    pub total_bytes: u64,
+}
+
+/// Parse a `MANIFEST.sha256` body into sorted `(relpath, sha256)` pairs.
+pub fn parse_manifest(text: &str) -> anyhow::Result<Vec<(String, String)>> {
+    let mut entries = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (hash, rel) = line
+            .split_once("  ")
+            .ok_or_else(|| anyhow::anyhow!("manifest line {}: not '<sha256>  <path>'", i + 1))?;
+        anyhow::ensure!(
+            hash.len() == 64 && hash.chars().all(|c| c.is_ascii_hexdigit()),
+            "manifest line {}: '{hash}' is not a sha256 digest",
+            i + 1
+        );
+        entries.push((rel.to_string(), hash.to_string()));
+    }
+    entries.sort();
+    Ok(entries)
+}
+
+/// Verify the `nets` × bucket matrix in `dir`: the manifest covers
+/// exactly the expected files, every file's bytes match its manifest
+/// digest, every container parses, and every content key and envelope
+/// re-validates against the *live* zoo at that bucket. Errors carry the
+/// typed [`AotError`] in their chain.
+pub fn verify_matrix(dir: &Path, nets: &[&str]) -> anyhow::Result<VerifyReport> {
+    let manifest_path = dir.join(MANIFEST_NAME);
+    let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+        anyhow::anyhow!("{}: {e} (run `fecaffe aot build` first)", manifest_path.display())
+    })?;
+    let entries = parse_manifest(&text)?;
+    let board = BoardParams::default();
+
+    let mut expected = Vec::new();
+    for name in nets {
+        let dep1 = zoo::deploy_by_name(name, 1)?;
+        for bucket in serve_buckets(serve_bucket_cap(name)) {
+            expected.push((plan_rel_path(&dep1.param.name, bucket), dep1.param.clone(), bucket));
+        }
+    }
+
+    let by_rel: std::collections::BTreeMap<&str, &str> =
+        entries.iter().map(|(r, h)| (r.as_str(), h.as_str())).collect();
+    for (rel, _, _) in &expected {
+        if !by_rel.contains_key(rel.as_str()) {
+            return Err(anyhow::Error::new(AotError::Missing { path: rel.clone() })
+                .context("manifest does not cover the expected matrix"));
+        }
+    }
+    let expected_rels: std::collections::BTreeSet<&str> =
+        expected.iter().map(|(r, _, _)| r.as_str()).collect();
+    for (rel, _) in &entries {
+        anyhow::ensure!(
+            expected_rels.contains(rel.as_str()),
+            "manifest names '{rel}', which is not in the {} × bucket matrix",
+            nets.join(",")
+        );
+    }
+
+    let mut plan_count = 0usize;
+    let mut total_bytes = 0u64;
+    for (rel, param, bucket) in &expected {
+        let path = dir.join(rel);
+        let bytes = std::fs::read(&path)
+            .map_err(|_| anyhow::Error::new(AotError::Missing { path: rel.clone() }))?;
+        let digest = sha256::hex_digest(&bytes);
+        if digest != by_rel[rel.as_str()] {
+            return Err(anyhow::Error::new(AotError::Corrupt {
+                path: rel.clone(),
+                detail: format!(
+                    "sha256 {} does not match manifest {}",
+                    &digest[..12],
+                    &by_rel[rel.as_str()][..12]
+                ),
+            }));
+        }
+        let art = container::read_artifact(&bytes, rel).map_err(anyhow::Error::new)?;
+        let expected_key =
+            content_key(&canonical_schema(param), *bucket, &device_config(&board), CODE_VERSION);
+        validate_artifact(&art, &expected_key, *bucket, &board, rel).map_err(anyhow::Error::new)?;
+        plan_count += art.plans.len();
+        total_bytes += bytes.len() as u64;
+    }
+    Ok(VerifyReport { files: expected.len(), plan_count, total_bytes })
+}
+
+/// Delete a cache directory. Refuses directories without a
+/// `MANIFEST.sha256` (they are probably not a plan cache).
+pub fn clean(dir: &Path) -> anyhow::Result<bool> {
+    if !dir.exists() {
+        return Ok(false);
+    }
+    anyhow::ensure!(
+        dir.join(MANIFEST_NAME).is_file(),
+        "refusing to delete '{}': no {MANIFEST_NAME} — not an aot cache?",
+        dir.display()
+    );
+    std::fs::remove_dir_all(dir)?;
+    Ok(true)
+}
+
+// ------------------------------------------------------------ validation
+
+/// Validate a parsed artifact against the live expectations: content
+/// key, bucket, code version, and the DDR envelope. Weights-schema
+/// validation happens separately ([`validate_weights`]) because the live
+/// schema only exists once a master replica is built.
+pub fn validate_artifact(
+    art: &PlanArtifact,
+    expected_key: &str,
+    bucket: usize,
+    board: &BoardParams,
+    path: &str,
+) -> Result<(), AotError> {
+    if art.key != expected_key {
+        return Err(AotError::StaleKey {
+            path: path.to_string(),
+            expected: expected_key.to_string(),
+            found: art.key.clone(),
+        });
+    }
+    let env = &art.envelope;
+    let mismatch = |detail: String| AotError::EnvelopeMismatch { path: path.to_string(), detail };
+    if env.code_version != CODE_VERSION {
+        return Err(mismatch(format!(
+            "plan code version {} (this build is {CODE_VERSION})",
+            env.code_version
+        )));
+    }
+    if env.bucket != bucket {
+        return Err(mismatch(format!("envelope is for bucket {}, wanted {bucket}", env.bucket)));
+    }
+    if env.ddr_capacity_bytes != board.ddr_capacity_bytes {
+        return Err(mismatch(format!(
+            "DDR budget checked against {} bytes, live board has {}",
+            env.ddr_capacity_bytes, board.ddr_capacity_bytes
+        )));
+    }
+    if env.ddr_peak_bytes > env.ddr_capacity_bytes {
+        return Err(mismatch(format!(
+            "recorded DDR peak {} exceeds capacity {}",
+            env.ddr_peak_bytes, env.ddr_capacity_bytes
+        )));
+    }
+    Ok(())
+}
+
+/// Validate a cached envelope's weights schema against the live master
+/// replica's snapshot (identity keys and element counts).
+pub fn validate_weights(
+    art: &PlanArtifact,
+    keys: &[(String, usize)],
+    lens: &[usize],
+    path: &str,
+) -> Result<(), AotError> {
+    let env = &art.envelope;
+    if env.weight_keys != keys || env.weight_lens != lens {
+        let divergence = env
+            .weight_keys
+            .iter()
+            .zip(keys)
+            .position(|(a, b)| a != b)
+            .unwrap_or_else(|| env.weight_keys.len().min(keys.len()));
+        return Err(AotError::EnvelopeMismatch {
+            path: path.to_string(),
+            detail: format!(
+                "weights schema: cached {} blob(s), live net has {} (first divergence at {})",
+                env.weight_keys.len(),
+                keys.len(),
+                divergence
+            ),
+        });
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- cold boot
+
+/// Result of an engine cold-boot attempt over a cache directory.
+pub struct ColdBoot {
+    /// Per-bucket artifacts that loaded *and* validated.
+    pub hits: Vec<(usize, PlanArtifact)>,
+    /// One typed error per bucket that did not.
+    pub errors: Vec<AotError>,
+    /// Set by [`ColdBoot::demote`]: a post-load check (weights schema)
+    /// failed, so the boot fell back to live planning after the fact.
+    demoted: bool,
+}
+
+impl ColdBoot {
+    /// The no-cache-configured outcome: nothing attempted, no misses.
+    pub fn disabled() -> ColdBoot {
+        ColdBoot { hits: Vec::new(), errors: Vec::new(), demoted: false }
+    }
+
+    /// Every requested bucket validated — live planning can be skipped.
+    pub fn complete(&self) -> bool {
+        !self.hits.is_empty() && self.errors.is_empty() && !self.demoted
+    }
+
+    /// Record a post-load validation failure and fall back.
+    pub fn demote(&mut self, err: AotError) {
+        self.demoted = true;
+        self.errors.push(err);
+    }
+
+    pub fn hit_count(&self) -> u64 {
+        if self.complete() {
+            self.hits.len() as u64
+        } else {
+            0
+        }
+    }
+
+    pub fn miss_count(&self) -> u64 {
+        self.errors.len() as u64
+    }
+}
+
+/// Attempt to cold-boot `dep` from `dir` at every serving bucket. Each
+/// bucket either contributes a validated artifact or a typed error; the
+/// caller decides (all-or-nothing) whether live planning can be skipped.
+pub fn cold_boot(dir: &Path, dep: &DeployNet, buckets: &[usize], board: &BoardParams) -> ColdBoot {
+    let schema = canonical_schema(&dep.param);
+    let devcfg = device_config(board);
+    let mut boot = ColdBoot::disabled();
+    for &bucket in buckets {
+        let rel = plan_rel_path(&dep.param.name, bucket);
+        let path = dir.join(&rel);
+        let label = path.display().to_string();
+        let result = (|| -> Result<PlanArtifact, AotError> {
+            let bytes = std::fs::read(&path)
+                .map_err(|_| AotError::Missing { path: label.clone() })?;
+            let art = container::read_artifact(&bytes, &label)?;
+            let expected = content_key(&schema, bucket, &devcfg, CODE_VERSION);
+            validate_artifact(&art, &expected, bucket, board, &label)?;
+            if art.envelope.sample_len != dep.sample_len {
+                return Err(AotError::EnvelopeMismatch {
+                    path: label.clone(),
+                    detail: format!(
+                        "sample_len {} cached, live deploy needs {}",
+                        art.envelope.sample_len, dep.sample_len
+                    ),
+                });
+            }
+            Ok(art)
+        })();
+        match result {
+            Ok(art) => boot.hits.push((bucket, art)),
+            Err(e) => boot.errors.push(e),
+        }
+    }
+    boot
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn content_key_is_stable_and_input_sensitive() {
+        let dep = zoo::deploy_by_name("lenet", 4).unwrap();
+        let schema = canonical_schema(&dep.param);
+        let dev = device_config(&BoardParams::default());
+        let k1 = content_key(&schema, 4, &dev, CODE_VERSION);
+        let k2 = content_key(&schema, 4, &dev, CODE_VERSION);
+        assert_eq!(k1, k2);
+        assert_eq!(k1.len(), 64);
+        // Each key component changes the digest.
+        assert_ne!(k1, content_key(&schema, 8, &dev, CODE_VERSION));
+        assert_ne!(k1, content_key(&schema, 4, "board:ddr=1", CODE_VERSION));
+        assert_ne!(k1, content_key(&schema, 4, &dev, CODE_VERSION + 1));
+        assert_ne!(k1, content_key(&format!("{schema} "), 4, &dev, CODE_VERSION));
+    }
+
+    #[test]
+    fn canonical_schema_is_batch_invariant() {
+        // A replica deployed at max_batch and a cache built per bucket
+        // must agree on the schema text — the whole point of
+        // normalizing the input batch dimension.
+        let at2 = canonical_schema(&zoo::deploy_by_name("lenet", 2).unwrap().param);
+        let at32 = canonical_schema(&zoo::deploy_by_name("lenet", 32).unwrap().param);
+        assert_eq!(at2, at32);
+        // But different nets differ.
+        let squeeze = canonical_schema(&zoo::deploy_by_name("squeezenet", 2).unwrap().param);
+        assert_ne!(at2, squeeze);
+    }
+
+    #[test]
+    fn rel_paths_are_sanitized_and_bucket_ordered() {
+        assert_eq!(plan_rel_path("LeNet_deploy", 1), "lenet_deploy/bucket_001.feplan");
+        assert_eq!(plan_rel_path("LeNet_deploy", 32), "lenet_deploy/bucket_032.feplan");
+        assert_eq!(plan_rel_path("weird name!", 2), "weird_name_/bucket_002.feplan");
+        // Zero-padding keeps lexicographic order == numeric order for
+        // every bucket the zoo can serve.
+        let mut rels: Vec<String> =
+            serve_buckets(32).iter().map(|&b| plan_rel_path("x", b)).collect();
+        let sorted = rels.clone();
+        rels.sort();
+        assert_eq!(rels, sorted);
+    }
+
+    #[test]
+    fn build_plan_records_envelope_and_plans() {
+        let dep = zoo::deploy_by_name("lenet", 2).unwrap();
+        let art = build_plan(&dep, 2, &BoardParams::default()).unwrap();
+        assert_eq!(art.envelope.net, "LeNet_deploy");
+        assert_eq!(art.envelope.bucket, 2);
+        assert_eq!(art.envelope.sample_len, 784);
+        assert!(art.envelope.ddr_peak_bytes > 0);
+        assert!(art.envelope.ddr_peak_bytes <= art.envelope.ddr_capacity_bytes);
+        assert!(!art.envelope.weight_keys.is_empty());
+        assert_eq!(art.envelope.weight_keys.len(), art.envelope.weight_lens.len());
+        // Plans are sorted by kernel key and include the conv1 gemm.
+        let keys: Vec<&str> = art.plans.iter().map(|(k, _)| k.as_str()).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted);
+        assert!(keys.contains(&"gemm_nn_20x25x576"), "{keys:?}");
+        // Shapes are sorted by blob name and batch-scaled.
+        let names: Vec<&str> = art.envelope.blob_shapes.iter().map(|(n, _)| n.as_str()).collect();
+        let mut snames = names.clone();
+        snames.sort_unstable();
+        assert_eq!(names, snames);
+        let data = art.envelope.blob_shapes.iter().find(|(n, _)| n == "data").unwrap();
+        assert_eq!(data.1, vec![2, 1, 28, 28]);
+    }
+
+    #[test]
+    fn build_plan_is_deterministic() {
+        let dep = zoo::deploy_by_name("lenet", 2).unwrap();
+        let a = container::artifact_bytes(&build_plan(&dep, 2, &BoardParams::default()).unwrap());
+        let b = container::artifact_bytes(&build_plan(&dep, 2, &BoardParams::default()).unwrap());
+        assert_eq!(a, b, "two independent builds must be byte-identical");
+    }
+
+    #[test]
+    fn validate_artifact_flags_each_mismatch_as_typed_error() {
+        let board = BoardParams::default();
+        let dep = zoo::deploy_by_name("lenet", 2).unwrap();
+        let art = build_plan(&dep, 2, &board).unwrap();
+        let key = art.key.clone();
+        assert!(validate_artifact(&art, &key, 2, &board, "p").is_ok());
+
+        // Stale key.
+        let err = validate_artifact(&art, "0".repeat(64).as_str(), 2, &board, "p").unwrap_err();
+        assert_eq!(err.code(), "AOT0003");
+        assert!(err.to_string().contains("stale plan"), "{err}");
+
+        // Wrong bucket (tamper the envelope; key check must be bypassed
+        // with the artifact's own key to reach the envelope check).
+        let mut tampered = art.clone();
+        tampered.envelope.bucket = 4;
+        let err = validate_artifact(&tampered, &key, 2, &board, "p").unwrap_err();
+        assert_eq!(err.code(), "AOT0004");
+        assert!(err.to_string().contains("bucket 4"), "{err}");
+
+        // Wrong DDR budget.
+        let mut tampered = art.clone();
+        tampered.envelope.ddr_capacity_bytes = 1;
+        let err = validate_artifact(&tampered, &key, 2, &board, "p").unwrap_err();
+        assert_eq!(err.code(), "AOT0004");
+        assert!(err.to_string().contains("DDR budget"), "{err}");
+
+        // Peak exceeding capacity.
+        let mut tampered = art.clone();
+        tampered.envelope.ddr_peak_bytes = tampered.envelope.ddr_capacity_bytes + 1;
+        let err = validate_artifact(&tampered, &key, 2, &board, "p").unwrap_err();
+        assert_eq!(err.code(), "AOT0004");
+
+        // Wrong code version.
+        let mut tampered = art.clone();
+        tampered.envelope.code_version = CODE_VERSION + 1;
+        let err = validate_artifact(&tampered, &key, 2, &board, "p").unwrap_err();
+        assert_eq!(err.code(), "AOT0004");
+
+        // Wrong weights schema.
+        let err = validate_weights(&art, &[("nope".to_string(), 0)], &[1], "p").unwrap_err();
+        assert_eq!(err.code(), "AOT0004");
+        assert!(err.to_string().contains("weights schema"), "{err}");
+        let lens = art.envelope.weight_lens.clone();
+        assert!(validate_weights(&art, &art.envelope.weight_keys, &lens, "p").is_ok());
+    }
+
+    #[test]
+    fn manifest_parses_and_rejects_junk() {
+        let good = "0123456789abcdef0123456789abcdef0123456789abcdef0123456789abcdef  a/b.feplan\n";
+        let entries = parse_manifest(good).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].0, "a/b.feplan");
+        assert!(parse_manifest("not-a-digest  x\n").is_err());
+        assert!(parse_manifest("0123  x\n").is_err());
+        assert!(parse_manifest("deadbeef\n").is_err());
+        assert!(parse_manifest("\n\n").unwrap().is_empty());
+    }
+}

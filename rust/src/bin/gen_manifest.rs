@@ -6,9 +6,10 @@
 
 use fecaffe::net::Net;
 use fecaffe::proto::Phase;
-use fecaffe::runtime::plan::{serve_bucket_cap, serve_buckets};
+use fecaffe::runtime::plan::serve_matrix;
 use fecaffe::runtime::recording::RecordingDevice;
 use fecaffe::solver::Solver;
+use fecaffe::util::sha256;
 use fecaffe::zoo;
 
 fn record_net(
@@ -86,12 +87,12 @@ fn main() -> anyhow::Result<()> {
     // engine reshapes each worker's replica to *bucketed* batch sizes
     // (`runtime::plan::batch_bucket`), so an `xla`-featured build needs
     // artifacts for every bucket a worker can execute, not just the
-    // batch-1 zoo shapes above. The per-net caps and the bucket walk
-    // live in `runtime::plan` (`serve_bucket_cap`/`serve_buckets`) so
-    // the manifest, `fecaffe lint`, and engine admission all check the
-    // same shapes.
-    for name in ["lenet", "alexnet", "squeezenet", "googlenet", "vgg16"] {
-        for b in serve_buckets(serve_bucket_cap(name)) {
+    // batch-1 zoo shapes above. The zoo × bucket walk is
+    // `runtime::plan::serve_matrix()` — the same matrix `fecaffe lint`,
+    // engine admission and the `fecaffe aot` artifact cache enumerate,
+    // so every consumer checks the same shapes.
+    for (name, buckets) in serve_matrix() {
+        for b in buckets {
             record_deploy(&mut rec, name, b)?;
         }
     }
@@ -100,11 +101,23 @@ fn main() -> anyhow::Result<()> {
     if let Some(dir) = std::path::Path::new(&out).parent() {
         std::fs::create_dir_all(dir)?;
     }
-    std::fs::write(&out, manifest.to_pretty())?;
+    // `specs` is a BTreeMap and `to_pretty` emits sorted keys, so the
+    // manifest bytes — and the digest alongside them — are reproducible
+    // across independent runs of the same commit (the CI `repro` leg
+    // relies on this).
+    let body = manifest.to_pretty();
+    std::fs::write(&out, &body)?;
+    let digest = sha256::hex_digest(body.as_bytes());
+    let digest_path = format!("{out}.sha256");
+    let base = std::path::Path::new(&out)
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| out.clone());
+    std::fs::write(&digest_path, format!("{digest}  {base}\n"))?;
     let count = match manifest.get("artifacts") {
         Some(fecaffe::util::json::Json::Obj(m)) => m.len(),
         _ => 0,
     };
-    println!("wrote {count} artifact specs to {out}");
+    println!("wrote {count} artifact specs to {out} (sha256 {})", &digest[..12]);
     Ok(())
 }

@@ -67,6 +67,12 @@ const SPECS: &[Spec] = &[
         None,
         "run the HTTP load generator against a serve --http process at this address",
     ),
+    Spec::opt(
+        "aot-cache",
+        None,
+        "cold-boot engines from this AOT plan cache (`fecaffe aot build` output; \
+         overrides the FECAFFE_AOT_CACHE env var)",
+    ),
 ];
 
 fn parse_device(args: &Args) -> anyhow::Result<DeviceKind> {
@@ -131,6 +137,7 @@ fn run_http_server(args: &Args, addr: &str) -> anyhow::Result<()> {
         intra_op_threads: args.get_usize("intra-op").map_err(anyhow::Error::msg)?,
         trace_sample: args.get_usize("trace-sample").map_err(anyhow::Error::msg)? as u64,
         chaos: parse_chaos(args)?,
+        aot_cache: args.get("aot-cache").map(std::path::PathBuf::from),
     };
     println!(
         "[serve] building {} engine(s) ({}) | {} total worker(s) on {:?} | max-batch {} | queue {}",
@@ -246,6 +253,7 @@ fn run_load_test(args: &Args) -> anyhow::Result<()> {
         intra_op_threads: args.get_usize("intra-op").map_err(anyhow::Error::msg)?,
         trace_sample: args.get_usize("trace-sample").map_err(anyhow::Error::msg)? as u64,
         chaos: parse_chaos(args)?,
+        aot_cache: args.get("aot-cache").map(std::path::PathBuf::from),
         ..EngineConfig::default()
     };
     let requests = args.get_usize("requests").map_err(anyhow::Error::msg)?;

@@ -20,6 +20,10 @@
 //! * an inference serving engine: [`serve`] micro-batches single-sample
 //!   requests onto a pool of warm net replicas with `Arc`-shared weights
 //!   (the `serve` binary drives it under load);
+//! * a content-addressed AOT plan cache: [`aot`] serializes recorded
+//!   execution plans into deterministic `FEPLAN1` containers keyed by
+//!   net schema × bucket × device config, letting the serving engine
+//!   cold-boot without re-planning (`fecaffe aot build|verify|clean`);
 //! * a unified observability layer: [`obs`] (sampled batch traces,
 //!   per-layer timing hooks, training metrics) feeding the [`trace`]
 //!   timeline renderers, the Prometheus `/metrics` exposition and the
@@ -36,6 +40,7 @@ pub mod runtime;
 pub mod layers;
 pub mod net;
 pub mod netlint;
+pub mod aot;
 pub mod obs;
 pub mod serve;
 pub mod solver;

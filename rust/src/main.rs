@@ -12,6 +12,7 @@
 //! fecaffe export --net lenet                       # print prototxt
 //! fecaffe weights --net lenet --out w.fewts        # export a weight snapshot
 //! fecaffe lint [--net X] [--deny-warnings] [--format json]  # static analysis
+//! fecaffe aot build|verify|clean [--cache-dir D] [--net X]  # AOT plan cache
 //! ```
 
 use fecaffe::device::cpu::CpuDevice;
@@ -54,6 +55,7 @@ const SPECS: &[Spec] = &[
     Spec::flag("no-artifacts", "force native math (skip PJRT artifacts)"),
     Spec::opt("format", Some("text"), "lint command: text | json"),
     Spec::flag("deny-warnings", "lint command: treat warnings as errors"),
+    Spec::opt("cache-dir", Some("aot_cache"), "aot command: artifact cache directory"),
 ];
 
 fn make_device(args: &Args) -> anyhow::Result<Box<dyn Device>> {
@@ -471,6 +473,68 @@ fn cmd_lint(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `fecaffe aot`: materialize, check or delete the content-addressed
+/// AOT plan cache the serving engine cold-boots from.
+///
+/// * `build`  — record every (net × serving bucket) deploy forward and
+///   write one `FEPLAN1` container each, plus `MANIFEST.sha256`.
+///   Deterministic: two builds of the same commit are byte-identical
+///   (the CI `repro` leg asserts this).
+/// * `verify` — re-derive every content key from the live zoo and check
+///   the manifest digests, container parses and plan envelopes.
+/// * `clean`  — delete the cache directory (refuses directories that
+///   don't look like a cache).
+fn cmd_aot(args: &Args) -> anyhow::Result<()> {
+    use fecaffe::aot;
+    let dir = std::path::PathBuf::from(args.get("cache-dir").unwrap_or("aot_cache"));
+    let matrix = fecaffe::runtime::plan::serve_matrix();
+    let nets: Vec<&str> = match args.get("net") {
+        Some(n) => {
+            let known = matrix.iter().any(|(name, _)| *name == n);
+            anyhow::ensure!(known, "--net '{n}' is not a zoo network");
+            vec![n]
+        }
+        None => matrix.iter().map(|(name, _)| *name).collect(),
+    };
+    match args.positional.get(1).map(|s| s.as_str()).unwrap_or("") {
+        "build" => {
+            let t0 = std::time::Instant::now();
+            let report = aot::build_matrix(&dir, &nets)?;
+            println!(
+                "aot build: {} container(s), {} plan(s), {} net(s) -> {} in {:.2}s",
+                report.files.len(),
+                report.plan_count,
+                nets.len(),
+                dir.display(),
+                t0.elapsed().as_secs_f64()
+            );
+            Ok(())
+        }
+        "verify" => {
+            let t0 = std::time::Instant::now();
+            let report = aot::verify_matrix(&dir, &nets)?;
+            println!(
+                "aot verify: {} container(s) OK ({} plan(s), {} KiB) in {} in {:.2}s",
+                report.files,
+                report.plan_count,
+                report.total_bytes / 1024,
+                dir.display(),
+                t0.elapsed().as_secs_f64()
+            );
+            Ok(())
+        }
+        "clean" => {
+            if aot::clean(&dir)? {
+                println!("aot clean: removed {}", dir.display());
+            } else {
+                println!("aot clean: {} does not exist", dir.display());
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown aot subcommand '{other}' (build | verify | clean)"),
+    }
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match Args::parse(&argv, SPECS) {
@@ -487,6 +551,7 @@ fn main() {
         "profile" => cmd_profile(&args),
         "weights" => cmd_weights(&args),
         "lint" => cmd_lint(&args),
+        "aot" => cmd_aot(&args),
         "zoo" => {
             for n in zoo::NETWORKS {
                 println!("{n}");
@@ -500,7 +565,7 @@ fn main() {
             println!(
                 "{}",
                 usage(
-                    "fecaffe <train|time|profile|zoo|export|weights|lint>",
+                    "fecaffe <train|time|profile|zoo|export|weights|lint|aot>",
                     "FeCaffe: FPGA-enabled Caffe (simulated Stratix 10 + PJRT AOT kernels)",
                     SPECS
                 )

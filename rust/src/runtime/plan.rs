@@ -61,6 +61,18 @@ pub fn serve_buckets(max_batch: usize) -> Vec<usize> {
     buckets
 }
 
+/// The full zoo × serving-bucket walk, in the fixed net order the AOT
+/// manifest and artifact cache enumerate. Single source of truth for
+/// `gen-manifest`, `fecaffe aot build|verify` and the CI `repro` leg —
+/// they must all agree on the matrix or caches verify against a
+/// different set than was built.
+pub fn serve_matrix() -> Vec<(&'static str, Vec<usize>)> {
+    ["lenet", "alexnet", "squeezenet", "googlenet", "vgg16"]
+        .into_iter()
+        .map(|name| (name, serve_buckets(serve_bucket_cap(name))))
+        .collect()
+}
+
 /// One input argument of an artifact.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Arg {
@@ -545,6 +557,20 @@ mod tests {
             let cap = serve_bucket_cap(name);
             assert_eq!(serve_buckets(cap).last(), Some(&cap));
         }
+    }
+
+    #[test]
+    fn serve_matrix_is_the_fixed_zoo_walk() {
+        let matrix = serve_matrix();
+        let names: Vec<&str> = matrix.iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["lenet", "alexnet", "squeezenet", "googlenet", "vgg16"]);
+        for (name, buckets) in &matrix {
+            assert_eq!(buckets, &serve_buckets(serve_bucket_cap(name)), "{name}");
+            assert_eq!(buckets.first(), Some(&1));
+        }
+        // 6 + 6 + 5 + 5 + 4 containers in the full artifact matrix.
+        let total: usize = matrix.iter().map(|(_, b)| b.len()).sum();
+        assert_eq!(total, 26);
     }
 
     #[test]

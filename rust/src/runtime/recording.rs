@@ -52,6 +52,15 @@ impl RecordingDevice {
             self.specs.insert(k.clone(), v.clone());
         }
     }
+
+    /// The recorded plans as sorted `(key, compact spec JSON)` pairs —
+    /// the form the AOT `FEPLAN1` container serializes. `specs` is a
+    /// `BTreeMap` and `Json::to_string` emits object keys in sorted
+    /// order, so two recordings of the same net produce identical
+    /// entries byte for byte.
+    pub fn spec_entries(&self) -> Vec<(String, String)> {
+        self.specs.iter().map(|(k, v)| (k.clone(), v.to_string())).collect()
+    }
 }
 
 impl Device for RecordingDevice {
@@ -143,5 +152,30 @@ mod tests {
         assert_eq!(dev.specs.len(), first, "second pass adds no new keys");
         let manifest = dev.manifest();
         assert!(manifest.get("artifacts").is_some());
+    }
+
+    #[test]
+    fn two_independent_recordings_serialize_identically() {
+        // The determinism the AOT cache and the CI `repro` leg rest on:
+        // record the same net twice in fresh devices, and both the
+        // manifest document and the plan entries must match byte for
+        // byte — no map-iteration-order or float-formatting drift.
+        let record = || {
+            let mut dev = RecordingDevice::new(false);
+            let param = zoo::by_name("lenet", 2).unwrap();
+            let mut net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+            net.forward_backward(&mut dev).unwrap();
+            dev
+        };
+        let a = record();
+        let b = record();
+        assert_eq!(a.manifest().to_pretty(), b.manifest().to_pretty());
+        assert_eq!(a.spec_entries(), b.spec_entries());
+        // Entries are sorted by kernel key.
+        let entries = a.spec_entries();
+        let keys: Vec<&str> = entries.iter().map(|(k, _)| k.as_str()).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted);
     }
 }

@@ -98,6 +98,13 @@ pub struct EngineConfig {
     /// `FECAFFE_CHAOS` environment variable; a no-op plan (or neither
     /// source set) leaves the serve path entirely fault-free.
     pub chaos: Option<FaultPlan>,
+    /// AOT plan-cache directory (`fecaffe aot build` output). `None`
+    /// falls back to the `FECAFFE_AOT_CACHE` environment variable; with
+    /// neither set the engine always plans live. When a cache is
+    /// configured and every serving bucket's artifact validates, boot
+    /// skips the live admission re-planning entirely; any miss demotes
+    /// to the live path with a typed error and a `cache_miss` metric.
+    pub aot_cache: Option<std::path::PathBuf>,
 }
 
 impl Default for EngineConfig {
@@ -115,6 +122,7 @@ impl Default for EngineConfig {
             breaker_threshold: 5,
             breaker_cooldown: Duration::from_millis(250),
             chaos: None,
+            aot_cache: None,
         }
     }
 }
@@ -612,33 +620,72 @@ impl Engine {
         anyhow::ensure!(cfg.workers >= 1, "engine needs at least one worker");
         anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
         let dep = deploy(param, cfg.max_batch)?;
+        let buckets = crate::runtime::plan::serve_buckets(cfg.max_batch);
 
         // Static admission gate: lint the deploy net at every batch
         // bucket a worker can reshape to, *before* any blob is allocated
         // or thread spawned. Error-severity findings refuse the model
         // with a typed `netlint::LintError`; warnings are surfaced but
         // don't block serving.
-        let lint = crate::netlint::lint_net(
-            &dep.param,
-            &crate::netlint::LintOptions {
-                phase: Phase::Test,
-                buckets: crate::runtime::plan::serve_buckets(cfg.max_batch),
-                forward_only: true,
-                ..Default::default()
-            },
-        );
-        if lint.has_errors() {
-            eprint!("{}", lint.render_text());
-            return Err(anyhow::Error::new(crate::netlint::LintError::new(lint))
-                .context("model refused at admission"));
-        }
-        for d in &lint.diagnostics {
-            eprintln!(
-                "[serve] netlint {}[{}]: {}",
-                d.severity.label(),
-                d.code,
-                d.message
+        let run_live_lint = |dep: &DeployNet| -> anyhow::Result<()> {
+            let lint = crate::netlint::lint_net(
+                &dep.param,
+                &crate::netlint::LintOptions {
+                    phase: Phase::Test,
+                    buckets: buckets.clone(),
+                    forward_only: true,
+                    ..Default::default()
+                },
             );
+            if lint.has_errors() {
+                eprint!("{}", lint.render_text());
+                return Err(anyhow::Error::new(crate::netlint::LintError::new(lint))
+                    .context("model refused at admission"));
+            }
+            for d in &lint.diagnostics {
+                eprintln!(
+                    "[serve] netlint {}[{}]: {}",
+                    d.severity.label(),
+                    d.code,
+                    d.message
+                );
+            }
+            Ok(())
+        };
+
+        // AOT cold boot: when a cache directory is configured (config
+        // field, else FECAFFE_AOT_CACHE) and *every* serving bucket's
+        // artifact loads and validates, the cached envelopes already
+        // carry what the live admission pass would recompute — so the
+        // boot skips re-planning. All-or-nothing: a single miss demotes
+        // the whole boot to the live path, because a partially trusted
+        // cache could mask a bucket whose plans no longer fit.
+        let cache_dir = cfg.aot_cache.clone().or_else(crate::aot::env_cache_dir);
+        let board = crate::device::fpga::costmodel::BoardParams::default();
+        let mut boot = match &cache_dir {
+            Some(dir) => crate::aot::cold_boot(dir, &dep, &buckets, &board),
+            None => crate::aot::ColdBoot::disabled(),
+        };
+        if let Some(dir) = &cache_dir {
+            if boot.complete() {
+                eprintln!(
+                    "[serve] aot: cold boot from {} ({} bucket(s), key {}…)",
+                    dir.display(),
+                    boot.hits.len(),
+                    &boot.hits[0].1.key[..12],
+                );
+            } else {
+                for e in &boot.errors {
+                    eprintln!("[serve] {e}");
+                }
+                eprintln!(
+                    "[serve] aot: cache at {} unusable, planning live",
+                    dir.display()
+                );
+            }
+        }
+        if !boot.complete() {
+            run_live_lint(&dep)?;
         }
 
         // Master replica: initialize weights once, publish the snapshot,
@@ -666,6 +713,23 @@ impl Engine {
 
         let param_keys = weights.keys().to_vec();
         let param_lens = weights.blob_lens();
+
+        // The weights schema only materializes with the master replica,
+        // so a cold boot is confirmed here: cached envelopes must name
+        // exactly the live parameter blobs. A mismatch demotes the boot
+        // (the skipped admission lint runs now) rather than letting
+        // workers adopt snapshots a stale cache never described.
+        if boot.complete() {
+            let (b0, art) = &boot.hits[0];
+            let rel = crate::aot::plan_rel_path(&dep.param.name, *b0);
+            if let Err(e) = crate::aot::validate_weights(art, &param_keys, &param_lens, &rel) {
+                eprintln!("[serve] {e}");
+                eprintln!("[serve] aot: demoting cold boot, planning live");
+                boot.demote(e);
+                run_live_lint(&dep)?;
+            }
+        }
+
         let shared = Arc::new(SharedWeights {
             version: AtomicU64::new(weights.version()),
             slot: Mutex::new(Arc::new(weights)),
@@ -678,6 +742,7 @@ impl Engine {
         let dispatch_q = Arc::new(SharedQueue::new(cfg.workers * 2));
         let metrics = Arc::new(Metrics::new());
         metrics.set_healthy_workers(cfg.workers as u64);
+        metrics.set_aot_cache(boot.hit_count(), boot.miss_count());
 
         // Fault-injection plan: explicit config wins, else the
         // `FECAFFE_CHAOS` env var (so smoke scripts can inject faults

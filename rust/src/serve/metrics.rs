@@ -162,6 +162,13 @@ pub struct Metrics {
     /// Version of the most recently published weight snapshot (0 until
     /// the first publish — the engine's initialization weights).
     pub weights_version: AtomicU64,
+    /// AOT plan-cache outcome at engine boot: buckets whose cached
+    /// artifact loaded and validated vs buckets that fell back to live
+    /// planning. Set once by `Engine::new`; `cache_miss == 0` with
+    /// `cache_hit > 0` is the cold-boot success signal the CI
+    /// `aot-verify` smoke asserts.
+    pub aot_cache_hit: AtomicU64,
+    pub aot_cache_miss: AtomicU64,
     pub latency: Histogram,
     /// Per-batch *simulated* device time (FPGA-sim workers only): the
     /// `sim_clock_ns` delta across each batched forward, so batching
@@ -194,9 +201,17 @@ impl Metrics {
             queue_depth_hwm: AtomicU64::new(0),
             publishes: AtomicU64::new(0),
             weights_version: AtomicU64::new(0),
+            aot_cache_hit: AtomicU64::new(0),
+            aot_cache_miss: AtomicU64::new(0),
             latency: Histogram::new(),
             sim_batch: Histogram::new(),
         }
+    }
+
+    /// Record the engine's AOT cold-boot outcome (once, at boot).
+    pub(crate) fn set_aot_cache(&self, hits: u64, misses: u64) {
+        self.aot_cache_hit.store(hits, Ordering::Relaxed);
+        self.aot_cache_miss.store(misses, Ordering::Relaxed);
     }
 
     pub(crate) fn record_batch(&self, size: usize, max_batch: usize) {
@@ -302,6 +317,8 @@ impl Metrics {
             queue_depth_hwm: self.queue_depth_hwm.load(Ordering::Relaxed),
             publishes: self.publishes.load(Ordering::Relaxed),
             weights_version: self.weights_version.load(Ordering::Relaxed),
+            cache_hit: self.aot_cache_hit.load(Ordering::Relaxed),
+            cache_miss: self.aot_cache_miss.load(Ordering::Relaxed),
             mean_batch: if batches == 0 { 0.0 } else { samples as f64 / batches as f64 },
             p50_ns: self.latency.quantile_ns(0.50),
             p95_ns: self.latency.quantile_ns(0.95),
@@ -365,6 +382,11 @@ pub struct MetricsReport {
     /// Accepted weight hot-swaps and the currently published version.
     pub publishes: u64,
     pub weights_version: u64,
+    /// AOT plan-cache outcome at boot: serving buckets restored from
+    /// validated cached artifacts vs buckets that required live
+    /// planning (no cache configured ⇒ both stay 0).
+    pub cache_hit: u64,
+    pub cache_miss: u64,
     pub mean_batch: f64,
     pub p50_ns: f64,
     pub p95_ns: f64,
@@ -425,6 +447,8 @@ impl MetricsReport {
         o.set("queue_depth_hwm", Json::num(self.queue_depth_hwm as f64));
         o.set("publishes", Json::num(self.publishes as f64));
         o.set("weights_version", Json::num(self.weights_version as f64));
+        o.set("cache_hit", Json::num(self.cache_hit as f64));
+        o.set("cache_miss", Json::num(self.cache_miss as f64));
         o.set("mean_batch", Json::num(self.mean_batch));
         o.set("p50_ms", Json::num(self.p50_ns / 1e6));
         o.set("p95_ms", Json::num(self.p95_ns / 1e6));
@@ -553,6 +577,12 @@ pub fn prometheus_text(reports: &[(String, MetricsReport)]) -> String {
         }),
         ("fecaffe_worker_restarts_total", "Replica rebuilds plus worker respawns.", |r| {
             r.restarts
+        }),
+        ("fecaffe_aot_cache_hit_total", "Serving buckets cold-booted from the plan cache.", |r| {
+            r.cache_hit
+        }),
+        ("fecaffe_aot_cache_miss_total", "Serving buckets that fell back to live planning.", |r| {
+            r.cache_miss
         }),
     ];
     for &(name, help, get) in counters {
@@ -859,6 +889,28 @@ mod tests {
         assert_eq!(breaker_state_name(0), "closed");
         assert_eq!(breaker_state_name(1), "open");
         assert_eq!(breaker_state_name(2), "half-open");
+    }
+
+    #[test]
+    fn aot_cache_counters_surface_everywhere() {
+        let m = Metrics::new();
+        // Default (no cache configured): both zero, keys still present
+        // so `grep '"cache_miss": 0'` in the smoke scripts never 404s.
+        let j = m.snapshot().to_json();
+        assert_eq!(j.get("cache_hit").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(j.get("cache_miss").unwrap().as_usize().unwrap(), 0);
+        m.set_aot_cache(4, 0);
+        let r = m.snapshot();
+        assert_eq!((r.cache_hit, r.cache_miss), (4, 0));
+        let j = r.to_json();
+        assert_eq!(j.get("cache_hit").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(j.get("cache_miss").unwrap().as_usize().unwrap(), 0);
+        let text = prometheus_text(&[("lenet".to_string(), r)]);
+        assert!(text.contains("fecaffe_aot_cache_hit_total{model=\"lenet\"} 4"));
+        assert!(text.contains("fecaffe_aot_cache_miss_total{model=\"lenet\"} 0"));
+        // A demoted boot records the misses.
+        m.set_aot_cache(0, 4);
+        assert_eq!(m.snapshot().cache_miss, 4);
     }
 
     #[test]

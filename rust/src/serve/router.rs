@@ -45,6 +45,9 @@ pub struct RouterConfig {
     /// plan). `None` falls back to `FECAFFE_CHAOS`; see
     /// [`EngineConfig::chaos`].
     pub chaos: Option<FaultPlan>,
+    /// AOT plan-cache directory shared by every model's engine. `None`
+    /// falls back to `FECAFFE_AOT_CACHE`; see [`EngineConfig::aot_cache`].
+    pub aot_cache: Option<std::path::PathBuf>,
 }
 
 impl Default for RouterConfig {
@@ -58,6 +61,7 @@ impl Default for RouterConfig {
             intra_op_threads: 0,
             trace_sample: 0,
             chaos: None,
+            aot_cache: None,
         }
     }
 }
@@ -124,6 +128,7 @@ impl ModelRouter {
                 intra_op_threads: intra_op,
                 trace_sample: cfg.trace_sample,
                 chaos: cfg.chaos.clone(),
+                aot_cache: cfg.aot_cache.clone(),
                 ..EngineConfig::default()
             };
             let engine = Engine::new(&param, ecfg)

@@ -5,6 +5,7 @@
 
 pub mod binio;
 pub mod chaos;
+pub mod sha256;
 pub mod prng;
 pub mod json;
 pub mod cli;

@@ -1,0 +1,223 @@
+//! AOT plan-cache integration: matrix build/verify reproducibility,
+//! cold-boot serving through the engine, and the robustness matrix —
+//! corrupted bytes, truncation, stale keys, envelope mismatches — each
+//! of which must surface as a typed `AotError` and a clean fallback to
+//! live planning, never a panic or a silently wrong plan.
+
+use fecaffe::aot::{self, AotError};
+use fecaffe::device::fpga::costmodel::BoardParams;
+use fecaffe::runtime::plan::serve_buckets;
+use fecaffe::serve::{load_test, DeviceKind, Engine, EngineConfig};
+use fecaffe::zoo;
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Fresh per-test cache directory (process id + tag keeps parallel test
+/// binaries and parallel tests apart).
+fn temp_cache(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fecaffe_aot_test_{}_{tag}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn tiny_engine_cfg(cache: Option<PathBuf>) -> EngineConfig {
+    EngineConfig {
+        workers: 1,
+        max_batch: 2,
+        max_linger: Duration::from_micros(200),
+        queue_capacity: 64,
+        device: DeviceKind::Cpu,
+        aot_cache: cache,
+        ..EngineConfig::default()
+    }
+}
+
+#[test]
+fn build_verify_and_reproducibility() {
+    let dir_a = temp_cache("repro_a");
+    let dir_b = temp_cache("repro_b");
+    let nets = ["lenet"];
+
+    let a = aot::build_matrix(&dir_a, &nets).unwrap();
+    let b = aot::build_matrix(&dir_b, &nets).unwrap();
+    assert_eq!(a.files.len(), serve_buckets(32).len(), "one container per bucket");
+    assert!(a.plan_count > 0);
+
+    // Two independent builds: identical manifests, identical bytes.
+    assert_eq!(a.files, b.files, "manifest (relpath, sha256) sets must match");
+    let man_a = std::fs::read(dir_a.join(aot::MANIFEST_NAME)).unwrap();
+    let man_b = std::fs::read(dir_b.join(aot::MANIFEST_NAME)).unwrap();
+    assert_eq!(man_a, man_b, "MANIFEST.sha256 must be byte-identical");
+    for (rel, _) in &a.files {
+        let fa = std::fs::read(dir_a.join(rel)).unwrap();
+        let fb = std::fs::read(dir_b.join(rel)).unwrap();
+        assert_eq!(fa, fb, "{rel} must be byte-identical across builds");
+    }
+
+    // And the tree verifies against the live zoo.
+    let report = aot::verify_matrix(&dir_a, &nets).unwrap();
+    assert_eq!(report.files, a.files.len());
+    assert_eq!(report.plan_count, a.plan_count);
+
+    // clean() removes a real cache but refuses a non-cache directory.
+    assert!(aot::clean(&dir_b).unwrap());
+    assert!(!dir_b.exists());
+    let decoy = temp_cache("decoy");
+    std::fs::create_dir_all(decoy.join("precious")).unwrap();
+    let err = aot::clean(&decoy).unwrap_err();
+    assert!(err.to_string().contains("refusing"), "{err}");
+    assert!(decoy.exists(), "refused clean must not delete anything");
+    std::fs::remove_dir_all(&decoy).ok();
+    std::fs::remove_dir_all(&dir_a).ok();
+}
+
+#[test]
+fn verify_catches_corruption_truncation_and_strays() {
+    let dir = temp_cache("verify");
+    let nets = ["lenet"];
+    aot::build_matrix(&dir, &nets).unwrap();
+    let victim = dir.join("lenet_deploy/bucket_001.feplan");
+
+    // Flipped byte: manifest digest mismatch, typed Corrupt in the chain.
+    let pristine = std::fs::read(&victim).unwrap();
+    let mut bad = pristine.clone();
+    let mid = bad.len() / 2;
+    bad[mid] ^= 0xFF;
+    std::fs::write(&victim, &bad).unwrap();
+    let err = aot::verify_matrix(&dir, &nets).unwrap_err();
+    let aot_err = err.downcast_ref::<AotError>().expect("typed AotError in chain");
+    assert_eq!(aot_err.code(), "AOT0002", "{aot_err}");
+
+    // Truncation: same class of typed failure.
+    std::fs::write(&victim, &pristine[..pristine.len() / 3]).unwrap();
+    let err = aot::verify_matrix(&dir, &nets).unwrap_err();
+    assert_eq!(err.downcast_ref::<AotError>().unwrap().code(), "AOT0002");
+
+    // Deleted file: Missing.
+    std::fs::remove_file(&victim).unwrap();
+    let err = aot::verify_matrix(&dir, &nets).unwrap_err();
+    assert_eq!(err.downcast_ref::<AotError>().unwrap().code(), "AOT0001");
+    std::fs::write(&victim, &pristine).unwrap();
+
+    // A manifest entry outside the expected matrix is refused — a cache
+    // can't smuggle artifacts verify never checks.
+    let manifest = dir.join(aot::MANIFEST_NAME);
+    let mut text = std::fs::read_to_string(&manifest).unwrap();
+    text.push_str(&format!("{}  lenet_deploy/bucket_064.feplan\n", "ab".repeat(32)));
+    std::fs::write(&manifest, text).unwrap();
+    let err = aot::verify_matrix(&dir, &nets).unwrap_err();
+    assert!(err.to_string().contains("not in the"), "{err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cold_boot_flags_stale_key_when_schema_changes_under_same_path() {
+    let dir = temp_cache("stale");
+    aot::build_matrix(&dir, &["lenet"]).unwrap();
+
+    // Same cache path, evolved net: widen ip1. The canonical schema —
+    // and therefore the content key — changes, so every artifact must
+    // report StaleKey, not validate against the old plans.
+    let mut dep = zoo::deploy_by_name("lenet", 2).unwrap();
+    let ip = dep
+        .param
+        .layers
+        .iter_mut()
+        .find_map(|l| l.inner_product.as_mut())
+        .expect("lenet has an InnerProduct layer");
+    ip.num_output += 1;
+
+    let boot = aot::cold_boot(&dir, &dep, &[1, 2], &BoardParams::default());
+    assert!(!boot.complete());
+    assert_eq!(boot.errors.len(), 2);
+    for e in &boot.errors {
+        assert_eq!(e.code(), "AOT0003", "{e}");
+        assert!(e.to_string().contains("stale plan"), "{e}");
+    }
+
+    // The unmutated net still cold-boots cleanly from the same cache.
+    let dep = zoo::deploy_by_name("lenet", 2).unwrap();
+    let boot = aot::cold_boot(&dir, &dep, &[1, 2], &BoardParams::default());
+    assert!(boot.complete(), "{:?}", boot.errors);
+    assert_eq!(boot.hit_count(), 2);
+    assert_eq!(boot.miss_count(), 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cold_boot_flags_envelope_and_board_mismatches() {
+    let dir = temp_cache("envelope");
+    aot::build_matrix(&dir, &["lenet"]).unwrap();
+    let dep = zoo::deploy_by_name("lenet", 2).unwrap();
+
+    // A different board capacity changes the device-config key field:
+    // cached artifacts are stale for that board, never silently reused.
+    let small_board = BoardParams { ddr_capacity_bytes: 1 << 20, ..BoardParams::default() };
+    let boot = aot::cold_boot(&dir, &dep, &[1, 2], &small_board);
+    assert!(!boot.complete());
+    assert!(boot.errors.iter().all(|e| e.code() == "AOT0003"), "{:?}", boot.errors);
+
+    // Unknown bucket: Missing (no artifact file for bucket 64).
+    let boot = aot::cold_boot(&dir, &dep, &[64], &BoardParams::default());
+    assert_eq!(boot.errors.len(), 1);
+    assert_eq!(boot.errors[0].code(), "AOT0001");
+
+    // Weights-schema mismatch is a typed EnvelopeMismatch.
+    let good = aot::cold_boot(&dir, &dep, &[2], &BoardParams::default());
+    assert!(good.complete());
+    let art = &good.hits[0].1;
+    let err = aot::validate_weights(art, &[("phantom".to_string(), 0)], &[42], "p").unwrap_err();
+    assert_eq!(err.code(), "AOT0004");
+    assert!(err.to_string().contains("weights schema"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn engine_cold_boots_from_warm_cache_and_serves() {
+    let dir = temp_cache("engine_warm");
+    aot::build_matrix(&dir, &["lenet"]).unwrap();
+    let param = zoo::by_name("lenet", 1).unwrap();
+    let engine = Engine::new(&param, tiny_engine_cfg(Some(dir.clone()))).unwrap();
+
+    // max_batch 2 ⇒ buckets [1, 2]; both artifacts validated.
+    let snap = engine.metrics().snapshot();
+    assert_eq!(snap.cache_hit, 2, "both serving buckets restored from cache");
+    assert_eq!(snap.cache_miss, 0);
+
+    // And the cold-booted engine serves real answers.
+    let report = load_test(&engine, 2, 16, 0xF_EC_AF_FE);
+    engine.shutdown();
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.requests, 16);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn engine_falls_back_to_live_planning_on_bad_cache() {
+    // A cache directory full of garbage: the engine must boot anyway
+    // (live lint path), count the misses, and serve correctly.
+    let dir = temp_cache("engine_bad");
+    std::fs::create_dir_all(dir.join("lenet_deploy")).unwrap();
+    std::fs::write(dir.join("lenet_deploy/bucket_001.feplan"), b"not a container").unwrap();
+
+    let param = zoo::by_name("lenet", 1).unwrap();
+    let engine = Engine::new(&param, tiny_engine_cfg(Some(dir.clone()))).unwrap();
+    let snap = engine.metrics().snapshot();
+    assert_eq!(snap.cache_hit, 0);
+    assert_eq!(snap.cache_miss, 2, "corrupt bucket 1 + missing bucket 2");
+
+    let report = load_test(&engine, 2, 16, 7);
+    engine.shutdown();
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.requests, 16);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn engine_without_cache_config_reports_zero_cache_counters() {
+    let param = zoo::by_name("lenet", 1).unwrap();
+    let engine = Engine::new(&param, tiny_engine_cfg(None)).unwrap();
+    let snap = engine.metrics().snapshot();
+    engine.shutdown();
+    assert_eq!((snap.cache_hit, snap.cache_miss), (0, 0));
+}

@@ -15,7 +15,11 @@ LOG="$(mktemp)"
 SNAP="$(mktemp -u).fewts"
 LOADJSON="$(mktemp)"
 BROKEN="$(mktemp)"
-trap 'kill "$SERVER_PID" 2>/dev/null || true; rm -f "$LOG" "$SNAP" "$LOADJSON" "$BROKEN"' EXIT
+AOTDIR="$(mktemp -d)"
+AOTLOG="$(mktemp)"
+trap 'kill $SERVER_PID $AOT_PID 2>/dev/null || true; rm -f "$LOG" "$SNAP" "$LOADJSON" "$BROKEN" "$AOTLOG"; rm -rf "$AOTDIR"' EXIT
+SERVER_PID=""
+AOT_PID=""
 
 [ -x "$SERVE" ] || { echo "serve binary not found at $SERVE (set SERVE=...)"; exit 1; }
 [ -x "$FECAFFE" ] || { echo "fecaffe binary not found at $FECAFFE (set FECAFFE=...)"; exit 1; }
@@ -144,5 +148,43 @@ echo "$REFUSE_OUT" | grep -q "NL0001" \
 echo "$REFUSE_OUT" | grep -q "rejected by netlint" \
     || { echo "$REFUSE_OUT"; fail "refusal output lacks the netlint rejection message"; }
 echo "admission lint gate: OK (broken net refused with NL0001)"
+
+# --- AOT cold-boot serving -------------------------------------------
+# Materialize the lenet plan cache, verify it against the live zoo,
+# then boot a fresh server *from the cache* (FECAFFE_AOT_CACHE). The
+# server must report the cold boot, serve real load, and /metrics must
+# show every serving bucket restored from cache: at --max-batch 8 the
+# buckets are [1,2,4,8], so cache_hit == 4 and cache_miss == 0.
+"$FECAFFE" aot build --cache-dir "$AOTDIR" --net lenet || fail "fecaffe aot build"
+"$FECAFFE" aot verify --cache-dir "$AOTDIR" --net lenet || fail "fecaffe aot verify"
+
+FECAFFE_AOT_CACHE="$AOTDIR" "$SERVE" --http 127.0.0.1:0 --models lenet \
+    --workers 2 --max-batch 8 >"$AOTLOG" 2>&1 &
+AOT_PID=$!
+
+fail_aot() { echo "FAIL: $1"; cat "$AOTLOG"; exit 1; }
+
+AOT_ADDR=""
+for _ in $(seq 1 100); do
+    AOT_ADDR="$(sed -n 's|.*listening on http://||p' "$AOTLOG" | head -n1)"
+    [ -n "$AOT_ADDR" ] && break
+    kill -0 "$AOT_PID" 2>/dev/null || fail_aot "aot server died during startup"
+    sleep 0.2
+done
+[ -n "$AOT_ADDR" ] || fail_aot "aot server never reported its address"
+
+grep -q "aot: cold boot" "$AOTLOG" \
+    || fail_aot "server did not report an aot cold boot"
+"$SERVE" --target "$AOT_ADDR" --net lenet --requests 64 --clients 4 \
+    || fail_aot "http load against the cold-booted server"
+AOT_METRICS="$(curl -sf "http://$AOT_ADDR/metrics")" || fail_aot "metrics fetch"
+echo "$AOT_METRICS" | grep -q '"cache_hit": 4' \
+    || { echo "$AOT_METRICS"; fail_aot "expected cache_hit 4 (buckets 1,2,4,8)"; }
+echo "$AOT_METRICS" | grep -q '"cache_miss": 0' \
+    || { echo "$AOT_METRICS"; fail_aot "expected cache_miss 0 on a warm cache"; }
+
+curl -sf -X POST "http://$AOT_ADDR/admin/shutdown" >/dev/null || fail_aot "aot shutdown"
+wait "$AOT_PID" || fail_aot "aot server exited non-zero"
+echo "aot cold boot: OK (4 buckets from cache, cache_miss 0, load served)"
 
 echo "http smoke: OK"

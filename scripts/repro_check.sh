@@ -1,0 +1,58 @@
+#!/usr/bin/env bash
+# Reproducible-artifact check: build the full zoo × serving-bucket AOT
+# plan matrix twice, in two separate clean directories, from the same
+# binary (same commit), and require the two trees to be byte-identical
+# — first by diffing the SHA-256 manifests, then (belt and braces) by
+# comparing every container file. Any divergence is a determinism
+# regression (map iteration order, float formatting, time-dependent
+# content) and fails with a readable per-file diff. Finishes with
+# `fecaffe aot verify`, which re-derives every content key from the
+# live zoo and checks the manifest digests. CI runs this after a
+# release build.
+set -euo pipefail
+
+FECAFFE="${FECAFFE:-target/release/fecaffe}"
+[ -x "$FECAFFE" ] || { echo "fecaffe binary not found at $FECAFFE (set FECAFFE=...)"; exit 1; }
+
+DIR_A="$(mktemp -d)"
+DIR_B="$(mktemp -d)"
+trap 'rm -rf "$DIR_A" "$DIR_B"' EXIT
+
+echo "== build #1 -> $DIR_A"
+"$FECAFFE" aot build --cache-dir "$DIR_A"
+echo "== build #2 -> $DIR_B"
+"$FECAFFE" aot build --cache-dir "$DIR_B"
+
+# The manifest is the tree: sorted "<sha256>  <relpath>" lines. If the
+# manifests agree, the digests pin every file's bytes.
+if ! diff -u "$DIR_A/MANIFEST.sha256" "$DIR_B/MANIFEST.sha256"; then
+    echo ""
+    echo "FAIL: two builds of the same commit produced different manifests."
+    echo "Divergent files (byte offsets via cmp):"
+    while read -r _hash rel; do
+        [ -n "$rel" ] || continue
+        if ! cmp -s "$DIR_A/$rel" "$DIR_B/$rel" 2>/dev/null; then
+            echo "--- $rel"
+            cmp "$DIR_A/$rel" "$DIR_B/$rel" || true
+        fi
+    done < "$DIR_A/MANIFEST.sha256"
+    exit 1
+fi
+
+# Manifests identical — confirm the container bytes are too (a manifest
+# bug that hashed something else would otherwise slip through).
+while read -r _hash rel; do
+    [ -n "$rel" ] || continue
+    cmp -s "$DIR_A/$rel" "$DIR_B/$rel" || {
+        echo "FAIL: $rel differs between builds despite identical manifests:"
+        cmp "$DIR_A/$rel" "$DIR_B/$rel" || true
+        exit 1
+    }
+done < "$DIR_A/MANIFEST.sha256"
+
+N="$(wc -l < "$DIR_A/MANIFEST.sha256")"
+echo "repro: OK ($N container(s) byte-identical across independent builds)"
+
+echo "== verify against the live zoo"
+"$FECAFFE" aot verify --cache-dir "$DIR_A"
+echo "repro check: OK"
