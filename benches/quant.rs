@@ -1,0 +1,161 @@
+//! Reduced-precision serving bench: fp32 vs int8 (and fp16) on the
+//! simulated Stratix 10 board, emitting `BENCH_quant.json`.
+//!
+//! Two legs:
+//!
+//! * **Simulated time** — deploy forward per zoo net at each precision
+//!   on a timing-only `FpgaSimDevice`. The headline `sim_speedup` is
+//!   the matmul kernel-engine time (Gemm + Gemv classes, where the
+//!   int8 bitstream packs 4 MACs per fp32 lane); `forward_speedup` is
+//!   the whole forward including width-scaled DDR/PCIe traffic and the
+//!   un-accelerated kernel classes. Simulated clocks are deterministic,
+//!   so one measured pass per configuration suffices.
+//! * **Top-1 on digits** — train LeNet briefly, then evaluate the same
+//!   weights at fp32 and through the emulated int8/fp16 execution path
+//!   (fake-quant weights + `QuantBackend` matmuls), reporting the
+//!   accuracy delta quantization costs.
+//!
+//! Self-asserting: int8 matmul speedup must be ≥ 2× on LeNet *and*
+//! AlexNet, and the int8 top-1 delta must stay within 1 %.
+//!
+//! `cargo bench --bench quant`; `FECAFFE_BENCH_QUICK=1` is accepted for
+//! CI symmetry (the bench is already quick — it only trims the fp16
+//! reporting leg).
+
+use fecaffe::device::fpga::FpgaSimDevice;
+use fecaffe::device::{Device, KClass};
+use fecaffe::net::Net;
+use fecaffe::proto::Phase;
+use fecaffe::quant::{self, backend::QuantBackend, Precision};
+use fecaffe::solver::Solver;
+use fecaffe::util::json::Json;
+use fecaffe::zoo;
+
+/// One timing-only deploy forward at `precision`: (forward sim ms,
+/// Gemm+Gemv kernel-engine sim ms).
+fn sim_forward(name: &str, batch: usize, precision: Precision) -> anyhow::Result<(f64, f64)> {
+    let dep = zoo::deploy_by_name(name, batch)?;
+    let mut dev = FpgaSimDevice::new().with_precision(precision);
+    dev.timing_only = true;
+    let mut net = Net::from_param(&dep.param, Phase::Test, &mut dev)?;
+    net.forward(&mut dev)?; // warm lazily-created buffers
+    dev.reset_timing();
+    net.forward(&mut dev)?;
+    dev.synchronize();
+    let forward_ms = dev.sim_clock_ns().unwrap_or(0) as f64 / 1e6;
+    let matmul_ns: u64 = dev
+        .profiler
+        .stats()
+        .iter()
+        .filter(|(c, _)| matches!(c, KClass::Gemm | KClass::Gemv))
+        .map(|(_, s)| s.total_ns)
+        .sum();
+    Ok((forward_ms, matmul_ns as f64 / 1e6))
+}
+
+/// Evaluate `snap` on the digits test stream at `precision`: fake-quant
+/// weights plus the emulated low-precision matmul path — exactly what a
+/// `lenet@int8` serving worker executes.
+fn eval_top1(snap: &fecaffe::net::WeightSnapshot, precision: Precision) -> anyhow::Result<f32> {
+    let mut dev = fecaffe::device::cpu::CpuDevice::new();
+    if precision != Precision::Fp32 {
+        dev = dev.with_backend(Box::new(QuantBackend::new(precision, None)));
+    }
+    let param = zoo::by_name("lenet", 100)?;
+    let mut net = Net::from_param(&param, Phase::Test, &mut dev)?;
+    let weights = quant::prepare_weights(snap, precision);
+    net.adopt_weights(&mut dev, &weights)?;
+    net.forward(&mut dev)?;
+    let acc = net
+        .blob("accuracy")
+        .ok_or_else(|| anyhow::anyhow!("lenet test net has no accuracy blob"))?
+        .borrow_mut()
+        .data_vec(&mut dev)[0];
+    Ok(acc)
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("FECAFFE_BENCH_QUICK")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let nets: &[(&str, usize)] = &[("lenet", 8), ("alexnet", 8)];
+
+    // Leg 1: simulated forward + matmul-engine time per precision.
+    let mut net_rows = Vec::new();
+    for &(name, batch) in nets {
+        let (fp32_fwd, fp32_mm) = sim_forward(name, batch, Precision::Fp32)?;
+        let (int8_fwd, int8_mm) = sim_forward(name, batch, Precision::Int8)?;
+        let sim_speedup = fp32_mm / int8_mm.max(1e-12);
+        let forward_speedup = fp32_fwd / int8_fwd.max(1e-12);
+        println!(
+            "{name:>8} @ batch {batch}: matmul {fp32_mm:>8.3} -> {int8_mm:>8.3} ms \
+             ({sim_speedup:.2}x), forward {fp32_fwd:>8.3} -> {int8_fwd:>8.3} ms \
+             ({forward_speedup:.2}x)"
+        );
+        anyhow::ensure!(
+            sim_speedup >= 2.0,
+            "{name}: int8 matmul sim speedup {sim_speedup:.2}x below the 2x floor"
+        );
+        let mut o = Json::obj();
+        o.set("net", Json::str(name));
+        o.set("batch", Json::num(batch as f64));
+        o.set("fp32_forward_ms", Json::num(fp32_fwd));
+        o.set("fp32_matmul_ms", Json::num(fp32_mm));
+        o.set("int8_forward_ms", Json::num(int8_fwd));
+        o.set("int8_matmul_ms", Json::num(int8_mm));
+        o.set("sim_speedup", Json::num(sim_speedup));
+        o.set("forward_speedup", Json::num(forward_speedup));
+        if !quick {
+            let (fp16_fwd, fp16_mm) = sim_forward(name, batch, Precision::Fp16)?;
+            o.set("fp16_forward_ms", Json::num(fp16_fwd));
+            o.set("fp16_matmul_ms", Json::num(fp16_mm));
+            o.set("fp16_sim_speedup", Json::num(fp32_mm / fp16_mm.max(1e-12)));
+        }
+        net_rows.push(o);
+    }
+
+    // Leg 2: top-1 on the digits task, fp32 vs quantized execution of
+    // the *same* trained weights.
+    let mut dev = fecaffe::device::cpu::CpuDevice::new();
+    let param = zoo::by_name("lenet", 32)?;
+    let train_net = Net::from_param(&param, Phase::Train, &mut dev)?;
+    let mut sp = zoo::default_solver("lenet")?;
+    sp.display = 0;
+    let mut solver = Solver::new(sp, train_net, &mut dev)?;
+    let steps = 60;
+    for _ in 0..steps {
+        solver.step(&mut dev)?;
+    }
+    let snap = solver.net.share_weights(&mut dev);
+
+    let top1_fp32 = eval_top1(&snap, Precision::Fp32)?;
+    let top1_int8 = eval_top1(&snap, Precision::Int8)?;
+    let top1_fp16 = eval_top1(&snap, Precision::Fp16)?;
+    let delta_int8 = (top1_fp32 - top1_int8).abs();
+    println!(
+        "lenet digits top-1: fp32 {top1_fp32:.3}, int8 {top1_int8:.3} \
+         (delta {delta_int8:.3}), fp16 {top1_fp16:.3}"
+    );
+    anyhow::ensure!(
+        delta_int8 <= 0.01,
+        "int8 top-1 delta {delta_int8:.3} exceeds the 1% budget"
+    );
+
+    let mut acc = Json::obj();
+    acc.set("net", Json::str("lenet"));
+    acc.set("train_steps", Json::num(steps as f64));
+    acc.set("eval_batch", Json::num(100.0));
+    acc.set("top1_fp32", Json::num(f64::from(top1_fp32)));
+    acc.set("top1_int8", Json::num(f64::from(top1_int8)));
+    acc.set("top1_fp16", Json::num(f64::from(top1_fp16)));
+    acc.set("top1_delta_int8", Json::num(f64::from(delta_int8)));
+
+    let mut root = Json::obj();
+    root.set("bench", Json::str("quant"));
+    root.set("quick", Json::Bool(quick));
+    root.set("nets", Json::arr(net_rows));
+    root.set("accuracy", acc);
+    std::fs::write("BENCH_quant.json", root.to_pretty())?;
+    println!("wrote BENCH_quant.json");
+    Ok(())
+}

@@ -8,8 +8,12 @@
 //! and serializes the recorded plans plus a *plan envelope* — blob
 //! shapes, the netlint memory pass's DDR peak, the weights schema — into
 //! deterministic [`container`] files keyed by a content hash of
-//! (canonical net schema, bucket, device config, code version) over
-//! [`crate::util::sha256`]. `Engine::new` cold-boots from the cache:
+//! (canonical net schema, bucket, device config, code version, serving
+//! precision) over [`crate::util::sha256`]. Reduced-precision variants
+//! (`lenet@int8`) are separate cache entries: their DDR envelope is
+//! checked at the narrow byte width, their artifacts live beside the
+//! fp32 ones under precision-suffixed filenames, and a cache built at
+//! one precision can never validate for another (the key differs). `Engine::new` cold-boots from the cache:
 //! when every bucket's artifact loads and its envelope validates against
 //! the live net and board, the engine skips live admission planning
 //! entirely; any mismatch is a typed [`AotError`] (mirroring
@@ -36,6 +40,7 @@ use crate::device::fpga::costmodel::BoardParams;
 use crate::net::Net;
 use crate::netlint::{infer_shapes, lint_net, LintError, LintOptions};
 use crate::proto::{NetParameter, Phase};
+use crate::quant::Precision;
 use crate::runtime::plan::{serve_bucket_cap, serve_buckets};
 use crate::runtime::recording::RecordingDevice;
 use crate::util::sha256;
@@ -177,9 +182,19 @@ pub fn device_config(board: &BoardParams) -> String {
 }
 
 /// SHA-256 content key over (canonical schema, bucket, device config,
-/// code version). Fields are length-framed so no concatenation of
-/// different inputs can collide.
-pub fn content_key(schema: &str, bucket: usize, device_cfg: &str, code_version: u32) -> String {
+/// code version, serving precision). Fields are length-framed so no
+/// concatenation of different inputs can collide; the precision label
+/// is a fifth framed field under the same `feplan-key-v1` tag, so an
+/// fp32 cache presented to an int8 boot key-misses (AOT0003/AOT0001)
+/// instead of serving plans whose DDR envelope was checked at the
+/// wrong byte width.
+pub fn content_key(
+    schema: &str,
+    bucket: usize,
+    device_cfg: &str,
+    code_version: u32,
+    precision: Precision,
+) -> String {
     let mut h = sha256::Sha256::new();
     for field in [
         "feplan-key-v1",
@@ -187,6 +202,7 @@ pub fn content_key(schema: &str, bucket: usize, device_cfg: &str, code_version: 
         &bucket.to_string(),
         device_cfg,
         &code_version.to_string(),
+        precision.label(),
     ] {
         h.update(&(field.len() as u64).to_le_bytes());
         h.update(field.as_bytes());
@@ -194,8 +210,11 @@ pub fn content_key(schema: &str, bucket: usize, device_cfg: &str, code_version: 
     sha256::to_hex(&h.finalize())
 }
 
-/// Logical path of a (net, bucket) artifact relative to the cache root.
-pub fn plan_rel_path(net_name: &str, bucket: usize) -> String {
+/// Logical path of a (net, bucket, precision) artifact relative to the
+/// cache root. Fp32 keeps the original `bucket_NNN.feplan` filename so
+/// pre-quantization manifests remain byte-stable; reduced precisions
+/// get a `bucket_NNN.<label>.feplan` sibling in the same directory.
+pub fn plan_rel_path(net_name: &str, bucket: usize, precision: Precision) -> String {
     let dir: String = net_name
         .chars()
         .map(|c| {
@@ -203,7 +222,10 @@ pub fn plan_rel_path(net_name: &str, bucket: usize) -> String {
             if c.is_ascii_alphanumeric() { c } else { '_' }
         })
         .collect();
-    format!("{dir}/bucket_{bucket:03}.feplan")
+    match precision {
+        Precision::Fp32 => format!("{dir}/bucket_{bucket:03}.feplan"),
+        p => format!("{dir}/bucket_{bucket:03}.{}.feplan", p.label()),
+    }
 }
 
 /// Cache directory from the environment (`FECAFFE_AOT_CACHE`), if set.
@@ -214,13 +236,15 @@ pub fn env_cache_dir() -> Option<PathBuf> {
 // ---------------------------------------------------------------- build
 
 /// Record one deploy net's forward at `bucket` and assemble the artifact.
-/// Lints first with the same options engine admission uses — a net that
+/// Lints first with the same options engine admission uses (including
+/// the serving precision's byte width for the DDR pass) — a net that
 /// would be refused live is refused here too, so a cache can never admit
 /// what live planning would not.
 pub fn build_plan(
     dep: &DeployNet,
     bucket: usize,
     board: &BoardParams,
+    precision: Precision,
 ) -> anyhow::Result<PlanArtifact> {
     let lint = lint_net(
         &dep.param,
@@ -229,6 +253,7 @@ pub fn build_plan(
             buckets: vec![bucket],
             forward_only: true,
             board: board.clone(),
+            precision,
             ..Default::default()
         },
     );
@@ -253,6 +278,7 @@ pub fn build_plan(
             bucket,
             &device_config(board),
             CODE_VERSION,
+            precision,
         ),
         envelope: PlanEnvelope {
             net: dep.param.name.clone(),
@@ -280,17 +306,20 @@ pub struct BuildReport {
 }
 
 /// Build the full `nets` × serving-bucket matrix into `dir` and write
-/// the checksum manifest. Deterministic: same commit, same bytes.
+/// the checksum manifest. Deterministic: same commit, same bytes. Names
+/// take the router's `name[@precision]` form — `lenet@int8` caches the
+/// int8 serving variant beside the fp32 one.
 pub fn build_matrix(dir: &Path, nets: &[&str]) -> anyhow::Result<BuildReport> {
     let mut files = Vec::new();
     let mut plan_count = 0usize;
     for name in nets {
-        for bucket in serve_buckets(serve_bucket_cap(name)) {
-            let dep = zoo::deploy_by_name(name, bucket)?;
-            let art = build_plan(&dep, bucket, &BoardParams::default())
+        let (base, precision) = crate::quant::split_model_name(name)?;
+        for bucket in serve_buckets(serve_bucket_cap(base)) {
+            let dep = zoo::deploy_by_name(base, bucket)?;
+            let art = build_plan(&dep, bucket, &BoardParams::default(), precision)
                 .map_err(|e| e.context(format!("building {name} at bucket {bucket}")))?;
             plan_count += art.plans.len();
-            let rel = plan_rel_path(&art.envelope.net, bucket);
+            let rel = plan_rel_path(&art.envelope.net, bucket, precision);
             let bytes = container::artifact_bytes(&art);
             let path = dir.join(&rel);
             if let Some(parent) = path.parent() {
@@ -355,22 +384,28 @@ pub fn verify_matrix(dir: &Path, nets: &[&str]) -> anyhow::Result<VerifyReport> 
 
     let mut expected = Vec::new();
     for name in nets {
-        let dep1 = zoo::deploy_by_name(name, 1)?;
-        for bucket in serve_buckets(serve_bucket_cap(name)) {
-            expected.push((plan_rel_path(&dep1.param.name, bucket), dep1.param.clone(), bucket));
+        let (base, precision) = crate::quant::split_model_name(name)?;
+        let dep1 = zoo::deploy_by_name(base, 1)?;
+        for bucket in serve_buckets(serve_bucket_cap(base)) {
+            expected.push((
+                plan_rel_path(&dep1.param.name, bucket, precision),
+                dep1.param.clone(),
+                bucket,
+                precision,
+            ));
         }
     }
 
     let by_rel: std::collections::BTreeMap<&str, &str> =
         entries.iter().map(|(r, h)| (r.as_str(), h.as_str())).collect();
-    for (rel, _, _) in &expected {
+    for (rel, _, _, _) in &expected {
         if !by_rel.contains_key(rel.as_str()) {
             return Err(anyhow::Error::new(AotError::Missing { path: rel.clone() })
                 .context("manifest does not cover the expected matrix"));
         }
     }
     let expected_rels: std::collections::BTreeSet<&str> =
-        expected.iter().map(|(r, _, _)| r.as_str()).collect();
+        expected.iter().map(|(r, _, _, _)| r.as_str()).collect();
     for (rel, _) in &entries {
         anyhow::ensure!(
             expected_rels.contains(rel.as_str()),
@@ -381,7 +416,7 @@ pub fn verify_matrix(dir: &Path, nets: &[&str]) -> anyhow::Result<VerifyReport> 
 
     let mut plan_count = 0usize;
     let mut total_bytes = 0u64;
-    for (rel, param, bucket) in &expected {
+    for (rel, param, bucket, precision) in &expected {
         let path = dir.join(rel);
         let bytes = std::fs::read(&path)
             .map_err(|_| anyhow::Error::new(AotError::Missing { path: rel.clone() }))?;
@@ -397,8 +432,13 @@ pub fn verify_matrix(dir: &Path, nets: &[&str]) -> anyhow::Result<VerifyReport> 
             }));
         }
         let art = container::read_artifact(&bytes, rel).map_err(anyhow::Error::new)?;
-        let expected_key =
-            content_key(&canonical_schema(param), *bucket, &device_config(&board), CODE_VERSION);
+        let expected_key = content_key(
+            &canonical_schema(param),
+            *bucket,
+            &device_config(&board),
+            CODE_VERSION,
+            *precision,
+        );
         validate_artifact(&art, &expected_key, *bucket, &board, rel).map_err(anyhow::Error::new)?;
         plan_count += art.plans.len();
         total_bytes += bytes.len() as u64;
@@ -539,22 +579,29 @@ impl ColdBoot {
     }
 }
 
-/// Attempt to cold-boot `dep` from `dir` at every serving bucket. Each
-/// bucket either contributes a validated artifact or a typed error; the
-/// caller decides (all-or-nothing) whether live planning can be skipped.
-pub fn cold_boot(dir: &Path, dep: &DeployNet, buckets: &[usize], board: &BoardParams) -> ColdBoot {
+/// Attempt to cold-boot `dep` from `dir` at every serving bucket, for
+/// one serving precision. Each bucket either contributes a validated
+/// artifact or a typed error; the caller decides (all-or-nothing)
+/// whether live planning can be skipped.
+pub fn cold_boot(
+    dir: &Path,
+    dep: &DeployNet,
+    buckets: &[usize],
+    board: &BoardParams,
+    precision: Precision,
+) -> ColdBoot {
     let schema = canonical_schema(&dep.param);
     let devcfg = device_config(board);
     let mut boot = ColdBoot::disabled();
     for &bucket in buckets {
-        let rel = plan_rel_path(&dep.param.name, bucket);
+        let rel = plan_rel_path(&dep.param.name, bucket, precision);
         let path = dir.join(&rel);
         let label = path.display().to_string();
         let result = (|| -> Result<PlanArtifact, AotError> {
             let bytes = std::fs::read(&path)
                 .map_err(|_| AotError::Missing { path: label.clone() })?;
             let art = container::read_artifact(&bytes, &label)?;
-            let expected = content_key(&schema, bucket, &devcfg, CODE_VERSION);
+            let expected = content_key(&schema, bucket, &devcfg, CODE_VERSION, precision);
             validate_artifact(&art, &expected, bucket, board, &label)?;
             if art.envelope.sample_len != dep.sample_len {
                 return Err(AotError::EnvelopeMismatch {
@@ -584,15 +631,23 @@ mod tests {
         let dep = zoo::deploy_by_name("lenet", 4).unwrap();
         let schema = canonical_schema(&dep.param);
         let dev = device_config(&BoardParams::default());
-        let k1 = content_key(&schema, 4, &dev, CODE_VERSION);
-        let k2 = content_key(&schema, 4, &dev, CODE_VERSION);
+        let fp32 = Precision::Fp32;
+        let k1 = content_key(&schema, 4, &dev, CODE_VERSION, fp32);
+        let k2 = content_key(&schema, 4, &dev, CODE_VERSION, fp32);
         assert_eq!(k1, k2);
         assert_eq!(k1.len(), 64);
         // Each key component changes the digest.
-        assert_ne!(k1, content_key(&schema, 8, &dev, CODE_VERSION));
-        assert_ne!(k1, content_key(&schema, 4, "board:ddr=1", CODE_VERSION));
-        assert_ne!(k1, content_key(&schema, 4, &dev, CODE_VERSION + 1));
-        assert_ne!(k1, content_key(&format!("{schema} "), 4, &dev, CODE_VERSION));
+        assert_ne!(k1, content_key(&schema, 8, &dev, CODE_VERSION, fp32));
+        assert_ne!(k1, content_key(&schema, 4, "board:ddr=1", CODE_VERSION, fp32));
+        assert_ne!(k1, content_key(&schema, 4, &dev, CODE_VERSION + 1, fp32));
+        assert_ne!(k1, content_key(&format!("{schema} "), 4, &dev, CODE_VERSION, fp32));
+        // Precision is its own key field: an fp32 cache can never
+        // validate for an int8 boot (and int8 ≠ fp16).
+        let k_int8 = content_key(&schema, 4, &dev, CODE_VERSION, Precision::Int8);
+        let k_fp16 = content_key(&schema, 4, &dev, CODE_VERSION, Precision::Fp16);
+        assert_ne!(k1, k_int8);
+        assert_ne!(k1, k_fp16);
+        assert_ne!(k_int8, k_fp16);
     }
 
     #[test]
@@ -610,13 +665,24 @@ mod tests {
 
     #[test]
     fn rel_paths_are_sanitized_and_bucket_ordered() {
-        assert_eq!(plan_rel_path("LeNet_deploy", 1), "lenet_deploy/bucket_001.feplan");
-        assert_eq!(plan_rel_path("LeNet_deploy", 32), "lenet_deploy/bucket_032.feplan");
-        assert_eq!(plan_rel_path("weird name!", 2), "weird_name_/bucket_002.feplan");
+        let fp32 = Precision::Fp32;
+        assert_eq!(plan_rel_path("LeNet_deploy", 1, fp32), "lenet_deploy/bucket_001.feplan");
+        assert_eq!(plan_rel_path("LeNet_deploy", 32, fp32), "lenet_deploy/bucket_032.feplan");
+        assert_eq!(plan_rel_path("weird name!", 2, fp32), "weird_name_/bucket_002.feplan");
+        // Reduced precisions are siblings with a label infix; fp32
+        // keeps the legacy filename so old manifests stay valid.
+        assert_eq!(
+            plan_rel_path("LeNet_deploy", 1, Precision::Int8),
+            "lenet_deploy/bucket_001.int8.feplan"
+        );
+        assert_eq!(
+            plan_rel_path("LeNet_deploy", 1, Precision::Fp16),
+            "lenet_deploy/bucket_001.fp16.feplan"
+        );
         // Zero-padding keeps lexicographic order == numeric order for
         // every bucket the zoo can serve.
         let mut rels: Vec<String> =
-            serve_buckets(32).iter().map(|&b| plan_rel_path("x", b)).collect();
+            serve_buckets(32).iter().map(|&b| plan_rel_path("x", b, fp32)).collect();
         let sorted = rels.clone();
         rels.sort();
         assert_eq!(rels, sorted);
@@ -625,7 +691,7 @@ mod tests {
     #[test]
     fn build_plan_records_envelope_and_plans() {
         let dep = zoo::deploy_by_name("lenet", 2).unwrap();
-        let art = build_plan(&dep, 2, &BoardParams::default()).unwrap();
+        let art = build_plan(&dep, 2, &BoardParams::default(), Precision::Fp32).unwrap();
         assert_eq!(art.envelope.net, "LeNet_deploy");
         assert_eq!(art.envelope.bucket, 2);
         assert_eq!(art.envelope.sample_len, 784);
@@ -651,8 +717,11 @@ mod tests {
     #[test]
     fn build_plan_is_deterministic() {
         let dep = zoo::deploy_by_name("lenet", 2).unwrap();
-        let a = container::artifact_bytes(&build_plan(&dep, 2, &BoardParams::default()).unwrap());
-        let b = container::artifact_bytes(&build_plan(&dep, 2, &BoardParams::default()).unwrap());
+        let fp32 = Precision::Fp32;
+        let a =
+            container::artifact_bytes(&build_plan(&dep, 2, &BoardParams::default(), fp32).unwrap());
+        let b =
+            container::artifact_bytes(&build_plan(&dep, 2, &BoardParams::default(), fp32).unwrap());
         assert_eq!(a, b, "two independent builds must be byte-identical");
     }
 
@@ -660,7 +729,7 @@ mod tests {
     fn validate_artifact_flags_each_mismatch_as_typed_error() {
         let board = BoardParams::default();
         let dep = zoo::deploy_by_name("lenet", 2).unwrap();
-        let art = build_plan(&dep, 2, &board).unwrap();
+        let art = build_plan(&dep, 2, &board, Precision::Fp32).unwrap();
         let key = art.key.clone();
         assert!(validate_artifact(&art, &key, 2, &board, "p").is_ok());
 

@@ -31,7 +31,11 @@ use std::sync::Arc;
 use std::time::Duration;
 
 const SPECS: &[Spec] = &[
-    Spec::opt("net", Some("lenet"), "zoo network name or net prototxt path"),
+    Spec::opt(
+        "net",
+        Some("lenet"),
+        "zoo network name (optionally name@fp16 / name@int8) or net prototxt path",
+    ),
     Spec::opt("workers", Some("4"), "worker replicas (threads; --http splits them across models)"),
     Spec::opt("max-batch", Some("32"), "micro-batch upper bound"),
     Spec::opt("linger-us", Some("2000"), "micro-batch linger deadline, microseconds"),
@@ -55,7 +59,12 @@ const SPECS: &[Spec] = &[
         None,
         "serve over HTTP on this address (e.g. 127.0.0.1:8080; port 0 picks one)",
     ),
-    Spec::opt("models", Some("lenet"), "comma-separated zoo models for --http mode"),
+    Spec::opt(
+        "models",
+        Some("lenet"),
+        "comma-separated zoo models for --http mode; a name@int8 / name@fp16 \
+         suffix serves that reduced-precision variant (e.g. lenet,lenet@int8)",
+    ),
     Spec::opt(
         "chaos",
         None,
@@ -236,13 +245,15 @@ fn run_http_client(args: &Args, target: &str) -> anyhow::Result<()> {
 /// Mode 1: the original in-process closed-loop load test.
 fn run_load_test(args: &Args) -> anyhow::Result<()> {
     let name = args.get("net").unwrap_or("lenet");
-    let param = if std::path::Path::new(name).is_file() {
+    let (param, precision) = if std::path::Path::new(name).is_file() {
         let text = std::fs::read_to_string(name)?;
-        fecaffe::proto::parse_net(&text).map_err(anyhow::Error::msg)?
+        (fecaffe::proto::parse_net(&text).map_err(anyhow::Error::msg)?, Default::default())
     } else {
-        zoo::by_name(name, 1)?
+        let (base, precision) = fecaffe::quant::split_model_name(name)?;
+        (zoo::by_name(base, 1)?, precision)
     };
     let cfg = EngineConfig {
+        precision,
         workers: args.get_usize("workers").map_err(anyhow::Error::msg)?,
         max_batch: args.get_usize("max-batch").map_err(anyhow::Error::msg)?,
         max_linger: Duration::from_micros(

@@ -5,6 +5,7 @@
 //! This device doubles as the correctness oracle for the FPGA simulator
 //! in the equivalence tests.
 
+use super::fpga::NumericBackend;
 use super::native::{execute, Slab};
 use super::{BufId, Device, KernelCall, ScratchAction, ScratchPool};
 use crate::util::pool;
@@ -17,6 +18,10 @@ pub struct CpuDevice {
     /// Intra-op thread cap applied around kernel execution (0 = inherit
     /// the calling thread's budget / process default).
     intra_op: usize,
+    /// Optional numeric backend consulted before native math (the quant
+    /// emulation path and the calibration range observer plug in here,
+    /// mirroring the FPGA simulator's backend seam).
+    backend: Option<Box<dyn NumericBackend>>,
 }
 
 impl CpuDevice {
@@ -29,6 +34,13 @@ impl CpuDevice {
     /// intra-op pools never oversubscribe the machine.
     pub fn with_intra_op(mut self, threads: usize) -> CpuDevice {
         self.intra_op = threads;
+        self
+    }
+
+    /// Route kernels through `backend` first; calls it declines
+    /// (`Ok(false)`) fall back to native math.
+    pub fn with_backend(mut self, backend: Box<dyn NumericBackend>) -> CpuDevice {
+        self.backend = Some(backend);
         self
     }
 
@@ -75,7 +87,15 @@ impl Device for CpuDevice {
     fn launch(&mut self, call: &KernelCall) -> anyhow::Result<()> {
         self.launches += 1;
         let slab = &mut self.slab;
-        pool::with_intra_op(self.intra_op, || execute(slab, call))
+        let backend = &mut self.backend;
+        pool::with_intra_op(self.intra_op, || {
+            if let Some(b) = backend {
+                if b.execute(slab, call)? {
+                    return Ok(());
+                }
+            }
+            execute(slab, call)
+        })
     }
 
     fn scratch(&mut self, slot: usize, len: usize) -> anyhow::Result<BufId> {

@@ -14,6 +14,7 @@
 //! PCIe transfers: `t = bytes / pcie_eff_bw + t_setup`.
 
 use crate::device::{KClass, Kernel};
+use crate::quant::Precision;
 
 /// Board-level constants (paper Table 3/4 and §4.2).
 #[derive(Debug, Clone)]
@@ -107,6 +108,11 @@ pub fn dsp_used(class: KClass) -> u32 {
 #[derive(Debug, Clone, Default)]
 pub struct CostModel {
     pub board: BoardParams,
+    /// Numeric precision of the modeled bitstream. `Fp32` (the default)
+    /// reproduces the paper's measured board exactly; reduced precisions
+    /// re-rate the matmul engines at their SIMD-lane packing advantage
+    /// and scale *every* kernel's DDR traffic by the element width.
+    pub precision: Precision,
 }
 
 impl CostModel {
@@ -114,13 +120,29 @@ impl CostModel {
         CostModel::default()
     }
 
+    /// Builder: model a bitstream compiled at `precision`.
+    pub fn with_precision(mut self, precision: Precision) -> CostModel {
+        self.precision = precision;
+        self
+    }
+
     /// Device-side execution time of one kernel invocation, in ns
     /// (excludes host launch overhead).
+    ///
+    /// Precision enters in two places: compute throughput of the
+    /// DSP-bound matmul engines scales by the lane multiplier (int8
+    /// packs 4 MACs where fp32 fits 1 — the standard Stratix 10 DSP
+    /// `int9×9` packing ratio), and DDR bytes scale by `elem_bytes/4`
+    /// for *all* classes, since a quantized bitstream stores weights and
+    /// activations narrow end-to-end.
     pub fn kernel_time_ns(&self, kernel: &Kernel) -> u64 {
         let class = kernel.class();
+        let lanes = self.precision.lane_multiplier(class);
+        let width_ratio = self.precision.elem_bytes() as f64 / 4.0;
         let flops = kernel.flops() as f64;
-        let bytes = kernel.bytes() as f64;
-        let compute_s = flops / (f64::from(dsp_used(class)) * 2.0 * self.board.fmax_hz);
+        let bytes = kernel.bytes() as f64 * width_ratio;
+        let compute_s =
+            flops / (f64::from(dsp_used(class)) * 2.0 * self.board.fmax_hz * lanes);
         let memory_s = bytes / (self.board.ddr_bw_bytes_per_s * ddr_efficiency(class));
         ((self.board.kernel_start_s + compute_s.max(memory_s)) * 1e9) as u64
     }
@@ -197,5 +219,53 @@ mod tests {
         let cm = CostModel::new();
         let us = cm.launch_overhead_ns() as f64 / 1e3;
         assert!((200.0..400.0).contains(&us));
+    }
+
+    #[test]
+    fn int8_speeds_up_compute_bound_gemm_by_lane_ratio() {
+        let fp32 = CostModel::new();
+        let int8 = CostModel::new().with_precision(Precision::Int8);
+        // Compute-bound gemm: the 4× lane packing should show ~4× once
+        // the fixed kernel-start latency is subtracted.
+        let g = Kernel::GemmNN { m: 1024, n: 1024, k: 1024, alpha: 1.0, beta: 0.0 };
+        let start = (fp32.board.kernel_start_s * 1e9) as u64;
+        let t32 = fp32.kernel_time_ns(&g) - start;
+        let t8 = int8.kernel_time_ns(&g) - start;
+        let ratio = t32 as f64 / t8 as f64;
+        assert!((3.8..4.2).contains(&ratio), "int8 gemm speedup {ratio}");
+        let fp16 = CostModel::new().with_precision(Precision::Fp16);
+        let t16 = fp16.kernel_time_ns(&g) - start;
+        let r16 = t32 as f64 / t16 as f64;
+        assert!((1.9..2.1).contains(&r16), "fp16 gemm speedup {r16}");
+    }
+
+    #[test]
+    fn int8_quarters_memory_bound_traffic_everywhere() {
+        let fp32 = CostModel::new();
+        let int8 = CostModel::new().with_precision(Precision::Int8);
+        let start = (fp32.board.kernel_start_s * 1e9) as u64;
+        // A streaming kernel gets no lane boost but moves 1/4 the bytes.
+        let relu = Kernel::ReluF { n: 10_000_000, slope: 0.0 };
+        let r = (fp32.kernel_time_ns(&relu) - start) as f64
+            / (int8.kernel_time_ns(&relu) - start) as f64;
+        assert!((3.8..4.2).contains(&r), "int8 relu byte ratio {r}");
+        // Memory-bound skinny gemm also rides the byte reduction.
+        let skinny = Kernel::GemmNN { m: 1, n: 1000, k: 4096, alpha: 1.0, beta: 0.0 };
+        let r = (fp32.kernel_time_ns(&skinny) - start) as f64
+            / (int8.kernel_time_ns(&skinny) - start) as f64;
+        assert!((3.5..4.2).contains(&r), "int8 skinny gemm ratio {r}");
+    }
+
+    #[test]
+    fn fp32_precision_is_the_identity_model() {
+        let base = CostModel::new();
+        let explicit = CostModel::new().with_precision(Precision::Fp32);
+        for k in [
+            Kernel::GemmNN { m: 64, n: 784, k: 1152, alpha: 1.0, beta: 0.0 },
+            Kernel::Gemv { trans: false, m: 1000, n: 4096, alpha: 1.0, beta: 0.0 },
+            Kernel::ReluF { n: 100_352, slope: 0.0 },
+        ] {
+            assert_eq!(base.kernel_time_ns(&k), explicit.kernel_time_ns(&k));
+        }
     }
 }

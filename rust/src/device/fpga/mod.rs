@@ -120,6 +120,20 @@ impl FpgaSimDevice {
         self
     }
 
+    /// Model a bitstream compiled at `precision`: the cost model re-rates
+    /// matmul compute and DDR traffic, and device-memory accounting plus
+    /// PCIe transfer billing use the narrow element width (host buffers
+    /// stay f32 — the narrowing is what the real board's DMA would do).
+    pub fn with_precision(mut self, precision: crate::quant::Precision) -> FpgaSimDevice {
+        self.cost.precision = precision;
+        self
+    }
+
+    /// Modeled bytes per stored element at this device's precision.
+    fn elem_bytes(&self) -> u64 {
+        self.cost.precision.elem_bytes()
+    }
+
     pub fn set_mode(&mut self, mode: QueueMode) {
         self.mode = mode;
     }
@@ -208,7 +222,7 @@ impl Device for FpgaSimDevice {
     fn alloc(&mut self, len: usize) -> anyhow::Result<BufId> {
         // Account DDR capacity first; then back the buffer in the slab.
         let id = self.slab.alloc(len);
-        if let Err(e) = self.ddr.alloc(id.0, (len * 4) as u64) {
+        if let Err(e) = self.ddr.alloc(id.0, len as u64 * self.elem_bytes()) {
             self.slab.free(id);
             return Err(anyhow::anyhow!(e));
         }
@@ -221,13 +235,13 @@ impl Device for FpgaSimDevice {
     }
 
     fn write(&mut self, id: BufId, data: &[f32]) {
-        self.bill_pcie((data.len() * 4) as u64, KClass::WriteBuffer, false);
+        self.bill_pcie(data.len() as u64 * self.elem_bytes(), KClass::WriteBuffer, false);
         let buf = self.slab.get_mut(id);
         buf[..data.len()].copy_from_slice(data);
     }
 
     fn read(&mut self, id: BufId, out: &mut [f32]) {
-        self.bill_pcie((out.len() * 4) as u64, KClass::ReadBuffer, true);
+        self.bill_pcie(out.len() as u64 * self.elem_bytes(), KClass::ReadBuffer, true);
         let buf = self.slab.get(id);
         out.copy_from_slice(&buf[..out.len()]);
     }
@@ -254,7 +268,7 @@ impl Device for FpgaSimDevice {
             // §5.2 partition: run on the host. The operands cross PCIe
             // (billed on the PCIe lane) and the compute streams host
             // memory; the FPGA kernel engine stays free.
-            let bytes = call.kernel.bytes();
+            let bytes = call.kernel.bytes() * self.elem_bytes() / 4;
             self.bill_pcie(bytes / 2, KClass::ReadBuffer, true);
             let dur = (bytes as f64 / self.host_bw_bytes_per_s * 1e9) as u64;
             let start = self.host_ns;
@@ -283,7 +297,7 @@ impl Device for FpgaSimDevice {
                     self.slab.free(id);
                 }
                 let id = self.slab.alloc(len);
-                if let Err(e) = self.ddr.alloc(id.0, (len * 4) as u64) {
+                if let Err(e) = self.ddr.alloc(id.0, len as u64 * self.elem_bytes()) {
                     self.slab.free(id);
                     return Err(anyhow::anyhow!(e));
                 }
@@ -443,6 +457,30 @@ mod tests {
         // partition paid PCIe both ways
         assert!(stats.contains_key(&KClass::ReadBuffer));
         assert!(stats.contains_key(&KClass::WriteBuffer));
+    }
+
+    #[test]
+    fn int8_device_quarters_ddr_and_pcie_accounting() {
+        use crate::quant::Precision;
+        // Same element count costs 1/4 the DDR budget at int8…
+        let mut fp32 = FpgaSimDevice::new().with_capacity(4096);
+        let mut int8 = FpgaSimDevice::new().with_capacity(4096).with_precision(Precision::Int8);
+        assert!(fp32.alloc(2048).is_err(), "8 KiB of f32 must not fit in 4 KiB");
+        assert!(int8.alloc(2048).is_ok(), "2 KiB of int8 fits in 4 KiB");
+        // …and PCIe uploads bill a quarter of the bytes.
+        let mut fp32 = FpgaSimDevice::new();
+        let mut int8 = FpgaSimDevice::new().with_precision(Precision::Int8);
+        let data = vec![1.0f32; 1_000_000];
+        let a = fp32.alloc(data.len()).unwrap();
+        let b = int8.alloc(data.len()).unwrap();
+        fp32.write(a, &data);
+        int8.write(b, &data);
+        let t32 = fp32.sim_clock_ns().unwrap();
+        let t8 = int8.sim_clock_ns().unwrap();
+        assert!(
+            t8 < t32 / 2,
+            "int8 upload ({t8} ns) should be well under half the fp32 upload ({t32} ns)"
+        );
     }
 
     #[test]

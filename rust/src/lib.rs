@@ -40,6 +40,7 @@ pub mod runtime;
 pub mod layers;
 pub mod net;
 pub mod netlint;
+pub mod quant;
 pub mod aot;
 pub mod obs;
 pub mod serve;

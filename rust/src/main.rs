@@ -490,7 +490,10 @@ fn cmd_aot(args: &Args) -> anyhow::Result<()> {
     let matrix = fecaffe::runtime::plan::serve_matrix();
     let nets: Vec<&str> = match args.get("net") {
         Some(n) => {
-            let known = matrix.iter().any(|(name, _)| *name == n);
+            // `name[@precision]`: lenet@int8 caches the int8 serving
+            // variant (own content keys, `.int8.feplan` siblings).
+            let (base, _) = fecaffe::quant::split_model_name(n)?;
+            let known = matrix.iter().any(|(name, _)| *name == base);
             anyhow::ensure!(known, "--net '{n}' is not a zoo network");
             vec![n]
         }

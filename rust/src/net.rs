@@ -226,6 +226,19 @@ impl WeightSnapshot {
             keys,
         })
     }
+
+    /// Assemble a snapshot from raw parts — used by `quant` to rebuild a
+    /// dequantized (fake-quant) snapshot carrying the original identity.
+    /// `keys` and `blobs` must align one-to-one.
+    pub(crate) fn from_parts(
+        version: u64,
+        tag: Option<String>,
+        keys: Vec<(String, usize)>,
+        blobs: Vec<Arc<Vec<f32>>>,
+    ) -> WeightSnapshot {
+        assert_eq!(keys.len(), blobs.len(), "keys/blobs misaligned");
+        WeightSnapshot { version, tag, blobs, keys }
+    }
 }
 
 /// One learnable parameter with its schedule multipliers and owner.

@@ -51,27 +51,31 @@ impl BucketMemoryReport {
     }
 }
 
-const F32: u64 = 4;
-
-fn blob_bytes(shape: &[usize]) -> u64 {
-    shape.iter().product::<usize>() as u64 * F32
+fn blob_bytes(shape: &[usize], elem_bytes: u64) -> u64 {
+    shape.iter().product::<usize>() as u64 * elem_bytes
 }
 
+/// Estimate the device-DDR footprint at `elem_bytes` per element (4 for
+/// fp32, 2 for fp16 storage, 1 for int8 — reduced-precision serving
+/// stores *every* device buffer at the narrow width, exactly like
+/// `FpgaSimDevice`'s width-scaled allocation accounting).
 pub fn analyze(
     with_splits: &[LayerParameter],
     shapes: &BTreeMap<String, Vec<usize>>,
     batch: usize,
     forward_only: bool,
     board: &BoardParams,
+    elem_bytes: u64,
 ) -> BucketMemoryReport {
     // Training keeps a diff buffer next to every data buffer.
     let factor: u64 = if forward_only { 1 } else { 2 };
+    let blob_bytes = |shape: &[usize]| blob_bytes(shape, elem_bytes);
 
     let activation_bytes: u64 = shapes.values().map(|s| blob_bytes(s) * factor).sum();
 
     let param_bytes: u64 = super::shapes::param_schema(with_splits, shapes)
         .iter()
-        .map(|(_, len)| *len as u64 * F32 * factor)
+        .map(|(_, len)| *len as u64 * elem_bytes * factor)
         .sum();
 
     // Shared im2col scratch: two slots, each sized to the max rounded
@@ -133,7 +137,7 @@ pub fn analyze(
             _ => {}
         }
     }
-    let scratch_bytes = 2 * max_col as u64 * F32;
+    let scratch_bytes = 2 * max_col as u64 * elem_bytes;
 
     // Liveness over the forward schedule. birth < 0 ⇒ net input.
     let steps = with_splits.len() as i64;

@@ -117,6 +117,12 @@ pub struct LintOptions {
     /// satisfy [`crate::net::WeightSnapshot::project`] onto the derived
     /// deploy net.
     pub check_deploy_projection: bool,
+    /// Serving precision the memory pass accounts at: every device
+    /// buffer is costed at this precision's element width (fp32 4 B,
+    /// fp16 2 B, int8 1 B). When an fp32 footprint exceeds the board,
+    /// the linter also reports whether int8 quantization would rescue
+    /// the fit (`NL0303` when even that is not enough).
+    pub precision: crate::quant::Precision,
 }
 
 impl Default for LintOptions {
@@ -128,6 +134,7 @@ impl Default for LintOptions {
             forward_only: false,
             solver: None,
             check_deploy_projection: false,
+            precision: crate::quant::Precision::Fp32,
         }
     }
 }
@@ -356,24 +363,60 @@ pub fn lint_net(param: &NetParameter, opts: &LintOptions) -> LintReport {
                 bucket,
                 opts.forward_only,
                 &opts.board,
+                opts.precision.elem_bytes(),
             );
             if !rep.fits() {
+                // Would the int8 grid rescue the fit? Re-run the pass at
+                // 1 B/element: if even the quantized footprint exceeds
+                // the board, say so (NL0303) — the standard "just
+                // quantize it" escape hatch is closed for this net.
+                let int8 = memory::analyze(
+                    &with_splits,
+                    shapes,
+                    bucket,
+                    opts.forward_only,
+                    &opts.board,
+                    crate::quant::Precision::Int8.elem_bytes(),
+                );
                 diags.push(
                     LintDiagnostic::error(
                         "NL0301",
                         None,
                         format!(
-                            "batch {}: estimated DDR footprint {} exceeds board capacity {}",
+                            "batch {}: estimated DDR footprint {} ({}) exceeds board capacity {}",
                             rep.bucket,
                             fmt_bytes(rep.total_bytes),
+                            opts.precision.label(),
                             fmt_bytes(rep.ddr_capacity_bytes)
                         ),
                     )
-                    .with_help(
+                    .with_help(if int8.fits() && opts.precision != crate::quant::Precision::Int8 {
+                        format!(
+                            "reduce the batch size, serve with a smaller max_batch, or serve the \
+                             int8 variant (`name@int8`): quantized footprint {} fits \
+                             (paper §4.4: VGG-16 training at batch 32 does not fit 2 GB DDR)",
+                            fmt_bytes(int8.total_bytes)
+                        )
+                    } else {
                         "reduce the batch size, or serve with a smaller max_batch \
-                         (paper §4.4: VGG-16 training at batch 32 does not fit 2 GB DDR)",
-                    ),
+                         (paper §4.4: VGG-16 training at batch 32 does not fit 2 GB DDR)"
+                            .to_string()
+                    }),
                 );
+                if !int8.fits() {
+                    diags.push(LintDiagnostic::warning(
+                        "NL0303",
+                        None,
+                        format!(
+                            "batch {}: even int8-quantized, the estimated DDR footprint {} \
+                             exceeds board capacity {} — reduced precision cannot make this \
+                             configuration servable",
+                            rep.bucket,
+                            fmt_bytes(int8.total_bytes),
+                            fmt_bytes(int8.ddr_capacity_bytes)
+                        ),
+                    ));
+                }
             } else if rep.total_bytes.saturating_mul(10) > rep.ddr_capacity_bytes.saturating_mul(9)
             {
                 diags.push(LintDiagnostic::warning(

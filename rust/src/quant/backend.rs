@@ -1,0 +1,321 @@
+//! Numeric backends for reduced-precision emulation.
+//!
+//! [`QuantBackend`] plugs into the device backend seam (the same one
+//! `runtime::PjrtBackend` uses) and intercepts exactly the matmul
+//! kernels — `GemmNN/NT/TN` and `Gemv` — executing them through the
+//! emulated int8 path ([`super::gemm`]) or the fp16 storage-emulation
+//! path. Everything else returns `Ok(false)` and falls through to
+//! native fp32 math: the mixed-precision contract of an int8 FPGA
+//! bitstream whose systolic array is quantized while the streaming
+//! kernels stay in wider arithmetic.
+//!
+//! [`RangeObserver`] is the calibration-time twin: it *watches* the
+//! same operands, recording per-kernel-shape min/max ranges, and always
+//! declines execution so the fp32 forward proceeds untouched.
+
+use super::calibrate::{quant_key, QuantSpec};
+use super::f16::f16_round_slice;
+use super::gemm::{minmax, qgemm, qgemv, quantize_slice, QuantParams, Trans};
+use super::Precision;
+use crate::device::fpga::NumericBackend;
+use crate::device::native::Slab;
+use crate::device::{Kernel, KernelCall};
+use crate::math;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// The matmul kernels the quant path covers, with operand lengths.
+enum Matmul {
+    Gemm { ta: Trans, tb: Trans, m: usize, n: usize, k: usize, alpha: f32, beta: f32 },
+    Gemv { trans: bool, m: usize, n: usize, alpha: f32, beta: f32 },
+}
+
+impl Matmul {
+    fn of(kernel: &Kernel) -> Option<Matmul> {
+        match *kernel {
+            Kernel::GemmNN { m, n, k, alpha, beta } => {
+                Some(Matmul::Gemm { ta: Trans::No, tb: Trans::No, m, n, k, alpha, beta })
+            }
+            Kernel::GemmNT { m, n, k, alpha, beta } => {
+                Some(Matmul::Gemm { ta: Trans::No, tb: Trans::Yes, m, n, k, alpha, beta })
+            }
+            Kernel::GemmTN { m, n, k, alpha, beta } => {
+                Some(Matmul::Gemm { ta: Trans::Yes, tb: Trans::No, m, n, k, alpha, beta })
+            }
+            Kernel::Gemv { trans, m, n, alpha, beta } => {
+                Some(Matmul::Gemv { trans, m, n, alpha, beta })
+            }
+            _ => None,
+        }
+    }
+
+    /// (A elements, B/x elements, C/y elements) regardless of storage
+    /// orientation.
+    fn lens(&self) -> (usize, usize, usize) {
+        match *self {
+            Matmul::Gemm { m, n, k, .. } => (m * k, k * n, m * n),
+            Matmul::Gemv { trans, m, n, .. } => {
+                let (xl, yl) = if trans { (m, n) } else { (n, m) };
+                (m * n, xl, yl)
+            }
+        }
+    }
+}
+
+/// Emulated reduced-precision matmul executor.
+///
+/// Int8: operands are quantized per call — using the calibrated ranges
+/// from `spec` when present (static quantization), or the operands' own
+/// observed range (dynamic) otherwise — then multiplied with exact i32
+/// accumulation and requantized to f32. Fp16: operands are rounded
+/// through the binary16 grid, accumulated in f32, and the output is
+/// rounded back to the grid (half-precision storage, f32 accumulate).
+/// Both paths are bit-identical at any intra-op thread count.
+pub struct QuantBackend {
+    precision: Precision,
+    spec: Option<Arc<QuantSpec>>,
+}
+
+impl QuantBackend {
+    pub fn new(precision: Precision, spec: Option<Arc<QuantSpec>>) -> QuantBackend {
+        QuantBackend { precision, spec }
+    }
+
+    /// Per-operand quant params: calibrated ranges when the spec has an
+    /// entry for this kernel shape, dynamic min/max otherwise.
+    fn params(&self, kernel: &Kernel, a: &[f32], b: &[f32]) -> (QuantParams, QuantParams) {
+        if let (Some(spec), Some(key)) = (self.spec.as_deref(), quant_key(kernel)) {
+            if let Some([ra, rb]) = spec.ranges(&key) {
+                return (
+                    QuantParams::for_range(ra.0, ra.1),
+                    QuantParams::for_range(rb.0, rb.1),
+                );
+            }
+        }
+        let (alo, ahi) = minmax(a);
+        let (blo, bhi) = minmax(b);
+        (QuantParams::for_range(alo, ahi), QuantParams::for_range(blo, bhi))
+    }
+}
+
+impl NumericBackend for QuantBackend {
+    fn execute(&mut self, slab: &mut Slab, call: &KernelCall) -> anyhow::Result<bool> {
+        let Some(mm) = Matmul::of(&call.kernel) else {
+            return Ok(false);
+        };
+        if self.precision == Precision::Fp32 {
+            return Ok(false);
+        }
+        let (alen, blen, clen) = mm.lens();
+        // Copy both inputs out first (quantized / grid-rounded), so a
+        // later mutable borrow of the output cannot alias them even for
+        // a pathological in-place call.
+        let a_f32 = &slab.get(call.inputs[0])[call.in_offsets[0]..][..alen];
+        match self.precision {
+            Precision::Fp32 => unreachable!("handled above"),
+            Precision::Int8 => {
+                let (pa, pb) = {
+                    let b_f32 = &slab.get(call.inputs[1])[call.in_offsets[1]..][..blen];
+                    self.params(&call.kernel, a_f32, b_f32)
+                };
+                let aq = quantize_slice(a_f32, pa);
+                let bq = quantize_slice(
+                    &slab.get(call.inputs[1])[call.in_offsets[1]..][..blen],
+                    pb,
+                );
+                let c = &mut slab.get_mut(call.outputs[0])[call.out_offsets[0]..][..clen];
+                match mm {
+                    Matmul::Gemm { ta, tb, m, n, k, alpha, beta } => {
+                        qgemm(ta, tb, m, n, k, alpha, &aq, pa, &bq, pb, beta, c);
+                    }
+                    Matmul::Gemv { trans, m, n, alpha, beta } => {
+                        let t = if trans { Trans::Yes } else { Trans::No };
+                        qgemv(t, m, n, alpha, &aq, pa, &bq, pb, beta, c);
+                    }
+                }
+            }
+            Precision::Fp16 => {
+                let mut a16 = a_f32.to_vec();
+                f16_round_slice(&mut a16);
+                let mut b16 =
+                    slab.get(call.inputs[1])[call.in_offsets[1]..][..blen].to_vec();
+                f16_round_slice(&mut b16);
+                let c = &mut slab.get_mut(call.outputs[0])[call.out_offsets[0]..][..clen];
+                match mm {
+                    Matmul::Gemm { ta, tb, m, n, k, alpha, beta } => {
+                        let (mta, mtb) = (to_math(ta), to_math(tb));
+                        math::gemm(mta, mtb, m, n, k, alpha, &a16, &b16, beta, c);
+                    }
+                    Matmul::Gemv { trans, m, n, alpha, beta } => {
+                        let t = if trans { math::Trans::Yes } else { math::Trans::No };
+                        math::gemv(t, m, n, alpha, &a16, &b16, beta, c);
+                    }
+                }
+                // Storage emulation: the result written back to DDR is
+                // half precision too.
+                f16_round_slice(c);
+            }
+        }
+        Ok(true)
+    }
+
+    fn name(&self) -> &'static str {
+        match self.precision {
+            Precision::Fp32 => "quant-fp32-passthrough",
+            Precision::Fp16 => "quant-fp16",
+            Precision::Int8 => "quant-int8",
+        }
+    }
+}
+
+fn to_math(t: Trans) -> math::Trans {
+    match t {
+        Trans::No => math::Trans::No,
+        Trans::Yes => math::Trans::Yes,
+    }
+}
+
+/// Per-operand (min, max) ranges keyed by [`quant_key`], accumulated
+/// over every matmul the calibration forwards execute.
+pub type RangeMap = BTreeMap<String, [(f32, f32); 2]>;
+
+/// Calibration-time observer: records matmul operand ranges and always
+/// declines execution, so the fp32 forward is numerically untouched.
+/// Clone handles share the underlying map.
+#[derive(Clone, Default)]
+pub struct RangeObserver {
+    ranges: Arc<Mutex<RangeMap>>,
+}
+
+impl RangeObserver {
+    pub fn new() -> RangeObserver {
+        RangeObserver::default()
+    }
+
+    /// The ranges observed so far.
+    pub fn snapshot(&self) -> RangeMap {
+        self.ranges.lock().expect("range map lock").clone()
+    }
+}
+
+impl NumericBackend for RangeObserver {
+    fn execute(&mut self, slab: &mut Slab, call: &KernelCall) -> anyhow::Result<bool> {
+        if let (Some(mm), Some(key)) = (Matmul::of(&call.kernel), quant_key(&call.kernel)) {
+            let (alen, blen, _) = mm.lens();
+            let ra = minmax(&slab.get(call.inputs[0])[call.in_offsets[0]..][..alen]);
+            let rb = minmax(&slab.get(call.inputs[1])[call.in_offsets[1]..][..blen]);
+            let mut map = self.ranges.lock().expect("range map lock");
+            let entry = map
+                .entry(key)
+                .or_insert([(f32::INFINITY, f32::NEG_INFINITY); 2]);
+            entry[0] = (entry[0].0.min(ra.0), entry[0].1.max(ra.1));
+            entry[1] = (entry[1].0.min(rb.0), entry[1].1.max(rb.1));
+        }
+        Ok(false)
+    }
+
+    fn name(&self) -> &'static str {
+        "quant-range-observer"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::cpu::CpuDevice;
+    use crate::device::{BufId, Device};
+
+    fn dev_with(
+        backend: Box<dyn NumericBackend>,
+        bufs: &[&[f32]],
+    ) -> (CpuDevice, Vec<BufId>) {
+        let mut dev = CpuDevice::new().with_backend(backend);
+        let ids = bufs
+            .iter()
+            .map(|v| {
+                let id = dev.alloc(v.len()).unwrap();
+                dev.write(id, v);
+                id
+            })
+            .collect();
+        (dev, ids)
+    }
+
+    #[test]
+    fn int8_backend_intercepts_gemm() {
+        let a = [1.0f32, -2.0, 3.0, 4.0];
+        let b = [0.5f32, 1.0, -1.0, 2.0];
+        let backend = Box::new(QuantBackend::new(Precision::Int8, None));
+        let (mut dev, ids) = dev_with(backend, &[&a, &b, &[0.0; 4]]);
+        dev.launch(&KernelCall::new(
+            Kernel::GemmNN { m: 2, n: 2, k: 2, alpha: 1.0, beta: 0.0 },
+            &[ids[0], ids[1]],
+            &[ids[2]],
+        ))
+        .unwrap();
+        let mut out = [0.0f32; 4];
+        dev.read(ids[2], &mut out);
+        // fp32 result: [[ 2.5, -3.0 ], [ -2.5, 11.0 ]]; int8 emulation
+        // must land within the quantization error envelope.
+        let expect = [2.5f32, -3.0, -2.5, 11.0];
+        for (o, e) in out.iter().zip(expect) {
+            assert!((o - e).abs() < 0.25, "got {out:?}, want ≈{expect:?}");
+        }
+    }
+
+    #[test]
+    fn fp16_backend_rounds_through_grid() {
+        // Values exactly representable in f16 multiply exactly.
+        let a = [2.0f32, 0.5];
+        let b = [4.0f32, 8.0];
+        let backend = Box::new(QuantBackend::new(Precision::Fp16, None));
+        let (mut dev, ids) = dev_with(backend, &[&a, &b, &[0.0; 1]]);
+        dev.launch(&KernelCall::new(
+            Kernel::GemmNN { m: 1, n: 1, k: 2, alpha: 1.0, beta: 0.0 },
+            &[ids[0], ids[1]],
+            &[ids[2]],
+        ))
+        .unwrap();
+        let mut out = [0.0f32; 1];
+        dev.read(ids[2], &mut out);
+        assert_eq!(out[0], 12.0);
+    }
+
+    #[test]
+    fn fp32_and_non_matmul_fall_through_to_native() {
+        let backend = Box::new(QuantBackend::new(Precision::Fp32, None));
+        let (mut dev, ids) = dev_with(backend, &[&[-1.0, 2.0]]);
+        dev.launch(&KernelCall::new(
+            Kernel::ReluF { n: 2, slope: 0.0 },
+            &[ids[0]],
+            &[ids[0]],
+        ))
+        .unwrap();
+        let mut out = [0.0f32; 2];
+        dev.read(ids[0], &mut out);
+        assert_eq!(out, [0.0, 2.0]);
+    }
+
+    #[test]
+    fn observer_records_ranges_without_changing_results() {
+        let obs = RangeObserver::new();
+        let a = [1.0f32, -2.0, 3.0, 4.0];
+        let b = [5.0f32, 6.0, 7.0, 8.0];
+        let (mut dev, ids) = dev_with(Box::new(obs.clone()), &[&a, &b, &[0.0; 4]]);
+        dev.launch(&KernelCall::new(
+            Kernel::GemmNN { m: 2, n: 2, k: 2, alpha: 1.0, beta: 0.0 },
+            &[ids[0], ids[1]],
+            &[ids[2]],
+        ))
+        .unwrap();
+        let mut out = [0.0f32; 4];
+        dev.read(ids[2], &mut out);
+        // Native math ran: A=[[1,-2],[3,4]], B=[[5,6],[7,8]].
+        assert_eq!(out, [-9.0, -10.0, 43.0, 50.0]);
+        let map = obs.snapshot();
+        assert_eq!(map.len(), 1);
+        let ranges = map.values().next().unwrap();
+        assert_eq!(ranges[0], (-2.0, 4.0));
+        assert_eq!(ranges[1], (5.0, 8.0));
+    }
+}

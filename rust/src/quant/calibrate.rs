@@ -1,0 +1,221 @@
+//! Post-training calibration: derive a versioned [`QuantSpec`] — static
+//! per-kernel-shape operand ranges — by running a few fp32 batches
+//! through the deploy net with a [`RangeObserver`] attached.
+//!
+//! The spec is keyed by [`quant_key`]: the kernel class and its
+//! *batch-independent* dimensions. GEMM drops `m` (the batch dimension
+//! of inner-product lowering), so one calibration batch size covers
+//! every serving bucket; GEMV keeps both dimensions. At serve time the
+//! backend looks its kernel up and quantizes with the calibrated
+//! range — values outside it saturate, the standard static-quantization
+//! contract.
+
+use super::backend::{RangeMap, RangeObserver};
+use crate::data::create_source;
+use crate::device::cpu::CpuDevice;
+use crate::device::{Device, Kernel};
+use crate::net::{Net, WeightSnapshot};
+use crate::proto::Phase;
+use crate::util::prng::Pcg32;
+use crate::zoo::DeployNet;
+use std::collections::BTreeMap;
+
+/// Container format version of `FEQSPEC1` payloads.
+pub const QUANT_SPEC_VERSION: u32 = 1;
+
+const QSPEC_MAGIC: &[u8; 8] = b"FEQSPEC1";
+
+/// Static quantization ranges for one net: per-[`quant_key`] operand
+/// (min, max) pairs, derived by [`calibrate`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct QuantSpec {
+    version: u32,
+    net: String,
+    entries: BTreeMap<String, [(f32, f32); 2]>,
+}
+
+impl QuantSpec {
+    pub fn from_ranges(net: &str, ranges: RangeMap) -> QuantSpec {
+        QuantSpec { version: QUANT_SPEC_VERSION, net: net.to_string(), entries: ranges }
+    }
+
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    pub fn net(&self) -> &str {
+        &self.net
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Calibrated `[A, B]` operand ranges for a kernel-shape key.
+    pub fn ranges(&self, key: &str) -> Option<&[(f32, f32); 2]> {
+        self.entries.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    /// Serialize as an `FEQSPEC1` container over `util::binio`.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        use crate::util::binio::{put_f32s, put_str, put_u32};
+        use std::io::Write;
+        if let Some(dir) = path.as_ref().parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        w.write_all(QSPEC_MAGIC)?;
+        put_u32(&mut w, self.version)?;
+        put_str(&mut w, &self.net)?;
+        put_u32(&mut w, self.entries.len() as u32)?;
+        for (key, [(alo, ahi), (blo, bhi)]) in &self.entries {
+            put_str(&mut w, key)?;
+            put_f32s(&mut w, &[*alo, *ahi, *blo, *bhi])?;
+        }
+        Ok(())
+    }
+
+    /// Load an `FEQSPEC1` container (lengths bounded by file size).
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<QuantSpec> {
+        use crate::util::binio::{get_f32s, get_str, get_u32};
+        use std::io::Read;
+        let file = std::fs::File::open(&path)?;
+        let file_len = file.metadata()?.len() as usize;
+        let mut r = std::io::BufReader::new(file);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == QSPEC_MAGIC, "not a FEQSPEC1 quant spec (bad magic)");
+        let version = get_u32(&mut r)?;
+        anyhow::ensure!(
+            version == QUANT_SPEC_VERSION,
+            "unsupported quant spec version {version} (expected {QUANT_SPEC_VERSION})"
+        );
+        let net = get_str(&mut r, file_len)?;
+        let count = get_u32(&mut r)? as usize;
+        anyhow::ensure!(
+            count <= file_len / 20,
+            "implausible entry count {count} for a {file_len}-byte container"
+        );
+        let mut entries = BTreeMap::new();
+        for _ in 0..count {
+            let key = get_str(&mut r, file_len)?;
+            let v = get_f32s(&mut r, 4)?;
+            anyhow::ensure!(
+                v.iter().all(|x| x.is_finite()),
+                "corrupt range for key '{key}'"
+            );
+            entries.insert(key, [(v[0], v[1]), (v[2], v[3])]);
+        }
+        Ok(QuantSpec { version, net, entries })
+    }
+}
+
+/// Range-map key for a matmul kernel: class + batch-*independent* shape
+/// dims. GEMM drops `m` (the batch dimension when inner products lower
+/// to `GemmNT` at serving bucket sizes); GEMV keeps both. Non-matmul
+/// kernels have no key (they are not quantized).
+pub fn quant_key(kernel: &Kernel) -> Option<String> {
+    match *kernel {
+        Kernel::GemmNN { n, k, .. } => Some(format!("gemm_nn:n{n}:k{k}")),
+        Kernel::GemmNT { n, k, .. } => Some(format!("gemm_nt:n{n}:k{k}")),
+        Kernel::GemmTN { n, k, .. } => Some(format!("gemm_tn:n{n}:k{k}")),
+        Kernel::Gemv { trans, m, n, .. } => {
+            Some(format!("gemv:{}:m{m}:n{n}", if trans { "t" } else { "n" }))
+        }
+        _ => None,
+    }
+}
+
+/// Run `batches` forwards of synthetic data through a fresh fp32 replica
+/// of `dep` (adopting `weights` when given — calibrate on the weights
+/// that will serve, i.e. the fake-quantized snapshot) and collect the
+/// observed matmul operand ranges into a [`QuantSpec`].
+pub fn calibrate(
+    name: &str,
+    dep: &DeployNet,
+    weights: Option<&WeightSnapshot>,
+    batches: usize,
+    seed: u64,
+) -> anyhow::Result<QuantSpec> {
+    let observer = RangeObserver::new();
+    let mut dev = CpuDevice::new().with_backend(Box::new(observer.clone()));
+    let dev: &mut dyn Device = &mut dev;
+    let mut net = Net::from_param(&dep.param, Phase::Test, dev)?;
+    if let Some(snap) = weights {
+        net.adopt_weights(dev, snap)?;
+    }
+    let [c, h, w] = dep.sample_shape;
+    // Label distribution does not matter for a forward-only deploy net;
+    // the source only has to produce representative input statistics.
+    let source = create_source(if c == 1 { "digits" } else { "imagenet" }, c, h, w, 10)?;
+    let input = net
+        .blob(&dep.input)
+        .ok_or_else(|| anyhow::anyhow!("input blob '{}' missing", dep.input))?;
+    let mut rng = Pcg32::new(seed);
+    for _ in 0..batches.max(1) {
+        let batch = source.batch(&mut rng, dep.batch);
+        input.borrow_mut().set_data(dev, &batch.data);
+        net.forward(dev)?;
+    }
+    let ranges = observer.snapshot();
+    anyhow::ensure!(
+        !ranges.is_empty(),
+        "calibration of '{name}' observed no matmul kernels"
+    );
+    Ok(QuantSpec::from_ranges(name, ranges))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quant_key_drops_gemm_batch_dim() {
+        let k1 = quant_key(&Kernel::GemmNT { m: 1, n: 500, k: 800, alpha: 1.0, beta: 0.0 });
+        let k64 = quant_key(&Kernel::GemmNT { m: 64, n: 500, k: 800, alpha: 1.0, beta: 0.0 });
+        assert_eq!(k1, k64, "gemm key must be batch-independent");
+        assert!(quant_key(&Kernel::ReluF { n: 4, slope: 0.0 }).is_none());
+        let g = quant_key(&Kernel::Gemv { trans: true, m: 3, n: 5, alpha: 1.0, beta: 0.0 });
+        assert_eq!(g.as_deref(), Some("gemv:t:m3:n5"));
+    }
+
+    #[test]
+    fn spec_save_load_round_trip() {
+        let mut ranges = RangeMap::new();
+        ranges.insert("gemm_nn:n10:k20".to_string(), [(-1.5, 2.0), (0.0, 6.0)]);
+        ranges.insert("gemv:n:m3:n5".to_string(), [(-0.25, 0.25), (-8.0, 8.0)]);
+        let spec = QuantSpec::from_ranges("lenet", ranges);
+        let dir = std::env::temp_dir().join(format!("feq_spec_{}", std::process::id()));
+        let path = dir.join("lenet.feqspec");
+        spec.save(&path).unwrap();
+        let back = QuantSpec::load(&path).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.net(), "lenet");
+        assert_eq!(back.version(), QUANT_SPEC_VERSION);
+        assert_eq!(back.ranges("gemm_nn:n10:k20"), Some(&[(-1.5, 2.0), (0.0, 6.0)]));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn calibrate_lenet_covers_every_matmul_layer() {
+        let dep = crate::zoo::deploy_by_name("lenet", 4).unwrap();
+        let spec = calibrate("lenet", &dep, None, 2, 7).unwrap();
+        // LeNet deploy: conv1, conv2 (GemmNN), ip1, ip2 (GemmNT) → at
+        // least 4 distinct matmul shapes.
+        assert!(spec.len() >= 4, "only {} calibrated shapes", spec.len());
+        for key in spec.keys() {
+            let r = spec.ranges(key).unwrap();
+            assert!(r[0].0 <= r[0].1 && r[1].0 <= r[1].1, "{key}: empty range");
+        }
+    }
+}

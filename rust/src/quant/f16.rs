@@ -1,0 +1,240 @@
+//! IEEE-754 binary16 emulation: f32↔f16 bit conversion with
+//! round-to-nearest-even, used by the fp16 storage-emulation path.
+//!
+//! The fp16 execution mode stores operands on the f16 grid but
+//! accumulates in f32 (the usual FPGA half-precision GEMM contract), so
+//! only the conversions need to be exact — and they are pinned here
+//! against golden IEEE-754 vectors independently of the GEMM path.
+
+/// Convert an f32 to IEEE-754 binary16 bits with round-to-nearest-even.
+///
+/// Handles subnormals, overflow-to-infinity, and NaN (payload truncated
+/// to the high mantissa bits, quiet bit forced so no NaN becomes inf).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf or NaN.
+        return if man == 0 {
+            sign | 0x7c00
+        } else {
+            // Keep the top 10 payload bits; force quiet bit so a NaN with
+            // only low payload bits does not collapse to infinity.
+            sign | 0x7c00 | 0x0200 | ((man >> 13) as u16 & 0x03ff)
+        };
+    }
+
+    // Unbiased exponent; f16 bias is 15, f32 bias is 127.
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        // Overflow → ±inf.
+        return sign | 0x7c00;
+    }
+    if e <= 0 {
+        // Subnormal (or underflow to zero). The implicit leading 1 (for
+        // normal f32 inputs) joins the mantissa, then we shift right by
+        // the subnormal deficit and round to nearest even.
+        if e < -10 {
+            return sign; // underflows to ±0 even after rounding
+        }
+        let man = if exp == 0 { man } else { man | 0x0080_0000 };
+        let shift = (14 - e) as u32; // bits dropped below the f16 ulp
+        let halfway = 1u32 << (shift - 1);
+        let q = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let q = if rem > halfway || (rem == halfway && (q & 1) == 1) {
+            q + 1 // may carry into the exponent: 0x0400 == smallest normal
+        } else {
+            q
+        };
+        return sign | q as u16;
+    }
+
+    // Normal: drop 13 mantissa bits with round-to-nearest-even.
+    let q = man >> 13;
+    let rem = man & 0x1fff;
+    let mut out = (sign as u32) | ((e as u32) << 10) | q;
+    if rem > 0x1000 || (rem == 0x1000 && (q & 1) == 1) {
+        out += 1; // mantissa carry rolls into the exponent correctly
+    }
+    out as u16
+}
+
+/// Convert IEEE-754 binary16 bits to the exactly-representable f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = u32::from(h & 0x8000) << 16;
+    let exp = i32::from((h >> 10) & 0x1f);
+    let man = u32::from(h & 0x03ff);
+
+    let bits = match (exp, man) {
+        (0, 0) => sign,                       // ±0
+        (0, _) => {
+            // Subnormal man·2^-24: normalize so the leading bit becomes
+            // the implicit one. shift = 10 - position_of_leading_bit.
+            let shift = man.leading_zeros() - 21;
+            let man = (man << shift) & 0x03ff;
+            let e = (127 - 14 - shift as i32) as u32;
+            sign | (e << 23) | (man << 13)
+        }
+        (0x1f, 0) => sign | 0x7f80_0000,      // ±inf
+        (0x1f, _) => sign | 0x7f80_0000 | (man << 13), // NaN, payload widened
+        _ => sign | (((exp - 15 + 127) as u32) << 23) | (man << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 through the f16 grid (the storage-emulation primitive).
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Round a slice through the f16 grid in place.
+pub fn f16_round_slice(xs: &mut [f32]) {
+    for x in xs {
+        *x = f16_round(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden IEEE-754 binary16 vectors: (f32 bits, expected f16 bits).
+    /// Sources: the binary16 tables in IEEE 754-2019 §3.6 and the widely
+    /// cross-checked conversion corpora (half/numpy agree on all rows).
+    const GOLDEN_TO_F16: &[(u32, u16)] = &[
+        (0x0000_0000, 0x0000), // +0
+        (0x8000_0000, 0x8000), // -0
+        (0x3f80_0000, 0x3c00), // 1.0
+        (0xbf80_0000, 0xbc00), // -1.0
+        (0x4000_0000, 0x4000), // 2.0
+        (0x3f00_0000, 0x3800), // 0.5
+        (0x4049_0000, 0x4248), // 3.140625 (exact in both formats)
+        (0xc5fc_4000, 0xefe2), // -8072.0
+    ];
+
+    #[test]
+    fn golden_simple_values() {
+        for &(fbits, hbits) in GOLDEN_TO_F16 {
+            assert_eq!(
+                f32_to_f16_bits(f32::from_bits(fbits)),
+                hbits,
+                "f32 bits {fbits:#010x}"
+            );
+        }
+        // 65504 is the largest finite f16 (0x7bff).
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff);
+        assert_eq!(f16_bits_to_f32(0x7bff), 65504.0);
+        // Smallest positive normal f16: 2^-14.
+        assert_eq!(f32_to_f16_bits(6.103_515_625e-5), 0x0400);
+        // Smallest positive subnormal f16: 2^-24 ≈ 5.960464e-8.
+        assert_eq!(f32_to_f16_bits(5.960_464_477_539_063e-8), 0x0001);
+        assert_eq!(f16_bits_to_f32(0x0001), 5.960_464_477_539_063e-8);
+        // Largest subnormal: (1023/1024)·2^-14.
+        assert_eq!(f16_bits_to_f32(0x03ff), 6.097_555_160_522_461e-5);
+        assert_eq!(f32_to_f16_bits(6.097_555_160_522_461e-5), 0x03ff);
+    }
+
+    #[test]
+    fn round_to_nearest_even_ties() {
+        // 1 + 2^-11 is exactly halfway between 1.0 (0x3c00) and the next
+        // f16 (0x3c01); the tie must go to the even mantissa (0x3c00).
+        let tie_down = 1.0 + 2f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(tie_down), 0x3c00);
+        // 1 + 3·2^-11 is halfway between 0x3c01 and 0x3c02; the tie goes
+        // up to the even 0x3c02.
+        let tie_up = 1.0 + 3.0 * 2f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(tie_up), 0x3c02);
+        // Just above the halfway point rounds up.
+        assert_eq!(f32_to_f16_bits(1.0 + 2f32.powi(-11) + 2f32.powi(-20)), 0x3c01);
+        // Just below rounds down.
+        assert_eq!(f32_to_f16_bits(1.0 + 2f32.powi(-11) - 2f32.powi(-20)), 0x3c00);
+    }
+
+    #[test]
+    fn subnormal_ties_round_to_even() {
+        // 2^-25 is halfway between 0 and the smallest subnormal (2^-24):
+        // ties-to-even keeps the even quotient 0.
+        assert_eq!(f32_to_f16_bits(2f32.powi(-25)), 0x0000);
+        // 1.5·2^-24 is halfway between 1 and 2 ulps: rounds to even (2).
+        assert_eq!(f32_to_f16_bits(1.5 * 2f32.powi(-24)), 0x0002);
+        // 2.5·2^-24 is halfway between 2 and 3 ulps: stays at even (2).
+        assert_eq!(f32_to_f16_bits(2.5 * 2f32.powi(-24)), 0x0002);
+        // Largest subnormal + half ulp carries into the normal range.
+        let carry = (1023.5) * 2f32.powi(-24);
+        assert_eq!(f32_to_f16_bits(carry), 0x0400);
+        // Negative subnormals keep the sign.
+        assert_eq!(f32_to_f16_bits(-5.960_464_477_539_063e-8), 0x8001);
+    }
+
+    #[test]
+    fn infinity_and_overflow() {
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert_eq!(f16_bits_to_f32(0x7c00), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(0xfc00), f32::NEG_INFINITY);
+        // 65520 = 65504 + 16 is exactly halfway to the (unrepresentable)
+        // next step; RNE rounds to even → overflow to +inf (IEEE 754
+        // round-half-even at the top of the range).
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00);
+        // 65519.996… stays at the max finite value.
+        assert_eq!(f32_to_f16_bits(65519.0), 0x7bff);
+        // Anything ≥ 65536 overflows regardless of rounding.
+        assert_eq!(f32_to_f16_bits(1.0e9), 0x7c00);
+        assert_eq!(f32_to_f16_bits(-1.0e9), 0xfc00);
+    }
+
+    #[test]
+    fn nan_payload_preserved_and_quieted() {
+        let h = f32_to_f16_bits(f32::NAN);
+        assert_eq!(h & 0x7c00, 0x7c00, "NaN exponent all-ones");
+        assert_ne!(h & 0x03ff, 0, "NaN mantissa nonzero (did not become inf)");
+        // A signaling-style NaN with only low payload bits must not
+        // collapse to infinity: the quiet bit is forced.
+        let snan = f32::from_bits(0x7f80_0001);
+        let h = f32_to_f16_bits(snan);
+        assert_eq!(h & 0x7c00, 0x7c00);
+        assert_ne!(h & 0x03ff, 0);
+        // Round-trip keeps NaN-ness and sign.
+        let back = f16_bits_to_f32(f32_to_f16_bits(-f32::NAN));
+        assert!(back.is_nan());
+        assert!(back.is_sign_negative());
+    }
+
+    #[test]
+    fn roundtrip_is_identity_on_the_f16_grid() {
+        // Every one of the 65536 f16 bit patterns must survive
+        // f16→f32→f16 exactly (NaNs compared by bit class).
+        for h in 0..=u16::MAX {
+            let x = f16_bits_to_f32(h);
+            let back = f32_to_f16_bits(x);
+            if x.is_nan() {
+                assert_eq!(back & 0x7c00, 0x7c00);
+                assert_ne!(back & 0x03ff, 0);
+                assert_eq!(back & 0x8000, h & 0x8000);
+            } else {
+                assert_eq!(back, h, "f16 bits {h:#06x} → {x} → {back:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn widening_is_exact_against_f32_arithmetic() {
+        // Every finite f16 equals sign·man·2^(e-25) computed in exact
+        // integer arithmetic — an independent check of the widening path.
+        for h in 0..=u16::MAX {
+            let exp = i32::from((h >> 10) & 0x1f);
+            let man = i64::from(h & 0x03ff);
+            if exp == 0x1f {
+                continue;
+            }
+            let (sig, e) = if exp == 0 { (man, -24) } else { (man + 1024, exp - 25) };
+            let expect = sig as f64 * 2f64.powi(e) * if h & 0x8000 != 0 { -1.0 } else { 1.0 };
+            let got = f64::from(f16_bits_to_f32(h));
+            assert_eq!(got, expect, "f16 bits {h:#06x}");
+        }
+    }
+}

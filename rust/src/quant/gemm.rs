@@ -1,0 +1,362 @@
+//! Emulated low-precision GEMM/GEMV: int8 operands, i32 accumulation,
+//! requantize to f32 at the output — the arithmetic contract of an
+//! int8 OpenCL systolic kernel, run on the host for numerics.
+//!
+//! Determinism: integer accumulation is exact and associative, so the
+//! result is bit-identical at any thread count by construction; work is
+//! sharded over *output rows* only (each row is accumulated serially by
+//! exactly one worker), mirroring the fp32 packed kernel's guarantee.
+
+use crate::util::pool;
+
+/// Quantization parameters for one operand: `real = scale · (q - zero_point)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl QuantParams {
+    /// Symmetric params (zero_point 0) from a maxabs: `scale = maxabs/127`,
+    /// with an all-zero tensor mapping to scale 1.0 so dequantization is
+    /// well-defined.
+    pub fn symmetric(maxabs: f32) -> QuantParams {
+        let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 };
+        QuantParams { scale, zero_point: 0 }
+    }
+
+    /// Asymmetric params covering `[lo, hi]` on the int8 grid (used for
+    /// activations, whose ranges are one-sided after ReLU).
+    pub fn affine(lo: f32, hi: f32) -> QuantParams {
+        let (lo, hi) = (lo.min(0.0), hi.max(0.0)); // grid must contain 0
+        let span = hi - lo;
+        if !span.is_finite() || span <= 0.0 {
+            return QuantParams { scale: 1.0, zero_point: 0 };
+        }
+        let scale = span / 255.0;
+        // zero_point is the int8 code representing real 0, rounded to the
+        // nearest representable code.
+        let zp = (-128.0 - lo / scale).round().clamp(-128.0, 127.0) as i32;
+        QuantParams { scale, zero_point: zp }
+    }
+
+    /// Params for an observed `[lo, hi]` range: one-sided non-negative
+    /// ranges (post-ReLU activations) use the full asymmetric grid,
+    /// two-sided ranges stay symmetric — which also recovers the *exact*
+    /// scale of a fake-quantized weight blob, making its re-quantization
+    /// lossless. Degenerate/unobserved ranges fall back to identity.
+    pub fn for_range(lo: f32, hi: f32) -> QuantParams {
+        if !lo.is_finite() || !hi.is_finite() || lo > hi {
+            return QuantParams { scale: 1.0, zero_point: 0 };
+        }
+        if lo >= 0.0 {
+            QuantParams::affine(lo, hi)
+        } else {
+            QuantParams::symmetric((-lo).max(hi))
+        }
+    }
+}
+
+/// Serial maxabs scan (deterministic; f32 max is order-independent for
+/// finite inputs anyway).
+pub fn maxabs(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+}
+
+/// Serial (min, max) scan; empty input yields `(inf, -inf)`, which
+/// [`QuantParams::for_range`] maps to identity params.
+pub fn minmax(xs: &[f32]) -> (f32, f32) {
+    xs.iter()
+        .fold((f32::INFINITY, f32::NEG_INFINITY), |(lo, hi), &x| (lo.min(x), hi.max(x)))
+}
+
+/// Quantize one value to the int8 grid of `p`.
+#[inline]
+pub fn quantize(x: f32, p: QuantParams) -> i8 {
+    let q = (x / p.scale).round() as i64 + i64::from(p.zero_point);
+    q.clamp(-128, 127) as i8
+}
+
+/// Dequantize one int8 code.
+#[inline]
+pub fn dequantize(q: i8, p: QuantParams) -> f32 {
+    (i32::from(q) - p.zero_point) as f32 * p.scale
+}
+
+/// Quantize a slice.
+pub fn quantize_slice(xs: &[f32], p: QuantParams) -> Vec<i8> {
+    xs.iter().map(|&x| quantize(x, p)).collect()
+}
+
+/// i32 accumulator headroom: with zero-points subtracted each product is
+/// bounded by 255·255, so k ≤ 33 025 708 rows stay exact in i32. The
+/// largest reduction in the zoo is vgg16 fc6 (k = 25 088 · 1 ≈ 2.5e4;
+/// conv gemms top out near 4.6e3), orders of magnitude inside the bound.
+pub const MAX_EXACT_K: usize = (i32::MAX as usize) / (255 * 255);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trans {
+    No,
+    Yes,
+}
+
+/// Index of logical `A[i, l]` for an m×k matrix stored row-major as
+/// m×k (`Trans::No`) or k×m (`Trans::Yes`) — the `math::gemm` layout
+/// convention.
+#[inline]
+fn a_idx(ta: Trans, m: usize, k: usize, i: usize, l: usize) -> usize {
+    let _ = m;
+    match ta {
+        Trans::No => i * k + l,
+        Trans::Yes => l * m + i,
+    }
+}
+
+/// Index of logical `B[l, j]` for a k×n matrix stored row-major as
+/// k×n (`Trans::No`) or n×k (`Trans::Yes`).
+#[inline]
+fn b_idx(tb: Trans, k: usize, n: usize, l: usize, j: usize) -> usize {
+    let _ = n;
+    match tb {
+        Trans::No => l * n + j,
+        Trans::Yes => j * k + l,
+    }
+}
+
+/// Int8 GEMM: `C = alpha · dequant(Aq ·i32 Bq) + beta · C` where the
+/// inner product runs entirely in i32 over zero-point-corrected codes,
+/// then requantizes with `sa·sb`. Shapes follow `math::gemm`: A is
+/// logically m×k, B is k×n, C is m×n row-major; `trans` flags give the
+/// stored layout of A and B.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[i8],
+    pa: QuantParams,
+    b: &[i8],
+    pb: QuantParams,
+    beta: f32,
+    c: &mut [f32],
+) {
+    assert!(a.len() >= m * k, "qgemm: A too short");
+    assert!(b.len() >= k * n, "qgemm: B too short");
+    assert!(c.len() >= m * n, "qgemm: C too short");
+    assert!(k <= MAX_EXACT_K, "qgemm: k={k} exceeds exact i32 accumulation bound");
+    let requant = pa.scale * pb.scale;
+    let za = pa.zero_point;
+    let zb = pb.zero_point;
+    // Shard output rows: each row's dot products are serial, so the
+    // split cannot change any accumulation order.
+    let grain = (m * n).div_ceil(pool::current_threads().max(1)).max(n);
+    let grain = grain.div_ceil(n) * n; // whole rows only
+    pool::parallel_chunks_mut(&mut c[..m * n], grain, |off, rows| {
+        debug_assert_eq!(off % n, 0);
+        for (ri, crow) in rows.chunks_mut(n).enumerate() {
+            let i = off / n + ri;
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let mut acc: i32 = 0;
+                for l in 0..k {
+                    let av = i32::from(a[a_idx(ta, m, k, i, l)]);
+                    let bv = i32::from(b[b_idx(tb, k, n, l, j)]);
+                    acc += (av - za) * (bv - zb);
+                }
+                let real = acc as f32 * requant;
+                *cv = if beta == 0.0 { alpha * real } else { alpha * real + beta * *cv };
+            }
+        }
+    });
+}
+
+/// Int8 GEMV with the same contract; `trans == Yes` computes `A^T x`.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemv(
+    trans: Trans,
+    m: usize,
+    n: usize,
+    alpha: f32,
+    a: &[i8],
+    pa: QuantParams,
+    x: &[i8],
+    px: QuantParams,
+    beta: f32,
+    y: &mut [f32],
+) {
+    let (rows, k) = match trans {
+        Trans::No => (m, n),
+        Trans::Yes => (n, m),
+    };
+    assert!(a.len() >= m * n, "qgemv: A too short");
+    assert!(x.len() >= k, "qgemv: x too short");
+    assert!(y.len() >= rows, "qgemv: y too short");
+    assert!(k <= MAX_EXACT_K, "qgemv: k={k} exceeds exact i32 accumulation bound");
+    let requant = pa.scale * px.scale;
+    let za = pa.zero_point;
+    let zx = px.zero_point;
+    let grain = rows.div_ceil(pool::current_threads().max(1)).max(1);
+    pool::parallel_chunks_mut(&mut y[..rows], grain, |off, chunk| {
+        for (ri, yv) in chunk.iter_mut().enumerate() {
+            let r = off + ri;
+            let mut acc: i32 = 0;
+            for l in 0..k {
+                let av = match trans {
+                    Trans::No => i32::from(a[r * n + l]),
+                    Trans::Yes => i32::from(a[l * n + r]),
+                };
+                acc += (av - za) * (i32::from(x[l]) - zx);
+            }
+            let real = acc as f32 * requant;
+            *yv = if beta == 0.0 { alpha * real } else { alpha * real + beta * *yv };
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_qgemm(
+        ta: Trans,
+        tb: Trans,
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f32,
+        a: &[i8],
+        pa: QuantParams,
+        b: &[i8],
+        pb: QuantParams,
+        beta: f32,
+        c: &mut [f32],
+    ) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i32;
+                for l in 0..k {
+                    // Independent index arithmetic (no shared helpers):
+                    // A[i,l] and B[l,j] in the math::gemm storage layout.
+                    let av = i32::from(match ta {
+                        Trans::No => a[i * k + l],
+                        Trans::Yes => a[l * m + i],
+                    });
+                    let bv = i32::from(match tb {
+                        Trans::No => b[l * n + j],
+                        Trans::Yes => b[j * k + l],
+                    });
+                    acc += (av - pa.zero_point) * (bv - pb.zero_point);
+                }
+                let real = acc as f32 * pa.scale * pb.scale;
+                c[i * n + j] = if beta == 0.0 {
+                    alpha * real
+                } else {
+                    alpha * real + beta * c[i * n + j]
+                };
+            }
+        }
+    }
+
+    fn fill(seed: u64, len: usize) -> Vec<i8> {
+        let mut s = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15) | 1;
+        (0..len)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s % 255) as i64 as i8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_naive_all_transpose_combos() {
+        let pa = QuantParams { scale: 0.02, zero_point: 3 };
+        let pb = QuantParams::symmetric(1.27);
+        for &(ta, tb) in &[
+            (Trans::No, Trans::No),
+            (Trans::No, Trans::Yes),
+            (Trans::Yes, Trans::No),
+            (Trans::Yes, Trans::Yes),
+        ] {
+            let (m, n, k) = (7, 11, 13);
+            let a = fill(1, m * k);
+            let b = fill(2, k * n);
+            let mut c = vec![0.5f32; m * n];
+            let mut c2 = c.clone();
+            qgemm(ta, tb, m, n, k, 0.7, &a, pa, &b, pb, 0.3, &mut c);
+            naive_qgemm(ta, tb, m, n, k, 0.7, &a, pa, &b, pb, 0.3, &mut c2);
+            assert_eq!(c, c2, "mismatch for ({ta:?},{tb:?})");
+        }
+    }
+
+    #[test]
+    fn bit_identical_across_thread_counts() {
+        let (m, n, k) = (33, 17, 65);
+        let a = fill(3, m * k);
+        let b = fill(4, k * n);
+        let pa = QuantParams { scale: 0.013, zero_point: -7 };
+        let pb = QuantParams::symmetric(0.9);
+        let mut base = vec![0.0f32; m * n];
+        pool::with_intra_op(1, || qgemm(Trans::No, Trans::Yes, m, n, k, 1.0, &a, pa, &b, pb, 0.0, &mut base));
+        for t in [2usize, 3, 8] {
+            let mut c = vec![0.0f32; m * n];
+            pool::with_intra_op(t, || {
+                qgemm(Trans::No, Trans::Yes, m, n, k, 1.0, &a, pa, &b, pb, 0.0, &mut c);
+            });
+            assert_eq!(c, base, "qgemm differs at {t} threads");
+        }
+        let mut ybase = vec![0.0f32; m];
+        pool::with_intra_op(1, || qgemv(Trans::No, m, n, 1.0, &a, pa, &b[..n], pb, 0.0, &mut ybase));
+        for t in [2usize, 5] {
+            let mut y = vec![0.0f32; m];
+            pool::with_intra_op(t, || {
+                qgemv(Trans::No, m, n, 1.0, &a, pa, &b[..n], pb, 0.0, &mut y);
+            });
+            assert_eq!(y, ybase, "qgemv differs at {t} threads");
+        }
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_bounded_by_half_scale() {
+        let xs: Vec<f32> = (0..1000).map(|i| ((i as f32) * 0.77).sin() * 3.0).collect();
+        let p = QuantParams::symmetric(maxabs(&xs));
+        for &x in &xs {
+            let err = (dequantize(quantize(x, p), p) - x).abs();
+            assert!(err <= p.scale / 2.0 + 1e-7, "x={x} err={err} scale={}", p.scale);
+        }
+        // Requantizing a dequantized grid value is lossless.
+        for q in -128i8..=127 {
+            assert_eq!(quantize(dequantize(q, p), p), q);
+        }
+    }
+
+    #[test]
+    fn affine_params_cover_range_and_pin_zero() {
+        let p = QuantParams::affine(0.0, 6.0); // post-ReLU style range
+        assert_eq!(p.zero_point, -128);
+        assert!((dequantize(-128, p)).abs() < 1e-7, "real 0 must be exact");
+        assert!((dequantize(127, p) - 6.0).abs() < 1e-5);
+        let p = QuantParams::affine(-1.0, 3.0);
+        assert!((dequantize(quantize(0.0, p), p)).abs() < 1e-7);
+        // Degenerate range falls back to identity-ish params.
+        let p = QuantParams::affine(0.0, 0.0);
+        assert_eq!(p, QuantParams { scale: 1.0, zero_point: 0 });
+    }
+
+    #[test]
+    fn gemv_matches_gemm_row() {
+        let (m, n) = (9, 21);
+        let a = fill(9, m * n);
+        let x = fill(10, n);
+        let pa = QuantParams::symmetric(2.0);
+        let px = QuantParams { scale: 0.05, zero_point: 11 };
+        let mut y = vec![0.0f32; m];
+        qgemv(Trans::No, m, n, 1.0, &a, pa, &x, px, 0.0, &mut y);
+        let mut c = vec![0.0f32; m];
+        qgemm(Trans::No, Trans::No, m, 1, n, 1.0, &a, pa, &x, px, 0.0, &mut c);
+        assert_eq!(y, c);
+    }
+}

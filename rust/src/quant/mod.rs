@@ -1,0 +1,176 @@
+//! Post-training reduced-precision serving (ROADMAP "Reduced-precision
+//! serving (fp16/int8 emulation)").
+//!
+//! The FPGA CNN literature's dominant lever: int8 multiplies pack ~4×
+//! more MACs per DSP than fp32 and move a quarter of the DDR bytes.
+//! This module provides the whole pipeline:
+//!
+//! * [`calibrate`] — run a few fp32 batches, record per-GEMM operand
+//!   ranges, derive a versioned [`QuantSpec`] (`FEQSPEC1` container);
+//! * [`snapshot::QuantizedSnapshot`] — per-blob int8 payloads + scales
+//!   (`FEQSNAP1` container), dequantizing to the *fake-quant* snapshot
+//!   the engine serves;
+//! * [`backend::QuantBackend`] — a [`NumericBackend`] that executes
+//!   GEMM/GEMV in emulated int8 (i32 accumulation, requantize) or fp16
+//!   (operands rounded through the f16 grid, f32 accumulation) —
+//!   bit-identical at any thread count, like the fp32 packed kernel;
+//! * a precision-aware cost model (`device/fpga/costmodel.rs` charges
+//!   int8 at its SIMD-lane advantage and reduced DDR traffic).
+//!
+//! Model names carry precision as a suffix: `lenet@int8` serves the
+//! quantized variant next to plain fp32 `lenet` in one process.
+//!
+//! [`NumericBackend`]: crate::device::fpga::NumericBackend
+
+pub mod backend;
+pub mod calibrate;
+pub mod f16;
+pub mod gemm;
+pub mod snapshot;
+
+pub use calibrate::{quant_key, QuantSpec};
+pub use snapshot::QuantizedSnapshot;
+
+use crate::device::KClass;
+use crate::net::WeightSnapshot;
+
+/// Serving numeric precision. `Fp32` is the native path; the reduced
+/// modes change weight storage, the GEMM/GEMV execution path, and the
+/// FPGA cost model's lane/byte accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    #[default]
+    Fp32,
+    Fp16,
+    Int8,
+}
+
+impl Precision {
+    /// Parse a precision suffix/flag value (`fp32`, `fp16`, `int8`).
+    pub fn parse(s: &str) -> anyhow::Result<Precision> {
+        match s {
+            "fp32" | "f32" | "float" => Ok(Precision::Fp32),
+            "fp16" | "f16" | "half" => Ok(Precision::Fp16),
+            "int8" | "i8" => Ok(Precision::Int8),
+            other => anyhow::bail!(
+                "unknown precision '{other}' (expected fp32, fp16 or int8)"
+            ),
+        }
+    }
+
+    /// Canonical label for metrics, file names and logs.
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Fp16 => "fp16",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    /// Storage bytes per element on the device.
+    pub fn elem_bytes(self) -> u64 {
+        match self {
+            Precision::Fp32 => 4,
+            Precision::Fp16 => 2,
+            Precision::Int8 => 1,
+        }
+    }
+
+    /// SIMD-lane multiplier for a kernel class relative to fp32: how
+    /// many more MACs per DSP the precision packs. Only the matmul
+    /// engines are DSP-bound; the streaming kernels are memory-bound and
+    /// take their win from the byte reduction instead.
+    pub fn lane_multiplier(self, class: KClass) -> f64 {
+        match (self, class) {
+            (Precision::Fp32, _) => 1.0,
+            (Precision::Fp16, KClass::Gemm | KClass::Gemv) => 2.0,
+            (Precision::Int8, KClass::Gemm | KClass::Gemv) => 4.0,
+            _ => 1.0,
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Split a serving model name into (base zoo name, precision).
+/// `"lenet"` → `("lenet", Fp32)`; `"lenet@int8"` → `("lenet", Int8)`.
+pub fn split_model_name(name: &str) -> anyhow::Result<(&str, Precision)> {
+    match name.split_once('@') {
+        None => Ok((name, Precision::Fp32)),
+        Some((base, suffix)) => {
+            anyhow::ensure!(!base.is_empty(), "empty model name before '@' in '{name}'");
+            let p = Precision::parse(suffix)
+                .map_err(|e| e.context(format!("model '{name}'")))?;
+            Ok((base, p))
+        }
+    }
+}
+
+/// Transform a published weight snapshot onto the serving precision's
+/// grid, preserving version/tag identity:
+///
+/// * `Fp32` — unchanged;
+/// * `Fp16` — every weight rounded through the f16 grid (RNE);
+/// * `Int8` — fake-quant: quantize symmetrically per blob and
+///   dequantize, so replicas hold weights that sit exactly on their
+///   int8 grid and the emulated GEMM's re-quantization is lossless.
+pub fn prepare_weights(snap: &WeightSnapshot, precision: Precision) -> WeightSnapshot {
+    match precision {
+        Precision::Fp32 => snap.clone(),
+        Precision::Int8 => QuantizedSnapshot::from_snapshot(snap)
+            .dequantize()
+            .with_version(snap.version()),
+        Precision::Fp16 => {
+            let blobs = (0..snap.len())
+                .map(|i| {
+                    let mut v = snap.blob_data(i).expect("blob index in range").to_vec();
+                    f16::f16_round_slice(&mut v);
+                    std::sync::Arc::new(v)
+                })
+                .collect();
+            let mut out = WeightSnapshot::from_parts(
+                snap.version(),
+                snap.tag().map(str::to_owned),
+                snap.keys().to_vec(),
+                blobs,
+            );
+            // from_parts keeps version; ensure tag/version identity.
+            out = out.with_version(snap.version());
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_labels_round_trip() {
+        for p in [Precision::Fp32, Precision::Fp16, Precision::Int8] {
+            assert_eq!(Precision::parse(p.label()).unwrap(), p);
+        }
+        assert!(Precision::parse("int4").is_err());
+    }
+
+    #[test]
+    fn split_model_name_handles_suffixes() {
+        assert_eq!(split_model_name("lenet").unwrap(), ("lenet", Precision::Fp32));
+        assert_eq!(split_model_name("lenet@int8").unwrap(), ("lenet", Precision::Int8));
+        assert_eq!(split_model_name("vgg16@fp16").unwrap(), ("vgg16", Precision::Fp16));
+        assert!(split_model_name("lenet@int4").is_err());
+        assert!(split_model_name("@int8").is_err());
+    }
+
+    #[test]
+    fn lane_multiplier_only_boosts_matmul() {
+        assert_eq!(Precision::Int8.lane_multiplier(KClass::Gemm), 4.0);
+        assert_eq!(Precision::Int8.lane_multiplier(KClass::ReluF), 1.0);
+        assert_eq!(Precision::Fp16.lane_multiplier(KClass::Gemv), 2.0);
+        assert_eq!(Precision::Fp32.lane_multiplier(KClass::Gemm), 1.0);
+    }
+}

@@ -1,0 +1,173 @@
+//! `QuantizedSnapshot`: per-blob int8 payloads + symmetric scales
+//! derived from a [`WeightSnapshot`], serialized as an `FEQSNAP1`
+//! container over `util::binio`.
+//!
+//! Weights are quantized symmetrically (`scale = maxabs/127`, zero
+//! point 0) per blob — the standard post-training choice, since weight
+//! distributions are zero-centered. Dequantizing yields the *fake
+//! quant* snapshot the serving engine actually adopts: every weight
+//! sits exactly on its int8 grid, so the emulated int8 GEMM's dynamic
+//! re-quantization recovers the codes losslessly.
+
+use super::gemm::{dequantize, quantize, QuantParams};
+use crate::net::WeightSnapshot;
+use std::sync::Arc;
+
+/// Magic header of the quantized-weights container.
+const QSNAP_MAGIC: &[u8; 8] = b"FEQSNAP1";
+
+/// One quantized parameter blob.
+#[derive(Debug, Clone)]
+pub struct QuantBlob {
+    /// Symmetric scale: `real = scale · q`.
+    pub scale: f32,
+    pub data: Vec<i8>,
+}
+
+/// Int8 form of a [`WeightSnapshot`]: same identity keys and version,
+/// quarter the payload.
+#[derive(Debug, Clone, Default)]
+pub struct QuantizedSnapshot {
+    version: u64,
+    tag: Option<String>,
+    keys: Vec<(String, usize)>,
+    blobs: Vec<QuantBlob>,
+}
+
+impl QuantizedSnapshot {
+    /// Quantize every blob of `snap` symmetrically.
+    pub fn from_snapshot(snap: &WeightSnapshot) -> QuantizedSnapshot {
+        let mut blobs = Vec::with_capacity(snap.len());
+        for i in 0..snap.len() {
+            let data = snap.blob_data(i).expect("blob index in range");
+            let p = QuantParams::symmetric(super::gemm::maxabs(data));
+            blobs.push(QuantBlob {
+                scale: p.scale,
+                data: data.iter().map(|&x| quantize(x, p)).collect(),
+            });
+        }
+        QuantizedSnapshot {
+            version: snap.version(),
+            tag: snap.tag().map(str::to_owned),
+            keys: snap.keys().to_vec(),
+            blobs,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.blobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blobs.is_empty()
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn tag(&self) -> Option<&str> {
+        self.tag.as_deref()
+    }
+
+    pub fn keys(&self) -> &[(String, usize)] {
+        &self.keys
+    }
+
+    pub fn blob(&self, i: usize) -> Option<&QuantBlob> {
+        self.blobs.get(i)
+    }
+
+    /// Total int8 payload bytes (the DDR footprint of the weights).
+    pub fn payload_bytes(&self) -> usize {
+        self.blobs.iter().map(|b| b.data.len()).sum()
+    }
+
+    /// Expand back to an f32 [`WeightSnapshot`] whose values sit exactly
+    /// on the int8 grid (the engine-facing fake-quant snapshot).
+    pub fn dequantize(&self) -> WeightSnapshot {
+        let blobs = self
+            .blobs
+            .iter()
+            .map(|b| {
+                let p = QuantParams { scale: b.scale, zero_point: 0 };
+                Arc::new(b.data.iter().map(|&q| dequantize(q, p)).collect::<Vec<f32>>())
+            })
+            .collect();
+        WeightSnapshot::from_parts(self.version, self.tag.clone(), self.keys.clone(), blobs)
+    }
+
+    /// Serialize as an `FEQSNAP1` container (little-endian, one record
+    /// per blob: identity key, scale, int8 payload).
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        use crate::util::binio::{put_f32s, put_str, put_u32, put_u64};
+        use std::io::Write;
+        if let Some(dir) = path.as_ref().parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        w.write_all(QSNAP_MAGIC)?;
+        put_u64(&mut w, self.version)?;
+        put_str(&mut w, self.tag.as_deref().unwrap_or(""))?;
+        put_u32(&mut w, self.blobs.len() as u32)?;
+        for ((owner, slot), blob) in self.keys.iter().zip(self.blobs.iter()) {
+            put_str(&mut w, owner)?;
+            put_u32(&mut w, *slot as u32)?;
+            put_f32s(&mut w, &[blob.scale])?;
+            put_u32(&mut w, blob.data.len() as u32)?;
+            // i8 codes are written as raw two's-complement bytes.
+            let bytes: Vec<u8> = blob.data.iter().map(|&v| v as u8).collect();
+            w.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Load an `FEQSNAP1` container; every length is bounded by the file
+    /// size before allocation (same hardening as `FEWSNAP1`).
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<QuantizedSnapshot> {
+        use crate::util::binio::{get_f32s, get_str, get_u32, get_u64};
+        use std::io::Read;
+        let file = std::fs::File::open(&path)?;
+        let file_len = file.metadata()?.len() as usize;
+        let mut r = std::io::BufReader::new(file);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == QSNAP_MAGIC, "not a FEQSNAP1 quantized snapshot (bad magic)");
+        let version = get_u64(&mut r)?;
+        let tag = get_str(&mut r, file_len)?;
+        let count = get_u32(&mut r)? as usize;
+        anyhow::ensure!(
+            count <= file_len / 16,
+            "implausible blob count {count} for a {file_len}-byte container"
+        );
+        let mut keys = Vec::with_capacity(count);
+        let mut blobs = Vec::with_capacity(count);
+        for _ in 0..count {
+            let owner = get_str(&mut r, file_len)?;
+            let slot = get_u32(&mut r)? as usize;
+            let scale = get_f32s(&mut r, 1)?[0];
+            anyhow::ensure!(
+                scale.is_finite() && scale > 0.0,
+                "corrupt scale {scale} for layer '{owner}'"
+            );
+            let n = get_u32(&mut r)? as usize;
+            anyhow::ensure!(
+                n <= file_len,
+                "implausible blob length {n} for a {file_len}-byte container"
+            );
+            let mut bytes = vec![0u8; n];
+            r.read_exact(&mut bytes)?;
+            let data = bytes.into_iter().map(|b| b as i8).collect();
+            keys.push((owner, slot));
+            blobs.push(QuantBlob { scale, data });
+        }
+        Ok(QuantizedSnapshot {
+            version,
+            tag: if tag.is_empty() { None } else { Some(tag) },
+            keys,
+            blobs,
+        })
+    }
+}

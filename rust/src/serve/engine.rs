@@ -27,6 +27,7 @@ use super::worker;
 use crate::net::{Net, WeightSnapshot};
 use crate::obs::EngineObs;
 use crate::proto::{NetParameter, Phase};
+use crate::quant::{self, backend::QuantBackend, Precision, QuantSpec};
 use crate::util::chaos::{ChaosState, FaultPlan};
 use crate::zoo::{deploy, DeployNet};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
@@ -46,9 +47,34 @@ pub enum DeviceKind {
 
 impl DeviceKind {
     pub(crate) fn create(&self) -> Box<dyn crate::device::Device> {
+        self.create_with(Precision::Fp32, None)
+    }
+
+    /// Create a device serving at `precision`: reduced modes attach the
+    /// emulated quant backend for numerics, and the FPGA sim's cost
+    /// model is re-rated for the narrow bitstream.
+    pub(crate) fn create_with(
+        &self,
+        precision: Precision,
+        spec: Option<Arc<QuantSpec>>,
+    ) -> Box<dyn crate::device::Device> {
         match self {
-            DeviceKind::Cpu => Box::new(crate::device::cpu::CpuDevice::new()),
-            DeviceKind::FpgaSim => Box::new(crate::device::fpga::FpgaSimDevice::new()),
+            DeviceKind::Cpu => {
+                let dev = crate::device::cpu::CpuDevice::new();
+                if precision == Precision::Fp32 {
+                    Box::new(dev)
+                } else {
+                    Box::new(dev.with_backend(Box::new(QuantBackend::new(precision, spec))))
+                }
+            }
+            DeviceKind::FpgaSim => {
+                let dev = crate::device::fpga::FpgaSimDevice::new().with_precision(precision);
+                if precision == Precision::Fp32 {
+                    Box::new(dev)
+                } else {
+                    Box::new(dev.with_backend(Box::new(QuantBackend::new(precision, spec))))
+                }
+            }
         }
     }
 }
@@ -105,6 +131,13 @@ pub struct EngineConfig {
     /// skips the live admission re-planning entirely; any miss demotes
     /// to the live path with a typed error and a `cache_miss` metric.
     pub aot_cache: Option<std::path::PathBuf>,
+    /// Serving numeric precision. `Int8` fake-quantizes every published
+    /// snapshot onto its per-blob int8 grid, runs a boot-time
+    /// calibration pass for static activation ranges, and executes
+    /// matmuls through the emulated int8 path; `Fp16` rounds weights
+    /// and matmul operands through the binary16 grid. Both re-rate the
+    /// FPGA sim's cost model.
+    pub precision: Precision,
 }
 
 impl Default for EngineConfig {
@@ -123,6 +156,7 @@ impl Default for EngineConfig {
             breaker_cooldown: Duration::from_millis(250),
             chaos: None,
             aot_cache: None,
+            precision: Precision::Fp32,
         }
     }
 }
@@ -483,6 +517,13 @@ struct Threads {
     supervisor: Option<JoinHandle<()>>,
 }
 
+/// Post-training calibration forwards run at engine boot for int8
+/// models: enough synthetic batches to observe every matmul shape, with
+/// a fixed seed so every boot of the same net derives the same
+/// [`QuantSpec`] (and thus bit-identical serving behaviour).
+const CALIBRATION_BATCHES: usize = 2;
+const CALIBRATION_SEED: u64 = 0x5eed_cafe;
+
 /// Everything needed to (re)spawn a worker thread — kept by the
 /// supervisor so a respawned worker is indistinguishable from one
 /// spawned at startup.
@@ -490,6 +531,8 @@ struct WorkerSpawner {
     deploy: DeployNet,
     weights: Arc<SharedWeights>,
     device: DeviceKind,
+    precision: Precision,
+    quant_spec: Option<Arc<QuantSpec>>,
     intra_op: usize,
     output_len: usize,
     queue: Arc<SharedQueue<Batch>>,
@@ -507,6 +550,8 @@ impl WorkerSpawner {
             deploy: self.deploy.clone(),
             weights: self.weights.clone(),
             device: self.device,
+            precision: self.precision,
+            quant_spec: self.quant_spec.clone(),
             intra_op: self.intra_op,
             output_len: self.output_len,
             queue: self.queue.clone(),
@@ -601,6 +646,7 @@ pub struct Engine {
     /// (and projected) *before* it can reach a worker.
     param_keys: Vec<(String, usize)>,
     param_lens: Vec<usize>,
+    quant_spec: Option<Arc<QuantSpec>>,
     output_len: usize,
     submit_q: Arc<SharedQueue<Request>>,
     dispatch_q: Arc<SharedQueue<Batch>>,
@@ -627,6 +673,7 @@ impl Engine {
         // or thread spawned. Error-severity findings refuse the model
         // with a typed `netlint::LintError`; warnings are surfaced but
         // don't block serving.
+        let precision = cfg.precision;
         let run_live_lint = |dep: &DeployNet| -> anyhow::Result<()> {
             let lint = crate::netlint::lint_net(
                 &dep.param,
@@ -634,6 +681,7 @@ impl Engine {
                     phase: Phase::Test,
                     buckets: buckets.clone(),
                     forward_only: true,
+                    precision,
                     ..Default::default()
                 },
             );
@@ -663,7 +711,7 @@ impl Engine {
         let cache_dir = cfg.aot_cache.clone().or_else(crate::aot::env_cache_dir);
         let board = crate::device::fpga::costmodel::BoardParams::default();
         let mut boot = match &cache_dir {
-            Some(dir) => crate::aot::cold_boot(dir, &dep, &buckets, &board),
+            Some(dir) => crate::aot::cold_boot(dir, &dep, &buckets, &board, cfg.precision),
             None => crate::aot::ColdBoot::disabled(),
         };
         if let Some(dir) = &cache_dir {
@@ -714,6 +762,30 @@ impl Engine {
         let param_keys = weights.keys().to_vec();
         let param_lens = weights.blob_lens();
 
+        // Reduced precision: project the boot weights onto the serving
+        // grid (int8 fake-quant / fp16 rounding) before anything is
+        // published, and — int8 only — run the post-training calibration
+        // forwards on the weights that will actually serve, deriving the
+        // static per-kernel-shape activation ranges workers quantize by.
+        let weights = quant::prepare_weights(&weights, cfg.precision);
+        let quant_spec = if cfg.precision == Precision::Int8 {
+            let spec = quant::calibrate::calibrate(
+                &dep.param.name,
+                &dep,
+                Some(&weights),
+                CALIBRATION_BATCHES,
+                CALIBRATION_SEED,
+            )?;
+            eprintln!(
+                "[serve] quant: calibrated {} matmul shape(s) for '{}' @ int8",
+                spec.len(),
+                dep.param.name
+            );
+            Some(Arc::new(spec))
+        } else {
+            None
+        };
+
         // The weights schema only materializes with the master replica,
         // so a cold boot is confirmed here: cached envelopes must name
         // exactly the live parameter blobs. A mismatch demotes the boot
@@ -721,7 +793,7 @@ impl Engine {
         // workers adopt snapshots a stale cache never described.
         if boot.complete() {
             let (b0, art) = &boot.hits[0];
-            let rel = crate::aot::plan_rel_path(&dep.param.name, *b0);
+            let rel = crate::aot::plan_rel_path(&dep.param.name, *b0, cfg.precision);
             if let Err(e) = crate::aot::validate_weights(art, &param_keys, &param_lens, &rel) {
                 eprintln!("[serve] {e}");
                 eprintln!("[serve] aot: demoting cold boot, planning live");
@@ -778,6 +850,8 @@ impl Engine {
             deploy: dep.clone(),
             weights: shared.clone(),
             device: cfg.device,
+            precision: cfg.precision,
+            quant_spec: quant_spec.clone(),
             intra_op: cfg.intra_op_budget(),
             output_len,
             queue: dispatch_q.clone(),
@@ -832,6 +906,7 @@ impl Engine {
             shared,
             param_keys,
             param_lens,
+            quant_spec,
             output_len,
             submit_q,
             dispatch_q,
@@ -898,6 +973,11 @@ impl Engine {
         let projected = snap
             .project(&self.param_keys, &self.param_lens)
             .map_err(|e| PublishError::Mismatch(format!("{e:#}")))?;
+        // Hot-swapped snapshots serve at the engine's precision too:
+        // project onto the quantization grid before taking the lock, so
+        // workers never mix a full-precision publish into an int8/fp16
+        // serving path.
+        let projected = quant::prepare_weights(&projected, self.cfg.precision);
         let mut slot = lock_unpoisoned(&self.shared.slot);
         let current = self.shared.version.load(Ordering::Acquire);
         let offered = projected.version();
@@ -932,6 +1012,16 @@ impl Engine {
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// Numeric precision this engine serves at.
+    pub fn precision(&self) -> Precision {
+        self.cfg.precision
+    }
+
+    /// Static activation-range spec derived at boot (int8 engines only).
+    pub fn quant_spec(&self) -> Option<&Arc<QuantSpec>> {
+        self.quant_spec.as_ref()
     }
 
     /// The engine's observability hub: sampled batch traces and

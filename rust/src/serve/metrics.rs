@@ -541,13 +541,23 @@ pub fn breaker_state_name(state: u64) -> &'static str {
 
 /// Render per-model metric reports in the Prometheus text exposition
 /// format (`text/plain; version=0.0.4`). Each family's `# HELP`/`# TYPE`
-/// header appears once, followed by one sample per model label. The
+/// header appears once, followed by one sample per `(model, precision)`
+/// label pair — `lenet` and `lenet@int8` are separate series sharing
+/// `model="lenet"`, distinguished by the `precision` label. The
 /// request-latency family is a true Prometheus histogram: cumulative
 /// `le` buckets converted from the log2 histogram's exact power-of-two
 /// nanosecond bounds into seconds, so bucket counts carry none of the
 /// midpoint error the JSON quantile estimates have.
-pub fn prometheus_text(reports: &[(String, MetricsReport)]) -> String {
+pub fn prometheus_text(reports: &[(String, String, MetricsReport)]) -> String {
     let mut out = String::new();
+    // One `model="…",precision="…"` label set per report, reused by
+    // every family below.
+    let reports: Vec<(String, &MetricsReport)> = reports
+        .iter()
+        .map(|(model, precision, r)| {
+            (format!("model=\"{model}\",precision=\"{precision}\""), r)
+        })
+        .collect();
     let counters: &[(&str, &str, fn(&MetricsReport) -> u64)] = &[
         ("fecaffe_requests_submitted_total", "Requests admitted into the engine.", |r| r.submitted),
         ("fecaffe_requests_rejected_total", "Requests rejected at admission (queue full).", |r| {
@@ -587,8 +597,8 @@ pub fn prometheus_text(reports: &[(String, MetricsReport)]) -> String {
     ];
     for &(name, help, get) in counters {
         out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n"));
-        for (model, r) in reports {
-            out.push_str(&format!("{name}{{model=\"{model}\"}} {}\n", get(r)));
+        for (labels, r) in &reports {
+            out.push_str(&format!("{name}{{{labels}}} {}\n", get(r)));
         }
     }
     let gauges: &[(&str, &str, fn(&MetricsReport) -> f64)] = &[
@@ -614,15 +624,15 @@ pub fn prometheus_text(reports: &[(String, MetricsReport)]) -> String {
     ];
     for &(name, help, get) in gauges {
         out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n"));
-        for (model, r) in reports {
-            out.push_str(&format!("{name}{{model=\"{model}\"}} {}\n", get(r)));
+        for (labels, r) in &reports {
+            out.push_str(&format!("{name}{{{labels}}} {}\n", get(r)));
         }
     }
     let lat = "fecaffe_request_latency_seconds";
     out.push_str(&format!(
         "# HELP {lat} End-to-end request latency (submit to response).\n# TYPE {lat} histogram\n"
     ));
-    for (model, r) in reports {
+    for (labels, r) in &reports {
         let mut cum = 0u64;
         for &(le_ns, count) in &r.latency_buckets {
             if le_ns == u64::MAX {
@@ -630,30 +640,30 @@ pub fn prometheus_text(reports: &[(String, MetricsReport)]) -> String {
             }
             cum += count;
             out.push_str(&format!(
-                "{lat}_bucket{{model=\"{model}\",le=\"{}\"}} {cum}\n",
+                "{lat}_bucket{{{labels},le=\"{}\"}} {cum}\n",
                 le_ns as f64 / 1e9
             ));
         }
         out.push_str(&format!(
-            "{lat}_bucket{{model=\"{model}\",le=\"+Inf\"}} {}\n",
+            "{lat}_bucket{{{labels},le=\"+Inf\"}} {}\n",
             r.latency_count
         ));
         out.push_str(&format!(
-            "{lat}_sum{{model=\"{model}\"}} {}\n",
+            "{lat}_sum{{{labels}}} {}\n",
             r.latency_sum_ns as f64 / 1e9
         ));
-        out.push_str(&format!("{lat}_count{{model=\"{model}\"}} {}\n", r.latency_count));
+        out.push_str(&format!("{lat}_count{{{labels}}} {}\n", r.latency_count));
     }
     let sim = "fecaffe_sim_batch_seconds";
     out.push_str(&format!(
         "# HELP {sim} Simulated device time per batch (FPGA-sim workers).\n# TYPE {sim} summary\n"
     ));
-    for (model, r) in reports {
+    for (labels, r) in &reports {
         out.push_str(&format!(
-            "{sim}_sum{{model=\"{model}\"}} {}\n",
+            "{sim}_sum{{{labels}}} {}\n",
             r.sim_total_ns as f64 / 1e9
         ));
-        out.push_str(&format!("{sim}_count{{model=\"{model}\"}} {}\n", r.sim_batches));
+        out.push_str(&format!("{sim}_count{{{labels}}} {}\n", r.sim_batches));
     }
     out
 }
@@ -823,23 +833,31 @@ mod tests {
         m.record_queue_depth(2);
         m.record_publish(4);
         let reports = vec![
-            ("lenet".to_string(), m.snapshot()),
-            ("mlp".to_string(), Metrics::new().snapshot()),
+            ("lenet".to_string(), "fp32".to_string(), m.snapshot()),
+            ("lenet".to_string(), "int8".to_string(), Metrics::new().snapshot()),
         ];
         let text = prometheus_text(&reports);
-        // One TYPE header per family, one sample per model.
+        // One TYPE header per family, one sample per (model, precision):
+        // the int8 variant shares the model label, distinguished by the
+        // precision label.
         assert_eq!(text.matches("# TYPE fecaffe_requests_completed_total counter").count(), 1);
-        assert!(text.contains("fecaffe_requests_completed_total{model=\"lenet\"} 2"));
-        assert!(text.contains("fecaffe_requests_completed_total{model=\"mlp\"} 0"));
-        assert!(text.contains("fecaffe_queue_depth{model=\"lenet\"} 2"));
-        assert!(text.contains("fecaffe_queue_depth_high_water{model=\"lenet\"} 2"));
-        assert!(text.contains("fecaffe_weights_version{model=\"lenet\"} 4"));
+        assert!(text
+            .contains("fecaffe_requests_completed_total{model=\"lenet\",precision=\"fp32\"} 2"));
+        assert!(text
+            .contains("fecaffe_requests_completed_total{model=\"lenet\",precision=\"int8\"} 0"));
+        assert!(text.contains("fecaffe_queue_depth{model=\"lenet\",precision=\"fp32\"} 2"));
+        assert!(
+            text.contains("fecaffe_queue_depth_high_water{model=\"lenet\",precision=\"fp32\"} 2")
+        );
+        assert!(text.contains("fecaffe_weights_version{model=\"lenet\",precision=\"fp32\"} 4"));
         // Histogram: exact cumulative le buckets in seconds, +Inf = count.
         let lat = "fecaffe_request_latency_seconds";
-        assert!(text.contains(&format!("{lat}_bucket{{model=\"lenet\",le=\"0.000001024\"}} 1")));
-        assert!(text.contains(&format!("{lat}_bucket{{model=\"lenet\",le=\"+Inf\"}} 2")));
-        assert!(text.contains(&format!("{lat}_count{{model=\"lenet\"}} 2")));
-        assert!(text.contains(&format!("{lat}_count{{model=\"mlp\"}} 0")));
+        let l32 = "model=\"lenet\",precision=\"fp32\"";
+        let l8 = "model=\"lenet\",precision=\"int8\"";
+        assert!(text.contains(&format!("{lat}_bucket{{{l32},le=\"0.000001024\"}} 1")));
+        assert!(text.contains(&format!("{lat}_bucket{{{l32},le=\"+Inf\"}} 2")));
+        assert!(text.contains(&format!("{lat}_count{{{l32}}} 2")));
+        assert!(text.contains(&format!("{lat}_count{{{l8}}} 0")));
         // Every line is a comment or `name{labels} value`.
         for line in text.lines() {
             assert!(line.starts_with('#') || line.contains("} "), "bad line: {line}");
@@ -878,14 +896,15 @@ mod tests {
         assert_eq!(fb.get("breaker_rejected").unwrap().as_usize().unwrap(), 1);
         assert_eq!(j.get("restarts").unwrap().as_usize().unwrap(), 1);
         // Prometheus families for the fault-tolerance layer.
-        let text = prometheus_text(&[("lenet".to_string(), r)]);
-        assert!(text.contains("fecaffe_requests_shed_expired_total{model=\"lenet\"} 2"));
-        assert!(text.contains("fecaffe_worker_restarts_total{model=\"lenet\"} 1"));
-        assert!(text.contains("fecaffe_transient_retries_total{model=\"lenet\"} 1"));
-        assert!(text.contains("fecaffe_breaker_rejected_total{model=\"lenet\"} 1"));
-        assert!(text.contains("fecaffe_breaker_trips_total{model=\"lenet\"} 1"));
-        assert!(text.contains("fecaffe_healthy_workers{model=\"lenet\"} 3"));
-        assert!(text.contains("fecaffe_breaker_state{model=\"lenet\"} 2"));
+        let text = prometheus_text(&[("lenet".to_string(), "fp32".to_string(), r)]);
+        let l = "{model=\"lenet\",precision=\"fp32\"}";
+        assert!(text.contains(&format!("fecaffe_requests_shed_expired_total{l} 2")));
+        assert!(text.contains(&format!("fecaffe_worker_restarts_total{l} 1")));
+        assert!(text.contains(&format!("fecaffe_transient_retries_total{l} 1")));
+        assert!(text.contains(&format!("fecaffe_breaker_rejected_total{l} 1")));
+        assert!(text.contains(&format!("fecaffe_breaker_trips_total{l} 1")));
+        assert!(text.contains(&format!("fecaffe_healthy_workers{l} 3")));
+        assert!(text.contains(&format!("fecaffe_breaker_state{l} 2")));
         assert_eq!(breaker_state_name(0), "closed");
         assert_eq!(breaker_state_name(1), "open");
         assert_eq!(breaker_state_name(2), "half-open");
@@ -905,9 +924,11 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.get("cache_hit").unwrap().as_usize().unwrap(), 4);
         assert_eq!(j.get("cache_miss").unwrap().as_usize().unwrap(), 0);
-        let text = prometheus_text(&[("lenet".to_string(), r)]);
-        assert!(text.contains("fecaffe_aot_cache_hit_total{model=\"lenet\"} 4"));
-        assert!(text.contains("fecaffe_aot_cache_miss_total{model=\"lenet\"} 0"));
+        let text = prometheus_text(&[("lenet".to_string(), "int8".to_string(), r)]);
+        assert!(text
+            .contains("fecaffe_aot_cache_hit_total{model=\"lenet\",precision=\"int8\"} 4"));
+        assert!(text
+            .contains("fecaffe_aot_cache_miss_total{model=\"lenet\",precision=\"int8\"} 0"));
         // A demoted boot records the misses.
         m.set_aot_cache(0, 4);
         assert_eq!(m.snapshot().cache_miss, 4);

@@ -105,11 +105,19 @@ impl ModelRouter {
     /// error-severity findings makes the whole router construction fail
     /// with a [`crate::netlint::LintError`] in the chain (naming the
     /// model), so a misconfigured net can never start serving.
+    ///
+    /// Model names may carry a precision suffix (`lenet@int8`,
+    /// `vgg16@fp16`): the zoo is looked up by the base name, the engine
+    /// serves at the suffixed precision, and the model is registered —
+    /// routed, health-checked, metered — under the *full* name, so
+    /// `lenet` and `lenet@int8` serve side by side from one process.
     pub fn from_zoo(models: &[&str], cfg: &RouterConfig) -> anyhow::Result<ModelRouter> {
         anyhow::ensure!(!models.is_empty(), "router needs at least one model");
         let mut seen = std::collections::BTreeSet::new();
+        let mut parsed = Vec::with_capacity(models.len());
         for m in models {
             anyhow::ensure!(seen.insert(*m), "duplicate model '{m}'");
+            parsed.push(crate::quant::split_model_name(m)?);
         }
         let (workers_per_model, intra_op) = split_budget(
             cfg.total_workers,
@@ -117,8 +125,10 @@ impl ModelRouter {
             cfg.intra_op_threads,
         );
         let mut engines = Vec::with_capacity(models.len());
-        for (name, &workers) in models.iter().zip(&workers_per_model) {
-            let param = crate::zoo::by_name(name, 1)?;
+        for ((name, (base, precision)), &workers) in
+            models.iter().zip(parsed).zip(&workers_per_model)
+        {
+            let param = crate::zoo::by_name(base, 1)?;
             let ecfg = EngineConfig {
                 workers,
                 max_batch: cfg.max_batch,
@@ -129,6 +139,7 @@ impl ModelRouter {
                 trace_sample: cfg.trace_sample,
                 chaos: cfg.chaos.clone(),
                 aot_cache: cfg.aot_cache.clone(),
+                precision,
                 ..EngineConfig::default()
             };
             let engine = Engine::new(&param, ecfg)
@@ -216,16 +227,19 @@ impl ModelRouter {
     /// [`super::metrics::prometheus_text`]), per-layer timing gauges
     /// from sampled batches, and training families when attached.
     pub fn metrics_prometheus(&self) -> String {
-        let reports: Vec<(String, MetricsReport)> = self
+        let reports: Vec<(String, String, MetricsReport)> = self
             .engines
             .iter()
-            .map(|(n, e)| (n.clone(), e.metrics().snapshot()))
+            .map(|(n, e)| {
+                (base_name(n).to_string(), e.precision().label().to_string(), e.metrics().snapshot())
+            })
             .collect();
         let mut out = prometheus_text(&reports);
         let mut layer_rows = Vec::new();
         for (name, engine) in &self.engines {
+            let precision = engine.precision().label();
             for (layer, agg) in engine.obs().layers.snapshot() {
-                layer_rows.push((name.clone(), layer, agg));
+                layer_rows.push((base_name(name).to_string(), precision, layer, agg));
             }
         }
         if !layer_rows.is_empty() {
@@ -236,9 +250,9 @@ impl ModelRouter {
             ];
             for &(name, get) in families {
                 out.push_str(&format!("# TYPE {name} counter\n"));
-                for (model, layer, agg) in &layer_rows {
+                for (model, precision, layer, agg) in &layer_rows {
                     out.push_str(&format!(
-                        "{name}{{model=\"{model}\",layer=\"{layer}\"}} {}\n",
+                        "{name}{{model=\"{model}\",precision=\"{precision}\",layer=\"{layer}\"}} {}\n",
                         get(agg)
                     ));
                 }
@@ -296,6 +310,7 @@ impl ModelRouter {
             worst = worst.max(tier);
             let mut m = Json::obj();
             m.set("name", Json::str(name.clone()));
+            m.set("precision", Json::str(engine.precision().label()));
             m.set("status", Json::str(["ok", "degraded", "unhealthy"][tier]));
             m.set("weights_version", Json::num(engine.weights_version() as f64));
             m.set("workers", Json::num(configured as f64));
@@ -322,6 +337,7 @@ impl ModelRouter {
         for (name, engine) in &self.engines {
             let mut m = Json::obj();
             m.set("name", Json::str(name.clone()));
+            m.set("precision", Json::str(engine.precision().label()));
             m.set("sample_len", Json::num(engine.sample_len() as f64));
             m.set("output_len", Json::num(engine.output_len() as f64));
             m.set("max_batch", Json::num(engine.config().max_batch as f64));
@@ -341,6 +357,12 @@ impl ModelRouter {
             engine.shutdown();
         }
     }
+}
+
+/// Base zoo name of a registered model: the part before any `@precision`
+/// suffix (metrics label the base and carry precision separately).
+fn base_name(registered: &str) -> &str {
+    registered.split_once('@').map_or(registered, |(b, _)| b)
 }
 
 /// Split of the shared budget: `total_workers` across `models` engines
@@ -394,6 +416,16 @@ mod tests {
         // Duplicates and unknown names fail before any engine is built.
         assert!(ModelRouter::from_zoo(&["lenet", "lenet"], &cfg).is_err());
         assert!(ModelRouter::from_zoo(&["resnet"], &cfg).is_err());
+        // Precision suffixes are validated before any engine is built.
+        assert!(ModelRouter::from_zoo(&["lenet@int4"], &cfg).is_err());
+        assert!(ModelRouter::from_zoo(&["@int8"], &cfg).is_err());
+    }
+
+    #[test]
+    fn base_name_strips_precision_suffix() {
+        assert_eq!(base_name("lenet"), "lenet");
+        assert_eq!(base_name("lenet@int8"), "lenet");
+        assert_eq!(base_name("vgg16@fp16"), "vgg16");
     }
 
     #[test]

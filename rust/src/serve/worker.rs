@@ -37,6 +37,7 @@ use crate::layers::{LayerTiming, SharedBlob};
 use crate::net::{Net, WeightSnapshot};
 use crate::obs::{BatchTraceBuilder, EngineObs, TraceScope, LANE_HOST, LANE_LAYER, LANE_QUEUE};
 use crate::proto::Phase;
+use crate::quant::{Precision, QuantSpec};
 use crate::runtime::plan::batch_bucket;
 use crate::util::chaos::ChaosState;
 use crate::zoo::DeployNet;
@@ -57,6 +58,12 @@ pub(crate) struct WorkerContext {
     /// The engine's published-weights cell (version + snapshot slot).
     pub weights: Arc<SharedWeights>,
     pub device: DeviceKind,
+    /// Numeric precision the replica serves at (fp32 native, or the
+    /// emulated int8/fp16 matmul path via `QuantBackend`).
+    pub precision: Precision,
+    /// Static activation ranges for int8 (derived at engine boot);
+    /// `None` for fp32/fp16.
+    pub quant_spec: Option<Arc<QuantSpec>>,
     /// Intra-op threads this worker's kernels may fan out to (the
     /// engine's share of the process budget; see `util::pool`).
     pub intra_op: usize,
@@ -352,7 +359,8 @@ pub(crate) fn run(ctx: WorkerContext) {
     // `intra_op` wide, so N workers never oversubscribe the pool.
     crate::util::pool::set_intra_op(ctx.intra_op);
 
-    let mut dev: Box<dyn Device> = ctx.device.create();
+    let mut dev: Box<dyn Device> =
+        ctx.device.create_with(ctx.precision, ctx.quant_spec.clone());
 
     // Build the replica before taking traffic, so no net construction
     // (layer setup + weight-filler init) ever lands on the serving path.
@@ -425,7 +433,7 @@ pub(crate) fn run(ctx: WorkerContext) {
                 // The panic may have left the replica (or the device)
                 // half-reshaped or mid-upload: rebuild both from the
                 // currently published snapshot before serving again.
-                dev = ctx.device.create();
+                dev = ctx.device.create_with(ctx.precision, ctx.quant_spec.clone());
                 let snap = ctx.current_weights();
                 version = snap.version();
                 match Replica::build(&ctx, &snap, dev.as_mut()) {

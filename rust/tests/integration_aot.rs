@@ -6,6 +6,7 @@
 
 use fecaffe::aot::{self, AotError};
 use fecaffe::device::fpga::costmodel::BoardParams;
+use fecaffe::quant::Precision;
 use fecaffe::runtime::plan::serve_buckets;
 use fecaffe::serve::{load_test, DeviceKind, Engine, EngineConfig};
 use fecaffe::zoo;
@@ -127,7 +128,7 @@ fn cold_boot_flags_stale_key_when_schema_changes_under_same_path() {
         .expect("lenet has an InnerProduct layer");
     ip.num_output += 1;
 
-    let boot = aot::cold_boot(&dir, &dep, &[1, 2], &BoardParams::default());
+    let boot = aot::cold_boot(&dir, &dep, &[1, 2], &BoardParams::default(), Precision::Fp32);
     assert!(!boot.complete());
     assert_eq!(boot.errors.len(), 2);
     for e in &boot.errors {
@@ -137,10 +138,55 @@ fn cold_boot_flags_stale_key_when_schema_changes_under_same_path() {
 
     // The unmutated net still cold-boots cleanly from the same cache.
     let dep = zoo::deploy_by_name("lenet", 2).unwrap();
-    let boot = aot::cold_boot(&dir, &dep, &[1, 2], &BoardParams::default());
+    let boot = aot::cold_boot(&dir, &dep, &[1, 2], &BoardParams::default(), Precision::Fp32);
     assert!(boot.complete(), "{:?}", boot.errors);
     assert_eq!(boot.hit_count(), 2);
     assert_eq!(boot.miss_count(), 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cold_boot_at_a_different_precision_never_reuses_fp32_plans() {
+    // Precision is part of both the artifact path and the content key:
+    // a cache built for fp32 serving must not satisfy an int8 boot (its
+    // DDR envelope was checked at 4-byte widths). The int8 artifacts
+    // live under distinct `.int8.feplan` paths, so the boot misses
+    // (AOT0001) and demotes to live planning.
+    let dir = temp_cache("precision");
+    aot::build_matrix(&dir, &["lenet"]).unwrap();
+    let dep = zoo::deploy_by_name("lenet", 2).unwrap();
+
+    let boot = aot::cold_boot(&dir, &dep, &[1, 2], &BoardParams::default(), Precision::Int8);
+    assert!(!boot.complete());
+    assert_eq!(boot.errors.len(), 2, "{:?}", boot.errors);
+    for e in &boot.errors {
+        assert_eq!(e.code(), "AOT0001", "{e}");
+        assert!(e.to_string().contains("int8"), "path should carry the precision: {e}");
+    }
+
+    // Even if the fp32 bytes were copied onto the int8 path (a cache
+    // manipulated by hand), the content key differs: StaleKey, never a
+    // silent reuse.
+    for b in [1usize, 2] {
+        std::fs::copy(
+            dir.join(format!("lenet_deploy/bucket_{b:03}.feplan")),
+            dir.join(format!("lenet_deploy/bucket_{b:03}.int8.feplan")),
+        )
+        .unwrap();
+    }
+    let boot = aot::cold_boot(&dir, &dep, &[1, 2], &BoardParams::default(), Precision::Int8);
+    assert!(!boot.complete());
+    assert!(boot.errors.iter().all(|e| e.code() == "AOT0003"), "{:?}", boot.errors);
+
+    // Building the int8 matrix alongside makes the int8 boot complete —
+    // and the fp32 boot still validates from the same directory.
+    std::fs::remove_dir_all(&dir).ok();
+    aot::build_matrix(&dir, &["lenet", "lenet@int8"]).unwrap();
+    let boot = aot::cold_boot(&dir, &dep, &[1, 2], &BoardParams::default(), Precision::Int8);
+    assert!(boot.complete(), "{:?}", boot.errors);
+    let boot = aot::cold_boot(&dir, &dep, &[1, 2], &BoardParams::default(), Precision::Fp32);
+    assert!(boot.complete(), "{:?}", boot.errors);
+    aot::verify_matrix(&dir, &["lenet", "lenet@int8"]).unwrap();
     std::fs::remove_dir_all(&dir).ok();
 }
 
@@ -153,17 +199,17 @@ fn cold_boot_flags_envelope_and_board_mismatches() {
     // A different board capacity changes the device-config key field:
     // cached artifacts are stale for that board, never silently reused.
     let small_board = BoardParams { ddr_capacity_bytes: 1 << 20, ..BoardParams::default() };
-    let boot = aot::cold_boot(&dir, &dep, &[1, 2], &small_board);
+    let boot = aot::cold_boot(&dir, &dep, &[1, 2], &small_board, Precision::Fp32);
     assert!(!boot.complete());
     assert!(boot.errors.iter().all(|e| e.code() == "AOT0003"), "{:?}", boot.errors);
 
     // Unknown bucket: Missing (no artifact file for bucket 64).
-    let boot = aot::cold_boot(&dir, &dep, &[64], &BoardParams::default());
+    let boot = aot::cold_boot(&dir, &dep, &[64], &BoardParams::default(), Precision::Fp32);
     assert_eq!(boot.errors.len(), 1);
     assert_eq!(boot.errors[0].code(), "AOT0001");
 
     // Weights-schema mismatch is a typed EnvelopeMismatch.
-    let good = aot::cold_boot(&dir, &dep, &[2], &BoardParams::default());
+    let good = aot::cold_boot(&dir, &dep, &[2], &BoardParams::default(), Precision::Fp32);
     assert!(good.complete());
     let art = &good.hits[0].1;
     let err = aot::validate_weights(art, &[("phantom".to_string(), 0)], &[42], "p").unwrap_err();

@@ -132,8 +132,8 @@ fn http_surface_exposes_prometheus_and_chrome_traces() {
         "# TYPE fecaffe_requests_completed_total counter",
         "# TYPE fecaffe_request_latency_seconds histogram",
         "# TYPE fecaffe_queue_depth gauge",
-        "fecaffe_requests_completed_total{model=\"lenet\"}",
-        "fecaffe_request_latency_seconds_bucket{model=\"lenet\",le=\"+Inf\"}",
+        "fecaffe_requests_completed_total{model=\"lenet\",precision=\"fp32\"}",
+        "fecaffe_request_latency_seconds_bucket{model=\"lenet\",precision=\"fp32\",le=\"+Inf\"}",
     ] {
         assert!(text.contains(family), "missing: {family}\n{text}");
     }

@@ -1,0 +1,183 @@
+//! Reduced-precision serving integration: post-training quantization
+//! round-trip bounds, bit-exact int8 execution across thread counts,
+//! the ≤1% top-1 budget on the digits task, and fp32 + int8 variants
+//! of one model served side by side through the router.
+
+use fecaffe::device::cpu::CpuDevice;
+use fecaffe::net::Net;
+use fecaffe::proto::Phase;
+use fecaffe::quant::{self, backend::QuantBackend, Precision, QuantizedSnapshot};
+use fecaffe::serve::{DeviceKind, Engine, EngineConfig, ModelRouter, RouterConfig};
+use fecaffe::solver::Solver;
+use fecaffe::zoo;
+use std::time::Duration;
+
+/// Freshly initialized LeNet weights (deterministic: seeded fillers).
+fn lenet_weights() -> fecaffe::net::WeightSnapshot {
+    let mut dev = CpuDevice::new();
+    let param = zoo::by_name("lenet", 4).unwrap();
+    let mut net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+    net.share_weights(&mut dev)
+}
+
+#[test]
+fn quantize_dequantize_round_trip_is_bounded_and_idempotent() {
+    let snap = lenet_weights();
+    let q = QuantizedSnapshot::from_snapshot(&snap);
+    assert_eq!(q.len(), snap.len());
+    assert_eq!(q.keys(), snap.keys());
+
+    let deq = q.dequantize();
+    for i in 0..snap.len() {
+        let orig = snap.blob_data(i).unwrap();
+        let fake = deq.blob_data(i).unwrap();
+        let scale = q.blob(i).unwrap().scale;
+        // Symmetric rounding: every element lands within half a step of
+        // its original value, and the payload is exactly 1 B/element.
+        let worst = orig
+            .iter()
+            .zip(fake.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            worst <= scale * 0.5 + 1e-7,
+            "blob {i}: worst round-trip error {worst} exceeds scale/2 = {}",
+            scale * 0.5
+        );
+    }
+    assert_eq!(
+        q.payload_bytes(),
+        (0..snap.len()).map(|i| snap.blob_data(i).unwrap().len()).sum::<usize>()
+    );
+
+    // Fake-quant values sit exactly on the grid: re-quantizing them is
+    // lossless, so prepare_weights is idempotent bit-for-bit.
+    let twice = QuantizedSnapshot::from_snapshot(&deq).dequantize();
+    for i in 0..deq.len() {
+        let a = deq.blob_data(i).unwrap();
+        let b = twice.blob_data(i).unwrap();
+        assert!(
+            a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "blob {i}: re-quantization moved values off the int8 grid"
+        );
+    }
+}
+
+/// One engine forward of `n` deterministic samples at `intra_op`
+/// threads, int8 precision.
+fn int8_outputs(intra_op: usize) -> Vec<Vec<f32>> {
+    let param = zoo::by_name("lenet", 1).unwrap();
+    let engine = Engine::new(
+        &param,
+        EngineConfig {
+            workers: 1,
+            max_batch: 4,
+            max_linger: Duration::from_micros(200),
+            queue_capacity: 64,
+            device: DeviceKind::Cpu,
+            intra_op_threads: intra_op,
+            precision: Precision::Int8,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    let len = engine.sample_len();
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            let sample: Vec<f32> = (0..len).map(|j| ((i * 31 + j) % 97) as f32 / 97.0).collect();
+            engine.submit(sample).unwrap()
+        })
+        .collect();
+    let outs: Vec<Vec<f32>> = handles.into_iter().map(|h| h.wait().unwrap().values).collect();
+    engine.shutdown();
+    outs
+}
+
+#[test]
+fn int8_forward_is_bit_identical_across_thread_counts() {
+    // The emulated int8 GEMM accumulates in i32 — exact integer sums —
+    // so the forward must be reproducible bit for bit no matter how the
+    // intra-op pool splits the work (the FECAFFE_THREADS=1 CI leg and
+    // the default leg must agree).
+    let one = int8_outputs(1);
+    let four = int8_outputs(4);
+    assert_eq!(one.len(), four.len());
+    for (i, (a, b)) in one.iter().zip(four.iter()).enumerate() {
+        assert_eq!(a.len(), b.len());
+        assert!(
+            a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "sample {i}: int8 forward diverged between 1 and 4 intra-op threads"
+        );
+    }
+}
+
+#[test]
+fn int8_top1_stays_within_one_percent_on_digits() {
+    // Train briefly, then evaluate the same weights at fp32 and through
+    // the emulated int8 path (fake-quant weights + QuantBackend).
+    let mut dev = CpuDevice::new();
+    let param = zoo::by_name("lenet", 32).unwrap();
+    let net = Net::from_param(&param, Phase::Train, &mut dev).unwrap();
+    let mut sp = zoo::default_solver("lenet").unwrap();
+    sp.display = 0;
+    let mut solver = Solver::new(sp, net, &mut dev).unwrap();
+    for _ in 0..60 {
+        solver.step(&mut dev).unwrap();
+    }
+    let snap = solver.net.share_weights(&mut dev);
+
+    let eval = |precision: Precision| -> f32 {
+        let mut dev = CpuDevice::new();
+        if precision != Precision::Fp32 {
+            dev = dev.with_backend(Box::new(QuantBackend::new(precision, None)));
+        }
+        let tp = zoo::by_name("lenet", 100).unwrap();
+        let mut tnet = Net::from_param(&tp, Phase::Test, &mut dev).unwrap();
+        let weights = quant::prepare_weights(&snap, precision);
+        tnet.adopt_weights(&mut dev, &weights).unwrap();
+        tnet.forward(&mut dev).unwrap();
+        tnet.blob("accuracy").unwrap().borrow_mut().data_vec(&mut dev)[0]
+    };
+
+    let fp32 = eval(Precision::Fp32);
+    let int8 = eval(Precision::Int8);
+    assert!(fp32 > 0.5, "training failed to leave chance territory: {fp32}");
+    assert!(
+        (fp32 - int8).abs() <= 0.01,
+        "int8 top-1 delta {:.3} over the 1% budget (fp32 {fp32:.3}, int8 {int8:.3})",
+        (fp32 - int8).abs()
+    );
+}
+
+#[test]
+fn router_serves_fp32_and_int8_variants_side_by_side() {
+    let cfg = RouterConfig {
+        total_workers: 2,
+        max_batch: 4,
+        max_linger: Duration::from_micros(200),
+        queue_capacity: 64,
+        device: DeviceKind::Cpu,
+        ..RouterConfig::default()
+    };
+    let router = ModelRouter::from_zoo(&["lenet", "lenet@int8"], &cfg).unwrap();
+    assert_eq!(router.models(), vec!["lenet", "lenet@int8"]);
+    assert_eq!(router.engine("lenet").unwrap().precision(), Precision::Fp32);
+    assert_eq!(router.engine("lenet@int8").unwrap().precision(), Precision::Int8);
+    // The int8 engine carries its boot-time calibration; fp32 does not.
+    assert!(router.engine("lenet@int8").unwrap().quant_spec().is_some());
+    assert!(router.engine("lenet").unwrap().quant_spec().is_none());
+
+    let len = router.engine("lenet").unwrap().sample_len();
+    let sample: Vec<f32> = (0..len).map(|j| (j % 97) as f32 / 97.0).collect();
+    let fp32 = router.submit("lenet", sample.clone()).unwrap().wait().unwrap();
+    let int8 = router.submit("lenet@int8", sample).unwrap().wait().unwrap();
+    assert_eq!(fp32.values.len(), int8.values.len());
+    // Both are softmax rows over the same 10 classes.
+    for r in [&fp32, &int8] {
+        let sum: f32 = r.values.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3, "scores are not a softmax row: {sum}");
+    }
+
+    router.engine("lenet").unwrap().shutdown();
+    router.engine("lenet@int8").unwrap().shutdown();
+}

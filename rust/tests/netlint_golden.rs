@@ -290,6 +290,70 @@ fn vgg16_training_at_batch_32_exceeds_2gb_nl0301() {
     assert!(r.memory.iter().any(|m| !m.fits()));
 }
 
+#[test]
+fn memory_pass_accounts_at_the_serving_precision() {
+    // LeNet deploy on a 1 MiB board: the fp32 footprint (~2 MB) fails
+    // NL0301, but the int8 footprint (1 B/elem, ~0.5 MB) fits — the
+    // diagnostic must say which precision it costed and point at the
+    // `name@int8` escape hatch.
+    let dep = zoo::deploy_by_name("lenet", 1).unwrap();
+    let one_mib = BoardParams { ddr_capacity_bytes: 1 << 20, ..Default::default() };
+    let r = lint_net(
+        &dep.param,
+        &LintOptions {
+            buckets: vec![1],
+            board: one_mib.clone(),
+            forward_only: true,
+            ..Default::default()
+        },
+    );
+    assert_eq!(r.error_codes(), vec!["NL0301"], "{}", r.render_text());
+    let text = r.render_text();
+    assert!(text.contains("(fp32)"), "NL0301 must name the costed precision:\n{text}");
+    assert!(text.contains("name@int8"), "help must suggest the int8 variant:\n{text}");
+    assert!(!all_codes(&r).contains(&"NL0303"), "int8 fits, no NL0303:\n{text}");
+
+    // Same board, linted *at* int8: clean — every device buffer is
+    // costed at 1 byte per element.
+    let r = lint_net(
+        &dep.param,
+        &LintOptions {
+            buckets: vec![1],
+            board: one_mib,
+            forward_only: true,
+            precision: fecaffe::quant::Precision::Int8,
+            ..Default::default()
+        },
+    );
+    assert!(r.is_clean(), "{}", r.render_text());
+    assert!(r.memory.iter().all(|m| m.fits()), "{}", r.render_text());
+}
+
+#[test]
+fn quantization_cannot_rescue_the_fit_is_nl0303() {
+    // 256 KiB board: even the int8 footprint of LeNet's ~430k
+    // parameters exceeds capacity, so alongside the NL0301 error the
+    // linter warns (NL0303) that reduced precision is not an escape
+    // hatch here — and the help text loses the int8 suggestion.
+    let dep = zoo::deploy_by_name("lenet", 1).unwrap();
+    let tiny = BoardParams { ddr_capacity_bytes: 1 << 18, ..Default::default() };
+    let r = lint_net(
+        &dep.param,
+        &LintOptions {
+            buckets: vec![1],
+            board: tiny,
+            forward_only: true,
+            ..Default::default()
+        },
+    );
+    assert_eq!(r.error_codes(), vec!["NL0301"], "{}", r.render_text());
+    assert_eq!(all_codes(&r), vec!["NL0301", "NL0303"], "{}", r.render_text());
+    let nl0303 = r.diagnostics.iter().find(|d| d.code == "NL0303").unwrap();
+    assert_eq!(nl0303.severity, Severity::Warning);
+    assert!(nl0303.message.contains("even int8-quantized"), "{}", nl0303.message);
+    assert!(!r.render_text().contains("name@int8"), "{}", r.render_text());
+}
+
 // ------------------------------------------------------------ pass 5: solver
 
 #[test]

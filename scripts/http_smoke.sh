@@ -17,9 +17,11 @@ LOADJSON="$(mktemp)"
 BROKEN="$(mktemp)"
 AOTDIR="$(mktemp -d)"
 AOTLOG="$(mktemp)"
-trap 'kill $SERVER_PID $AOT_PID 2>/dev/null || true; rm -f "$LOG" "$SNAP" "$LOADJSON" "$BROKEN" "$AOTLOG"; rm -rf "$AOTDIR"' EXIT
+QLOG="$(mktemp)"
+trap 'kill $SERVER_PID $AOT_PID $QUANT_PID 2>/dev/null || true; rm -f "$LOG" "$SNAP" "$LOADJSON" "$BROKEN" "$AOTLOG" "$QLOG"; rm -rf "$AOTDIR"' EXIT
 SERVER_PID=""
 AOT_PID=""
+QUANT_PID=""
 
 [ -x "$SERVE" ] || { echo "serve binary not found at $SERVE (set SERVE=...)"; exit 1; }
 [ -x "$FECAFFE" ] || { echo "fecaffe binary not found at $FECAFFE (set FECAFFE=...)"; exit 1; }
@@ -55,8 +57,8 @@ for family in \
     'TYPE fecaffe_requests_completed_total counter' \
     'TYPE fecaffe_request_latency_seconds histogram' \
     'TYPE fecaffe_queue_depth gauge' \
-    'fecaffe_requests_completed_total{model="lenet"}' \
-    'fecaffe_request_latency_seconds_bucket{model="lenet",le="+Inf"}'; do
+    'fecaffe_requests_completed_total{model="lenet",precision="fp32"}' \
+    'fecaffe_request_latency_seconds_bucket{model="lenet",precision="fp32",le="+Inf"}'; do
     echo "$PROM" | grep -qF "$family" || fail "prometheus family missing: $family"
 done
 
@@ -186,5 +188,48 @@ echo "$AOT_METRICS" | grep -q '"cache_miss": 0' \
 curl -sf -X POST "http://$AOT_ADDR/admin/shutdown" >/dev/null || fail_aot "aot shutdown"
 wait "$AOT_PID" || fail_aot "aot server exited non-zero"
 echo "aot cold boot: OK (4 buckets from cache, cache_miss 0, load served)"
+
+# --- Reduced-precision serving ---------------------------------------
+# One process serving the fp32 and int8 variants side by side: boot
+# --models lenet,lenet@int8 (the int8 engine fake-quantizes its weights
+# and calibrates activation ranges at startup), predict against both
+# names, and require the precision label to split the metric series.
+"$SERVE" --http 127.0.0.1:0 --models lenet,lenet@int8 --workers 2 \
+    --max-batch 8 >"$QLOG" 2>&1 &
+QUANT_PID=$!
+
+fail_quant() { echo "FAIL: $1"; cat "$QLOG"; exit 1; }
+
+QADDR=""
+for _ in $(seq 1 150); do
+    QADDR="$(sed -n 's|.*listening on http://||p' "$QLOG" | head -n1)"
+    [ -n "$QADDR" ] && break
+    kill -0 "$QUANT_PID" 2>/dev/null || fail_quant "quant server died during startup"
+    sleep 0.2
+done
+[ -n "$QADDR" ] || fail_quant "quant server never reported its address"
+grep -q "quant: calibrated" "$QLOG" \
+    || fail_quant "int8 engine did not report boot-time calibration"
+
+SAMPLE="$(python3 -c 'print("[[" + ",".join(["0.5"]*784) + "]]")')"
+for model in lenet lenet@int8; do
+    CODE="$(curl -s -o /dev/null -w '%{http_code}' -X POST \
+        -d "{\"instances\": $SAMPLE}" "http://$QADDR/v1/models/$model:predict")"
+    [ "$CODE" = "200" ] || fail_quant "predict against $model returned $CODE"
+done
+
+QPROM="$(curl -sf "http://$QADDR/metrics?format=prometheus")" \
+    || fail_quant "prometheus fetch"
+for series in \
+    'fecaffe_requests_completed_total{model="lenet",precision="fp32"} 1' \
+    'fecaffe_requests_completed_total{model="lenet",precision="int8"} 1'; do
+    echo "$QPROM" | grep -qF "$series" \
+        || { echo "$QPROM" | grep fecaffe_requests_completed_total; \
+             fail_quant "prometheus series missing: $series"; }
+done
+
+curl -sf -X POST "http://$QADDR/admin/shutdown" >/dev/null || fail_quant "shutdown"
+wait "$QUANT_PID" || fail_quant "quant server exited non-zero"
+echo "reduced precision: OK (lenet + lenet@int8 served, precision-labelled metrics)"
 
 echo "http smoke: OK"
